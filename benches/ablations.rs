@@ -1,0 +1,101 @@
+//! Ablation benchmarks for the design choices DESIGN.md §5 calls out:
+//! beta schedule, lambda, CEM population/elite, per-tensor vs per-channel.
+//! Each run reports the reconstruction MSE achieved (quality) and time.
+//!
+//!     cargo bench --bench ablations
+
+use adaround::adaround::{
+    AdaRoundConfig, BetaSchedule, LayerProblem, NativeOptimizer, RoundingOptimizer,
+};
+use adaround::quant::{GridMethod, QuantGrid};
+use adaround::qubo::{solve_cem, CemParams, QuboProblem};
+use adaround::tensor::{matmul, Tensor};
+use adaround::util::{Rng, Stopwatch};
+
+fn problem(seed: u64, rows: usize, cols: usize, per_channel: bool) -> (LayerProblem, Tensor, Tensor) {
+    let mut rng = Rng::new(seed);
+    let w = Tensor::from_vec(
+        &[rows, cols],
+        (0..rows * cols).map(|_| rng.normal_f32(0.0, 0.3)).collect(),
+    );
+    let grid = QuantGrid::fit(&w, 2, GridMethod::MseW, per_channel, None);
+    let bias = (0..rows).map(|_| rng.normal_f32(0.0, 0.1)).collect();
+    let prob = LayerProblem::new(w.clone(), &grid, 0, bias, true);
+    let x = Tensor::from_vec(
+        &[cols, 1024],
+        (0..cols * 1024).map(|_| rng.normal_f32(0.0, 1.0)).collect(),
+    );
+    let mut t = matmul(&w, &x);
+    for r in 0..rows {
+        let b = prob.bias[r];
+        for v in &mut t.data[r * 1024..(r + 1) * 1024] {
+            *v += b;
+        }
+    }
+    (prob, x, t)
+}
+
+fn run(label: &str, prob: &LayerProblem, x: &Tensor, t: &Tensor, cfg: &AdaRoundConfig) {
+    let sw = Stopwatch::start();
+    let res = NativeOptimizer.optimize(prob, x, t, cfg, &mut Rng::new(5)).unwrap();
+    println!(
+        "{label:<46} mse {:.4e} -> {:.4e}  flips {:>5.1}%  {:>6.2}s",
+        res.mse_before,
+        res.mse_after,
+        100.0 * res.flipped_frac,
+        sw.secs()
+    );
+}
+
+fn main() {
+    println!("== ablations (32x288 layer, 2-bit, native driver) ==");
+    let (prob, x, t) = problem(1, 32, 288, false);
+
+    // beta schedule
+    for (label, beta) in [
+        ("beta 20->2 warmup 0.2 (default)", BetaSchedule { start: 20.0, end: 2.0, warmup: 0.2 }),
+        ("beta 20->2 no warmup", BetaSchedule { start: 20.0, end: 2.0, warmup: 0.0 }),
+        ("beta 8->2 warmup 0.2", BetaSchedule { start: 8.0, end: 2.0, warmup: 0.2 }),
+        ("beta const 2 (no annealing)", BetaSchedule { start: 2.0, end: 2.0, warmup: 0.2 }),
+    ] {
+        let cfg = AdaRoundConfig { iters: 800, beta, ..Default::default() };
+        run(label, &prob, &x, &t, &cfg);
+    }
+
+    // lambda
+    for lam in [0.001f32, 0.01, 0.1] {
+        let cfg = AdaRoundConfig { iters: 800, lambda: lam, ..Default::default() };
+        run(&format!("lambda {lam}"), &prob, &x, &t, &cfg);
+    }
+
+    // per-tensor vs per-channel grid (same optimizer budget)
+    let (prob_pc, x2, t2) = problem(1, 32, 288, true);
+    run("grid per-tensor (ref)", &prob, &x, &t, &AdaRoundConfig { iters: 800, ..Default::default() });
+    run("grid per-channel", &prob_pc, &x2, &t2, &AdaRoundConfig { iters: 800, ..Default::default() });
+
+    // CEM population/elite ablation on a QUBO row
+    println!("\n== CEM ablation (row n=288, local-MSE QUBO) ==");
+    let h = adaround::qubo::gram(&x);
+    let qp = QuboProblem::from_row(
+        &prob.w.data[..288],
+        &QuantGrid::per_tensor(prob.s(0), 2),
+        0,
+        &h,
+    );
+    let nearest: Vec<u8> = qp.frac.iter().map(|&f| (f >= 0.5) as u8).collect();
+    println!("{:<46} cost {:.4e}", "nearest", qp.eval(&nearest));
+    for (pop, elite, iters) in [(32usize, 0.25f64, 30usize), (96, 0.125, 60), (192, 0.0625, 90)] {
+        let sw = Stopwatch::start();
+        let (_, cost) = solve_cem(
+            &qp,
+            CemParams { population: pop, elite_frac: elite, iters, alpha: 0.7 },
+            &mut Rng::new(9),
+        );
+        println!(
+            "{:<46} cost {:.4e}  {:>6.2}s",
+            format!("CEM pop={pop} elite={elite} iters={iters}"),
+            cost,
+            sw.secs()
+        );
+    }
+}

@@ -1,0 +1,109 @@
+//! Kernel-level benchmarks (L3 native hot paths + PJRT artifact execution).
+//!
+//!     cargo bench --bench kernels
+//!
+//! Covers: blocked matmul, im2col conv, fake-quant, the native AdaRound
+//! step (fwd+bwd+Adam), the PJRT HLO step execution, the QUBO solvers.
+//! These are the per-iteration costs behind every table's wall-clock.
+
+use adaround::adaround::{Adam, LayerProblem};
+use adaround::quant::{fake_quant_nearest, QuantGrid};
+use adaround::qubo::{solve_cem, solve_tabu, CemParams, QuboProblem, TabuParams};
+use adaround::runtime::{Runtime, StepState};
+use adaround::tensor::{conv2d, matmul, Conv2dParams, Tensor};
+use adaround::util::bench::Bench;
+use adaround::util::Rng;
+
+fn rnd(shape: &[usize], rng: &mut Rng) -> Tensor {
+    let n: usize = shape.iter().product();
+    Tensor::from_vec(shape, (0..n).map(|_| rng.normal_f32(0.0, 0.5)).collect())
+}
+
+fn main() {
+    let mut rng = Rng::new(1);
+    let b = Bench::default();
+    println!("== kernel benchmarks ==");
+
+    // matmul at the pipeline's dominant shapes
+    for (m, k, n) in [(32usize, 288usize, 192usize), (8, 27, 2048), (64, 256, 1024)] {
+        let a = rnd(&[m, k], &mut rng);
+        let x = rnd(&[k, n], &mut rng);
+        let flops = 2 * m * k * n;
+        let r = b.run_with_items(&format!("matmul {m}x{k}x{n} (flops/s)"), flops, &mut || {
+            std::hint::black_box(matmul(&a, &x));
+        });
+        r.print();
+    }
+
+    // conv2d via im2col (micro18 stage shapes; last one depthwise)
+    for (c, o, hw, kk, g) in
+        [(8usize, 8usize, 32usize, 3usize, 1usize), (16, 16, 16, 3, 1), (16, 16, 16, 3, 16)]
+    {
+        let x = rnd(&[32, c, hw, hw], &mut rng);
+        let w = rnd(&[o, c / g, kk, kk], &mut rng);
+        let p = Conv2dParams { k: kk, stride: 1, pad: 1, groups: g };
+        let r = b.run_with_items(
+            &format!("conv2d {c}->{o} {hw}x{hw} k{kk} g{g} (img/s, batch 32)"),
+            32,
+            &mut || {
+                std::hint::black_box(conv2d(&x, &w, None, p));
+            },
+        );
+        r.print();
+    }
+
+    // fake-quant
+    let w = rnd(&[32, 288], &mut rng);
+    let grid = QuantGrid::per_tensor(0.05, 4);
+    b.run_with_items("fake_quant_nearest 32x288 (weights/s)", w.numel(), &mut || {
+        std::hint::black_box(fake_quant_nearest(&w, &grid));
+    })
+    .print();
+
+    // native AdaRound step (loss_grad + Adam) at the largest micro18 layer
+    let prob = LayerProblem::new(rnd(&[32, 288], &mut rng), &grid, 0, vec![0.0; 32], true);
+    let x = rnd(&[288, 192], &mut rng);
+    let t = matmul(&prob.w, &x);
+    let mut v = prob.init_v();
+    let mut adam = Adam::new(v.numel());
+    b.run("native adaround step 32x288xB192", || {
+        let (_, _, g) = prob.loss_grad(&v, &x, &t, 8.0, 0.01);
+        adam.step(&mut v.data, &g.data, 0.0); // lr 0: keep state stationary
+    })
+    .print();
+
+    // PJRT HLO step execution at the same bucket (if artifacts exist)
+    if std::path::Path::new(&adaround::artifacts_dir()).join("manifest.json").exists() {
+        let rt = Runtime::new(&adaround::artifacts_dir()).unwrap();
+        if let Ok(exec) = rt.step_exec(32, 288, true) {
+            let xb = rnd(&[288, exec.batch], &mut rng);
+            let tb = rnd(&[32, exec.batch], &mut rng);
+            let s = Tensor::full(&[32, 1], 0.05);
+            let bias = Tensor::full(&[32, 1], 0.0);
+            let mut state = StepState::new(prob.init_v());
+            b.run("pjrt adaround step 32x288xB192", || {
+                exec.run(&mut state, &xb, &tb, &prob.w, &s, &bias, 8.0, 0.01, 0.0, -8.0, 7.0)
+                    .unwrap();
+            })
+            .print();
+        }
+    } else {
+        println!("(PJRT step bench skipped: run `make artifacts`)");
+    }
+
+    // QUBO solvers on a first-layer-sized row problem
+    let wrow = rnd(&[1, 27], &mut rng);
+    let xs = rnd(&[27, 512], &mut rng);
+    let h = adaround::qubo::gram(&xs);
+    let qp = QuboProblem::from_row(&wrow.data, &grid, 0, &h);
+    b.run("qubo CEM n=27", || {
+        let mut r = Rng::new(3);
+        std::hint::black_box(solve_cem(&qp, CemParams::default(), &mut r));
+    })
+    .print();
+    b.run("qubo tabu n=27", || {
+        let mut r = Rng::new(3);
+        std::hint::black_box(solve_tabu(&qp, TabuParams::default(), &mut r));
+    })
+    .print();
+}

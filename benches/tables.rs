@@ -1,0 +1,33 @@
+//! Table-regeneration benchmarks: wall-clock for quick (reduced-budget)
+//! versions of each paper-table driver, so regressions in any stage of the
+//! experiment stack show up as timing changes.
+//!
+//!     cargo bench --bench tables
+//!
+//! (Full-budget tables are produced by `adaround table <n>`; their outputs
+//! are recorded in EXPERIMENTS.md.)
+
+use adaround::cli::common::Ctx;
+use adaround::cli::tables::run_table_quick;
+use adaround::util::cli::Args;
+use adaround::util::Stopwatch;
+
+fn main() -> anyhow::Result<()> {
+    let dir = adaround::artifacts_dir();
+    if !std::path::Path::new(&dir).join("manifest.json").exists() {
+        println!("tables bench requires `make artifacts`");
+        return Ok(());
+    }
+    let ctx = Ctx::load(&Args::parse(
+        vec!["bench".to_string(), "--val-n".into(), "64".into()].into_iter(),
+    ))?;
+    println!("== table-driver benchmarks (reduced budgets) ==");
+    for n in [1usize, 3, 4, 5, 6, 8, 10] {
+        let sw = Stopwatch::start();
+        // suppress the table's own stdout? keep it: bench output doubles as
+        // a smoke test that every driver still runs end to end.
+        run_table_quick(&ctx, n)?;
+        println!(">>> table {n} (quick): {:.1}s\n", sw.secs());
+    }
+    Ok(())
+}

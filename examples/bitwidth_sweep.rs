@@ -1,0 +1,35 @@
+//! Bit-width sweep: where does round-to-nearest break, and how far down
+//! does AdaRound hold? (The "who wins, where is the crossover" view of the
+//! paper's headline claim.)
+//!
+//!     cargo run --release --example bitwidth_sweep [-- model]
+
+use adaround::coordinator::{Method, Pipeline, PipelineConfig};
+use adaround::nn::ForwardOptions;
+use adaround::runtime::Runtime;
+use adaround::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let name = std::env::args().nth(1).unwrap_or_else(|| "micro18".into());
+    let rt = Runtime::new(&adaround::artifacts_dir())?;
+    let model = rt.manifest.load_model(&name)?;
+    let (calib, _) = rt.manifest.load_dataset(
+        if model.task == "seg" { "calib_shapes" } else { "calib_gabor" })?;
+    let (vx, vy) = rt.manifest.load_dataset(
+        if model.task == "seg" { "val_shapes" } else { "val_gabor" })?;
+
+    let fp32 = adaround::eval::top1(&model, &vx, &vy, &ForwardOptions::default(), 64);
+    println!("{name}: fp32 = {fp32:.2}%");
+    println!("{:>5} {:>12} {:>12} {:>10}", "bits", "nearest", "adaround", "gap");
+    for bits in [8u32, 4, 3, 2] {
+        let mut row = Vec::new();
+        for method in [Method::Nearest, Method::AdaRound] {
+            let cfg = PipelineConfig { method, bits, ..Default::default() };
+            let pipe = Pipeline::new(&model, cfg, Some(&rt));
+            let qm = pipe.quantize(&calib, &mut Rng::new(7))?;
+            row.push(adaround::eval::top1(&model, &vx, &vy, &qm.opts(), 64));
+        }
+        println!("{bits:>5} {:>11.2}% {:>11.2}% {:>+9.2}", row[0], row[1], row[1] - row[0]);
+    }
+    Ok(())
+}

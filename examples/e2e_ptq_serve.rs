@@ -1,0 +1,86 @@
+//! End-to-end driver: the full three-layer stack on a real workload.
+//!
+//! 1. Load the pretrained micro18 checkpoint (trained at `make artifacts`).
+//! 2. Quantize its weights to 2 bits with **PJRT-driven AdaRound** — every
+//!    optimization step executes the AOT HLO artifact whose hot-spot is the
+//!    Pallas soft-quant matmul pair (L1), fused with f_reg + Adam (L2),
+//!    scheduled by this rust coordinator (L3). No Python anywhere.
+//! 3. Quantize activations to 8 bits from the calibration set.
+//! 4. Serve the validation set in batches and report accuracy, latency
+//!    percentiles and throughput — the numbers EXPERIMENTS.md records.
+//!
+//!     make artifacts && cargo run --release --example e2e_ptq_serve
+
+use adaround::coordinator::{Method, Pipeline, PipelineConfig};
+use adaround::data::chunks;
+use adaround::nn::ForwardOptions;
+use adaround::runtime::Runtime;
+use adaround::tensor::Tensor;
+use adaround::util::stats::percentile;
+use adaround::util::{Rng, Stopwatch};
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::new(&adaround::artifacts_dir())?;
+    let model = rt.manifest.load_model("micro18")?;
+    let (calib, _) = rt.manifest.load_dataset("calib_gabor")?;
+    let (val_x, val_y) = rt.manifest.load_dataset("val_gabor")?;
+    println!("model micro18: {} params, {} quantizable layers",
+             model.num_params(), model.quant_layers().len());
+
+    // --- quantize (PJRT-driven AdaRound, 2-bit weights, 8-bit activations)
+    let cfg = PipelineConfig {
+        method: Method::AdaRoundPjrt,
+        bits: 2,
+        act_bits: Some(8),
+        ..Default::default()
+    };
+    let sw = Stopwatch::start();
+    let pipe = Pipeline::new(&model, cfg, Some(&rt));
+    let qm = pipe.quantize(&calib, &mut Rng::new(0))?;
+    println!(
+        "quantized in {:.1}s ({} HLO executables compiled, {} layer problems)",
+        sw.secs(),
+        rt.compiled_count(),
+        qm.stats.len()
+    );
+    for s in &qm.stats {
+        println!(
+            "  {:<5} {:>4}x{:<4} recon-mse {:.3e} -> {:.3e}  ({:.1}% flipped)",
+            s.id, s.rows, s.cols, s.mse_before, s.mse_after, 100.0 * s.flipped_frac
+        );
+    }
+
+    // --- serve ---
+    let fp32 = adaround::eval::top1(&model, &val_x, &val_y, &ForwardOptions::default(), 64);
+    let n = val_x.shape[0];
+    let per: usize = val_x.shape[1..].iter().product();
+    let batch = 64;
+    let mut lat_ms = Vec::new();
+    let mut correct = 0usize;
+    let opts = qm.opts();
+    let sw = Stopwatch::start();
+    for (s, e) in chunks(n, batch) {
+        let t0 = Stopwatch::start();
+        let xb = Tensor::from_vec(
+            &[e - s, val_x.shape[1], val_x.shape[2], val_x.shape[3]],
+            val_x.data[s * per..e * per].to_vec(),
+        );
+        let logits = model.forward(&xb, &opts);
+        for (i, p) in logits.argmax_rows().iter().enumerate() {
+            if *p as i32 == val_y.data[s + i] {
+                correct += 1;
+            }
+        }
+        lat_ms.push(t0.millis());
+    }
+    let total = sw.secs();
+    let acc = 100.0 * correct as f64 / n as f64;
+    println!("\n== serving report ==");
+    println!("fp32 top-1        : {fp32:.2}%");
+    println!("W2/A8 top-1       : {acc:.2}%   (drop {:.2} pts)", fp32 - acc);
+    println!("batches served    : {} x {batch} images", lat_ms.len());
+    println!("latency p50 / p95 : {:.1} / {:.1} ms", percentile(&lat_ms, 50.0),
+             percentile(&lat_ms, 95.0));
+    println!("throughput        : {:.0} images/s", n as f64 / total);
+    Ok(())
+}

@@ -1,0 +1,28 @@
+//! Quickstart: quantize a pretrained micro-network to 2-bit weights with
+//! AdaRound and compare against round-to-nearest.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use adaround::coordinator::{Method, Pipeline, PipelineConfig};
+use adaround::nn::ForwardOptions;
+use adaround::runtime::Runtime;
+use adaround::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::new(&adaround::artifacts_dir())?;
+    let model = rt.manifest.load_model("micro18")?;
+    let (calib, _) = rt.manifest.load_dataset("calib_gabor")?;
+    let (val_x, val_y) = rt.manifest.load_dataset("val_gabor")?;
+
+    let fp32 = adaround::eval::top1(&model, &val_x, &val_y, &ForwardOptions::default(), 64);
+    println!("fp32 top-1: {fp32:.2}%");
+
+    for method in [Method::Nearest, Method::AdaRound] {
+        let cfg = PipelineConfig { method, bits: 2, ..Default::default() };
+        let pipe = Pipeline::new(&model, cfg, Some(&rt));
+        let qm = pipe.quantize(&calib, &mut Rng::new(0))?;
+        let acc = adaround::eval::top1(&model, &val_x, &val_y, &qm.opts(), 64);
+        println!("{:<10} 2-bit top-1: {acc:.2}%", method.name());
+    }
+    Ok(())
+}

@@ -1,0 +1,35 @@
+//! Domain-specific example: post-training quantization of the
+//! encoder-decoder segmentation network (the paper's DeeplabV3+ analog,
+//! §5.2 "Semantic segmentation"), reporting mIOU.
+//!
+//!     cargo run --release --example segmentation
+
+use adaround::coordinator::{Method, Pipeline, PipelineConfig};
+use adaround::eval::miou;
+use adaround::nn::ForwardOptions;
+use adaround::runtime::Runtime;
+use adaround::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::new(&adaround::artifacts_dir())?;
+    let model = rt.manifest.load_model("segnet")?;
+    let (calib, _) = rt.manifest.load_dataset("calib_shapes")?;
+    let (vx, vy) = rt.manifest.load_dataset("val_shapes")?;
+
+    let fp = miou(&model, &vx, &vy, &ForwardOptions::default(), 32, 4);
+    println!("segnet fp32 mIOU: {fp:.2}%");
+
+    for (label, method, bits, act) in [
+        ("nearest  W2/A8  ", Method::Nearest, 2u32, Some(8u32)),
+        ("DFQ      W2/A8  ", Method::Dfq, 2, Some(8)),
+        ("AdaRound W2/A32 ", Method::AdaRound, 2, None),
+        ("AdaRound W2/A8  ", Method::AdaRound, 2, Some(8)),
+    ] {
+        let cfg = PipelineConfig { method, bits, act_bits: act, ..Default::default() };
+        let pipe = Pipeline::new(&model, cfg, Some(&rt));
+        let qm = pipe.quantize(&calib, &mut Rng::new(3))?;
+        let m = miou(&pipe.work, &vx, &vy, &qm.opts(), 32, 4);
+        println!("{label}: mIOU {m:.2}%");
+    }
+    Ok(())
+}

@@ -1,0 +1,170 @@
+"""AOT pipeline: train the zoo, export weights/data, lower HLO artifacts.
+
+Runs exactly once via ``make artifacts``.  Products (all under artifacts/):
+
+    manifest.json                 model IRs + file index + executable table
+    <model>.weights.qtz           BN-folded FP32 weights
+    data/<name>.qtz               calibration / validation tensor bundles
+    hlo/step_r{R}_c{C}_b{B}_{act}.hlo.txt      AdaRound step executables
+    hlo/qlinear_r{R}_c{C}_n{N}.hlo.txt         inference executables
+
+HLO **text** is the interchange format (NOT ``.serialize()``): jax >= 0.5
+emits protos with 64-bit instruction ids that xla_extension 0.5.1 rejects;
+the text parser reassigns ids (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import datagen, model, qtz, trainer
+from .models import BUILDERS, TASKS
+
+STEP_BATCH = 192       # im2col columns per AdaRound step
+QLINEAR_IMGS = 32      # images per qlinear inference execution
+CALIB_N = 2048
+VAL_N = 1024
+
+# Models for which per-layer qlinear inference artifacts are emitted (the
+# PJRT engine demo / bench; the native engine covers all models).
+QLINEAR_MODELS = ("micro18",)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def quantizable_layers(nodes):
+    """(node, rows, cols, relu) for every weight-bearing node, in graph order.
+
+    rows = out channels *per group*, cols = im2col patch size
+    (cin/groups * k * k).  Grouped convolutions are optimized one group at a
+    time (each group owns a distinct im2col matrix), so the shape bucket is
+    the per-group GEMM geometry."""
+    out = []
+    for nd in nodes:
+        if nd["op"] == "conv":
+            cols = (nd["cin"] // nd["groups"]) * nd["k"] * nd["k"]
+            out.append((nd, nd["cout"] // nd["groups"], cols, bool(nd["relu"])))
+        elif nd["op"] == "dense":
+            out.append((nd, nd["cout"], nd["cin"], bool(nd["relu"])))
+    return out
+
+
+def spatial_after(nodes, node_id, img=32):
+    """Output spatial size (h*w) of a conv node, walking strides/pools on the
+    path from the input. Dense nodes return 1."""
+    # compute spatial size for every node
+    size = {"in": img}
+    for nd in nodes:
+        if nd["op"] == "input":
+            continue
+        ins = nd["inputs"]
+        base = size[ins[0]] if ins else img
+        if nd["op"] == "conv":
+            size[nd["id"]] = (base + nd["stride"] - 1) // nd["stride"]
+        elif nd["op"] == "avgpool":
+            size[nd["id"]] = base // nd["stride"]
+        elif nd["op"] == "upsample":
+            size[nd["id"]] = base * 2
+        elif nd["op"] in ("gpool", "dense"):
+            size[nd["id"]] = 1
+        else:
+            size[nd["id"]] = base
+    return size.get(node_id, 1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts/manifest.json")
+    ap.add_argument("--steps", type=int,
+                    default=int(os.environ.get("QTZ_TRAIN_STEPS", "600")))
+    ap.add_argument("--models", default=",".join(BUILDERS.keys()))
+    args = ap.parse_args()
+
+    art_dir = os.path.dirname(os.path.abspath(args.out))
+    hlo_dir = os.path.join(art_dir, "hlo")
+    data_dir = os.path.join(art_dir, "data")
+    os.makedirs(hlo_dir, exist_ok=True)
+    os.makedirs(data_dir, exist_ok=True)
+
+    manifest = {"models": {}, "executables": [], "datasets": {},
+                "step_batch": STEP_BATCH, "qlinear_imgs": QLINEAR_IMGS}
+
+    # ---------------- datasets (calibration + validation) ----------------
+    t0 = time.time()
+    print("== generating datasets")
+    sets = {
+        "calib_gabor": datagen.gen_gabor(CALIB_N, seed=101),
+        "val_gabor": datagen.gen_gabor(VAL_N, seed=202),
+        "calib_checker": datagen.gen_checker(CALIB_N, seed=303),
+        "calib_shapes": datagen.gen_shapes(512, seed=404),
+        "val_shapes": datagen.gen_shapes(512, seed=505),
+    }
+    for name, (x, y) in sets.items():
+        path = os.path.join(data_dir, f"{name}.qtz")
+        qtz.write_qtz(path, {"x": x, "y": y})
+        manifest["datasets"][name] = {"file": f"data/{name}.qtz", "n": len(x)}
+    print(f"   datasets done in {time.time()-t0:.0f}s")
+
+    # ---------------- train + export the zoo ----------------
+    step_buckets = set()     # (rows, cols, relu)
+    qlinear_buckets = set()  # (rows, cols, ncols)
+    for mname in args.models.split(","):
+        print(f"== training {mname}")
+        steps = args.steps if TASKS[mname] == "cls" else max(args.steps, 800)
+        ir, weights, report = trainer.train_model(mname, steps=steps)
+        wfile = f"{mname}.weights.qtz"
+        qtz.write_qtz(os.path.join(art_dir, wfile), weights)
+        manifest["models"][mname] = {
+            "ir": ir, "weights": wfile, "task": TASKS[mname],
+            "fp32_report": report,
+        }
+        for nd, rows, cols, relu in quantizable_layers(ir):
+            step_buckets.add((rows, cols, relu))
+            if mname in QLINEAR_MODELS:
+                hw = spatial_after(ir, nd["id"]) ** 2
+                qlinear_buckets.add((rows, cols, QLINEAR_IMGS * hw))
+
+    # ---------------- lower HLO artifacts ----------------
+    print(f"== lowering {len(step_buckets)} step + {len(qlinear_buckets)} "
+          f"qlinear artifacts")
+    for rows, cols, relu in sorted(step_buckets):
+        fn = model.make_adaround_step(relu=relu)
+        lowered = jax.jit(fn).lower(*model.step_example_args(rows, cols, STEP_BATCH))
+        act = "relu" if relu else "id"
+        fname = f"hlo/step_r{rows}_c{cols}_b{STEP_BATCH}_{act}.hlo.txt"
+        with open(os.path.join(art_dir, fname), "w") as f:
+            f.write(to_hlo_text(lowered))
+        manifest["executables"].append({
+            "kind": "adaround_step", "rows": rows, "cols": cols,
+            "batch": STEP_BATCH, "relu": relu, "file": fname,
+        })
+    for rows, cols, ncols in sorted(qlinear_buckets):
+        fn = model.make_qlinear_fwd()
+        lowered = jax.jit(fn).lower(*model.qlinear_example_args(rows, cols, ncols))
+        fname = f"hlo/qlinear_r{rows}_c{cols}_n{ncols}.hlo.txt"
+        with open(os.path.join(art_dir, fname), "w") as f:
+            f.write(to_hlo_text(lowered))
+        manifest["executables"].append({
+            "kind": "qlinear", "rows": rows, "cols": cols,
+            "batch": ncols, "relu": False, "file": fname,
+        })
+
+    with open(args.out, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"== artifacts complete in {time.time()-t0:.0f}s -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,125 @@
+"""Synthetic-but-learnable vision datasets (build-time data substrate).
+
+The paper evaluates on ImageNet / Pascal VOC with pretrained torchvision
+models.  Neither the data nor the checkpoints are available here, so we
+substitute procedurally generated datasets that a small CNN genuinely has to
+*learn* (texture orientation/frequency discrimination and shape
+segmentation), preserving the phenomena AdaRound is about: 4-bit
+round-to-nearest destroys accuracy, adaptive rounding recovers it.
+See DESIGN.md §1 for the substitution argument.
+
+Datasets
+--------
+``gabor``   10-class classification, 3x32x32.  Class c => oriented sinusoid
+            with orientation theta = pi*c/10 and per-class frequency, random
+            phase/offset, colored tint, additive noise.
+``checker`` the *shifted-domain* set for the Fig-4 analog: axis-aligned
+            checker/stripe textures (different family, same label count).
+``shapes``  segmentation, 3x32x32 -> 4 classes per pixel
+            (0=bg, 1=disk, 2=square, 3=cross) on a noisy textured background.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+IMG = 32
+NUM_CLASSES = 10
+SEG_CLASSES = 4
+
+
+def _coords() -> Tuple[np.ndarray, np.ndarray]:
+    y, x = np.meshgrid(np.arange(IMG), np.arange(IMG), indexing="ij")
+    return x.astype(np.float32), y.astype(np.float32)
+
+
+def _gabor_pattern(rng, xs, ys, cls: int) -> np.ndarray:
+    theta = np.pi * cls / NUM_CLASSES
+    freq = 2.0 + 2.0 * (cls % 2)  # alternate 2 / 4 cycles
+    phase = rng.uniform(0, 2 * np.pi)
+    proj = (xs * np.cos(theta) + ys * np.sin(theta)) / IMG
+    return np.sin(2 * np.pi * freq * proj + phase)
+
+
+def gen_gabor(n: int, seed: int, noise: float = 1.1) -> Tuple[np.ndarray, np.ndarray]:
+    """Oriented-texture classification set. Returns (x[n,3,32,32] f32, y[n] i32).
+
+    Difficulty is tuned so the FP32 micro-networks land around ~90% top-1
+    (leaving headroom for the paper's method gradations): random signal
+    amplitude, a *distractor* pattern from another class mixed in at random
+    strength, and strong pixel noise."""
+    rng = np.random.default_rng(seed)
+    xs, ys = _coords()
+    labels = rng.integers(0, NUM_CLASSES, size=n).astype(np.int32)
+    imgs = np.empty((n, 3, IMG, IMG), dtype=np.float32)
+    for i in range(n):
+        c = int(labels[i])
+        amp = rng.uniform(0.15, 0.7)
+        base = amp * _gabor_pattern(rng, xs, ys, c)
+        d = int(rng.integers(0, NUM_CLASSES))
+        if d != c:
+            base = base + amp * rng.uniform(0.2, 0.9) * _gabor_pattern(rng, xs, ys, d)
+        tint = rng.uniform(0.6, 1.0, size=3).astype(np.float32)
+        for ch in range(3):
+            imgs[i, ch] = base * tint[ch]
+        imgs[i] += rng.normal(0, noise, size=(3, IMG, IMG)).astype(np.float32)
+    return imgs.astype(np.float32), labels
+
+
+def gen_checker(n: int, seed: int, noise: float = 0.7) -> Tuple[np.ndarray, np.ndarray]:
+    """Shifted-domain texture set (checker/stripe family), same 10 labels."""
+    rng = np.random.default_rng(seed)
+    xs, ys = _coords()
+    labels = rng.integers(0, NUM_CLASSES, size=n).astype(np.int32)
+    imgs = np.empty((n, 3, IMG, IMG), dtype=np.float32)
+    for i in range(n):
+        c = int(labels[i])
+        period = 2 + c  # class sets the checker period
+        off = rng.integers(0, period, size=2)
+        cells = ((xs + off[0]) // period + (ys + off[1]) // period) % 2
+        base = cells * 2.0 - 1.0
+        tint = rng.uniform(0.5, 1.0, size=3).astype(np.float32)
+        for ch in range(3):
+            imgs[i, ch] = base * tint[ch]
+        imgs[i] += rng.normal(0, noise, size=(3, IMG, IMG)).astype(np.float32)
+    return imgs.astype(np.float32), labels
+
+
+def gen_shapes(n: int, seed: int, noise: float = 0.45) -> Tuple[np.ndarray, np.ndarray]:
+    """Segmentation set. Returns (x[n,3,32,32] f32, y[n,32,32] i32)."""
+    rng = np.random.default_rng(seed)
+    xs, ys = _coords()
+    imgs = np.empty((n, 3, IMG, IMG), dtype=np.float32)
+    masks = np.zeros((n, IMG, IMG), dtype=np.int32)
+    for i in range(n):
+        # textured background
+        theta = rng.uniform(0, np.pi)
+        proj = (xs * np.cos(theta) + ys * np.sin(theta)) / IMG
+        bg = 0.3 * np.sin(2 * np.pi * 3.0 * proj + rng.uniform(0, 2 * np.pi))
+        img = np.stack([bg, bg, bg]).astype(np.float32)
+        mask = np.zeros((IMG, IMG), dtype=np.int32)
+        for _ in range(rng.integers(1, 4)):
+            kind = int(rng.integers(1, SEG_CLASSES))
+            cx, cy = rng.uniform(6, IMG - 6, size=2)
+            r = rng.uniform(3, 6)
+            if kind == 1:  # disk
+                sel = (xs - cx) ** 2 + (ys - cy) ** 2 <= r * r
+            elif kind == 2:  # square
+                sel = (np.abs(xs - cx) <= r) & (np.abs(ys - cy) <= r)
+            else:  # cross
+                sel = ((np.abs(xs - cx) <= r) & (np.abs(ys - cy) <= 1.5)) | (
+                    (np.abs(ys - cy) <= r) & (np.abs(xs - cx) <= 1.5)
+                )
+            mask[sel] = kind
+            color = rng.uniform(0.5, 1.0, size=3)
+            for ch in range(3):
+                img[ch][sel] = color[ch] * (1.0 if kind != 2 else -1.0)
+        img += rng.normal(0, noise, size=img.shape).astype(np.float32)
+        imgs[i] = img
+        masks[i] = mask
+    return imgs.astype(np.float32), masks
+
+
+GENERATORS = {"gabor": gen_gabor, "checker": gen_checker, "shapes": gen_shapes}

@@ -1,0 +1,50 @@
+"""Pallas kernel for the inference hot path: hard fake-quant matmul.
+
+    W^ = s * clip(floor(W/s) + R, n, p)     R in {0,1}: round down / up
+    Y  = W^ @ X
+
+R = (frac(W/s) >= 0.5) reproduces round-to-nearest; R = AdaRound's converged
+h(V) mask is the quantized model the coordinator serves.  The quantized
+weights are recomputed on-tile from (W, R, s) so the artifact is generic in
+the rounding mask — the same executable serves nearest / stochastic /
+AdaRound weights.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BM = 32
+BN = 128
+
+
+def _qlinear_kernel(w_ref, r_ref, s_ref, x_ref, n_ref, p_ref, y_ref):
+    w = w_ref[...]
+    s = s_ref[...]
+    wq = s * jnp.clip(jnp.floor(w / s) + r_ref[...], n_ref[0], p_ref[0])
+    y_ref[...] = jnp.dot(wq, x_ref[...], preferred_element_type=jnp.float32)
+
+
+def qlinear_matmul(w, r, s, x, n, p):
+    """Y = W^ X with binary rounding mask R (same shapes as softquant)."""
+    rows, cols = w.shape
+    batch = x.shape[1]
+    bm, bn = min(BM, rows), min(BN, batch)
+    grid = (pl.cdiv(rows, bm), pl.cdiv(batch, bn))
+    nv = jnp.reshape(n.astype(jnp.float32), (1,))
+    pv = jnp.reshape(p.astype(jnp.float32), (1,))
+    return pl.pallas_call(
+        _qlinear_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, cols), lambda i, j: (i, 0)),
+            pl.BlockSpec((bm, cols), lambda i, j: (i, 0)),
+            pl.BlockSpec((bm, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((cols, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((rows, batch), jnp.float32),
+        interpret=True,
+    )(w, r, s, x, nv, pv)

@@ -1,0 +1,49 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Everything here is straight-line jnp so ``jax.grad`` works and serves as the
+autodiff oracle for the hand-derived custom-vjp of the Pallas pair.
+"""
+
+import jax.numpy as jnp
+
+from . import relax
+
+
+def soft_quant_weights(w, v, s, n, p):
+    """W~ = s * clip(floor(W/s) + h(V), n, p)   (eq. 22)."""
+    return s * jnp.clip(jnp.floor(w / s) + relax.rect_sigmoid(v), n, p)
+
+
+def softquant_matmul_ref(w, v, s, x, n, p):
+    """Y = W~ X  — the reconstruction forward (soft quantization)."""
+    return soft_quant_weights(w, v, s, n, p) @ x
+
+
+def softquant_gate_ref(w, v, s, n, p):
+    """G = s * clip_mask * h'(V): the elementwise factor the backward kernel
+    multiplies into (dY X^T) to produce dV."""
+    z = jnp.floor(w / s) + relax.rect_sigmoid(v)
+    mask = ((z >= n) & (z <= p)).astype(w.dtype)
+    return s * mask * relax.rect_sigmoid_grad(v)
+
+
+def hard_quant_weights(w, r, s, n, p):
+    """W^ = s * clip(floor(W/s) + R, n, p) with a binary up/down mask R.
+    R = (frac(W/s) >= 0.5) reproduces round-to-nearest."""
+    return s * jnp.clip(jnp.floor(w / s) + r, n, p)
+
+
+def qlinear_ref(w, r, s, x, n, p):
+    """Y = W^ X — hard fake-quant matmul (inference path)."""
+    return hard_quant_weights(w, r, s, n, p) @ x
+
+
+def recon_loss_ref(v, w, s, x, t, beta, lam, n, p, relu):
+    """Full relaxed objective (eq. 25): asymmetric reconstruction MSE of the
+    (optionally ReLU-ed) pre-activations + lambda * f_reg."""
+    y = softquant_matmul_ref(w, v, s, x, n, p)
+    if relu:
+        y = jnp.maximum(y, 0.0)
+        t = jnp.maximum(t, 0.0)
+    mse = jnp.mean((y - t) ** 2)
+    return mse + lam * relax.f_reg(v, beta)

@@ -1,0 +1,41 @@
+"""Shared AdaRound relaxation math (paper eqs. 22-24).
+
+Used by the Pallas kernels, the L2 step graph, and the pure-jnp oracle so
+all three agree on the exact definition of h(V) and f_reg.
+"""
+
+import jax
+import jax.numpy as jnp
+
+# Rectified-sigmoid stretch parameters (paper: zeta=1.1, gamma=-0.1).
+ZETA = 1.1
+GAMMA = -0.1
+
+
+def rect_sigmoid(v):
+    """h(V) = clip(sigmoid(V) * (zeta - gamma) + gamma, 0, 1)   (eq. 23)."""
+    return jnp.clip(jax.nn.sigmoid(v) * (ZETA - GAMMA) + GAMMA, 0.0, 1.0)
+
+
+def rect_sigmoid_grad(v):
+    """dh/dV (zero where the rectification clips)."""
+    s = jax.nn.sigmoid(v)
+    raw = s * (ZETA - GAMMA) + GAMMA
+    inside = ((raw > 0.0) & (raw < 1.0)).astype(v.dtype)
+    return inside * s * (1.0 - s) * (ZETA - GAMMA)
+
+
+def f_reg(v, beta):
+    """sum_ij 1 - |2 h(V_ij) - 1|^beta   (eq. 24)."""
+    h = rect_sigmoid(v)
+    return jnp.sum(1.0 - jnp.abs(2.0 * h - 1.0) ** beta)
+
+
+def init_v_from_weights(w, s):
+    """Initialize V so that h(V) equals the fractional part of W/s
+    (i.e. soft-quantization starts exactly at the FP32 weights).
+    Inverse of the rectified sigmoid on the open interval (0,1)."""
+    frac = w / s - jnp.floor(w / s)
+    frac = jnp.clip(frac, 1e-4, 1.0 - 1e-4)
+    p = (frac - GAMMA) / (ZETA - GAMMA)
+    return jnp.log(p / (1.0 - p))

@@ -1,0 +1,150 @@
+"""Pallas kernels for the AdaRound hot-spot: soft-quantized matmul fwd/bwd.
+
+Forward (per-layer reconstruction objective, paper eq. 21/25):
+
+    W~ = s * clip(floor(W/s) + h(V), n, p)
+    Y  = W~ @ X
+    G  = s * clip_mask * h'(V)          (saved for the backward pass)
+
+Backward (hand-derived VJP — interpret-mode ``pallas_call`` has no autodiff
+rule, so the pair is registered as a ``jax.custom_vjp`` and cross-checked
+against the jnp oracle's ``jax.grad`` in pytest/hypothesis):
+
+    dV = (dY @ X^T) * G
+
+TPU-shaped design (see DESIGN.md §Hardware-Adaptation): the grid tiles the
+output (M/bm, N/bn); the W/V tile is loaded into VMEM once per row-block,
+h(V), the integer floor and the clip are computed on-tile (W~ never hits
+HBM), and the contraction uses ``jnp.dot(..., preferred_element_type=f32)``
+so Mosaic maps it onto the MXU.  On this CPU image the kernels run under
+``interpret=True`` (Mosaic custom-calls cannot execute on the CPU PJRT
+plugin); block shapes below are chosen for the real-TPU VMEM budget and
+documented in EXPERIMENTS.md §Perf.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import relax
+
+# Block shapes. On TPU these would be (128, 128) MXU-aligned tiles; the
+# sizes here keep the interpret-mode grid small while still exercising the
+# multi-block code path in tests.
+BM = 32  # output-row block (rows of W)
+BN = 64  # output-col block (columns of X)
+BK_FULL = True  # K (= cols of W) is kept resident per block-row
+
+
+def _fwd_kernel(w_ref, v_ref, s_ref, x_ref, n_ref, p_ref, y_ref, g_ref):
+    """One (bm, bn) output tile: soft-quantize the W tile, contract with X."""
+    w = w_ref[...]
+    v = v_ref[...]
+    s = s_ref[...]
+    n = n_ref[0]
+    p = p_ref[0]
+    sig = jax.nn.sigmoid(v)
+    h = jnp.clip(sig * (relax.ZETA - relax.GAMMA) + relax.GAMMA, 0.0, 1.0)
+    z = jnp.floor(w / s) + h
+    wq = s * jnp.clip(z, n, p)
+    y_ref[...] = jnp.dot(wq, x_ref[...], preferred_element_type=jnp.float32)
+    # Gate for the backward pass: d(W~)/dV = s * 1[n<=z<=p] * h'(V).
+    raw = sig * (relax.ZETA - relax.GAMMA) + relax.GAMMA
+    hgrad = jnp.where((raw > 0.0) & (raw < 1.0),
+                      sig * (1.0 - sig) * (relax.ZETA - relax.GAMMA), 0.0)
+    mask = ((z >= n) & (z <= p)).astype(w.dtype)
+    g_ref[...] = s * mask * hgrad
+
+
+def _bwd_kernel(dy_ref, x_ref, g_ref, dv_ref):
+    """dV tile = (dY @ X^T) tile * G tile."""
+    dv_ref[...] = (
+        jnp.dot(dy_ref[...], x_ref[...].T, preferred_element_type=jnp.float32)
+        * g_ref[...]
+    )
+
+
+def _fwd_call(w, v, s, x, n, p):
+    rows, cols = w.shape
+    batch = x.shape[1]
+    bm, bn = min(BM, rows), min(BN, batch)
+    grid = (pl.cdiv(rows, bm), pl.cdiv(batch, bn))
+    nv = jnp.reshape(n.astype(jnp.float32), (1,))
+    pv = jnp.reshape(p.astype(jnp.float32), (1,))
+    y, g = pl.pallas_call(
+        _fwd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, cols), lambda i, j: (i, 0)),   # W
+            pl.BlockSpec((bm, cols), lambda i, j: (i, 0)),   # V
+            pl.BlockSpec((bm, 1), lambda i, j: (i, 0)),      # s (per-row)
+            pl.BlockSpec((cols, bn), lambda i, j: (0, j)),   # X
+            pl.BlockSpec((1,), lambda i, j: (0,)),           # n
+            pl.BlockSpec((1,), lambda i, j: (0,)),           # p
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),     # Y
+            pl.BlockSpec((bm, cols), lambda i, j: (i, 0)),   # G (idempotent over j)
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, batch), jnp.float32),
+            jax.ShapeDtypeStruct((rows, cols), jnp.float32),
+        ],
+        interpret=True,
+    )(w, v, s, x, nv, pv)
+    return y, g
+
+
+def _bwd_call(dy, x, g):
+    rows, cols = g.shape
+    batch = x.shape[1]
+    bm, bk = min(BM, rows), min(BN, cols)
+    grid = (pl.cdiv(rows, bm), pl.cdiv(cols, bk))
+    dv = pl.pallas_call(
+        _bwd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, batch), lambda i, j: (i, 0)),  # dY
+            pl.BlockSpec((bk, batch), lambda i, j: (j, 0)),  # X
+            pl.BlockSpec((bm, bk), lambda i, j: (i, j)),     # G
+        ],
+        out_specs=pl.BlockSpec((bm, bk), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), jnp.float32),
+        interpret=True,
+    )(dy, x, g)
+    return dv
+
+
+@jax.custom_vjp
+def softquant_matmul(w, v, s, x, n, p):
+    """Soft-quantized matmul Y = (s*clip(floor(W/s)+h(V), n, p)) @ X.
+
+    Differentiable in V only (the AdaRound optimization variable); the VJP
+    for every other argument is defined as zero, which is exact for the
+    AdaRound use where W, s, X, n, p are constants of the layer problem.
+    """
+    y, _ = _fwd_call(w, v, s, x, n, p)
+    return y
+
+
+def _vjp_fwd(w, v, s, x, n, p):
+    y, g = _fwd_call(w, v, s, x, n, p)
+    return y, (g, x)
+
+
+def _vjp_bwd(res, dy):
+    g, x = res
+    dv = _bwd_call(dy, x, g)
+    zeros = lambda a: jnp.zeros_like(a)
+    return (jnp.zeros_like(g), dv, jnp.zeros((g.shape[0], 1), jnp.float32),
+            zeros(x), jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32))
+
+
+softquant_matmul.defvjp(_vjp_fwd, _vjp_bwd)
+
+
+def softquant_matmul_with_gate(w, v, s, x, n, p):
+    """Non-differentiable variant that also returns the gate (for tests)."""
+    return _fwd_call(w, v, s, x, n, p)

@@ -1,0 +1,93 @@
+"""L2: the AdaRound per-layer optimization step as a single JAX graph.
+
+One call = one full iteration of the paper's eq. (25):
+
+    loss = ||f_a(T) - f_a(W~ X)||^2 / numel  +  lam * f_reg(V; beta)
+    grad = dloss/dV      (through the custom-vjp Pallas pair + jnp f_reg)
+    (V, m, v) <- Adam(V, m, v, grad, t, lr)
+
+The whole thing is lowered once per (rows, cols, batch, relu) shape bucket
+to a single HLO artifact that the rust coordinator executes in a loop —
+python never runs on the request path.
+
+Inputs  : V[r,c] m[r,c] v[r,c] t[] X[c,B] T[r,B] W[r,c] s[r,1] b[r,1]
+          beta[] lam[] lr[] n[] p[]          (all f32)
+Outputs : (V', m', v', loss[], mse[])
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import relax, softquant
+
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+
+
+def make_adaround_step(relu: bool, use_pallas: bool = True):
+    """Build the step function for a given activation variant."""
+
+    def objective(v_opt, w, s, b, x, t, beta, lam, n, p):
+        if use_pallas:
+            y = softquant.softquant_matmul(w, v_opt, s, x, n, p)
+        else:  # pure-jnp fallback (oracle path, used in tests)
+            from .kernels import ref
+            y = ref.softquant_matmul_ref(w, v_opt, s, x, n, p)
+        y = y + b  # layer bias participates in the (ReLU-)reconstruction
+        tt = t
+        if relu:
+            y = jnp.maximum(y, 0.0)
+            tt = jnp.maximum(t, 0.0)
+        mse = jnp.mean((y - tt) ** 2)
+        loss = mse + lam * relax.f_reg(v_opt, beta)
+        return loss, mse
+
+    def step(v_opt, m, v2, t_step, x, t_target, w, s, b, beta, lam, lr, n, p):
+        (loss, mse), grad = jax.value_and_grad(objective, has_aux=True)(
+            v_opt, w, s, b, x, t_target, beta, lam, n, p)
+        m_new = ADAM_B1 * m + (1.0 - ADAM_B1) * grad
+        v_new = ADAM_B2 * v2 + (1.0 - ADAM_B2) * grad * grad
+        mhat = m_new / (1.0 - ADAM_B1 ** t_step)
+        vhat = v_new / (1.0 - ADAM_B2 ** t_step)
+        v_upd = v_opt - lr * mhat / (jnp.sqrt(vhat) + ADAM_EPS)
+        return v_upd, m_new, v_new, loss, mse
+
+    return step
+
+
+def step_example_args(rows: int, cols: int, batch: int):
+    """ShapeDtypeStructs matching the step signature (for jit.lower)."""
+    f32 = jnp.float32
+    mat = jax.ShapeDtypeStruct((rows, cols), f32)
+    scal = jax.ShapeDtypeStruct((), f32)
+    return (
+        mat, mat, mat, scal,
+        jax.ShapeDtypeStruct((cols, batch), f32),
+        jax.ShapeDtypeStruct((rows, batch), f32),
+        mat,
+        jax.ShapeDtypeStruct((rows, 1), f32),
+        jax.ShapeDtypeStruct((rows, 1), f32),
+        scal, scal, scal, scal, scal,
+    )
+
+
+def make_qlinear_fwd():
+    """Inference-path quantized matmul (see kernels/qlinear.py)."""
+    from .kernels import qlinear
+
+    def fwd(w, r, s, b, x, n, p):
+        return qlinear.qlinear_matmul(w, r, s, x, n, p) + b
+
+    return fwd
+
+
+def qlinear_example_args(rows: int, cols: int, batch: int):
+    f32 = jnp.float32
+    mat = jax.ShapeDtypeStruct((rows, cols), f32)
+    scal = jax.ShapeDtypeStruct((), f32)
+    return (mat, mat, jax.ShapeDtypeStruct((rows, 1), f32),
+            jax.ShapeDtypeStruct((rows, 1), f32),
+            jax.ShapeDtypeStruct((cols, batch), f32), scal, scal)

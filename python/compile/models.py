@@ -1,0 +1,377 @@
+"""Micro-network zoo: graph IR + pure-JAX executor + builders + BN folding.
+
+The architecture of every model is expressed as a small graph IR (list of
+node dicts).  The same IR is exported into ``artifacts/manifest.json`` and
+interpreted by the rust inference engine (rust/src/nn) — the architecture is
+defined exactly once, here.
+
+Node schema (all fields JSON-serializable):
+    {"id": str, "op": str, "inputs": [str], ...op-specific fields}
+
+Ops:
+    input                                   the image tensor [N,3,32,32]
+    conv     {k, stride, pad, groups, relu, bn}   weight "<id>.w" [O,I/g,k,k]
+    dense    {relu}                               weight "<id>.w" [O,I]
+    add                                     elementwise sum of two inputs
+    relu                                    standalone ReLU
+    avgpool  {k, stride}                    average pooling
+    gpool                                   global average pool -> [N,C]
+    upsample                                nearest-neighbor x2
+    concat                                  channel concat of inputs
+
+``bn`` is a *training-time* flag: during training the conv is followed by a
+BatchNorm whose parameters live beside the conv weight; at export the BN is
+folded into the conv weight+bias (paper §5: "we absorb batch normalization
+in the weights of the adjacent layers") and the flag is dropped from the IR.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+BN_EPS = 1e-5
+BN_MOM = 0.9
+
+
+# --------------------------------------------------------------------------
+# Graph builder helpers
+# --------------------------------------------------------------------------
+
+
+class Graph:
+    """Tiny helper to accumulate IR nodes with unique ids."""
+
+    def __init__(self) -> None:
+        self.nodes: List[dict] = [{"id": "in", "op": "input", "inputs": []}]
+        self._n = 0
+
+    def _fresh(self, prefix: str) -> str:
+        self._n += 1
+        return f"{prefix}{self._n}"
+
+    def conv(self, x: str, cin: int, cout: int, k: int, stride: int = 1,
+             groups: int = 1, relu: bool = True, bn: bool = True) -> str:
+        nid = self._fresh("c")
+        self.nodes.append({
+            "id": nid, "op": "conv", "inputs": [x], "cin": cin, "cout": cout,
+            "k": k, "stride": stride, "pad": k // 2, "groups": groups,
+            "relu": relu, "bn": bn,
+        })
+        return nid
+
+    def dense(self, x: str, cin: int, cout: int, relu: bool = False) -> str:
+        nid = self._fresh("d")
+        self.nodes.append({"id": nid, "op": "dense", "inputs": [x],
+                           "cin": cin, "cout": cout, "relu": relu})
+        return nid
+
+    def add(self, a: str, b: str, relu: bool = True) -> str:
+        nid = self._fresh("a")
+        self.nodes.append({"id": nid, "op": "add", "inputs": [a, b], "relu": relu})
+        return nid
+
+    def avgpool(self, x: str, k: int = 2, stride: int = 2) -> str:
+        nid = self._fresh("p")
+        self.nodes.append({"id": nid, "op": "avgpool", "inputs": [x], "k": k, "stride": stride})
+        return nid
+
+    def gpool(self, x: str) -> str:
+        nid = self._fresh("g")
+        self.nodes.append({"id": nid, "op": "gpool", "inputs": [x]})
+        return nid
+
+    def upsample(self, x: str) -> str:
+        nid = self._fresh("u")
+        self.nodes.append({"id": nid, "op": "upsample", "inputs": [x]})
+        return nid
+
+    def concat(self, xs: List[str]) -> str:
+        nid = self._fresh("k")
+        self.nodes.append({"id": nid, "op": "concat", "inputs": list(xs)})
+        return nid
+
+
+# --------------------------------------------------------------------------
+# Architectures
+# --------------------------------------------------------------------------
+
+
+def _basic_block(g: Graph, x: str, cin: int, cout: int, stride: int) -> str:
+    c1 = g.conv(x, cin, cout, 3, stride=stride)
+    c2 = g.conv(c1, cout, cout, 3, relu=False)
+    if stride != 1 or cin != cout:
+        skip = g.conv(x, cin, cout, 1, stride=stride, relu=False)
+    else:
+        skip = x
+    return g.add(c2, skip)
+
+
+def build_micro18() -> List[dict]:
+    """Residual net with basic blocks — the Resnet18 analog.
+
+    Channel widths are sized for the single-core CPU testbed (DESIGN.md §1);
+    the 4-bit rounding phenomena are stronger, not weaker, at small width."""
+    g = Graph()
+    x = g.conv("in", 3, 8, 3)
+    x = _basic_block(g, x, 8, 8, 1)
+    x = _basic_block(g, x, 8, 8, 1)
+    x = _basic_block(g, x, 8, 16, 2)
+    x = _basic_block(g, x, 16, 16, 1)
+    x = _basic_block(g, x, 16, 32, 2)
+    x = _basic_block(g, x, 32, 32, 1)
+    x = g.gpool(x)
+    g.dense(x, 32, 10)
+    return g.nodes
+
+
+def _bottleneck(g: Graph, x: str, cin: int, cmid: int, cout: int, stride: int) -> str:
+    c1 = g.conv(x, cin, cmid, 1)
+    c2 = g.conv(c1, cmid, cmid, 3, stride=stride)
+    c3 = g.conv(c2, cmid, cout, 1, relu=False)
+    if stride != 1 or cin != cout:
+        skip = g.conv(x, cin, cout, 1, stride=stride, relu=False)
+    else:
+        skip = x
+    return g.add(c3, skip)
+
+
+def build_micro50() -> List[dict]:
+    """Deeper bottleneck-block net — the Resnet50 analog."""
+    g = Graph()
+    x = g.conv("in", 3, 8, 3)
+    x = _bottleneck(g, x, 8, 4, 16, 1)
+    x = _bottleneck(g, x, 16, 4, 16, 1)
+    x = _bottleneck(g, x, 16, 8, 32, 2)
+    x = _bottleneck(g, x, 32, 8, 32, 1)
+    x = _bottleneck(g, x, 32, 16, 64, 2)
+    x = _bottleneck(g, x, 64, 16, 64, 1)
+    x = g.gpool(x)
+    g.dense(x, 64, 10)
+    return g.nodes
+
+
+def _inception_cell(g: Graph, x: str, cin: int, b1: int, b2m: int, b2: int,
+                    b3m: int, b3: int) -> Tuple[str, int]:
+    p1 = g.conv(x, cin, b1, 1)
+    p2 = g.conv(g.conv(x, cin, b2m, 1), b2m, b2, 3)
+    p3 = g.conv(g.conv(x, cin, b3m, 1), b3m, b3, 3)
+    return g.concat([p1, p2, p3]), b1 + b2 + b3
+
+
+def build_microinc() -> List[dict]:
+    """Parallel-branch cells — the InceptionV3 analog."""
+    g = Graph()
+    x = g.conv("in", 3, 8, 3)
+    x, c = _inception_cell(g, x, 8, 4, 4, 4, 2, 4)
+    x = g.avgpool(x)
+    x, c = _inception_cell(g, x, c, 6, 6, 6, 3, 6)
+    x = g.avgpool(x)
+    x, c = _inception_cell(g, x, c, 8, 8, 8, 4, 8)
+    x = g.gpool(x)
+    g.dense(x, c, 10)
+    return g.nodes
+
+
+def _inverted_residual(g: Graph, x: str, cin: int, exp: int, cout: int, stride: int) -> str:
+    mid = cin * exp
+    c1 = g.conv(x, cin, mid, 1)
+    c2 = g.conv(c1, mid, mid, 3, stride=stride, groups=mid)
+    c3 = g.conv(c2, mid, cout, 1, relu=False)
+    if stride == 1 and cin == cout:
+        return g.add(c3, x, relu=False)
+    return c3
+
+
+def build_micromobile() -> List[dict]:
+    """Depthwise-separable inverted residuals — the MobilenetV2 analog
+    (depthwise layers make it notoriously hard to quantize per-tensor)."""
+    g = Graph()
+    x = g.conv("in", 3, 8, 3)
+    x = _inverted_residual(g, x, 8, 2, 8, 1)
+    x = _inverted_residual(g, x, 8, 2, 12, 2)
+    x = _inverted_residual(g, x, 12, 2, 12, 1)
+    x = _inverted_residual(g, x, 12, 2, 16, 2)
+    x = _inverted_residual(g, x, 16, 2, 16, 1)
+    x = g.conv(x, 16, 32, 1)
+    x = g.gpool(x)
+    g.dense(x, 32, 10)
+    return g.nodes
+
+
+def build_segnet() -> List[dict]:
+    """Small U-shaped encoder-decoder — the DeeplabV3+ analog (per-pixel
+    4-class output over 32x32)."""
+    g = Graph()
+    e1 = g.conv("in", 3, 8, 3)
+    e2 = g.conv(e1, 8, 16, 3, stride=2)
+    e3 = g.conv(e2, 16, 24, 3, stride=2)
+    m = g.conv(e3, 24, 24, 3)
+    u1 = g.upsample(m)
+    d1 = g.conv(g.concat([u1, e2]), 24 + 16, 16, 3)
+    u2 = g.upsample(d1)
+    d2 = g.conv(g.concat([u2, e1]), 16 + 8, 8, 3)
+    g.conv(d2, 8, 4, 1, relu=False, bn=False)
+    return g.nodes
+
+
+BUILDERS = {
+    "micro18": build_micro18,
+    "micro50": build_micro50,
+    "microinc": build_microinc,
+    "micromobile": build_micromobile,
+    "segnet": build_segnet,
+}
+
+TASKS = {
+    "micro18": "cls", "micro50": "cls", "microinc": "cls",
+    "micromobile": "cls", "segnet": "seg",
+}
+
+
+# --------------------------------------------------------------------------
+# Parameter init
+# --------------------------------------------------------------------------
+
+
+def init_params(nodes: List[dict], seed: int) -> Dict[str, np.ndarray]:
+    rng = np.random.default_rng(seed)
+    params: Dict[str, np.ndarray] = {}
+    for nd in nodes:
+        if nd["op"] == "conv":
+            cin_g = nd["cin"] // nd["groups"]
+            fan_in = cin_g * nd["k"] * nd["k"]
+            w = rng.normal(0, np.sqrt(2.0 / fan_in),
+                           size=(nd["cout"], cin_g, nd["k"], nd["k"]))
+            params[nd["id"] + ".w"] = w.astype(np.float32)
+            if nd.get("bn", False):
+                params[nd["id"] + ".bn.g"] = np.ones(nd["cout"], np.float32)
+                params[nd["id"] + ".bn.b"] = np.zeros(nd["cout"], np.float32)
+            else:
+                params[nd["id"] + ".b"] = np.zeros(nd["cout"], np.float32)
+        elif nd["op"] == "dense":
+            w = rng.normal(0, np.sqrt(2.0 / nd["cin"]), size=(nd["cout"], nd["cin"]))
+            params[nd["id"] + ".w"] = w.astype(np.float32)
+            params[nd["id"] + ".b"] = np.zeros(nd["cout"], np.float32)
+    return params
+
+
+def init_bn_state(nodes: List[dict]) -> Dict[str, np.ndarray]:
+    state: Dict[str, np.ndarray] = {}
+    for nd in nodes:
+        if nd["op"] == "conv" and nd.get("bn", False):
+            state[nd["id"] + ".bn.mean"] = np.zeros(nd["cout"], np.float32)
+            state[nd["id"] + ".bn.var"] = np.ones(nd["cout"], np.float32)
+    return state
+
+
+# --------------------------------------------------------------------------
+# JAX executor (training / python-side eval)
+# --------------------------------------------------------------------------
+
+
+def _conv2d(x, w, stride: int, pad: int, groups: int):
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride),
+        padding=[(pad, pad), (pad, pad)],
+        feature_group_count=groups,
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+
+
+def apply_graph(nodes: List[dict], params: Dict, state: Dict, x, train: bool):
+    """Run the graph. Returns (output, new_state). ``state`` holds BN
+    running statistics; in train mode batch statistics are used and the
+    running stats are updated with momentum BN_MOM."""
+    vals = {"in": x}
+    new_state = dict(state)
+    for nd in nodes:
+        op, nid = nd["op"], nd["id"]
+        if op == "input":
+            continue
+        a = vals[nd["inputs"][0]] if nd["inputs"] else None
+        if op == "conv":
+            y = _conv2d(a, params[nid + ".w"], nd["stride"], nd["pad"], nd["groups"])
+            if nd.get("bn", False):
+                if train:
+                    mean = jnp.mean(y, axis=(0, 2, 3))
+                    var = jnp.var(y, axis=(0, 2, 3))
+                    new_state[nid + ".bn.mean"] = (
+                        BN_MOM * state[nid + ".bn.mean"] + (1 - BN_MOM) * mean)
+                    new_state[nid + ".bn.var"] = (
+                        BN_MOM * state[nid + ".bn.var"] + (1 - BN_MOM) * var)
+                else:
+                    mean = state[nid + ".bn.mean"]
+                    var = state[nid + ".bn.var"]
+                inv = params[nid + ".bn.g"] / jnp.sqrt(var + BN_EPS)
+                y = (y - mean[None, :, None, None]) * inv[None, :, None, None] \
+                    + params[nid + ".bn.b"][None, :, None, None]
+            else:
+                y = y + params[nid + ".b"][None, :, None, None]
+            if nd["relu"]:
+                y = jax.nn.relu(y)
+        elif op == "dense":
+            y = vals[nd["inputs"][0]] @ params[nid + ".w"].T + params[nid + ".b"]
+            if nd["relu"]:
+                y = jax.nn.relu(y)
+        elif op == "add":
+            y = vals[nd["inputs"][0]] + vals[nd["inputs"][1]]
+            if nd["relu"]:
+                y = jax.nn.relu(y)
+        elif op == "relu":
+            y = jax.nn.relu(a)
+        elif op == "avgpool":
+            k, s = nd["k"], nd["stride"]
+            y = jax.lax.reduce_window(a, 0.0, jax.lax.add, (1, 1, k, k),
+                                      (1, 1, s, s), "VALID") / (k * k)
+        elif op == "gpool":
+            y = jnp.mean(a, axis=(2, 3))
+        elif op == "upsample":
+            y = jnp.repeat(jnp.repeat(a, 2, axis=2), 2, axis=3)
+        elif op == "concat":
+            y = jnp.concatenate([vals[i] for i in nd["inputs"]], axis=1)
+        else:
+            raise ValueError(f"unknown op {op}")
+        vals[nid] = y
+    return vals[nodes[-1]["id"]], new_state
+
+
+# --------------------------------------------------------------------------
+# BN folding + export IR
+# --------------------------------------------------------------------------
+
+
+def fold_bn(nodes: List[dict], params: Dict[str, np.ndarray],
+            state: Dict[str, np.ndarray]) -> Tuple[List[dict], Dict[str, np.ndarray]]:
+    """Fold BatchNorm into conv weight+bias; return (export IR, weights).
+
+    w' = w * g/sqrt(var+eps)   (per out-channel)
+    b' = beta - g*mean/sqrt(var+eps)
+    """
+    out_nodes: List[dict] = []
+    weights: Dict[str, np.ndarray] = {}
+    for nd in nodes:
+        nd = dict(nd)
+        nid = nd["id"]
+        if nd["op"] == "conv":
+            w = np.asarray(params[nid + ".w"], np.float32)
+            if nd.pop("bn", False):
+                g = np.asarray(params[nid + ".bn.g"], np.float32)
+                beta = np.asarray(params[nid + ".bn.b"], np.float32)
+                mean = np.asarray(state[nid + ".bn.mean"], np.float32)
+                var = np.asarray(state[nid + ".bn.var"], np.float32)
+                inv = g / np.sqrt(var + BN_EPS)
+                w = w * inv[:, None, None, None]
+                b = beta - mean * inv
+            else:
+                b = np.asarray(params[nid + ".b"], np.float32)
+            weights[nid + ".w"] = w
+            weights[nid + ".b"] = b
+        elif nd["op"] == "dense":
+            weights[nid + ".w"] = np.asarray(params[nid + ".w"], np.float32)
+            weights[nid + ".b"] = np.asarray(params[nid + ".b"], np.float32)
+        out_nodes.append(nd)
+    return out_nodes, weights

@@ -1,0 +1,73 @@
+"""`.qtz` tensor-bundle interchange format (python writer/reader).
+
+A minimal, dependency-free binary container shared between the build-time
+python side and the rust runtime (rust/src/io/qtz.rs mirrors this exactly).
+
+Layout (all integers little-endian):
+
+    magic   : 4 bytes  b"QTZ1"
+    count   : u32      number of tensors
+    per tensor:
+        name_len : u16
+        name     : utf-8 bytes
+        dtype    : u8   (0 = f32, 1 = i32, 2 = u8)
+        ndim     : u8
+        dims     : u32 * ndim
+        data     : raw little-endian values (prod(dims) elements)
+"""
+
+from __future__ import annotations
+
+import struct
+from typing import Dict
+
+import numpy as np
+
+MAGIC = b"QTZ1"
+
+_DTYPE_TO_CODE = {np.dtype(np.float32): 0, np.dtype(np.int32): 1, np.dtype(np.uint8): 2}
+_CODE_TO_DTYPE = {0: np.float32, 1: np.int32, 2: np.uint8}
+
+
+def write_qtz(path: str, tensors: Dict[str, np.ndarray]) -> None:
+    """Write a named tensor bundle. Tensors are cast to a supported dtype."""
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(tensors)))
+        for name, arr in tensors.items():
+            arr = np.asarray(arr)
+            if arr.dtype not in _DTYPE_TO_CODE:
+                if np.issubdtype(arr.dtype, np.floating):
+                    arr = arr.astype(np.float32)
+                elif np.issubdtype(arr.dtype, np.integer):
+                    arr = arr.astype(np.int32)
+                else:
+                    raise ValueError(f"unsupported dtype {arr.dtype} for {name}")
+            code = _DTYPE_TO_CODE[arr.dtype]
+            name_b = name.encode("utf-8")
+            f.write(struct.pack("<H", len(name_b)))
+            f.write(name_b)
+            f.write(struct.pack("<BB", code, arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(arr.astype(arr.dtype, order="C").tobytes())
+
+
+def read_qtz(path: str) -> Dict[str, np.ndarray]:
+    """Read a bundle back (used by tests to round-trip)."""
+    out: Dict[str, np.ndarray] = {}
+    with open(path, "rb") as f:
+        magic = f.read(4)
+        if magic != MAGIC:
+            raise ValueError(f"bad magic {magic!r} in {path}")
+        (count,) = struct.unpack("<I", f.read(4))
+        for _ in range(count):
+            (name_len,) = struct.unpack("<H", f.read(2))
+            name = f.read(name_len).decode("utf-8")
+            code, ndim = struct.unpack("<BB", f.read(2))
+            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim)) if ndim else ()
+            dtype = np.dtype(_CODE_TO_DTYPE[code])
+            n = int(np.prod(dims)) if ndim else 1
+            data = np.frombuffer(f.read(n * dtype.itemsize), dtype=dtype)
+            out[name] = data.reshape(dims).copy()
+    return out

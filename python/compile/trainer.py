@@ -1,0 +1,119 @@
+"""Build-time FP32 training of the micro-network zoo.
+
+This is the "pretrained torchvision checkpoint" substitute: each model is
+trained from scratch (hand-rolled Adam, cross-entropy) on the synthetic
+dataset and its BN-folded weights are exported for the rust PTQ pipeline.
+Runs exactly once, inside ``make artifacts``; never on the request path.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import datagen, models
+
+
+def _adam_update(params, grads, m, v, t, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    new_p, new_m, new_v = {}, {}, {}
+    for k in params:
+        g = grads[k]
+        new_m[k] = b1 * m[k] + (1 - b1) * g
+        new_v[k] = b2 * v[k] + (1 - b2) * g * g
+        mhat = new_m[k] / (1 - b1 ** t)
+        vhat = new_v[k] / (1 - b2 ** t)
+        new_p[k] = params[k] - lr * mhat / (jnp.sqrt(vhat) + eps)
+    return new_p, new_m, new_v
+
+
+def _ce_loss(logits, labels):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[..., None], axis=-1))
+
+
+def _seg_ce_loss(logits, masks):
+    # logits [N,C,H,W], masks [N,H,W]
+    logp = jax.nn.log_softmax(logits, axis=1)
+    onehot = jax.nn.one_hot(masks, logits.shape[1], axis=1)
+    return -jnp.mean(jnp.sum(logp * onehot, axis=1))
+
+
+def train_model(name: str, steps: int, seed: int = 0,
+                n_train: int = 4096, batch: int = 32,
+                verbose: bool = True) -> Tuple[list, Dict[str, np.ndarray], dict]:
+    """Train one model; returns (export_ir, folded_weights, report)."""
+    nodes = models.BUILDERS[name]()
+    task = models.TASKS[name]
+    gen = datagen.gen_shapes if task == "seg" else datagen.gen_gabor
+    xs, ys = gen(n_train, seed=seed + 1)
+    xv, yv = gen(1024, seed=seed + 2)
+
+    params = {k: jnp.asarray(v) for k, v in models.init_params(nodes, seed).items()}
+    state = {k: jnp.asarray(v) for k, v in models.init_bn_state(nodes).items()}
+    m = {k: jnp.zeros_like(v) for k, v in params.items()}
+    v = {k: jnp.zeros_like(v_) for k, v_ in params.items()}
+
+    loss_fn = _seg_ce_loss if task == "seg" else _ce_loss
+
+    @jax.jit
+    def step_fn(params, state, m, v, t, bx, by):
+        def loss(p):
+            logits, new_state = models.apply_graph(nodes, p, state, bx, train=True)
+            return loss_fn(logits, by), new_state
+        (l, new_state), grads = jax.value_and_grad(loss, has_aux=True)(params)
+        params, m, v = _adam_update(params, grads, m, v, t)
+        return params, new_state, m, v, l
+
+    @jax.jit
+    def eval_fn(params, state, bx):
+        logits, _ = models.apply_graph(nodes, params, state, bx, train=False)
+        return logits
+
+    rng = np.random.default_rng(seed + 3)
+    t0 = time.time()
+    losses = []
+    for t in range(1, steps + 1):
+        idx = rng.integers(0, n_train, size=batch)
+        bx, by = jnp.asarray(xs[idx]), jnp.asarray(ys[idx])
+        params, state, m, v, l = step_fn(params, state, m, v, float(t), bx, by)
+        losses.append(float(l))
+        if verbose and (t % max(1, steps // 5) == 0 or t == 1):
+            print(f"  [{name}] step {t}/{steps} loss={float(l):.4f}")
+
+    # validation
+    correct, total = 0, 0
+    inter = np.zeros(4); union = np.zeros(4)
+    for i in range(0, len(xv), 128):
+        logits = np.asarray(eval_fn(params, state, jnp.asarray(xv[i:i + 128])))
+        if task == "cls":
+            pred = logits.argmax(-1)
+            correct += int((pred == yv[i:i + 128]).sum()); total += len(pred)
+        else:
+            pred = logits.argmax(1)
+            gt = yv[i:i + 128]
+            for c in range(4):
+                inter[c] += np.sum((pred == c) & (gt == c))
+                union[c] += np.sum((pred == c) | (gt == c))
+            total += len(pred)
+    if task == "cls":
+        metric = 100.0 * correct / total
+        metric_name = "top1"
+    else:
+        metric = 100.0 * float(np.mean(inter / np.maximum(union, 1)))
+        metric_name = "miou"
+
+    export_ir, weights = models.fold_bn(
+        nodes, {k: np.asarray(p) for k, p in params.items()},
+        {k: np.asarray(s) for k, s in state.items()})
+    report = {"model": name, "task": task, "steps": steps,
+              metric_name: round(metric, 2),
+              "train_secs": round(time.time() - t0, 1),
+              "final_loss": round(float(np.mean(losses[-20:])), 4)}
+    if verbose:
+        print(f"  [{name}] fp32 {metric_name}={metric:.2f} "
+              f"({time.time() - t0:.0f}s, {steps} steps)")
+    return export_ir, weights, report

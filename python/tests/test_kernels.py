@@ -1,0 +1,158 @@
+"""Pallas kernel vs pure-jnp oracle — the CORE build-time correctness signal.
+
+The hypothesis sweeps exercise non-block-aligned shapes, degenerate sizes
+and extreme scales; the custom-vjp is checked against the oracle's autodiff.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import qlinear, ref, relax, softquant
+
+F32 = jnp.float32
+
+
+def _problem(rng, rows, cols, batch, scale=0.05):
+    w = jnp.asarray(rng.normal(0, 0.3, (rows, cols)), F32)
+    v = jnp.asarray(rng.normal(0, 2.0, (rows, cols)), F32)
+    s = jnp.asarray(np.abs(rng.normal(scale, scale / 4, (rows, 1))) + 1e-4, F32)
+    x = jnp.asarray(rng.normal(0, 1, (cols, batch)), F32)
+    return w, v, s, x
+
+
+NP4 = (jnp.float32(-8.0), jnp.float32(7.0))
+
+
+class TestSoftQuantForward:
+    def test_matches_ref_basic(self):
+        rng = np.random.default_rng(0)
+        w, v, s, x = _problem(rng, 32, 64, 192)
+        n, p = NP4
+        y = softquant.softquant_matmul(w, v, s, x, n, p)
+        yr = ref.softquant_matmul_ref(w, v, s, x, n, p)
+        np.testing.assert_allclose(y, yr, rtol=1e-5, atol=1e-5)
+
+    def test_non_block_aligned(self):
+        rng = np.random.default_rng(1)
+        w, v, s, x = _problem(rng, 33, 71, 97)
+        n, p = NP4
+        y = softquant.softquant_matmul(w, v, s, x, n, p)
+        yr = ref.softquant_matmul_ref(w, v, s, x, n, p)
+        np.testing.assert_allclose(y, yr, rtol=1e-5, atol=1e-5)
+
+    def test_gate_matches_ref(self):
+        rng = np.random.default_rng(2)
+        w, v, s, x = _problem(rng, 24, 48, 32)
+        n, p = NP4
+        _, g = softquant.softquant_matmul_with_gate(w, v, s, x, n, p)
+        gr = ref.softquant_gate_ref(w, v, s, n, p)
+        np.testing.assert_allclose(g, gr, rtol=1e-5, atol=1e-6)
+
+    def test_clip_saturation_zeroes_gate(self):
+        # weights far outside the grid: clip active => gate must be 0
+        rng = np.random.default_rng(3)
+        w = jnp.full((8, 8), 10.0, F32)  # floor(10/0.05)=200 >> p=7
+        v = jnp.asarray(rng.normal(0, 1, (8, 8)), F32)
+        s = jnp.full((8, 1), 0.05, F32)
+        x = jnp.asarray(rng.normal(0, 1, (8, 16)), F32)
+        n, p = NP4
+        _, g = softquant.softquant_matmul_with_gate(w, v, s, x, n, p)
+        np.testing.assert_allclose(g, np.zeros((8, 8)), atol=0)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        rows=st.integers(1, 70),
+        cols=st.integers(1, 90),
+        batch=st.integers(1, 130),
+        seed=st.integers(0, 2**31 - 1),
+        scale=st.sampled_from([1e-3, 0.05, 0.5]),
+    )
+    def test_hypothesis_shapes(self, rows, cols, batch, seed, scale):
+        rng = np.random.default_rng(seed)
+        w, v, s, x = _problem(rng, rows, cols, batch, scale)
+        n, p = NP4
+        y = softquant.softquant_matmul(w, v, s, x, n, p)
+        yr = ref.softquant_matmul_ref(w, v, s, x, n, p)
+        np.testing.assert_allclose(y, yr, rtol=2e-4, atol=2e-4)
+
+
+class TestSoftQuantVjp:
+    def test_grad_matches_oracle(self):
+        rng = np.random.default_rng(4)
+        w, v, s, x = _problem(rng, 16, 36, 48)
+        n, p = NP4
+        t = ref.softquant_matmul_ref(w, v, s, x, n, p) + 0.05
+
+        def f(vv):
+            return jnp.mean((softquant.softquant_matmul(w, vv, s, x, n, p) - t) ** 2)
+
+        def fr(vv):
+            return jnp.mean((ref.softquant_matmul_ref(w, vv, s, x, n, p) - t) ** 2)
+
+        dv, dvr = jax.grad(f)(v), jax.grad(fr)(v)
+        np.testing.assert_allclose(dv, dvr, rtol=1e-4, atol=1e-7)
+
+    @settings(max_examples=15, deadline=None)
+    @given(rows=st.integers(2, 40), cols=st.integers(2, 60),
+           batch=st.integers(2, 64), seed=st.integers(0, 2**31 - 1))
+    def test_hypothesis_grad(self, rows, cols, batch, seed):
+        rng = np.random.default_rng(seed)
+        w, v, s, x = _problem(rng, rows, cols, batch)
+        n, p = NP4
+        t = jnp.asarray(rng.normal(0, 1, (rows, batch)), F32)
+        f = lambda vv: jnp.mean((softquant.softquant_matmul(w, vv, s, x, n, p) - t) ** 2)
+        fr = lambda vv: jnp.mean((ref.softquant_matmul_ref(w, vv, s, x, n, p) - t) ** 2)
+        np.testing.assert_allclose(jax.grad(f)(v), jax.grad(fr)(v),
+                                   rtol=2e-4, atol=1e-6)
+
+    def test_finite_difference(self):
+        # independent of both implementations: FD check of the custom vjp
+        rng = np.random.default_rng(5)
+        w, v, s, x = _problem(rng, 6, 8, 12)
+        n, p = NP4
+        t = jnp.zeros((6, 12), F32)
+        f = lambda vv: jnp.mean((softquant.softquant_matmul(w, vv, s, x, n, p) - t) ** 2)
+        g = np.asarray(jax.grad(f)(v))
+        eps = 1e-3
+        for (i, j) in [(0, 0), (3, 5), (5, 7)]:
+            e = np.zeros_like(v)
+            e[i, j] = eps
+            fd = (float(f(v + e)) - float(f(v - e))) / (2 * eps)
+            assert abs(fd - g[i, j]) < 5e-3 * max(1.0, abs(fd)), (i, j, fd, g[i, j])
+
+
+class TestQLinear:
+    def test_matches_ref(self):
+        rng = np.random.default_rng(6)
+        w, _, s, x = _problem(rng, 40, 54, 100)
+        r = jnp.asarray(rng.integers(0, 2, (40, 54)), F32)
+        n, p = NP4
+        y = qlinear.qlinear_matmul(w, r, s, x, n, p)
+        yr = ref.qlinear_ref(w, r, s, x, n, p)
+        np.testing.assert_allclose(y, yr, rtol=1e-5, atol=1e-5)
+
+    def test_nearest_mask_is_round_to_nearest(self):
+        rng = np.random.default_rng(7)
+        w, _, s, x = _problem(rng, 16, 24, 32)
+        n, p = NP4
+        r = (w / s - jnp.floor(w / s) >= 0.5).astype(F32)
+        y = qlinear.qlinear_matmul(w, r, s, x, n, p)
+        wq = s * jnp.clip(jnp.round(w / s), n, p)
+        np.testing.assert_allclose(y, wq @ x, rtol=1e-5, atol=1e-5)
+
+    @settings(max_examples=20, deadline=None)
+    @given(rows=st.integers(1, 64), cols=st.integers(1, 80),
+           batch=st.integers(1, 140), seed=st.integers(0, 2**31 - 1),
+           bits=st.sampled_from([2, 4, 8]))
+    def test_hypothesis_bitwidths(self, rows, cols, batch, seed, bits):
+        rng = np.random.default_rng(seed)
+        w, _, s, x = _problem(rng, rows, cols, batch)
+        r = jnp.asarray(rng.integers(0, 2, (rows, cols)), F32)
+        n = jnp.float32(-(2 ** (bits - 1)))
+        p = jnp.float32(2 ** (bits - 1) - 1)
+        y = qlinear.qlinear_matmul(w, r, s, x, n, p)
+        yr = ref.qlinear_ref(w, r, s, x, n, p)
+        np.testing.assert_allclose(y, yr, rtol=2e-4, atol=2e-4)

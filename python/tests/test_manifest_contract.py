@@ -1,0 +1,70 @@
+"""Contract tests over the built artifacts (skipped until `make artifacts`):
+the manifest the rust runtime consumes must be complete and well-formed."""
+
+import json
+import os
+
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+MANIFEST = os.path.join(ART, "manifest.json")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(MANIFEST), reason="artifacts not built"
+)
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    with open(MANIFEST) as f:
+        return json.load(f)
+
+
+def test_models_and_files_present(manifest):
+    assert set(manifest["models"]) == {
+        "micro18", "micro50", "microinc", "micromobile", "segnet"}
+    for name, entry in manifest["models"].items():
+        assert os.path.exists(os.path.join(ART, entry["weights"])), name
+        assert entry["task"] in ("cls", "seg")
+        assert entry["ir"][0]["op"] == "input"
+
+
+def test_datasets_present(manifest):
+    for name, entry in manifest["datasets"].items():
+        assert os.path.exists(os.path.join(ART, entry["file"])), name
+        assert entry["n"] > 0
+
+
+def test_step_buckets_cover_all_layer_geometries(manifest):
+    from compile.aot import quantizable_layers
+    buckets = {
+        (e["rows"], e["cols"], e["relu"])
+        for e in manifest["executables"]
+        if e["kind"] == "adaround_step"
+    }
+    for name, entry in manifest["models"].items():
+        for nd, rows, cols, relu in quantizable_layers(entry["ir"]):
+            assert (rows, cols, relu) in buckets, (name, nd["id"], rows, cols, relu)
+
+
+def test_hlo_files_exist_and_parse_shape(manifest):
+    for e in manifest["executables"]:
+        path = os.path.join(ART, e["file"])
+        assert os.path.exists(path), e["file"]
+        head = open(path).read(4096)
+        assert "ENTRY" in open(path).read(), e["file"]
+        del head
+
+
+def test_weights_roundtrip_and_match_ir(manifest):
+    from compile import qtz
+    entry = manifest["models"]["micro18"]
+    weights = qtz.read_qtz(os.path.join(ART, entry["weights"]))
+    for nd in entry["ir"]:
+        if nd["op"] == "conv":
+            w = weights[nd["id"] + ".w"]
+            assert w.shape == (nd["cout"], nd["cin"] // nd["groups"],
+                               nd["k"], nd["k"])
+            assert weights[nd["id"] + ".b"].shape == (nd["cout"],)
+        elif nd["op"] == "dense":
+            assert weights[nd["id"] + ".w"].shape == (nd["cout"], nd["cin"])

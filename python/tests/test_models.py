@@ -1,0 +1,83 @@
+"""Model zoo: graph construction, shapes, BN-fold exactness."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import models
+from compile.aot import quantizable_layers, spatial_after
+
+
+@pytest.mark.parametrize("name", list(models.BUILDERS))
+def test_graph_builds_and_runs(name):
+    nodes = models.BUILDERS[name]()
+    params = {k: jnp.asarray(v) for k, v in models.init_params(nodes, 0).items()}
+    state = {k: jnp.asarray(v) for k, v in models.init_bn_state(nodes).items()}
+    x = jnp.zeros((2, 3, 32, 32), jnp.float32)
+    out, _ = models.apply_graph(nodes, params, state, x, train=False)
+    if models.TASKS[name] == "cls":
+        assert out.shape == (2, 10)
+    else:
+        assert out.shape == (2, 4, 32, 32)
+
+
+@pytest.mark.parametrize("name", list(models.BUILDERS))
+def test_bn_fold_exact(name):
+    """Folded conv(+bias) must equal conv+BN(running stats) in eval mode."""
+    rng = np.random.default_rng(3)
+    nodes = models.BUILDERS[name]()
+    params = models.init_params(nodes, 1)
+    state = models.init_bn_state(nodes)
+    # randomize BN state so folding is non-trivial
+    for k in state:
+        if k.endswith(".mean"):
+            state[k] = rng.normal(0, 0.5, state[k].shape).astype(np.float32)
+        else:
+            state[k] = (np.abs(rng.normal(1, 0.3, state[k].shape)) + 0.1).astype(np.float32)
+    for k in params:
+        if ".bn." in k:
+            params[k] = rng.normal(1.0 if k.endswith(".g") else 0.0, 0.2,
+                                   params[k].shape).astype(np.float32)
+    jp = {k: jnp.asarray(v) for k, v in params.items()}
+    js = {k: jnp.asarray(v) for k, v in state.items()}
+    x = jnp.asarray(rng.normal(0, 1, (2, 3, 32, 32)), jnp.float32)
+    y_ref, _ = models.apply_graph(nodes, jp, js, x, train=False)
+
+    folded_ir, weights = models.fold_bn(nodes, params, state)
+    jw = {k: jnp.asarray(v) for k, v in weights.items()}
+    y_fold, _ = models.apply_graph(folded_ir, jw, {}, x, train=False)
+    np.testing.assert_allclose(y_ref, y_fold, rtol=1e-4, atol=1e-4)
+
+
+def test_quantizable_layers_micro18():
+    nodes = models.build_micro18()
+    qs = quantizable_layers(nodes)
+    # stem + 6 blocks x 2 convs + 2 downsample skips + 1 dense
+    assert len(qs) == 16
+    nd, rows, cols, relu = qs[0]
+    assert (rows, cols) == (8, 27) and relu  # stem: 3*3*3=27
+    assert qs[-1][0]["op"] == "dense"
+
+
+def test_depthwise_cols():
+    nodes = models.build_micromobile()
+    dws = [(nd, r, c) for nd, r, c, _ in quantizable_layers(nodes)
+           if nd["op"] == "conv" and nd["groups"] > 1]
+    assert dws, "micromobile must contain depthwise convs"
+    for nd, rows, cols in dws:
+        assert cols == 9  # 1 input channel per group * 3*3
+
+
+def test_spatial_after():
+    nodes = models.build_micro18()
+    qs = quantizable_layers(nodes)
+    assert spatial_after(nodes, qs[0][0]["id"]) == 32      # stem keeps 32
+    assert spatial_after(nodes, qs[-2][0]["id"]) in (8, 16)  # deep layer
+
+
+def test_param_counts_reasonable():
+    for name, build in models.BUILDERS.items():
+        nodes = build()
+        params = models.init_params(nodes, 0)
+        n = sum(int(np.prod(v.shape)) for v in params.values())
+        assert 1_000 < n < 200_000, (name, n)

@@ -1,0 +1,83 @@
+"""Interchange format round-trip + dataset generator properties."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import datagen, qtz
+
+
+class TestQtz:
+    def test_roundtrip(self, tmp_path):
+        rng = np.random.default_rng(0)
+        tensors = {
+            "w": rng.normal(0, 1, (4, 3, 3, 3)).astype(np.float32),
+            "labels": rng.integers(0, 10, (16,)).astype(np.int32),
+            "mask": rng.integers(0, 2, (8, 8)).astype(np.uint8),
+            "scalarish": np.float32([3.5]),
+        }
+        path = str(tmp_path / "t.qtz")
+        qtz.write_qtz(path, tensors)
+        back = qtz.read_qtz(path)
+        assert set(back) == set(tensors)
+        for k in tensors:
+            assert back[k].dtype == tensors[k].dtype
+            np.testing.assert_array_equal(back[k], tensors[k])
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), n=st.integers(1, 5))
+    def test_roundtrip_hypothesis(self, tmp_path_factory, seed, n):
+        rng = np.random.default_rng(seed)
+        tensors = {}
+        for i in range(n):
+            ndim = int(rng.integers(1, 4))
+            shape = tuple(int(d) for d in rng.integers(1, 6, ndim))
+            tensors[f"t{i}"] = rng.normal(0, 1, shape).astype(np.float32)
+        path = str(tmp_path_factory.mktemp("qtz") / "t.qtz")
+        qtz.write_qtz(path, tensors)
+        back = qtz.read_qtz(path)
+        for k in tensors:
+            np.testing.assert_array_equal(back[k], tensors[k])
+
+    def test_bad_magic_rejected(self, tmp_path):
+        p = tmp_path / "bad.qtz"
+        p.write_bytes(b"NOPE" + b"\x00" * 16)
+        with pytest.raises(ValueError):
+            qtz.read_qtz(str(p))
+
+
+class TestDatagen:
+    def test_deterministic(self):
+        x1, y1 = datagen.gen_gabor(8, seed=42)
+        x2, y2 = datagen.gen_gabor(8, seed=42)
+        np.testing.assert_array_equal(x1, x2)
+        np.testing.assert_array_equal(y1, y2)
+
+    def test_shapes_and_dtypes(self):
+        for name, gen in datagen.GENERATORS.items():
+            x, y = gen(6, seed=0)
+            assert x.shape == (6, 3, 32, 32) and x.dtype == np.float32
+            if name == "shapes":
+                assert y.shape == (6, 32, 32) and y.dtype == np.int32
+                assert y.max() < datagen.SEG_CLASSES
+            else:
+                assert y.shape == (6,) and y.dtype == np.int32
+                assert y.max() < datagen.NUM_CLASSES
+
+    def test_label_coverage(self):
+        _, y = datagen.gen_gabor(400, seed=1)
+        assert len(np.unique(y)) == datagen.NUM_CLASSES
+
+    def test_classes_distinguishable(self):
+        # mean intra-class pattern correlation should beat inter-class
+        x, y = datagen.gen_gabor(200, seed=2, noise=0.1)
+        flat = x.reshape(len(x), -1)
+        flat = flat / np.linalg.norm(flat, axis=1, keepdims=True)
+        sims = flat @ flat.T
+        same = (y[:, None] == y[None, :]) & ~np.eye(len(y), dtype=bool)
+        diff = y[:, None] != y[None, :]
+        assert np.abs(sims[same]).mean() > np.abs(sims[diff]).mean() + 0.1
+
+    def test_seg_has_foreground(self):
+        _, m = datagen.gen_shapes(20, seed=3)
+        assert (m > 0).mean() > 0.02

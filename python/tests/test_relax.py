@@ -1,0 +1,83 @@
+"""Properties of the AdaRound relaxation primitives (eqs. 22-24)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import relax
+
+
+class TestRectSigmoid:
+    @settings(max_examples=50, deadline=None)
+    @given(v=st.floats(-50, 50))
+    def test_range(self, v):
+        h = float(relax.rect_sigmoid(jnp.float32(v)))
+        assert 0.0 <= h <= 1.0
+
+    def test_saturation(self):
+        assert float(relax.rect_sigmoid(jnp.float32(10.0))) == 1.0
+        assert float(relax.rect_sigmoid(jnp.float32(-10.0))) == 0.0
+
+    def test_monotone(self):
+        vs = jnp.linspace(-6, 6, 201)
+        hs = np.asarray(relax.rect_sigmoid(vs))
+        assert np.all(np.diff(hs) >= -1e-7)
+
+    def test_grad_matches_autodiff(self):
+        vs = jnp.linspace(-5, 5, 101)
+        g_manual = np.asarray(relax.rect_sigmoid_grad(vs))
+        g_auto = np.asarray(jax.vmap(jax.grad(relax.rect_sigmoid))(vs))
+        np.testing.assert_allclose(g_manual, g_auto, atol=1e-6)
+
+    def test_nonvanishing_gradient_near_extremes(self):
+        # the paper's motivation for the *rectified* sigmoid: h' > 0 while
+        # h is strictly inside (0,1), even close to the boundary
+        v = jnp.float32(np.log((0.999 / (relax.ZETA - relax.GAMMA) - relax.GAMMA /
+                                (relax.ZETA - relax.GAMMA)) /
+                               (1 - (0.999 - relax.GAMMA) / (relax.ZETA - relax.GAMMA))))
+        h = float(relax.rect_sigmoid(v))
+        assert 0.0 < h < 1.0
+        assert float(relax.rect_sigmoid_grad(v)) > 1e-3
+
+
+class TestFReg:
+    def test_zero_at_binary(self):
+        v = jnp.asarray([-20.0, 20.0, -15.0, 15.0])
+        assert float(relax.f_reg(v, 4.0)) < 1e-6
+
+    def test_max_at_half(self):
+        # h = 0.5 at v = logit((0.5-gamma)/(zeta-gamma))
+        q = (0.5 - relax.GAMMA) / (relax.ZETA - relax.GAMMA)
+        v = jnp.float32(np.log(q / (1 - q)))
+        assert abs(float(relax.f_reg(v, 2.0)) - 1.0) < 1e-5
+
+    @settings(max_examples=30, deadline=None)
+    @given(v=st.floats(-8, 8), beta=st.floats(2, 20))
+    def test_bounds(self, v, beta):
+        r = float(relax.f_reg(jnp.float32(v), jnp.float32(beta)))
+        assert -1e-6 <= r <= 1.0 + 1e-6
+
+    def test_annealing_effect(self):
+        # higher beta -> smaller penalty for h away from 0.5 (Fig. 2 shape)
+        v = jnp.float32(1.5)  # h somewhere between 0.5 and 1
+        h = float(relax.rect_sigmoid(v))
+        assert 0.5 < h < 1.0
+        r_hi = float(relax.f_reg(v, 16.0))
+        r_lo = float(relax.f_reg(v, 2.0))
+        assert r_hi > r_lo
+
+
+class TestInitV:
+    @settings(max_examples=30, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), scale=st.sampled_from([0.01, 0.05, 0.3]))
+    def test_inverse_property(self, seed, scale):
+        # h(init_v(W, s)) == frac(W/s): soft quantization starts at FP32
+        rng = np.random.default_rng(seed)
+        w = jnp.asarray(rng.normal(0, 0.3, (8, 8)), jnp.float32)
+        s = jnp.full((8, 1), scale, jnp.float32)
+        v = relax.init_v_from_weights(w, s)
+        h = relax.rect_sigmoid(v)
+        frac = w / s - jnp.floor(w / s)
+        np.testing.assert_allclose(h, jnp.clip(frac, 1e-4, 1 - 1e-4),
+                                   rtol=2e-3, atol=2e-3)

@@ -1,0 +1,109 @@
+"""The L2 AdaRound step graph: pallas path vs jnp-oracle path, Adam math,
+convergence behaviour, and HLO lowering."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from compile import model
+from compile.aot import to_hlo_text
+from compile.kernels import relax
+
+F32 = jnp.float32
+
+
+def _layer_problem(seed, r=16, c=27, b=64):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(0, 0.3, (r, c)), F32)
+    s = jnp.full((r, 1), 0.05, F32)
+    bias = jnp.asarray(rng.normal(0, 0.1, (r, 1)), F32)
+    x = jnp.asarray(rng.normal(0, 1, (c, b)), F32)
+    t = w @ x + bias
+    v = relax.init_v_from_weights(w, s)
+    return w, s, bias, x, t, v
+
+
+def _consts():
+    return (jnp.float32(0.01), jnp.float32(0.01),
+            jnp.float32(-8.0), jnp.float32(7.0))
+
+
+class TestStepEquivalence:
+    def test_pallas_equals_jnp_path(self):
+        for relu in (False, True):
+            w, s, bias, x, t, v = _layer_problem(0)
+            lam, lr, n, p = _consts()
+            sp = model.make_adaround_step(relu=relu, use_pallas=True)
+            sj = model.make_adaround_step(relu=relu, use_pallas=False)
+            m = jnp.zeros_like(v); v2 = jnp.zeros_like(v)
+            args = (v, m, v2, jnp.float32(1.0), x, t, w, s, bias,
+                    jnp.float32(8.0), lam, lr, n, p)
+            out_p, out_j = sp(*args), sj(*args)
+            for a, b in zip(out_p, out_j):
+                np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-6)
+
+    def test_adam_bias_correction(self):
+        # one step from zero moments: update = -lr * g/(|g|+eps) elementwise
+        w, s, bias, x, t, v = _layer_problem(1)
+        lam, lr, n, p = _consts()
+        step = model.make_adaround_step(relu=False)
+        m = jnp.zeros_like(v); v2 = jnp.zeros_like(v)
+        v1, m1, v21, loss, mse = step(v, m, v2, jnp.float32(1.0), x, t, w, s,
+                                      bias, jnp.float32(8.0), lam, lr, n, p)
+        g = m1 / (1.0 - model.ADAM_B1)  # recover grad from first moment
+        expect = v - lr * g / (jnp.sqrt(g * g) + model.ADAM_EPS)
+        np.testing.assert_allclose(v1, expect, rtol=1e-4, atol=1e-6)
+
+
+class TestConvergence:
+    def test_loss_decreases_and_h_binarizes(self):
+        w, s, bias, x, t, v = _layer_problem(2, r=12, c=20, b=96)
+        lam, lr, n, p = jnp.float32(0.02), jnp.float32(0.02), jnp.float32(-8), jnp.float32(7)
+        step = jax.jit(model.make_adaround_step(relu=True))
+        m = jnp.zeros_like(v); v2 = jnp.zeros_like(v)
+        first_mse = None
+        iters = 400
+        for i in range(1, iters + 1):
+            frac = i / iters
+            beta = jnp.float32(20.0 - (20.0 - 2.0) * frac)
+            v, m, v2, loss, mse = step(v, m, v2, jnp.float32(i), x, t, w, s,
+                                       bias, beta, lam, lr, n, p)
+            if first_mse is None:
+                first_mse = float(mse)
+        assert float(mse) <= first_mse * 1.05
+        h = np.asarray(relax.rect_sigmoid(v))
+        frac_binary = np.mean((h < 0.05) | (h > 0.95))
+        assert frac_binary > 0.8, f"h failed to binarize: {frac_binary}"
+
+    def test_adaround_beats_nearest_on_mse(self):
+        # after optimization, rounding by h>=0.5 should reconstruct WX at
+        # least as well as round-to-nearest (the paper's core claim, layer-wise)
+        w, s, bias, x, t, v = _layer_problem(3, r=12, c=20, b=96)
+        n, p = jnp.float32(-8), jnp.float32(7)
+        lam, lr = jnp.float32(0.01), jnp.float32(0.02)
+        step = jax.jit(model.make_adaround_step(relu=False))
+        m = jnp.zeros_like(v); v2 = jnp.zeros_like(v)
+        for i in range(1, 501):
+            beta = jnp.float32(max(2.0, 20.0 - 18.0 * i / 500))
+            v, m, v2, loss, mse = step(v, m, v2, jnp.float32(i), x, t, w, s,
+                                       bias, beta, lam, lr, n, p)
+        rounding = (np.asarray(relax.rect_sigmoid(v)) >= 0.5).astype(np.float32)
+        wq_ada = s * jnp.clip(jnp.floor(w / s) + rounding, n, p)
+        wq_near = s * jnp.clip(jnp.round(w / s), n, p)
+        mse_ada = float(jnp.mean((wq_ada @ x + bias - t) ** 2))
+        mse_near = float(jnp.mean((wq_near @ x + bias - t) ** 2))
+        assert mse_ada <= mse_near * 1.001, (mse_ada, mse_near)
+
+
+class TestLowering:
+    def test_step_lowers_to_hlo_text(self):
+        low = jax.jit(model.make_adaround_step(relu=True)).lower(
+            *model.step_example_args(8, 12, 32))
+        txt = to_hlo_text(low)
+        assert "ENTRY" in txt and "f32[8,12]" in txt
+
+    def test_qlinear_lowers_to_hlo_text(self):
+        low = jax.jit(model.make_qlinear_fwd()).lower(
+            *model.qlinear_example_args(8, 12, 64))
+        txt = to_hlo_text(low)
+        assert "ENTRY" in txt and "f32[8,64]" in txt

@@ -1,0 +1,62 @@
+//! Adam optimizer state (matches the constants in python/compile/model.py
+//! so native and PJRT drivers take identical trajectories).
+
+pub const B1: f32 = 0.9;
+pub const B2: f32 = 0.999;
+pub const EPS: f32 = 1e-8;
+
+pub struct Adam {
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub t: usize,
+}
+
+impl Adam {
+    pub fn new(n: usize) -> Adam {
+        Adam { m: vec![0.0; n], v: vec![0.0; n], t: 0 }
+    }
+
+    /// One update step: params -= lr * mhat / (sqrt(vhat) + eps).
+    pub fn step(&mut self, params: &mut [f32], grads: &[f32], lr: f32) {
+        assert_eq!(params.len(), grads.len());
+        assert_eq!(params.len(), self.m.len());
+        self.t += 1;
+        let bc1 = 1.0 - B1.powi(self.t as i32);
+        let bc2 = 1.0 - B2.powi(self.t as i32);
+        for i in 0..params.len() {
+            let g = grads[i];
+            self.m[i] = B1 * self.m[i] + (1.0 - B1) * g;
+            self.v[i] = B2 * self.v[i] + (1.0 - B2) * g * g;
+            let mhat = self.m[i] / bc1;
+            let vhat = self.v[i] / bc2;
+            params[i] -= lr * mhat / (vhat.sqrt() + EPS);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_step_is_signed_lr() {
+        // with zero moments, |update| == lr for any nonzero grad
+        let mut adam = Adam::new(2);
+        let mut p = vec![1.0, -1.0];
+        adam.step(&mut p, &[0.5, -2.0], 0.1);
+        assert!((p[0] - 0.9).abs() < 1e-5);
+        assert!((p[1] + 0.9).abs() < 1e-5);
+    }
+
+    #[test]
+    fn converges_on_quadratic() {
+        // minimize (x-3)^2
+        let mut adam = Adam::new(1);
+        let mut p = vec![0.0f32];
+        for _ in 0..2000 {
+            let g = 2.0 * (p[0] - 3.0);
+            adam.step(&mut p, &[g], 0.05);
+        }
+        assert!((p[0] - 3.0).abs() < 1e-2, "{}", p[0]);
+    }
+}

@@ -1,0 +1,272 @@
+//! Classical Hopfield-style baseline (paper Table 3, row 1):
+//! h(V) = sigmoid(V / T) with temperature annealing as the *implicit*
+//! regularizer, instead of the rectified sigmoid + explicit f_reg.
+
+use anyhow::Result;
+
+use crate::tensor::{matmul, Tensor};
+use crate::util::Rng;
+
+use super::native::gather_cols;
+use super::problem::LayerProblem;
+use super::schedule::AdaRoundConfig;
+use super::{Adam, LayerResult};
+
+/// Temperature schedule: exponential decay T_start -> T_end.
+#[derive(Clone, Copy, Debug)]
+pub struct TempSchedule {
+    pub start: f32,
+    pub end: f32,
+}
+
+impl Default for TempSchedule {
+    fn default() -> Self {
+        // found by the hyper-parameter search mirroring the paper's
+        // "extensive search for the annealing schedule of T"
+        TempSchedule { start: 1.0, end: 0.05 }
+    }
+}
+
+impl TempSchedule {
+    pub fn at(&self, it: usize, total: usize) -> f32 {
+        let f = it as f32 / total.max(1) as f32;
+        self.start * (self.end / self.start).powf(f)
+    }
+}
+
+#[inline]
+fn sigmoid(v: f32) -> f32 {
+    1.0 / (1.0 + (-v).exp())
+}
+
+/// Plain-sigmoid h with temperature; V initialized at logit(frac).
+pub fn optimize_hopfield(
+    prob: &LayerProblem,
+    x: &Tensor,
+    t: &Tensor,
+    cfg: &AdaRoundConfig,
+    temp: TempSchedule,
+    rng: &mut Rng,
+) -> Result<LayerResult> {
+    let (rows, cols) = (prob.rows(), prob.cols());
+    let ncols = x.cols();
+    let mse_before = prob.recon_mse(&prob.hard_weights(&prob.nearest_mask()), x, t);
+
+    // init h = frac(w/s) via plain logit
+    let mut v = Tensor::zeros(&prob.w.shape);
+    for r in 0..rows {
+        let s = prob.s(r);
+        for c in 0..cols {
+            let i = r * cols + c;
+            let frac = (prob.w.data[i] / s - (prob.w.data[i] / s).floor())
+                .clamp(1e-4, 1.0 - 1e-4);
+            v.data[i] = (frac / (1.0 - frac)).ln();
+        }
+    }
+    let mut adam = Adam::new(v.numel());
+
+    for it in 0..cfg.iters {
+        let temp_now = temp.at(it, cfg.iters);
+        let idx = rng.sample_indices(ncols, cfg.batch.min(ncols));
+        let xb = gather_cols(x, &idx);
+        let tb = gather_cols(t, &idx);
+        let batch = xb.cols();
+
+        // soft weights with h = sigmoid(V/T)
+        let mut wq = Tensor::zeros(&prob.w.shape);
+        let mut gate = Tensor::zeros(&prob.w.shape);
+        for r in 0..rows {
+            let s = prob.s(r);
+            for c in 0..cols {
+                let i = r * cols + c;
+                let h = sigmoid(v.data[i] / temp_now);
+                let z = (prob.w.data[i] / s).floor() + h;
+                wq.data[i] = s * z.clamp(prob.n, prob.p);
+                let inside = z >= prob.n && z <= prob.p;
+                gate.data[i] =
+                    if inside { s * h * (1.0 - h) / temp_now } else { 0.0 };
+            }
+        }
+        let mut y = matmul(&wq, &xb);
+        for r in 0..rows {
+            let b = prob.bias.get(r).copied().unwrap_or(0.0);
+            for vv in &mut y.data[r * batch..(r + 1) * batch] {
+                *vv += b;
+            }
+        }
+        let numel = (rows * batch) as f32;
+        let mut dy = Tensor::zeros(&[rows, batch]);
+        for i in 0..rows * batch {
+            let (yi, ti) = (y.data[i], tb.data[i]);
+            let (ya, ta) = if prob.relu { (yi.max(0.0), ti.max(0.0)) } else { (yi, ti) };
+            let pass = if prob.relu && yi <= 0.0 { 0.0 } else { 1.0 };
+            dy.data[i] = 2.0 * (ya - ta) * pass / numel;
+        }
+        let dwq = crate::tensor::matmul::matmul_bt(&dy, &xb);
+        let grad: Vec<f32> = dwq
+            .data
+            .iter()
+            .zip(&gate.data)
+            .map(|(d, g)| d * g)
+            .collect();
+        adam.step(&mut v.data, &grad, cfg.lr);
+    }
+
+    // final temperature defines the hard rounding
+    let t_end = temp.at(cfg.iters, cfg.iters);
+    let mask = v.map(|x| (sigmoid(x / t_end) >= 0.5) as u8 as f32);
+    let mse_after = prob.recon_mse(&prob.hard_weights(&mask), x, t);
+    let near = prob.nearest_mask();
+    let flipped = mask
+        .data
+        .iter()
+        .zip(&near.data)
+        .filter(|(a, b)| (*a - *b).abs() > 0.5)
+        .count();
+    Ok(LayerResult {
+        flipped_frac: flipped as f64 / mask.numel() as f64,
+        mask,
+        v,
+        mse_before,
+        mse_after,
+        iters: cfg.iters,
+    })
+}
+
+/// Plain sigmoid h + explicit f_reg (Table 3, middle row): isolates the
+/// effect of the *rectified* sigmoid by keeping everything else identical
+/// to AdaRound.
+pub fn optimize_sigmoid_freg(
+    prob: &LayerProblem,
+    x: &Tensor,
+    t: &Tensor,
+    cfg: &AdaRoundConfig,
+    rng: &mut Rng,
+) -> Result<LayerResult> {
+    let (rows, cols) = (prob.rows(), prob.cols());
+    let ncols = x.cols();
+    let mse_before = prob.recon_mse(&prob.hard_weights(&prob.nearest_mask()), x, t);
+
+    let mut v = Tensor::zeros(&prob.w.shape);
+    for r in 0..rows {
+        let s = prob.s(r);
+        for c in 0..cols {
+            let i = r * cols + c;
+            let frac = (prob.w.data[i] / s - (prob.w.data[i] / s).floor())
+                .clamp(1e-4, 1.0 - 1e-4);
+            v.data[i] = (frac / (1.0 - frac)).ln();
+        }
+    }
+    let mut adam = Adam::new(v.numel());
+
+    for it in 0..cfg.iters {
+        let (beta, reg_on) = cfg.beta.at(it, cfg.iters);
+        let lam = if reg_on { cfg.lambda } else { 0.0 };
+        let idx = rng.sample_indices(ncols, cfg.batch.min(ncols));
+        let xb = gather_cols(x, &idx);
+        let tb = gather_cols(t, &idx);
+        let batch = xb.cols();
+
+        let mut wq = Tensor::zeros(&prob.w.shape);
+        let mut gate = Tensor::zeros(&prob.w.shape);
+        let mut hval = Tensor::zeros(&prob.w.shape);
+        for r in 0..rows {
+            let s = prob.s(r);
+            for c in 0..cols {
+                let i = r * cols + c;
+                let h = sigmoid(v.data[i]);
+                hval.data[i] = h;
+                let z = (prob.w.data[i] / s).floor() + h;
+                wq.data[i] = s * z.clamp(prob.n, prob.p);
+                let inside = z >= prob.n && z <= prob.p;
+                gate.data[i] = if inside { s * h * (1.0 - h) } else { 0.0 };
+            }
+        }
+        let mut y = matmul(&wq, &xb);
+        for r in 0..rows {
+            let b = prob.bias.get(r).copied().unwrap_or(0.0);
+            for vv in &mut y.data[r * batch..(r + 1) * batch] {
+                *vv += b;
+            }
+        }
+        let numel = (rows * batch) as f32;
+        let mut dy = Tensor::zeros(&[rows, batch]);
+        for i in 0..rows * batch {
+            let (yi, ti) = (y.data[i], tb.data[i]);
+            let (ya, ta) = if prob.relu { (yi.max(0.0), ti.max(0.0)) } else { (yi, ti) };
+            let pass = if prob.relu && yi <= 0.0 { 0.0 } else { 1.0 };
+            dy.data[i] = 2.0 * (ya - ta) * pass / numel;
+        }
+        let dwq = crate::tensor::matmul::matmul_bt(&dy, &xb);
+        let grad: Vec<f32> = (0..v.numel())
+            .map(|i| {
+                let mut g = dwq.data[i] * gate.data[i];
+                if lam > 0.0 {
+                    // d/dV [1 - |2h-1|^beta] with plain-sigmoid h
+                    let h = hval.data[i];
+                    let z = 2.0 * h - 1.0;
+                    if z != 0.0 {
+                        g += lam
+                            * (-beta * z.abs().powf(beta - 1.0) * 2.0 * z.signum())
+                            * h
+                            * (1.0 - h);
+                    }
+                }
+                g
+            })
+            .collect();
+        adam.step(&mut v.data, &grad, cfg.lr);
+    }
+
+    let mask = v.map(|x| (sigmoid(x) >= 0.5) as u8 as f32);
+    let mse_after = prob.recon_mse(&prob.hard_weights(&mask), x, t);
+    let near = prob.nearest_mask();
+    let flipped = mask
+        .data
+        .iter()
+        .zip(&near.data)
+        .filter(|(a, b)| (*a - *b).abs() > 0.5)
+        .count();
+    Ok(LayerResult {
+        flipped_frac: flipped as f64 / mask.numel() as f64,
+        mask,
+        v,
+        mse_before,
+        mse_after,
+        iters: cfg.iters,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::problem::tests::random_problem;
+    use super::*;
+
+    #[test]
+    fn temperature_decays() {
+        let t = TempSchedule::default();
+        assert!(t.at(0, 100) > t.at(50, 100));
+        assert!(t.at(50, 100) > t.at(100, 100) * 0.999);
+        assert!((t.at(100, 100) - t.end).abs() < 1e-5);
+    }
+
+    #[test]
+    fn hopfield_not_worse_than_nearest() {
+        let prob = random_problem(41, 6, 18, false);
+        let mut rng = Rng::new(42);
+        let x = Tensor::from_vec(
+            &[18, 192],
+            (0..18 * 192).map(|_| rng.normal_f32(0.0, 1.0)).collect(),
+        );
+        let mut t = matmul(&prob.w, &x);
+        for r in 0..6 {
+            for v in &mut t.data[r * 192..(r + 1) * 192] {
+                *v += prob.bias[r];
+            }
+        }
+        let cfg = AdaRoundConfig { iters: 500, batch: 96, ..Default::default() };
+        let res =
+            optimize_hopfield(&prob, &x, &t, &cfg, TempSchedule::default(), &mut rng).unwrap();
+        assert!(res.mse_after <= res.mse_before * 1.05);
+    }
+}

@@ -1,0 +1,57 @@
+//! AdaRound: the continuous-relaxation rounding optimizer (paper §3.3).
+//!
+//! Two interchangeable drivers run the same math:
+//!
+//! * [`NativeOptimizer`] — pure-rust analytic gradient + Adam (no PJRT),
+//!   used as a verification oracle and a dependency-free fallback.
+//! * [`PjrtOptimizer`] — executes the fused AOT HLO step artifact
+//!   (`python/compile/model.py`) through the PJRT runtime; this is the
+//!   architecture's request-path driver (L1 Pallas kernels inside).
+//!
+//! Plus the paper's ablation baselines: [`ste`] (straight-through
+//! estimator, Table 5) and [`hopfield`] (sigmoid + temperature annealing,
+//! Table 3).
+
+pub mod adam;
+pub mod hopfield;
+pub mod native;
+pub mod pjrt;
+pub mod problem;
+pub mod relax;
+pub mod schedule;
+pub mod ste;
+
+pub use adam::Adam;
+pub use native::NativeOptimizer;
+pub use pjrt::PjrtOptimizer;
+pub use problem::LayerProblem;
+pub use schedule::{AdaRoundConfig, BetaSchedule};
+
+use crate::tensor::Tensor;
+
+/// Result of optimizing one layer (one group of a grouped conv).
+pub struct LayerResult {
+    /// converged continuous logits V
+    pub v: Tensor,
+    /// binary rounding mask h(V) >= 0.5
+    pub mask: Tensor,
+    /// reconstruction MSE before optimization (nearest rounding)
+    pub mse_before: f64,
+    /// reconstruction MSE after (AdaRound mask)
+    pub mse_after: f64,
+    /// fraction of weights whose rounding differs from nearest
+    pub flipped_frac: f64,
+    pub iters: usize,
+}
+
+/// Shared driver interface so the pipeline can swap native/PJRT.
+pub trait RoundingOptimizer {
+    fn optimize(
+        &mut self,
+        prob: &LayerProblem,
+        x: &Tensor,
+        t: &Tensor,
+        cfg: &AdaRoundConfig,
+        rng: &mut crate::util::Rng,
+    ) -> anyhow::Result<LayerResult>;
+}

@@ -1,0 +1,142 @@
+//! Pure-rust AdaRound driver: analytic gradient + Adam, minibatched over
+//! the calibration columns. Mathematically identical to the PJRT/HLO step
+//! (verified against it in `rust/tests/pjrt_integration.rs`).
+
+use anyhow::Result;
+
+use crate::tensor::Tensor;
+use crate::util::Rng;
+
+use super::problem::LayerProblem;
+use super::schedule::AdaRoundConfig;
+use super::{Adam, LayerResult, RoundingOptimizer};
+
+#[derive(Default)]
+pub struct NativeOptimizer;
+
+/// Gather a column subset of X [cols, N] -> [cols, k].
+pub fn gather_cols(x: &Tensor, idx: &[usize]) -> Tensor {
+    let (rows, n) = (x.rows(), x.cols());
+    let mut out = Tensor::zeros(&[rows, idx.len()]);
+    for r in 0..rows {
+        let src = &x.data[r * n..(r + 1) * n];
+        let dst = &mut out.data[r * idx.len()..(r + 1) * idx.len()];
+        for (j, &i) in idx.iter().enumerate() {
+            dst[j] = src[i];
+        }
+    }
+    out
+}
+
+impl RoundingOptimizer for NativeOptimizer {
+    fn optimize(
+        &mut self,
+        prob: &LayerProblem,
+        x: &Tensor,
+        t: &Tensor,
+        cfg: &AdaRoundConfig,
+        rng: &mut Rng,
+    ) -> Result<LayerResult> {
+        let mut v = prob.init_v();
+        let mut adam = Adam::new(v.numel());
+        let ncols = x.cols();
+        let mse_before = prob.recon_mse(&prob.hard_weights(&prob.nearest_mask()), x, t);
+
+        for it in 0..cfg.iters {
+            let (beta, reg_on) = cfg.beta.at(it, cfg.iters);
+            let lam = if reg_on { cfg.lambda } else { 0.0 };
+            let idx = rng.sample_indices(ncols, cfg.batch.min(ncols));
+            let xb = gather_cols(x, &idx);
+            let tb = gather_cols(t, &idx);
+            let (_, _, grad) = prob.loss_grad(&v, &xb, &tb, beta, lam);
+            adam.step(&mut v.data, &grad.data, cfg.lr);
+        }
+
+        let mask = prob.mask_from_v(&v);
+        let mse_after = prob.recon_mse(&prob.hard_weights(&mask), x, t);
+        let near = prob.nearest_mask();
+        let flipped = mask
+            .data
+            .iter()
+            .zip(&near.data)
+            .filter(|(a, b)| (*a - *b).abs() > 0.5)
+            .count();
+        Ok(LayerResult {
+            flipped_frac: flipped as f64 / mask.numel() as f64,
+            mask,
+            v,
+            mse_before,
+            mse_after,
+            iters: cfg.iters,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::problem::tests::random_problem;
+    use super::*;
+
+    fn layer_data(seed: u64, prob: &LayerProblem, ncols: usize) -> (Tensor, Tensor) {
+        let mut rng = Rng::new(seed);
+        let cols = prob.cols();
+        let x = Tensor::from_vec(
+            &[cols, ncols],
+            (0..cols * ncols).map(|_| rng.normal_f32(0.0, 1.0)).collect(),
+        );
+        let mut t = crate::tensor::matmul(&prob.w, &x);
+        for r in 0..prob.rows() {
+            for v in &mut t.data[r * ncols..(r + 1) * ncols] {
+                *v += prob.bias[r];
+            }
+        }
+        (x, t)
+    }
+
+    #[test]
+    fn improves_over_nearest() {
+        for (seed, relu) in [(1u64, false), (2, true)] {
+            let prob = random_problem(seed, 8, 24, relu);
+            let (x, t) = layer_data(seed + 5, &prob, 256);
+            let cfg = AdaRoundConfig { iters: 400, batch: 96, ..Default::default() };
+            let mut rng = Rng::new(seed);
+            let res = NativeOptimizer.optimize(&prob, &x, &t, &cfg, &mut rng).unwrap();
+            assert!(
+                res.mse_after <= res.mse_before * 1.001,
+                "relu={relu}: after {} vs before {}",
+                res.mse_after,
+                res.mse_before
+            );
+            // some weights should actually flip rounding direction (Fig. 3)
+            assert!(res.flipped_frac > 0.0, "no weights flipped");
+        }
+    }
+
+    #[test]
+    fn converges_to_binary() {
+        let prob = random_problem(7, 6, 16, false);
+        let (x, t) = layer_data(8, &prob, 128);
+        let cfg = AdaRoundConfig { iters: 600, batch: 64, ..Default::default() };
+        let mut rng = Rng::new(9);
+        let res = NativeOptimizer.optimize(&prob, &x, &t, &cfg, &mut rng).unwrap();
+        let binary = res
+            .v
+            .data
+            .iter()
+            .map(|&v| super::super::relax::rect_sigmoid(v))
+            .filter(|&h| h < 0.05 || h > 0.95)
+            .count();
+        let frac = binary as f64 / res.v.numel() as f64;
+        assert!(frac > 0.75, "only {frac} of h converged to binary");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let prob = random_problem(11, 4, 12, true);
+        let (x, t) = layer_data(12, &prob, 64);
+        let cfg = AdaRoundConfig { iters: 100, batch: 32, ..Default::default() };
+        let r1 = NativeOptimizer.optimize(&prob, &x, &t, &cfg, &mut Rng::new(5)).unwrap();
+        let r2 = NativeOptimizer.optimize(&prob, &x, &t, &cfg, &mut Rng::new(5)).unwrap();
+        assert_eq!(r1.mask.data, r2.mask.data);
+    }
+}

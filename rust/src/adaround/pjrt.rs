@@ -1,0 +1,85 @@
+//! PJRT-driven AdaRound: the architecture's request-path driver.
+//!
+//! Each iteration executes ONE fused HLO module (Pallas soft-quant matmul
+//! fwd/bwd + f_reg + Adam) compiled ahead of time from
+//! `python/compile/model.py`. Rust only shuttles buffers and schedules —
+//! no Python anywhere near this loop.
+
+use anyhow::Result;
+
+use crate::runtime::{Runtime, StepState};
+use crate::tensor::Tensor;
+use crate::util::Rng;
+
+use super::native::gather_cols;
+use super::problem::LayerProblem;
+use super::schedule::AdaRoundConfig;
+use super::{LayerResult, RoundingOptimizer};
+
+pub struct PjrtOptimizer<'rt> {
+    pub rt: &'rt Runtime,
+}
+
+impl<'rt> PjrtOptimizer<'rt> {
+    pub fn new(rt: &'rt Runtime) -> Self {
+        PjrtOptimizer { rt }
+    }
+}
+
+impl<'rt> RoundingOptimizer for PjrtOptimizer<'rt> {
+    fn optimize(
+        &mut self,
+        prob: &LayerProblem,
+        x: &Tensor,
+        t: &Tensor,
+        cfg: &AdaRoundConfig,
+        rng: &mut Rng,
+    ) -> Result<LayerResult> {
+        let (rows, cols) = (prob.rows(), prob.cols());
+        let exec = self.rt.step_exec(rows, cols, prob.relu)?;
+        // the HLO bucket fixes the minibatch width; cfg.batch is advisory
+        let step_batch = exec.batch;
+        let ncols = x.cols();
+
+        let s_col = Tensor::from_vec(&[rows, 1], (0..rows).map(|r| prob.s(r)).collect());
+        let b_col = Tensor::from_vec(&[rows, 1], prob.bias.clone());
+        let mut state = StepState::new(prob.init_v());
+        let mse_before = prob.recon_mse(&prob.hard_weights(&prob.nearest_mask()), x, t);
+
+        for it in 0..cfg.iters {
+            let (beta, reg_on) = cfg.beta.at(it, cfg.iters);
+            let lam = if reg_on { cfg.lambda } else { 0.0 };
+            // sample exactly the bucket's batch of columns (with repetition
+            // if the calibration sample is smaller than the bucket)
+            let idx: Vec<usize> = if ncols >= step_batch {
+                rng.sample_indices(ncols, step_batch)
+            } else {
+                (0..step_batch).map(|_| rng.below(ncols)).collect()
+            };
+            let xb = gather_cols(x, &idx);
+            let tb = gather_cols(t, &idx);
+            exec.run(
+                &mut state, &xb, &tb, &prob.w, &s_col, &b_col, beta, lam, cfg.lr, prob.n,
+                prob.p,
+            )?;
+        }
+
+        let mask = prob.mask_from_v(&state.v);
+        let mse_after = prob.recon_mse(&prob.hard_weights(&mask), x, t);
+        let near = prob.nearest_mask();
+        let flipped = mask
+            .data
+            .iter()
+            .zip(&near.data)
+            .filter(|(a, b)| (*a - *b).abs() > 0.5)
+            .count();
+        Ok(LayerResult {
+            flipped_frac: flipped as f64 / mask.numel() as f64,
+            mask,
+            v: state.v,
+            mse_before,
+            mse_after,
+            iters: cfg.iters,
+        })
+    }
+}

@@ -1,0 +1,289 @@
+//! Per-layer reconstruction problem: the objective of eq. (25) with its
+//! analytic gradient (the math the Pallas backward kernel implements).
+
+use crate::quant::QuantGrid;
+use crate::tensor::{matmul, Tensor};
+
+use super::relax;
+
+/// One GEMM-shaped rounding problem (a whole conv/dense layer, or one
+/// group of a grouped conv).
+pub struct LayerProblem {
+    /// FP32 weights [rows, cols]
+    pub w: Tensor,
+    /// per-row scale (len rows, or broadcast len 1)
+    pub scale: Vec<f32>,
+    pub bias: Vec<f32>,
+    pub n: f32,
+    pub p: f32,
+    /// apply ReLU inside the reconstruction objective
+    pub relu: bool,
+}
+
+impl LayerProblem {
+    pub fn new(w: Tensor, grid: &QuantGrid, row0: usize, bias: Vec<f32>, relu: bool) -> Self {
+        let rows = w.shape[0];
+        let scale = (0..rows).map(|r| grid.scale_for_row(row0 + r)).collect();
+        LayerProblem { w, scale, bias, n: grid.n, p: grid.p, relu }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.w.shape[0]
+    }
+
+    pub fn cols(&self) -> usize {
+        self.w.shape[1]
+    }
+
+    #[inline]
+    pub fn s(&self, r: usize) -> f32 {
+        if self.scale.len() == 1 { self.scale[0] } else { self.scale[r] }
+    }
+
+    /// V initialization (h(V) = frac(W/s), i.e. start at FP32 weights).
+    pub fn init_v(&self) -> Tensor {
+        let cols = self.cols();
+        let mut v = Tensor::zeros(&self.w.shape);
+        for r in 0..self.rows() {
+            let s = self.s(r);
+            for c in 0..cols {
+                v.data[r * cols + c] = relax::init_v(self.w.data[r * cols + c], s);
+            }
+        }
+        v
+    }
+
+    /// Soft-quantized weights W~ = s clip(floor(W/s) + h(V), n, p).
+    pub fn soft_weights(&self, v: &Tensor) -> Tensor {
+        let cols = self.cols();
+        let mut out = Tensor::zeros(&self.w.shape);
+        for r in 0..self.rows() {
+            let s = self.s(r);
+            for c in 0..cols {
+                let i = r * cols + c;
+                let z = (self.w.data[i] / s).floor() + relax::rect_sigmoid(v.data[i]);
+                out.data[i] = s * z.clamp(self.n, self.p);
+            }
+        }
+        out
+    }
+
+    /// Hard weights from a binary mask.
+    pub fn hard_weights(&self, mask: &Tensor) -> Tensor {
+        let cols = self.cols();
+        let mut out = Tensor::zeros(&self.w.shape);
+        for r in 0..self.rows() {
+            let s = self.s(r);
+            for c in 0..cols {
+                let i = r * cols + c;
+                let z = (self.w.data[i] / s).floor() + mask.data[i];
+                out.data[i] = s * z.clamp(self.n, self.p);
+            }
+        }
+        out
+    }
+
+    /// Gate G = s * clip_mask * h'(V) (dW~/dV elementwise) — identical to
+    /// the Pallas forward kernel's second output.
+    pub fn gate(&self, v: &Tensor) -> Tensor {
+        let cols = self.cols();
+        let mut g = Tensor::zeros(&self.w.shape);
+        for r in 0..self.rows() {
+            let s = self.s(r);
+            for c in 0..cols {
+                let i = r * cols + c;
+                let z = (self.w.data[i] / s).floor() + relax::rect_sigmoid(v.data[i]);
+                let inside = z >= self.n && z <= self.p;
+                g.data[i] = if inside { s * relax::rect_sigmoid_grad(v.data[i]) } else { 0.0 };
+            }
+        }
+        g
+    }
+
+    /// Reconstruction MSE of hard weights against targets T on inputs X
+    /// (the metric reported per layer): mean((f_a(W^X + b) - f_a(T))^2).
+    pub fn recon_mse(&self, wq: &Tensor, x: &Tensor, t: &Tensor) -> f64 {
+        let mut y = matmul(wq, x);
+        self.add_bias(&mut y);
+        let (ya, ta) = if self.relu {
+            (y.relu(), t.relu())
+        } else {
+            (y, t.clone())
+        };
+        ya.mse(&ta)
+    }
+
+    fn add_bias(&self, y: &mut Tensor) {
+        if self.bias.is_empty() {
+            return;
+        }
+        let batch = y.cols();
+        for r in 0..y.rows() {
+            let b = self.bias[r];
+            for v in &mut y.data[r * batch..(r + 1) * batch] {
+                *v += b;
+            }
+        }
+    }
+
+    /// Loss + dL/dV at V over a batch (X [cols, B], T [rows, B]).
+    ///
+    ///   loss = mean((f_a(W~X + b) - f_a(T))^2) + lam * sum f_reg(V; beta)
+    ///
+    /// `lam = 0` disables the regularizer (warmup phase). Returns
+    /// (loss, mse, grad).
+    pub fn loss_grad(
+        &self,
+        v: &Tensor,
+        x: &Tensor,
+        t: &Tensor,
+        beta: f32,
+        lam: f32,
+    ) -> (f64, f64, Tensor) {
+        let rows = self.rows();
+        let batch = x.cols();
+        let wq = self.soft_weights(v);
+        let mut y = matmul(&wq, x);
+        self.add_bias(&mut y);
+        let numel = (rows * batch) as f64;
+
+        // dY and mse
+        let mut dy = Tensor::zeros(&[rows, batch]);
+        let mut mse = 0.0f64;
+        for i in 0..rows * batch {
+            let (yi, ti) = (y.data[i], t.data[i]);
+            let (ya, ta) = if self.relu { (yi.max(0.0), ti.max(0.0)) } else { (yi, ti) };
+            let d = ya - ta;
+            mse += (d as f64) * (d as f64);
+            let pass = if self.relu && yi <= 0.0 { 0.0 } else { 1.0 };
+            dy.data[i] = 2.0 * d * pass / numel as f32;
+        }
+        mse /= numel;
+
+        // dV = (dY X^T) .* G  + lam * f_reg'
+        let dwq = crate::tensor::matmul::matmul_bt(&dy, x); // [rows, cols]
+        let gate = self.gate(v);
+        let mut grad = Tensor::zeros(&v.shape);
+        let mut reg = 0.0f64;
+        for i in 0..grad.numel() {
+            grad.data[i] = dwq.data[i] * gate.data[i];
+            if lam > 0.0 {
+                let h = relax::rect_sigmoid(v.data[i]);
+                reg += relax::f_reg_elem(h, beta) as f64;
+                grad.data[i] += lam * relax::f_reg_grad(v.data[i], beta);
+            }
+        }
+        let loss = mse + lam as f64 * reg;
+        (loss, mse, grad)
+    }
+
+    /// Binary mask from converged V: h(V) >= 0.5 rounds up.
+    pub fn mask_from_v(&self, v: &Tensor) -> Tensor {
+        v.map(|x| (relax::rect_sigmoid(x) >= 0.5) as u8 as f32)
+    }
+
+    /// Round-to-nearest mask for this problem.
+    pub fn nearest_mask(&self) -> Tensor {
+        let cols = self.cols();
+        let mut m = Tensor::zeros(&self.w.shape);
+        for r in 0..self.rows() {
+            let s = self.s(r);
+            for c in 0..cols {
+                let i = r * cols + c;
+                let frac = self.w.data[i] / s - (self.w.data[i] / s).floor();
+                m.data[i] = (frac >= 0.5) as u8 as f32;
+            }
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+    use crate::util::proptest::{close, property};
+    use crate::util::Rng;
+
+    pub(crate) fn random_problem(seed: u64, rows: usize, cols: usize, relu: bool) -> LayerProblem {
+        let mut rng = Rng::new(seed);
+        let w = Tensor::from_vec(
+            &[rows, cols],
+            (0..rows * cols).map(|_| rng.normal_f32(0.0, 0.3)).collect(),
+        );
+        let grid = QuantGrid::per_tensor(0.05, 4);
+        let bias = (0..rows).map(|_| rng.normal_f32(0.0, 0.1)).collect();
+        LayerProblem::new(w, &grid, 0, bias, relu)
+    }
+
+    #[test]
+    fn init_v_starts_at_fp32() {
+        let prob = random_problem(1, 6, 10, false);
+        let v = prob.init_v();
+        let wq = prob.soft_weights(&v);
+        // soft weights at init should be ~= original weights (within grid clip)
+        for i in 0..wq.numel() {
+            let w = prob.w.data[i];
+            if (w / 0.05).abs() < 7.0 {
+                assert!((wq.data[i] - w).abs() < 1e-3, "{} vs {}", wq.data[i], w);
+            }
+        }
+    }
+
+    #[test]
+    fn grad_matches_finite_difference() {
+        property(81, 8, |g| {
+            let rows = g.int(2, 5);
+            let cols = g.int(2, 8);
+            let batch = g.int(3, 10);
+            let relu = g.bool();
+            let prob = random_problem(g.case as u64 + 10, rows, cols, relu);
+            let mut rng = Rng::new(g.case as u64);
+            let x = Tensor::from_vec(
+                &[cols, batch],
+                (0..cols * batch).map(|_| rng.normal_f32(0.0, 1.0)).collect(),
+            );
+            let t = Tensor::from_vec(
+                &[rows, batch],
+                (0..rows * batch).map(|_| rng.normal_f32(0.0, 1.0)).collect(),
+            );
+            let v = prob.init_v();
+            let (beta, lam) = (g.f32(2.0, 10.0), 0.02f32);
+            let (_, _, grad) = prob.loss_grad(&v, &x, &t, beta, lam);
+            // FD check on a few coordinates
+            for probe in 0..3 {
+                let i = (probe * 7 + g.case) % v.numel();
+                let eps = 1e-3;
+                let mut vp = v.clone();
+                vp.data[i] += eps;
+                let mut vm = v.clone();
+                vm.data[i] -= eps;
+                let (lp, _, _) = prob.loss_grad(&vp, &x, &t, beta, lam);
+                let (lm, _, _) = prob.loss_grad(&vm, &x, &t, beta, lam);
+                let fd = ((lp - lm) / (2.0 * eps as f64)) as f32;
+                close(grad.data[i], fd, 0.05)?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn nearest_mask_reproduces_round() {
+        let prob = random_problem(3, 4, 8, false);
+        let mask = prob.nearest_mask();
+        let wq = prob.hard_weights(&mask);
+        for i in 0..wq.numel() {
+            let expect = 0.05 * (prob.w.data[i] / 0.05).round().clamp(-8.0, 7.0);
+            assert!((wq.data[i] - expect).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn gate_zero_when_clipped() {
+        let grid = QuantGrid::per_tensor(0.01, 4);
+        let w = Tensor::full(&[2, 2], 5.0); // way past the grid
+        let prob = LayerProblem::new(w, &grid, 0, vec![0.0; 2], false);
+        let v = Tensor::zeros(&[2, 2]);
+        let g = prob.gate(&v);
+        assert!(g.data.iter().all(|&x| x == 0.0));
+    }
+}

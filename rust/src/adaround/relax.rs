@@ -1,0 +1,109 @@
+//! Rectified sigmoid + regularizer (paper eqs. 22-24) — exact mirror of
+//! `python/compile/kernels/relax.py` so both drivers agree bit-for-bit in
+//! definition (floating-point roundoff aside).
+
+pub const ZETA: f32 = 1.1;
+pub const GAMMA: f32 = -0.1;
+
+#[inline]
+pub fn sigmoid(v: f32) -> f32 {
+    1.0 / (1.0 + (-v).exp())
+}
+
+/// h(V) = clip(sigmoid(V)(zeta - gamma) + gamma, 0, 1)   (eq. 23)
+#[inline]
+pub fn rect_sigmoid(v: f32) -> f32 {
+    (sigmoid(v) * (ZETA - GAMMA) + GAMMA).clamp(0.0, 1.0)
+}
+
+/// dh/dV, zero in the rectified (clipped) region.
+#[inline]
+pub fn rect_sigmoid_grad(v: f32) -> f32 {
+    let s = sigmoid(v);
+    let raw = s * (ZETA - GAMMA) + GAMMA;
+    if raw > 0.0 && raw < 1.0 {
+        s * (1.0 - s) * (ZETA - GAMMA)
+    } else {
+        0.0
+    }
+}
+
+/// Per-element regularizer 1 - |2h-1|^beta  (eq. 24, summed by callers).
+#[inline]
+pub fn f_reg_elem(h: f32, beta: f32) -> f32 {
+    1.0 - (2.0 * h - 1.0).abs().powf(beta)
+}
+
+/// d f_reg / dV (through h) at one element.
+#[inline]
+pub fn f_reg_grad(v: f32, beta: f32) -> f32 {
+    let h = rect_sigmoid(v);
+    let z = 2.0 * h - 1.0;
+    let dh = rect_sigmoid_grad(v);
+    if z == 0.0 {
+        return 0.0;
+    }
+    -beta * z.abs().powf(beta - 1.0) * 2.0 * z.signum() * dh
+}
+
+/// Initialize V so h(V) = frac(w/s): soft quantization starts at FP32
+/// (mirror of `relax.init_v_from_weights`).
+pub fn init_v(w: f32, s: f32) -> f32 {
+    let frac = (w / s - (w / s).floor()).clamp(1e-4, 1.0 - 1e-4);
+    let p = (frac - GAMMA) / (ZETA - GAMMA);
+    (p / (1.0 - p)).ln()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{close, property};
+
+    #[test]
+    fn h_range_and_saturation() {
+        property(71, 50, |g| {
+            let v = g.f32(-40.0, 40.0);
+            let h = rect_sigmoid(v);
+            if !(0.0..=1.0).contains(&h) {
+                return Err(format!("h({v}) = {h} out of range"));
+            }
+            Ok(())
+        });
+        assert_eq!(rect_sigmoid(12.0), 1.0);
+        assert_eq!(rect_sigmoid(-12.0), 0.0);
+    }
+
+    #[test]
+    fn grad_matches_finite_difference() {
+        property(72, 40, |g| {
+            let v = g.f32(-5.0, 5.0);
+            let eps = 1e-3;
+            let fd = (rect_sigmoid(v + eps) - rect_sigmoid(v - eps)) / (2.0 * eps);
+            close(rect_sigmoid_grad(v), fd, 2e-3)
+        });
+    }
+
+    #[test]
+    fn f_reg_grad_matches_fd() {
+        property(73, 40, |g| {
+            let v = g.f32(-3.0, 3.0);
+            let beta = g.f32(2.0, 12.0);
+            let eps = 1e-3;
+            let fd = (f_reg_elem(rect_sigmoid(v + eps), beta)
+                - f_reg_elem(rect_sigmoid(v - eps), beta))
+                / (2.0 * eps);
+            close(f_reg_grad(v, beta), fd, 5e-2)
+        });
+    }
+
+    #[test]
+    fn init_v_inverse() {
+        property(74, 40, |g| {
+            let w = g.f32(-1.0, 1.0);
+            let s = g.f32(0.01, 0.3);
+            let v = init_v(w, s);
+            let frac = (w / s - (w / s).floor()).clamp(1e-4, 1.0 - 1e-4);
+            close(rect_sigmoid(v), frac, 1e-3)
+        });
+    }
+}

@@ -1,0 +1,86 @@
+//! AdaRound hyper-parameters and the beta annealing schedule (Fig. 2).
+
+/// Annealing of the regularizer sharpness beta: high beta lets h move
+/// freely to fit the MSE; low beta forces h to the {0,1} extremes.
+#[derive(Clone, Copy, Debug)]
+pub struct BetaSchedule {
+    pub start: f32,
+    pub end: f32,
+    /// fraction of iterations with the regularizer disabled (warm start)
+    pub warmup: f32,
+}
+
+impl Default for BetaSchedule {
+    fn default() -> Self {
+        BetaSchedule { start: 20.0, end: 2.0, warmup: 0.2 }
+    }
+}
+
+impl BetaSchedule {
+    /// (beta, reg_enabled) at iteration `it` of `total`.
+    pub fn at(&self, it: usize, total: usize) -> (f32, bool) {
+        let frac = it as f32 / total.max(1) as f32;
+        if frac < self.warmup {
+            return (self.start, false);
+        }
+        let t = (frac - self.warmup) / (1.0 - self.warmup);
+        // cosine decay start -> end
+        let beta = self.end + 0.5 * (self.start - self.end) * (1.0 + (std::f32::consts::PI * t).cos());
+        (beta, true)
+    }
+}
+
+/// Full AdaRound configuration (paper §5 experimental setup, scaled to
+/// this testbed: micro-layers converge in far fewer iterations than
+/// Resnet18's 10k).
+#[derive(Clone, Copy, Debug)]
+pub struct AdaRoundConfig {
+    pub iters: usize,
+    pub batch: usize,
+    pub lr: f32,
+    pub lambda: f32,
+    pub beta: BetaSchedule,
+    /// account for the activation function in the objective (eq. 25)
+    pub use_relu: bool,
+}
+
+impl Default for AdaRoundConfig {
+    fn default() -> Self {
+        AdaRoundConfig {
+            iters: 1200,
+            batch: 192, // must match the AOT STEP_BATCH bucket for PJRT
+            lr: 1e-2,
+            lambda: 0.01,
+            beta: BetaSchedule::default(),
+            use_relu: true,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_disables_reg() {
+        let s = BetaSchedule::default();
+        let (b, on) = s.at(0, 100);
+        assert_eq!(b, 20.0);
+        assert!(!on);
+        let (_, on2) = s.at(50, 100);
+        assert!(on2);
+    }
+
+    #[test]
+    fn monotone_decay_to_end() {
+        let s = BetaSchedule::default();
+        let mut prev = f32::INFINITY;
+        for it in 20..100 {
+            let (b, _) = s.at(it, 100);
+            assert!(b <= prev + 1e-5);
+            prev = b;
+        }
+        let (b_end, _) = s.at(99, 100);
+        assert!(b_end < 2.2, "end beta {b_end}");
+    }
+}

@@ -1,0 +1,145 @@
+//! Straight-through-estimator baseline (paper Table 5).
+//!
+//! Optimizes continuous weights W' for the same reconstruction MSE, but
+//! quantizes with round-to-nearest in the forward pass and passes the
+//! gradient straight through (Bengio et al., 2013). Unlike AdaRound the
+//! quantized weights can wander multiple grid steps; the paper finds the
+//! biased STE gradient makes this *worse* than AdaRound.
+
+use anyhow::Result;
+
+use crate::tensor::{matmul, Tensor};
+use crate::util::Rng;
+
+use super::native::gather_cols;
+use super::problem::LayerProblem;
+use super::schedule::AdaRoundConfig;
+use super::{Adam, LayerResult};
+
+/// Returns the same LayerResult shape as the other drivers; `mask` holds
+/// the *effective* rounding of the final W' relative to floor(W/s) clamped
+/// to {0, 1} for reporting, while the quantized weights themselves are in
+/// `v` (reused as storage for W_q).
+pub fn optimize_ste(
+    prob: &LayerProblem,
+    x: &Tensor,
+    t: &Tensor,
+    cfg: &AdaRoundConfig,
+    rng: &mut Rng,
+) -> Result<LayerResult> {
+    let (rows, cols) = (prob.rows(), prob.cols());
+    let mut w = prob.w.clone(); // continuous shadow weights
+    let mut adam = Adam::new(w.numel());
+    let ncols = x.cols();
+    let mse_before = prob.recon_mse(&prob.hard_weights(&prob.nearest_mask()), x, t);
+
+    let quantize = |w: &Tensor| -> Tensor {
+        let mut q = Tensor::zeros(&w.shape);
+        for r in 0..rows {
+            let s = prob.s(r);
+            for c in 0..cols {
+                let i = r * cols + c;
+                q.data[i] = s * (w.data[i] / s).round().clamp(prob.n, prob.p);
+            }
+        }
+        q
+    };
+
+    for _ in 0..cfg.iters {
+        let idx = rng.sample_indices(ncols, cfg.batch.min(ncols));
+        let xb = gather_cols(x, &idx);
+        let tb = gather_cols(t, &idx);
+        let wq = quantize(&w);
+        let mut y = matmul(&wq, &xb);
+        // + bias
+        let batch = y.cols();
+        for r in 0..rows {
+            let b = prob.bias.get(r).copied().unwrap_or(0.0);
+            for v in &mut y.data[r * batch..(r + 1) * batch] {
+                *v += b;
+            }
+        }
+        let numel = (rows * batch) as f32;
+        let mut dy = Tensor::zeros(&[rows, batch]);
+        for i in 0..rows * batch {
+            let (yi, ti) = (y.data[i], tb.data[i]);
+            let (ya, ta) = if prob.relu { (yi.max(0.0), ti.max(0.0)) } else { (yi, ti) };
+            let pass = if prob.relu && yi <= 0.0 { 0.0 } else { 1.0 };
+            dy.data[i] = 2.0 * (ya - ta) * pass / numel;
+        }
+        // STE: dL/dW' = dL/dWq (identity through rounding; clip mask applied)
+        let mut grad = crate::tensor::matmul::matmul_bt(&dy, &xb);
+        for r in 0..rows {
+            let s = prob.s(r);
+            for c in 0..cols {
+                let i = r * cols + c;
+                let z = w.data[i] / s;
+                if z < prob.n || z > prob.p {
+                    grad.data[i] = 0.0; // outside grid: no gradient
+                }
+            }
+        }
+        adam.step(&mut w.data, &grad.data, cfg.lr);
+    }
+
+    let wq = quantize(&w);
+    let mse_after = prob.recon_mse(&wq, x, t);
+    // effective up/down mask relative to floor(W_fp32/s), clamped for report
+    let near = prob.nearest_mask();
+    let mut mask = Tensor::zeros(&w.shape);
+    let mut flipped = 0usize;
+    for r in 0..rows {
+        let s = prob.s(r);
+        for c in 0..cols {
+            let i = r * cols + c;
+            let steps = (wq.data[i] / s - (prob.w.data[i] / s).floor()).round();
+            mask.data[i] = steps.clamp(0.0, 1.0);
+            if (mask.data[i] - near.data[i]).abs() > 0.5 {
+                flipped += 1;
+            }
+        }
+    }
+    Ok(LayerResult {
+        flipped_frac: flipped as f64 / mask.numel() as f64,
+        mask,
+        v: wq,
+        mse_before,
+        mse_after,
+        iters: cfg.iters,
+    })
+}
+
+/// STE quantized weights from the result (stored in `v`).
+pub fn ste_weights(res: &LayerResult) -> &Tensor {
+    &res.v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::problem::tests::random_problem;
+    use super::*;
+
+    #[test]
+    fn ste_improves_over_nearest() {
+        let prob = random_problem(31, 8, 24, false);
+        let mut rng = Rng::new(32);
+        let x = Tensor::from_vec(
+            &[24, 256],
+            (0..24 * 256).map(|_| rng.normal_f32(0.0, 1.0)).collect(),
+        );
+        let mut t = matmul(&prob.w, &x);
+        for r in 0..8 {
+            for v in &mut t.data[r * 256..(r + 1) * 256] {
+                *v += prob.bias[r];
+            }
+        }
+        let cfg = AdaRoundConfig { iters: 400, batch: 96, lr: 2e-3, ..Default::default() };
+        let res = optimize_ste(&prob, &x, &t, &cfg, &mut rng).unwrap();
+        assert!(
+            res.mse_after <= res.mse_before * 1.001,
+            "{} vs {}",
+            res.mse_after,
+            res.mse_before
+        );
+    }
+}

@@ -1,0 +1,57 @@
+//! Empirical bias correction (paper eq. 26, Table 8).
+//!
+//! Quantizing weights shifts the expected preactivation:
+//! E[Wx] != E[W^ x^]. The correction adds E[Wx] - E[W^ x^] to the layer
+//! bias — the optimal *bias-only* fix of the same MSE objective AdaRound
+//! optimizes over roundings.
+
+use crate::tensor::{matmul, Tensor};
+
+/// Per-output-row bias delta from calibration samples.
+///
+/// `w_fp` [rows, cols] with FP32 input sample `x_fp` [cols, N];
+/// `w_q` with quantized-prefix input `x_q` (same shapes).
+pub fn correct_bias(w_fp: &Tensor, x_fp: &Tensor, w_q: &Tensor, x_q: &Tensor) -> Vec<f32> {
+    let y_fp = matmul(w_fp, x_fp);
+    let y_q = matmul(w_q, x_q);
+    let n = y_fp.cols() as f64;
+    (0..y_fp.rows())
+        .map(|r| {
+            let m_fp: f64 = y_fp.row(r).iter().map(|&v| v as f64).sum::<f64>() / n;
+            let m_q: f64 = y_q.row(r).iter().map(|&v| v as f64).sum::<f64>() / n;
+            (m_fp - m_q) as f32
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn restores_expected_output() {
+        let mut rng = Rng::new(1);
+        let w = Tensor::from_vec(&[4, 8], (0..32).map(|_| rng.normal_f32(0.0, 0.3)).collect());
+        // crude "quantization": add a constant bias-inducing error
+        let wq = w.map(|v| v + 0.03);
+        let x = Tensor::from_vec(&[8, 100], (0..800).map(|_| rng.normal_f32(0.5, 1.0)).collect());
+        let delta = correct_bias(&w, &x, &wq, &x);
+        let y_fp = matmul(&w, &x);
+        let y_q = matmul(&wq, &x);
+        for r in 0..4 {
+            let m_fp: f32 = y_fp.row(r).iter().sum::<f32>() / 100.0;
+            let m_q: f32 = y_q.row(r).iter().sum::<f32>() / 100.0 + delta[r];
+            assert!((m_fp - m_q).abs() < 1e-4, "row {r}: {m_fp} vs {m_q}");
+        }
+    }
+
+    #[test]
+    fn zero_when_no_quantization() {
+        let mut rng = Rng::new(2);
+        let w = Tensor::from_vec(&[3, 6], (0..18).map(|_| rng.normal_f32(0.0, 0.3)).collect());
+        let x = Tensor::from_vec(&[6, 50], (0..300).map(|_| rng.normal_f32(0.0, 1.0)).collect());
+        let delta = correct_bias(&w, &x, &w, &x);
+        assert!(delta.iter().all(|d| d.abs() < 1e-6));
+    }
+}

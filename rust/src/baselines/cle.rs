@@ -1,0 +1,219 @@
+//! Cross-layer equalization (Nagel et al. 2019, "DFQ").
+//!
+//! For a conv/dense pair (L1 + ReLU) -> L2, ReLU's positive homogeneity
+//! allows rescaling output channel i of L1 by 1/s_i and the matching input
+//! channel of L2 by s_i without changing the function. Choosing
+//! s_i = sqrt(r1_i / r2_i) equalizes per-channel ranges, which helps
+//! per-tensor quantization grids. The paper uses CLE as preprocessing for
+//! MobilenetV2 (Table 7 footnote); DFQ (our impl.) = CLE + bias correction.
+
+use std::collections::BTreeMap;
+
+use crate::nn::{Model, Op};
+use crate::tensor::Tensor;
+
+/// Find directly-connected (producer, consumer) quantizable pairs where
+/// the producer has ReLU and the consumer consumes only it.
+fn equalizable_pairs(model: &Model) -> Vec<(String, String)> {
+    let mut pairs = Vec::new();
+    for nd in &model.nodes {
+        let (is_conv_relu, _cout) = match &nd.op {
+            Op::Conv { relu, .. } => (*relu, nd.cout),
+            _ => (false, 0),
+        };
+        if !is_conv_relu {
+            continue;
+        }
+        // the producer's output must feed EXACTLY one node (rescaling it
+        // would otherwise break residual adds / concats that also read it)
+        let consumers: Vec<_> = model
+            .nodes
+            .iter()
+            .filter(|c| c.inputs.iter().any(|i| i == &nd.id))
+            .collect();
+        if consumers.len() != 1 {
+            continue;
+        }
+        let consumer = consumers[0];
+        let ok = match &consumer.op {
+            Op::Conv { groups, .. } => {
+                consumer.inputs.len() == 1 && (*groups == 1 || *groups == consumer.cin)
+            }
+            _ => false,
+        };
+        if ok {
+            pairs.push((nd.id.clone(), consumer.id.clone()));
+        }
+    }
+    pairs
+}
+
+/// Per-output-channel |max| range of a conv weight [O, C/g, k, k].
+fn out_ranges(w: &Tensor) -> Vec<f32> {
+    let o = w.shape[0];
+    let per = w.numel() / o;
+    (0..o)
+        .map(|i| w.data[i * per..(i + 1) * per].iter().fold(0.0f32, |m, &v| m.max(v.abs())))
+        .collect()
+}
+
+/// Per-input-channel |max| range of a conv weight.
+fn in_ranges(w: &Tensor, groups: usize) -> Vec<f32> {
+    let (o, cg, kh, kw) = (w.shape[0], w.shape[1], w.shape[2], w.shape[3]);
+    if groups > 1 {
+        // depthwise: input channel i feeds filter i
+        return out_ranges(w);
+    }
+    let mut r = vec![0.0f32; cg];
+    for oi in 0..o {
+        for ci in 0..cg {
+            for t in 0..kh * kw {
+                let v = w.data[(oi * cg + ci) * kh * kw + t].abs();
+                if v > r[ci] {
+                    r[ci] = v;
+                }
+            }
+        }
+    }
+    r
+}
+
+/// Apply CLE in place on a copy of the model's weights; returns the
+/// equalized weight map (same keys as `model.weights`) and the number of
+/// equalized pairs.
+pub fn equalize_model(model: &Model) -> (BTreeMap<String, Tensor>, usize) {
+    let mut weights = model.weights.clone();
+    let pairs = equalizable_pairs(model);
+    for (a, b) in &pairs {
+        let wa_key = format!("{a}.w");
+        let ba_key = format!("{a}.b");
+        let wb_key = format!("{b}.w");
+        let wa = weights[&wa_key].clone();
+        let wb = weights[&wb_key].clone();
+        let groups_b = match &model.node(b).unwrap().op {
+            Op::Conv { groups, .. } => *groups,
+            _ => 1,
+        };
+        let r1 = out_ranges(&wa);
+        let r2 = in_ranges(&wb, groups_b);
+        if r1.len() != r2.len() {
+            continue; // channel mismatch (shouldn't happen for valid pairs)
+        }
+        let s: Vec<f32> = r1
+            .iter()
+            .zip(&r2)
+            .map(|(&a, &b)| {
+                if a <= 1e-12 || b <= 1e-12 {
+                    1.0
+                } else {
+                    (a / b).sqrt().clamp(1e-2, 1e2)
+                }
+            })
+            .collect();
+        // scale producer rows down by s_i
+        let mut wa2 = wa.clone();
+        let per = wa.numel() / wa.shape[0];
+        for i in 0..wa.shape[0] {
+            for v in &mut wa2.data[i * per..(i + 1) * per] {
+                *v /= s[i];
+            }
+        }
+        let mut ba2 = weights[&ba_key].clone();
+        for (i, v) in ba2.data.iter_mut().enumerate() {
+            *v /= s[i];
+        }
+        // scale consumer input channels up by s_i
+        let mut wb2 = wb.clone();
+        let (o, cg, kh, kw) = (wb.shape[0], wb.shape[1], wb.shape[2], wb.shape[3]);
+        if groups_b > 1 {
+            for i in 0..o {
+                for v in &mut wb2.data[i * cg * kh * kw..(i + 1) * cg * kh * kw] {
+                    *v *= s[i];
+                }
+            }
+        } else {
+            for oi in 0..o {
+                for ci in 0..cg {
+                    for t in 0..kh * kw {
+                        wb2.data[(oi * cg + ci) * kh * kw + t] *= s[ci];
+                    }
+                }
+            }
+        }
+        weights.insert(wa_key, wa2);
+        weights.insert(ba_key, ba2);
+        weights.insert(wb_key, wb2);
+    }
+    let n = pairs.len();
+    (weights, n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::ForwardOptions;
+    use crate::util::Json;
+    use crate::util::Rng;
+
+    fn chain_model() -> Model {
+        let j = Json::parse(
+            r#"{"task":"cls","ir":[
+              {"id":"in","op":"input","inputs":[]},
+              {"id":"c1","op":"conv","inputs":["in"],"cin":3,"cout":4,
+               "k":3,"stride":1,"pad":1,"groups":1,"relu":true},
+              {"id":"c2","op":"conv","inputs":["c1"],"cin":4,"cout":2,
+               "k":1,"stride":1,"pad":0,"groups":1,"relu":false},
+              {"id":"g1","op":"gpool","inputs":["c2"]},
+              {"id":"d1","op":"dense","inputs":["g1"],"cin":2,"cout":2,"relu":false}
+            ]}"#,
+        )
+        .unwrap();
+        let mut rng = Rng::new(3);
+        let mut w = BTreeMap::new();
+        // deliberately mis-scaled channels
+        let mut w1 = Tensor::from_vec(&[4, 3, 3, 3],
+            (0..108).map(|_| rng.normal_f32(0.0, 0.3)).collect());
+        for v in &mut w1.data[0..27] {
+            *v *= 20.0; // channel 0 is a huge outlier
+        }
+        w.insert("c1.w".into(), w1);
+        w.insert("c1.b".into(), Tensor::zeros(&[4]));
+        w.insert("c2.w".into(), Tensor::from_vec(&[2, 4, 1, 1],
+            (0..8).map(|_| rng.normal_f32(0.0, 0.3)).collect()));
+        w.insert("c2.b".into(), Tensor::zeros(&[2]));
+        w.insert("d1.w".into(), Tensor::from_vec(&[2, 2],
+            (0..4).map(|_| rng.normal_f32(0.0, 0.3)).collect()));
+        w.insert("d1.b".into(), Tensor::zeros(&[2]));
+        Model::from_manifest("chain", &j, w).unwrap()
+    }
+
+    #[test]
+    fn function_preserved() {
+        let model = chain_model();
+        let (eq, n) = equalize_model(&model);
+        assert!(n >= 1, "no pairs equalized");
+        let mut rng = Rng::new(4);
+        let x = Tensor::from_vec(&[2, 3, 32, 32],
+            (0..2 * 3 * 1024).map(|_| rng.normal_f32(0.0, 1.0)).collect());
+        let y0 = model.forward(&x, &ForwardOptions::default());
+        let eq_model = Model { weights: eq, ..model.clone() };
+        let y1 = eq_model.forward(&x, &ForwardOptions::default());
+        for (a, b) in y0.data.iter().zip(&y1.data) {
+            assert!((a - b).abs() < 1e-3 * (1.0 + a.abs()), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn ranges_equalized() {
+        let model = chain_model();
+        let (eq, _) = equalize_model(&model);
+        let before = out_ranges(&model.weights["c1.w"]);
+        let after = out_ranges(&eq["c1.w"]);
+        let spread = |r: &[f32]| {
+            let mx = r.iter().cloned().fold(0.0f32, f32::max);
+            let mn = r.iter().cloned().fold(f32::INFINITY, f32::min);
+            mx / mn.max(1e-9)
+        };
+        assert!(spread(&after) < spread(&before), "spread not reduced");
+    }
+}

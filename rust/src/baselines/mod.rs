@@ -1,0 +1,18 @@
+//! Literature-comparison baselines (paper §5.2, Tables 7-9):
+//!
+//! * [`bias_correction`] — empirical bias correction (Banner et al. 2019 /
+//!   Nagel et al. 2019), eq. (26).
+//! * [`cle`] — cross-layer equalization (the "CLE" preprocessing from DFQ,
+//!   Nagel et al. 2019). DFQ (our impl.) = CLE + bias correction.
+//! * [`ocs`] — outlier channel splitting (Zhao et al. 2019), realized as
+//!   the exactly-equivalent merged-weight transform.
+//! * OMSE (Choukroun et al. 2019) needs no code of its own: it is the
+//!   per-channel `GridMethod::MseW` grid with nearest rounding.
+
+pub mod bias_correction;
+pub mod cle;
+pub mod ocs;
+
+pub use bias_correction::correct_bias;
+pub use cle::equalize_model;
+pub use ocs::ocs_quantize;

@@ -1,0 +1,99 @@
+//! Outlier channel splitting (Zhao et al., 2019), Table 7's "OCS".
+//!
+//! OCS duplicates the most extreme input channels and halves their
+//! weights, shrinking the weight range before the grid is fit. Because the
+//! duplicated input channel carries identical activations, the network
+//! after splitting is *exactly* equivalent to keeping the original
+//! architecture with merged quantized weights 2*Q(w/2) on the split
+//! channels — which is how we realize it (no graph surgery needed).
+
+use crate::quant::{fake_quant_nearest, GridMethod, QuantGrid};
+use crate::tensor::Tensor;
+
+/// Quantize a GEMM weight [rows, cols] with OCS at the given expand ratio
+/// (fraction of input channels split, e.g. 0.05). Returns the effective
+/// quantized weights on the ORIGINAL geometry.
+pub fn ocs_quantize(w: &Tensor, bits: u32, expand: f64) -> Tensor {
+    let (rows, cols) = (w.rows(), w.cols());
+    let n_split = ((cols as f64 * expand).ceil() as usize).min(cols);
+    // rank input columns by max |w|
+    let mut col_max: Vec<(f32, usize)> = (0..cols)
+        .map(|c| {
+            let m = (0..rows).fold(0.0f32, |m, r| m.max(w.at2(r, c).abs()));
+            (m, c)
+        })
+        .collect();
+    col_max.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    let split: Vec<usize> = col_max[..n_split].iter().map(|&(_, c)| c).collect();
+
+    // build the split weight matrix (halved outlier columns, duplicated)
+    let mut wsplit = Tensor::zeros(&[rows, cols + n_split]);
+    for r in 0..rows {
+        for c in 0..cols {
+            let v = w.at2(r, c);
+            let halved = split.contains(&c);
+            wsplit.set2(r, c, if halved { v / 2.0 } else { v });
+        }
+        for (j, &c) in split.iter().enumerate() {
+            wsplit.set2(r, cols + j, w.at2(r, c) / 2.0);
+        }
+    }
+    // fit the grid on the split tensor (this is where OCS wins: range shrinks)
+    let grid = QuantGrid::fit(&wsplit, bits, GridMethod::MseW, false, None);
+    let wq_split = fake_quant_nearest(&wsplit, &grid);
+    // merge back: effective weight on original channel = sum of its halves
+    let mut out = Tensor::zeros(&[rows, cols]);
+    for r in 0..rows {
+        for c in 0..cols {
+            out.set2(r, c, wq_split.at2(r, c));
+        }
+        for (j, &c) in split.iter().enumerate() {
+            let v = out.at2(r, c) + wq_split.at2(r, cols + j);
+            out.set2(r, c, v);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn outlier_weights(seed: u64, rows: usize, cols: usize) -> Tensor {
+        let mut rng = Rng::new(seed);
+        let mut w = Tensor::from_vec(
+            &[rows, cols],
+            (0..rows * cols).map(|_| rng.normal_f32(0.0, 0.1)).collect(),
+        );
+        // one giant outlier column dominating the range
+        for r in 0..rows {
+            w.set2(r, 0, rng.normal_f32(0.0, 2.0));
+        }
+        w
+    }
+
+    #[test]
+    fn beats_plain_nearest_with_outliers() {
+        let w = outlier_weights(1, 8, 40);
+        let grid = QuantGrid::fit(&w, 4, GridMethod::MseW, false, None);
+        let plain = fake_quant_nearest(&w, &grid);
+        let ocs = ocs_quantize(&w, 4, 0.05);
+        assert!(
+            w.mse(&ocs) < w.mse(&plain),
+            "ocs {} vs plain {}",
+            w.mse(&ocs),
+            w.mse(&plain)
+        );
+    }
+
+    #[test]
+    fn zero_expand_equals_plain() {
+        let w = outlier_weights(2, 4, 16);
+        let ocs = ocs_quantize(&w, 4, 0.0);
+        // expand 0 still ceil()s to 0 splits? ceil(0)=0 -> identical to plain
+        let grid = QuantGrid::fit(&w, 4, GridMethod::MseW, false, None);
+        let plain = fake_quant_nearest(&w, &grid);
+        assert_eq!(ocs.data, plain.data);
+    }
+}

@@ -1,0 +1,173 @@
+//! Shared experiment plumbing: context loading, one-shot quantize+eval,
+//! seed sweeps.
+
+use anyhow::Result;
+
+use crate::adaround::AdaRoundConfig;
+use crate::coordinator::{Method, Pipeline, PipelineConfig};
+use crate::data::take;
+use crate::eval::{miou, top1};
+use crate::nn::{ForwardOptions, Model};
+use crate::quant::GridMethod;
+use crate::runtime::Runtime;
+use crate::tensor::{IntTensor, Tensor};
+use crate::util::cli::Args;
+use crate::util::Rng;
+
+/// Everything an experiment needs.
+pub struct Ctx {
+    pub rt: Runtime,
+    pub val_n: usize,
+    pub seeds: usize,
+}
+
+impl Ctx {
+    pub fn load(args: &Args) -> Result<Ctx> {
+        let dir = args.str("artifacts", &crate::artifacts_dir());
+        Ok(Ctx {
+            rt: Runtime::new(&dir)?,
+            val_n: args.usize("val-n", 512)?,
+            seeds: args.usize("seeds", 3)?,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<Model> {
+        self.rt.manifest.load_model(name)
+    }
+
+    /// Calibration set for a model's task (unlabeled use).
+    pub fn calib(&self, model: &Model) -> Result<(Tensor, IntTensor)> {
+        let ds = if model.task == "seg" { "calib_shapes" } else { "calib_gabor" };
+        self.rt.manifest.load_dataset(ds)
+    }
+
+    /// Validation set, truncated to `val_n`.
+    pub fn val(&self, model: &Model) -> Result<(Tensor, IntTensor)> {
+        let ds = if model.task == "seg" { "val_shapes" } else { "val_gabor" };
+        let (x, y) = self.rt.manifest.load_dataset(ds)?;
+        Ok(take(&x, &y, self.val_n))
+    }
+
+    /// Task metric (% top-1 or % mIOU) under the given forward options.
+    pub fn metric(
+        &self,
+        model: &Model,
+        x: &Tensor,
+        y: &IntTensor,
+        opts: &ForwardOptions,
+    ) -> f64 {
+        if model.task == "seg" {
+            miou(model, x, y, opts, 32, 4)
+        } else {
+            top1(model, x, y, opts, 64)
+        }
+    }
+}
+
+/// Build a PipelineConfig from CLI flags + overrides.
+pub fn config_from_args(args: &Args) -> Result<PipelineConfig> {
+    let mut cfg = PipelineConfig {
+        method: Method::parse(&args.str("method", "adaround"))
+            .ok_or_else(|| anyhow::anyhow!("unknown --method"))?,
+        bits: args.usize("bits", 2)? as u32,
+        grid: GridMethod::parse(&args.str("grid", "mse-w"))
+            .ok_or_else(|| anyhow::anyhow!("unknown --grid"))?,
+        per_channel: args.bool("per-channel"),
+        calib_n: args.usize("calib-n", 256)?,
+        ..Default::default()
+    };
+    if let Some(b) = args.opt("act-bits") {
+        cfg.act_bits = Some(b.parse()?);
+    }
+    cfg.adaround = AdaRoundConfig {
+        iters: args.usize("iters", 800)?,
+        lr: args.f32("lr", 1e-2)?,
+        lambda: args.f32("lambda", 0.01)?,
+        ..Default::default()
+    };
+    if args.bool("pre-cle") {
+        cfg.pre_cle = true;
+    }
+    Ok(cfg)
+}
+
+/// Run quantize+evaluate once; returns the task metric (%).
+pub fn run_once(
+    ctx: &Ctx,
+    model: &Model,
+    cfg: &PipelineConfig,
+    calib: &Tensor,
+    val: &(Tensor, IntTensor),
+    seed: u64,
+) -> Result<f64> {
+    let mut rng = Rng::new(seed);
+    let pipe = Pipeline::new(model, cfg.clone(), Some(&ctx.rt));
+    let qm = pipe.quantize(calib, &mut rng)?;
+    // evaluate on the *working* model (CLE-equalized weights for DFQ)
+    Ok(ctx.metric(&pipe.work, &val.0, &val.1, &qm.opts()))
+}
+
+/// Seed sweep; returns per-seed metrics.
+pub fn run_seeds(
+    ctx: &Ctx,
+    model: &Model,
+    cfg: &PipelineConfig,
+    calib: &Tensor,
+    val: &(Tensor, IntTensor),
+    seeds: usize,
+) -> Result<Vec<f64>> {
+    (0..seeds)
+        .map(|s| run_once(ctx, model, cfg, calib, val, 1000 + s as u64))
+        .collect()
+}
+
+/// The "first layer" of the single-layer experiments (Tables 1/2/10,
+/// Figs 1/3). Overridable with --layer: on this testbed the stem
+/// (8x27 = 216 weights) is too small to exhibit the paper's single-layer
+/// collapse, so tables default to the largest early conv instead —
+/// documented in DESIGN.md §1.
+pub fn first_layer(model: &Model) -> Vec<String> {
+    vec![model.quant_layers()[0].id.clone()]
+}
+
+/// Pick the experiment's sensor layer: --layer flag, or the largest conv.
+pub fn sensor_layer(model: &Model, args: &Args) -> Vec<String> {
+    if let Some(id) = args.opt("layer") {
+        return vec![id.to_string()];
+    }
+    let mut best = (0usize, String::new());
+    for nd in model.quant_layers() {
+        let g = nd.geom().unwrap();
+        let n = g.rows * g.cols * g.groups;
+        if n > best.0 {
+            best = (n, nd.id.clone());
+        }
+    }
+    vec![best.1]
+}
+
+pub fn cmd_models(args: &Args) -> Result<()> {
+    let ctx = Ctx::load(args)?;
+    println!("{:<14} {:>8} {:>8} {:>10}", "model", "params", "layers", "fp32");
+    for name in ctx.rt.manifest.model_names() {
+        let m = ctx.model(&name)?;
+        let fp = ctx.rt.manifest.fp32_metric(&name).unwrap_or(f64::NAN);
+        println!(
+            "{:<14} {:>8} {:>8} {:>9.2}%",
+            name,
+            m.num_params(),
+            m.quant_layers().len(),
+            fp
+        );
+    }
+    Ok(())
+}
+
+/// Pretty-print one table row: label + per-column "mean±std" strings.
+pub fn print_row(label: &str, cells: &[String]) {
+    print!("{label:<34}");
+    for c in cells {
+        print!(" {c:>16}");
+    }
+    println!();
+}

@@ -1,0 +1,212 @@
+//! Paper-figure drivers: `adaround fig <n>` prints the data series each
+//! figure plots (CSV-ish, ready for any plotting tool).
+
+use anyhow::{bail, Result};
+
+use crate::adaround::relax;
+use crate::adaround::{LayerProblem, NativeOptimizer, RoundingOptimizer};
+use crate::coordinator::calib::sample_layer;
+use crate::coordinator::Method;
+use crate::nn::ForwardOptions;
+use crate::quant::{fake_quant, rounding_mask, QuantGrid, RoundingMode};
+use crate::qubo::QuboProblem;
+use crate::tensor::Tensor;
+use crate::util::cli::Args;
+use crate::util::stats::{pearson, spearman};
+use crate::util::Rng;
+
+use super::common::{config_from_args, sensor_layer, Ctx};
+
+pub fn cmd_fig(args: &Args) -> Result<()> {
+    let n: usize = args
+        .positional
+        .first()
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(0);
+    let ctx = Ctx::load(args)?;
+    match n {
+        1 => fig1(&ctx, args),
+        2 => fig2(),
+        3 => fig3(&ctx, args),
+        4 => fig4(&ctx, args),
+        _ => bail!("adaround fig <1..4>"),
+    }
+}
+
+/// Fig 1: QUBO cost (eq. 13 with the local Gram H) vs validation accuracy
+/// over stochastic roundings of the first layer.
+fn fig1(ctx: &Ctx, args: &Args) -> Result<()> {
+    let model = ctx.model(&args.str("model", "micro18"))?;
+    let (calib, _) = ctx.calib(&model)?;
+    let val = ctx.val(&model)?;
+    let cfg = config_from_args(args)?;
+    let draws = args.usize("stochastic-n", 100)?;
+
+    let sensor = sensor_layer(&model, args);
+    let node = model.node(&sensor[0]).unwrap().clone();
+    let geom = node.geom().unwrap();
+    let w4 = model.weight(&node.id).clone();
+    let w = Tensor::from_vec(&[w4.shape[0], geom.cols], w4.data.clone());
+    let grid = QuantGrid::fit(&w, cfg.bits, cfg.grid, false, None);
+
+    // local Gram from FP32 calibration activations
+    let mut rng = Rng::new(7);
+    let sample = sample_layer(&model, &node, &calib, &ForwardOptions::default(),
+                              cfg.col_budget, 64, &mut rng);
+    let h = crate::qubo::gram(&sample.x_fp[0]);
+    let probs: Vec<QuboProblem> = (0..w.rows())
+        .map(|r| QuboProblem::from_row(w.row(r), &grid, r, &h))
+        .collect();
+
+    println!("== Fig 1: QUBO cost (eq. 13) vs accuracy, layer {}, {} draws ==", sensor[0], draws);
+    println!("cost,accuracy");
+    let mut costs = Vec::new();
+    let mut accs = Vec::new();
+    for d in 0..draws {
+        let mut rng = Rng::new(9000 + d as u64);
+        let mask = rounding_mask(&w, &grid, RoundingMode::Stochastic, &mut rng);
+        let cost: f64 = probs
+            .iter()
+            .enumerate()
+            .map(|(r, p)| {
+                let row: Vec<u8> = mask.row(r).iter().map(|&v| v as u8).collect();
+                p.eval(&row)
+            })
+            .sum();
+        let wq = fake_quant(&w, &mask, &grid);
+        let mut ov = std::collections::BTreeMap::new();
+        ov.insert(node.id.clone(), Tensor::from_vec(&w4.shape, wq.data));
+        let opts = ForwardOptions {
+            weight_overrides: Some(&ov),
+            bias_overrides: None,
+            act_quant: None,
+        };
+        let acc = ctx.metric(&model, &val.0, &val.1, &opts);
+        println!("{cost:.6e},{acc:.2}");
+        costs.push(cost);
+        accs.push(acc);
+    }
+    println!("# pearson  r = {:+.3}", pearson(&costs, &accs));
+    println!("# spearman r = {:+.3}", spearman(&costs, &accs));
+    println!("# (paper shows a clear negative correlation: lower cost -> higher accuracy)");
+    Ok(())
+}
+
+/// Fig 2: the regularizer 1-|2h-1|^beta for annealed beta values.
+pub fn fig2() -> Result<()> {
+    let betas = [2.0f32, 4.0, 8.0, 16.0];
+    println!("== Fig 2: effect of annealing beta on f_reg ==");
+    print!("h");
+    for b in betas {
+        print!(",beta={b}");
+    }
+    println!();
+    for i in 0..=40 {
+        let h = i as f32 / 40.0;
+        print!("{h:.3}");
+        for b in betas {
+            print!(",{:.4}", relax::f_reg_elem(h, b));
+        }
+        println!();
+    }
+    Ok(())
+}
+
+/// Fig 3: h(V) before (= frac(w/s)) vs after optimization.
+fn fig3(ctx: &Ctx, args: &Args) -> Result<()> {
+    let model = ctx.model(&args.str("model", "micro18"))?;
+    let (calib, _) = ctx.calib(&model)?;
+    let cfg = config_from_args(args)?;
+    // a mid-network layer gives the richest picture
+    let layers = model.quant_layers();
+    let node = layers[layers.len() / 2].clone();
+    let geom = node.geom().unwrap();
+    let w4 = model.weight(&node.id).clone();
+    let w = Tensor::from_vec(&[w4.shape[0], geom.cols], w4.data.clone());
+    let grid = QuantGrid::fit(&w, cfg.bits, cfg.grid, false, None);
+
+    let mut rng = Rng::new(11);
+    let sample = sample_layer(&model, &node, &calib, &ForwardOptions::default(),
+                              cfg.col_budget, 64, &mut rng);
+    let bias = model.bias(&node.id).data.clone();
+    let prob = LayerProblem::new(w.clone(), &grid, 0, bias, false);
+    let x = &sample.x_fp[0];
+    let mut t = crate::tensor::matmul(&w, x);
+    let nc = t.cols();
+    for r in 0..w.rows() {
+        let b = prob.bias[r];
+        for v in &mut t.data[r * nc..(r + 1) * nc] {
+            *v += b;
+        }
+    }
+    let mut arcfg = cfg.adaround;
+    arcfg.iters = args.usize("iters", 800)?;
+    let res = NativeOptimizer.optimize(&prob, x, &t, &arcfg, &mut rng)?;
+
+    println!("== Fig 3: h(V) before vs after optimization, layer {} ==", node.id);
+    println!("h_before,h_after");
+    let v0 = prob.init_v();
+    let mut quad = [0usize; 4]; // [stay-down, stay-up, flip-up, flip-down]
+    for i in 0..v0.numel() {
+        let hb = relax::rect_sigmoid(v0.data[i]);
+        let ha = relax::rect_sigmoid(res.v.data[i]);
+        if i % ((v0.numel() / 300).max(1)) == 0 {
+            println!("{hb:.4},{ha:.4}");
+        }
+        match (hb >= 0.5, ha >= 0.5) {
+            (false, false) => quad[0] += 1,
+            (true, true) => quad[1] += 1,
+            (false, true) => quad[2] += 1,
+            (true, false) => quad[3] += 1,
+        }
+    }
+    let n = v0.numel();
+    println!("# quadrants: stay-down {} stay-up {} FLIP-up {} FLIP-down {} (of {n})",
+             quad[0], quad[1], quad[2], quad[3]);
+    let binary = res
+        .v
+        .data
+        .iter()
+        .filter(|&&v| {
+            let h = relax::rect_sigmoid(v);
+            h < 0.05 || h > 0.95
+        })
+        .count();
+    println!("# converged to binary: {:.1}%", 100.0 * binary as f64 / n as f64);
+    Ok(())
+}
+
+/// Fig 4: #calibration images x dataset domain -> AdaRound accuracy.
+fn fig4(ctx: &Ctx, args: &Args) -> Result<()> {
+    let model = ctx.model(&args.str("model", "micro18"))?;
+    let val = ctx.val(&model)?;
+    let seeds = ctx.seeds.min(2);
+    let counts = [32usize, 64, 128, 256, 512, 1024];
+    let sets = [("gabor (training domain)", "calib_gabor"),
+                ("checker (shifted domain)", "calib_checker")];
+    println!("== Fig 4: calibration-data robustness ({}) ==", model.name);
+    println!("{:<26} {}", "images", "accuracy per dataset");
+    print!("{:<26}", "n");
+    for (label, _) in sets {
+        print!(" {label:>26}");
+    }
+    println!();
+    for &n in &counts {
+        print!("{n:<26}");
+        for (_, ds) in sets {
+            let (calib, _) = ctx.rt.manifest.load_dataset(ds)?;
+            let mut cfg = config_from_args(args)?;
+            cfg.method = Method::AdaRound;
+            cfg.calib_n = n;
+            let accs = super::common::run_seeds(ctx, &model, &cfg, &calib, &val, seeds)?;
+            print!(" {:>26}", crate::util::stats::fmt_mean_std(&accs));
+        }
+        println!();
+    }
+    let fp = ctx.metric(&model, &val.0, &val.1, &ForwardOptions::default());
+    println!("# fp32 reference: {fp:.2}%");
+    Ok(())
+}
+
+

@@ -1,0 +1,64 @@
+//! Command-line interface: `adaround <subcommand> [flags]`.
+//!
+//! Subcommands:
+//!   models                 list models + FP32 reference metrics
+//!   eval                   evaluate FP32 or quantized model
+//!   quantize               run the PTQ pipeline once and report accuracy
+//!   table <1|2|...|10>     regenerate a paper table
+//!   fig <1|2|3|4>          regenerate a paper figure's data
+//!   bench-engine           native vs PJRT inference engine comparison
+
+pub mod common;
+pub mod figs;
+pub mod quantize;
+pub mod tables;
+
+use anyhow::{bail, Result};
+
+use crate::util::cli::Args;
+
+pub const USAGE: &str = "\
+adaround — AdaRound post-training quantization framework (ICML 2020 repro)
+
+USAGE:
+  adaround models                               list models
+  adaround eval     --model M [--bits B ...]    evaluate
+  adaround quantize --model M --method X        quantize + evaluate
+  adaround table N  [--seeds S] [--val-n V]     regenerate paper Table N
+  adaround fig N                                regenerate paper Figure N data
+  adaround sweep    --model M --bits-list 8,4,2  bits x method accuracy grid
+  adaround bench-engine --model micro18         native vs PJRT engine
+
+COMMON FLAGS:
+  --artifacts DIR   artifact directory (default: artifacts)
+  --model NAME      micro18|micro50|microinc|micromobile|segnet
+  --method M        nearest|floor|ceil|stochastic|adaround|adaround-pjrt|
+                    ste|hopfield|sigmoid-freg|qubo-cem|qubo-tabu|biascorr|
+                    dfq|ocs|omse
+  --bits B          weight bits (default 4)
+  --act-bits B      quantize activations to B bits
+  --grid G          minmax|mse-w|mse-out (default mse-w)
+  --per-channel     per-channel weight scales
+  --calib-n N       calibration images (default 256)
+  --iters N         AdaRound iterations (default 800)
+  --seeds S         seeds per table cell
+  --val-n V         validation images per evaluation (default 512)
+  --first-layer     quantize only the first layer
+";
+
+pub fn run(args: Args) -> Result<()> {
+    match args.subcommand.as_str() {
+        "models" => common::cmd_models(&args),
+        "eval" => quantize::cmd_eval(&args),
+        "quantize" => quantize::cmd_quantize(&args),
+        "table" => tables::cmd_table(&args),
+        "fig" => figs::cmd_fig(&args),
+        "bench-engine" => quantize::cmd_bench_engine(&args),
+        "sweep" => quantize::cmd_sweep(&args),
+        "" | "help" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown subcommand '{other}'\n{USAGE}"),
+    }
+}

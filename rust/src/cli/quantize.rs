@@ -1,0 +1,265 @@
+//! `quantize`, `eval` and `bench-engine` subcommands.
+
+use anyhow::Result;
+
+use crate::coordinator::Pipeline;
+use crate::nn::ForwardOptions;
+use crate::tensor::{im2col, Conv2dParams, Tensor};
+use crate::util::cli::Args;
+use crate::util::{Rng, Stopwatch};
+
+use super::common::{config_from_args, first_layer, Ctx};
+
+pub fn cmd_eval(args: &Args) -> Result<()> {
+    let ctx = Ctx::load(args)?;
+    let name = args.str("model", "micro18");
+    let model = ctx.model(&name)?;
+    let val = ctx.val(&model)?;
+    // --quantized <bundle.qtz>: evaluate a previously exported model
+    if let Some(path) = args.opt("quantized") {
+        let qm = crate::coordinator::load_quantized(path)?;
+        let m = ctx.metric(&model, &val.0, &val.1, &qm.opts());
+        println!("{name}: quantized bundle {path} -> {m:.2}%");
+        return Ok(());
+    }
+    let sw = Stopwatch::start();
+    let m = ctx.metric(&model, &val.0, &val.1, &ForwardOptions::default());
+    println!(
+        "{name}: fp32 {} = {m:.2}%  ({} images, {:.1}s; trained ref {:.2}%)",
+        if model.task == "seg" { "mIOU" } else { "top-1" },
+        val.0.shape[0],
+        sw.secs(),
+        ctx.rt.manifest.fp32_metric(&name).unwrap_or(f64::NAN),
+    );
+    Ok(())
+}
+
+pub fn cmd_quantize(args: &Args) -> Result<()> {
+    let ctx = Ctx::load(args)?;
+    let name = args.str("model", "micro18");
+    let model = ctx.model(&name)?;
+    let mut cfg = config_from_args(args)?;
+    if args.bool("first-layer") {
+        cfg.only_layers = Some(first_layer(&model));
+    }
+    if let Some(id) = args.opt("layer") {
+        cfg.only_layers = Some(vec![id.to_string()]);
+    }
+    let (calib, _) = ctx.calib(&model)?;
+    let val = ctx.val(&model)?;
+    let mut rng = Rng::new(args.usize("seed", 1000)? as u64);
+
+    let sw = Stopwatch::start();
+    let pipe = Pipeline::new(&model, cfg.clone(), Some(&ctx.rt));
+    let qm = pipe.quantize(&calib, &mut rng)?;
+    let q_secs = sw.secs();
+
+    let fp = ctx.metric(&pipe.work, &val.0, &val.1, &ForwardOptions::default());
+    let acc = ctx.metric(&pipe.work, &val.0, &val.1, &qm.opts());
+
+    println!("== {} | method={} bits={} act={:?} grid={:?} pc={} asym={} relu={}",
+             name, cfg.method.name(), cfg.bits, cfg.act_bits, cfg.grid,
+             cfg.per_channel, cfg.asymmetric, cfg.use_relu);
+    println!("{:<6} {:>5}x{:<5} {:>3} {:>12} {:>12} {:>8} {:>7}",
+             "layer", "rows", "cols", "g", "mse(nearest)", "mse(after)", "flip%", "secs");
+    for s in &qm.stats {
+        println!(
+            "{:<6} {:>5}x{:<5} {:>3} {:>12.3e} {:>12.3e} {:>7.1}% {:>6.1}s",
+            s.id, s.rows, s.cols, s.groups, s.mse_before, s.mse_after,
+            100.0 * s.flipped_frac, s.secs
+        );
+    }
+    println!(
+        "fp32 {fp:.2}%  ->  quantized {acc:.2}%   (quantize {q_secs:.1}s, \
+         {} executables compiled)",
+        ctx.rt.compiled_count()
+    );
+    if let Some(path) = args.opt("save") {
+        crate::coordinator::save_quantized(path, &qm)?;
+        println!("quantized model saved to {path}");
+    }
+    Ok(())
+}
+
+/// `sweep`: bits x method accuracy grid for one model.
+pub fn cmd_sweep(args: &Args) -> Result<()> {
+    let ctx = Ctx::load(args)?;
+    let name = args.str("model", "micro18");
+    let model = ctx.model(&name)?;
+    let (calib, _) = ctx.calib(&model)?;
+    let val = ctx.val(&model)?;
+    let bits_list: Vec<u32> = args
+        .str("bits-list", "8,4,3,2")
+        .split(',')
+        .map(|b| b.parse().unwrap_or(4))
+        .collect();
+    let methods: Vec<&str> = args
+        .flags
+        .get("methods")
+        .map(|s| s.as_str())
+        .unwrap_or("nearest,biascorr,adaround")
+        .split(',')
+        .collect::<Vec<_>>();
+    let fp = ctx.metric(&model, &val.0, &val.1, &ForwardOptions::default());
+    println!("== sweep {name} (fp32 {fp:.2}%) ==");
+    print!("{:>6}", "bits");
+    for m in &methods {
+        print!(" {m:>12}");
+    }
+    println!();
+    for &bits in &bits_list {
+        print!("{bits:>6}");
+        for m in &methods {
+            let mut cfg = config_from_args(args)?;
+            cfg.method = crate::coordinator::Method::parse(m)
+                .ok_or_else(|| anyhow::anyhow!("bad method {m}"))?;
+            cfg.bits = bits;
+            let pipe = Pipeline::new(&model, cfg, Some(&ctx.rt));
+            let qm = pipe.quantize(&calib, &mut Rng::new(77))?;
+            let acc = ctx.metric(&pipe.work, &val.0, &val.1, &qm.opts());
+            print!(" {acc:>11.2}%");
+        }
+        println!();
+    }
+    Ok(())
+}
+
+/// Native vs PJRT inference-engine comparison on micro18 (the qlinear
+/// artifacts exist for this model): same quantized weights, same numbers,
+/// different engines — reported with throughput.
+pub fn cmd_bench_engine(args: &Args) -> Result<()> {
+    let ctx = Ctx::load(args)?;
+    let name = args.str("model", "micro18");
+    let model = ctx.model(&name)?;
+    let (calib, _) = ctx.calib(&model)?;
+    let imgs = ctx.rt.manifest.json.usize_of("qlinear_imgs").unwrap_or(32);
+    let per: usize = calib.shape[1..].iter().product();
+    let x = Tensor::from_vec(
+        &[imgs, calib.shape[1], calib.shape[2], calib.shape[3]],
+        calib.data[..imgs * per].to_vec(),
+    );
+
+    // --- native engine ---
+    let sw = Stopwatch::start();
+    let reps = args.usize("reps", 5)?;
+    let mut y_native = Tensor::zeros(&[1]);
+    for _ in 0..reps {
+        y_native = model.forward(&x, &ForwardOptions::default());
+    }
+    let native_s = sw.secs() / reps as f64;
+
+    // --- PJRT engine: run each conv/dense as a qlinear artifact with the
+    //     nearest-rounding mask (R from frac >= 0.5) ---
+    let sw = Stopwatch::start();
+    let mut y_pjrt = Tensor::zeros(&[1]);
+    for _ in 0..reps {
+        y_pjrt = forward_pjrt(&ctx, &model, &x)?;
+    }
+    let pjrt_s = sw.secs() / reps as f64;
+
+    let diff = y_native
+        .data
+        .iter()
+        .zip(&y_pjrt.data)
+        .map(|(a, b)| (a - b).abs() as f64)
+        .fold(0.0, f64::max);
+    println!("engine comparison on {name} ({imgs} images, {reps} reps):");
+    println!("  native {:.1} ms/batch   {:.1} img/s", native_s * 1e3, imgs as f64 / native_s);
+    println!("  pjrt   {:.1} ms/batch   {:.1} img/s", pjrt_s * 1e3, imgs as f64 / pjrt_s);
+    println!("  max |Δlogit| = {diff:.2e}  (note: pjrt path uses FP32-equivalent");
+    println!("  R=nearest with a huge scale, so outputs must match closely)");
+    Ok(())
+}
+
+/// Full-model forward where every conv/dense runs through its qlinear HLO
+/// executable (im2col on the rust side). Uses an effectively-FP32 grid so
+/// the comparison isolates engine overhead, not quantization error.
+fn forward_pjrt(ctx: &Ctx, model: &crate::nn::Model, x: &Tensor) -> Result<Tensor> {
+    use crate::nn::Op;
+    use std::collections::BTreeMap;
+    let mut vals: BTreeMap<&str, Tensor> = BTreeMap::new();
+    for nd in &model.nodes {
+        let out = match &nd.op {
+            Op::Input => x.clone(),
+            Op::Conv { k, stride, pad, groups, relu } => {
+                let inp = &vals[nd.inputs[0].as_str()];
+                let geom = nd.geom().unwrap();
+                let p = Conv2dParams { k: *k, stride: *stride, pad: *pad, groups: *groups };
+                let w4 = model.weight(&nd.id);
+                let bias = model.bias(&nd.id);
+                let (n_img, h, w_dim) = (inp.shape[0], inp.shape[2], inp.shape[3]);
+                let ho = crate::tensor::conv::out_size(h, *k, *stride, *pad);
+                let wo = crate::tensor::conv::out_size(w_dim, *k, *stride, *pad);
+                let npos = n_img * ho * wo;
+                let exec = ctx.rt.qlinear_exec(geom.rows, geom.cols, npos)?;
+                let og = geom.rows;
+                let mut out = Tensor::zeros(&[n_img, nd.cout, ho, wo]);
+                for g in 0..*groups {
+                    let cols = im2col(inp, g, p);
+                    let wg = Tensor::from_vec(
+                        &[og, geom.cols],
+                        w4.data[g * og * geom.cols..(g + 1) * og * geom.cols].to_vec(),
+                    );
+                    // FP32-equivalent quantization: one giant scale, R=nearest
+                    let s = Tensor::full(&[og, 1], 1e-6);
+                    let r = wg.map(|v| {
+                        let z = v / 1e-6;
+                        (z - z.floor() >= 0.5) as u8 as f32
+                    });
+                    let b = Tensor::from_vec(&[og, 1],
+                        bias.data[g * og..(g + 1) * og].to_vec());
+                    let y = exec.run(&wg, &r, &s, &b, &cols, -8.4e6, 8.4e6)?;
+                    // scatter [og, npos] -> NCHW
+                    let hw = ho * wo;
+                    for oi in 0..og {
+                        let oc = g * og + oi;
+                        for ni in 0..n_img {
+                            let dst = &mut out.data
+                                [((ni * nd.cout + oc) * hw)..((ni * nd.cout + oc + 1) * hw)];
+                            dst.copy_from_slice(&y.data[oi * npos + ni * hw..oi * npos + (ni + 1) * hw]);
+                        }
+                    }
+                }
+                if *relu {
+                    out.relu_inplace();
+                }
+                out
+            }
+            Op::Dense { relu } => {
+                let inp = &vals[nd.inputs[0].as_str()];
+                let w = model.weight(&nd.id);
+                let b = model.bias(&nd.id);
+                let mut y = crate::tensor::matmul(inp, &w.transpose2());
+                for r in 0..y.rows() {
+                    for (v, bb) in y.row_mut(r).iter_mut().zip(&b.data) {
+                        *v += bb;
+                    }
+                }
+                if *relu {
+                    y.relu_inplace();
+                }
+                y
+            }
+            Op::Add { relu } => {
+                let mut y = vals[nd.inputs[0].as_str()].add(&vals[nd.inputs[1].as_str()]);
+                if *relu {
+                    y.relu_inplace();
+                }
+                y
+            }
+            Op::Relu => vals[nd.inputs[0].as_str()].relu(),
+            Op::AvgPool { k, stride } => {
+                crate::tensor::pool::avgpool2d(&vals[nd.inputs[0].as_str()], *k, *stride)
+            }
+            Op::GPool => crate::tensor::pool::global_avgpool(&vals[nd.inputs[0].as_str()]),
+            Op::Upsample => crate::tensor::pool::upsample2x(&vals[nd.inputs[0].as_str()]),
+            Op::Concat => {
+                let ins: Vec<&Tensor> = nd.inputs.iter().map(|i| &vals[i.as_str()]).collect();
+                crate::tensor::pool::concat_channels(&ins)
+            }
+        };
+        vals.insert(nd.id.as_str(), out);
+    }
+    let last = model.nodes.last().unwrap().id.as_str();
+    Ok(vals.remove(last).unwrap())
+}

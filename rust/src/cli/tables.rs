@@ -1,0 +1,448 @@
+//! Paper-table drivers: `adaround table <n>` regenerates the rows of the
+//! corresponding table in the paper on this testbed's model zoo
+//! (substitutions documented in DESIGN.md §1; expected *shapes* in §4).
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::{Method, PipelineConfig};
+use crate::data::take;
+use crate::nn::ForwardOptions;
+use crate::quant::GridMethod;
+use crate::tensor::Tensor;
+use crate::util::cli::Args;
+use crate::util::stats::fmt_mean_std;
+use crate::util::Rng;
+
+use super::common::{config_from_args, print_row, run_seeds, sensor_layer, Ctx};
+
+pub fn cmd_table(args: &Args) -> Result<()> {
+    let n: usize = args
+        .positional
+        .first()
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(0);
+    let ctx = Ctx::load(args)?;
+    match n {
+        1 => table1(&ctx, args),
+        2 => table2(&ctx, args),
+        3 => table3(&ctx, args),
+        4 => table4(&ctx, args),
+        5 => table5(&ctx, args),
+        6 => table6(&ctx, args),
+        7 => table7(&ctx, args),
+        8 => table8(&ctx, args),
+        9 => table9(&ctx, args),
+        10 => table10(&ctx, args),
+        _ => bail!("adaround table <1..10>"),
+    }
+}
+
+fn base_cfg(args: &Args) -> Result<PipelineConfig> {
+    config_from_args(args)
+}
+
+/// Table 1: nearest / ceil / floor / stochastic x N, first layer @ 4 bits.
+fn table1(ctx: &Ctx, args: &Args) -> Result<()> {
+    let model = ctx.model(&args.str("model", "micro18"))?;
+    let (calib, _) = ctx.calib(&model)?;
+    let val = ctx.val(&model)?;
+    let n_stoch = args.usize("stochastic-n", 100)?;
+    let mut cfg = base_cfg(args)?;
+    let sensor = sensor_layer(&model, args);
+    cfg.only_layers = Some(sensor.clone());
+
+    println!("== Table 1: rounding schemes, layer {} of {} @ {}-bit ==",
+             sensor[0], model.name, cfg.bits);
+    let fp = ctx.metric(&model, &val.0, &val.1, &ForwardOptions::default());
+    println!("fp32 reference: {fp:.2}%");
+    for method in [Method::Nearest, Method::Ceil, Method::Floor] {
+        cfg.method = method;
+        let accs = run_seeds(ctx, &model, &cfg, &calib, &val, 1)?;
+        print_row(method.name(), &[format!("{:.2}", accs[0])]);
+    }
+    cfg.method = Method::Stochastic;
+    let mut accs = Vec::new();
+    for s in 0..n_stoch {
+        let acc = super::common::run_once(ctx, &model, &cfg, &calib, &val, 5000 + s as u64)?;
+        accs.push(acc);
+        if (s + 1) % 20 == 0 {
+            crate::info!("stochastic {}/{n_stoch}", s + 1);
+        }
+    }
+    let best = accs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    print_row(&format!("stochastic ({n_stoch} draws)"), &[fmt_mean_std(&accs)]);
+    print_row("stochastic (best)", &[format!("{best:.2}")]);
+    Ok(())
+}
+
+/// Table 2: task-loss QUBO vs local-MSE QUBO vs continuous relaxation.
+fn table2(ctx: &Ctx, args: &Args) -> Result<()> {
+    let model = ctx.model(&args.str("model", "micro18"))?;
+    let (calib, calib_y) = ctx.calib(&model)?;
+    let val = ctx.val(&model)?;
+    let seeds = ctx.seeds.min(3);
+    let mut cfg = base_cfg(args)?;
+    println!("== Table 2: from task loss to local loss ({}) ==", model.name);
+    println!("{:<34} {:>16} {:>16}", "rounding", "first layer", "all layers");
+
+    // nearest
+    let sensor = sensor_layer(&model, args);
+    cfg.method = Method::Nearest;
+    cfg.only_layers = Some(sensor.clone());
+    let f = run_seeds(ctx, &model, &cfg, &calib, &val, 1)?;
+    cfg.only_layers = None;
+    let a = run_seeds(ctx, &model, &cfg, &calib, &val, 1)?;
+    print_row("nearest", &[fmt_mean_std(&f), fmt_mean_std(&a)]);
+
+    // task-loss QUBO: CEM directly on the task loss (objective (11); the
+    // H^(w) Taylor proxy of (13) approximates exactly this — see DESIGN.md)
+    let accs: Vec<f64> = (0..seeds)
+        .map(|s| task_loss_cem(ctx, &model, &sensor[0], &calib, &calib_y, &val, &cfg,
+                               2000 + s as u64))
+        .collect::<Result<_>>()?;
+    print_row("H task loss (CEM, cf. eq.13)", &[fmt_mean_std(&accs), "N/A".into()]);
+
+    // local MSE QUBO (CEM)
+    cfg.method = Method::LocalQuboCem;
+    cfg.only_layers = Some(sensor.clone());
+    let f = run_seeds(ctx, &model, &cfg, &calib, &val, seeds)?;
+    cfg.only_layers = None;
+    let a = run_seeds(ctx, &model, &cfg, &calib, &val, seeds)?;
+    print_row("local MSE loss (CEM, cf. eq.20)", &[fmt_mean_std(&f), fmt_mean_std(&a)]);
+
+    // continuous relaxation (AdaRound objective, symmetric variant of eq.21)
+    cfg.method = Method::AdaRound;
+    cfg.asymmetric = false;
+    cfg.use_relu = false;
+    cfg.only_layers = Some(sensor.clone());
+    let f = run_seeds(ctx, &model, &cfg, &calib, &val, seeds)?;
+    cfg.only_layers = None;
+    let a = run_seeds(ctx, &model, &cfg, &calib, &val, seeds)?;
+    print_row("cont. relaxation (cf. eq.21)", &[fmt_mean_std(&f), fmt_mean_std(&a)]);
+    Ok(())
+}
+
+/// CEM over first-layer roundings scored by the true task loss (CE) on a
+/// labeled calibration batch.
+fn task_loss_cem(
+    ctx: &Ctx,
+    model: &crate::nn::Model,
+    layer_id: &str,
+    calib: &Tensor,
+    calib_y: &crate::tensor::IntTensor,
+    val: &(Tensor, crate::tensor::IntTensor),
+    cfg: &PipelineConfig,
+    seed: u64,
+) -> Result<f64> {
+    use crate::quant::{fake_quant, QuantGrid};
+    let node = model.node(layer_id).unwrap().clone();
+    let geom = node.geom().unwrap();
+    let w4 = model.weight(&node.id).clone();
+    let w = Tensor::from_vec(&[w4.shape[0], geom.cols], w4.data.clone());
+    let grid = QuantGrid::fit(&w, cfg.bits, GridMethod::MseW, false, None);
+    let (bx, by) = take(calib, calib_y, 48);
+    let mut rng = Rng::new(seed);
+
+    let ce = |mask: &Tensor| -> f64 {
+        let wq = fake_quant(&w, mask, &grid);
+        let wq4 = Tensor::from_vec(&w4.shape, wq.data.clone());
+        let mut ov = std::collections::BTreeMap::new();
+        ov.insert(node.id.clone(), wq4);
+        let opts = ForwardOptions {
+            weight_overrides: Some(&ov),
+            bias_overrides: None,
+            act_quant: None,
+        };
+        let logits = model.forward(&bx, &opts);
+        // mean cross-entropy
+        let mut loss = 0.0f64;
+        for r in 0..logits.rows() {
+            let row = logits.row(r);
+            let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let z: f32 = row.iter().map(|v| (v - mx).exp()).sum();
+            let y = by.data[r] as usize;
+            loss -= ((row[y] - mx) - z.ln()) as f64;
+        }
+        loss / logits.rows() as f64
+    };
+
+    // CEM over the flattened mask, initialized at stochastic-rounding probs
+    let numel = w.numel();
+    let mut p: Vec<f64> = (0..numel)
+        .map(|i| {
+            let r = i / geom.cols;
+            let s = grid.scale_for_row(r);
+            let frac = (w.data[i] / s - (w.data[i] / s).floor()) as f64;
+            frac.clamp(0.05, 0.95)
+        })
+        .collect();
+    let mut best_mask = Tensor::from_vec(
+        &w.shape,
+        p.iter().map(|&pi| (pi >= 0.5) as u8 as f32).collect(),
+    );
+    let mut best_cost = ce(&best_mask);
+    let (pop, iters, elite) = (16, 22, 4);
+    for _ in 0..iters {
+        let mut cand: Vec<(f64, Vec<f32>)> = (0..pop)
+            .map(|_| {
+                let m: Vec<f32> = p.iter().map(|&pi| rng.bernoulli(pi) as u8 as f32).collect();
+                let cost = ce(&Tensor::from_vec(&w.shape, m.clone()));
+                (cost, m)
+            })
+            .collect();
+        cand.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        if cand[0].0 < best_cost {
+            best_cost = cand[0].0;
+            best_mask = Tensor::from_vec(&w.shape, cand[0].1.clone());
+        }
+        for i in 0..numel {
+            let mean = cand[..elite].iter().map(|(_, m)| m[i] as f64).sum::<f64>()
+                / elite as f64;
+            p[i] = (0.4 * p[i] + 0.6 * mean).clamp(0.02, 0.98);
+        }
+    }
+    // evaluate the best mask on the validation set
+    use crate::quant::fake_quant as fq;
+    let wq = fq(&w, &best_mask, &grid);
+    let wq4 = Tensor::from_vec(&w4.shape, wq.data);
+    let mut ov = std::collections::BTreeMap::new();
+    ov.insert(node.id.clone(), wq4);
+    let opts = ForwardOptions { weight_overrides: Some(&ov), bias_overrides: None, act_quant: None };
+    Ok(ctx.metric(model, &val.0, &val.1, &opts))
+}
+
+/// Table 3: sigmoid+T-annealing vs sigmoid+f_reg vs rect-sigmoid+f_reg.
+fn table3(ctx: &Ctx, args: &Args) -> Result<()> {
+    let model = ctx.model(&args.str("model", "micro18"))?;
+    let (calib, _) = ctx.calib(&model)?;
+    let val = ctx.val(&model)?;
+    let seeds = ctx.seeds;
+    let mut cfg = base_cfg(args)?;
+    cfg.asymmetric = false;
+    cfg.use_relu = false; // Table 3 optimizes (21)
+    println!("== Table 3: design choices for optimizing eq. 21 ({}) ==", model.name);
+    println!("{:<34} {:>16} {:>16}", "variant", "first layer", "all layers");
+    for (label, method) in [
+        ("sigmoid + T annealing", Method::Hopfield),
+        ("sigmoid + f_reg", Method::SigmoidFreg),
+        ("rect. sigmoid + f_reg", Method::AdaRound),
+    ] {
+        cfg.method = method;
+        cfg.only_layers = Some(sensor_layer(&model, args));
+        let f = run_seeds(ctx, &model, &cfg, &calib, &val, seeds)?;
+        cfg.only_layers = None;
+        let a = run_seeds(ctx, &model, &cfg, &calib, &val, seeds)?;
+        print_row(label, &[fmt_mean_std(&f), fmt_mean_std(&a)]);
+    }
+    Ok(())
+}
+
+/// Table 4: layer-wise vs asymmetric vs asymmetric + ReLU.
+fn table4(ctx: &Ctx, args: &Args) -> Result<()> {
+    let model = ctx.model(&args.str("model", "micro18"))?;
+    let (calib, _) = ctx.calib(&model)?;
+    let val = ctx.val(&model)?;
+    let seeds = ctx.seeds;
+    let mut cfg = base_cfg(args)?;
+    cfg.method = Method::AdaRound;
+    println!("== Table 4: reconstruction objective ablation ({}) ==", model.name);
+    for (label, asym, relu) in [
+        ("layer-wise (eq. 21)", false, false),
+        ("asymmetric", true, false),
+        ("asymmetric + ReLU (eq. 25)", true, true),
+    ] {
+        cfg.asymmetric = asym;
+        cfg.use_relu = relu;
+        let a = run_seeds(ctx, &model, &cfg, &calib, &val, seeds)?;
+        print_row(label, &[fmt_mean_std(&a)]);
+    }
+    Ok(())
+}
+
+/// Table 5: nearest vs STE vs AdaRound.
+fn table5(ctx: &Ctx, args: &Args) -> Result<()> {
+    let model = ctx.model(&args.str("model", "micro18"))?;
+    let (calib, _) = ctx.calib(&model)?;
+    let val = ctx.val(&model)?;
+    let seeds = ctx.seeds;
+    let mut cfg = base_cfg(args)?;
+    println!("== Table 5: STE vs AdaRound ({}) ==", model.name);
+    for (label, method) in [
+        ("nearest", Method::Nearest),
+        ("STE", Method::Ste),
+        ("AdaRound", Method::AdaRound),
+    ] {
+        cfg.method = method;
+        let s = if method == Method::Nearest { 1 } else { seeds };
+        let a = run_seeds(ctx, &model, &cfg, &calib, &val, s)?;
+        print_row(label, &[fmt_mean_std(&a)]);
+    }
+    Ok(())
+}
+
+/// Table 6: quantization-grid choice x {nearest, AdaRound}.
+fn table6(ctx: &Ctx, args: &Args) -> Result<()> {
+    let model = ctx.model(&args.str("model", "micro18"))?;
+    let (calib, _) = ctx.calib(&model)?;
+    let val = ctx.val(&model)?;
+    let seeds = ctx.seeds;
+    let mut cfg = base_cfg(args)?;
+    println!("== Table 6: influence of the quantization grid ({}) ==", model.name);
+    println!("{:<34} {:>16} {:>16}", "grid", "nearest", "AdaRound");
+    for (label, grid) in [
+        ("min-max", GridMethod::MinMax),
+        ("||W - W^||_F^2 (mse-w)", GridMethod::MseW),
+        ("||Wx - W^x^||_F^2 (mse-out)", GridMethod::MseOut),
+    ] {
+        cfg.grid = grid;
+        cfg.method = Method::Nearest;
+        let near = run_seeds(ctx, &model, &cfg, &calib, &val, 1)?;
+        cfg.method = Method::AdaRound;
+        let ada = run_seeds(ctx, &model, &cfg, &calib, &val, seeds)?;
+        print_row(label, &[fmt_mean_std(&near), fmt_mean_std(&ada)]);
+    }
+    Ok(())
+}
+
+/// Table 7: literature comparison across the model zoo.
+fn table7(ctx: &Ctx, args: &Args) -> Result<()> {
+    let models_arg = args.str("models", "micro18,micro50,microinc,micromobile");
+    let models: Vec<&str> = models_arg.split(',').collect();
+    let seeds = ctx.seeds.min(2);
+    println!("== Table 7: post-training quantization comparison (top-1 %) ==");
+    print!("{:<30} {:>6}", "method", "W/A");
+    for m in &models {
+        print!(" {m:>16}");
+    }
+    println!();
+    // FP32 reference
+    print!("{:<30} {:>6}", "full precision", "32/32");
+    for m in &models {
+        let model = ctx.model(m)?;
+        let val = ctx.val(&model)?;
+        let fp = ctx.metric(&model, &val.0, &val.1, &ForwardOptions::default());
+        print!(" {fp:>16.2}");
+    }
+    println!();
+
+    let rows: Vec<(&str, Method, &str, Option<u32>)> = vec![
+        ("nearest", Method::Nearest, "2/32", None),
+        ("OMSE (per-channel)", Method::Omse, "2*/32", None),
+        ("OCS", Method::Ocs, "2/32", None),
+        ("AdaRound", Method::AdaRound, "2/32", None),
+        ("DFQ (our impl.)", Method::Dfq, "2/8", Some(8)),
+        ("bias corr", Method::BiasCorr, "2/8", Some(8)),
+        ("AdaRound w/ act quant", Method::AdaRound, "2/8", Some(8)),
+    ];
+    for (label, method, wa, act) in rows {
+        print!("{label:<30} {wa:>6}");
+        for m in &models {
+            let model = ctx.model(m)?;
+            let (calib, _) = ctx.calib(&model)?;
+            let val = ctx.val(&model)?;
+            let mut cfg = base_cfg(args)?;
+            cfg.method = method;
+            cfg.act_bits = act;
+            // paper footnote: CLE preprocessing for the MobilenetV2 analog
+            cfg.pre_cle = *m == "micromobile" && method == Method::AdaRound;
+            let s = if matches!(method, Method::AdaRound) { seeds } else { 1 };
+            let accs = run_seeds(ctx, &model, &cfg, &calib, &val, s)?;
+            print!(" {:>16}", fmt_mean_std(&accs));
+        }
+        println!();
+    }
+    Ok(())
+}
+
+/// Table 8: nearest vs bias correction vs AdaRound.
+fn table8(ctx: &Ctx, args: &Args) -> Result<()> {
+    let model = ctx.model(&args.str("model", "micro18"))?;
+    let (calib, _) = ctx.calib(&model)?;
+    let val = ctx.val(&model)?;
+    let seeds = ctx.seeds;
+    let mut cfg = base_cfg(args)?;
+    println!("== Table 8: AdaRound vs empirical bias correction ({}) ==", model.name);
+    for (label, method) in [
+        ("nearest", Method::Nearest),
+        ("bias correction", Method::BiasCorr),
+        ("AdaRound", Method::AdaRound),
+    ] {
+        cfg.method = method;
+        let s = if method == Method::AdaRound { seeds } else { 1 };
+        let a = run_seeds(ctx, &model, &cfg, &calib, &val, s)?;
+        print_row(label, &[fmt_mean_std(&a)]);
+    }
+    Ok(())
+}
+
+/// Table 9: semantic segmentation (segnet / shapes, mIOU).
+fn table9(ctx: &Ctx, args: &Args) -> Result<()> {
+    let model = ctx.model("segnet")?;
+    let (calib, _) = ctx.calib(&model)?;
+    let val = ctx.val(&model)?;
+    let seeds = ctx.seeds.min(2);
+    println!("== Table 9: segmentation ({} on shapes, mIOU %) ==", model.name);
+    let fp = ctx.metric(&model, &val.0, &val.1, &ForwardOptions::default());
+    print_row("full precision (32/32)", &[format!("{fp:.2}")]);
+
+    // W2 is this testbed's collapse regime (DESIGN.md §1)
+    let rows: Vec<(&str, Method, u32, Option<u32>, usize)> = vec![
+        ("DFQ (our impl., 8/8)", Method::Dfq, 8, Some(8), 1),
+        ("nearest (2/8)", Method::Nearest, 2, Some(8), 1),
+        ("DFQ (our impl., 2/8)", Method::Dfq, 2, Some(8), 1),
+        ("AdaRound (2/32)", Method::AdaRound, 2, None, seeds),
+        ("AdaRound w/ act quant (2/8)", Method::AdaRound, 2, Some(8), seeds),
+    ];
+    for (label, method, bits, act, s) in rows {
+        let mut cfg = base_cfg(args)?;
+        cfg.method = method;
+        cfg.bits = bits;
+        cfg.act_bits = act;
+        let a = run_seeds(ctx, &model, &cfg, &calib, &val, s)?;
+        print_row(label, &[fmt_mean_std(&a)]);
+    }
+    Ok(())
+}
+
+/// Table 10 (appendix): CEM vs tabu-search QUBO solver, first layer.
+fn table10(ctx: &Ctx, args: &Args) -> Result<()> {
+    let model = ctx.model(&args.str("model", "micro18"))?;
+    let (calib, _) = ctx.calib(&model)?;
+    let val = ctx.val(&model)?;
+    let seeds = ctx.seeds;
+    let mut cfg = base_cfg(args)?;
+    let sensor = sensor_layer(&model, args);
+    cfg.only_layers = Some(sensor.clone());
+    println!("== Table 10: QUBO solvers, layer {} of {} ==", sensor[0], model.name);
+    for (label, method, s) in [
+        ("nearest", Method::Nearest, 1),
+        ("cross-entropy method", Method::LocalQuboCem, seeds),
+        ("tabu search (qbsolv analog)", Method::LocalQuboTabu, seeds),
+    ] {
+        cfg.method = method;
+        let a = run_seeds(ctx, &model, &cfg, &calib, &val, s)?;
+        print_row(label, &[fmt_mean_std(&a)]);
+    }
+    Ok(())
+}
+
+/// Exposed for the bench harness: run one named table quickly.
+pub fn run_table_quick(ctx: &Ctx, n: usize) -> Result<()> {
+    let args = Args::parse(
+        vec![format!("table"), format!("{n}"), "--seeds".into(), "1".into(),
+             "--val-n".into(), "64".into(), "--iters".into(), "60".into(),
+             "--calib-n".into(), "32".into(), "--stochastic-n".into(), "3".into()]
+            .into_iter(),
+    );
+    match n {
+        1 => table1(ctx, &args),
+        3 => table3(ctx, &args),
+        4 => table4(ctx, &args),
+        5 => table5(ctx, &args),
+        6 => table6(ctx, &args),
+        8 => table8(ctx, &args),
+        10 => table10(ctx, &args),
+        _ => bail!("quick table {n} unsupported"),
+    }
+}

@@ -1,0 +1,279 @@
+//! Calibration-activation sampling: build the per-layer (X, X^, T)
+//! matrices the reconstruction objective needs, with bounded memory.
+//!
+//! For layer L we need paired column samples of
+//!   * X   — im2col of the FP32 input activation (targets T = W X + b),
+//!   * X^  — im2col of the *quantized-prefix* input activation (eq. 25),
+//! taken at identical (image, spatial) positions. The calibration set is
+//! streamed in chunks; a deterministic per-chunk subsample keeps the
+//! column budget fixed regardless of layer spatial size.
+
+use std::collections::BTreeSet;
+
+use crate::data::chunks;
+use crate::nn::{ForwardOptions, Model, Node, Op};
+use crate::tensor::{im2col, Conv2dParams, Tensor};
+use crate::util::Rng;
+
+/// Paired activation sample for one layer (all groups).
+pub struct LayerSample {
+    /// FP32-input im2col per group: [cols, n_cols]
+    pub x_fp: Vec<Tensor>,
+    /// quantized-prefix im2col per group: [cols, n_cols]
+    pub x_q: Vec<Tensor>,
+}
+
+fn conv_params(node: &Node) -> Option<Conv2dParams> {
+    match node.op {
+        Op::Conv { k, stride, pad, groups, .. } => {
+            Some(Conv2dParams { k, stride, pad, groups })
+        }
+        _ => None,
+    }
+}
+
+/// im2col of an activation for a quantizable node (dense layers use the
+/// activation matrix transposed to [cin, n]).
+pub fn im2col_sample(node: &Node, act: &Tensor) -> Vec<Tensor> {
+    match conv_params(node) {
+        Some(p) => (0..p.groups).map(|g| im2col(act, g, p)).collect(),
+        None => vec![act.transpose2()], // dense: [n, cin] -> [cin, n]
+    }
+}
+
+/// Select `want` column indices deterministically out of `total`.
+fn pick_cols(total: usize, want: usize, rng: &mut Rng) -> Vec<usize> {
+    if want >= total {
+        (0..total).collect()
+    } else {
+        let mut idx = rng.sample_indices(total, want);
+        idx.sort_unstable();
+        idx
+    }
+}
+
+/// Cache of FP32 input activations per layer-input node, per calibration
+/// chunk. The FP32 pass does not depend on quantization overrides, so it
+/// is computed ONCE per pipeline run instead of once per layer — the
+/// biggest single wall-clock win of the perf pass (EXPERIMENTS.md §Perf).
+pub struct FpTapCache {
+    pub chunk_imgs: usize,
+    /// input-node id -> per-chunk activation tensors
+    pub taps: std::collections::BTreeMap<String, Vec<Tensor>>,
+}
+
+/// Build the FP32 tap cache for the given input-node ids.
+pub fn build_fp_cache(
+    model: &Model,
+    calib: &Tensor,
+    input_ids: &BTreeSet<String>,
+    chunk_imgs: usize,
+) -> FpTapCache {
+    let n = calib.shape[0];
+    let per: usize = calib.shape[1..].iter().product();
+    let mut taps: std::collections::BTreeMap<String, Vec<Tensor>> =
+        input_ids.iter().map(|i| (i.clone(), Vec::new())).collect();
+    for (s, e) in chunks(n, chunk_imgs) {
+        let xb = Tensor::from_vec(
+            &[e - s, calib.shape[1], calib.shape[2], calib.shape[3]],
+            calib.data[s * per..e * per].to_vec(),
+        );
+        let (_, got) = model.forward_collect(&xb, &ForwardOptions::default(), input_ids);
+        for (id, t) in got {
+            taps.get_mut(&id).unwrap().push(t);
+        }
+    }
+    FpTapCache { chunk_imgs, taps }
+}
+
+/// Stream the calibration images through the FP32 model and the
+/// quantized-prefix model, collecting paired im2col column samples for
+/// `node`. `quant_opts` carries the overrides accumulated so far;
+/// `fp_cache` (if present, and covering this node) supplies the FP32 taps
+/// without re-running the FP32 forward; `prefix_quantized` = false skips
+/// the quantized-prefix forward entirely (x^ == x before any override).
+#[allow(clippy::too_many_arguments)]
+pub fn sample_layer_cached(
+    model: &Model,
+    node: &Node,
+    calib: &Tensor,
+    quant_opts: &ForwardOptions,
+    prefix_quantized: bool,
+    fp_cache: Option<&FpTapCache>,
+    col_budget: usize,
+    chunk_imgs: usize,
+    rng: &mut Rng,
+) -> LayerSample {
+    let input_id = node.inputs[0].clone();
+    let want: BTreeSet<String> = [input_id.clone()].into();
+    let n = calib.shape[0];
+    let per: usize = calib.shape[1..].iter().product();
+    let groups = match conv_params(node) {
+        Some(p) => p.groups,
+        None => 1,
+    };
+    let cache_ok = fp_cache
+        .map(|c| c.chunk_imgs == chunk_imgs && c.taps.contains_key(&input_id))
+        .unwrap_or(false);
+
+    let mut x_fp: Vec<Vec<f32>> = vec![Vec::new(); groups];
+    let mut x_q: Vec<Vec<f32>> = vec![Vec::new(); groups];
+    let mut cols_dim = 0usize;
+    let n_chunks = n.div_ceil(chunk_imgs);
+    let per_chunk_budget = col_budget.div_ceil(n_chunks);
+
+    for (ci, (s, e)) in chunks(n, chunk_imgs).enumerate() {
+        let xb = || {
+            Tensor::from_vec(
+                &[e - s, calib.shape[1], calib.shape[2], calib.shape[3]],
+                calib.data[s * per..e * per].to_vec(),
+            )
+        };
+        let fp_act: Tensor = if cache_ok {
+            fp_cache.unwrap().taps[&input_id][ci].clone()
+        } else {
+            let (_, taps_fp) = model.forward_collect(&xb(), &ForwardOptions::default(), &want);
+            taps_fp.into_iter().next().unwrap().1
+        };
+        let cols_fp = im2col_sample(node, &fp_act);
+        let cols_q = if prefix_quantized {
+            let (_, taps_q) = model.forward_collect(&xb(), quant_opts, &want);
+            im2col_sample(node, &taps_q[&input_id])
+        } else {
+            cols_fp.clone()
+        };
+        let total = cols_fp[0].cols();
+        let picked = pick_cols(total, per_chunk_budget, rng);
+        cols_dim = cols_fp[0].rows();
+        for g in 0..groups {
+            for &c in &picked {
+                for r in 0..cols_dim {
+                    x_fp[g].push(cols_fp[g].at2(r, c));
+                    x_q[g].push(cols_q[g].at2(r, c));
+                }
+            }
+        }
+    }
+    // data was pushed column-major [c0r0 c0r1 ...]; transpose into [cols, n]
+    let ncols = x_fp[0].len() / cols_dim;
+    let finish = |raw: Vec<f32>| {
+        let mut t = Tensor::zeros(&[cols_dim, ncols]);
+        for c in 0..ncols {
+            for r in 0..cols_dim {
+                t.data[r * ncols + c] = raw[c * cols_dim + r];
+            }
+        }
+        t
+    };
+    LayerSample {
+        x_fp: x_fp.into_iter().map(finish).collect(),
+        x_q: x_q.into_iter().map(finish).collect(),
+    }
+}
+
+/// Uncached variant (kept for callers outside the pipeline: figs, tests).
+#[allow(clippy::too_many_arguments)]
+pub fn sample_layer(
+    model: &Model,
+    node: &Node,
+    calib: &Tensor,
+    quant_opts: &ForwardOptions,
+    col_budget: usize,
+    chunk_imgs: usize,
+    rng: &mut Rng,
+) -> LayerSample {
+    let prefix_quantized = quant_opts.weight_overrides.map(|m| !m.is_empty()).unwrap_or(false)
+        || quant_opts.bias_overrides.map(|m| !m.is_empty()).unwrap_or(false);
+    sample_layer_cached(model, node, calib, quant_opts, prefix_quantized, None,
+                        col_budget, chunk_imgs, rng)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::Model;
+    use crate::util::Json;
+    use std::collections::BTreeMap;
+
+    fn conv_model() -> Model {
+        let j = Json::parse(
+            r#"{"task":"cls","ir":[
+              {"id":"in","op":"input","inputs":[]},
+              {"id":"c1","op":"conv","inputs":["in"],"cin":2,"cout":3,
+               "k":3,"stride":1,"pad":1,"groups":1,"relu":true},
+              {"id":"c2","op":"conv","inputs":["c1"],"cin":3,"cout":2,
+               "k":1,"stride":1,"pad":0,"groups":1,"relu":false}
+            ]}"#,
+        )
+        .unwrap();
+        let mut w = BTreeMap::new();
+        w.insert("c1.w".into(), Tensor::full(&[3, 2, 3, 3], 0.1));
+        w.insert("c1.b".into(), Tensor::zeros(&[3]));
+        w.insert("c2.w".into(), Tensor::full(&[2, 3, 1, 1], 0.2));
+        w.insert("c2.b".into(), Tensor::zeros(&[2]));
+        Model::from_manifest("cm", &j, w).unwrap()
+    }
+
+    #[test]
+    fn sample_shapes_and_pairing() {
+        let m = conv_model();
+        let mut rng = Rng::new(1);
+        let calib = Tensor::from_vec(
+            &[4, 2, 8, 8],
+            (0..4 * 2 * 64).map(|i| (i % 13) as f32 * 0.1).collect(),
+        );
+        let node = m.node("c2").unwrap().clone();
+        let s = sample_layer(&m, &node, &calib, &ForwardOptions::default(), 32, 2, &mut rng);
+        assert_eq!(s.x_fp.len(), 1);
+        assert_eq!(s.x_fp[0].rows(), 3); // 1x1 conv over 3 channels
+        assert!(s.x_fp[0].cols() >= 16);
+        // without overrides, fp and quant paths must be identical
+        assert_eq!(s.x_fp[0].data, s.x_q[0].data);
+    }
+
+    #[test]
+    fn overrides_affect_only_quant_path() {
+        let m = conv_model();
+        let mut rng = Rng::new(2);
+        let calib = Tensor::full(&[2, 2, 8, 8], 1.0);
+        let node = m.node("c2").unwrap().clone();
+        let mut ov = BTreeMap::new();
+        ov.insert("c1".to_string(), Tensor::full(&[3, 2, 3, 3], 0.05));
+        let opts = ForwardOptions {
+            weight_overrides: Some(&ov),
+            bias_overrides: None,
+            act_quant: None,
+        };
+        let s = sample_layer(&m, &node, &calib, &opts, 16, 2, &mut rng);
+        assert_ne!(s.x_fp[0].data, s.x_q[0].data);
+        // halved weights => halved activations
+        for (a, b) in s.x_fp[0].data.iter().zip(&s.x_q[0].data) {
+            assert!((a * 0.5 - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn dense_sample_is_transposed_activation() {
+        let j = Json::parse(
+            r#"{"task":"cls","ir":[
+              {"id":"in","op":"input","inputs":[]},
+              {"id":"g1","op":"gpool","inputs":["in"]},
+              {"id":"d1","op":"dense","inputs":["g1"],"cin":2,"cout":2,"relu":false}
+            ]}"#,
+        )
+        .unwrap();
+        let mut w = BTreeMap::new();
+        let mut eye = Tensor::zeros(&[2, 2]);
+        eye.set2(0, 0, 1.0);
+        eye.set2(1, 1, 1.0);
+        w.insert("d1.w".into(), eye);
+        w.insert("d1.b".into(), Tensor::zeros(&[2]));
+        let m = Model::from_manifest("dm", &j, w).unwrap();
+        let mut rng = Rng::new(3);
+        let calib = Tensor::full(&[3, 2, 4, 4], 2.0);
+        let node = m.node("d1").unwrap().clone();
+        let s = sample_layer(&m, &node, &calib, &ForwardOptions::default(), 100, 2, &mut rng);
+        assert_eq!(s.x_fp[0].shape, vec![2, 3]); // [cin, n_images]
+        assert!(s.x_fp[0].data.iter().all(|&v| (v - 2.0).abs() < 1e-6));
+    }
+}

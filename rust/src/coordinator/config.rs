@@ -1,0 +1,147 @@
+//! Pipeline configuration: which rounding method, grid, bit-width and
+//! reconstruction variant to run.
+
+use crate::adaround::AdaRoundConfig;
+use crate::quant::GridMethod;
+
+/// Rounding / PTQ method — one per paper table row.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    /// round-to-nearest (eq. 1 baseline)
+    Nearest,
+    Floor,
+    Ceil,
+    /// stochastic rounding (Gupta et al. 2015); seeded per run
+    Stochastic,
+    /// the paper's method, continuous relaxation (eq. 25)
+    AdaRound,
+    /// AdaRound driven through the PJRT HLO step artifacts
+    AdaRoundPjrt,
+    /// straight-through-estimator baseline (Table 5)
+    Ste,
+    /// sigmoid + temperature annealing (Table 3 row 1)
+    Hopfield,
+    /// plain sigmoid + explicit f_reg (Table 3 row 2)
+    SigmoidFreg,
+    /// local-MSE QUBO (eq. 20) solved with the cross-entropy method
+    LocalQuboCem,
+    /// local-MSE QUBO solved with tabu search (qbsolv stand-in, Table 10)
+    LocalQuboTabu,
+    /// nearest + empirical bias correction (Table 8)
+    BiasCorr,
+    /// CLE + bias correction ("DFQ (our impl.)", Tables 7/9)
+    Dfq,
+    /// outlier channel splitting (Zhao et al. 2019)
+    Ocs,
+    /// per-channel MSE grids + nearest ("OMSE", Choukroun et al. 2019)
+    Omse,
+}
+
+impl Method {
+    pub fn parse(s: &str) -> Option<Method> {
+        Some(match s {
+            "nearest" => Method::Nearest,
+            "floor" => Method::Floor,
+            "ceil" => Method::Ceil,
+            "stochastic" => Method::Stochastic,
+            "adaround" => Method::AdaRound,
+            "adaround-pjrt" => Method::AdaRoundPjrt,
+            "ste" => Method::Ste,
+            "hopfield" => Method::Hopfield,
+            "sigmoid-freg" => Method::SigmoidFreg,
+            "qubo-cem" => Method::LocalQuboCem,
+            "qubo-tabu" => Method::LocalQuboTabu,
+            "biascorr" => Method::BiasCorr,
+            "dfq" => Method::Dfq,
+            "ocs" => Method::Ocs,
+            "omse" => Method::Omse,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Nearest => "nearest",
+            Method::Floor => "floor",
+            Method::Ceil => "ceil",
+            Method::Stochastic => "stochastic",
+            Method::AdaRound => "adaround",
+            Method::AdaRoundPjrt => "adaround-pjrt",
+            Method::Ste => "ste",
+            Method::Hopfield => "hopfield",
+            Method::SigmoidFreg => "sigmoid-freg",
+            Method::LocalQuboCem => "qubo-cem",
+            Method::LocalQuboTabu => "qubo-tabu",
+            Method::BiasCorr => "biascorr",
+            Method::Dfq => "dfq",
+            Method::Ocs => "ocs",
+            Method::Omse => "omse",
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct PipelineConfig {
+    pub method: Method,
+    pub bits: u32,
+    pub grid: GridMethod,
+    pub per_channel: bool,
+    /// feed the quantized-prefix activation x^ into the reconstruction
+    /// (paper's "asymmetric" objective, Table 4); plain layer-wise uses x
+    pub asymmetric: bool,
+    /// account for the activation function in the objective (Table 4)
+    pub use_relu: bool,
+    /// quantize only these node ids (None = all layers)
+    pub only_layers: Option<Vec<String>>,
+    /// number of calibration images used
+    pub calib_n: usize,
+    /// im2col column budget per layer for reconstruction/QUBO
+    pub col_budget: usize,
+    /// activation quantization bit-width (None = FP32 activations)
+    pub act_bits: Option<u32>,
+    pub adaround: AdaRoundConfig,
+    /// OCS channel expand ratio
+    pub ocs_expand: f64,
+    /// apply cross-layer equalization before quantizing (paper Table 7:
+    /// "using CLE as preprocessing" for the MobilenetV2 analog)
+    pub pre_cle: bool,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig {
+            method: Method::AdaRound,
+            bits: 4,
+            grid: GridMethod::MseW,
+            per_channel: false,
+            asymmetric: true,
+            use_relu: true,
+            only_layers: None,
+            calib_n: 512,
+            col_budget: 2048,
+            act_bits: None,
+            adaround: AdaRoundConfig::default(),
+            ocs_expand: 0.05,
+            pre_cle: false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for m in [
+            Method::Nearest,
+            Method::AdaRound,
+            Method::LocalQuboCem,
+            Method::Dfq,
+            Method::Omse,
+        ] {
+            assert_eq!(Method::parse(m.name()), Some(m));
+        }
+        assert_eq!(Method::parse("bogus"), None);
+    }
+}

@@ -1,0 +1,134 @@
+//! Quantized-model export/import: persist a [`QuantizedModel`] as a `.qtz`
+//! bundle so quantization (expensive) and serving (cheap) can run in
+//! different processes — the deployment hand-off of the framework.
+//!
+//! Bundle contents:
+//!   __meta.counts        [n_weights, n_biases, n_actquant] (i32)
+//!   w:<node>             quantized weight tensor
+//!   b:<node>             corrected bias tensor
+//!   aq:<node>            [min, max, bits] (f32 triple)
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::io::{read_qtz, write_qtz, QtzValue};
+use crate::quant::ActQuant;
+use crate::tensor::{IntTensor, Tensor};
+
+use super::pipeline::QuantizedModel;
+
+pub fn save_quantized(path: impl AsRef<Path>, qm: &QuantizedModel) -> Result<()> {
+    let mut bundle: BTreeMap<String, QtzValue> = BTreeMap::new();
+    for (id, w) in &qm.weight_overrides {
+        bundle.insert(format!("w:{id}"), QtzValue::F32(w.clone()));
+    }
+    for (id, b) in &qm.bias_overrides {
+        bundle.insert(format!("b:{id}"), QtzValue::F32(b.clone()));
+    }
+    let n_aq = qm.act_quant.as_ref().map(|m| m.len()).unwrap_or(0);
+    if let Some(aq) = &qm.act_quant {
+        for (id, q) in aq {
+            bundle.insert(
+                format!("aq:{id}"),
+                QtzValue::F32(Tensor::from_vec(&[3], vec![q.min, q.max, q.bits as f32])),
+            );
+        }
+    }
+    bundle.insert(
+        "__meta.counts".into(),
+        QtzValue::I32(IntTensor::from_vec(
+            &[3],
+            vec![
+                qm.weight_overrides.len() as i32,
+                qm.bias_overrides.len() as i32,
+                n_aq as i32,
+            ],
+        )),
+    );
+    write_qtz(path, &bundle)
+}
+
+pub fn load_quantized(path: impl AsRef<Path>) -> Result<QuantizedModel> {
+    let bundle = read_qtz(path)?;
+    let counts = bundle
+        .get("__meta.counts")
+        .ok_or_else(|| anyhow::anyhow!("not a quantized-model bundle (no __meta.counts)"))?
+        .as_i32()?
+        .data
+        .clone();
+    let mut qm = QuantizedModel {
+        weight_overrides: BTreeMap::new(),
+        bias_overrides: BTreeMap::new(),
+        act_quant: None,
+        stats: Vec::new(),
+    };
+    let mut aq: BTreeMap<String, ActQuant> = BTreeMap::new();
+    for (k, v) in &bundle {
+        if let Some(id) = k.strip_prefix("w:") {
+            qm.weight_overrides.insert(id.to_string(), v.as_f32()?.clone());
+        } else if let Some(id) = k.strip_prefix("b:") {
+            qm.bias_overrides.insert(id.to_string(), v.as_f32()?.clone());
+        } else if let Some(id) = k.strip_prefix("aq:") {
+            let t = v.as_f32()?;
+            aq.insert(id.to_string(), ActQuant::new(t.data[0], t.data[1], t.data[2] as u32));
+        }
+    }
+    if !aq.is_empty() {
+        qm.act_quant = Some(aq);
+    }
+    if qm.weight_overrides.len() != counts[0] as usize {
+        bail!(
+            "corrupt bundle: {} weight tensors, meta says {}",
+            qm.weight_overrides.len(),
+            counts[0]
+        );
+    }
+    Ok(qm)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_qm() -> QuantizedModel {
+        let mut qm = QuantizedModel {
+            weight_overrides: BTreeMap::new(),
+            bias_overrides: BTreeMap::new(),
+            act_quant: None,
+            stats: Vec::new(),
+        };
+        qm.weight_overrides
+            .insert("c1".into(), Tensor::from_vec(&[2, 1, 1, 1], vec![0.5, -0.5]));
+        qm.bias_overrides
+            .insert("c1".into(), Tensor::from_vec(&[2], vec![0.1, 0.2]));
+        let mut aq = BTreeMap::new();
+        aq.insert("c1".to_string(), ActQuant::new(-1.5, 2.5, 8));
+        qm.act_quant = Some(aq);
+        qm
+    }
+
+    #[test]
+    fn roundtrip() {
+        let path = std::env::temp_dir().join("qm_roundtrip.qtz");
+        let qm = sample_qm();
+        save_quantized(&path, &qm).unwrap();
+        let back = load_quantized(&path).unwrap();
+        assert_eq!(back.weight_overrides["c1"].data, vec![0.5, -0.5]);
+        assert_eq!(back.bias_overrides["c1"].data, vec![0.1, 0.2]);
+        let aq = &back.act_quant.unwrap()["c1"];
+        assert_eq!((aq.min, aq.max, aq.bits), (-1.5, 2.5, 8));
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_non_bundle() {
+        let path = std::env::temp_dir().join("qm_bad.qtz");
+        let mut plain = BTreeMap::new();
+        plain.insert("x".to_string(), QtzValue::F32(Tensor::zeros(&[1])));
+        write_qtz(&path, &plain).unwrap();
+        assert!(load_quantized(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+}

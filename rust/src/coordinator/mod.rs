@@ -1,0 +1,13 @@
+//! The PTQ coordinator: sequential layer-reconstruction pipeline
+//! (the paper's §3.3 procedure, "optimize (21)/(25) layer-by-layer
+//! sequentially"), configuration, and quantized-model assembly.
+
+pub mod calib;
+pub mod config;
+pub mod export;
+pub mod pipeline;
+
+pub use calib::{im2col_sample, LayerSample};
+pub use export::{load_quantized, save_quantized};
+pub use config::{Method, PipelineConfig};
+pub use pipeline::{LayerStat, Pipeline, QuantizedModel};

@@ -1,0 +1,409 @@
+//! Sequential layer-reconstruction pipeline — the system's core loop.
+//!
+//! For each quantizable layer in topological order:
+//!   1. fit the quantization grid (§5 "determined prior to AdaRound"),
+//!   2. stream the calibration set to sample paired (X, X^) im2col columns
+//!      ([`super::calib`]), where X^ sees all *previously quantized* layers
+//!      (the paper's asymmetric reconstruction, eq. 25),
+//!   3. choose the rounding per the configured [`Method`],
+//!   4. install the quantized weights and move to the next layer.
+//!
+//! Finally, optional activation quantizers are calibrated on the fully
+//! quantized network.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::adaround::hopfield::{optimize_hopfield, optimize_sigmoid_freg, TempSchedule};
+use crate::adaround::ste::optimize_ste;
+use crate::adaround::{LayerProblem, NativeOptimizer, PjrtOptimizer, RoundingOptimizer};
+use crate::baselines::{correct_bias, equalize_model, ocs_quantize};
+use crate::data::chunks;
+use crate::nn::{ForwardOptions, Model, Node};
+use crate::quant::{ActQuant, GridMethod, QuantGrid, RoundingMode};
+use crate::qubo::{gram, solve_cem, solve_tabu, CemParams, QuboProblem, TabuParams};
+use crate::runtime::Runtime;
+use crate::tensor::{matmul, Tensor};
+use crate::util::{Rng, Stopwatch};
+
+use super::calib::{build_fp_cache, sample_layer_cached, FpTapCache};
+use super::config::{Method, PipelineConfig};
+
+#[derive(Clone, Debug)]
+pub struct LayerStat {
+    pub id: String,
+    pub rows: usize,
+    pub cols: usize,
+    pub groups: usize,
+    pub mse_before: f64,
+    pub mse_after: f64,
+    pub flipped_frac: f64,
+    pub secs: f64,
+}
+
+/// The quantized network: overrides to apply on top of the FP32 model.
+pub struct QuantizedModel {
+    pub weight_overrides: BTreeMap<String, Tensor>,
+    pub bias_overrides: BTreeMap<String, Tensor>,
+    pub act_quant: Option<BTreeMap<String, ActQuant>>,
+    pub stats: Vec<LayerStat>,
+}
+
+impl QuantizedModel {
+    pub fn opts(&self) -> ForwardOptions<'_> {
+        ForwardOptions {
+            weight_overrides: Some(&self.weight_overrides),
+            bias_overrides: if self.bias_overrides.is_empty() {
+                None
+            } else {
+                Some(&self.bias_overrides)
+            },
+            act_quant: self.act_quant.as_ref(),
+        }
+    }
+
+    pub fn total_mse_before(&self) -> f64 {
+        self.stats.iter().map(|s| s.mse_before).sum()
+    }
+
+    pub fn total_mse_after(&self) -> f64 {
+        self.stats.iter().map(|s| s.mse_after).sum()
+    }
+}
+
+pub struct Pipeline<'a> {
+    /// working model (CLE-equalized copy for DFQ)
+    pub work: Model,
+    pub cfg: PipelineConfig,
+    pub runtime: Option<&'a Runtime>,
+}
+
+impl<'a> Pipeline<'a> {
+    pub fn new(model: &Model, cfg: PipelineConfig, runtime: Option<&'a Runtime>) -> Pipeline<'a> {
+        let mut work = model.clone();
+        if cfg.method == Method::Dfq || cfg.pre_cle {
+            let (eq, _) = equalize_model(model);
+            work.weights = eq;
+        }
+        Pipeline { work, cfg, runtime }
+    }
+
+    fn layer_selected(&self, id: &str) -> bool {
+        match &self.cfg.only_layers {
+            None => true,
+            Some(ids) => ids.iter().any(|l| l == id),
+        }
+    }
+
+    /// Run the full PTQ pipeline over the calibration images.
+    pub fn quantize(&self, calib: &Tensor, rng: &mut Rng) -> Result<QuantizedModel> {
+        let calib = self.slice_calib(calib);
+        let mut out = QuantizedModel {
+            weight_overrides: BTreeMap::new(),
+            bias_overrides: BTreeMap::new(),
+            act_quant: None,
+            stats: Vec::new(),
+        };
+        let nodes: Vec<Node> = self.work.quant_layers().into_iter().cloned().collect();
+        // perf: FP32 taps don't depend on overrides — compute once for all
+        // selected layers instead of once per layer
+        let input_ids: std::collections::BTreeSet<String> = nodes
+            .iter()
+            .filter(|n| self.layer_selected(&n.id))
+            .map(|n| n.inputs[0].clone())
+            .collect();
+        let fp_cache = build_fp_cache(&self.work, &calib, &input_ids, 64);
+        for node in &nodes {
+            if !self.layer_selected(&node.id) {
+                continue;
+            }
+            let sw = Stopwatch::start();
+            let stat = self.quantize_layer(node, &calib, &fp_cache, &mut out, rng)?;
+            out.stats.push(LayerStat { secs: sw.secs(), ..stat });
+        }
+        if let Some(bits) = self.cfg.act_bits {
+            out.act_quant = Some(self.calibrate_activations(&calib, &out, bits));
+        }
+        Ok(out)
+    }
+
+    fn slice_calib(&self, calib: &Tensor) -> Tensor {
+        let n = self.cfg.calib_n.min(calib.shape[0]);
+        let per: usize = calib.shape[1..].iter().product();
+        Tensor::from_vec(
+            &[n, calib.shape[1], calib.shape[2], calib.shape[3]],
+            calib.data[..n * per].to_vec(),
+        )
+    }
+
+    fn quantize_layer(
+        &self,
+        node: &Node,
+        calib: &Tensor,
+        fp_cache: &FpTapCache,
+        out: &mut QuantizedModel,
+        rng: &mut Rng,
+    ) -> Result<LayerStat> {
+        let cfg = &self.cfg;
+        let geom = node.geom().expect("quantizable node");
+        let w4 = self.work.weight(&node.id).clone();
+        let bias_full = self.work.bias(&node.id).clone();
+        // full GEMM view [cout, cols] (groups stacked along rows)
+        let cout = w4.shape[0];
+        let w_gemm = Tensor::from_vec(&[cout, geom.cols], w4.data.clone());
+
+        // --- calibration sample (paired FP / quantized-prefix columns) ---
+        let quant_opts = ForwardOptions {
+            weight_overrides: Some(&out.weight_overrides),
+            bias_overrides: if out.bias_overrides.is_empty() {
+                None
+            } else {
+                Some(&out.bias_overrides)
+            },
+            act_quant: None,
+        };
+        // the quantized-prefix forward is only needed in asymmetric mode
+        // once at least one earlier layer has been overridden
+        let prefix_quantized = cfg.asymmetric
+            && (!out.weight_overrides.is_empty() || !out.bias_overrides.is_empty());
+        let sample = sample_layer_cached(
+            &self.work,
+            node,
+            calib,
+            &quant_opts,
+            prefix_quantized,
+            Some(fp_cache),
+            cfg.col_budget,
+            64,
+            rng,
+        );
+
+        // --- grid fit (per layer, before rounding optimization) ---
+        let (grid_method, per_channel) = match cfg.method {
+            Method::Omse => (GridMethod::MseW, true),
+            _ => (cfg.grid, cfg.per_channel),
+        };
+        let grid = QuantGrid::fit(
+            &w_gemm,
+            cfg.bits,
+            grid_method,
+            per_channel,
+            Some(&sample.x_fp[0]),
+        );
+
+        // --- per-group rounding ---
+        let mut wq_full = vec![0.0f32; w_gemm.numel()];
+        let mut mse_before = 0.0;
+        let mut mse_after = 0.0;
+        let mut flipped = 0.0;
+        let og = geom.rows;
+        for g in 0..geom.groups {
+            let row0 = g * og;
+            let w_g = Tensor::from_vec(
+                &[og, geom.cols],
+                w_gemm.data[row0 * geom.cols..(row0 + og) * geom.cols].to_vec(),
+            );
+            let bias_g: Vec<f32> = bias_full.data[row0..row0 + og].to_vec();
+            let relu = cfg.use_relu && geom.relu;
+            let prob = LayerProblem::new(w_g.clone(), &grid, row0, bias_g, relu);
+            let x_fp = &sample.x_fp[g];
+            let x_opt = if cfg.asymmetric { &sample.x_q[g] } else { x_fp };
+            // FP32 target: T = W x_fp + b
+            let mut t = matmul(&w_g, x_fp);
+            let ncols = t.cols();
+            for r in 0..og {
+                let b = prob.bias[r];
+                for v in &mut t.data[r * ncols..(r + 1) * ncols] {
+                    *v += b;
+                }
+            }
+
+            let wq_g = self.round_group(&prob, x_opt, &t, cfg, rng, &mut mse_before,
+                                        &mut mse_after, &mut flipped)?;
+            wq_full[row0 * geom.cols..(row0 + og) * geom.cols].copy_from_slice(&wq_g.data);
+
+            // bias correction methods adjust the bias from the same sample
+            if matches!(cfg.method, Method::BiasCorr | Method::Dfq) {
+                let delta = correct_bias(&w_g, x_fp, &wq_g, x_opt);
+                let mut nb = out
+                    .bias_overrides
+                    .get(&node.id)
+                    .cloned()
+                    .unwrap_or_else(|| bias_full.clone());
+                for (i, d) in delta.iter().enumerate() {
+                    nb.data[row0 + i] += d;
+                }
+                out.bias_overrides.insert(node.id.clone(), nb);
+            }
+        }
+        out.weight_overrides.insert(
+            node.id.clone(),
+            Tensor::from_vec(&w4.shape, wq_full),
+        );
+        Ok(LayerStat {
+            id: node.id.clone(),
+            rows: geom.rows,
+            cols: geom.cols,
+            groups: geom.groups,
+            mse_before: mse_before / geom.groups as f64,
+            mse_after: mse_after / geom.groups as f64,
+            flipped_frac: flipped / geom.groups as f64,
+            secs: 0.0,
+        })
+    }
+
+    /// Rounding decision for one group; returns quantized GEMM weights.
+    #[allow(clippy::too_many_arguments)]
+    fn round_group(
+        &self,
+        prob: &LayerProblem,
+        x: &Tensor,
+        t: &Tensor,
+        cfg: &PipelineConfig,
+        rng: &mut Rng,
+        mse_before: &mut f64,
+        mse_after: &mut f64,
+        flipped: &mut f64,
+    ) -> Result<Tensor> {
+        let near_mse = prob.recon_mse(&prob.hard_weights(&prob.nearest_mask()), x, t);
+        *mse_before += near_mse;
+        let grid_for_rowmodes =
+            QuantGrid { scale: prob.scale.clone(), bits: cfg.bits, n: prob.n, p: prob.p };
+        let (wq, fl, after): (Tensor, f64, f64) = match cfg.method {
+            Method::Nearest | Method::Floor | Method::Ceil | Method::Stochastic
+            | Method::Omse | Method::BiasCorr | Method::Dfq => {
+                let mode = match cfg.method {
+                    Method::Floor => RoundingMode::Floor,
+                    Method::Ceil => RoundingMode::Ceil,
+                    Method::Stochastic => RoundingMode::Stochastic,
+                    _ => RoundingMode::Nearest,
+                };
+                let mask =
+                    crate::quant::rounding_mask(&prob.w, &grid_for_rowmodes, mode, rng);
+                // note: per-group scales live at rows [0, og) of this grid view
+                let wq = prob.hard_weights(&mask);
+                let near = prob.nearest_mask();
+                let fl = mask
+                    .data
+                    .iter()
+                    .zip(&near.data)
+                    .filter(|(a, b)| (*a - *b).abs() > 0.5)
+                    .count() as f64
+                    / mask.numel() as f64;
+                let after = prob.recon_mse(&wq, x, t);
+                (wq, fl, after)
+            }
+            Method::AdaRound => {
+                let res = NativeOptimizer.optimize(prob, x, t, &self.adaround_cfg(), rng)?;
+                (prob.hard_weights(&res.mask), res.flipped_frac, res.mse_after)
+            }
+            Method::AdaRoundPjrt => {
+                let Some(rt) = self.runtime else {
+                    bail!("adaround-pjrt requires a PJRT runtime (artifacts)")
+                };
+                let res = PjrtOptimizer::new(rt).optimize(prob, x, t, &self.adaround_cfg(), rng)?;
+                (prob.hard_weights(&res.mask), res.flipped_frac, res.mse_after)
+            }
+            Method::Ste => {
+                let mut c = self.adaround_cfg();
+                c.lr = 2e-3; // continuous weights need a gentler step
+                let res = optimize_ste(prob, x, t, &c, rng)?;
+                (res.v.clone(), res.flipped_frac, res.mse_after)
+            }
+            Method::Hopfield => {
+                let res = optimize_hopfield(prob, x, t, &self.adaround_cfg(),
+                                            TempSchedule::default(), rng)?;
+                (prob.hard_weights(&res.mask), res.flipped_frac, res.mse_after)
+            }
+            Method::SigmoidFreg => {
+                let res = optimize_sigmoid_freg(prob, x, t, &self.adaround_cfg(), rng)?;
+                (prob.hard_weights(&res.mask), res.flipped_frac, res.mse_after)
+            }
+            Method::LocalQuboCem | Method::LocalQuboTabu => {
+                let h = gram(x);
+                let near = prob.nearest_mask();
+                let mut mask = Tensor::zeros(&prob.w.shape);
+                let cols = prob.cols();
+                for r in 0..prob.rows() {
+                    let qp = QuboProblem::from_row(
+                        &prob.w.data[r * cols..(r + 1) * cols],
+                        &grid_for_rowmodes,
+                        r,
+                        &h,
+                    );
+                    let (sol, _) = if cfg.method == Method::LocalQuboCem {
+                        solve_cem(&qp, CemParams::default(), rng)
+                    } else {
+                        solve_tabu(&qp, TabuParams::default(), rng)
+                    };
+                    for c in 0..cols {
+                        mask.data[r * cols + c] = sol[c] as f32;
+                    }
+                }
+                let wq = prob.hard_weights(&mask);
+                let fl = mask
+                    .data
+                    .iter()
+                    .zip(&near.data)
+                    .filter(|(a, b)| (*a - *b).abs() > 0.5)
+                    .count() as f64
+                    / mask.numel() as f64;
+                let after = prob.recon_mse(&wq, x, t);
+                (wq, fl, after)
+            }
+            Method::Ocs => {
+                let wq = ocs_quantize(&prob.w, cfg.bits, cfg.ocs_expand);
+                let after = prob.recon_mse(&wq, x, t);
+                (wq, 0.0, after)
+            }
+        };
+        *mse_after += after;
+        *flipped += fl;
+        Ok(wq)
+    }
+
+    fn adaround_cfg(&self) -> crate::adaround::AdaRoundConfig {
+        let mut c = self.cfg.adaround;
+        c.use_relu = self.cfg.use_relu;
+        c
+    }
+
+    /// Min/max activation calibration on the fully quantized network.
+    fn calibrate_activations(
+        &self,
+        calib: &Tensor,
+        qm: &QuantizedModel,
+        bits: u32,
+    ) -> BTreeMap<String, ActQuant> {
+        let want: std::collections::BTreeSet<String> =
+            self.work.nodes.iter().map(|n| n.id.clone()).collect();
+        let mut ranges: BTreeMap<String, ActQuant> = BTreeMap::new();
+        let n = calib.shape[0];
+        let per: usize = calib.shape[1..].iter().product();
+        let opts = ForwardOptions {
+            weight_overrides: Some(&qm.weight_overrides),
+            bias_overrides: if qm.bias_overrides.is_empty() {
+                None
+            } else {
+                Some(&qm.bias_overrides)
+            },
+            act_quant: None,
+        };
+        for (s, e) in chunks(n, 64) {
+            let xb = Tensor::from_vec(
+                &[e - s, calib.shape[1], calib.shape[2], calib.shape[3]],
+                calib.data[s * per..e * per].to_vec(),
+            );
+            let (_, taps) = self.work.forward_collect(&xb, &opts, &want);
+            for (id, t) in taps {
+                let q = ActQuant::calibrate(&t, bits);
+                ranges
+                    .entry(id)
+                    .and_modify(|r| *r = r.merge(&q))
+                    .or_insert(q);
+            }
+        }
+        ranges
+    }
+}

@@ -1,0 +1,99 @@
+//! Dataset utilities: slicing/batching of the calibration & validation
+//! bundles, plus a self-contained synthetic generator for tests that must
+//! run without `make artifacts`.
+
+use crate::tensor::{IntTensor, Tensor};
+use crate::util::Rng;
+
+/// Select a subset of images (dim 0) from [N, C, H, W] (+ labels).
+pub fn subset(x: &Tensor, y: &IntTensor, idx: &[usize]) -> (Tensor, IntTensor) {
+    let per: usize = x.shape[1..].iter().product();
+    let mut xs = Vec::with_capacity(idx.len() * per);
+    for &i in idx {
+        xs.extend_from_slice(&x.data[i * per..(i + 1) * per]);
+    }
+    let mut shape = x.shape.clone();
+    shape[0] = idx.len();
+    // labels may be [N] or [N, H, W]
+    let yper: usize = y.shape[1..].iter().product::<usize>().max(1);
+    let mut ys = Vec::with_capacity(idx.len() * yper);
+    for &i in idx {
+        ys.extend_from_slice(&y.data[i * yper..(i + 1) * yper]);
+    }
+    let mut yshape = y.shape.clone();
+    yshape[0] = idx.len();
+    (Tensor::from_vec(&shape, xs), IntTensor::from_vec(&yshape, ys))
+}
+
+/// First-n convenience subset.
+pub fn take(x: &Tensor, y: &IntTensor, n: usize) -> (Tensor, IntTensor) {
+    let n = n.min(x.shape[0]);
+    let idx: Vec<usize> = (0..n).collect();
+    subset(x, y, &idx)
+}
+
+/// Iterate images in chunks: yields (start, end) ranges.
+pub fn chunks(n: usize, chunk: usize) -> impl Iterator<Item = (usize, usize)> {
+    (0..n).step_by(chunk.max(1)).map(move |s| (s, (s + chunk).min(n)))
+}
+
+/// Tiny self-contained classification dataset for artifact-free tests:
+/// two "orientation" classes of vertical vs horizontal stripes + noise.
+pub fn synthetic_stripes(n: usize, ch: usize, hw: usize, rng: &mut Rng) -> (Tensor, IntTensor) {
+    let mut x = Tensor::zeros(&[n, ch, hw, hw]);
+    let mut y = Vec::with_capacity(n);
+    for i in 0..n {
+        let label = rng.below(2) as i32;
+        y.push(label);
+        for c in 0..ch {
+            for a in 0..hw {
+                for b in 0..hw {
+                    let stripe = if label == 0 { b } else { a };
+                    let v = if stripe % 4 < 2 { 0.8 } else { -0.8 };
+                    x.data[((i * ch + c) * hw + a) * hw + b] =
+                        v + rng.normal_f32(0.0, 0.35);
+                }
+            }
+        }
+    }
+    (x, IntTensor::from_vec(&[n], y))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn subset_slices_correctly() {
+        let x = Tensor::from_vec(&[3, 1, 1, 2], vec![1., 2., 3., 4., 5., 6.]);
+        let y = IntTensor::from_vec(&[3], vec![7, 8, 9]);
+        let (xs, ys) = subset(&x, &y, &[2, 0]);
+        assert_eq!(xs.shape, vec![2, 1, 1, 2]);
+        assert_eq!(xs.data, vec![5., 6., 1., 2.]);
+        assert_eq!(ys.data, vec![9, 7]);
+    }
+
+    #[test]
+    fn subset_seg_labels() {
+        let x = Tensor::from_vec(&[2, 1, 2, 2], (0..8).map(|v| v as f32).collect());
+        let y = IntTensor::from_vec(&[2, 2, 2], vec![0, 1, 2, 3, 4, 5, 6, 7]);
+        let (_, ys) = subset(&x, &y, &[1]);
+        assert_eq!(ys.shape, vec![1, 2, 2]);
+        assert_eq!(ys.data, vec![4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn chunk_ranges_cover() {
+        let ranges: Vec<_> = chunks(10, 4).collect();
+        assert_eq!(ranges, vec![(0, 4), (4, 8), (8, 10)]);
+    }
+
+    #[test]
+    fn stripes_balanced_and_shaped() {
+        let mut rng = Rng::new(5);
+        let (x, y) = synthetic_stripes(40, 3, 8, &mut rng);
+        assert_eq!(x.shape, vec![40, 3, 8, 8]);
+        let ones = y.data.iter().filter(|&&l| l == 1).count();
+        assert!(ones > 5 && ones < 35);
+    }
+}

@@ -1,0 +1,167 @@
+//! Evaluation metrics: top-1 accuracy (classification), mean IoU
+//! (segmentation), and the QUBO-cost/accuracy correlation of Fig. 1.
+
+use crate::data::chunks;
+use crate::nn::{ForwardOptions, Model};
+use crate::tensor::{IntTensor, Tensor};
+
+/// Top-1 accuracy (%) of a classifier on (x [N,3,H,W], y [N]).
+pub fn top1(model: &Model, x: &Tensor, y: &IntTensor, opts: &ForwardOptions, batch: usize) -> f64 {
+    let n = x.shape[0];
+    let per: usize = x.shape[1..].iter().product();
+    let mut correct = 0usize;
+    for (s, e) in chunks(n, batch) {
+        let xb = Tensor::from_vec(
+            &[e - s, x.shape[1], x.shape[2], x.shape[3]],
+            x.data[s * per..e * per].to_vec(),
+        );
+        let logits = model.forward(&xb, opts);
+        let preds = logits.argmax_rows();
+        for (i, p) in preds.iter().enumerate() {
+            if *p as i32 == y.data[s + i] {
+                correct += 1;
+            }
+        }
+    }
+    100.0 * correct as f64 / n as f64
+}
+
+/// Mean intersection-over-union (%) for segmentation logits [N,C,H,W]
+/// against masks [N,H,W], averaged over classes present in union.
+pub fn miou(
+    model: &Model,
+    x: &Tensor,
+    y: &IntTensor,
+    opts: &ForwardOptions,
+    batch: usize,
+    num_classes: usize,
+) -> f64 {
+    let n = x.shape[0];
+    let per: usize = x.shape[1..].iter().product();
+    let mut inter = vec![0usize; num_classes];
+    let mut union = vec![0usize; num_classes];
+    for (s, e) in chunks(n, batch) {
+        let xb = Tensor::from_vec(
+            &[e - s, x.shape[1], x.shape[2], x.shape[3]],
+            x.data[s * per..e * per].to_vec(),
+        );
+        let logits = model.forward(&xb, opts); // [nb, C, H, W]
+        let (nb, c, h, w) = (
+            logits.shape[0],
+            logits.shape[1],
+            logits.shape[2],
+            logits.shape[3],
+        );
+        let hw = h * w;
+        for bi in 0..nb {
+            for pos in 0..hw {
+                // argmax over channel
+                let mut best = 0usize;
+                let mut bestv = f32::NEG_INFINITY;
+                for ci in 0..c {
+                    let v = logits.data[(bi * c + ci) * hw + pos];
+                    if v > bestv {
+                        bestv = v;
+                        best = ci;
+                    }
+                }
+                let gt = y.data[(s + bi) * hw + pos] as usize;
+                if best == gt {
+                    inter[gt] += 1;
+                    union[gt] += 1;
+                } else {
+                    union[gt] += 1;
+                    union[best] += 1;
+                }
+            }
+        }
+    }
+    let mut acc = 0.0;
+    let mut cnt = 0usize;
+    for c in 0..num_classes {
+        if union[c] > 0 {
+            acc += inter[c] as f64 / union[c] as f64;
+            cnt += 1;
+        }
+    }
+    100.0 * acc / cnt.max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::Model;
+    use crate::util::Json;
+    use std::collections::BTreeMap;
+
+    /// Model that just global-pools and multiplies by an identity-ish dense:
+    /// prediction = argmax of channel means.
+    fn passthrough_model() -> Model {
+        let j = Json::parse(
+            r#"{"task":"cls","ir":[
+              {"id":"in","op":"input","inputs":[]},
+              {"id":"g1","op":"gpool","inputs":["in"]},
+              {"id":"d1","op":"dense","inputs":["g1"],"cin":3,"cout":3,"relu":false}
+            ]}"#,
+        )
+        .unwrap();
+        let mut w = BTreeMap::new();
+        let mut eye = Tensor::zeros(&[3, 3]);
+        for i in 0..3 {
+            eye.set2(i, i, 1.0);
+        }
+        w.insert("d1.w".into(), eye);
+        w.insert("d1.b".into(), Tensor::zeros(&[3]));
+        Model::from_manifest("pass", &j, w).unwrap()
+    }
+
+    #[test]
+    fn top1_on_trivial_classifier() {
+        let m = passthrough_model();
+        // image i has channel y_i brightest
+        let mut x = Tensor::zeros(&[4, 3, 2, 2]);
+        let labels = vec![0, 2, 1, 2];
+        for (i, &l) in labels.iter().enumerate() {
+            for p in 0..4 {
+                x.data[(i * 3 + l as usize) * 4 + p] = 1.0;
+            }
+        }
+        let y = IntTensor::from_vec(&[4], labels);
+        let acc = top1(&m, &x, &y, &ForwardOptions::default(), 2);
+        assert_eq!(acc, 100.0);
+        // corrupt one label
+        let y2 = IntTensor::from_vec(&[4], vec![1, 2, 1, 2]);
+        let acc2 = top1(&m, &x, &y2, &ForwardOptions::default(), 3);
+        assert_eq!(acc2, 75.0);
+    }
+
+    #[test]
+    fn miou_perfect_and_partial() {
+        // seg model: conv 1x1 identity from 3 channels to 3 "classes"
+        let j = Json::parse(
+            r#"{"task":"seg","ir":[
+              {"id":"in","op":"input","inputs":[]},
+              {"id":"c1","op":"conv","inputs":["in"],"cin":3,"cout":3,
+               "k":1,"stride":1,"pad":0,"groups":1,"relu":false}
+            ]}"#,
+        )
+        .unwrap();
+        let mut w = BTreeMap::new();
+        let mut eye = Tensor::zeros(&[3, 3, 1, 1]);
+        for i in 0..3 {
+            eye.data[i * 3 + i] = 1.0;
+        }
+        w.insert("c1.w".into(), eye);
+        w.insert("c1.b".into(), Tensor::zeros(&[3]));
+        let m = Model::from_manifest("seg", &j, w).unwrap();
+        let mut x = Tensor::zeros(&[1, 3, 2, 2]);
+        // pixel p gets class p % 3 brightest
+        let gt = vec![0, 1, 2, 0];
+        for (p, &c) in gt.iter().enumerate() {
+            x.data[c as usize * 4 + p] = 1.0;
+        }
+        let y = IntTensor::from_vec(&[1, 2, 2], gt);
+        let m_val = miou(&m, &x, &y, &ForwardOptions::default(), 1, 3);
+        assert!((m_val - 100.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,5 @@
+//! Binary tensor-bundle I/O shared with the python build side.
+
+pub mod qtz;
+
+pub use qtz::{read_qtz, write_qtz, QtzValue};

@@ -1,0 +1,182 @@
+//! `.qtz` tensor-bundle reader/writer — exact mirror of
+//! `python/compile/qtz.py` (see that file for the byte layout).
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::{IntTensor, Tensor};
+
+const MAGIC: &[u8; 4] = b"QTZ1";
+
+/// A tensor of any supported dtype.
+#[derive(Clone, Debug)]
+pub enum QtzValue {
+    F32(Tensor),
+    I32(IntTensor),
+    U8(Vec<u8>, Vec<usize>),
+}
+
+impl QtzValue {
+    pub fn as_f32(&self) -> Result<&Tensor> {
+        match self {
+            QtzValue::F32(t) => Ok(t),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&IntTensor> {
+        match self {
+            QtzValue::I32(t) => Ok(t),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            QtzValue::F32(t) => &t.shape,
+            QtzValue::I32(t) => &t.shape,
+            QtzValue::U8(_, s) => s,
+        }
+    }
+}
+
+fn read_u16(r: &mut impl Read) -> Result<u16> {
+    let mut b = [0u8; 2];
+    r.read_exact(&mut b)?;
+    Ok(u16::from_le_bytes(b))
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+/// Read a bundle into name -> tensor.
+pub fn read_qtz(path: impl AsRef<Path>) -> Result<BTreeMap<String, QtzValue>> {
+    let path = path.as_ref();
+    let file = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+    let mut r = std::io::BufReader::new(file);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{path:?}: bad magic {magic:?}");
+    }
+    let count = read_u32(&mut r)?;
+    let mut out = BTreeMap::new();
+    for _ in 0..count {
+        let name_len = read_u16(&mut r)? as usize;
+        let mut name_b = vec![0u8; name_len];
+        r.read_exact(&mut name_b)?;
+        let name = String::from_utf8(name_b)?;
+        let mut hdr = [0u8; 2];
+        r.read_exact(&mut hdr)?;
+        let (dtype, ndim) = (hdr[0], hdr[1] as usize);
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(read_u32(&mut r)? as usize);
+        }
+        let n: usize = shape.iter().product();
+        let value = match dtype {
+            0 => {
+                let mut raw = vec![0u8; n * 4];
+                r.read_exact(&mut raw)?;
+                let data = raw
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect();
+                QtzValue::F32(Tensor::from_vec(&shape, data))
+            }
+            1 => {
+                let mut raw = vec![0u8; n * 4];
+                r.read_exact(&mut raw)?;
+                let data = raw
+                    .chunks_exact(4)
+                    .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect();
+                QtzValue::I32(IntTensor::from_vec(&shape, data))
+            }
+            2 => {
+                let mut raw = vec![0u8; n];
+                r.read_exact(&mut raw)?;
+                QtzValue::U8(raw, shape)
+            }
+            d => bail!("{path:?}: unknown dtype code {d}"),
+        };
+        out.insert(name, value);
+    }
+    Ok(out)
+}
+
+/// Write a bundle (used by tests and the quantized-model export).
+pub fn write_qtz(path: impl AsRef<Path>, tensors: &BTreeMap<String, QtzValue>) -> Result<()> {
+    let file = std::fs::File::create(path.as_ref())?;
+    let mut w = std::io::BufWriter::new(file);
+    w.write_all(MAGIC)?;
+    w.write_all(&(tensors.len() as u32).to_le_bytes())?;
+    for (name, v) in tensors {
+        w.write_all(&(name.len() as u16).to_le_bytes())?;
+        w.write_all(name.as_bytes())?;
+        let (code, shape): (u8, &[usize]) = match v {
+            QtzValue::F32(t) => (0, &t.shape),
+            QtzValue::I32(t) => (1, &t.shape),
+            QtzValue::U8(_, s) => (2, s),
+        };
+        w.write_all(&[code, shape.len() as u8])?;
+        for &d in shape {
+            w.write_all(&(d as u32).to_le_bytes())?;
+        }
+        match v {
+            QtzValue::F32(t) => {
+                for x in &t.data {
+                    w.write_all(&x.to_le_bytes())?;
+                }
+            }
+            QtzValue::I32(t) => {
+                for x in &t.data {
+                    w.write_all(&x.to_le_bytes())?;
+                }
+            }
+            QtzValue::U8(raw, _) => w.write_all(raw)?,
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("qtz_test_rt.qtz");
+        let mut m = BTreeMap::new();
+        m.insert(
+            "w".to_string(),
+            QtzValue::F32(Tensor::from_vec(&[2, 3], vec![1., -2., 3.5, 0., 5., 6.])),
+        );
+        m.insert(
+            "y".to_string(),
+            QtzValue::I32(IntTensor::from_vec(&[4], vec![0, 1, -5, 9])),
+        );
+        m.insert("m".to_string(), QtzValue::U8(vec![7, 8], vec![2]));
+        write_qtz(&dir, &m).unwrap();
+        let back = read_qtz(&dir).unwrap();
+        assert_eq!(back.len(), 3);
+        assert_eq!(back["w"].as_f32().unwrap().data, vec![1., -2., 3.5, 0., 5., 6.]);
+        assert_eq!(back["y"].as_i32().unwrap().data, vec![0, 1, -5, 9]);
+        assert_eq!(back["m"].shape(), &[2]);
+        std::fs::remove_file(dir).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("qtz_test_bad.qtz");
+        std::fs::write(&dir, b"NOPE\x00\x00\x00\x00").unwrap();
+        assert!(read_qtz(&dir).is_err());
+        std::fs::remove_file(dir).ok();
+    }
+}

@@ -1,0 +1,44 @@
+//! # AdaRound — post-training quantization framework
+//!
+//! A from-scratch reproduction of *"Up or Down? Adaptive Rounding for
+//! Post-Training Quantization"* (Nagel et al., ICML 2020) as a deployable
+//! three-layer system:
+//!
+//! * **Layer 3 (this crate)** — the PTQ coordinator: quantization grids,
+//!   rounding search (QUBO / continuous relaxation), the sequential
+//!   layer-reconstruction pipeline, baselines, evaluation, CLI.
+//! * **Layer 2 (python/compile, build-time only)** — the per-layer AdaRound
+//!   optimization step as a fused JAX graph, AOT-lowered to HLO text.
+//! * **Layer 1 (python/compile/kernels, build-time only)** — Pallas kernels
+//!   for the soft-quantized matmul forward/backward hot-spot.
+//!
+//! Python never runs on the request path: the rust binary loads the HLO
+//! artifacts through PJRT ([`runtime`]) and drives the optimization loop
+//! itself ([`adaround::PjrtOptimizer`]), with a pure-rust fallback
+//! ([`adaround::NativeOptimizer`]) implementing identical math.
+//!
+//! Quickstart (after `make artifacts`):
+//!
+//! ```bash
+//! adaround quantize --model micro18 --bits 4
+//! adaround table 7         # regenerate the paper's literature comparison
+//! ```
+
+pub mod adaround;
+pub mod baselines;
+pub mod cli;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod io;
+pub mod nn;
+pub mod quant;
+pub mod qubo;
+pub mod runtime;
+pub mod tensor;
+pub mod util;
+
+/// Default artifacts directory, overridable with `--artifacts` / `QTZ_ARTIFACTS`.
+pub fn artifacts_dir() -> String {
+    std::env::var("QTZ_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string())
+}

@@ -1,0 +1,11 @@
+//! `adaround` — the CLI entrypoint of the PTQ framework.
+
+use adaround::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    if let Err(e) = adaround::cli::run(args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,188 @@
+//! Native forward executor for the graph IR.
+//!
+//! Supports per-layer weight overrides (quantized weights), activation
+//! taps (capture intermediate tensors for calibration), and optional
+//! activation fake-quantization — everything the PTQ pipeline needs to
+//! build FP32 targets and quantized-prefix inputs.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::quant::ActQuant;
+use crate::tensor::{conv2d, pool, Conv2dParams, Tensor};
+
+use super::graph::{Model, Op};
+
+/// Captured node outputs, keyed by node id.
+pub type Taps = BTreeMap<String, Tensor>;
+
+#[derive(Default)]
+pub struct ForwardOptions<'a> {
+    /// Replacement weights per node id ("<id>" -> 4-D/2-D weight tensor).
+    pub weight_overrides: Option<&'a BTreeMap<String, Tensor>>,
+    /// Replacement biases per node id (bias-correction baselines).
+    pub bias_overrides: Option<&'a BTreeMap<String, Tensor>>,
+    /// Activation quantizers per node id (applied to that node's output).
+    pub act_quant: Option<&'a BTreeMap<String, ActQuant>>,
+}
+
+impl Model {
+    /// Plain forward pass: [N,3,32,32] -> logits [N,10] or [N,4,32,32].
+    pub fn forward(&self, x: &Tensor, opts: &ForwardOptions) -> Tensor {
+        self.forward_collect(x, opts, &BTreeSet::new()).0
+    }
+
+    /// Forward pass capturing the outputs of the nodes named in `want`.
+    pub fn forward_collect(
+        &self,
+        x: &Tensor,
+        opts: &ForwardOptions,
+        want: &BTreeSet<String>,
+    ) -> (Tensor, Taps) {
+        let mut vals: BTreeMap<&str, Tensor> = BTreeMap::new();
+        let mut taps = Taps::new();
+        for nd in &self.nodes {
+            let out = match &nd.op {
+                Op::Input => x.clone(),
+                Op::Conv { k, stride, pad, groups, relu } => {
+                    let inp = &vals[nd.inputs[0].as_str()];
+                    let w = opts
+                        .weight_overrides
+                        .and_then(|m| m.get(&nd.id))
+                        .unwrap_or_else(|| self.weight(&nd.id));
+                    let b = opts
+                        .bias_overrides
+                        .and_then(|m| m.get(&nd.id))
+                        .unwrap_or_else(|| self.bias(&nd.id));
+                    let mut y = conv2d(
+                        inp,
+                        w,
+                        Some(&b.data),
+                        Conv2dParams { k: *k, stride: *stride, pad: *pad, groups: *groups },
+                    );
+                    if *relu {
+                        y.relu_inplace();
+                    }
+                    y
+                }
+                Op::Dense { relu } => {
+                    let inp = &vals[nd.inputs[0].as_str()]; // [N, C]
+                    let w = opts
+                        .weight_overrides
+                        .and_then(|m| m.get(&nd.id))
+                        .unwrap_or_else(|| self.weight(&nd.id));
+                    let b = opts
+                        .bias_overrides
+                        .and_then(|m| m.get(&nd.id))
+                        .unwrap_or_else(|| self.bias(&nd.id));
+                    // y = inp @ w^T + b
+                    let mut y = crate::tensor::matmul(inp, &w.transpose2());
+                    for r in 0..y.rows() {
+                        for (v, bb) in y.row_mut(r).iter_mut().zip(&b.data) {
+                            *v += bb;
+                        }
+                    }
+                    if *relu {
+                        y.relu_inplace();
+                    }
+                    y
+                }
+                Op::Add { relu } => {
+                    let a = &vals[nd.inputs[0].as_str()];
+                    let b = &vals[nd.inputs[1].as_str()];
+                    let mut y = a.add(b);
+                    if *relu {
+                        y.relu_inplace();
+                    }
+                    y
+                }
+                Op::Relu => vals[nd.inputs[0].as_str()].relu(),
+                Op::AvgPool { k, stride } => {
+                    pool::avgpool2d(&vals[nd.inputs[0].as_str()], *k, *stride)
+                }
+                Op::GPool => pool::global_avgpool(&vals[nd.inputs[0].as_str()]),
+                Op::Upsample => pool::upsample2x(&vals[nd.inputs[0].as_str()]),
+                Op::Concat => {
+                    let ins: Vec<&Tensor> =
+                        nd.inputs.iter().map(|i| &vals[i.as_str()]).collect();
+                    pool::concat_channels(&ins)
+                }
+            };
+            let out = match opts.act_quant.and_then(|m| m.get(&nd.id)) {
+                Some(q) => q.apply(&out),
+                None => out,
+            };
+            if want.contains(&nd.id) {
+                taps.insert(nd.id.clone(), out.clone());
+            }
+            vals.insert(nd.id.as_str(), out);
+        }
+        let last = self.nodes.last().unwrap().id.as_str();
+        (vals.remove(last).unwrap(), taps)
+    }
+
+    /// The node ids whose outputs feed each quantizable layer (its input
+    /// activation); used to set up calibration taps.
+    pub fn layer_input_ids(&self) -> BTreeMap<String, String> {
+        self.quant_layers()
+            .iter()
+            .map(|nd| (nd.id.clone(), nd.inputs[0].clone()))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::graph::tests::{tiny_model_json, tiny_weights};
+    use super::*;
+
+    fn tiny() -> Model {
+        Model::from_manifest("tiny", &tiny_model_json(), tiny_weights()).unwrap()
+    }
+
+    #[test]
+    fn forward_shapes() {
+        let m = tiny();
+        let x = Tensor::full(&[2, 3, 32, 32], 1.0);
+        let y = m.forward(&x, &ForwardOptions::default());
+        assert_eq!(y.shape, vec![2, 2]);
+    }
+
+    #[test]
+    fn forward_values() {
+        // all-ones input, 0.1 conv weights, relu, gpool, dense 0.5:
+        // interior conv out = 27*0.1 = 2.7; borders smaller; gpool in (0,2.7];
+        // dense row adds bias (0,1)
+        let m = tiny();
+        let x = Tensor::full(&[1, 3, 32, 32], 1.0);
+        let y = m.forward(&x, &ForwardOptions::default());
+        assert!(y.data[0] > 0.0);
+        assert!((y.data[1] - y.data[0] - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn overrides_change_output() {
+        let m = tiny();
+        let x = Tensor::full(&[1, 3, 32, 32], 1.0);
+        let base = m.forward(&x, &ForwardOptions::default());
+        let mut ov = BTreeMap::new();
+        ov.insert("c1".to_string(), Tensor::zeros(&[4, 3, 3, 3]));
+        let opts = ForwardOptions {
+            weight_overrides: Some(&ov), bias_overrides: None, act_quant: None };
+        let z = m.forward(&x, &opts);
+        assert_ne!(base.data, z.data);
+        assert!((z.data[1] - 1.0).abs() < 1e-6); // only dense bias remains
+    }
+
+    #[test]
+    fn taps_capture_inputs() {
+        let m = tiny();
+        let x = Tensor::full(&[1, 3, 32, 32], 1.0);
+        let want: BTreeSet<String> = ["in".to_string(), "g1".to_string()].into();
+        let (_, taps) = m.forward_collect(&x, &ForwardOptions::default(), &want);
+        assert_eq!(taps["in"].shape, vec![1, 3, 32, 32]);
+        assert_eq!(taps["g1"].shape, vec![1, 4]);
+        let map = m.layer_input_ids();
+        assert_eq!(map["c1"], "in");
+        assert_eq!(map["d1"], "g1");
+    }
+}

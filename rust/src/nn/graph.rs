@@ -1,0 +1,261 @@
+//! Graph IR: mirrors the node schema documented in
+//! `python/compile/models.py`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::tensor::Tensor;
+use crate::util::Json;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Op {
+    Input,
+    Conv { k: usize, stride: usize, pad: usize, groups: usize, relu: bool },
+    Dense { relu: bool },
+    Add { relu: bool },
+    Relu,
+    AvgPool { k: usize, stride: usize },
+    GPool,
+    Upsample,
+    Concat,
+}
+
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub id: String,
+    pub op: Op,
+    pub inputs: Vec<String>,
+    pub cin: usize,
+    pub cout: usize,
+}
+
+/// Per-layer GEMM geometry of a quantizable (weight-bearing) node —
+/// matches the AOT shape buckets (see `python/compile/aot.py`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LayerGeom {
+    /// out channels per group (GEMM rows)
+    pub rows: usize,
+    /// im2col patch size: cin/groups * k * k (GEMM cols)
+    pub cols: usize,
+    pub groups: usize,
+    /// whether the layer is followed by a ReLU (for asymmetric reconstruction)
+    pub relu: bool,
+}
+
+#[derive(Clone, Debug)]
+pub struct Model {
+    pub name: String,
+    pub task: String,
+    pub nodes: Vec<Node>,
+    /// BN-folded FP32 weights: "<id>.w" [O, C/g, k, k] or [O, I], "<id>.b" [O]
+    pub weights: BTreeMap<String, Tensor>,
+}
+
+impl Node {
+    fn from_json(j: &Json) -> Result<Node> {
+        let id = j.str_of("id")?.to_string();
+        let op_name = j.str_of("op")?;
+        let inputs = j
+            .req("inputs")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("inputs not array"))?
+            .iter()
+            .map(|v| v.as_str().unwrap_or_default().to_string())
+            .collect();
+        let mut cin = 0;
+        let mut cout = 0;
+        let op = match op_name {
+            "input" => Op::Input,
+            "conv" => {
+                cin = j.usize_of("cin")?;
+                cout = j.usize_of("cout")?;
+                Op::Conv {
+                    k: j.usize_of("k")?,
+                    stride: j.usize_of("stride")?,
+                    pad: j.usize_of("pad")?,
+                    groups: j.usize_of("groups")?,
+                    relu: j.bool_of("relu")?,
+                }
+            }
+            "dense" => {
+                cin = j.usize_of("cin")?;
+                cout = j.usize_of("cout")?;
+                Op::Dense { relu: j.bool_of("relu")? }
+            }
+            "add" => Op::Add { relu: j.bool_of("relu")? },
+            "relu" => Op::Relu,
+            "avgpool" => Op::AvgPool { k: j.usize_of("k")?, stride: j.usize_of("stride")? },
+            "gpool" => Op::GPool,
+            "upsample" => Op::Upsample,
+            "concat" => Op::Concat,
+            other => bail!("unknown op '{other}'"),
+        };
+        Ok(Node { id, op, inputs, cin, cout })
+    }
+
+    pub fn is_quantizable(&self) -> bool {
+        matches!(self.op, Op::Conv { .. } | Op::Dense { .. })
+    }
+
+    pub fn geom(&self) -> Option<LayerGeom> {
+        match self.op {
+            Op::Conv { k, groups, relu, .. } => Some(LayerGeom {
+                rows: self.cout / groups,
+                cols: (self.cin / groups) * k * k,
+                groups,
+                relu,
+            }),
+            Op::Dense { relu } => {
+                Some(LayerGeom { rows: self.cout, cols: self.cin, groups: 1, relu })
+            }
+            _ => None,
+        }
+    }
+}
+
+impl Model {
+    /// Build from the manifest's per-model entry + loaded weight bundle.
+    pub fn from_manifest(
+        name: &str,
+        entry: &Json,
+        weights: BTreeMap<String, Tensor>,
+    ) -> Result<Model> {
+        let task = entry.str_of("task")?.to_string();
+        let ir = entry
+            .req("ir")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("ir not array"))?;
+        let nodes: Result<Vec<Node>> = ir.iter().map(Node::from_json).collect();
+        let model = Model { name: name.to_string(), task, nodes: nodes?, weights };
+        model.validate()?;
+        Ok(model)
+    }
+
+    fn validate(&self) -> Result<()> {
+        let mut seen = std::collections::BTreeSet::new();
+        for nd in &self.nodes {
+            for inp in &nd.inputs {
+                if !seen.contains(inp.as_str()) {
+                    bail!("node {} references undefined input {}", nd.id, inp);
+                }
+            }
+            seen.insert(nd.id.as_str());
+            if nd.is_quantizable() {
+                for suffix in [".w", ".b"] {
+                    let key = format!("{}{}", nd.id, suffix);
+                    if !self.weights.contains_key(&key) {
+                        bail!("missing weight {key}");
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Quantizable nodes in graph (topological) order.
+    pub fn quant_layers(&self) -> Vec<&Node> {
+        self.nodes.iter().filter(|n| n.is_quantizable()).collect()
+    }
+
+    pub fn node(&self, id: &str) -> Option<&Node> {
+        self.nodes.iter().find(|n| n.id == id)
+    }
+
+    pub fn weight(&self, id: &str) -> &Tensor {
+        &self.weights[&format!("{id}.w")]
+    }
+
+    pub fn bias(&self, id: &str) -> &Tensor {
+        &self.weights[&format!("{id}.b")]
+    }
+
+    /// Total parameter count.
+    pub fn num_params(&self) -> usize {
+        self.weights.values().map(|t| t.numel()).sum()
+    }
+
+    /// Weight matrix of a quantizable node reshaped to per-group GEMM form:
+    /// `groups` matrices of [rows, cols] (a view-copy).
+    pub fn weight_as_gemm(&self, id: &str) -> Vec<Tensor> {
+        let node = self.node(id).expect("node");
+        let geom = node.geom().expect("quantizable");
+        let w = self.weight(id);
+        let per = geom.rows * geom.cols;
+        (0..geom.groups)
+            .map(|g| {
+                Tensor::from_vec(
+                    &[geom.rows, geom.cols],
+                    w.data[g * per..(g + 1) * per].to_vec(),
+                )
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+
+    pub(crate) fn tiny_model_json() -> Json {
+        Json::parse(
+            r#"{"task":"cls","ir":[
+              {"id":"in","op":"input","inputs":[]},
+              {"id":"c1","op":"conv","inputs":["in"],"cin":3,"cout":4,
+               "k":3,"stride":1,"pad":1,"groups":1,"relu":true},
+              {"id":"g1","op":"gpool","inputs":["c1"]},
+              {"id":"d1","op":"dense","inputs":["g1"],"cin":4,"cout":2,"relu":false}
+            ]}"#,
+        )
+        .unwrap()
+    }
+
+    pub(crate) fn tiny_weights() -> BTreeMap<String, Tensor> {
+        let mut w = BTreeMap::new();
+        w.insert("c1.w".into(), Tensor::full(&[4, 3, 3, 3], 0.1));
+        w.insert("c1.b".into(), Tensor::zeros(&[4]));
+        w.insert("d1.w".into(), Tensor::full(&[2, 4], 0.5));
+        w.insert("d1.b".into(), Tensor::from_vec(&[2], vec![0.0, 1.0]));
+        w
+    }
+
+    #[test]
+    fn parse_and_validate() {
+        let m = Model::from_manifest("tiny", &tiny_model_json(), tiny_weights()).unwrap();
+        assert_eq!(m.nodes.len(), 4);
+        assert_eq!(m.quant_layers().len(), 2);
+        let g = m.node("c1").unwrap().geom().unwrap();
+        assert_eq!((g.rows, g.cols, g.groups, g.relu), (4, 27, 1, true));
+    }
+
+    #[test]
+    fn missing_weight_rejected() {
+        let mut w = tiny_weights();
+        w.remove("d1.b");
+        assert!(Model::from_manifest("tiny", &tiny_model_json(), w).is_err());
+    }
+
+    #[test]
+    fn undefined_input_rejected() {
+        let j = Json::parse(
+            r#"{"task":"cls","ir":[
+              {"id":"in","op":"input","inputs":[]},
+              {"id":"a","op":"relu","inputs":["ghost"]}]}"#,
+        )
+        .unwrap();
+        assert!(Model::from_manifest("x", &j, BTreeMap::new()).is_err());
+    }
+
+    #[test]
+    fn gemm_view_groups() {
+        let mut w = tiny_weights();
+        w.insert("c1.w".into(), Tensor::from_vec(&[4, 3, 3, 3],
+            (0..108).map(|x| x as f32).collect()));
+        let m = Model::from_manifest("tiny", &tiny_model_json(), w).unwrap();
+        let gs = m.weight_as_gemm("c1");
+        assert_eq!(gs.len(), 1);
+        assert_eq!(gs[0].shape, vec![4, 27]);
+        assert_eq!(gs[0].data[0], 0.0);
+        assert_eq!(gs[0].data[27], 27.0);
+    }
+}

@@ -1,0 +1,11 @@
+//! Model graph: IR parsing (from the manifest JSON emitted by
+//! `python/compile/models.py`) and the native forward executor.
+//!
+//! The architecture is defined exactly once, on the python side; rust
+//! interprets the same IR, so zoo additions require no rust changes.
+
+pub mod exec;
+pub mod graph;
+
+pub use exec::{ForwardOptions, Taps};
+pub use graph::{LayerGeom, Model, Node, Op};

@@ -1,0 +1,96 @@
+//! Activation fake-quantization (the paper's "w/ act quant" rows):
+//! asymmetric uint quantizer with min/max range observed on the
+//! calibration set (§5.2: "set the scaling factor for the activation
+//! quantizers based on the minimum and maximum activations observed").
+
+use crate::tensor::Tensor;
+
+#[derive(Clone, Copy, Debug)]
+pub struct ActQuant {
+    pub min: f32,
+    pub max: f32,
+    pub bits: u32,
+}
+
+impl ActQuant {
+    pub fn new(min: f32, max: f32, bits: u32) -> ActQuant {
+        ActQuant { min: min.min(0.0), max: max.max(min + 1e-6), bits }
+    }
+
+    /// Calibrate from an observed activation tensor.
+    pub fn calibrate(t: &Tensor, bits: u32) -> ActQuant {
+        let (lo, hi) = t.min_max();
+        ActQuant::new(lo, hi, bits)
+    }
+
+    /// Merge ranges across calibration chunks.
+    pub fn merge(&self, other: &ActQuant) -> ActQuant {
+        ActQuant::new(self.min.min(other.min), self.max.max(other.max), self.bits)
+    }
+
+    pub fn scale(&self) -> f32 {
+        (self.max - self.min) / ((1u32 << self.bits) - 1) as f32
+    }
+
+    /// Fake-quantize: x -> min + s * clip(round((x - min)/s), 0, 2^b - 1).
+    pub fn apply(&self, t: &Tensor) -> Tensor {
+        let s = self.scale();
+        let levels = ((1u32 << self.bits) - 1) as f32;
+        t.map(|x| {
+            let q = ((x - self.min) / s).round().clamp(0.0, levels);
+            self.min + s * q
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::property;
+
+    #[test]
+    fn identity_on_grid_points() {
+        let q = ActQuant::new(0.0, 255.0, 8);
+        let t = Tensor::from_vec(&[1, 3], vec![0.0, 100.0, 255.0]);
+        let out = q.apply(&t);
+        for (a, b) in out.data.iter().zip(&t.data) {
+            assert!((a - b).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn error_bounded_by_half_step() {
+        property(51, 20, |g| {
+            let n = g.int(1, 64);
+            let data = g.vec_normal(n, 0.0, 2.0);
+            let t = Tensor::from_vec(&[1, n], data);
+            let q = ActQuant::calibrate(&t, 8);
+            let out = q.apply(&t);
+            let half = q.scale() / 2.0 + 1e-5;
+            for (a, b) in out.data.iter().zip(&t.data) {
+                if (a - b).abs() > half {
+                    return Err(format!("err {} > half-step {half}", (a - b).abs()));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn clips_out_of_range() {
+        let q = ActQuant::new(0.0, 1.0, 8);
+        let t = Tensor::from_vec(&[1, 2], vec![-5.0, 5.0]);
+        let out = q.apply(&t);
+        assert!((out.data[0] - 0.0).abs() < 1e-6);
+        assert!((out.data[1] - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn merge_covers_both()
+    {
+        let a = ActQuant::new(-1.0, 2.0, 8);
+        let b = ActQuant::new(-3.0, 1.0, 8);
+        let m = a.merge(&b);
+        assert_eq!((m.min, m.max), (-3.0, 2.0));
+    }
+}

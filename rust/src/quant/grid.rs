@@ -1,0 +1,208 @@
+//! Quantization-grid (scale) determination.
+//!
+//! The paper fixes the scale *before* optimizing rounding (§3.1) and
+//! compares three choices in Table 6: Min-Max, weight-MSE and
+//! preactivation-MSE. All three are implemented here, each in per-tensor
+//! and per-channel (per output row) flavors.
+
+use crate::tensor::{matmul, Tensor};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GridMethod {
+    /// s = max|W| / p (uses the full range; no search)
+    MinMax,
+    /// s = argmin ||W - Wq(s)||_F^2 over a scale sweep (paper default)
+    MseW,
+    /// s = argmin ||W X - Wq(s) X||_F^2 over a scale sweep (needs samples)
+    MseOut,
+}
+
+impl GridMethod {
+    pub fn parse(s: &str) -> Option<GridMethod> {
+        match s {
+            "minmax" => Some(GridMethod::MinMax),
+            "mse-w" | "msew" => Some(GridMethod::MseW),
+            "mse-out" | "mseout" => Some(GridMethod::MseOut),
+            _ => None,
+        }
+    }
+}
+
+/// A symmetric signed fixed-point grid. `scale` has one entry per output
+/// row (per-channel) or a single entry (per-tensor).
+#[derive(Clone, Debug)]
+pub struct QuantGrid {
+    pub scale: Vec<f32>,
+    pub bits: u32,
+    pub n: f32,
+    pub p: f32,
+}
+
+impl QuantGrid {
+    pub fn bounds(bits: u32) -> (f32, f32) {
+        let half = 1i64 << (bits - 1);
+        (-(half as f32), (half - 1) as f32)
+    }
+
+    pub fn per_tensor(scale: f32, bits: u32) -> QuantGrid {
+        let (n, p) = Self::bounds(bits);
+        QuantGrid { scale: vec![scale], bits, n, p }
+    }
+
+    pub fn per_channel(scales: Vec<f32>, bits: u32) -> QuantGrid {
+        let (n, p) = Self::bounds(bits);
+        QuantGrid { scale: scales, bits, n, p }
+    }
+
+    pub fn is_per_channel(&self) -> bool {
+        self.scale.len() > 1
+    }
+
+    #[inline]
+    pub fn scale_for_row(&self, r: usize) -> f32 {
+        if self.scale.len() == 1 {
+            self.scale[0]
+        } else {
+            self.scale[r]
+        }
+    }
+
+    /// Fit a grid for a GEMM weight matrix [rows, cols].
+    ///
+    /// `x_sample`: im2col activation sample [cols, batch], required for
+    /// `MseOut` (ignored otherwise).
+    pub fn fit(
+        w: &Tensor,
+        bits: u32,
+        method: GridMethod,
+        per_channel: bool,
+        x_sample: Option<&Tensor>,
+    ) -> QuantGrid {
+        if per_channel {
+            let rows = w.shape[0];
+            let cols = w.numel() / rows;
+            let scales = (0..rows)
+                .map(|r| {
+                    let row = Tensor::from_vec(&[1, cols], w.data[r * cols..(r + 1) * cols].to_vec());
+                    fit_scalar(&row, bits, method, x_sample)
+                })
+                .collect();
+            QuantGrid::per_channel(scales, bits)
+        } else {
+            QuantGrid::per_tensor(fit_scalar(w, bits, method, x_sample), bits)
+        }
+    }
+}
+
+/// Scale-candidate sweep resolution for the MSE searches.
+const SWEEP: usize = 80;
+
+fn fit_scalar(w: &Tensor, bits: u32, method: GridMethod, x_sample: Option<&Tensor>) -> f32 {
+    let (_, p) = QuantGrid::bounds(bits);
+    let amax = w.abs_max().max(1e-8);
+    let s_max = amax / p;
+    match method {
+        GridMethod::MinMax => s_max,
+        GridMethod::MseW => sweep(s_max, |s| {
+            let g = QuantGrid::per_tensor(s, bits);
+            let wq = super::fake_quant_nearest(w, &g);
+            w.mse(&wq)
+        }),
+        GridMethod::MseOut => {
+            let x = x_sample.expect("MseOut grid needs an activation sample");
+            // row-major w may be [1, cols] (per-channel fit) or [rows, cols]
+            let rows = w.shape[0];
+            let cols = w.numel() / rows;
+            let w2 = Tensor::from_vec(&[rows, cols], w.data.clone());
+            let y_fp = matmul(&w2, x);
+            sweep(s_max, |s| {
+                let g = QuantGrid::per_tensor(s, bits);
+                let wq = super::fake_quant_nearest(&w2, &g);
+                y_fp.mse(&matmul(&wq, x))
+            })
+        }
+    }
+}
+
+/// Golden-ratio-free simple sweep: scan SWEEP candidates in
+/// [0.2 s_max, 1.05 s_max], return the argmin.
+fn sweep(s_max: f32, cost: impl Fn(f32) -> f64) -> f32 {
+    let mut best = (f64::INFINITY, s_max);
+    for i in 0..SWEEP {
+        let s = s_max * (0.2 + 0.85 * (i as f32 + 0.5) / SWEEP as f32);
+        let c = cost(s);
+        if c < best.0 {
+            best = (c, s);
+        }
+    }
+    best.1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::fake_quant_nearest;
+    use crate::util::proptest::property;
+    use crate::util::Rng;
+
+    fn random_w(seed: u64, rows: usize, cols: usize) -> Tensor {
+        let mut r = Rng::new(seed);
+        Tensor::from_vec(&[rows, cols], (0..rows * cols).map(|_| r.normal_f32(0.0, 0.3)).collect())
+    }
+
+    #[test]
+    fn bounds_4bit() {
+        assert_eq!(QuantGrid::bounds(4), (-8.0, 7.0));
+        assert_eq!(QuantGrid::bounds(8), (-128.0, 127.0));
+    }
+
+    #[test]
+    fn minmax_covers_range() {
+        let w = random_w(1, 4, 16);
+        let g = QuantGrid::fit(&w, 4, GridMethod::MinMax, false, None);
+        // largest |w| must land inside the grid (no clipping beyond 1 step)
+        assert!(g.scale[0] * 7.0 >= w.abs_max() * 0.999);
+    }
+
+    #[test]
+    fn mse_w_beats_minmax_on_mse() {
+        let w = random_w(2, 8, 32);
+        let gm = QuantGrid::fit(&w, 4, GridMethod::MinMax, false, None);
+        let gs = QuantGrid::fit(&w, 4, GridMethod::MseW, false, None);
+        let em = w.mse(&fake_quant_nearest(&w, &gm));
+        let es = w.mse(&fake_quant_nearest(&w, &gs));
+        assert!(es <= em * 1.0001, "mse-w {es} vs minmax {em}");
+    }
+
+    #[test]
+    fn mse_out_valid_and_competitive() {
+        let w = random_w(3, 6, 18);
+        let mut r = Rng::new(9);
+        let x = Tensor::from_vec(&[18, 40], (0..18 * 40).map(|_| r.normal_f32(0.0, 1.0)).collect());
+        let g = QuantGrid::fit(&w, 4, GridMethod::MseOut, false, Some(&x));
+        assert!(g.scale[0] > 0.0);
+        let y = matmul(&w, &x);
+        let gq = fake_quant_nearest(&w, &g);
+        let gmm = QuantGrid::fit(&w, 4, GridMethod::MinMax, false, None);
+        let q2 = fake_quant_nearest(&w, &gmm);
+        assert!(y.mse(&matmul(&gq, &x)) <= y.mse(&matmul(&q2, &x)) * 1.0001);
+    }
+
+    #[test]
+    fn per_channel_no_worse_per_row() {
+        property(31, 10, |g| {
+            let rows = g.int(2, 6);
+            let cols = g.int(4, 24);
+            let w = Tensor::from_vec(&[rows, cols], g.vec_normal(rows * cols, 0.0, 0.5));
+            let gt = QuantGrid::fit(&w, 4, GridMethod::MseW, false, None);
+            let gc = QuantGrid::fit(&w, 4, GridMethod::MseW, true, None);
+            let et = w.mse(&fake_quant_nearest(&w, &gt));
+            let ec = w.mse(&fake_quant_nearest(&w, &gc));
+            if ec <= et * 1.01 {
+                Ok(())
+            } else {
+                Err(format!("per-channel {ec} worse than per-tensor {et}"))
+            }
+        });
+    }
+}

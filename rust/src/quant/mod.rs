@@ -1,0 +1,126 @@
+//! Quantization substrate: symmetric fixed-point grids, scale search,
+//! rounding schemes, and activation quantizers.
+//!
+//! Terminology follows the paper (eq. 1): a weight w maps to
+//! `s * clip(floor(w/s) + r, n, p)` with r in {0,1} the up/down choice,
+//! `n = -2^(b-1)`, `p = 2^(b-1)-1`.
+
+pub mod act;
+pub mod grid;
+pub mod rounding;
+
+pub use act::ActQuant;
+pub use grid::{GridMethod, QuantGrid};
+pub use rounding::{nearest_mask, rounding_mask, RoundingMode};
+
+use crate::tensor::Tensor;
+
+/// Fake-quantize a GEMM-shaped weight matrix [rows, cols] with a binary
+/// rounding mask (same shape). The grid's scale is per-row (per-channel)
+/// or broadcast (per-tensor).
+pub fn fake_quant(w: &Tensor, mask: &Tensor, grid: &QuantGrid) -> Tensor {
+    assert_eq!(w.shape, mask.shape);
+    let rows = w.shape[0];
+    let cols: usize = w.numel() / rows;
+    let mut out = w.clone();
+    for r in 0..rows {
+        let s = grid.scale_for_row(r);
+        for c in 0..cols {
+            let i = r * cols + c;
+            let z = (w.data[i] / s).floor() + mask.data[i];
+            out.data[i] = s * z.clamp(grid.n, grid.p);
+        }
+    }
+    out
+}
+
+/// Round-to-nearest fake-quantization (the paper's baseline, eq. 1).
+pub fn fake_quant_nearest(w: &Tensor, grid: &QuantGrid) -> Tensor {
+    let mask = nearest_mask(w, grid);
+    fake_quant(w, &mask, grid)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::property;
+    use crate::util::Rng;
+
+    #[test]
+    fn fake_quant_on_grid() {
+        let grid = QuantGrid::per_tensor(0.1, 4);
+        let w = Tensor::from_vec(&[1, 4], vec![0.12, -0.27, 0.61, 5.0]);
+        let q = fake_quant_nearest(&w, &grid);
+        // 0.12 -> 0.1, -0.27 -> -0.3, 0.61 -> 0.6, 5.0 -> clip at 7*0.1
+        let expect = [0.1, -0.3, 0.6, 0.7];
+        for (a, b) in q.data.iter().zip(expect) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn quantized_values_always_on_grid() {
+        property(91, 25, |g| {
+            let rows = g.int(1, 8);
+            let cols = g.int(1, 24);
+            let bits = *g.choice(&[2u32, 3, 4, 8]);
+            let w = Tensor::from_vec(&[rows, cols], g.vec_normal(rows * cols, 0.0, 0.6));
+            let per_channel = g.bool();
+            let grid = QuantGrid::fit(&w, bits, GridMethod::MseW, per_channel, None);
+            let mut rng = Rng::new(g.case as u64);
+            let mode = *g.choice(&[RoundingMode::Nearest, RoundingMode::Floor,
+                                   RoundingMode::Ceil, RoundingMode::Stochastic]);
+            let mask = rounding_mask(&w, &grid, mode, &mut rng);
+            for v in &mask.data {
+                if *v != 0.0 && *v != 1.0 {
+                    return Err(format!("mask not binary: {v}"));
+                }
+            }
+            let q = fake_quant(&w, &mask, &grid);
+            for r in 0..rows {
+                let s = grid.scale_for_row(r);
+                for c in 0..cols {
+                    let v = q.at2(r, c);
+                    let z = v / s;
+                    if (z - z.round()).abs() > 1e-3 {
+                        return Err(format!("{v} not on grid step {s}"));
+                    }
+                    if z < grid.n - 0.01 || z > grid.p + 0.01 {
+                        return Err(format!("{z} outside [{}, {}]", grid.n, grid.p));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn nearest_error_bounded_by_half_step() {
+        property(92, 25, |g| {
+            let n = g.int(1, 40);
+            let w = Tensor::from_vec(&[1, n], g.vec_normal(n, 0.0, 0.3));
+            let grid = QuantGrid::fit(&w, 4, GridMethod::MinMax, false, None);
+            let q = fake_quant_nearest(&w, &grid);
+            let half = grid.scale[0] * 0.5 + 1e-6;
+            for (a, b) in w.data.iter().zip(&q.data) {
+                // min-max grid covers the range, so error <= half step
+                if (a - b).abs() > half {
+                    return Err(format!("|{a} - {b}| > {half}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn all_up_vs_all_down() {
+        let grid = QuantGrid::per_tensor(0.1, 4);
+        let w = Tensor::from_vec(&[1, 2], vec![0.14, -0.26]);
+        let up = fake_quant(&w, &Tensor::full(&[1, 2], 1.0), &grid);
+        let down = fake_quant(&w, &Tensor::full(&[1, 2], 0.0), &grid);
+        assert!((up.data[0] - 0.2).abs() < 1e-6);
+        assert!((down.data[0] - 0.1).abs() < 1e-6);
+        assert!((up.data[1] + 0.2).abs() < 1e-6);
+        assert!((down.data[1] + 0.3).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,109 @@
+//! Rounding schemes (Table 1 of the paper): nearest / floor / ceil /
+//! stochastic, all expressed as binary up/down masks over `floor(W/s)`.
+
+use crate::tensor::Tensor;
+use crate::util::Rng;
+
+use super::QuantGrid;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoundingMode {
+    Nearest,
+    Floor,
+    Ceil,
+    /// Round up with probability equal to the fractional part
+    /// (Gupta et al., 2015).
+    Stochastic,
+}
+
+impl RoundingMode {
+    pub fn parse(s: &str) -> Option<RoundingMode> {
+        match s {
+            "nearest" => Some(RoundingMode::Nearest),
+            "floor" => Some(RoundingMode::Floor),
+            "ceil" => Some(RoundingMode::Ceil),
+            "stochastic" => Some(RoundingMode::Stochastic),
+            _ => None,
+        }
+    }
+}
+
+/// Binary mask R with R[i] = 1 iff weight i rounds up.
+pub fn rounding_mask(w: &Tensor, grid: &QuantGrid, mode: RoundingMode, rng: &mut Rng) -> Tensor {
+    let rows = w.shape[0];
+    let cols = w.numel() / rows;
+    let mut mask = Tensor::zeros(&w.shape);
+    for r in 0..rows {
+        let s = grid.scale_for_row(r);
+        for c in 0..cols {
+            let i = r * cols + c;
+            let frac = w.data[i] / s - (w.data[i] / s).floor();
+            mask.data[i] = match mode {
+                RoundingMode::Nearest => (frac >= 0.5) as u8 as f32,
+                RoundingMode::Floor => 0.0,
+                RoundingMode::Ceil => 1.0,
+                RoundingMode::Stochastic => rng.bernoulli(frac as f64) as u8 as f32,
+            };
+        }
+    }
+    mask
+}
+
+/// Round-to-nearest mask (deterministic shortcut).
+pub fn nearest_mask(w: &Tensor, grid: &QuantGrid) -> Tensor {
+    let mut rng = Rng::new(0); // unused by Nearest
+    rounding_mask(w, grid, RoundingMode::Nearest, &mut rng)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::fake_quant;
+    use crate::util::proptest::property;
+
+    #[test]
+    fn modes_basic() {
+        let grid = QuantGrid::per_tensor(1.0, 4);
+        let w = Tensor::from_vec(&[1, 3], vec![0.4, 0.6, -0.4]);
+        let mut rng = Rng::new(0);
+        let near = rounding_mask(&w, &grid, RoundingMode::Nearest, &mut rng);
+        assert_eq!(near.data, vec![0.0, 1.0, 1.0]); // -0.4: floor=-1, frac=.6 -> up
+        let fl = rounding_mask(&w, &grid, RoundingMode::Floor, &mut rng);
+        assert_eq!(fl.data, vec![0.0; 3]);
+        let ce = rounding_mask(&w, &grid, RoundingMode::Ceil, &mut rng);
+        assert_eq!(ce.data, vec![1.0; 3]);
+    }
+
+    #[test]
+    fn stochastic_is_unbiased() {
+        let grid = QuantGrid::per_tensor(1.0, 8);
+        let w = Tensor::from_vec(&[1, 1], vec![0.3]);
+        let mut rng = Rng::new(42);
+        let mut ups = 0;
+        for _ in 0..5000 {
+            let m = rounding_mask(&w, &grid, RoundingMode::Stochastic, &mut rng);
+            ups += m.data[0] as usize;
+        }
+        let p = ups as f64 / 5000.0;
+        assert!((p - 0.3).abs() < 0.03, "up-probability {p}");
+    }
+
+    #[test]
+    fn nearest_minimizes_per_weight_error() {
+        property(41, 20, |g| {
+            let n = g.int(1, 32);
+            let w = Tensor::from_vec(&[1, n], g.vec_normal(n, 0.0, 0.4));
+            let grid = QuantGrid::per_tensor(g.f32(0.01, 0.2), 4);
+            let near = fake_quant(&w, &nearest_mask(&w, &grid), &grid);
+            for mode in [RoundingMode::Floor, RoundingMode::Ceil] {
+                let mut rng = Rng::new(g.case as u64);
+                let m = rounding_mask(&w, &grid, mode, &mut rng);
+                let q = fake_quant(&w, &m, &grid);
+                if w.mse(&near) > w.mse(&q) + 1e-9 {
+                    return Err(format!("nearest not per-weight optimal vs {mode:?}"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,58 @@
+//! Exhaustive QUBO enumeration — the ground-truth oracle for solver tests
+//! (n <= 24; cost is evaluated incrementally over a Gray-code walk).
+
+use super::problem::QuboProblem;
+
+/// Returns (optimal assignment, optimal cost). Panics for n > 24.
+pub fn solve_exhaustive(prob: &QuboProblem) -> (Vec<u8>, f64) {
+    let n = prob.n;
+    assert!(n <= 24, "exhaustive solver limited to 24 variables, got {n}");
+    let mut r = vec![0u8; n];
+    let mut g = prob.fields(&r);
+    let mut cost = prob.eval(&r);
+    let mut best_cost = cost;
+    let mut best_code: u64 = 0;
+    let mut code: u64 = 0;
+    // Gray-code walk: step k flips bit = trailing zeros of k
+    for k in 1u64..(1u64 << n) {
+        let bit = k.trailing_zeros() as usize;
+        cost += prob.flip_delta(&r, &g, bit);
+        prob.apply_flip(&mut r, &mut g, bit);
+        code ^= 1 << bit;
+        if cost < best_cost {
+            best_cost = cost;
+            best_code = code;
+        }
+    }
+    let best: Vec<u8> = (0..n).map(|i| ((best_code >> i) & 1) as u8).collect();
+    (best, best_cost)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::problem::tests::random_problem;
+    use super::*;
+
+    #[test]
+    fn matches_bruteforce_eval() {
+        let (prob, _) = random_problem(1, 8, 16);
+        let (r, cost) = solve_exhaustive(&prob);
+        // recompute from scratch
+        assert!((prob.eval(&r) - cost).abs() < 1e-9);
+        // verify optimality by naive loop
+        for code in 0..(1u32 << prob.n) {
+            let cand: Vec<u8> = (0..prob.n).map(|i| ((code >> i) & 1) as u8).collect();
+            assert!(prob.eval(&cand) >= cost - 1e-9);
+        }
+    }
+
+    #[test]
+    fn beats_or_ties_nearest() {
+        for seed in 0..4u64 {
+            let (prob, _) = random_problem(seed + 70, 12, 24);
+            let nearest: Vec<u8> = prob.frac.iter().map(|&f| (f >= 0.5) as u8).collect();
+            let (_, opt) = solve_exhaustive(&prob);
+            assert!(opt <= prob.eval(&nearest) + 1e-12);
+        }
+    }
+}

@@ -1,0 +1,22 @@
+//! QUBO formulation of the rounding problem (paper §3.1-3.2) and solvers.
+//!
+//! Per output row k (eq. 20), with binary up/down variables r:
+//!
+//! ```text
+//! Δ(r) = a + d ⊙ r,   a_i = w_i - floor-quant(w_i),  d_i = Δup - Δdown
+//! cost(r) = Δ(r)^T H Δ(r),   H = E[x x^T]   (the layer-input Gram)
+//! ```
+//!
+//! expanded into standard QUBO form `r^T Q r + lin^T r + c0`.
+//! Solvers: cross-entropy method (the paper's choice), tabu search (the
+//! qbsolv stand-in for Table 10), and exhaustive enumeration (test oracle).
+
+pub mod cem;
+pub mod exhaustive;
+pub mod problem;
+pub mod tabu;
+
+pub use cem::{solve_cem, CemParams};
+pub use exhaustive::solve_exhaustive;
+pub use problem::{gram, QuboProblem};
+pub use tabu::{solve_tabu, TabuParams};

@@ -1,0 +1,244 @@
+//! QUBO problem construction from a layer row + input Gram matrix.
+
+use crate::quant::QuantGrid;
+use crate::tensor::Tensor;
+
+/// Minimize `r^T Q r + lin^T r + c0` over r in {0,1}^n.
+/// Q is symmetric, stored dense row-major in f64.
+#[derive(Clone, Debug)]
+pub struct QuboProblem {
+    pub n: usize,
+    pub q: Vec<f64>,
+    pub lin: Vec<f64>,
+    pub c0: f64,
+    /// fractional parts frac(w/s) — the paper's smart CEM initialization
+    pub frac: Vec<f64>,
+}
+
+/// E[x x^T] from an im2col activation sample X [cols, batch].
+pub fn gram(x: &Tensor) -> Vec<f64> {
+    let (cols, batch) = (x.rows(), x.cols());
+    let mut h = vec![0.0f64; cols * cols];
+    for i in 0..cols {
+        let xi = x.row(i);
+        for j in i..cols {
+            let xj = x.row(j);
+            let mut acc = 0.0f64;
+            for (a, b) in xi.iter().zip(xj) {
+                acc += (*a as f64) * (*b as f64);
+            }
+            acc /= batch as f64;
+            h[i * cols + j] = acc;
+            h[j * cols + i] = acc;
+        }
+    }
+    h
+}
+
+impl QuboProblem {
+    /// Build the rounding QUBO for one weight row under a fixed grid.
+    ///
+    /// `h` is the `cols x cols` Gram matrix from [`gram`]; `row` indexes the
+    /// grid's per-channel scale.
+    pub fn from_row(w_row: &[f32], grid: &QuantGrid, row: usize, h: &[f64]) -> QuboProblem {
+        let n = w_row.len();
+        assert_eq!(h.len(), n * n);
+        let s = grid.scale_for_row(row) as f64;
+        let (lo, hi) = (grid.n as f64, grid.p as f64);
+        // perturbations for down (r=0) and up (r=1)
+        let mut a = vec![0.0f64; n];
+        let mut d = vec![0.0f64; n];
+        let mut frac = vec![0.0f64; n];
+        for i in 0..n {
+            let w = w_row[i] as f64;
+            let f = (w / s).floor();
+            let down = s * f.clamp(lo, hi);
+            let up = s * (f + 1.0).clamp(lo, hi);
+            a[i] = w - down;
+            d[i] = down - up; // Δ(1) - Δ(0) = (w-up) - (w-down)
+            frac[i] = (w / s - f).clamp(0.0, 1.0);
+        }
+        // cost(r) = (a + d.r)^T H (a + d.r)
+        //         = a^T H a + sum_i 2 d_i (H a)_i r_i + sum_ij d_i d_j H_ij r_i r_j
+        let mut ha = vec![0.0f64; n];
+        for i in 0..n {
+            let mut acc = 0.0;
+            for j in 0..n {
+                acc += h[i * n + j] * a[j];
+            }
+            ha[i] = acc;
+        }
+        let mut c0 = 0.0;
+        for i in 0..n {
+            c0 += a[i] * ha[i];
+        }
+        let mut q = vec![0.0f64; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                q[i * n + j] = d[i] * d[j] * h[i * n + j];
+            }
+        }
+        let lin: Vec<f64> = (0..n).map(|i| 2.0 * d[i] * ha[i]).collect();
+        QuboProblem { n, q, lin, c0, frac }
+    }
+
+    /// Full cost of an assignment.
+    pub fn eval(&self, r: &[u8]) -> f64 {
+        debug_assert_eq!(r.len(), self.n);
+        let mut cost = self.c0;
+        for i in 0..self.n {
+            if r[i] == 0 {
+                continue;
+            }
+            cost += self.lin[i];
+            let qi = &self.q[i * self.n..(i + 1) * self.n];
+            for j in 0..self.n {
+                if r[j] != 0 {
+                    cost += qi[j];
+                }
+            }
+        }
+        cost
+    }
+
+    /// Field cache g_i = sum_j Q_sym[i,j] r_j for O(1)-amortized flips,
+    /// where Q_sym[i,j] = Q[i,j] + Q[j,i] (Q is symmetric so = 2 Q[i,j]).
+    pub fn fields(&self, r: &[u8]) -> Vec<f64> {
+        let mut g = vec![0.0f64; self.n];
+        for i in 0..self.n {
+            let qi = &self.q[i * self.n..(i + 1) * self.n];
+            let mut acc = 0.0;
+            for j in 0..self.n {
+                if r[j] != 0 {
+                    acc += qi[j];
+                }
+            }
+            g[i] = 2.0 * acc;
+        }
+        g
+    }
+
+    /// Cost change from flipping bit i given the field cache.
+    #[inline]
+    pub fn flip_delta(&self, r: &[u8], g: &[f64], i: usize) -> f64 {
+        let qii = self.q[i * self.n + i];
+        if r[i] == 0 {
+            self.lin[i] + g[i] + qii
+        } else {
+            -(self.lin[i] + g[i] - qii)
+        }
+    }
+
+    /// Apply a flip, updating the field cache in O(n).
+    pub fn apply_flip(&self, r: &mut [u8], g: &mut [f64], i: usize) {
+        let sign = if r[i] == 0 { 1.0 } else { -1.0 };
+        r[i] ^= 1;
+        for j in 0..self.n {
+            g[j] += sign * 2.0 * self.q[j * self.n + i];
+        }
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+    use crate::util::proptest::property;
+    use crate::util::Rng;
+
+    pub(crate) fn random_problem(seed: u64, n: usize, batch: usize) -> (QuboProblem, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let w: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 0.3)).collect();
+        let x = Tensor::from_vec(
+            &[n, batch],
+            (0..n * batch).map(|_| rng.normal_f32(0.0, 1.0)).collect(),
+        );
+        let h = gram(&x);
+        let grid = QuantGrid::per_tensor(0.05, 4);
+        (QuboProblem::from_row(&w, &grid, 0, &h), w)
+    }
+
+    /// Direct MSE evaluation: E[(Δ x)^2] for a given rounding — the oracle
+    /// the QUBO expansion must match.
+    fn direct_cost(w: &[f32], r: &[u8], x: &Tensor, grid: &QuantGrid) -> f64 {
+        let n = w.len();
+        let batch = x.cols();
+        let s = grid.scale[0] as f64;
+        let dq: Vec<f64> = (0..n)
+            .map(|i| {
+                let f = (w[i] as f64 / s).floor();
+                let z = (f + r[i] as f64).clamp(grid.n as f64, grid.p as f64);
+                w[i] as f64 - s * z
+            })
+            .collect();
+        let mut acc = 0.0;
+        for b in 0..batch {
+            let mut dot = 0.0;
+            for i in 0..n {
+                dot += dq[i] * x.at2(i, b) as f64;
+            }
+            acc += dot * dot;
+        }
+        acc / batch as f64
+    }
+
+    #[test]
+    fn qubo_matches_direct_mse() {
+        property(61, 15, |g| {
+            let n = g.int(2, 12);
+            let batch = g.int(4, 30);
+            let mut rng = Rng::new(g.case as u64 + 100);
+            let w: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 0.3)).collect();
+            let x = Tensor::from_vec(
+                &[n, batch],
+                (0..n * batch).map(|_| rng.normal_f32(0.0, 1.0)).collect(),
+            );
+            let grid = QuantGrid::per_tensor(0.05, 4);
+            let h = gram(&x);
+            let prob = QuboProblem::from_row(&w, &grid, 0, &h);
+            for _ in 0..5 {
+                let r: Vec<u8> = (0..n).map(|_| rng.bernoulli(0.5) as u8).collect();
+                let c1 = prob.eval(&r);
+                let c2 = direct_cost(&w, &r, &x, &grid);
+                if (c1 - c2).abs() > 1e-6 * (1.0 + c2.abs()) {
+                    return Err(format!("qubo {c1} vs direct {c2}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn flip_delta_consistent() {
+        property(62, 10, |gen| {
+            let (prob, _) = random_problem(gen.case as u64, gen.int(3, 15), 20);
+            let mut rng = Rng::new(gen.case as u64 + 7);
+            let mut r: Vec<u8> = (0..prob.n).map(|_| rng.bernoulli(0.5) as u8).collect();
+            let mut g = prob.fields(&r);
+            let mut cost = prob.eval(&r);
+            for _ in 0..20 {
+                let i = rng.below(prob.n);
+                let delta = prob.flip_delta(&r, &g, i);
+                prob.apply_flip(&mut r, &mut g, i);
+                cost += delta;
+                let fresh = prob.eval(&r);
+                if (cost - fresh).abs() > 1e-6 * (1.0 + fresh.abs()) {
+                    return Err(format!("incremental {cost} vs fresh {fresh}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn gram_is_symmetric_psd_diag() {
+        let mut rng = Rng::new(5);
+        let x = Tensor::from_vec(&[6, 40], (0..240).map(|_| rng.normal_f32(0.0, 1.0)).collect());
+        let h = gram(&x);
+        for i in 0..6 {
+            assert!(h[i * 6 + i] >= 0.0);
+            for j in 0..6 {
+                assert!((h[i * 6 + j] - h[j * 6 + i]).abs() < 1e-12);
+            }
+        }
+    }
+}

@@ -1,0 +1,88 @@
+//! Tabu-search QUBO solver — the classical core of D-Wave's `qbsolv`
+//! (Table 10's comparison baseline). Random restarts + greedy 1-flip with
+//! a recency tabu list; deliberately *no* smart initialization, matching
+//! the paper's observation that the qbsolv API does not accept one.
+
+use crate::util::Rng;
+
+use super::problem::QuboProblem;
+
+#[derive(Clone, Copy, Debug)]
+pub struct TabuParams {
+    pub restarts: usize,
+    pub iters_per_restart: usize,
+    pub tenure: usize,
+}
+
+impl Default for TabuParams {
+    fn default() -> Self {
+        TabuParams { restarts: 6, iters_per_restart: 400, tenure: 12 }
+    }
+}
+
+/// Returns (best assignment, best cost).
+pub fn solve_tabu(prob: &QuboProblem, params: TabuParams, rng: &mut Rng) -> (Vec<u8>, f64) {
+    let n = prob.n;
+    let mut global_best: Option<(f64, Vec<u8>)> = None;
+
+    for _ in 0..params.restarts {
+        // random start (uniform — no smart init, see module docs)
+        let mut r: Vec<u8> = (0..n).map(|_| rng.bernoulli(0.5) as u8).collect();
+        let mut g = prob.fields(&r);
+        let mut cost = prob.eval(&r);
+        let mut best_cost = cost;
+        let mut best_r = r.clone();
+        let mut tabu_until = vec![0usize; n];
+
+        for it in 0..params.iters_per_restart {
+            // best admissible 1-flip (aspiration: always allow a new global best)
+            let mut chosen: Option<(usize, f64)> = None;
+            for i in 0..n {
+                let d = prob.flip_delta(&r, &g, i);
+                let admissible = tabu_until[i] <= it || cost + d < best_cost - 1e-15;
+                if admissible && chosen.map(|(_, bd)| d < bd).unwrap_or(true) {
+                    chosen = Some((i, d));
+                }
+            }
+            let Some((i, d)) = chosen else { break };
+            prob.apply_flip(&mut r, &mut g, i);
+            cost += d;
+            tabu_until[i] = it + params.tenure;
+            if cost < best_cost {
+                best_cost = cost;
+                best_r = r.clone();
+            }
+        }
+        if global_best.as_ref().map(|(c, _)| best_cost < *c).unwrap_or(true) {
+            global_best = Some((best_cost, best_r));
+        }
+    }
+    let (cost, r) = global_best.unwrap();
+    (r, cost)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::problem::tests::random_problem;
+    use super::*;
+
+    #[test]
+    fn improves_over_random() {
+        let (prob, _) = random_problem(3, 20, 48);
+        let mut rng = Rng::new(4);
+        let random: Vec<u8> = (0..prob.n).map(|_| rng.bernoulli(0.5) as u8).collect();
+        let (_, cost) = solve_tabu(&prob, TabuParams::default(), &mut rng);
+        assert!(cost <= prob.eval(&random) + 1e-12);
+    }
+
+    #[test]
+    fn near_optimal_on_small() {
+        for seed in 0..3u64 {
+            let (prob, _) = random_problem(seed + 20, 10, 32);
+            let (_, opt) = super::super::solve_exhaustive(&prob);
+            let mut rng = Rng::new(seed);
+            let (_, cost) = solve_tabu(&prob, TabuParams::default(), &mut rng);
+            assert!(cost <= opt * 1.05 + 1e-9, "tabu {cost} vs opt {opt}");
+        }
+    }
+}

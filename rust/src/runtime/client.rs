@@ -1,0 +1,74 @@
+//! CPU PJRT client + compiled-executable cache.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::exec::{QLinearExec, StepExec};
+use super::manifest::Manifest;
+
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: RefCell<BTreeMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    pub fn new(artifacts_dir: &str) -> Result<Runtime> {
+        // silence TfrtCpuClient created/destroyed chatter
+        if std::env::var("TF_CPP_MIN_LOG_LEVEL").is_err() {
+            std::env::set_var("TF_CPP_MIN_LOG_LEVEL", "1");
+        }
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime { client, manifest, cache: RefCell::new(BTreeMap::new()) })
+    }
+
+    /// Load + compile an HLO-text artifact (cached by relative path).
+    pub fn compile(&self, rel_path: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.borrow().get(rel_path) {
+            return Ok(e.clone());
+        }
+        let full = self.manifest.dir.join(rel_path);
+        let proto = xla::HloModuleProto::from_text_file(
+            full.to_str().ok_or_else(|| anyhow!("bad path"))?,
+        )
+        .map_err(|e| anyhow!("parse HLO {full:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {rel_path}: {e:?}"))?;
+        let rc = Rc::new(exe);
+        self.cache.borrow_mut().insert(rel_path.to_string(), rc.clone());
+        Ok(rc)
+    }
+
+    /// AdaRound step executable for a layer geometry.
+    pub fn step_exec(&self, rows: usize, cols: usize, relu: bool) -> Result<StepExec> {
+        let spec = self
+            .manifest
+            .find_exec("adaround_step", rows, cols, relu)
+            .with_context(|| format!("no adaround_step artifact for r{rows} c{cols} relu={relu}"))?
+            .clone();
+        let exe = self.compile(&spec.file)?;
+        Ok(StepExec { exe, rows, cols, batch: spec.batch })
+    }
+
+    /// Quantized-matmul inference executable for a layer geometry.
+    pub fn qlinear_exec(&self, rows: usize, cols: usize, batch: usize) -> Result<QLinearExec> {
+        let spec = self
+            .manifest
+            .find_qlinear(rows, cols, batch)
+            .with_context(|| format!("no qlinear artifact for r{rows} c{cols} n{batch}"))?
+            .clone();
+        let exe = self.compile(&spec.file)?;
+        Ok(QLinearExec { exe, rows, cols, batch })
+    }
+
+    pub fn compiled_count(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}

@@ -1,0 +1,148 @@
+//! Typed wrappers around the two AOT executables.
+
+use std::rc::Rc;
+
+use anyhow::{anyhow, Result};
+
+use crate::tensor::Tensor;
+
+fn lit2(t: &Tensor) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(&t.data)
+        .reshape(&dims)
+        .map_err(|e| anyhow!("literal reshape: {e:?}"))
+}
+
+fn scalar(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+fn to_tensor(l: &xla::Literal, shape: &[usize]) -> Result<Tensor> {
+    let v = l.to_vec::<f32>().map_err(|e| anyhow!("literal to_vec: {e:?}"))?;
+    Ok(Tensor::from_vec(shape, v))
+}
+
+/// Mutable optimizer state shuttled through the step executable.
+pub struct StepState {
+    pub v: Tensor,
+    pub m: Tensor,
+    pub v2: Tensor,
+    pub t: usize,
+}
+
+impl StepState {
+    pub fn new(v: Tensor) -> StepState {
+        let m = Tensor::zeros(&v.shape);
+        let v2 = Tensor::zeros(&v.shape);
+        StepState { v, m, v2, t: 0 }
+    }
+}
+
+/// One compiled AdaRound step artifact (fixed rows/cols/batch/relu).
+///
+/// Signature (python/compile/model.py):
+///   (V, m, v2, t, X, T, W, s, b, beta, lam, lr, n, p) -> (V', m', v2', loss, mse)
+pub struct StepExec {
+    pub exe: Rc<xla::PjRtLoadedExecutable>,
+    pub rows: usize,
+    pub cols: usize,
+    pub batch: usize,
+}
+
+impl StepExec {
+    /// Run one optimization step; updates `state` in place and returns
+    /// (loss, mse).
+    #[allow(clippy::too_many_arguments)]
+    pub fn run(
+        &self,
+        state: &mut StepState,
+        x: &Tensor,
+        t_target: &Tensor,
+        w: &Tensor,
+        s: &Tensor,
+        b: &Tensor,
+        beta: f32,
+        lam: f32,
+        lr: f32,
+        n: f32,
+        p: f32,
+    ) -> Result<(f64, f64)> {
+        state.t += 1;
+        let args = [
+            lit2(&state.v)?,
+            lit2(&state.m)?,
+            lit2(&state.v2)?,
+            scalar(state.t as f32),
+            lit2(x)?,
+            lit2(t_target)?,
+            lit2(w)?,
+            lit2(s)?,
+            lit2(b)?,
+            scalar(beta),
+            scalar(lam),
+            scalar(lr),
+            scalar(n),
+            scalar(p),
+        ];
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&args)
+            .map_err(|e| anyhow!("step execute: {e:?}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?
+            .to_tuple()
+            .map_err(|e| anyhow!("untuple: {e:?}"))?;
+        anyhow::ensure!(tuple.len() == 5, "expected 5 outputs, got {}", tuple.len());
+        let shape = [self.rows, self.cols];
+        state.v = to_tensor(&tuple[0], &shape)?;
+        state.m = to_tensor(&tuple[1], &shape)?;
+        state.v2 = to_tensor(&tuple[2], &shape)?;
+        let loss = tuple[3].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?[0] as f64;
+        let mse = tuple[4].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?[0] as f64;
+        Ok((loss, mse))
+    }
+}
+
+/// One compiled quantized-matmul inference artifact.
+///
+/// Signature: (W, R, s, b, X, n, p) -> Y [rows, batch]
+pub struct QLinearExec {
+    pub exe: Rc<xla::PjRtLoadedExecutable>,
+    pub rows: usize,
+    pub cols: usize,
+    pub batch: usize,
+}
+
+impl QLinearExec {
+    pub fn run(
+        &self,
+        w: &Tensor,
+        r: &Tensor,
+        s: &Tensor,
+        b: &Tensor,
+        x: &Tensor,
+        n: f32,
+        p: f32,
+    ) -> Result<Tensor> {
+        let args = [
+            lit2(w)?,
+            lit2(r)?,
+            lit2(s)?,
+            lit2(b)?,
+            lit2(x)?,
+            scalar(n),
+            scalar(p),
+        ];
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&args)
+            .map_err(|e| anyhow!("qlinear execute: {e:?}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?
+            .to_tuple()
+            .map_err(|e| anyhow!("untuple: {e:?}"))?;
+        to_tensor(&tuple[0], &[self.rows, self.batch])
+    }
+}

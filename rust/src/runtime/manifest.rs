@@ -1,0 +1,108 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! rust runtime.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::io::read_qtz;
+use crate::nn::Model;
+use crate::tensor::{IntTensor, Tensor};
+use crate::util::Json;
+
+#[derive(Clone, Debug)]
+pub struct ExecSpec {
+    pub kind: String,
+    pub rows: usize,
+    pub cols: usize,
+    pub batch: usize,
+    pub relu: bool,
+    pub file: String,
+}
+
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub json: Json,
+    pub executables: Vec<ExecSpec>,
+    pub step_batch: usize,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let json = Json::parse(&text)?;
+        let mut executables = Vec::new();
+        for e in json.req("executables")?.as_arr().ok_or_else(|| anyhow!("bad executables"))? {
+            executables.push(ExecSpec {
+                kind: e.str_of("kind")?.to_string(),
+                rows: e.usize_of("rows")?,
+                cols: e.usize_of("cols")?,
+                batch: e.usize_of("batch")?,
+                relu: e.bool_of("relu")?,
+                file: e.str_of("file")?.to_string(),
+            });
+        }
+        let step_batch = json.usize_of("step_batch")?;
+        Ok(Manifest { dir, json, executables, step_batch })
+    }
+
+    pub fn model_names(&self) -> Vec<String> {
+        self.json
+            .get("models")
+            .and_then(|m| m.as_obj())
+            .map(|m| m.keys().cloned().collect())
+            .unwrap_or_default()
+    }
+
+    /// Load a model: IR from the manifest + weights from its .qtz bundle.
+    pub fn load_model(&self, name: &str) -> Result<Model> {
+        let entry = self
+            .json
+            .req("models")?
+            .get(name)
+            .ok_or_else(|| anyhow!("model '{name}' not in manifest"))?;
+        let wfile = self.dir.join(entry.str_of("weights")?);
+        let bundle = read_qtz(&wfile)?;
+        let mut weights = BTreeMap::new();
+        for (k, v) in bundle {
+            weights.insert(k, v.as_f32()?.clone());
+        }
+        Model::from_manifest(name, entry, weights)
+    }
+
+    /// FP32 reference metric recorded at training time (top1 or miou).
+    pub fn fp32_metric(&self, name: &str) -> Option<f64> {
+        let rep = self.json.get("models")?.get(name)?.get("fp32_report")?;
+        rep.get("top1").or_else(|| rep.get("miou"))?.as_f64()
+    }
+
+    /// Load a dataset bundle: (images [N,3,32,32], labels).
+    pub fn load_dataset(&self, name: &str) -> Result<(Tensor, IntTensor)> {
+        let entry = self
+            .json
+            .req("datasets")?
+            .get(name)
+            .ok_or_else(|| anyhow!("dataset '{name}' not in manifest"))?;
+        let file = self.dir.join(entry.str_of("file")?);
+        let bundle = read_qtz(&file)?;
+        let x = bundle.get("x").ok_or_else(|| anyhow!("no x in {name}"))?.as_f32()?.clone();
+        let y = bundle.get("y").ok_or_else(|| anyhow!("no y in {name}"))?.as_i32()?.clone();
+        Ok((x, y))
+    }
+
+    pub fn find_exec(&self, kind: &str, rows: usize, cols: usize, relu: bool) -> Option<&ExecSpec> {
+        self.executables
+            .iter()
+            .find(|e| e.kind == kind && e.rows == rows && e.cols == cols && e.relu == relu)
+    }
+
+    pub fn find_qlinear(&self, rows: usize, cols: usize, batch: usize) -> Option<&ExecSpec> {
+        self.executables
+            .iter()
+            .find(|e| e.kind == "qlinear" && e.rows == rows && e.cols == cols && e.batch == batch)
+    }
+}

@@ -1,0 +1,18 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them from rust.
+//!
+//! The interchange format is HLO *text* (see `python/compile/aot.py` and
+//! /opt/xla-example/README.md): jax >= 0.5 serialized protos carry 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids and round-trips cleanly.
+//!
+//! [`Runtime`] owns one CPU `PjRtClient` and a lazily-populated cache of
+//! compiled executables keyed by shape bucket, so each artifact is
+//! compiled exactly once per process.
+
+pub mod client;
+pub mod exec;
+pub mod manifest;
+
+pub use client::Runtime;
+pub use exec::{QLinearExec, StepExec, StepState};
+pub use manifest::{ExecSpec, Manifest};

@@ -1,0 +1,117 @@
+//! Pooling / resize ops used by the model graph executor.
+
+use super::Tensor;
+
+/// Average pooling, VALID padding: input [N,C,H,W] -> [N,C,H/s,W/s].
+pub fn avgpool2d(input: &Tensor, k: usize, stride: usize) -> Tensor {
+    let (n, c, h, w) = (input.shape[0], input.shape[1], input.shape[2], input.shape[3]);
+    let ho = (h - k) / stride + 1;
+    let wo = (w - k) / stride + 1;
+    let mut out = Tensor::zeros(&[n, c, ho, wo]);
+    let inv = 1.0 / (k * k) as f32;
+    for ni in 0..n {
+        for ci in 0..c {
+            let src = &input.data[((ni * c + ci) * h * w)..((ni * c + ci + 1) * h * w)];
+            let dst = &mut out.data[((ni * c + ci) * ho * wo)..((ni * c + ci + 1) * ho * wo)];
+            for oy in 0..ho {
+                for ox in 0..wo {
+                    let mut acc = 0.0f32;
+                    for ky in 0..k {
+                        for kx in 0..k {
+                            acc += src[(oy * stride + ky) * w + ox * stride + kx];
+                        }
+                    }
+                    dst[oy * wo + ox] = acc * inv;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Global average pool: [N,C,H,W] -> [N,C].
+pub fn global_avgpool(input: &Tensor) -> Tensor {
+    let (n, c, h, w) = (input.shape[0], input.shape[1], input.shape[2], input.shape[3]);
+    let hw = (h * w) as f32;
+    let mut out = Tensor::zeros(&[n, c]);
+    for ni in 0..n {
+        for ci in 0..c {
+            let src = &input.data[((ni * c + ci) * h * w)..((ni * c + ci + 1) * h * w)];
+            out.data[ni * c + ci] = src.iter().sum::<f32>() / hw;
+        }
+    }
+    out
+}
+
+/// Nearest-neighbor x2 upsample: [N,C,H,W] -> [N,C,2H,2W].
+pub fn upsample2x(input: &Tensor) -> Tensor {
+    let (n, c, h, w) = (input.shape[0], input.shape[1], input.shape[2], input.shape[3]);
+    let mut out = Tensor::zeros(&[n, c, 2 * h, 2 * w]);
+    for nc in 0..n * c {
+        let src = &input.data[nc * h * w..(nc + 1) * h * w];
+        let dst = &mut out.data[nc * 4 * h * w..(nc + 1) * 4 * h * w];
+        for y in 0..2 * h {
+            for x in 0..2 * w {
+                dst[y * 2 * w + x] = src[(y / 2) * w + x / 2];
+            }
+        }
+    }
+    out
+}
+
+/// Channel concat: all inputs [N,Ci,H,W] -> [N, sum Ci, H, W].
+pub fn concat_channels(inputs: &[&Tensor]) -> Tensor {
+    let (n, h, w) = (inputs[0].shape[0], inputs[0].shape[2], inputs[0].shape[3]);
+    let ctot: usize = inputs.iter().map(|t| t.shape[1]).sum();
+    let mut out = Tensor::zeros(&[n, ctot, h, w]);
+    let hw = h * w;
+    for ni in 0..n {
+        let mut coff = 0;
+        for t in inputs {
+            let ci = t.shape[1];
+            let src = &t.data[ni * ci * hw..(ni + 1) * ci * hw];
+            let dst = &mut out.data[(ni * ctot + coff) * hw..(ni * ctot + coff + ci) * hw];
+            dst.copy_from_slice(src);
+            coff += ci;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn avgpool_2x2() {
+        let input = Tensor::from_vec(&[1, 1, 2, 2], vec![1., 2., 3., 4.]);
+        let out = avgpool2d(&input, 2, 2);
+        assert_eq!(out.shape, vec![1, 1, 1, 1]);
+        assert!((out.data[0] - 2.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn gpool() {
+        let input = Tensor::from_vec(&[1, 2, 1, 2], vec![1., 3., 10., 20.]);
+        let out = global_avgpool(&input);
+        assert_eq!(out.shape, vec![1, 2]);
+        assert_eq!(out.data, vec![2.0, 15.0]);
+    }
+
+    #[test]
+    fn upsample_nearest() {
+        let input = Tensor::from_vec(&[1, 1, 1, 2], vec![1., 2.]);
+        let out = upsample2x(&input);
+        assert_eq!(out.shape, vec![1, 1, 2, 4]);
+        assert_eq!(out.data, vec![1., 1., 2., 2., 1., 1., 2., 2.]);
+    }
+
+    #[test]
+    fn concat() {
+        let a = Tensor::full(&[2, 1, 1, 1], 1.0);
+        let b = Tensor::full(&[2, 2, 1, 1], 2.0);
+        let out = concat_channels(&[&a, &b]);
+        assert_eq!(out.shape, vec![2, 3, 1, 1]);
+        assert_eq!(out.data, vec![1., 2., 2., 1., 2., 2.]);
+    }
+}

@@ -1,0 +1,118 @@
+//! Micro-benchmark harness — the `criterion` replacement.
+//!
+//! Adaptive warmup + timed iterations, reporting mean / p50 / p95 and
+//! optional throughput. Used by `benches/*.rs` (built with
+//! `harness = false`) and by the `adaround bench` subcommand.
+
+use std::time::Instant;
+
+use super::stats;
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    /// items/sec if `throughput_items` was set
+    pub throughput: Option<f64>,
+}
+
+impl BenchResult {
+    pub fn print(&self) {
+        let tp = self
+            .throughput
+            .map(|t| format!("  {:>12.1} items/s", t))
+            .unwrap_or_default();
+        println!(
+            "{:<44} {:>10.3} ms/iter  p50 {:>9.3}  p95 {:>9.3}  ({} iters){}",
+            self.name, self.mean_ms, self.p50_ms, self.p95_ms, self.iters, tp
+        );
+    }
+}
+
+pub struct Bench {
+    /// minimum total measurement time
+    pub measure_secs: f64,
+    pub warmup_secs: f64,
+    pub max_iters: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench { measure_secs: 1.0, warmup_secs: 0.3, max_iters: 10_000 }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Bench { measure_secs: 0.3, warmup_secs: 0.1, max_iters: 2_000 }
+    }
+
+    /// Benchmark `f`, which performs ONE iteration of the workload.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
+        self.run_with_items(name, 0, &mut f)
+    }
+
+    /// Benchmark with a throughput denominator (items processed per iter).
+    pub fn run_with_items<F: FnMut()>(
+        &self,
+        name: &str,
+        items_per_iter: usize,
+        f: &mut F,
+    ) -> BenchResult {
+        // warmup
+        let w0 = Instant::now();
+        while w0.elapsed().as_secs_f64() < self.warmup_secs {
+            f();
+        }
+        // measure
+        let mut samples_ms: Vec<f64> = Vec::new();
+        let m0 = Instant::now();
+        while m0.elapsed().as_secs_f64() < self.measure_secs && samples_ms.len() < self.max_iters
+        {
+            let t = Instant::now();
+            f();
+            samples_ms.push(t.elapsed().as_secs_f64() * 1e3);
+        }
+        let mean = stats::mean(&samples_ms);
+        BenchResult {
+            name: name.to_string(),
+            iters: samples_ms.len(),
+            mean_ms: mean,
+            p50_ms: stats::percentile(&samples_ms, 50.0),
+            p95_ms: stats::percentile(&samples_ms, 95.0),
+            throughput: if items_per_iter > 0 {
+                Some(items_per_iter as f64 / (mean / 1e3))
+            } else {
+                None
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let b = Bench { measure_secs: 0.05, warmup_secs: 0.01, max_iters: 1000 };
+        let mut acc = 0u64;
+        let r = b.run("noop", || {
+            acc = acc.wrapping_add(std::hint::black_box(1));
+        });
+        assert!(r.iters > 0);
+        assert!(r.mean_ms >= 0.0);
+        assert!(r.p95_ms >= r.p50_ms * 0.5);
+    }
+
+    #[test]
+    fn throughput_reported() {
+        let b = Bench { measure_secs: 0.05, warmup_secs: 0.0, max_iters: 100 };
+        let r = b.run_with_items("items", 100, &mut || {
+            std::hint::black_box(vec![0u8; 64]);
+        });
+        assert!(r.throughput.unwrap() > 0.0);
+    }
+}

@@ -1,0 +1,109 @@
+//! Tiny CLI argument parser — the `clap` replacement.
+//!
+//! Grammar: `adaround <subcommand> [positional...] [--flag [value]]...`
+//! A flag with no following value (or followed by another flag) is boolean.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: String,
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with("--") {
+                out.subcommand = it.next().unwrap();
+            }
+        }
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                let is_val = it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false);
+                if is_val {
+                    out.flags.insert(name.to_string(), it.next().unwrap());
+                } else {
+                    out.flags.insert(name.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn str(&self, name: &str, default: &str) -> String {
+        self.flags.get(name).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn f32(&self, name: &str, default: f32) -> Result<f32> {
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{name} expects a float, got '{v}'")),
+        }
+    }
+
+    pub fn bool(&self, name: &str) -> bool {
+        matches!(self.flags.get(name).map(|s| s.as_str()), Some("true") | Some("1"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("quantize --model micro18 --bits 4 --verbose");
+        assert_eq!(a.subcommand, "quantize");
+        assert_eq!(a.str("model", ""), "micro18");
+        assert_eq!(a.usize("bits", 8).unwrap(), 4);
+        assert!(a.bool("verbose"));
+        assert!(!a.bool("quiet"));
+    }
+
+    #[test]
+    fn positionals() {
+        let a = parse("table 7 --seeds 3");
+        assert_eq!(a.subcommand, "table");
+        assert_eq!(a.positional, vec!["7"]);
+        assert_eq!(a.usize("seeds", 1).unwrap(), 3);
+    }
+
+    #[test]
+    fn defaults_and_errors() {
+        let a = parse("eval --bits x");
+        assert_eq!(a.usize("iters", 100).unwrap(), 100);
+        assert!(a.usize("bits", 4).is_err());
+        assert_eq!(a.f32("lr", 0.01).unwrap(), 0.01);
+    }
+}

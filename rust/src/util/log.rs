@@ -1,0 +1,56 @@
+//! Leveled stderr logger. Level from `QTZ_LOG` (error|warn|info|debug),
+//! default `info`.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+static LEVEL: AtomicU8 = AtomicU8::new(255);
+
+#[derive(Clone, Copy, PartialEq, PartialOrd)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+pub fn level() -> u8 {
+    let l = LEVEL.load(Ordering::Relaxed);
+    if l != 255 {
+        return l;
+    }
+    let v = match std::env::var("QTZ_LOG").unwrap_or_default().as_str() {
+        "error" => 0,
+        "warn" => 1,
+        "debug" => 3,
+        _ => 2,
+    };
+    LEVEL.store(v, Ordering::Relaxed);
+    v
+}
+
+pub fn log(lvl: Level, msg: &str) {
+    if (lvl as u8) <= level() {
+        let tag = match lvl {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+        };
+        eprintln!("[{tag}] {msg}");
+    }
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($t:tt)*) => { $crate::util::log::log($crate::util::log::Level::Info, &format!($($t)*)) };
+}
+
+#[macro_export]
+macro_rules! warnlog {
+    ($($t:tt)*) => { $crate::util::log::log($crate::util::log::Level::Warn, &format!($($t)*)) };
+}
+
+#[macro_export]
+macro_rules! debuglog {
+    ($($t:tt)*) => { $crate::util::log::log($crate::util::log::Level::Debug, &format!($($t)*)) };
+}

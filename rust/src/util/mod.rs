@@ -1,0 +1,19 @@
+//! Dependency-free utility substrates.
+//!
+//! The build environment has no network access and only `xla` + `anyhow`
+//! in its vendored registry, so the roles usually filled by `clap`,
+//! `serde_json`, `rand` and `criterion` are implemented here from scratch
+//! (see DESIGN.md §1).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod log;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod timer;
+
+pub use json::Json;
+pub use rng::Rng;
+pub use timer::Stopwatch;

@@ -1,0 +1,106 @@
+//! Mini property-testing harness — the `proptest` replacement.
+//!
+//! `property(seed, cases, |g| { ... })` runs a closure over `cases`
+//! generated inputs. On failure the case index and generator seed are
+//! reported so the exact case can be replayed. Shrinking is intentionally
+//! omitted (inputs here are small enough to debug from the seed).
+
+use super::rng::Rng;
+
+/// Per-case generator handle.
+pub struct Gen {
+    pub rng: Rng,
+    pub case: usize,
+}
+
+impl Gen {
+    /// Integer in [lo, hi].
+    pub fn int(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    pub fn f32(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.range_f32(lo, hi)
+    }
+
+    pub fn vec_f32(&mut self, n: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..n).map(|_| self.f32(lo, hi)).collect()
+    }
+
+    pub fn vec_normal(&mut self, n: usize, mean: f32, std: f32) -> Vec<f32> {
+        (0..n).map(|_| self.rng.normal_f32(mean, std)).collect()
+    }
+
+    pub fn choice<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.bernoulli(0.5)
+    }
+}
+
+/// Run `f` over `cases` generated cases; panics with replay info on failure.
+pub fn property<F: FnMut(&mut Gen) -> Result<(), String>>(
+    seed: u64,
+    cases: usize,
+    mut f: F,
+) {
+    let mut base = Rng::new(seed);
+    for case in 0..cases {
+        let rng = base.fork(case as u64);
+        let mut g = Gen { rng, case };
+        if let Err(msg) = f(&mut g) {
+            panic!("property failed at case {case} (seed {seed}): {msg}");
+        }
+    }
+}
+
+/// assert_close! for float comparisons inside properties.
+pub fn close(a: f32, b: f32, tol: f32) -> Result<(), String> {
+    let scale = a.abs().max(b.abs()).max(1.0);
+    if (a - b).abs() <= tol * scale {
+        Ok(())
+    } else {
+        Err(format!("{a} !~ {b} (tol {tol})"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_all_cases() {
+        let mut n = 0;
+        property(1, 50, |g| {
+            n += 1;
+            let v = g.int(1, 10);
+            if (1..=10).contains(&v) {
+                Ok(())
+            } else {
+                Err(format!("{v} out of range"))
+            }
+        });
+        assert_eq!(n, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn reports_failure() {
+        property(2, 10, |g| {
+            let v = g.int(0, 100);
+            if v < 1000 && g.case < 5 {
+                Ok(())
+            } else {
+                Err("boom".into())
+            }
+        });
+    }
+
+    #[test]
+    fn close_tolerance() {
+        assert!(close(1.0, 1.0 + 1e-7, 1e-5).is_ok());
+        assert!(close(1.0, 1.1, 1e-5).is_err());
+    }
+}

@@ -1,0 +1,163 @@
+//! End-to-end pipeline integration over the real artifacts: the paper's
+//! headline claims as executable assertions.
+//!
+//! Requires `make artifacts` (skipped gracefully if absent).
+
+use adaround::coordinator::{Method, Pipeline, PipelineConfig};
+use adaround::eval::top1;
+use adaround::nn::ForwardOptions;
+use adaround::runtime::Runtime;
+use adaround::util::Rng;
+
+fn runtime() -> Option<Runtime> {
+    let dir = adaround::artifacts_dir();
+    if !std::path::Path::new(&dir).join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts not built");
+        return None;
+    }
+    Some(Runtime::new(&dir).expect("runtime"))
+}
+
+fn fast_cfg(method: Method) -> PipelineConfig {
+    PipelineConfig {
+        method,
+        bits: 2,
+        calib_n: 96,
+        col_budget: 768,
+        adaround: adaround::adaround::AdaRoundConfig {
+            iters: 250,
+            ..Default::default()
+        },
+        ..Default::default()
+    }
+}
+
+#[test]
+fn adaround_recovers_nearest_collapse() {
+    // THE paper claim: at a bit-width where nearest rounding destroys the
+    // network, AdaRound recovers most of the FP32 accuracy.
+    let Some(rt) = runtime() else { return };
+    let model = rt.manifest.load_model("micro18").unwrap();
+    let (calib, _) = rt.manifest.load_dataset("calib_gabor").unwrap();
+    let (vx, vy) = rt.manifest.load_dataset("val_gabor").unwrap();
+    let vx = adaround::tensor::Tensor::from_vec(
+        &[256, 3, 32, 32],
+        vx.data[..256 * 3 * 1024].to_vec(),
+    );
+    let vy = adaround::tensor::IntTensor::from_vec(&[256], vy.data[..256].to_vec());
+
+    let fp = top1(&model, &vx, &vy, &ForwardOptions::default(), 64);
+
+    let near = Pipeline::new(&model, fast_cfg(Method::Nearest), Some(&rt))
+        .quantize(&calib, &mut Rng::new(1))
+        .unwrap();
+    let acc_near = top1(&model, &vx, &vy, &near.opts(), 64);
+
+    let ada = Pipeline::new(&model, fast_cfg(Method::AdaRound), Some(&rt))
+        .quantize(&calib, &mut Rng::new(1))
+        .unwrap();
+    let acc_ada = top1(&model, &vx, &vy, &ada.opts(), 64);
+
+    assert!(fp > 85.0, "fp32 sanity: {fp}");
+    assert!(acc_near < fp - 30.0, "nearest should collapse at 2-bit: {acc_near} vs {fp}");
+    assert!(
+        acc_ada > acc_near + 30.0,
+        "AdaRound should recover: nearest {acc_near} adaround {acc_ada}"
+    );
+    assert!(acc_ada > fp - 12.0, "AdaRound close to fp32: {acc_ada} vs {fp}");
+}
+
+#[test]
+fn layer_stats_report_mse_improvement() {
+    let Some(rt) = runtime() else { return };
+    let model = rt.manifest.load_model("micro18").unwrap();
+    let (calib, _) = rt.manifest.load_dataset("calib_gabor").unwrap();
+    let qm = Pipeline::new(&model, fast_cfg(Method::AdaRound), Some(&rt))
+        .quantize(&calib, &mut Rng::new(2))
+        .unwrap();
+    assert_eq!(qm.stats.len(), model.quant_layers().len());
+    // reconstruction must improve (or tie) on the large majority of layers
+    let improved = qm
+        .stats
+        .iter()
+        .filter(|s| s.mse_after <= s.mse_before * 1.001)
+        .count();
+    assert!(
+        improved * 10 >= qm.stats.len() * 8,
+        "only {improved}/{} layers improved",
+        qm.stats.len()
+    );
+    // AdaRound must actually flip some roundings (Fig. 3)
+    let any_flip = qm.stats.iter().any(|s| s.flipped_frac > 0.01);
+    assert!(any_flip);
+}
+
+#[test]
+fn activation_quantization_applies() {
+    let Some(rt) = runtime() else { return };
+    let model = rt.manifest.load_model("micro18").unwrap();
+    let (calib, _) = rt.manifest.load_dataset("calib_gabor").unwrap();
+    let mut cfg = fast_cfg(Method::Nearest);
+    cfg.bits = 8;
+    cfg.act_bits = Some(8);
+    let qm = Pipeline::new(&model, cfg, Some(&rt))
+        .quantize(&calib, &mut Rng::new(3))
+        .unwrap();
+    let aq = qm.act_quant.as_ref().expect("act quant calibrated");
+    assert!(!aq.is_empty());
+    // 8/8 should be nearly lossless on the calibration data
+    let (vx, vy) = rt.manifest.load_dataset("val_gabor").unwrap();
+    let fp = top1(&model, &vx, &vy, &ForwardOptions::default(), 128);
+    let q = top1(&model, &vx, &vy, &qm.opts(), 128);
+    assert!(q > fp - 3.0, "8/8 should be ~lossless: {q} vs {fp}");
+}
+
+#[test]
+fn first_layer_only_restricts_overrides() {
+    let Some(rt) = runtime() else { return };
+    let model = rt.manifest.load_model("micro18").unwrap();
+    let (calib, _) = rt.manifest.load_dataset("calib_gabor").unwrap();
+    let mut cfg = fast_cfg(Method::Nearest);
+    cfg.only_layers = Some(vec![model.quant_layers()[0].id.clone()]);
+    let qm = Pipeline::new(&model, cfg, Some(&rt))
+        .quantize(&calib, &mut Rng::new(4))
+        .unwrap();
+    assert_eq!(qm.weight_overrides.len(), 1);
+    assert_eq!(qm.stats.len(), 1);
+}
+
+#[test]
+fn grouped_conv_pipeline_works() {
+    // micromobile has depthwise convs: per-group problems must compose
+    let Some(rt) = runtime() else { return };
+    let model = rt.manifest.load_model("micromobile").unwrap();
+    let (calib, _) = rt.manifest.load_dataset("calib_gabor").unwrap();
+    let qm = Pipeline::new(&model, fast_cfg(Method::AdaRound), Some(&rt))
+        .quantize(&calib, &mut Rng::new(5))
+        .unwrap();
+    // every quantizable node got an override of the right shape
+    for node in model.quant_layers() {
+        let ov = &qm.weight_overrides[&node.id];
+        assert_eq!(ov.shape, model.weight(&node.id).shape);
+    }
+    let dw = qm.stats.iter().find(|s| s.groups > 1).expect("depthwise stat");
+    assert!(dw.rows == 1, "depthwise rows-per-group must be 1");
+}
+
+#[test]
+fn dfq_equalization_preserves_fp32_function() {
+    let Some(rt) = runtime() else { return };
+    let model = rt.manifest.load_model("micromobile").unwrap();
+    let (eq, n) = adaround::baselines::equalize_model(&model);
+    assert!(n > 0, "no pairs equalized on micromobile");
+    let eq_model = adaround::nn::Model { weights: eq, ..model.clone() };
+    let (vx, vy) = rt.manifest.load_dataset("val_gabor").unwrap();
+    let vx = adaround::tensor::Tensor::from_vec(
+        &[128, 3, 32, 32],
+        vx.data[..128 * 3 * 1024].to_vec(),
+    );
+    let vy = adaround::tensor::IntTensor::from_vec(&[128], vy.data[..128].to_vec());
+    let a = top1(&model, &vx, &vy, &ForwardOptions::default(), 64);
+    let b = top1(&eq_model, &vx, &vy, &ForwardOptions::default(), 64);
+    assert!((a - b).abs() < 1.0, "CLE changed FP32 accuracy: {a} vs {b}");
+}

@@ -1,0 +1,178 @@
+//! Integration tests over the AOT artifacts: the PJRT runtime must load,
+//! compile and execute the HLO step/qlinear artifacts, and the PJRT
+//! AdaRound driver must agree with the pure-rust native driver (identical
+//! math, fp roundoff aside).
+//!
+//! Requires `make artifacts` (skipped gracefully if absent).
+
+use adaround::adaround::{
+    AdaRoundConfig, LayerProblem, NativeOptimizer, PjrtOptimizer, RoundingOptimizer,
+};
+use adaround::quant::QuantGrid;
+use adaround::runtime::{Runtime, StepState};
+use adaround::tensor::{matmul, Tensor};
+use adaround::util::Rng;
+
+fn runtime() -> Option<Runtime> {
+    let dir = adaround::artifacts_dir();
+    if !std::path::Path::new(&dir).join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts not built");
+        return None;
+    }
+    Some(Runtime::new(&dir).expect("runtime"))
+}
+
+/// A layer problem matching an existing artifact bucket (micro18 stem:
+/// rows=8, cols=27, relu=true).
+fn stem_problem(seed: u64) -> (LayerProblem, Tensor, Tensor) {
+    let mut rng = Rng::new(seed);
+    let (rows, cols, ncols) = (8usize, 27usize, 512usize);
+    let w = Tensor::from_vec(
+        &[rows, cols],
+        (0..rows * cols).map(|_| rng.normal_f32(0.0, 0.3)).collect(),
+    );
+    let grid = QuantGrid::per_tensor(0.08, 4);
+    let bias = (0..rows).map(|_| rng.normal_f32(0.0, 0.1)).collect();
+    let prob = LayerProblem::new(w.clone(), &grid, 0, bias, true);
+    let x = Tensor::from_vec(
+        &[cols, ncols],
+        (0..cols * ncols).map(|_| rng.normal_f32(0.0, 1.0)).collect(),
+    );
+    let mut t = matmul(&w, &x);
+    for r in 0..rows {
+        let b = prob.bias[r];
+        for v in &mut t.data[r * ncols..(r + 1) * ncols] {
+            *v += b;
+        }
+    }
+    (prob, x, t)
+}
+
+#[test]
+fn step_exec_matches_native_single_step() {
+    let Some(rt) = runtime() else { return };
+    let (prob, x, t) = stem_problem(1);
+    let exec = rt.step_exec(8, 27, true).expect("step exec");
+    let batch = exec.batch;
+
+    // same minibatch for both paths
+    let xb = Tensor::from_vec(&[27, batch], x.data[..27 * batch].to_vec());
+    let tb = {
+        let mut out = Tensor::zeros(&[8, batch]);
+        for r in 0..8 {
+            out.data[r * batch..(r + 1) * batch]
+                .copy_from_slice(&t.data[r * x.cols()..r * x.cols() + batch]);
+        }
+        out
+    };
+    let (beta, lam, lr) = (8.0f32, 0.01f32, 0.01f32);
+
+    // native: one loss_grad + Adam step
+    let v0 = prob.init_v();
+    let (_, _, grad) = prob.loss_grad(&v0, &xb, &tb, beta, lam);
+    let mut v_native = v0.clone();
+    let mut adam = adaround::adaround::Adam::new(v_native.numel());
+    adam.step(&mut v_native.data, &grad.data, lr);
+
+    // pjrt: one artifact execution
+    let s_col = Tensor::from_vec(&[8, 1], (0..8).map(|r| prob.s(r)).collect());
+    let b_col = Tensor::from_vec(&[8, 1], prob.bias.clone());
+    let mut state = StepState::new(v0);
+    let (loss, mse) = exec
+        .run(&mut state, &xb, &tb, &prob.w, &s_col, &b_col, beta, lam, lr, prob.n, prob.p)
+        .expect("step run");
+    assert!(loss.is_finite() && mse.is_finite());
+
+    let max_err = state
+        .v
+        .data
+        .iter()
+        .zip(&v_native.data)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_err < 2e-4, "V' disagreement native vs pjrt: {max_err}");
+}
+
+#[test]
+fn pjrt_and_native_drivers_agree_on_rounding() {
+    let Some(rt) = runtime() else { return };
+    let (prob, x, t) = stem_problem(2);
+    let cfg = AdaRoundConfig { iters: 150, batch: 192, ..Default::default() };
+    let res_n = NativeOptimizer
+        .optimize(&prob, &x, &t, &cfg, &mut Rng::new(9))
+        .unwrap();
+    let res_p = PjrtOptimizer::new(&rt)
+        .optimize(&prob, &x, &t, &cfg, &mut Rng::new(9))
+        .unwrap();
+    // identical seeds + identical math => identical minibatches; fp
+    // accumulation differences may flip h values sitting exactly at 0.5,
+    // so allow a tiny disagreement margin
+    let disagree = res_n
+        .mask
+        .data
+        .iter()
+        .zip(&res_p.mask.data)
+        .filter(|(a, b)| (*a - *b).abs() > 0.5)
+        .count();
+    let frac = disagree as f64 / res_n.mask.numel() as f64;
+    assert!(frac < 0.03, "mask disagreement {frac} ({disagree} weights)");
+    assert!(res_p.mse_after <= res_p.mse_before * 1.01);
+}
+
+#[test]
+fn qlinear_exec_matches_native_fake_quant() {
+    let Some(rt) = runtime() else { return };
+    // micro18 stem qlinear bucket: rows=8, cols=27, npos = 32*32*32
+    let npos = 32 * 32 * 32;
+    let Ok(exec) = rt.qlinear_exec(8, 27, npos) else {
+        eprintln!("SKIP: no qlinear bucket");
+        return;
+    };
+    let mut rng = Rng::new(3);
+    let w = Tensor::from_vec(&[8, 27], (0..216).map(|_| rng.normal_f32(0.0, 0.3)).collect());
+    let grid = QuantGrid::per_tensor(0.05, 4);
+    let r = adaround::quant::nearest_mask(&w, &grid);
+    let s = Tensor::full(&[8, 1], 0.05);
+    let b = Tensor::from_vec(&[8, 1], (0..8).map(|_| rng.normal_f32(0.0, 0.1)).collect());
+    let x = Tensor::from_vec(
+        &[27, npos],
+        (0..27 * npos).map(|_| rng.normal_f32(0.0, 1.0)).collect(),
+    );
+    let y = exec.run(&w, &r, &s, &b, &x, -8.0, 7.0).expect("qlinear run");
+    // native reference
+    let wq = adaround::quant::fake_quant(&w, &r, &grid);
+    let mut y_ref = matmul(&wq, &x);
+    for row in 0..8 {
+        for v in &mut y_ref.data[row * npos..(row + 1) * npos] {
+            *v += b.data[row];
+        }
+    }
+    let max_err = y
+        .data
+        .iter()
+        .zip(&y_ref.data)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_err < 1e-3, "qlinear disagreement {max_err}");
+}
+
+#[test]
+fn manifest_covers_all_model_layer_buckets() {
+    let Some(rt) = runtime() else { return };
+    for name in rt.manifest.model_names() {
+        let model = rt.manifest.load_model(&name).unwrap();
+        for node in model.quant_layers() {
+            let g = node.geom().unwrap();
+            assert!(
+                rt.manifest
+                    .find_exec("adaround_step", g.rows, g.cols, g.relu)
+                    .is_some(),
+                "{name}/{}: no step bucket r{} c{} relu={}",
+                node.id,
+                g.rows,
+                g.cols,
+                g.relu
+            );
+        }
+    }
+}
