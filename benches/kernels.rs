@@ -3,26 +3,71 @@
 //!     cargo bench --bench kernels
 //!
 //! Covers: blocked matmul, im2col conv, fake-quant, the native AdaRound
-//! step (fwd+bwd+Adam), the PJRT HLO step execution, the QUBO solvers.
-//! These are the per-iteration costs behind every table's wall-clock.
+//! step (fwd+bwd+Adam, workspace path — zero per-iteration allocation),
+//! the PJRT HLO step execution, the QUBO solvers. These are the
+//! per-iteration costs behind every table's wall-clock.
+//!
+//! Besides the stdout table, results are written to `BENCH_kernels.json`
+//! (name, mean_ms, p50_ms, p95_ms, iters, throughput, plus the thread
+//! count) so the perf trajectory is machine-trackable across PRs. Compare
+//! thread scaling with e.g.:
+//!
+//!     PALLAS_THREADS=1 cargo bench --bench kernels
+//!     PALLAS_THREADS=8 cargo bench --bench kernels
 
-use adaround::adaround::{Adam, LayerProblem};
+use std::collections::BTreeMap;
+
+use adaround::adaround::{Adam, LayerProblem, StepWorkspace};
 use adaround::quant::{fake_quant_nearest, QuantGrid};
 use adaround::qubo::{solve_cem, solve_tabu, CemParams, QuboProblem, TabuParams};
 use adaround::runtime::{Runtime, StepState};
 use adaround::tensor::{conv2d, matmul, Conv2dParams, Tensor};
-use adaround::util::bench::Bench;
-use adaround::util::Rng;
+use adaround::util::bench::{Bench, BenchResult};
+use adaround::util::{parallel, Json, Rng};
 
 fn rnd(shape: &[usize], rng: &mut Rng) -> Tensor {
     let n: usize = shape.iter().product();
     Tensor::from_vec(shape, (0..n).map(|_| rng.normal_f32(0.0, 0.5)).collect())
 }
 
+fn record(results: &mut Vec<BenchResult>, r: BenchResult) {
+    r.print();
+    results.push(r);
+}
+
+fn write_json(results: &[BenchResult], path: &str) {
+    let mut root = BTreeMap::new();
+    root.insert("bench".to_string(), Json::Str("kernels".to_string()));
+    root.insert("threads".to_string(), Json::Num(parallel::num_threads() as f64));
+    let entries: Vec<Json> = results
+        .iter()
+        .map(|r| {
+            let mut o = BTreeMap::new();
+            o.insert("name".to_string(), Json::Str(r.name.clone()));
+            o.insert("mean_ms".to_string(), Json::Num(r.mean_ms));
+            o.insert("p50_ms".to_string(), Json::Num(r.p50_ms));
+            o.insert("p95_ms".to_string(), Json::Num(r.p95_ms));
+            o.insert("iters".to_string(), Json::Num(r.iters as f64));
+            o.insert(
+                "throughput".to_string(),
+                r.throughput.map(Json::Num).unwrap_or(Json::Null),
+            );
+            Json::Obj(o)
+        })
+        .collect();
+    root.insert("results".to_string(), Json::Arr(entries));
+    let text = Json::Obj(root).to_string_pretty();
+    match std::fs::write(path, text) {
+        Ok(()) => println!("(wrote {path})"),
+        Err(e) => eprintln!("(could not write {path}: {e})"),
+    }
+}
+
 fn main() {
     let mut rng = Rng::new(1);
     let b = Bench::default();
-    println!("== kernel benchmarks ==");
+    let mut results: Vec<BenchResult> = Vec::new();
+    println!("== kernel benchmarks (threads: {}) ==", parallel::num_threads());
 
     // matmul at the pipeline's dominant shapes
     for (m, k, n) in [(32usize, 288usize, 192usize), (8, 27, 2048), (64, 256, 1024)] {
@@ -32,7 +77,7 @@ fn main() {
         let r = b.run_with_items(&format!("matmul {m}x{k}x{n} (flops/s)"), flops, &mut || {
             std::hint::black_box(matmul(&a, &x));
         });
-        r.print();
+        record(&mut results, r);
     }
 
     // conv2d via im2col (micro18 stage shapes; last one depthwise)
@@ -49,28 +94,30 @@ fn main() {
                 std::hint::black_box(conv2d(&x, &w, None, p));
             },
         );
-        r.print();
+        record(&mut results, r);
     }
 
     // fake-quant
     let w = rnd(&[32, 288], &mut rng);
     let grid = QuantGrid::per_tensor(0.05, 4);
-    b.run_with_items("fake_quant_nearest 32x288 (weights/s)", w.numel(), &mut || {
+    let r = b.run_with_items("fake_quant_nearest 32x288 (weights/s)", w.numel(), &mut || {
         std::hint::black_box(fake_quant_nearest(&w, &grid));
-    })
-    .print();
+    });
+    record(&mut results, r);
 
-    // native AdaRound step (loss_grad + Adam) at the largest micro18 layer
+    // native AdaRound step (loss_grad_into + Adam, reused workspace) at
+    // the largest micro18 layer — the optimizer's actual inner loop
     let prob = LayerProblem::new(rnd(&[32, 288], &mut rng), &grid, 0, vec![0.0; 32], true);
     let x = rnd(&[288, 192], &mut rng);
     let t = matmul(&prob.w, &x);
     let mut v = prob.init_v();
     let mut adam = Adam::new(v.numel());
-    b.run("native adaround step 32x288xB192", || {
-        let (_, _, g) = prob.loss_grad(&v, &x, &t, 8.0, 0.01);
-        adam.step(&mut v.data, &g.data, 0.0); // lr 0: keep state stationary
-    })
-    .print();
+    let mut ws = StepWorkspace::new(32, 288, 192);
+    let r = b.run("native adaround step 32x288xB192", || {
+        prob.loss_grad_into(&v, &x, &t, 8.0, 0.01, &mut ws);
+        adam.step(&mut v.data, &ws.grad, 0.0); // lr 0: keep state stationary
+    });
+    record(&mut results, r);
 
     // PJRT HLO step execution at the same bucket (if artifacts exist)
     if std::path::Path::new(&adaround::artifacts_dir()).join("manifest.json").exists() {
@@ -81,11 +128,11 @@ fn main() {
             let s = Tensor::full(&[32, 1], 0.05);
             let bias = Tensor::full(&[32, 1], 0.0);
             let mut state = StepState::new(prob.init_v());
-            b.run("pjrt adaround step 32x288xB192", || {
+            let r = b.run("pjrt adaround step 32x288xB192", || {
                 exec.run(&mut state, &xb, &tb, &prob.w, &s, &bias, 8.0, 0.01, 0.0, -8.0, 7.0)
                     .unwrap();
-            })
-            .print();
+            });
+            record(&mut results, r);
         }
     } else {
         println!("(PJRT step bench skipped: run `make artifacts`)");
@@ -96,14 +143,16 @@ fn main() {
     let xs = rnd(&[27, 512], &mut rng);
     let h = adaround::qubo::gram(&xs);
     let qp = QuboProblem::from_row(&wrow.data, &grid, 0, &h);
-    b.run("qubo CEM n=27", || {
+    let r = b.run("qubo CEM n=27", || {
         let mut r = Rng::new(3);
         std::hint::black_box(solve_cem(&qp, CemParams::default(), &mut r));
-    })
-    .print();
-    b.run("qubo tabu n=27", || {
+    });
+    record(&mut results, r);
+    let r = b.run("qubo tabu n=27", || {
         let mut r = Rng::new(3);
         std::hint::black_box(solve_tabu(&qp, TabuParams::default(), &mut r));
-    })
-    .print();
+    });
+    record(&mut results, r);
+
+    write_json(&results, "BENCH_kernels.json");
 }

@@ -22,9 +22,9 @@ pub mod schedule;
 pub mod ste;
 
 pub use adam::Adam;
-pub use native::NativeOptimizer;
+pub use native::{gather_cols, gather_cols_into, NativeOptimizer};
 pub use pjrt::PjrtOptimizer;
-pub use problem::LayerProblem;
+pub use problem::{LayerProblem, StepWorkspace};
 pub use schedule::{AdaRoundConfig, BetaSchedule};
 
 use crate::tensor::Tensor;

@@ -1,31 +1,45 @@
 //! Pure-rust AdaRound driver: analytic gradient + Adam, minibatched over
 //! the calibration columns. Mathematically identical to the PJRT/HLO step
 //! (verified against it in `rust/tests/pjrt_integration.rs`).
+//!
+//! The inner loop is allocation-free: the index pool, gathered minibatch
+//! and every gradient intermediate live in buffers allocated once per
+//! layer ([`StepWorkspace`], [`gather_cols_into`],
+//! [`crate::util::Rng::sample_indices_into`]), and the GEMMs inside
+//! [`LayerProblem::loss_grad_into`] run row-parallel.
 
 use anyhow::Result;
 
 use crate::tensor::Tensor;
 use crate::util::Rng;
 
-use super::problem::LayerProblem;
+use super::problem::{LayerProblem, StepWorkspace};
 use super::schedule::AdaRoundConfig;
 use super::{Adam, LayerResult, RoundingOptimizer};
 
 #[derive(Default)]
 pub struct NativeOptimizer;
 
-/// Gather a column subset of X [cols, N] -> [cols, k].
+/// Gather a column subset of X [cols, N] -> [cols, k] (allocates).
 pub fn gather_cols(x: &Tensor, idx: &[usize]) -> Tensor {
+    let mut out = Tensor::zeros(&[x.rows(), idx.len()]);
+    gather_cols_into(x, idx, &mut out);
+    out
+}
+
+/// Gather a column subset of X [cols, N] into a preallocated [cols, k].
+pub fn gather_cols_into(x: &Tensor, idx: &[usize], out: &mut Tensor) {
     let (rows, n) = (x.rows(), x.cols());
-    let mut out = Tensor::zeros(&[rows, idx.len()]);
+    let k = idx.len();
+    // slice compare, not vec![..]: this runs in the allocation-free loop
+    assert_eq!(out.shape.as_slice(), [rows, k].as_slice(), "gather output shape");
     for r in 0..rows {
         let src = &x.data[r * n..(r + 1) * n];
-        let dst = &mut out.data[r * idx.len()..(r + 1) * idx.len()];
+        let dst = &mut out.data[r * k..(r + 1) * k];
         for (j, &i) in idx.iter().enumerate() {
             dst[j] = src[i];
         }
     }
-    out
 }
 
 impl RoundingOptimizer for NativeOptimizer {
@@ -40,16 +54,23 @@ impl RoundingOptimizer for NativeOptimizer {
         let mut v = prob.init_v();
         let mut adam = Adam::new(v.numel());
         let ncols = x.cols();
+        let batch = cfg.batch.min(ncols);
         let mse_before = prob.recon_mse(&prob.hard_weights(&prob.nearest_mask()), x, t);
+
+        // everything the loop touches, allocated once
+        let mut ws = StepWorkspace::new(prob.rows(), prob.cols(), batch);
+        let mut xb = Tensor::zeros(&[prob.cols(), batch]);
+        let mut tb = Tensor::zeros(&[prob.rows(), batch]);
+        let mut pool: Vec<usize> = Vec::with_capacity(ncols);
 
         for it in 0..cfg.iters {
             let (beta, reg_on) = cfg.beta.at(it, cfg.iters);
             let lam = if reg_on { cfg.lambda } else { 0.0 };
-            let idx = rng.sample_indices(ncols, cfg.batch.min(ncols));
-            let xb = gather_cols(x, &idx);
-            let tb = gather_cols(t, &idx);
-            let (_, _, grad) = prob.loss_grad(&v, &xb, &tb, beta, lam);
-            adam.step(&mut v.data, &grad.data, cfg.lr);
+            let k = rng.sample_indices_into(ncols, batch, &mut pool);
+            gather_cols_into(x, &pool[..k], &mut xb);
+            gather_cols_into(t, &pool[..k], &mut tb);
+            prob.loss_grad_into(&v, &xb, &tb, beta, lam, &mut ws);
+            adam.step(&mut v.data, &ws.grad, cfg.lr);
         }
 
         let mask = prob.mask_from_v(&v);
@@ -76,6 +97,7 @@ impl RoundingOptimizer for NativeOptimizer {
 mod tests {
     use super::super::problem::tests::random_problem;
     use super::*;
+    use crate::util::parallel::with_threads;
 
     fn layer_data(seed: u64, prob: &LayerProblem, ncols: usize) -> (Tensor, Tensor) {
         let mut rng = Rng::new(seed);
@@ -138,5 +160,25 @@ mod tests {
         let r1 = NativeOptimizer.optimize(&prob, &x, &t, &cfg, &mut Rng::new(5)).unwrap();
         let r2 = NativeOptimizer.optimize(&prob, &x, &t, &cfg, &mut Rng::new(5)).unwrap();
         assert_eq!(r1.mask.data, r2.mask.data);
+    }
+
+    #[test]
+    fn bit_identical_across_threads() {
+        // the full optimizer trajectory — V, mask and MSEs — must not
+        // depend on PALLAS_THREADS (acceptance criterion of the parallel
+        // compute core)
+        let prob = random_problem(13, 16, 36, true);
+        let (x, t) = layer_data(14, &prob, 160);
+        let cfg = AdaRoundConfig { iters: 120, batch: 64, ..Default::default() };
+        let run = |threads: usize| {
+            with_threads(threads, || {
+                NativeOptimizer.optimize(&prob, &x, &t, &cfg, &mut Rng::new(5)).unwrap()
+            })
+        };
+        let r1 = run(1);
+        let r4 = run(4);
+        assert_eq!(r1.v.data, r4.v.data, "V trajectories diverged across thread counts");
+        assert_eq!(r1.mask.data, r4.mask.data);
+        assert_eq!(r1.mse_after.to_bits(), r4.mse_after.to_bits());
     }
 }

@@ -1,10 +1,70 @@
 //! Per-layer reconstruction problem: the objective of eq. (25) with its
 //! analytic gradient (the math the Pallas backward kernel implements).
+//!
+//! The gradient path comes in two flavors: the allocating [`LayerProblem::
+//! loss_grad`] (kept for tests/oracles) and the allocation-free
+//! [`LayerProblem::loss_grad_into`] driving the native optimizer — all
+//! intermediates live in a caller-owned [`StepWorkspace`], the rectified
+//! sigmoid and its derivative are evaluated once per element
+//! ([`relax::rect_sigmoid_pair`]) and reused by the regularizer, and the
+//! two GEMMs plus the exp/powf-heavy elementwise passes run row-parallel
+//! ([`crate::util::parallel`]).
 
 use crate::quant::QuantGrid;
+use crate::tensor::matmul::{matmul_bt_into, matmul_into};
 use crate::tensor::{matmul, Tensor};
+use crate::util::parallel;
 
 use super::relax;
+
+/// Scratch buffers for one optimizer step at a fixed (rows, cols, batch)
+/// geometry. Allocated once per layer; `loss_grad_into` then performs no
+/// per-iteration heap allocation (with `PALLAS_THREADS=1`; worker spawns
+/// allocate stacks, verified by `rust/tests/perf_invariants.rs`).
+pub struct StepWorkspace {
+    rows: usize,
+    cols: usize,
+    batch: usize,
+    /// h(V) per element
+    h: Vec<f32>,
+    /// dh/dV per element
+    dh: Vec<f32>,
+    /// soft-quantized weights W~ [rows, cols]
+    wq: Vec<f32>,
+    /// gate G = s * clip_mask * h'(V) [rows, cols]
+    gate: Vec<f32>,
+    /// forward output Y = W~X + b [rows, batch]
+    y: Vec<f32>,
+    /// dL/dY [rows, batch]
+    dy: Vec<f32>,
+    /// dY X^T [rows, cols]
+    dwq: Vec<f32>,
+    /// dL/dV [rows, cols] — the step's result, fed to Adam
+    pub grad: Vec<f32>,
+    /// per-row regularizer partial sums (fixed-block reduction: the
+    /// combine order never depends on the thread count)
+    reg_part: Vec<f64>,
+}
+
+impl StepWorkspace {
+    pub fn new(rows: usize, cols: usize, batch: usize) -> StepWorkspace {
+        let rc = rows * cols;
+        StepWorkspace {
+            rows,
+            cols,
+            batch,
+            h: vec![0.0; rc],
+            dh: vec![0.0; rc],
+            wq: vec![0.0; rc],
+            gate: vec![0.0; rc],
+            y: vec![0.0; rows * batch],
+            dy: vec![0.0; rows * batch],
+            dwq: vec![0.0; rc],
+            grad: vec![0.0; rc],
+            reg_part: vec![0.0; rows],
+        }
+    }
+}
 
 /// One GEMM-shaped rounding problem (a whole conv/dense layer, or one
 /// group of a grouped conv).
@@ -102,18 +162,27 @@ impl LayerProblem {
 
     /// Reconstruction MSE of hard weights against targets T on inputs X
     /// (the metric reported per layer): mean((f_a(W^X + b) - f_a(T))^2).
+    /// Streams the activation through the accumulator — no copies of T/Y.
     pub fn recon_mse(&self, wq: &Tensor, x: &Tensor, t: &Tensor) -> f64 {
         let mut y = matmul(wq, x);
         self.add_bias(&mut y);
-        let (ya, ta) = if self.relu {
-            (y.relu(), t.relu())
+        assert_eq!(y.shape, t.shape, "recon_mse shape mismatch");
+        let mut acc = 0.0f64;
+        if self.relu {
+            for (a, b) in y.data.iter().zip(&t.data) {
+                let d = (a.max(0.0) - b.max(0.0)) as f64;
+                acc += d * d;
+            }
         } else {
-            (y, t.clone())
-        };
-        ya.mse(&ta)
+            for (a, b) in y.data.iter().zip(&t.data) {
+                let d = (a - b) as f64;
+                acc += d * d;
+            }
+        }
+        acc / y.numel() as f64
     }
 
-    fn add_bias(&self, y: &mut Tensor) {
+    pub(crate) fn add_bias(&self, y: &mut Tensor) {
         if self.bias.is_empty() {
             return;
         }
@@ -128,10 +197,8 @@ impl LayerProblem {
 
     /// Loss + dL/dV at V over a batch (X [cols, B], T [rows, B]).
     ///
-    ///   loss = mean((f_a(W~X + b) - f_a(T))^2) + lam * sum f_reg(V; beta)
-    ///
-    /// `lam = 0` disables the regularizer (warmup phase). Returns
-    /// (loss, mse, grad).
+    /// Allocating convenience wrapper over [`Self::loss_grad_into`];
+    /// returns (loss, mse, grad).
     pub fn loss_grad(
         &self,
         v: &Tensor,
@@ -140,41 +207,134 @@ impl LayerProblem {
         beta: f32,
         lam: f32,
     ) -> (f64, f64, Tensor) {
-        let rows = self.rows();
-        let batch = x.cols();
-        let wq = self.soft_weights(v);
-        let mut y = matmul(&wq, x);
-        self.add_bias(&mut y);
-        let numel = (rows * batch) as f64;
+        let mut ws = StepWorkspace::new(self.rows(), self.cols(), x.cols());
+        let (loss, mse) = self.loss_grad_into(v, x, t, beta, lam, &mut ws);
+        let grad = Tensor::from_vec(&v.shape, ws.grad);
+        (loss, mse, grad)
+    }
 
-        // dY and mse
-        let mut dy = Tensor::zeros(&[rows, batch]);
+    /// Loss + dL/dV into `ws.grad`, with every intermediate in `ws`:
+    ///
+    ///   loss = mean((f_a(W~X + b) - f_a(T))^2) + lam * sum f_reg(V; beta)
+    ///
+    /// `lam = 0` disables the regularizer (warmup phase). Returns
+    /// (loss, mse). The workspace geometry must match (rows, cols, B).
+    pub fn loss_grad_into(
+        &self,
+        v: &Tensor,
+        x: &Tensor,
+        t: &Tensor,
+        beta: f32,
+        lam: f32,
+        ws: &mut StepWorkspace,
+    ) -> (f64, f64) {
+        let rows = self.rows();
+        let cols = self.cols();
+        let batch = x.cols();
+        assert_eq!(v.shape, self.w.shape);
+        assert_eq!(x.rows(), cols);
+        // slice compare, not vec![..]: this runs in the allocation-free loop
+        assert_eq!(t.shape.as_slice(), [rows, batch].as_slice());
+        assert_eq!(
+            (ws.rows, ws.cols, ws.batch),
+            (rows, cols, batch),
+            "workspace geometry mismatch"
+        );
+
+        // exp-heavy: h(V), h'(V) once per element, row-parallel
+        let vdata = &v.data;
+        let exp_grain = ((1 << 11) / cols.max(1)).max(1);
+        parallel::par_chunks2_mut(&mut ws.h, cols, &mut ws.dh, cols, exp_grain, |r, hrow, dhrow| {
+            let vrow = &vdata[r * cols..(r + 1) * cols];
+            for c in 0..cols {
+                let (h, dh) = relax::rect_sigmoid_pair(vrow[c]);
+                hrow[c] = h;
+                dhrow[c] = dh;
+            }
+        });
+
+        // soft weights + gate from (h, dh) — cheap arithmetic, fused pass
+        let (href, dhref) = (&ws.h, &ws.dh);
+        let wdata = &self.w.data;
+        let cheap_grain = ((1 << 13) / cols.max(1)).max(1);
+        parallel::par_chunks2_mut(
+            &mut ws.wq,
+            cols,
+            &mut ws.gate,
+            cols,
+            cheap_grain,
+            |r, wqrow, gaterow| {
+                let s = self.s(r);
+                let base = r * cols;
+                for c in 0..cols {
+                    let i = base + c;
+                    let z = (wdata[i] / s).floor() + href[i];
+                    let inside = z >= self.n && z <= self.p;
+                    wqrow[c] = s * z.clamp(self.n, self.p);
+                    gaterow[c] = if inside { s * dhref[i] } else { 0.0 };
+                }
+            },
+        );
+
+        // forward GEMM: Y = W~ X (+ bias)
+        ws.y.fill(0.0);
+        matmul_into(&ws.wq, &x.data, &mut ws.y, rows, cols, batch);
+        if !self.bias.is_empty() {
+            for r in 0..rows {
+                let b = self.bias[r];
+                for yv in &mut ws.y[r * batch..(r + 1) * batch] {
+                    *yv += b;
+                }
+            }
+        }
+
+        // dY and mse (serial: cheap, and keeps the mse sum order fixed)
+        let numel = (rows * batch) as f64;
         let mut mse = 0.0f64;
         for i in 0..rows * batch {
-            let (yi, ti) = (y.data[i], t.data[i]);
+            let (yi, ti) = (ws.y[i], t.data[i]);
             let (ya, ta) = if self.relu { (yi.max(0.0), ti.max(0.0)) } else { (yi, ti) };
             let d = ya - ta;
             mse += (d as f64) * (d as f64);
             let pass = if self.relu && yi <= 0.0 { 0.0 } else { 1.0 };
-            dy.data[i] = 2.0 * d * pass / numel as f32;
+            ws.dy[i] = 2.0 * d * pass / numel as f32;
         }
         mse /= numel;
 
-        // dV = (dY X^T) .* G  + lam * f_reg'
-        let dwq = crate::tensor::matmul::matmul_bt(&dy, x); // [rows, cols]
-        let gate = self.gate(v);
-        let mut grad = Tensor::zeros(&v.shape);
-        let mut reg = 0.0f64;
-        for i in 0..grad.numel() {
-            grad.data[i] = dwq.data[i] * gate.data[i];
-            if lam > 0.0 {
-                let h = relax::rect_sigmoid(v.data[i]);
-                reg += relax::f_reg_elem(h, beta) as f64;
-                grad.data[i] += lam * relax::f_reg_grad(v.data[i], beta);
-            }
-        }
+        // backward GEMM: dW~ = dY X^T
+        matmul_bt_into(&ws.dy, &x.data, &mut ws.dwq, rows, batch, cols);
+
+        // dV = dW~ .* G + lam * f_reg' — powf-heavy, row-parallel with
+        // per-row f64 partials so the reduction order is thread-count
+        // independent
+        let (gateref, dwqref) = (&ws.gate, &ws.dwq);
+        parallel::par_chunks2_mut(
+            &mut ws.grad,
+            cols,
+            &mut ws.reg_part,
+            1,
+            exp_grain,
+            |r, grow, regslot| {
+                let base = r * cols;
+                let mut reg = 0.0f64;
+                for c in 0..cols {
+                    let i = base + c;
+                    grow[c] = dwqref[i] * gateref[i];
+                    if lam > 0.0 {
+                        let z = 2.0 * href[i] - 1.0;
+                        reg += (1.0 - z.abs().powf(beta)) as f64;
+                        if z != 0.0 {
+                            grow[c] +=
+                                lam * (-beta * z.abs().powf(beta - 1.0) * 2.0 * z.signum() * dhref[i]);
+                        }
+                    }
+                }
+                regslot[0] = reg;
+            },
+        );
+        let reg: f64 = ws.reg_part.iter().sum();
         let loss = mse + lam as f64 * reg;
-        (loss, mse, grad)
+        (loss, mse)
     }
 
     /// Binary mask from converged V: h(V) >= 0.5 rounds up.
@@ -201,6 +361,7 @@ impl LayerProblem {
 #[cfg(test)]
 pub(crate) mod tests {
     use super::*;
+    use crate::util::parallel::with_threads;
     use crate::util::proptest::{close, property};
     use crate::util::Rng;
 
@@ -264,6 +425,89 @@ pub(crate) mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn loss_grad_into_matches_wrapper_and_legacy_pieces() {
+        // the fused workspace path must agree with the composition of the
+        // standalone soft_weights/gate implementations it replaced
+        let prob = random_problem(21, 5, 9, true);
+        let mut rng = Rng::new(22);
+        let batch = 12;
+        let x = Tensor::from_vec(
+            &[9, batch],
+            (0..9 * batch).map(|_| rng.normal_f32(0.0, 1.0)).collect(),
+        );
+        let t = Tensor::from_vec(
+            &[5, batch],
+            (0..5 * batch).map(|_| rng.normal_f32(0.0, 1.0)).collect(),
+        );
+        let v = prob.init_v();
+        let mut ws = StepWorkspace::new(5, 9, batch);
+        let (loss, mse) = prob.loss_grad_into(&v, &x, &t, 6.0, 0.02, &mut ws);
+        assert!(loss.is_finite() && mse >= 0.0);
+        // fused soft-weights/gate == standalone implementations, bitwise
+        let wq_ref = prob.soft_weights(&v);
+        let gate_ref = prob.gate(&v);
+        assert_eq!(ws.wq, wq_ref.data);
+        assert_eq!(ws.gate, gate_ref.data);
+        // wrapper returns the same gradient
+        let (loss2, mse2, grad2) = prob.loss_grad(&v, &x, &t, 6.0, 0.02);
+        assert_eq!(ws.grad, grad2.data);
+        assert_eq!(loss, loss2);
+        assert_eq!(mse, mse2);
+    }
+
+    #[test]
+    fn loss_grad_bit_identical_across_threads() {
+        let prob = random_problem(31, 16, 48, true);
+        let mut rng = Rng::new(32);
+        let batch = 64;
+        let x = Tensor::from_vec(
+            &[48, batch],
+            (0..48 * batch).map(|_| rng.normal_f32(0.0, 1.0)).collect(),
+        );
+        let t = Tensor::from_vec(
+            &[16, batch],
+            (0..16 * batch).map(|_| rng.normal_f32(0.0, 1.0)).collect(),
+        );
+        let v = prob.init_v();
+        let run = |threads: usize| {
+            with_threads(threads, || {
+                let mut ws = StepWorkspace::new(16, 48, batch);
+                let (loss, mse) = prob.loss_grad_into(&v, &x, &t, 4.0, 0.02, &mut ws);
+                (loss, mse, ws.grad)
+            })
+        };
+        let (l1, m1, g1) = run(1);
+        let (l4, m4, g4) = run(4);
+        assert_eq!(l1.to_bits(), l4.to_bits());
+        assert_eq!(m1.to_bits(), m4.to_bits());
+        assert_eq!(g1, g4);
+    }
+
+    #[test]
+    fn recon_mse_matches_explicit_form() {
+        // streaming recon_mse == materialized relu + Tensor::mse
+        for relu in [false, true] {
+            let prob = random_problem(41, 4, 7, relu);
+            let mut rng = Rng::new(42);
+            let x = Tensor::from_vec(
+                &[7, 20],
+                (0..7 * 20).map(|_| rng.normal_f32(0.0, 1.0)).collect(),
+            );
+            let t = Tensor::from_vec(
+                &[4, 20],
+                (0..4 * 20).map(|_| rng.normal_f32(0.0, 1.0)).collect(),
+            );
+            let wq = prob.hard_weights(&prob.nearest_mask());
+            let got = prob.recon_mse(&wq, &x, &t);
+            let mut y = matmul(&wq, &x);
+            prob.add_bias(&mut y);
+            let expect =
+                if relu { y.relu().mse(&t.relu()) } else { y.mse(&t) };
+            assert!((got - expect).abs() < 1e-12, "{got} vs {expect}");
+        }
     }
 
     #[test]

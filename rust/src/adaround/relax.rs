@@ -28,6 +28,18 @@ pub fn rect_sigmoid_grad(v: f32) -> f32 {
     }
 }
 
+/// (h(V), dh/dV) in one pass, evaluating the sigmoid once. Bit-identical
+/// to calling [`rect_sigmoid`] and [`rect_sigmoid_grad`] separately —
+/// the fused form the optimizer hot loop uses.
+#[inline]
+pub fn rect_sigmoid_pair(v: f32) -> (f32, f32) {
+    let s = sigmoid(v);
+    let raw = s * (ZETA - GAMMA) + GAMMA;
+    let h = raw.clamp(0.0, 1.0);
+    let dh = if raw > 0.0 && raw < 1.0 { s * (1.0 - s) * (ZETA - GAMMA) } else { 0.0 };
+    (h, dh)
+}
+
 /// Per-element regularizer 1 - |2h-1|^beta  (eq. 24, summed by callers).
 #[inline]
 pub fn f_reg_elem(h: f32, beta: f32) -> f32 {
@@ -93,6 +105,21 @@ mod tests {
                 - f_reg_elem(rect_sigmoid(v - eps), beta))
                 / (2.0 * eps);
             close(f_reg_grad(v, beta), fd, 5e-2)
+        });
+    }
+
+    #[test]
+    fn pair_matches_separate_calls() {
+        property(75, 60, |g| {
+            let v = g.f32(-20.0, 20.0);
+            let (h, dh) = rect_sigmoid_pair(v);
+            if h.to_bits() != rect_sigmoid(v).to_bits() {
+                return Err(format!("h mismatch at {v}"));
+            }
+            if dh.to_bits() != rect_sigmoid_grad(v).to_bits() {
+                return Err(format!("dh mismatch at {v}"));
+            }
+            Ok(())
         });
     }
 

@@ -7,13 +7,18 @@
 //! taken at identical (image, spatial) positions. The calibration set is
 //! streamed in chunks; a deterministic per-chunk subsample keeps the
 //! column budget fixed regardless of layer spatial size.
+//!
+//! The per-chunk forwards fan out across threads, so peak activation
+//! memory scales with `min(PALLAS_THREADS, n_chunks)` concurrent chunks
+//! (one chunk at a time in the serial case). On memory-constrained hosts
+//! with large calibration sets, bound it by lowering `PALLAS_THREADS`.
 
 use std::collections::BTreeSet;
 
 use crate::data::chunks;
 use crate::nn::{ForwardOptions, Model, Node, Op};
 use crate::tensor::{im2col, Conv2dParams, Tensor};
-use crate::util::Rng;
+use crate::util::{parallel, Rng};
 
 /// Paired activation sample for one layer (all groups).
 pub struct LayerSample {
@@ -62,7 +67,9 @@ pub struct FpTapCache {
     pub taps: std::collections::BTreeMap<String, Vec<Tensor>>,
 }
 
-/// Build the FP32 tap cache for the given input-node ids.
+/// Build the FP32 tap cache for the given input-node ids. The per-chunk
+/// forwards are independent and fan out across threads; taps are
+/// assembled in chunk order so the cache never depends on scheduling.
 pub fn build_fp_cache(
     model: &Model,
     calib: &Tensor,
@@ -71,14 +78,20 @@ pub fn build_fp_cache(
 ) -> FpTapCache {
     let n = calib.shape[0];
     let per: usize = calib.shape[1..].iter().product();
+    let chunk_list: Vec<(usize, usize)> = chunks(n, chunk_imgs).collect();
+    let per_chunk: Vec<std::collections::BTreeMap<String, Tensor>> =
+        parallel::par_map(chunk_list.len(), 1, |ci| {
+            let (s, e) = chunk_list[ci];
+            let xb = Tensor::from_vec(
+                &[e - s, calib.shape[1], calib.shape[2], calib.shape[3]],
+                calib.data[s * per..e * per].to_vec(),
+            );
+            let (_, got) = model.forward_collect(&xb, &ForwardOptions::default(), input_ids);
+            got
+        });
     let mut taps: std::collections::BTreeMap<String, Vec<Tensor>> =
         input_ids.iter().map(|i| (i.clone(), Vec::new())).collect();
-    for (s, e) in chunks(n, chunk_imgs) {
-        let xb = Tensor::from_vec(
-            &[e - s, calib.shape[1], calib.shape[2], calib.shape[3]],
-            calib.data[s * per..e * per].to_vec(),
-        );
-        let (_, got) = model.forward_collect(&xb, &ForwardOptions::default(), input_ids);
+    for got in per_chunk {
         for (id, t) in got {
             taps.get_mut(&id).unwrap().push(t);
         }
@@ -116,13 +129,21 @@ pub fn sample_layer_cached(
         .map(|c| c.chunk_imgs == chunk_imgs && c.taps.contains_key(&input_id))
         .unwrap_or(false);
 
-    let mut x_fp: Vec<Vec<f32>> = vec![Vec::new(); groups];
-    let mut x_q: Vec<Vec<f32>> = vec![Vec::new(); groups];
-    let mut cols_dim = 0usize;
-    let n_chunks = n.div_ceil(chunk_imgs);
-    let per_chunk_budget = col_budget.div_ceil(n_chunks);
+    let chunk_list: Vec<(usize, usize)> = chunks(n, chunk_imgs).collect();
+    let n_chunks = chunk_list.len();
+    let per_chunk_budget = col_budget.div_ceil(n_chunks.max(1));
+    // one RNG per chunk, forked serially up front: the column picks are
+    // the same whatever thread executes the chunk
+    let mut crngs: Vec<Rng> = (0..n_chunks).map(|ci| rng.fork(ci as u64)).collect();
 
-    for (ci, (s, e)) in chunks(n, chunk_imgs).enumerate() {
+    // column sample of one calibration chunk, per group
+    struct ChunkCols {
+        fp: Vec<Vec<f32>>,
+        q: Vec<Vec<f32>>,
+        dim: usize,
+    }
+    let chunk_cols: Vec<ChunkCols> = parallel::par_map_rng(&mut crngs, 1, |ci, crng| {
+        let (s, e) = chunk_list[ci];
         let xb = || {
             Tensor::from_vec(
                 &[e - s, calib.shape[1], calib.shape[2], calib.shape[3]],
@@ -143,15 +164,30 @@ pub fn sample_layer_cached(
             cols_fp.clone()
         };
         let total = cols_fp[0].cols();
-        let picked = pick_cols(total, per_chunk_budget, rng);
-        cols_dim = cols_fp[0].rows();
+        let picked = pick_cols(total, per_chunk_budget, crng);
+        let dim = cols_fp[0].rows();
+        let mut fp: Vec<Vec<f32>> = vec![Vec::with_capacity(picked.len() * dim); groups];
+        let mut q: Vec<Vec<f32>> = vec![Vec::with_capacity(picked.len() * dim); groups];
         for g in 0..groups {
             for &c in &picked {
-                for r in 0..cols_dim {
-                    x_fp[g].push(cols_fp[g].at2(r, c));
-                    x_q[g].push(cols_q[g].at2(r, c));
+                for r in 0..dim {
+                    fp[g].push(cols_fp[g].at2(r, c));
+                    q[g].push(cols_q[g].at2(r, c));
                 }
             }
+        }
+        ChunkCols { fp, q, dim }
+    });
+
+    // ordered assembly: chunk results concatenate in chunk order
+    let mut x_fp: Vec<Vec<f32>> = vec![Vec::new(); groups];
+    let mut x_q: Vec<Vec<f32>> = vec![Vec::new(); groups];
+    let mut cols_dim = 0usize;
+    for s in chunk_cols {
+        cols_dim = s.dim;
+        for g in 0..groups {
+            x_fp[g].extend_from_slice(&s.fp[g]);
+            x_q[g].extend_from_slice(&s.q[g]);
         }
     }
     // data was pushed column-major [c0r0 c0r1 ...]; transpose into [cols, n]

@@ -10,6 +10,13 @@
 //!
 //! Finally, optional activation quantizers are calibrated on the fully
 //! quantized network.
+//!
+//! Layers are inherently sequential (each one reconstructs against the
+//! quantized prefix), but the per-group rounding problems of a grouped
+//! conv are independent and fan out across threads, each with an RNG
+//! forked deterministically from the pipeline stream — results do not
+//! depend on `PALLAS_THREADS`. The PJRT driver is the exception: its
+//! runtime owns single-threaded state, so it stays on the caller thread.
 
 use std::collections::BTreeMap;
 
@@ -17,7 +24,7 @@ use anyhow::{bail, Result};
 
 use crate::adaround::hopfield::{optimize_hopfield, optimize_sigmoid_freg, TempSchedule};
 use crate::adaround::ste::optimize_ste;
-use crate::adaround::{LayerProblem, NativeOptimizer, PjrtOptimizer, RoundingOptimizer};
+use crate::adaround::{AdaRoundConfig, LayerProblem, NativeOptimizer, PjrtOptimizer, RoundingOptimizer};
 use crate::baselines::{correct_bias, equalize_model, ocs_quantize};
 use crate::data::chunks;
 use crate::nn::{ForwardOptions, Model, Node};
@@ -25,7 +32,7 @@ use crate::quant::{ActQuant, GridMethod, QuantGrid, RoundingMode};
 use crate::qubo::{gram, solve_cem, solve_tabu, CemParams, QuboProblem, TabuParams};
 use crate::runtime::Runtime;
 use crate::tensor::{matmul, Tensor};
-use crate::util::{Rng, Stopwatch};
+use crate::util::{parallel, Rng, Stopwatch};
 
 use super::calib::{build_fp_cache, sample_layer_cached, FpTapCache};
 use super::config::{Method, PipelineConfig};
@@ -70,6 +77,17 @@ impl QuantizedModel {
     pub fn total_mse_after(&self) -> f64 {
         self.stats.iter().map(|s| s.mse_after).sum()
     }
+}
+
+/// Outcome of rounding one group, produced (possibly on a worker thread)
+/// before any shared state is touched.
+struct GroupOut {
+    wq: Tensor,
+    near_mse: f64,
+    after: f64,
+    flipped: f64,
+    /// bias-correction delta to fold into the layer bias (BiasCorr / DFQ)
+    bias_delta: Option<Vec<f32>>,
 }
 
 pub struct Pipeline<'a> {
@@ -193,39 +211,57 @@ impl<'a> Pipeline<'a> {
         );
 
         // --- per-group rounding ---
+        let og = geom.rows;
+        let relu = cfg.use_relu && geom.relu;
+        let acfg = self.adaround_cfg();
+        let probs: Vec<LayerProblem> = (0..geom.groups)
+            .map(|g| {
+                let row0 = g * og;
+                let w_g = Tensor::from_vec(
+                    &[og, geom.cols],
+                    w_gemm.data[row0 * geom.cols..(row0 + og) * geom.cols].to_vec(),
+                );
+                let bias_g: Vec<f32> = bias_full.data[row0..row0 + og].to_vec();
+                LayerProblem::new(w_g, &grid, row0, bias_g, relu)
+            })
+            .collect();
+        // fork one RNG per group up front (serial, so the streams are the
+        // same whatever the thread count / processing order)
+        let mut rngs: Vec<Rng> = (0..geom.groups).map(|g| rng.fork(g as u64)).collect();
+
+        let results: Vec<Result<GroupOut>> = if cfg.method == Method::AdaRoundPjrt {
+            // PJRT runtime state is single-threaded; keep the caller thread
+            probs
+                .iter()
+                .enumerate()
+                .map(|(g, prob)| {
+                    let x_fp = &sample.x_fp[g];
+                    let x_opt = if cfg.asymmetric { &sample.x_q[g] } else { x_fp };
+                    self.round_group_pjrt(prob, x_fp, x_opt, &acfg, &mut rngs[g])
+                })
+                .collect()
+        } else {
+            parallel::par_map_rng(&mut rngs, 1, |g, grng| {
+                let x_fp = &sample.x_fp[g];
+                let x_opt = if cfg.asymmetric { &sample.x_q[g] } else { x_fp };
+                round_group_native(cfg, &acfg, &probs[g], x_fp, x_opt, grng)
+            })
+        };
+
+        // --- assemble (serial, in group order) ---
         let mut wq_full = vec![0.0f32; w_gemm.numel()];
         let mut mse_before = 0.0;
         let mut mse_after = 0.0;
         let mut flipped = 0.0;
-        let og = geom.rows;
-        for g in 0..geom.groups {
+        for (g, res) in results.into_iter().enumerate() {
+            let go = res?;
             let row0 = g * og;
-            let w_g = Tensor::from_vec(
-                &[og, geom.cols],
-                w_gemm.data[row0 * geom.cols..(row0 + og) * geom.cols].to_vec(),
-            );
-            let bias_g: Vec<f32> = bias_full.data[row0..row0 + og].to_vec();
-            let relu = cfg.use_relu && geom.relu;
-            let prob = LayerProblem::new(w_g.clone(), &grid, row0, bias_g, relu);
-            let x_fp = &sample.x_fp[g];
-            let x_opt = if cfg.asymmetric { &sample.x_q[g] } else { x_fp };
-            // FP32 target: T = W x_fp + b
-            let mut t = matmul(&w_g, x_fp);
-            let ncols = t.cols();
-            for r in 0..og {
-                let b = prob.bias[r];
-                for v in &mut t.data[r * ncols..(r + 1) * ncols] {
-                    *v += b;
-                }
-            }
-
-            let wq_g = self.round_group(&prob, x_opt, &t, cfg, rng, &mut mse_before,
-                                        &mut mse_after, &mut flipped)?;
-            wq_full[row0 * geom.cols..(row0 + og) * geom.cols].copy_from_slice(&wq_g.data);
-
+            wq_full[row0 * geom.cols..(row0 + og) * geom.cols].copy_from_slice(&go.wq.data);
+            mse_before += go.near_mse;
+            mse_after += go.after;
+            flipped += go.flipped;
             // bias correction methods adjust the bias from the same sample
-            if matches!(cfg.method, Method::BiasCorr | Method::Dfq) {
-                let delta = correct_bias(&w_g, x_fp, &wq_g, x_opt);
+            if let Some(delta) = go.bias_delta {
                 let mut nb = out
                     .bias_overrides
                     .get(&node.id)
@@ -253,114 +289,28 @@ impl<'a> Pipeline<'a> {
         })
     }
 
-    /// Rounding decision for one group; returns quantized GEMM weights.
-    #[allow(clippy::too_many_arguments)]
-    fn round_group(
+    /// PJRT rounding for one group (must stay on the pipeline thread).
+    fn round_group_pjrt(
         &self,
         prob: &LayerProblem,
-        x: &Tensor,
-        t: &Tensor,
-        cfg: &PipelineConfig,
+        x_fp: &Tensor,
+        x_opt: &Tensor,
+        acfg: &AdaRoundConfig,
         rng: &mut Rng,
-        mse_before: &mut f64,
-        mse_after: &mut f64,
-        flipped: &mut f64,
-    ) -> Result<Tensor> {
-        let near_mse = prob.recon_mse(&prob.hard_weights(&prob.nearest_mask()), x, t);
-        *mse_before += near_mse;
-        let grid_for_rowmodes =
-            QuantGrid { scale: prob.scale.clone(), bits: cfg.bits, n: prob.n, p: prob.p };
-        let (wq, fl, after): (Tensor, f64, f64) = match cfg.method {
-            Method::Nearest | Method::Floor | Method::Ceil | Method::Stochastic
-            | Method::Omse | Method::BiasCorr | Method::Dfq => {
-                let mode = match cfg.method {
-                    Method::Floor => RoundingMode::Floor,
-                    Method::Ceil => RoundingMode::Ceil,
-                    Method::Stochastic => RoundingMode::Stochastic,
-                    _ => RoundingMode::Nearest,
-                };
-                let mask =
-                    crate::quant::rounding_mask(&prob.w, &grid_for_rowmodes, mode, rng);
-                // note: per-group scales live at rows [0, og) of this grid view
-                let wq = prob.hard_weights(&mask);
-                let near = prob.nearest_mask();
-                let fl = mask
-                    .data
-                    .iter()
-                    .zip(&near.data)
-                    .filter(|(a, b)| (*a - *b).abs() > 0.5)
-                    .count() as f64
-                    / mask.numel() as f64;
-                let after = prob.recon_mse(&wq, x, t);
-                (wq, fl, after)
-            }
-            Method::AdaRound => {
-                let res = NativeOptimizer.optimize(prob, x, t, &self.adaround_cfg(), rng)?;
-                (prob.hard_weights(&res.mask), res.flipped_frac, res.mse_after)
-            }
-            Method::AdaRoundPjrt => {
-                let Some(rt) = self.runtime else {
-                    bail!("adaround-pjrt requires a PJRT runtime (artifacts)")
-                };
-                let res = PjrtOptimizer::new(rt).optimize(prob, x, t, &self.adaround_cfg(), rng)?;
-                (prob.hard_weights(&res.mask), res.flipped_frac, res.mse_after)
-            }
-            Method::Ste => {
-                let mut c = self.adaround_cfg();
-                c.lr = 2e-3; // continuous weights need a gentler step
-                let res = optimize_ste(prob, x, t, &c, rng)?;
-                (res.v.clone(), res.flipped_frac, res.mse_after)
-            }
-            Method::Hopfield => {
-                let res = optimize_hopfield(prob, x, t, &self.adaround_cfg(),
-                                            TempSchedule::default(), rng)?;
-                (prob.hard_weights(&res.mask), res.flipped_frac, res.mse_after)
-            }
-            Method::SigmoidFreg => {
-                let res = optimize_sigmoid_freg(prob, x, t, &self.adaround_cfg(), rng)?;
-                (prob.hard_weights(&res.mask), res.flipped_frac, res.mse_after)
-            }
-            Method::LocalQuboCem | Method::LocalQuboTabu => {
-                let h = gram(x);
-                let near = prob.nearest_mask();
-                let mut mask = Tensor::zeros(&prob.w.shape);
-                let cols = prob.cols();
-                for r in 0..prob.rows() {
-                    let qp = QuboProblem::from_row(
-                        &prob.w.data[r * cols..(r + 1) * cols],
-                        &grid_for_rowmodes,
-                        r,
-                        &h,
-                    );
-                    let (sol, _) = if cfg.method == Method::LocalQuboCem {
-                        solve_cem(&qp, CemParams::default(), rng)
-                    } else {
-                        solve_tabu(&qp, TabuParams::default(), rng)
-                    };
-                    for c in 0..cols {
-                        mask.data[r * cols + c] = sol[c] as f32;
-                    }
-                }
-                let wq = prob.hard_weights(&mask);
-                let fl = mask
-                    .data
-                    .iter()
-                    .zip(&near.data)
-                    .filter(|(a, b)| (*a - *b).abs() > 0.5)
-                    .count() as f64
-                    / mask.numel() as f64;
-                let after = prob.recon_mse(&wq, x, t);
-                (wq, fl, after)
-            }
-            Method::Ocs => {
-                let wq = ocs_quantize(&prob.w, cfg.bits, cfg.ocs_expand);
-                let after = prob.recon_mse(&wq, x, t);
-                (wq, 0.0, after)
-            }
+    ) -> Result<GroupOut> {
+        let Some(rt) = self.runtime else {
+            bail!("adaround-pjrt requires a PJRT runtime (artifacts)")
         };
-        *mse_after += after;
-        *flipped += fl;
-        Ok(wq)
+        let t = group_target(prob, x_fp);
+        let near_mse = prob.recon_mse(&prob.hard_weights(&prob.nearest_mask()), x_opt, &t);
+        let res = PjrtOptimizer::new(rt).optimize(prob, x_opt, &t, acfg, rng)?;
+        Ok(GroupOut {
+            wq: prob.hard_weights(&res.mask),
+            near_mse,
+            after: res.mse_after,
+            flipped: res.flipped_frac,
+            bias_delta: None,
+        })
     }
 
     fn adaround_cfg(&self) -> crate::adaround::AdaRoundConfig {
@@ -369,7 +319,9 @@ impl<'a> Pipeline<'a> {
         c
     }
 
-    /// Min/max activation calibration on the fully quantized network.
+    /// Min/max activation calibration on the fully quantized network;
+    /// chunks fan out across threads, ranges merge in chunk order (min/max
+    /// merging is exact, so the result is thread-count independent).
     fn calibrate_activations(
         &self,
         calib: &Tensor,
@@ -378,7 +330,6 @@ impl<'a> Pipeline<'a> {
     ) -> BTreeMap<String, ActQuant> {
         let want: std::collections::BTreeSet<String> =
             self.work.nodes.iter().map(|n| n.id.clone()).collect();
-        let mut ranges: BTreeMap<String, ActQuant> = BTreeMap::new();
         let n = calib.shape[0];
         let per: usize = calib.shape[1..].iter().product();
         let opts = ForwardOptions {
@@ -390,14 +341,25 @@ impl<'a> Pipeline<'a> {
             },
             act_quant: None,
         };
-        for (s, e) in chunks(n, 64) {
-            let xb = Tensor::from_vec(
-                &[e - s, calib.shape[1], calib.shape[2], calib.shape[3]],
-                calib.data[s * per..e * per].to_vec(),
-            );
-            let (_, taps) = self.work.forward_collect(&xb, &opts, &want);
-            for (id, t) in taps {
-                let q = ActQuant::calibrate(&t, bits);
+        let chunk_list: Vec<(usize, usize)> = chunks(n, 64).collect();
+        // bind the model by field so the worker closure never captures
+        // `self` (the PJRT runtime reference is not Sync)
+        let work = &self.work;
+        let per_chunk: Vec<BTreeMap<String, ActQuant>> =
+            parallel::par_map(chunk_list.len(), 1, |ci| {
+                let (s, e) = chunk_list[ci];
+                let xb = Tensor::from_vec(
+                    &[e - s, calib.shape[1], calib.shape[2], calib.shape[3]],
+                    calib.data[s * per..e * per].to_vec(),
+                );
+                let (_, taps) = work.forward_collect(&xb, &opts, &want);
+                taps.into_iter()
+                    .map(|(id, t)| (id, ActQuant::calibrate(&t, bits)))
+                    .collect()
+            });
+        let mut ranges: BTreeMap<String, ActQuant> = BTreeMap::new();
+        for chunk in per_chunk {
+            for (id, q) in chunk {
                 ranges
                     .entry(id)
                     .and_modify(|r| *r = r.merge(&q))
@@ -406,4 +368,111 @@ impl<'a> Pipeline<'a> {
         }
         ranges
     }
+}
+
+/// T = W x_fp + b for one group's problem.
+fn group_target(prob: &LayerProblem, x_fp: &Tensor) -> Tensor {
+    let mut t = matmul(&prob.w, x_fp);
+    prob.add_bias(&mut t);
+    t
+}
+
+fn flip_frac(mask: &Tensor, near: &Tensor) -> f64 {
+    mask.data
+        .iter()
+        .zip(&near.data)
+        .filter(|(a, b)| (*a - *b).abs() > 0.5)
+        .count() as f64
+        / mask.numel() as f64
+}
+
+/// Rounding decision for one group, every method except PJRT. Free of
+/// pipeline state so it can run on worker threads ([`GroupOut`] carries
+/// everything back to the sequential assembly).
+fn round_group_native(
+    cfg: &PipelineConfig,
+    acfg: &AdaRoundConfig,
+    prob: &LayerProblem,
+    x_fp: &Tensor,
+    x_opt: &Tensor,
+    rng: &mut Rng,
+) -> Result<GroupOut> {
+    let t = group_target(prob, x_fp);
+    let x = x_opt;
+    let near_mse = prob.recon_mse(&prob.hard_weights(&prob.nearest_mask()), x, &t);
+    let grid_for_rowmodes =
+        QuantGrid { scale: prob.scale.clone(), bits: cfg.bits, n: prob.n, p: prob.p };
+    let (wq, fl, after): (Tensor, f64, f64) = match cfg.method {
+        Method::Nearest | Method::Floor | Method::Ceil | Method::Stochastic
+        | Method::Omse | Method::BiasCorr | Method::Dfq => {
+            let mode = match cfg.method {
+                Method::Floor => RoundingMode::Floor,
+                Method::Ceil => RoundingMode::Ceil,
+                Method::Stochastic => RoundingMode::Stochastic,
+                _ => RoundingMode::Nearest,
+            };
+            let mask = crate::quant::rounding_mask(&prob.w, &grid_for_rowmodes, mode, rng);
+            // note: per-group scales live at rows [0, og) of this grid view
+            let wq = prob.hard_weights(&mask);
+            let fl = flip_frac(&mask, &prob.nearest_mask());
+            let after = prob.recon_mse(&wq, x, &t);
+            (wq, fl, after)
+        }
+        Method::AdaRound => {
+            let res = NativeOptimizer.optimize(prob, x, &t, acfg, rng)?;
+            (prob.hard_weights(&res.mask), res.flipped_frac, res.mse_after)
+        }
+        Method::AdaRoundPjrt => bail!("pjrt path handled by round_group_pjrt"),
+        Method::Ste => {
+            let mut c = *acfg;
+            c.lr = 2e-3; // continuous weights need a gentler step
+            let res = optimize_ste(prob, x, &t, &c, rng)?;
+            (res.v.clone(), res.flipped_frac, res.mse_after)
+        }
+        Method::Hopfield => {
+            let res = optimize_hopfield(prob, x, &t, acfg, TempSchedule::default(), rng)?;
+            (prob.hard_weights(&res.mask), res.flipped_frac, res.mse_after)
+        }
+        Method::SigmoidFreg => {
+            let res = optimize_sigmoid_freg(prob, x, &t, acfg, rng)?;
+            (prob.hard_weights(&res.mask), res.flipped_frac, res.mse_after)
+        }
+        Method::LocalQuboCem | Method::LocalQuboTabu => {
+            let h = gram(x);
+            let near = prob.nearest_mask();
+            let mut mask = Tensor::zeros(&prob.w.shape);
+            let cols = prob.cols();
+            for r in 0..prob.rows() {
+                let qp = QuboProblem::from_row(
+                    &prob.w.data[r * cols..(r + 1) * cols],
+                    &grid_for_rowmodes,
+                    r,
+                    &h,
+                );
+                let (sol, _) = if cfg.method == Method::LocalQuboCem {
+                    solve_cem(&qp, CemParams::default(), rng)
+                } else {
+                    solve_tabu(&qp, TabuParams::default(), rng)
+                };
+                for c in 0..cols {
+                    mask.data[r * cols + c] = sol[c] as f32;
+                }
+            }
+            let wq = prob.hard_weights(&mask);
+            let fl = flip_frac(&mask, &near);
+            let after = prob.recon_mse(&wq, x, &t);
+            (wq, fl, after)
+        }
+        Method::Ocs => {
+            let wq = ocs_quantize(&prob.w, cfg.bits, cfg.ocs_expand);
+            let after = prob.recon_mse(&wq, x, &t);
+            (wq, 0.0, after)
+        }
+    };
+    let bias_delta = if matches!(cfg.method, Method::BiasCorr | Method::Dfq) {
+        Some(correct_bias(&prob.w, x_fp, &wq, x_opt))
+    } else {
+        None
+    };
+    Ok(GroupOut { wq, near_mse, after, flipped: fl, bias_delta })
 }

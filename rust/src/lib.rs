@@ -23,6 +23,27 @@
 //! adaround quantize --model micro18 --bits 4
 //! adaround table 7         # regenerate the paper's literature comparison
 //! ```
+//!
+//! ## Threading
+//!
+//! The native compute core (GEMMs, conv, the AdaRound step, per-group
+//! rounding, calibration forwards) is data-parallel over scoped threads
+//! ([`util::parallel`]). The thread count comes from the `PALLAS_THREADS`
+//! environment variable (default: all available cores); results are
+//! **bit-identical for every thread count** — work is split by item index
+//! and each item is computed by the same serial code, with no
+//! reduction-order dependence.
+//!
+//! ## Workspace API
+//!
+//! The optimizer hot loop is allocation-free: [`adaround::StepWorkspace`]
+//! owns every per-step intermediate,
+//! [`adaround::LayerProblem::loss_grad_into`] writes the gradient into it,
+//! [`adaround::gather_cols_into`] and
+//! [`util::Rng::sample_indices_into`] reuse minibatch buffers, and
+//! [`tensor::Conv2dWorkspace`] / [`tensor::conv2d_with`] do the same for
+//! the im2col + GEMM path of inference (see
+//! `rust/tests/perf_invariants.rs` for the enforced contract).
 
 pub mod adaround;
 pub mod baselines;

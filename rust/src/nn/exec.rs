@@ -8,7 +8,8 @@
 use std::collections::{BTreeMap, BTreeSet};
 
 use crate::quant::ActQuant;
-use crate::tensor::{conv2d, pool, Conv2dParams, Tensor};
+use crate::tensor::conv::{conv2d_with, Conv2dWorkspace};
+use crate::tensor::{pool, Conv2dParams, Tensor};
 
 use super::graph::{Model, Op};
 
@@ -40,6 +41,8 @@ impl Model {
     ) -> (Tensor, Taps) {
         let mut vals: BTreeMap<&str, Tensor> = BTreeMap::new();
         let mut taps = Taps::new();
+        // one im2col/GEMM workspace shared by every conv in this pass
+        let mut conv_ws = Conv2dWorkspace::new();
         for nd in &self.nodes {
             let out = match &nd.op {
                 Op::Input => x.clone(),
@@ -53,7 +56,8 @@ impl Model {
                         .bias_overrides
                         .and_then(|m| m.get(&nd.id))
                         .unwrap_or_else(|| self.bias(&nd.id));
-                    let mut y = conv2d(
+                    let mut y = conv2d_with(
+                        &mut conv_ws,
                         inp,
                         w,
                         Some(&b.data),

@@ -8,11 +8,26 @@
 //! [`Runtime`] owns one CPU `PjRtClient` and a lazily-populated cache of
 //! compiled executables keyed by shape bucket, so each artifact is
 //! compiled exactly once per process.
+//!
+//! The XLA-backed implementation is behind the `pjrt` cargo feature (it
+//! needs the vendored `xla` crate, which the offline build environment
+//! does not ship). Without the feature, [`stub`] provides the same public
+//! API: the manifest loads normally so models/datasets stay usable, and
+//! the executors return an error at call time — every caller already
+//! handles artifact-less operation gracefully.
 
+#[cfg(feature = "pjrt")]
 pub mod client;
+#[cfg(feature = "pjrt")]
 pub mod exec;
 pub mod manifest;
+#[cfg(not(feature = "pjrt"))]
+pub mod stub;
 
+#[cfg(feature = "pjrt")]
 pub use client::Runtime;
+#[cfg(feature = "pjrt")]
 pub use exec::{QLinearExec, StepExec, StepState};
 pub use manifest::{ExecSpec, Manifest};
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{QLinearExec, Runtime, StepExec, StepState};

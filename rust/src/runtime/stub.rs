@@ -1,0 +1,134 @@
+//! API-compatible stand-in for the PJRT runtime, compiled when the `pjrt`
+//! feature is off (the default: the offline build has no `xla` crate).
+//!
+//! [`Runtime::new`] still loads the artifact manifest, so model/dataset
+//! loading and every native code path work unchanged; only the compiled
+//! executors ([`StepExec::run`], [`QLinearExec::run`]) error out, telling
+//! the caller to rebuild with `--features pjrt`. All call sites either
+//! skip gracefully when artifacts are absent or propagate the error.
+
+use anyhow::{bail, Result};
+
+use crate::tensor::Tensor;
+
+use super::manifest::Manifest;
+
+const NO_PJRT: &str =
+    "PJRT execution not compiled in (rebuild with `--features pjrt` and a vendored `xla` crate)";
+
+pub struct Runtime {
+    pub manifest: Manifest,
+}
+
+impl Runtime {
+    pub fn new(artifacts_dir: &str) -> Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        Ok(Runtime { manifest })
+    }
+
+    /// AdaRound step executable for a layer geometry.
+    pub fn step_exec(&self, rows: usize, cols: usize, relu: bool) -> Result<StepExec> {
+        let _ = (rows, cols, relu);
+        bail!("{NO_PJRT}");
+    }
+
+    /// Quantized-matmul inference executable for a layer geometry.
+    pub fn qlinear_exec(&self, rows: usize, cols: usize, batch: usize) -> Result<QLinearExec> {
+        let _ = (rows, cols, batch);
+        bail!("{NO_PJRT}");
+    }
+
+    pub fn compiled_count(&self) -> usize {
+        0
+    }
+}
+
+/// Mutable optimizer state shuttled through the step executable.
+pub struct StepState {
+    pub v: Tensor,
+    pub m: Tensor,
+    pub v2: Tensor,
+    pub t: usize,
+}
+
+impl StepState {
+    pub fn new(v: Tensor) -> StepState {
+        let m = Tensor::zeros(&v.shape);
+        let v2 = Tensor::zeros(&v.shape);
+        StepState { v, m, v2, t: 0 }
+    }
+}
+
+/// Stub of the compiled AdaRound step artifact (never constructed).
+pub struct StepExec {
+    pub rows: usize,
+    pub cols: usize,
+    pub batch: usize,
+}
+
+impl StepExec {
+    #[allow(clippy::too_many_arguments)]
+    pub fn run(
+        &self,
+        _state: &mut StepState,
+        _x: &Tensor,
+        _t_target: &Tensor,
+        _w: &Tensor,
+        _s: &Tensor,
+        _b: &Tensor,
+        _beta: f32,
+        _lam: f32,
+        _lr: f32,
+        _n: f32,
+        _p: f32,
+    ) -> Result<(f64, f64)> {
+        bail!("{NO_PJRT}");
+    }
+}
+
+/// Stub of the compiled quantized-matmul artifact (never constructed).
+pub struct QLinearExec {
+    pub rows: usize,
+    pub cols: usize,
+    pub batch: usize,
+}
+
+impl QLinearExec {
+    pub fn run(
+        &self,
+        _w: &Tensor,
+        _r: &Tensor,
+        _s: &Tensor,
+        _b: &Tensor,
+        _x: &Tensor,
+        _n: f32,
+        _p: f32,
+    ) -> Result<Tensor> {
+        bail!("{NO_PJRT}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn executors_error_without_pjrt() {
+        let exec = StepExec { rows: 2, cols: 2, batch: 4 };
+        let mut state = StepState::new(Tensor::zeros(&[2, 2]));
+        let x = Tensor::zeros(&[2, 4]);
+        let t = Tensor::zeros(&[2, 4]);
+        let w = Tensor::zeros(&[2, 2]);
+        let s = Tensor::full(&[2, 1], 0.1);
+        let b = Tensor::zeros(&[2, 1]);
+        let err = exec
+            .run(&mut state, &x, &t, &w, &s, &b, 8.0, 0.01, 0.01, -8.0, 7.0)
+            .unwrap_err();
+        assert!(format!("{err}").contains("pjrt"));
+    }
+
+    #[test]
+    fn runtime_new_requires_manifest() {
+        assert!(Runtime::new("/definitely/missing/dir").is_err());
+    }
+}

@@ -5,6 +5,17 @@
 //! W[cout/g, cin/g*k*k] @ X[cin/g*k*k, N*Ho*Wo] per group — identical to
 //! the geometry the Pallas/HLO artifacts were lowered for, so the same
 //! im2col feeds both the native engine and the PJRT engine.
+//!
+//! Parallel structure (see [`crate::util::parallel`]): grouped convs fan
+//! out across groups (each group's im2col block and GEMM block are
+//! disjoint slices of the workspace), while groups==1 convs parallelize
+//! inside im2col (per patch row) and inside the GEMM (per output row);
+//! the nested-parallelism guard in the parallel module picks whichever
+//! level is active. The final scatter fans out per image. All splits are
+//! by item index with serial per-item code, so outputs are bit-identical
+//! across `PALLAS_THREADS` values.
+
+use crate::util::parallel;
 
 use super::{matmul::matmul_into, Tensor};
 
@@ -20,87 +31,150 @@ pub fn out_size(h: usize, k: usize, stride: usize, pad: usize) -> usize {
     (h + 2 * pad - k) / stride + 1
 }
 
+/// Reusable buffers for [`conv2d_with`]: the im2col matrix of ALL groups
+/// and the GEMM output of ALL groups. Holding these across calls makes the
+/// conv hot path allocation-free once shapes have been seen (the network
+/// executor reuses one workspace for a whole forward pass).
+#[derive(Default)]
+pub struct Conv2dWorkspace {
+    /// im2col columns, [groups * cg*k*k, N*Ho*Wo] stacked group-major
+    cols: Vec<f32>,
+    /// GEMM outputs, [O, N*Ho*Wo] (groups stacked along output channels)
+    gemm: Vec<f32>,
+}
+
+impl Conv2dWorkspace {
+    pub fn new() -> Conv2dWorkspace {
+        Conv2dWorkspace::default()
+    }
+
+    /// Resize `v` to `len` without preserving contents (no memset needed
+    /// beyond what `resize` does for the newly grown tail).
+    fn ensure(v: &mut Vec<f32>, len: usize) {
+        if v.len() != len {
+            v.resize(len, 0.0);
+        }
+    }
+}
+
 /// Extract im2col patches for ONE group from input [N, C, H, W].
 ///
 /// Returns [cg*k*k, N*Ho*Wo] where cg = channels per group; column order is
 /// (n, ho, wo) fastest-last, matching the output scatter in [`conv2d`].
-pub fn im2col(
-    input: &Tensor,
-    group: usize,
-    p: Conv2dParams,
-) -> Tensor {
-    let (n, c, h, w) = (input.shape[0], input.shape[1], input.shape[2], input.shape[3]);
+pub fn im2col(input: &Tensor, group: usize, p: Conv2dParams) -> Tensor {
+    let (n, c) = (input.shape[0], input.shape[1]);
+    let (h, w) = (input.shape[2], input.shape[3]);
     let cg = c / p.groups;
     let (ho, wo) = (out_size(h, p.k, p.stride, p.pad), out_size(w, p.k, p.stride, p.pad));
     let npos = n * ho * wo;
     let rows = cg * p.k * p.k;
     let mut out = Tensor::zeros(&[rows, npos]);
-    let c0 = group * cg;
-    for ci in 0..cg {
-        for ky in 0..p.k {
-            for kx in 0..p.k {
-                let r = (ci * p.k + ky) * p.k + kx;
-                let orow = &mut out.data[r * npos..(r + 1) * npos];
-                let mut col = 0usize;
-                for ni in 0..n {
-                    let base = ((ni * c + c0 + ci) * h) * w;
-                    for oy in 0..ho {
-                        let iy = (oy * p.stride + ky) as isize - p.pad as isize;
-                        if iy < 0 || iy >= h as isize {
-                            col += wo;
-                            continue;
-                        }
-                        let irow = base + iy as usize * w;
-                        for ox in 0..wo {
-                            let ix = (ox * p.stride + kx) as isize - p.pad as isize;
-                            if ix >= 0 && ix < w as isize {
-                                orow[col] = input.data[irow + ix as usize];
-                            }
-                            col += 1;
-                        }
-                    }
-                }
-            }
-        }
-    }
+    im2col_into(input, group, p, &mut out.data);
     out
 }
 
+/// im2col into a caller-provided buffer of len `cg*k*k * N*Ho*Wo`; writes
+/// every element (zero padding included), so the buffer needs no clearing.
+/// Parallel over patch rows.
+pub fn im2col_into(input: &Tensor, group: usize, p: Conv2dParams, out: &mut [f32]) {
+    let (n, c) = (input.shape[0], input.shape[1]);
+    let (h, w) = (input.shape[2], input.shape[3]);
+    let cg = c / p.groups;
+    let (ho, wo) = (out_size(h, p.k, p.stride, p.pad), out_size(w, p.k, p.stride, p.pad));
+    let npos = n * ho * wo;
+    let rows = cg * p.k * p.k;
+    assert_eq!(out.len(), rows * npos);
+    let c0 = group * cg;
+    // a patch row is a pure copy: parallelize only when rows carry real work
+    let grain = ((1 << 16) / npos.max(1)).max(1);
+    parallel::par_chunks_mut(out, npos, grain, |r, orow| {
+        // decode row r -> (channel-in-group, ky, kx); same layout as before
+        let ci = r / (p.k * p.k);
+        let ky = (r / p.k) % p.k;
+        let kx = r % p.k;
+        let mut col = 0usize;
+        for ni in 0..n {
+            let base = ((ni * c + c0 + ci) * h) * w;
+            for oy in 0..ho {
+                let iy = (oy * p.stride + ky) as isize - p.pad as isize;
+                if iy < 0 || iy >= h as isize {
+                    orow[col..col + wo].fill(0.0);
+                    col += wo;
+                    continue;
+                }
+                let irow = base + iy as usize * w;
+                for ox in 0..wo {
+                    let ix = (ox * p.stride + kx) as isize - p.pad as isize;
+                    orow[col] = if ix >= 0 && ix < w as isize {
+                        input.data[irow + ix as usize]
+                    } else {
+                        0.0
+                    };
+                    col += 1;
+                }
+            }
+        }
+    });
+}
+
 /// conv2d: input [N,C,H,W], weight [O, C/g, k, k], bias [O] -> [N,O,Ho,Wo].
-pub fn conv2d(
+/// Convenience wrapper allocating a fresh workspace; hot callers (the
+/// network executor) keep a [`Conv2dWorkspace`] and use [`conv2d_with`].
+pub fn conv2d(input: &Tensor, weight: &Tensor, bias: Option<&[f32]>, p: Conv2dParams) -> Tensor {
+    let mut ws = Conv2dWorkspace::new();
+    conv2d_with(&mut ws, input, weight, bias, p)
+}
+
+/// conv2d using caller-owned scratch buffers (group/row-parallel).
+pub fn conv2d_with(
+    ws: &mut Conv2dWorkspace,
     input: &Tensor,
     weight: &Tensor,
     bias: Option<&[f32]>,
     p: Conv2dParams,
 ) -> Tensor {
-    let (n, _c, h, w) = (input.shape[0], input.shape[1], input.shape[2], input.shape[3]);
+    let (n, h, w) = (input.shape[0], input.shape[2], input.shape[3]);
     let o = weight.shape[0];
     let og = o / p.groups;
     let patch = weight.shape[1] * weight.shape[2] * weight.shape[3];
     let (ho, wo) = (out_size(h, p.k, p.stride, p.pad), out_size(w, p.k, p.stride, p.pad));
     let npos = n * ho * wo;
-    let mut out = Tensor::zeros(&[n, o, ho, wo]);
-    let mut gemm_out = vec![0.0f32; og * npos];
-    for g in 0..p.groups {
-        let cols = im2col(input, g, p);
+    let hw = ho * wo;
+
+    // pass 1: im2col of every group into the stacked workspace.
+    // groups>1: fan out across groups (inner im2col serializes);
+    // groups==1: the single "chunk" runs inline and im2col row-parallelizes.
+    Conv2dWorkspace::ensure(&mut ws.cols, p.groups * patch * npos);
+    let input_ref = &*input;
+    parallel::par_chunks_mut(&mut ws.cols, patch * npos, 1, |g, chunk| {
+        im2col_into(input_ref, g, p, chunk);
+    });
+
+    // pass 2: per-group GEMM, [og, patch] @ [patch, npos], same fan-out rule
+    Conv2dWorkspace::ensure(&mut ws.gemm, o * npos);
+    ws.gemm.fill(0.0); // matmul_into accumulates
+    let cols_ref = &ws.cols;
+    parallel::par_chunks_mut(&mut ws.gemm, og * npos, 1, |g, chunk| {
         let wslice = &weight.data[g * og * patch..(g + 1) * og * patch];
-        gemm_out.iter_mut().for_each(|x| *x = 0.0);
-        matmul_into(wslice, &cols.data, &mut gemm_out, og, patch, npos);
-        // scatter [og, n*ho*wo] -> [n, o, ho, wo]
-        let hw = ho * wo;
-        for oi in 0..og {
-            let ochan = g * og + oi;
-            let b = bias.map(|b| b[ochan]).unwrap_or(0.0);
-            let src = &gemm_out[oi * npos..(oi + 1) * npos];
-            for ni in 0..n {
-                let dst = &mut out.data[((ni * o + ochan) * hw)..((ni * o + ochan + 1) * hw)];
-                let s = &src[ni * hw..(ni + 1) * hw];
-                for (d, v) in dst.iter_mut().zip(s) {
-                    *d = v + b;
-                }
+        let cslice = &cols_ref[g * patch * npos..(g + 1) * patch * npos];
+        matmul_into(wslice, cslice, chunk, og, patch, npos);
+    });
+
+    // pass 3: scatter [O, n*ho*wo] -> [n, O, ho, wo] + bias, parallel over
+    // images (each image's [O, hw] block is one contiguous output chunk)
+    let mut out = Tensor::zeros(&[n, o, ho, wo]);
+    let gemm_ref = &ws.gemm;
+    let grain = ((1 << 16) / (o * hw).max(1)).max(1);
+    parallel::par_chunks_mut(&mut out.data, o * hw, grain, |ni, dst| {
+        for oc in 0..o {
+            let b = bias.map(|b| b[oc]).unwrap_or(0.0);
+            let src = &gemm_ref[oc * npos + ni * hw..oc * npos + (ni + 1) * hw];
+            let drow = &mut dst[oc * hw..(oc + 1) * hw];
+            for (d, v) in drow.iter_mut().zip(src) {
+                *d = v + b;
             }
         }
-    }
+    });
     out
 }
 
@@ -150,6 +224,7 @@ pub fn conv2d_naive(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::parallel::with_threads;
     use crate::util::proptest::{close, property};
 
     #[test]
@@ -213,5 +288,50 @@ mod tests {
         assert_eq!(out_size(32, 3, 2, 1), 16);
         assert_eq!(out_size(32, 1, 1, 0), 32);
         assert_eq!(out_size(5, 3, 2, 1), 3);
+    }
+
+    #[test]
+    fn workspace_reuse_across_shapes() {
+        // one workspace, several different conv geometries in sequence
+        let mut ws = Conv2dWorkspace::new();
+        let mut rng = crate::util::Rng::new(9);
+        for (c, o, hw, k, g) in [(2usize, 4usize, 6usize, 3usize, 1usize), (4, 4, 5, 3, 4), (3, 2, 7, 1, 1)] {
+            let input = Tensor::from_vec(
+                &[2, c, hw, hw],
+                (0..2 * c * hw * hw).map(|_| rng.normal_f32(0.0, 1.0)).collect(),
+            );
+            let weight = Tensor::from_vec(
+                &[o, c / g, k, k],
+                (0..o * (c / g) * k * k).map(|_| rng.normal_f32(0.0, 0.5)).collect(),
+            );
+            let p = Conv2dParams { k, stride: 1, pad: k / 2, groups: g };
+            let a = conv2d_with(&mut ws, &input, &weight, None, p);
+            let b = conv2d_naive(&input, &weight, None, p);
+            assert_eq!(a.shape, b.shape);
+            for (x, y) in a.data.iter().zip(&b.data) {
+                assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn bit_identical_across_threads() {
+        let mut rng = crate::util::Rng::new(17);
+        // big enough that im2col, GEMM and scatter all cross their grains
+        let input = Tensor::from_vec(
+            &[4, 8, 16, 16],
+            (0..4 * 8 * 256).map(|_| rng.normal_f32(0.0, 1.0)).collect(),
+        );
+        for groups in [1usize, 8] {
+            let weight = Tensor::from_vec(
+                &[8, 8 / groups, 3, 3],
+                (0..8 * (8 / groups) * 9).map(|_| rng.normal_f32(0.0, 0.5)).collect(),
+            );
+            let bias: Vec<f32> = (0..8).map(|_| rng.normal_f32(0.0, 0.1)).collect();
+            let p = Conv2dParams { k: 3, stride: 1, pad: 1, groups };
+            let y1 = with_threads(1, || conv2d(&input, &weight, Some(&bias), p));
+            let y4 = with_threads(4, || conv2d(&input, &weight, Some(&bias), p));
+            assert_eq!(y1.data, y4.data, "conv2d groups={groups} differs across thread counts");
+        }
     }
 }

@@ -1,14 +1,30 @@
-//! Blocked single-core matmul — the native-engine hot kernel.
+//! Blocked, row-parallel matmul — the native-engine hot kernel.
 //!
-//! C[M,N] = A[M,K] * B[K,N], row-major. The i-k-j loop order streams B rows
-//! sequentially and accumulates into a C row that stays hot in L1; the
-//! inner j-loop auto-vectorizes (the build sets `-C target-cpu=native`).
-//! K-blocking keeps the active slice of B in L2 for large N.
+//! C[M,N] = A[M,K] * B[K,N], row-major. Output rows are split into
+//! contiguous per-thread spans ([`crate::util::parallel`]); within a span
+//! the k-k-j loop order streams B rows sequentially and accumulates into a
+//! C row that stays hot in L1, with K-blocking keeping the active slice of
+//! B in L2 across the span's rows. The inner j-loop auto-vectorizes (the
+//! build sets `-C target-cpu=native`).
+//!
+//! Every C element is accumulated in ascending-k order by exactly one
+//! thread, so results are bit-identical for any `PALLAS_THREADS` value
+//! (including the serial path) — see `bit_identical_across_threads`.
+
+use crate::util::parallel;
 
 use super::Tensor;
 
 /// Cache block over K. 64 rows of B x 4KB/row ~ 256KB fits typical L2.
 const KB: usize = 64;
+
+/// Don't spawn a worker for less than ~128k flops of row work.
+const MIN_PAR_FLOPS: usize = 1 << 17;
+
+/// Rows per thread below which parallelism isn't worth the spawn.
+fn row_grain(k: usize, n: usize) -> usize {
+    (MIN_PAR_FLOPS / (2 * k * n).max(1)).max(1)
+}
 
 /// C = A @ B (allocates C).
 pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
@@ -29,16 +45,27 @@ pub fn matmul_acc(a: &Tensor, b: &Tensor, c: &mut Tensor) {
     matmul_into(&a.data, &b.data, &mut c.data, m, k, n);
 }
 
-/// Raw-slice core (also used by the adaround native optimizer on views).
+/// Raw-slice core, C += A @ B (also used by the adaround native optimizer
+/// and the conv GEMM on workspace views). Row-parallel.
 pub fn matmul_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
     debug_assert_eq!(c.len(), m * n);
+    parallel::par_ranges_mut(c, n, row_grain(k, n), |rows, span| {
+        matmul_rows(a, b, span, rows.start, rows.end, k, n);
+    });
+}
+
+/// Serial kernel for one contiguous row span [r0, r1); `c` holds exactly
+/// those rows. Same K-blocked loop order as the original single-core
+/// kernel, so the serial path is unchanged and each element's FP
+/// accumulation order (ascending k) is thread-count independent.
+fn matmul_rows(a: &[f32], b: &[f32], c: &mut [f32], r0: usize, r1: usize, k: usize, n: usize) {
     for k0 in (0..k).step_by(KB) {
         let k1 = (k0 + KB).min(k);
-        for i in 0..m {
+        for i in r0..r1 {
             let arow = &a[i * k..(i + 1) * k];
-            let crow = &mut c[i * n..(i + 1) * n];
+            let crow = &mut c[(i - r0) * n..(i - r0 + 1) * n];
             for kk in k0..k1 {
                 let av = arow[kk];
                 if av == 0.0 {
@@ -61,24 +88,68 @@ pub fn matmul_bt(a: &Tensor, b: &Tensor) -> Tensor {
     let (n, k2) = (b.rows(), b.cols());
     assert_eq!(k, k2);
     let mut c = Tensor::zeros(&[m, n]);
-    for i in 0..m {
-        let arow = a.row(i);
-        let crow = c.row_mut(i);
-        for j in 0..n {
-            let brow = &b.data[j * k..(j + 1) * k];
-            let mut acc = 0.0f32;
-            for (x, y) in arow.iter().zip(brow) {
-                acc += x * y;
-            }
-            crow[j] = acc;
-        }
-    }
+    matmul_bt_into(&a.data, &b.data, &mut c.data, m, k, n);
     c
+}
+
+/// Raw-slice core, C = A @ B^T with B^T given row-major as [N,K].
+/// Row-parallel with a register-blocked 4-wide micro-kernel: four B rows
+/// share one streaming pass over the A row, quadrupling arithmetic
+/// intensity per load. Overwrites `c`.
+pub fn matmul_bt_into(a: &[f32], bt: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(bt.len(), n * k);
+    debug_assert_eq!(c.len(), m * n);
+    parallel::par_ranges_mut(c, n, row_grain(k, n), |rows, span| {
+        for i in rows.clone() {
+            let arow = &a[i * k..(i + 1) * k];
+            let crow = &mut span[(i - rows.start) * n..(i - rows.start + 1) * n];
+            matmul_bt_row(arow, bt, crow, k, n);
+        }
+    });
+}
+
+/// One output row of A @ B^T: crow[j] = dot(arow, bt[j]).
+fn matmul_bt_row(arow: &[f32], bt: &[f32], crow: &mut [f32], k: usize, n: usize) {
+    let arow = &arow[..k];
+    let n4 = n - n % 4;
+    let mut j = 0;
+    while j < n4 {
+        // 4-wide register block: independent accumulators, each summed in
+        // ascending-k order (bit-identical to the scalar loop per element)
+        let b0 = &bt[j * k..][..k];
+        let b1 = &bt[(j + 1) * k..][..k];
+        let b2 = &bt[(j + 2) * k..][..k];
+        let b3 = &bt[(j + 3) * k..][..k];
+        let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+        for t in 0..k {
+            let av = arow[t];
+            s0 += av * b0[t];
+            s1 += av * b1[t];
+            s2 += av * b2[t];
+            s3 += av * b3[t];
+        }
+        crow[j] = s0;
+        crow[j + 1] = s1;
+        crow[j + 2] = s2;
+        crow[j + 3] = s3;
+        j += 4;
+    }
+    while j < n {
+        let brow = &bt[j * k..][..k];
+        let mut acc = 0.0f32;
+        for t in 0..k {
+            acc += arow[t] * brow[t];
+        }
+        crow[j] = acc;
+        j += 1;
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::parallel::with_threads;
     use crate::util::proptest::{close, property};
     use crate::util::Rng;
 
@@ -160,5 +231,22 @@ mod tests {
         let mut c = Tensor::full(&[1, 1], 10.0);
         matmul_acc(&a, &b, &mut c);
         assert_eq!(c.data[0], 15.0);
+    }
+
+    #[test]
+    fn bit_identical_across_threads() {
+        // the determinism contract: 1 vs 4 threads, bit-for-bit equal
+        let mut r = Rng::new(42);
+        // sizes chosen to exceed the parallel grain so threads actually spawn
+        let (m, k, n) = (37, 130, 220);
+        let a = Tensor::from_vec(&[m, k], (0..m * k).map(|_| r.normal_f32(0.0, 1.0)).collect());
+        let b = Tensor::from_vec(&[k, n], (0..k * n).map(|_| r.normal_f32(0.0, 1.0)).collect());
+        let bt = b.transpose2();
+        let c1 = with_threads(1, || matmul(&a, &b));
+        let c4 = with_threads(4, || matmul(&a, &b));
+        assert_eq!(c1.data, c4.data, "matmul differs across thread counts");
+        let d1 = with_threads(1, || matmul_bt(&a, &bt));
+        let d4 = with_threads(4, || matmul_bt(&a, &bt));
+        assert_eq!(d1.data, d4.data, "matmul_bt differs across thread counts");
     }
 }

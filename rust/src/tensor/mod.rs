@@ -9,8 +9,8 @@ pub mod conv;
 pub mod matmul;
 pub mod pool;
 
-pub use conv::{conv2d, im2col, Conv2dParams};
-pub use matmul::{matmul, matmul_acc};
+pub use conv::{conv2d, conv2d_with, im2col, im2col_into, Conv2dParams, Conv2dWorkspace};
+pub use matmul::{matmul, matmul_acc, matmul_bt, matmul_bt_into, matmul_into};
 
 /// Row-major dense f32 tensor.
 #[derive(Clone, Debug, PartialEq)]

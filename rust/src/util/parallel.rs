@@ -1,0 +1,345 @@
+//! Zero-dependency data parallelism over `std::thread::scope`.
+//!
+//! The AdaRound hot paths (GEMM rows, conv groups, calibration chunks,
+//! per-group rounding) are embarrassingly parallel, so this module provides
+//! exactly one pattern: split a range of independent work items into
+//! contiguous per-thread spans and run them on scoped threads.
+//!
+//! **Determinism.** Work is assigned by *item index* and every item is
+//! computed by the same serial code regardless of the thread count, so
+//! results are bit-identical for `PALLAS_THREADS=1` and `=N` (verified by
+//! the `*_bit_identical_across_threads` tests in tensor/ and adaround/).
+//! No atomics, no locks, no reduction-order dependence: threads only ever
+//! write disjoint `&mut` sub-slices handed out via `split_at_mut`.
+//!
+//! **Thread count.** `PALLAS_THREADS` (clamped to [1, 256]) wins; otherwise
+//! `std::thread::available_parallelism()`. Workers run their items with the
+//! count forced to 1, so nested parallel calls (e.g. the row-parallel
+//! matmul inside a group-parallel conv) never oversubscribe.
+//!
+//! Threads are spawned per call rather than kept in a static pool: spawn
+//! cost (~10-40us) is amortized by the grain thresholds at each call site,
+//! and scoped threads let workers borrow the caller's slices safely.
+
+use std::cell::Cell;
+use std::ops::Range;
+use std::sync::OnceLock;
+
+/// Hard cap on worker threads (sanity bound for absurd env values).
+pub const MAX_THREADS: usize = 256;
+
+thread_local! {
+    static OVERRIDE: Cell<Option<usize>> = const { Cell::new(None) };
+}
+
+fn env_threads() -> usize {
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| {
+        let n = match std::env::var("PALLAS_THREADS") {
+            Ok(v) => v.trim().parse::<usize>().unwrap_or(0),
+            Err(_) => 0,
+        };
+        let n = if n == 0 {
+            std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+        } else {
+            n
+        };
+        n.clamp(1, MAX_THREADS)
+    })
+}
+
+/// Effective worker count for the current thread (env / override).
+pub fn num_threads() -> usize {
+    OVERRIDE.with(|c| c.get()).unwrap_or_else(env_threads)
+}
+
+/// Run `f` with the thread count forced to `n` on this thread (restored on
+/// exit, panic-safe). Used by tests to compare thread counts within one
+/// process, and internally to serialize nested parallelism in workers.
+pub fn with_threads<R>(n: usize, f: impl FnOnce() -> R) -> R {
+    struct Guard(Option<usize>);
+    impl Drop for Guard {
+        fn drop(&mut self) {
+            OVERRIDE.with(|c| c.set(self.0));
+        }
+    }
+    let prev = OVERRIDE.with(|c| c.replace(Some(n.clamp(1, MAX_THREADS))));
+    let _g = Guard(prev);
+    f()
+}
+
+/// Split `n` items into at most `parts` contiguous near-equal ranges
+/// (the first `n % parts` ranges get one extra item). Deterministic and
+/// independent of thread scheduling.
+pub fn split_ranges(n: usize, parts: usize) -> Vec<Range<usize>> {
+    let parts = parts.clamp(1, n.max(1));
+    let base = n / parts;
+    let rem = n % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut s = 0;
+    for i in 0..parts {
+        let len = base + usize::from(i < rem);
+        if len == 0 {
+            break;
+        }
+        out.push(s..s + len);
+        s += len;
+    }
+    out
+}
+
+/// Parallel split of `data` into per-thread spans of whole chunks: each
+/// thread receives ONE contiguous range of chunk indices plus the matching
+/// sub-slice, and `f(range, span)` processes it serially. This is the
+/// primitive behind the K-blocked row-parallel GEMM, where a thread wants
+/// its whole row range at once (to reuse cache blocks across rows) rather
+/// than row-at-a-time callbacks.
+///
+/// `grain` is the minimum number of chunks per thread — below it the call
+/// degrades to `f(0..nchunks, data)` on the caller thread (allocating
+/// nothing), so tiny inputs never pay spawn cost.
+///
+/// Panics if `data.len()` is not a multiple of `chunk`.
+pub fn par_ranges_mut<T, F>(data: &mut [T], chunk: usize, grain: usize, f: F)
+where
+    T: Send,
+    F: Fn(Range<usize>, &mut [T]) + Sync,
+{
+    assert!(chunk > 0, "chunk must be positive");
+    assert_eq!(data.len() % chunk, 0, "data.len() {} not a multiple of chunk {}", data.len(), chunk);
+    let nchunks = data.len() / chunk;
+    let want = nchunks / grain.max(1);
+    let t = num_threads().min(want.max(1));
+    if t <= 1 || nchunks <= 1 {
+        f(0..nchunks, data);
+        return;
+    }
+    let ranges = split_ranges(nchunks, t);
+    // main thread takes ranges[0]; workers get the rest
+    let (main_part, mut rest) = data.split_at_mut(ranges[0].end * chunk);
+    std::thread::scope(|s| {
+        for r in &ranges[1..] {
+            let len = (r.end - r.start) * chunk;
+            let (part, tail) = std::mem::take(&mut rest).split_at_mut(len);
+            rest = tail;
+            let range = r.clone();
+            let fr = &f;
+            s.spawn(move || with_threads(1, || fr(range, part)));
+        }
+        let r0 = ranges[0].clone();
+        with_threads(1, || f(r0, main_part));
+    });
+}
+
+/// Parallel iteration over the equal-size chunks of `data`: calls
+/// `f(chunk_index, chunk)` for every `chunk`-sized piece, fanning
+/// contiguous runs of chunks out to worker threads (see [`par_ranges_mut`]
+/// for grain semantics and the determinism contract).
+pub fn par_chunks_mut<T, F>(data: &mut [T], chunk: usize, grain: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    par_ranges_mut(data, chunk, grain, |range, span| {
+        for (j, c) in span.chunks_mut(chunk).enumerate() {
+            f(range.start + j, c);
+        }
+    });
+}
+
+/// Lock-step parallel iteration over the chunks of TWO slices: calls
+/// `f(i, a_chunk_i, b_chunk_i)` for every chunk index. Both slices must
+/// contain the same number of chunks (`a.len()/ca == b.len()/cb`); chunk
+/// sizes may differ — e.g. a per-row output plus a per-row f64 partial.
+/// Grain/determinism semantics as in [`par_ranges_mut`].
+pub fn par_chunks2_mut<T, U, F>(a: &mut [T], ca: usize, b: &mut [U], cb: usize, grain: usize, f: F)
+where
+    T: Send,
+    U: Send,
+    F: Fn(usize, &mut [T], &mut [U]) + Sync,
+{
+    assert!(ca > 0 && cb > 0, "chunk sizes must be positive");
+    assert_eq!(a.len() % ca, 0, "a.len() {} not a multiple of {}", a.len(), ca);
+    assert_eq!(b.len() % cb, 0, "b.len() {} not a multiple of {}", b.len(), cb);
+    let nchunks = a.len() / ca;
+    assert_eq!(nchunks, b.len() / cb, "slices disagree on chunk count");
+    let serial = |off: usize, aspan: &mut [T], bspan: &mut [U]| {
+        for (j, (ac, bc)) in aspan.chunks_mut(ca).zip(bspan.chunks_mut(cb)).enumerate() {
+            f(off + j, ac, bc);
+        }
+    };
+    let want = nchunks / grain.max(1);
+    let t = num_threads().min(want.max(1));
+    if t <= 1 || nchunks <= 1 {
+        serial(0, a, b);
+        return;
+    }
+    let ranges = split_ranges(nchunks, t);
+    let (a_main, mut a_rest) = a.split_at_mut(ranges[0].end * ca);
+    let (b_main, mut b_rest) = b.split_at_mut(ranges[0].end * cb);
+    std::thread::scope(|s| {
+        for r in &ranges[1..] {
+            let (ap, at) = std::mem::take(&mut a_rest).split_at_mut((r.end - r.start) * ca);
+            let (bp, bt) = std::mem::take(&mut b_rest).split_at_mut((r.end - r.start) * cb);
+            a_rest = at;
+            b_rest = bt;
+            let start = r.start;
+            let sr = &serial;
+            s.spawn(move || with_threads(1, || sr(start, ap, bp)));
+        }
+        with_threads(1, || serial(0, a_main, b_main));
+    });
+}
+
+/// Parallel map over `0..n`: returns `vec![f(0), f(1), ..]` in index order
+/// regardless of scheduling. `grain` as in [`par_chunks_mut`].
+pub fn par_map<R, F>(n: usize, grain: usize, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize) -> R + Sync,
+{
+    let mut out: Vec<Option<R>> = Vec::with_capacity(n);
+    out.resize_with(n, || None);
+    par_chunks_mut(&mut out, 1, grain, |i, slot| {
+        slot[0] = Some(f(i));
+    });
+    out.into_iter().map(|r| r.expect("par_map slot filled")).collect()
+}
+
+/// [`par_map`] for stochastic work: item `i` draws from `rngs[i]`. Fork
+/// the RNGs serially from one stream before calling (fork order = item
+/// order), and the outcome is independent of the thread count — the
+/// deterministic fan-out rule used by per-group rounding and per-chunk
+/// calibration sampling.
+pub fn par_map_rng<R, F>(rngs: &mut [crate::util::Rng], grain: usize, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize, &mut crate::util::Rng) -> R + Sync,
+{
+    let n = rngs.len();
+    let mut out: Vec<Option<R>> = Vec::with_capacity(n);
+    out.resize_with(n, || None);
+    par_chunks2_mut(&mut out, 1, rngs, 1, grain, |i, slot, rng| {
+        slot[0] = Some(f(i, &mut rng[0]));
+    });
+    out.into_iter().map(|r| r.expect("par_map_rng slot filled")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_ranges_covers_exactly() {
+        for (n, p) in [(10, 3), (3, 10), (0, 4), (7, 1), (8, 8), (1, 1)] {
+            let rs = split_ranges(n, p);
+            let mut next = 0;
+            for r in &rs {
+                assert_eq!(r.start, next);
+                assert!(r.end > r.start);
+                next = r.end;
+            }
+            assert_eq!(next, n);
+            assert!(rs.len() <= p.max(1));
+            // near-equal: sizes differ by at most one
+            if let (Some(a), Some(b)) = (
+                rs.iter().map(|r| r.end - r.start).max(),
+                rs.iter().map(|r| r.end - r.start).min(),
+            ) {
+                assert!(a - b <= 1);
+            }
+        }
+    }
+
+    #[test]
+    fn par_chunks_mut_writes_every_chunk() {
+        let mut data = vec![0u32; 7 * 13];
+        with_threads(4, || {
+            par_chunks_mut(&mut data, 13, 1, |i, c| {
+                for (j, v) in c.iter_mut().enumerate() {
+                    *v = (i * 13 + j) as u32;
+                }
+            });
+        });
+        for (k, v) in data.iter().enumerate() {
+            assert_eq!(*v, k as u32);
+        }
+    }
+
+    #[test]
+    fn par_matches_serial() {
+        let run = |threads: usize| {
+            let mut data = vec![0.0f32; 101];
+            with_threads(threads, || {
+                par_chunks_mut(&mut data, 1, 1, |i, c| {
+                    c[0] = (i as f32).sin();
+                });
+            });
+            data
+        };
+        assert_eq!(run(1), run(5));
+    }
+
+    #[test]
+    fn par_map_preserves_order() {
+        let got = with_threads(3, || par_map(20, 1, |i| i * i));
+        assert_eq!(got, (0..20).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn par_map_rng_thread_count_independent() {
+        let run = |threads: usize| {
+            let mut base = crate::util::Rng::new(99);
+            let mut rngs: Vec<crate::util::Rng> = (0..12).map(|i| base.fork(i)).collect();
+            with_threads(threads, || par_map_rng(&mut rngs, 1, |i, r| (i, r.next_u64())))
+        };
+        assert_eq!(run(1), run(4));
+    }
+
+    #[test]
+    fn nested_calls_serialize() {
+        // inside a worker, num_threads() must report 1
+        let inner: Vec<usize> = with_threads(4, || par_map(8, 1, |_| num_threads()));
+        assert!(inner.iter().all(|&n| n == 1), "{inner:?}");
+    }
+
+    #[test]
+    fn with_threads_restores() {
+        let before = num_threads();
+        with_threads(2, || {
+            assert_eq!(num_threads(), 2);
+            with_threads(7, || assert_eq!(num_threads(), 7));
+            assert_eq!(num_threads(), 2);
+        });
+        assert_eq!(num_threads(), before);
+    }
+
+    #[test]
+    fn par_chunks2_lockstep() {
+        let rows = 9;
+        let cols = 5;
+        let mut grid = vec![0.0f32; rows * cols];
+        let mut partial = vec![0.0f64; rows];
+        with_threads(4, || {
+            par_chunks2_mut(&mut grid, cols, &mut partial, 1, 1, |r, row, p| {
+                for (j, v) in row.iter_mut().enumerate() {
+                    *v = (r * cols + j) as f32;
+                }
+                p[0] = row.iter().map(|&v| v as f64).sum();
+            });
+        });
+        for (k, v) in grid.iter().enumerate() {
+            assert_eq!(*v, k as f32);
+        }
+        let expect: f64 = (0..cols).map(|j| (8 * cols + j) as f64).sum();
+        assert_eq!(partial[8], expect);
+    }
+
+    #[test]
+    fn grain_degrades_to_serial() {
+        // grain larger than the chunk count: must still process everything
+        let mut data = vec![0u8; 6];
+        par_chunks_mut(&mut data, 2, 100, |_, c| c.iter_mut().for_each(|v| *v = 1));
+        assert!(data.iter().all(|&v| v == 1));
+    }
+}

@@ -128,14 +128,25 @@ impl Rng {
 
     /// Sample `k` distinct indices from [0, n) (partial Fisher-Yates).
     pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
-        let k = k.min(n);
-        let mut idx: Vec<usize> = (0..n).collect();
-        for i in 0..k {
-            let j = i + self.below(n - i);
-            idx.swap(i, j);
-        }
+        let mut idx = Vec::new();
+        let k = self.sample_indices_into(n, k, &mut idx);
         idx.truncate(k);
         idx
+    }
+
+    /// Allocation-free `sample_indices`: resets `pool` to 0..n, runs the
+    /// same partial Fisher-Yates (identical RNG stream and sample), and
+    /// returns the sample size — the first `k` entries of `pool`. Reusing
+    /// the pool across calls keeps the optimizer inner loop heap-free.
+    pub fn sample_indices_into(&mut self, n: usize, k: usize, pool: &mut Vec<usize>) -> usize {
+        let k = k.min(n);
+        pool.clear();
+        pool.extend(0..n);
+        for i in 0..k {
+            let j = i + self.below(n - i);
+            pool.swap(i, j);
+        }
+        k
     }
 }
 
@@ -190,6 +201,18 @@ mod tests {
         sorted.sort_unstable();
         sorted.dedup();
         assert_eq!(sorted.len(), 30);
+    }
+
+    #[test]
+    fn sample_indices_into_matches_alloc_variant() {
+        let mut a = Rng::new(11);
+        let mut b = Rng::new(11);
+        let mut pool = Vec::new();
+        for (n, k) in [(50usize, 10usize), (8, 8), (20, 30)] {
+            let alloc = a.sample_indices(n, k);
+            let kk = b.sample_indices_into(n, k, &mut pool);
+            assert_eq!(&pool[..kk], &alloc[..]);
+        }
     }
 
     #[test]

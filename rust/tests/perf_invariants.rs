@@ -1,0 +1,105 @@
+//! Perf invariants of the parallel compute core: the native optimizer's
+//! inner loop must not touch the heap once its workspace exists.
+//!
+//! A counting global allocator wraps `System`; the loop runs with the
+//! thread count forced to 1 (worker spawns legitimately allocate stacks —
+//! the zero-allocation contract is about tensor traffic, and the serial
+//! path exercises exactly the same buffers the parallel path reuses).
+//!
+//! This file deliberately holds a single #[test]: sibling tests in the
+//! same binary would run concurrently and pollute the allocation counter.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use adaround::adaround::{Adam, LayerProblem, StepWorkspace};
+use adaround::adaround::{gather_cols_into, AdaRoundConfig};
+use adaround::quant::QuantGrid;
+use adaround::tensor::{matmul, Tensor};
+use adaround::util::parallel::with_threads;
+use adaround::util::Rng;
+
+static ALLOCS: AtomicUsize = AtomicUsize::new(0);
+
+struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+#[test]
+fn native_step_inner_loop_is_allocation_free() {
+    let (rows, cols, batch, ncols) = (16usize, 64usize, 48usize, 256usize);
+    let mut rng = Rng::new(1);
+    let w = Tensor::from_vec(
+        &[rows, cols],
+        (0..rows * cols).map(|_| rng.normal_f32(0.0, 0.3)).collect(),
+    );
+    let grid = QuantGrid::per_tensor(0.05, 4);
+    let bias: Vec<f32> = (0..rows).map(|_| rng.normal_f32(0.0, 0.1)).collect();
+    let prob = LayerProblem::new(w, &grid, 0, bias, true);
+    let x = Tensor::from_vec(
+        &[cols, ncols],
+        (0..cols * ncols).map(|_| rng.normal_f32(0.0, 1.0)).collect(),
+    );
+    let t = matmul(&prob.w, &x);
+    let cfg = AdaRoundConfig::default();
+
+    with_threads(1, || {
+        let mut v = prob.init_v();
+        let mut adam = Adam::new(v.numel());
+        let mut ws = StepWorkspace::new(rows, cols, batch);
+        let mut xb = Tensor::zeros(&[cols, batch]);
+        let mut tb = Tensor::zeros(&[rows, batch]);
+        let mut pool: Vec<usize> = Vec::with_capacity(ncols);
+        let mut srng = Rng::new(7);
+
+        let iteration = |it: usize, ws: &mut StepWorkspace, v: &mut Tensor,
+                             adam: &mut Adam, srng: &mut Rng,
+                             xb: &mut Tensor, tb: &mut Tensor, pool: &mut Vec<usize>| {
+            let (beta, reg_on) = cfg.beta.at(it, 400);
+            let lam = if reg_on { cfg.lambda } else { 0.0 };
+            let k = srng.sample_indices_into(ncols, batch, pool);
+            gather_cols_into(&x, &pool[..k], xb);
+            gather_cols_into(&t, &pool[..k], tb);
+            prob.loss_grad_into(v, xb, tb, beta, lam, ws);
+            adam.step(&mut v.data, &ws.grad, cfg.lr);
+        };
+
+        // warm up: first iterations may grow the index pool to capacity
+        for it in 0..3 {
+            iteration(it, &mut ws, &mut v, &mut adam, &mut srng, &mut xb, &mut tb, &mut pool);
+        }
+        let before = ALLOCS.load(Ordering::SeqCst);
+        for it in 3..103 {
+            iteration(it, &mut ws, &mut v, &mut adam, &mut srng, &mut xb, &mut tb, &mut pool);
+        }
+        let after = ALLOCS.load(Ordering::SeqCst);
+        assert_eq!(
+            after - before,
+            0,
+            "native optimizer inner loop allocated {} time(s) over 100 iterations",
+            after - before
+        );
+    });
+}
