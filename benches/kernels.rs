@@ -18,9 +18,10 @@
 use std::collections::BTreeMap;
 
 use adaround::adaround::{Adam, LayerProblem, StepWorkspace};
-use adaround::quant::{fake_quant_nearest, QuantGrid};
+use adaround::quant::{fake_quant_nearest, rounding_mask, QuantGrid, RoundingMode};
 use adaround::qubo::{solve_cem, solve_tabu, CemParams, QuboProblem, TabuParams};
 use adaround::runtime::{Runtime, StepState};
+use adaround::tensor::int8::gemm_i8_into;
 use adaround::tensor::{conv2d, matmul, Conv2dParams, Tensor};
 use adaround::util::bench::{Bench, BenchResult};
 use adaround::util::{parallel, Json, Rng};
@@ -97,13 +98,32 @@ fn main() {
         record(&mut results, r);
     }
 
-    // fake-quant
+    // fake-quant + rounding mask (vectorized round/clamp paths)
     let w = rnd(&[32, 288], &mut rng);
     let grid = QuantGrid::per_tensor(0.05, 4);
     let r = b.run_with_items("fake_quant_nearest 32x288 (weights/s)", w.numel(), &mut || {
         std::hint::black_box(fake_quant_nearest(&w, &grid));
     });
     record(&mut results, r);
+    let r = b.run_with_items("rounding_mask nearest 32x288 (weights/s)", w.numel(), &mut || {
+        let mut mrng = Rng::new(2);
+        std::hint::black_box(rounding_mask(&w, &grid, RoundingMode::Nearest, &mut mrng));
+    });
+    record(&mut results, r);
+
+    // int8 GEMM at a conv-bucket shape (the serving engine's hot kernel)
+    {
+        let (m, k, n) = (32usize, 288usize, 1024usize);
+        let a: Vec<i8> = (0..m * k).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+        let bq: Vec<u8> = (0..k * n).map(|_| rng.below(256) as u8).collect();
+        let mut c = vec![0i32; m * n];
+        let r = b.run_with_items(&format!("gemm_i8 {m}x{k}x{n} (MACs/s)"), m * k * n, &mut || {
+            c.fill(0);
+            gemm_i8_into(&a, &bq, &mut c, m, k, n);
+            std::hint::black_box(&c);
+        });
+        record(&mut results, r);
+    }
 
     // native AdaRound step (loss_grad_into + Adam, reused workspace) at
     // the largest micro18 layer — the optimizer's actual inner loop

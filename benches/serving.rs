@@ -1,0 +1,162 @@
+//! Serving benchmarks: f32 fake-quant forward vs the int8 engine, plus
+//! batched-serving latency under offered load.
+//!
+//!     cargo bench --bench serving
+//!
+//! Self-contained (no `make artifacts`): builds a synthetic conv net,
+//! quantizes it 8/8 with the native pipeline, compiles the integer plan
+//! and measures. Emits `BENCH_serving.json` (imgs/sec per engine per
+//! batch size, p50/p99 latency per offered load) for `bench-diff`.
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use adaround::coordinator::{Method, Pipeline, PipelineConfig};
+use adaround::data::synthetic_stripes;
+use adaround::nn::Model;
+use adaround::serve::{
+    latency_entry, offered_load_latencies, throughput_entry, BatchPolicy, Batcher, ServeEngine,
+};
+use adaround::tensor::Tensor;
+use adaround::util::stats::percentile;
+use adaround::util::{parallel, Json, Rng, Stopwatch};
+
+/// A mid-size synthetic classifier: conv stack + residual add + pooling
+/// + dense head — enough arithmetic that engine differences dominate
+/// measurement noise, small enough to quantize in seconds.
+fn bench_model(rng: &mut Rng) -> Model {
+    let ir = r#"{"task":"cls","ir":[
+      {"id":"in","op":"input","inputs":[]},
+      {"id":"c1","op":"conv","inputs":["in"],"cin":3,"cout":16,
+       "k":3,"stride":1,"pad":1,"groups":1,"relu":true},
+      {"id":"c2","op":"conv","inputs":["c1"],"cin":16,"cout":16,
+       "k":3,"stride":1,"pad":1,"groups":1,"relu":false},
+      {"id":"a1","op":"add","inputs":["c2","c1"],"relu":true},
+      {"id":"p1","op":"avgpool","inputs":["a1"],"k":2,"stride":2},
+      {"id":"c3","op":"conv","inputs":["p1"],"cin":16,"cout":32,
+       "k":3,"stride":1,"pad":1,"groups":1,"relu":true},
+      {"id":"g1","op":"gpool","inputs":["c3"]},
+      {"id":"d1","op":"dense","inputs":["g1"],"cin":32,"cout":10,"relu":false}
+    ]}"#;
+    let entry = Json::parse(ir).unwrap();
+    let mut w = BTreeMap::new();
+    let mut tensor = |shape: &[usize], std: f32, rng: &mut Rng| {
+        let n: usize = shape.iter().product();
+        Tensor::from_vec(shape, (0..n).map(|_| rng.normal_f32(0.0, std)).collect())
+    };
+    w.insert("c1.w".into(), tensor(&[16, 3, 3, 3], 0.2, rng));
+    w.insert("c1.b".into(), tensor(&[16], 0.05, rng));
+    w.insert("c2.w".into(), tensor(&[16, 16, 3, 3], 0.09, rng));
+    w.insert("c2.b".into(), tensor(&[16], 0.05, rng));
+    w.insert("c3.w".into(), tensor(&[32, 16, 3, 3], 0.09, rng));
+    w.insert("c3.b".into(), tensor(&[32], 0.05, rng));
+    w.insert("d1.w".into(), tensor(&[10, 32], 0.2, rng));
+    w.insert("d1.b".into(), tensor(&[10], 0.05, rng));
+    Model::from_manifest("servebench", &entry, w).unwrap()
+}
+
+fn batch_of(x: &Tensor, n: usize) -> Tensor {
+    let per: usize = x.shape[1..].iter().product();
+    Tensor::from_vec(
+        &[n, x.shape[1], x.shape[2], x.shape[3]],
+        x.data[..n * per].to_vec(),
+    )
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut rng = Rng::new(11);
+    let model = bench_model(&mut rng);
+    let (calib, _) = synthetic_stripes(96, 3, 32, &mut rng);
+    let (val, _) = synthetic_stripes(128, 3, 32, &mut rng);
+    println!("== serving benchmarks (threads: {}) ==", parallel::num_threads());
+
+    // 8/8 nearest quantization — the serving configuration
+    let cfg = PipelineConfig {
+        method: Method::Nearest,
+        bits: 8,
+        per_channel: true,
+        act_bits: Some(8),
+        calib_n: 96,
+        ..Default::default()
+    };
+    let qm = Pipeline::new(&model, cfg, None).quantize(&calib, &mut Rng::new(1))?;
+    let mut engine = ServeEngine::compile(&model, &qm, &[3, 32, 32])?;
+    let opts = qm.opts();
+
+    // parity: the int8 engine must mirror the fake-quant simulation
+    let logits_fq = model.forward(&val, &opts);
+    let pred_fq = logits_fq.argmax_rows();
+    let pred_i8 = engine.classify(&val);
+    let agree = pred_fq.iter().zip(&pred_i8).filter(|(a, b)| a == b).count();
+    let agree_frac = agree as f64 / pred_fq.len() as f64;
+    println!(
+        "argmax parity int8 vs fake-quant: {agree}/{} ({:.1}%)",
+        pred_fq.len(),
+        100.0 * agree_frac
+    );
+
+    let mut results: Vec<Json> = Vec::new();
+    let mut speedup_b8 = 0.0f64;
+    let reps = 20;
+    println!("{:<24} {:>12} {:>12} {:>8}", "batch", "f32 img/s", "int8 img/s", "speedup");
+    for batch in [1usize, 8, 32] {
+        let xb = batch_of(&val, batch);
+        // warmup both paths
+        std::hint::black_box(model.forward(&xb, &opts));
+        std::hint::black_box(engine.forward(&xb));
+        let sw = Stopwatch::start();
+        for _ in 0..reps {
+            std::hint::black_box(model.forward(&xb, &opts));
+        }
+        let f32_s = sw.secs() / reps as f64;
+        let sw = Stopwatch::start();
+        for _ in 0..reps {
+            std::hint::black_box(engine.forward(&xb));
+        }
+        let int8_s = sw.secs() / reps as f64;
+        let (f32_tp, int8_tp) = (batch as f64 / f32_s, batch as f64 / int8_s);
+        if batch == 8 {
+            speedup_b8 = int8_tp / f32_tp;
+        }
+        println!(
+            "{:<24} {:>12.1} {:>12.1} {:>7.2}x",
+            format!("batch {batch}"),
+            f32_tp,
+            int8_tp,
+            int8_tp / f32_tp
+        );
+        for (engine_name, tp) in [("f32-fake-quant", f32_tp), ("int8-engine", int8_tp)] {
+            results.push(throughput_entry(&format!("{engine_name} batch{batch}"), tp));
+        }
+    }
+
+    // batched serving: latency percentiles at several offered loads
+    let per: usize = val.shape[1..].iter().product();
+    let pool: Vec<Tensor> = (0..16)
+        .map(|i| Tensor::from_vec(&[3, 32, 32], val.data[i * per..(i + 1) * per].to_vec()))
+        .collect();
+    let policy = BatchPolicy { max_batch: 32, max_wait: Duration::from_millis(2) };
+    let batcher = Batcher::new(engine, policy);
+    println!("{:<24} {:>12} {:>12}", "offered load", "p50 ms", "p99 ms");
+    for rate in [500.0f64, 2000.0, 8000.0] {
+        let n_req = ((rate * 0.4) as usize).max(100);
+        let lat = offered_load_latencies(&batcher, &pool, n_req, rate);
+        let (p50, p99) = (percentile(&lat, 50.0), percentile(&lat, 99.0));
+        println!("{:<24} {:>12.2} {:>12.2}", format!("{rate:.0} img/s"), p50, p99);
+        results.push(latency_entry(&format!("serve offered={rate:.0}"), p50, p99));
+    }
+    batcher.shutdown();
+
+    let mut root = BTreeMap::new();
+    root.insert("bench".to_string(), Json::Str("serving".to_string()));
+    root.insert("threads".to_string(), Json::Num(parallel::num_threads() as f64));
+    root.insert("parity_agree_frac".to_string(), Json::Num(agree_frac));
+    root.insert("int8_speedup_batch8".to_string(), Json::Num(speedup_b8));
+    root.insert("results".to_string(), Json::Arr(results));
+    std::fs::write("BENCH_serving.json", Json::Obj(root).to_string_pretty())?;
+    println!("(wrote BENCH_serving.json)");
+    if speedup_b8 < 1.0 {
+        println!("WARNING: int8 engine did not beat f32 fake-quant at batch 8");
+    }
+    Ok(())
+}

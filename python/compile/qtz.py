@@ -10,7 +10,7 @@ Layout (all integers little-endian):
     per tensor:
         name_len : u16
         name     : utf-8 bytes
-        dtype    : u8   (0 = f32, 1 = i32, 2 = u8)
+        dtype    : u8   (0 = f32, 1 = i32, 2 = u8, 3 = i8)
         ndim     : u8
         dims     : u32 * ndim
         data     : raw little-endian values (prod(dims) elements)
@@ -25,8 +25,13 @@ import numpy as np
 
 MAGIC = b"QTZ1"
 
-_DTYPE_TO_CODE = {np.dtype(np.float32): 0, np.dtype(np.int32): 1, np.dtype(np.uint8): 2}
-_CODE_TO_DTYPE = {0: np.float32, 1: np.int32, 2: np.uint8}
+_DTYPE_TO_CODE = {
+    np.dtype(np.float32): 0,
+    np.dtype(np.int32): 1,
+    np.dtype(np.uint8): 2,
+    np.dtype(np.int8): 3,
+}
+_CODE_TO_DTYPE = {0: np.float32, 1: np.int32, 2: np.uint8, 3: np.int8}
 
 
 def write_qtz(path: str, tensors: Dict[str, np.ndarray]) -> None:

@@ -7,10 +7,13 @@
 //!   table <1|2|...|10>     regenerate a paper table
 //!   fig <1|2|3|4>          regenerate a paper figure's data
 //!   bench-engine           native vs PJRT inference engine comparison
+//!   serve-bench            f32 fake-quant vs int8 serving engine
+//!   bench-diff             compare two BENCH_*.json files (CI perf gate)
 
 pub mod common;
 pub mod figs;
 pub mod quantize;
+pub mod serve;
 pub mod tables;
 
 use anyhow::{bail, Result};
@@ -28,6 +31,8 @@ USAGE:
   adaround fig N                                regenerate paper Figure N data
   adaround sweep    --model M --bits-list 8,4,2  bits x method accuracy grid
   adaround bench-engine --model micro18         native vs PJRT engine
+  adaround serve-bench --model M [--quantized B.qtz]  int8 engine + batcher
+  adaround bench-diff A.json B.json [--tol PCT] perf regression gate (CI)
 
 COMMON FLAGS:
   --artifacts DIR   artifact directory (default: artifacts)
@@ -54,6 +59,8 @@ pub fn run(args: Args) -> Result<()> {
         "table" => tables::cmd_table(&args),
         "fig" => figs::cmd_fig(&args),
         "bench-engine" => quantize::cmd_bench_engine(&args),
+        "serve-bench" => serve::cmd_serve_bench(&args),
+        "bench-diff" => serve::cmd_bench_diff(&args),
         "sweep" => quantize::cmd_sweep(&args),
         "" | "help" => {
             println!("{USAGE}");

@@ -229,7 +229,7 @@ fn forward_pjrt(ctx: &Ctx, model: &crate::nn::Model, x: &Tensor) -> Result<Tenso
                 let inp = &vals[nd.inputs[0].as_str()];
                 let w = model.weight(&nd.id);
                 let b = model.bias(&nd.id);
-                let mut y = crate::tensor::matmul(inp, &w.transpose2());
+                let mut y = crate::tensor::matmul_bt(inp, w);
                 for r in 0..y.rows() {
                     for (v, bb) in y.row_mut(r).iter_mut().zip(&b.data) {
                         *v += bb;

@@ -1,0 +1,240 @@
+//! `serve-bench` and `bench-diff` subcommands.
+//!
+//! `serve-bench` quantizes (or loads) a model, compiles the integer
+//! serving engine, and reports accuracy plus f32-vs-int8 throughput and
+//! batched-serving latency percentiles, written to `BENCH_serving.json`.
+//!
+//! `bench-diff a.json b.json` compares two `BENCH_*.json` files and exits
+//! nonzero on regressions beyond `--tol` percent (default 10) — the CI
+//! gate on the perf trajectory.
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::coordinator::{Method, Pipeline};
+use crate::eval::top1;
+use crate::nn::ForwardOptions;
+use crate::serve::{
+    latency_entry, offered_load_latencies, throughput_entry, BatchPolicy, Batcher, ServeEngine,
+};
+use crate::tensor::{IntTensor, Tensor};
+use crate::util::cli::Args;
+use crate::util::stats::percentile;
+use crate::util::{parallel, Json, Rng, Stopwatch};
+
+use super::common::{config_from_args, Ctx};
+
+fn batch_of(x: &Tensor, n: usize) -> Tensor {
+    let n = n.min(x.shape[0]);
+    let per: usize = x.shape[1..].iter().product();
+    Tensor::from_vec(
+        &[n, x.shape[1], x.shape[2], x.shape[3]],
+        x.data[..n * per].to_vec(),
+    )
+}
+
+/// int8 engine top-1 over the validation set, batched.
+fn engine_top1(engine: &mut ServeEngine, x: &Tensor, y: &IntTensor, batch: usize) -> f64 {
+    let n = x.shape[0];
+    let per: usize = x.shape[1..].iter().product();
+    let mut correct = 0usize;
+    for (s, e) in crate::data::chunks(n, batch) {
+        let xb = Tensor::from_vec(
+            &[e - s, x.shape[1], x.shape[2], x.shape[3]],
+            x.data[s * per..e * per].to_vec(),
+        );
+        for (i, p) in engine.classify(&xb).iter().enumerate() {
+            if *p as i32 == y.data[s + i] {
+                correct += 1;
+            }
+        }
+    }
+    100.0 * correct as f64 / n as f64
+}
+
+pub fn cmd_serve_bench(args: &Args) -> Result<()> {
+    let ctx = Ctx::load(args)?;
+    let name = args.str("model", "micro18");
+    let model = ctx.model(&name)?;
+    let (calib, _) = ctx.calib(&model)?;
+    let val = ctx.val(&model)?;
+    if model.task == "seg" {
+        bail!("serve-bench covers classifiers; {name} is a segmentation model");
+    }
+
+    // quantize here (8-bit nearest by default — the serving sweet spot)
+    // unless a previously exported bundle is given
+    let qm = match args.opt("quantized") {
+        Some(path) => crate::coordinator::load_quantized(path)?,
+        None => {
+            let mut cfg = config_from_args(args)?;
+            if !args.flags.contains_key("method") {
+                cfg.method = Method::Nearest;
+            }
+            if !args.flags.contains_key("bits") {
+                cfg.bits = 8;
+            }
+            if !args.flags.contains_key("per-channel") {
+                cfg.per_channel = true;
+            }
+            if cfg.act_bits.is_none() {
+                cfg.act_bits = Some(8);
+            }
+            let pipe = Pipeline::new(&model, cfg, Some(&ctx.rt));
+            pipe.quantize(&calib, &mut Rng::new(args.usize("seed", 1000)? as u64))?
+        }
+    };
+
+    let mut engine = ServeEngine::compile(&model, &qm, &val.0.shape[1..])?;
+    let opts = qm.opts();
+    let fp = top1(&model, &val.0, &val.1, &ForwardOptions::default(), 64);
+    let fq = top1(&model, &val.0, &val.1, &opts, 64);
+    let iq = engine_top1(&mut engine, &val.0, &val.1, 64);
+    println!("== serve-bench {name} (threads: {}) ==", parallel::num_threads());
+    println!("top-1: fp32 {fp:.2}%   fake-quant {fq:.2}%   int8 engine {iq:.2}%");
+
+    let mut results: Vec<Json> = Vec::new();
+    let reps = args.usize("reps", 10)?;
+    println!("{:<26} {:>12} {:>12} {:>8}", "batch", "f32 img/s", "int8 img/s", "speedup");
+    for batch in [1usize, 8, 32, 64] {
+        if batch > val.0.shape[0] {
+            continue; // val set too small for an honest measurement
+        }
+        let xb = batch_of(&val.0, batch);
+        let f32_s = {
+            let sw = Stopwatch::start();
+            for _ in 0..reps {
+                std::hint::black_box(model.forward(&xb, &opts));
+            }
+            sw.secs() / reps as f64
+        };
+        let int8_s = {
+            let sw = Stopwatch::start();
+            for _ in 0..reps {
+                std::hint::black_box(engine.forward(&xb));
+            }
+            sw.secs() / reps as f64
+        };
+        let (f32_tp, int8_tp) = (batch as f64 / f32_s, batch as f64 / int8_s);
+        println!(
+            "{:<26} {:>12.1} {:>12.1} {:>7.2}x",
+            format!("batch {batch}"),
+            f32_tp,
+            int8_tp,
+            int8_tp / f32_tp
+        );
+        results.push(throughput_entry(&format!("f32-fake-quant batch{batch}"), f32_tp));
+        results.push(throughput_entry(&format!("int8-engine batch{batch}"), int8_tp));
+    }
+
+    // batched serving under offered load
+    let policy = BatchPolicy {
+        max_batch: args.usize("max-batch", 32)?,
+        max_wait: Duration::from_millis(args.usize("max-wait-ms", 3)? as u64),
+    };
+    let per: usize = val.0.shape[1..].iter().product();
+    let pool: Vec<Tensor> = (0..16.min(val.0.shape[0]))
+        .map(|i| {
+            Tensor::from_vec(
+                &val.0.shape[1..],
+                val.0.data[i * per..(i + 1) * per].to_vec(),
+            )
+        })
+        .collect();
+    let batcher = Batcher::new(engine, policy);
+    println!("{:<26} {:>12} {:>12}", "offered load", "p50 ms", "p99 ms");
+    for rate in [500.0f64, 2000.0, 8000.0] {
+        let n_req = (rate * 0.5) as usize;
+        let lat = offered_load_latencies(&batcher, &pool, n_req.max(50), rate);
+        let (p50, p99) = (percentile(&lat, 50.0), percentile(&lat, 99.0));
+        println!("{:<26} {:>12.2} {:>12.2}", format!("{rate:.0} img/s"), p50, p99);
+        results.push(latency_entry(&format!("serve offered={rate:.0}"), p50, p99));
+    }
+    batcher.shutdown();
+
+    let mut root = BTreeMap::new();
+    root.insert("bench".to_string(), Json::Str("serving".to_string()));
+    root.insert("model".to_string(), Json::Str(name));
+    root.insert("threads".to_string(), Json::Num(parallel::num_threads() as f64));
+    root.insert("top1_fp32".to_string(), Json::Num(fp));
+    root.insert("top1_fake_quant".to_string(), Json::Num(fq));
+    root.insert("top1_int8".to_string(), Json::Num(iq));
+    root.insert("results".to_string(), Json::Arr(results));
+    std::fs::write("BENCH_serving.json", Json::Obj(root).to_string_pretty())?;
+    println!("(wrote BENCH_serving.json)");
+    if (fq - iq).abs() > 0.2 {
+        bail!("int8 engine top-1 {iq:.2}% drifted >0.2% from fake-quant {fq:.2}%");
+    }
+    Ok(())
+}
+
+/// Numeric fields where smaller is better / bigger is better.
+const LOWER_BETTER: &[&str] = &["mean_ms", "p50_ms", "p95_ms", "p99_ms"];
+const HIGHER_BETTER: &[&str] = &["throughput", "imgs_per_sec"];
+
+pub fn cmd_bench_diff(args: &Args) -> Result<()> {
+    let a_path = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow!("usage: bench-diff <baseline.json> <new.json> [--tol PCT]"))?;
+    let b_path = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow!("usage: bench-diff <baseline.json> <new.json> [--tol PCT]"))?;
+    let tol = args.f32("tol", 10.0)? as f64;
+    let a = Json::parse(&std::fs::read_to_string(a_path)?)?;
+    let b = Json::parse(&std::fs::read_to_string(b_path)?)?;
+    let index = |j: &Json| -> BTreeMap<String, BTreeMap<String, f64>> {
+        let mut out = BTreeMap::new();
+        if let Some(entries) = j.get("results").and_then(|r| r.as_arr()) {
+            for e in entries {
+                let Some(name) = e.get("name").and_then(|n| n.as_str()) else { continue };
+                let mut fields = BTreeMap::new();
+                if let Some(obj) = e.as_obj() {
+                    for (k, v) in obj {
+                        if let Some(n) = v.as_f64() {
+                            fields.insert(k.clone(), n);
+                        }
+                    }
+                }
+                out.insert(name.to_string(), fields);
+            }
+        }
+        out
+    };
+    let base = index(&a);
+    let new = index(&b);
+    let mut regressions = Vec::new();
+    let mut compared = 0usize;
+    for (name, bf) in &base {
+        let Some(nf) = new.get(name) else { continue };
+        for (key, lower_better) in LOWER_BETTER
+            .iter()
+            .map(|k| (*k, true))
+            .chain(HIGHER_BETTER.iter().map(|k| (*k, false)))
+        {
+            let (Some(&old), Some(&cur)) = (bf.get(key), nf.get(key)) else { continue };
+            if old <= 0.0 {
+                continue;
+            }
+            compared += 1;
+            let change = 100.0 * (cur - old) / old;
+            let regressed = if lower_better { change > tol } else { change < -tol };
+            let marker = if regressed { "  <-- REGRESSION" } else { "" };
+            println!(
+                "{name:<44} {key:<14} {old:>12.3} -> {cur:>12.3}  ({change:+6.1}%){marker}"
+            );
+            if regressed {
+                regressions.push(format!("{name} {key} {change:+.1}%"));
+            }
+        }
+    }
+    let shared = base.keys().filter(|k| new.contains_key(*k)).count();
+    println!("compared {compared} metric(s) across {shared} shared entries");
+    if !regressions.is_empty() {
+        bail!(">{tol}% regressions:\n  {}", regressions.join("\n  "));
+    }
+    Ok(())
+}

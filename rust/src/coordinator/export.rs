@@ -2,11 +2,20 @@
 //! bundle so quantization (expensive) and serving (cheap) can run in
 //! different processes — the deployment hand-off of the framework.
 //!
-//! Bundle contents:
-//!   __meta.counts        [n_weights, n_biases, n_actquant] (i32)
-//!   w:<node>             quantized weight tensor
-//!   b:<node>             corrected bias tensor
-//!   aq:<node>            [min, max, bits] (f32 triple)
+//! v2 layout (written by [`save_quantized`]):
+//!   __meta.version        [2] (i32)
+//!   __meta.counts         [n_weights, n_biases, n_actquant] (i32)
+//!   i8:<node>             raw integer weight codes (i8, grid multiples)
+//!   scale:<node>          per-output-channel grid scales (f32, len cout)
+//!   w:<node>              f32 fallback for layers without a clean grid
+//!   b:<node>              corrected bias tensor (f32)
+//!   aq:<node>             [min, max, bits] (f32 triple)
+//!
+//! The i8 + scale pair is what the integer serving engine boots from —
+//! weight payloads are 4x smaller than v1, and dequantization
+//! (`scale[oc] * z`) reproduces the fake-quant f32 values bit-exactly
+//! because it is the same multiplication [`crate::quant::fake_quant`]
+//! performed. v1 bundles (f32 `w:` entries, no version tag) still load.
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -15,14 +24,55 @@ use anyhow::{bail, Result};
 
 use crate::io::{read_qtz, write_qtz, QtzValue};
 use crate::quant::ActQuant;
-use crate::tensor::{IntTensor, Tensor};
+use crate::tensor::{I8Tensor, IntTensor, Tensor};
 
 use super::pipeline::QuantizedModel;
+
+/// Encode one weight tensor as grid codes if its recorded per-channel
+/// scales reproduce it exactly within i8 range; `None` -> keep f32.
+fn encode_i8(w: &Tensor, scales: &[f32]) -> Option<I8Tensor> {
+    let cout = w.shape[0];
+    if scales.len() != cout {
+        return None;
+    }
+    let cols = w.numel() / cout;
+    let mut data = vec![0i8; w.numel()];
+    for oc in 0..cout {
+        let s = scales[oc];
+        if !(s > 0.0 && s.is_finite()) {
+            return None;
+        }
+        for (d, &v) in data[oc * cols..(oc + 1) * cols].iter_mut().zip(&w.data[oc * cols..]) {
+            let z = (v / s).round();
+            // exact reproduction required: s * z must equal v bit-for-bit
+            if !(-128.0..=127.0).contains(&z) || s * z != v {
+                return None;
+            }
+            *d = z as i8;
+        }
+    }
+    Some(I8Tensor::from_vec(&w.shape, data))
+}
 
 pub fn save_quantized(path: impl AsRef<Path>, qm: &QuantizedModel) -> Result<()> {
     let mut bundle: BTreeMap<String, QtzValue> = BTreeMap::new();
     for (id, w) in &qm.weight_overrides {
-        bundle.insert(format!("w:{id}"), QtzValue::F32(w.clone()));
+        let enc = qm.scales.get(id).and_then(|sc| encode_i8(w, sc));
+        match enc {
+            Some(wi) => {
+                bundle.insert(format!("i8:{id}"), QtzValue::I8(wi));
+                bundle.insert(
+                    format!("scale:{id}"),
+                    QtzValue::F32(Tensor::from_vec(
+                        &[qm.scales[id].len()],
+                        qm.scales[id].clone(),
+                    )),
+                );
+            }
+            None => {
+                bundle.insert(format!("w:{id}"), QtzValue::F32(w.clone()));
+            }
+        }
     }
     for (id, b) in &qm.bias_overrides {
         bundle.insert(format!("b:{id}"), QtzValue::F32(b.clone()));
@@ -36,6 +86,10 @@ pub fn save_quantized(path: impl AsRef<Path>, qm: &QuantizedModel) -> Result<()>
             );
         }
     }
+    bundle.insert(
+        "__meta.version".into(),
+        QtzValue::I32(IntTensor::from_vec(&[1], vec![2])),
+    );
     bundle.insert(
         "__meta.counts".into(),
         QtzValue::I32(IntTensor::from_vec(
@@ -58,21 +112,63 @@ pub fn load_quantized(path: impl AsRef<Path>) -> Result<QuantizedModel> {
         .as_i32()?
         .data
         .clone();
+    let version = bundle
+        .get("__meta.version")
+        .and_then(|v| v.as_i32().ok())
+        .and_then(|t| t.data.first().copied())
+        .unwrap_or(1);
+    if version > 2 {
+        bail!("bundle version {version} is newer than this build understands");
+    }
     let mut qm = QuantizedModel {
         weight_overrides: BTreeMap::new(),
         bias_overrides: BTreeMap::new(),
         act_quant: None,
+        scales: BTreeMap::new(),
         stats: Vec::new(),
     };
     let mut aq: BTreeMap<String, ActQuant> = BTreeMap::new();
     for (k, v) in &bundle {
         if let Some(id) = k.strip_prefix("w:") {
             qm.weight_overrides.insert(id.to_string(), v.as_f32()?.clone());
+        } else if let Some(id) = k.strip_prefix("scale:") {
+            qm.scales.insert(id.to_string(), v.as_f32()?.data.clone());
         } else if let Some(id) = k.strip_prefix("b:") {
             qm.bias_overrides.insert(id.to_string(), v.as_f32()?.clone());
         } else if let Some(id) = k.strip_prefix("aq:") {
             let t = v.as_f32()?;
             aq.insert(id.to_string(), ActQuant::new(t.data[0], t.data[1], t.data[2] as u32));
+        }
+    }
+    // dequantize i8 weight codes (after the scale pass above, so the map
+    // iteration order doesn't matter)
+    for (k, v) in &bundle {
+        if let Some(id) = k.strip_prefix("i8:") {
+            let wi = v.as_i8()?;
+            let sc = qm
+                .scales
+                .get(id)
+                .ok_or_else(|| anyhow::anyhow!("i8 weights for {id} without scale:{id}"))?;
+            let cout = *wi.shape.first().unwrap_or(&0);
+            if cout == 0 {
+                bail!("i8 weights for {id} have empty shape {:?}", wi.shape);
+            }
+            if sc.len() != cout && sc.len() != 1 {
+                bail!("scale:{id} has {} entries for {cout} output channels", sc.len());
+            }
+            let cols = wi.numel() / cout;
+            let mut data = vec![0.0f32; wi.numel()];
+            for oc in 0..cout {
+                let s = if sc.len() == 1 { sc[0] } else { sc[oc] };
+                for (d, &z) in data[oc * cols..(oc + 1) * cols]
+                    .iter_mut()
+                    .zip(&wi.data[oc * cols..])
+                {
+                    *d = s * z as f32;
+                }
+            }
+            qm.weight_overrides
+                .insert(id.to_string(), Tensor::from_vec(&wi.shape, data));
         }
     }
     if !aq.is_empty() {
@@ -97,6 +193,7 @@ mod tests {
             weight_overrides: BTreeMap::new(),
             bias_overrides: BTreeMap::new(),
             act_quant: None,
+            scales: BTreeMap::new(),
             stats: Vec::new(),
         };
         qm.weight_overrides
@@ -119,6 +216,79 @@ mod tests {
         assert_eq!(back.bias_overrides["c1"].data, vec![0.1, 0.2]);
         let aq = &back.act_quant.unwrap()["c1"];
         assert_eq!((aq.min, aq.max, aq.bits), (-1.5, 2.5, 8));
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn i8_roundtrip_is_bit_exact() {
+        // weights on a per-channel grid round-trip through i8 codes with
+        // bit-identical f32 values and 4x smaller weight payload
+        let path = std::env::temp_dir().join("qm_i8_roundtrip.qtz");
+        let mut qm = sample_qm();
+        let scales = vec![0.013f32, 0.07];
+        let zs: [i32; 8] = [-128, -7, 0, 127, 1, -1, 33, 100];
+        let w: Vec<f32> = zs
+            .iter()
+            .enumerate()
+            .map(|(i, &z)| scales[i / 4] * z as f32)
+            .collect();
+        qm.weight_overrides
+            .insert("c1".into(), Tensor::from_vec(&[2, 4], w.clone()));
+        qm.scales.insert("c1".into(), scales.clone());
+        save_quantized(&path, &qm).unwrap();
+        let back = load_quantized(&path).unwrap();
+        assert_eq!(back.weight_overrides["c1"].data, w, "dequant must be bit-exact");
+        assert_eq!(back.scales["c1"], scales);
+        // the bundle actually stores i8 codes, not f32
+        let raw = crate::io::read_qtz(&path).unwrap();
+        assert!(raw.contains_key("i8:c1"));
+        assert!(!raw.contains_key("w:c1"));
+        assert_eq!(raw["i8:c1"].as_i8().unwrap().data.len(), 8);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn v1_bundles_still_load() {
+        // hand-write an old-style bundle: f32 w:/b:/aq: and counts, no
+        // version tag — the pre-i8 format
+        let path = std::env::temp_dir().join("qm_v1_compat.qtz");
+        let mut old: BTreeMap<String, QtzValue> = BTreeMap::new();
+        old.insert(
+            "w:c1".into(),
+            QtzValue::F32(Tensor::from_vec(&[2, 1, 1, 1], vec![0.25, -0.75])),
+        );
+        old.insert("b:c1".into(), QtzValue::F32(Tensor::from_vec(&[2], vec![0.0, 1.0])));
+        old.insert(
+            "aq:c1".into(),
+            QtzValue::F32(Tensor::from_vec(&[3], vec![-1.0, 1.0, 8.0])),
+        );
+        old.insert(
+            "__meta.counts".into(),
+            QtzValue::I32(IntTensor::from_vec(&[3], vec![1, 1, 1])),
+        );
+        write_qtz(&path, &old).unwrap();
+        let back = load_quantized(&path).unwrap();
+        assert_eq!(back.weight_overrides["c1"].data, vec![0.25, -0.75]);
+        assert_eq!(back.bias_overrides["c1"].data, vec![0.0, 1.0]);
+        assert!(back.scales.is_empty());
+        assert_eq!(back.act_quant.unwrap()["c1"].bits, 8);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn off_grid_weights_fall_back_to_f32() {
+        let path = std::env::temp_dir().join("qm_offgrid.qtz");
+        let mut qm = sample_qm();
+        // scales recorded but the weights are NOT multiples -> f32 path
+        qm.weight_overrides
+            .insert("c1".into(), Tensor::from_vec(&[2, 1, 1, 1], vec![0.51, -0.52]));
+        qm.scales.insert("c1".into(), vec![0.5, 0.5]);
+        save_quantized(&path, &qm).unwrap();
+        let raw = crate::io::read_qtz(&path).unwrap();
+        assert!(raw.contains_key("w:c1"));
+        assert!(!raw.contains_key("i8:c1"));
+        let back = load_quantized(&path).unwrap();
+        assert_eq!(back.weight_overrides["c1"].data, vec![0.51, -0.52]);
         std::fs::remove_file(path).ok();
     }
 

@@ -54,6 +54,10 @@ pub struct QuantizedModel {
     pub weight_overrides: BTreeMap<String, Tensor>,
     pub bias_overrides: BTreeMap<String, Tensor>,
     pub act_quant: Option<BTreeMap<String, ActQuant>>,
+    /// Per-output-channel weight grid scales per layer (len = cout; the
+    /// exact scales the overridden weights live on). Lets the export path
+    /// and the integer serving engine skip scale recovery.
+    pub scales: BTreeMap<String, Vec<f32>>,
     pub stats: Vec<LayerStat>,
 }
 
@@ -121,6 +125,7 @@ impl<'a> Pipeline<'a> {
             weight_overrides: BTreeMap::new(),
             bias_overrides: BTreeMap::new(),
             act_quant: None,
+            scales: BTreeMap::new(),
             stats: Vec::new(),
         };
         let nodes: Vec<Node> = self.work.quant_layers().into_iter().cloned().collect();
@@ -209,6 +214,15 @@ impl<'a> Pipeline<'a> {
             per_channel,
             Some(&sample.x_fp[0]),
         );
+        // record the exact per-channel scales for export / integer serving
+        // (STE's continuous weights and OCS's expanded grid don't land on
+        // this grid, so recovery at serve-compile time handles them)
+        if !matches!(cfg.method, Method::Ste | Method::Ocs) {
+            out.scales.insert(
+                node.id.clone(),
+                (0..cout).map(|r| grid.scale_for_row(r)).collect(),
+            );
+        }
 
         // --- per-group rounding ---
         let og = geom.rows;
@@ -442,22 +456,33 @@ fn round_group_native(
             let near = prob.nearest_mask();
             let mut mask = Tensor::zeros(&prob.w.shape);
             let cols = prob.cols();
-            for r in 0..prob.rows() {
-                let qp = QuboProblem::from_row(
-                    &prob.w.data[r * cols..(r + 1) * cols],
-                    &grid_for_rowmodes,
-                    r,
-                    &h,
-                );
-                let (sol, _) = if cfg.method == Method::LocalQuboCem {
-                    solve_cem(&qp, CemParams::default(), rng)
-                } else {
-                    solve_tabu(&qp, TabuParams::default(), rng)
-                };
-                for c in 0..cols {
-                    mask.data[r * cols + c] = sol[c] as f32;
-                }
-            }
+            // rows are independent QUBOs: fork one RNG per row up front
+            // (serial, in row order) and fan the solves out across
+            // threads — results are bit-identical for any thread count
+            let mut row_rngs: Vec<Rng> = (0..prob.rows()).map(|r| rng.fork(r as u64)).collect();
+            let use_cem = cfg.method == Method::LocalQuboCem;
+            let wdata = &prob.w.data;
+            let href = &h;
+            let gridref = &grid_for_rowmodes;
+            parallel::par_chunks2_mut(
+                &mut mask.data,
+                cols,
+                &mut row_rngs,
+                1,
+                1,
+                |r, mrow, rrow| {
+                    let qp =
+                        QuboProblem::from_row(&wdata[r * cols..(r + 1) * cols], gridref, r, href);
+                    let (sol, _) = if use_cem {
+                        solve_cem(&qp, CemParams::default(), &mut rrow[0])
+                    } else {
+                        solve_tabu(&qp, TabuParams::default(), &mut rrow[0])
+                    };
+                    for (m, &b) in mrow.iter_mut().zip(&sol) {
+                        *m = b as f32;
+                    }
+                },
+            );
             let wq = prob.hard_weights(&mask);
             let fl = flip_frac(&mask, &near);
             let after = prob.recon_mse(&wq, x, &t);

@@ -1,5 +1,9 @@
 //! `.qtz` tensor-bundle reader/writer — exact mirror of
 //! `python/compile/qtz.py` (see that file for the byte layout).
+//!
+//! Dtype codes: 0 = f32, 1 = i32, 2 = u8, 3 = i8 (added for the v2
+//! quantized-model layout carrying raw integer weights; old bundles never
+//! contain code 3 and keep loading unchanged).
 
 use std::collections::BTreeMap;
 use std::io::{Read, Write};
@@ -7,7 +11,7 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-use crate::tensor::{IntTensor, Tensor};
+use crate::tensor::{I8Tensor, IntTensor, Tensor};
 
 const MAGIC: &[u8; 4] = b"QTZ1";
 
@@ -17,6 +21,7 @@ pub enum QtzValue {
     F32(Tensor),
     I32(IntTensor),
     U8(Vec<u8>, Vec<usize>),
+    I8(I8Tensor),
 }
 
 impl QtzValue {
@@ -34,11 +39,19 @@ impl QtzValue {
         }
     }
 
+    pub fn as_i8(&self) -> Result<&I8Tensor> {
+        match self {
+            QtzValue::I8(t) => Ok(t),
+            _ => bail!("tensor is not i8"),
+        }
+    }
+
     pub fn shape(&self) -> &[usize] {
         match self {
             QtzValue::F32(t) => &t.shape,
             QtzValue::I32(t) => &t.shape,
             QtzValue::U8(_, s) => s,
+            QtzValue::I8(t) => &t.shape,
         }
     }
 }
@@ -104,6 +117,12 @@ pub fn read_qtz(path: impl AsRef<Path>) -> Result<BTreeMap<String, QtzValue>> {
                 r.read_exact(&mut raw)?;
                 QtzValue::U8(raw, shape)
             }
+            3 => {
+                let mut raw = vec![0u8; n];
+                r.read_exact(&mut raw)?;
+                let data = raw.into_iter().map(|b| b as i8).collect();
+                QtzValue::I8(I8Tensor::from_vec(&shape, data))
+            }
             d => bail!("{path:?}: unknown dtype code {d}"),
         };
         out.insert(name, value);
@@ -124,6 +143,7 @@ pub fn write_qtz(path: impl AsRef<Path>, tensors: &BTreeMap<String, QtzValue>) -
             QtzValue::F32(t) => (0, &t.shape),
             QtzValue::I32(t) => (1, &t.shape),
             QtzValue::U8(_, s) => (2, s),
+            QtzValue::I8(t) => (3, &t.shape),
         };
         w.write_all(&[code, shape.len() as u8])?;
         for &d in shape {
@@ -141,6 +161,10 @@ pub fn write_qtz(path: impl AsRef<Path>, tensors: &BTreeMap<String, QtzValue>) -
                 }
             }
             QtzValue::U8(raw, _) => w.write_all(raw)?,
+            QtzValue::I8(t) => {
+                let raw: Vec<u8> = t.data.iter().map(|&x| x as u8).collect();
+                w.write_all(&raw)?;
+            }
         }
     }
     Ok(())
@@ -169,6 +193,22 @@ mod tests {
         assert_eq!(back["w"].as_f32().unwrap().data, vec![1., -2., 3.5, 0., 5., 6.]);
         assert_eq!(back["y"].as_i32().unwrap().data, vec![0, 1, -5, 9]);
         assert_eq!(back["m"].shape(), &[2]);
+        std::fs::remove_file(dir).ok();
+    }
+
+    #[test]
+    fn i8_roundtrip() {
+        let dir = std::env::temp_dir().join("qtz_test_i8.qtz");
+        let mut m = BTreeMap::new();
+        m.insert(
+            "z".to_string(),
+            QtzValue::I8(I8Tensor::from_vec(&[2, 3], vec![-128, -1, 0, 1, 64, 127])),
+        );
+        write_qtz(&dir, &m).unwrap();
+        let back = read_qtz(&dir).unwrap();
+        assert_eq!(back["z"].as_i8().unwrap().data, vec![-128, -1, 0, 1, 64, 127]);
+        assert_eq!(back["z"].shape(), &[2, 3]);
+        assert!(back["z"].as_f32().is_err());
         std::fs::remove_file(dir).ok();
     }
 

@@ -56,6 +56,7 @@ pub mod nn;
 pub mod quant;
 pub mod qubo;
 pub mod runtime;
+pub mod serve;
 pub mod tensor;
 pub mod util;
 

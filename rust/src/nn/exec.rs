@@ -78,8 +78,11 @@ impl Model {
                         .bias_overrides
                         .and_then(|m| m.get(&nd.id))
                         .unwrap_or_else(|| self.bias(&nd.id));
-                    // y = inp @ w^T + b
-                    let mut y = crate::tensor::matmul(inp, &w.transpose2());
+                    // y = inp @ w^T + b; w is stored [O, C] row-major,
+                    // which is exactly matmul_bt's B^T layout — the
+                    // register-blocked row-parallel kernel, no transpose
+                    // materialization
+                    let mut y = crate::tensor::matmul_bt(inp, w);
                     for r in 0..y.rows() {
                         for (v, bb) in y.row_mut(r).iter_mut().zip(&b.data) {
                             *v += bb;

@@ -29,21 +29,41 @@ impl RoundingMode {
 }
 
 /// Binary mask R with R[i] = 1 iff weight i rounds up.
+///
+/// The mode dispatch is hoisted out of the element loop; the nearest path
+/// is a branch-free slice zip (div, floor, compare-select) that LLVM
+/// auto-vectorizes, floor/ceil are fills, and only the stochastic path
+/// stays scalar (it consumes the RNG stream element by element). Element
+/// math is unchanged from the scalar version.
 pub fn rounding_mask(w: &Tensor, grid: &QuantGrid, mode: RoundingMode, rng: &mut Rng) -> Tensor {
     let rows = w.shape[0];
     let cols = w.numel() / rows;
     let mut mask = Tensor::zeros(&w.shape);
+    if mode == RoundingMode::Floor {
+        return mask; // all zeros
+    }
+    if mode == RoundingMode::Ceil {
+        mask.data.fill(1.0);
+        return mask;
+    }
     for r in 0..rows {
         let s = grid.scale_for_row(r);
-        for c in 0..cols {
-            let i = r * cols + c;
-            let frac = w.data[i] / s - (w.data[i] / s).floor();
-            mask.data[i] = match mode {
-                RoundingMode::Nearest => (frac >= 0.5) as u8 as f32,
-                RoundingMode::Floor => 0.0,
-                RoundingMode::Ceil => 1.0,
-                RoundingMode::Stochastic => rng.bernoulli(frac as f64) as u8 as f32,
-            };
+        let wrow = &w.data[r * cols..(r + 1) * cols];
+        let mrow = &mut mask.data[r * cols..(r + 1) * cols];
+        match mode {
+            RoundingMode::Nearest => {
+                for (m, &wv) in mrow.iter_mut().zip(wrow) {
+                    let t = wv / s;
+                    *m = (t - t.floor() >= 0.5) as u8 as f32;
+                }
+            }
+            RoundingMode::Stochastic => {
+                for (m, &wv) in mrow.iter_mut().zip(wrow) {
+                    let t = wv / s;
+                    *m = rng.bernoulli((t - t.floor()) as f64) as u8 as f32;
+                }
+            }
+            RoundingMode::Floor | RoundingMode::Ceil => unreachable!(),
         }
     }
     mask

@@ -1,0 +1,191 @@
+//! Batched serving front-end: coalesce single-image requests into batched
+//! engine forwards under a max-batch / max-wait policy.
+//!
+//! One worker thread owns the [`ServeEngine`] (and therefore its scratch
+//! arenas); clients submit single images over an mpsc channel and block on
+//! a per-request response channel. The worker drains the queue up to
+//! `max_batch` images, waiting at most `max_wait` past the first request
+//! before launching a partial batch — the classic latency/throughput
+//! trade-off surface that `benches/serving.rs` maps out.
+
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, SyncSender};
+use std::time::{Duration, Instant};
+
+use crate::tensor::Tensor;
+
+use super::engine::ServeEngine;
+
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// launch as soon as this many requests are queued
+    pub max_batch: usize,
+    /// launch a partial batch this long after its first request arrived
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 32, max_wait: Duration::from_millis(5) }
+    }
+}
+
+struct Request {
+    /// one image [C, H, W]
+    img: Tensor,
+    /// where the dequantized output row goes
+    resp: SyncSender<Vec<f32>>,
+}
+
+/// Handle for submitting requests; cheap to clone across client threads.
+#[derive(Clone)]
+pub struct BatcherHandle {
+    tx: Sender<Request>,
+    /// expected image numel (the plan's C*H*W) — validated at submit so a
+    /// malformed request is rejected at its source, never in the worker
+    per: usize,
+}
+
+impl BatcherHandle {
+    /// Enqueue one image; returns the channel the result row arrives on.
+    /// Returns `None` if the image geometry is wrong or the batcher has
+    /// shut down.
+    pub fn submit(&self, img: Tensor) -> Option<Receiver<Vec<f32>>> {
+        if img.numel() != self.per {
+            return None;
+        }
+        let (rtx, rrx) = mpsc::sync_channel(1);
+        self.tx.send(Request { img, resp: rtx }).ok()?;
+        Some(rrx)
+    }
+}
+
+pub struct Batcher {
+    tx: Option<Sender<Request>>,
+    per: usize,
+    worker: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Batcher {
+    /// Spawn the worker thread that owns `engine`.
+    pub fn new(engine: ServeEngine, policy: BatchPolicy) -> Batcher {
+        assert!(policy.max_batch >= 1);
+        let per: usize = engine.plan.in_shape.iter().product();
+        let (tx, rx) = mpsc::channel::<Request>();
+        let worker = std::thread::spawn(move || worker_loop(engine, policy, rx));
+        Batcher { tx: Some(tx), per, worker: Some(worker) }
+    }
+
+    pub fn handle(&self) -> BatcherHandle {
+        BatcherHandle {
+            tx: self.tx.as_ref().expect("batcher running").clone(),
+            per: self.per,
+        }
+    }
+
+    /// Convenience: submit directly on the batcher.
+    pub fn submit(&self, img: Tensor) -> Option<Receiver<Vec<f32>>> {
+        self.handle().submit(img)
+    }
+
+    /// Drain outstanding requests and stop the worker.
+    pub fn shutdown(mut self) {
+        self.stop();
+    }
+
+    fn stop(&mut self) {
+        self.tx.take(); // close the channel; worker exits after draining
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Batcher {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// Open-loop load generator for the serving benchmarks: submit
+/// `n_requests` images (cycling through `pool`) at a fixed arrival rate
+/// and return per-request latencies in milliseconds. A drainer thread
+/// receives results in submit order — the worker completes batches FIFO,
+/// so drain time tracks completion time.
+pub fn offered_load_latencies(
+    batcher: &Batcher,
+    pool: &[Tensor],
+    n_requests: usize,
+    rate_per_sec: f64,
+) -> Vec<f64> {
+    assert!(!pool.is_empty() && rate_per_sec > 0.0);
+    let interval = Duration::from_secs_f64(1.0 / rate_per_sec);
+    let (ltx, lrx) = mpsc::channel::<(Instant, Receiver<Vec<f32>>)>();
+    let drainer = std::thread::spawn(move || {
+        let mut lat = Vec::new();
+        while let Ok((t0, rx)) = lrx.recv() {
+            if rx.recv().is_ok() {
+                lat.push(t0.elapsed().as_secs_f64() * 1e3);
+            }
+        }
+        lat
+    });
+    let start = Instant::now();
+    for i in 0..n_requests {
+        let target = start + interval.mul_f64(i as f64);
+        let now = Instant::now();
+        if target > now {
+            std::thread::sleep(target - now);
+        }
+        let img = pool[i % pool.len()].clone();
+        let t0 = Instant::now();
+        if let Some(rx) = batcher.submit(img) {
+            let _ = ltx.send((t0, rx));
+        }
+    }
+    drop(ltx);
+    drainer.join().unwrap_or_default()
+}
+
+fn worker_loop(mut engine: ServeEngine, policy: BatchPolicy, rx: Receiver<Request>) {
+    let per: usize = engine.plan.in_shape.iter().product();
+    loop {
+        // block for the first request of the batch
+        let first = match rx.recv() {
+            Ok(r) => r,
+            Err(_) => return, // all senders gone
+        };
+        let deadline = Instant::now() + policy.max_wait;
+        let mut batch = vec![first];
+        while batch.len() < policy.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) => batch.push(r),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        // stack [C,H,W] images into one [B,C,H,W] forward; a malformed
+        // request (submit() already rejects these — belt and braces) is
+        // dropped here, failing only its own response channel
+        batch.retain(|r| r.img.numel() == per);
+        if batch.is_empty() {
+            continue;
+        }
+        let b = batch.len();
+        let mut data = Vec::with_capacity(b * per);
+        for r in &batch {
+            data.extend_from_slice(&r.img.data);
+        }
+        let mut shape = vec![b];
+        shape.extend_from_slice(&engine.plan.in_shape);
+        let out = engine.forward(&Tensor::from_vec(&shape, data));
+        let row = out.numel() / b;
+        for (i, r) in batch.into_iter().enumerate() {
+            // a client that dropped its receiver just misses its row
+            let _ = r.resp.send(out.data[i * row..(i + 1) * row].to_vec());
+        }
+    }
+}

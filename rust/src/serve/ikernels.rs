@@ -1,0 +1,460 @@
+//! Integer-domain layer kernels: i8 im2col convolution, i8 dense, and the
+//! elementwise/pooling data movers, all with fused requant + ReLU +
+//! saturate back to u8.
+//!
+//! No float arithmetic anywhere in this module's run-time paths — real
+//! values exist only as (mantissa, shift) fixed-point multipliers encoded
+//! at compile time ([`super::plan::Requant`]). Quantize/dequantize at the
+//! engine boundary live in [`super::engine`].
+//!
+//! Parallel structure mirrors the f32 kernels: grouped convs fan out
+//! across groups, the GEMM is row-parallel ([`crate::tensor::int8`]), the
+//! requant scatter fans out per image — deterministic index-based splits
+//! throughout ([`crate::util::parallel`]).
+
+use crate::tensor::conv::out_size;
+use crate::tensor::int8::{gemm_i8_into, gemm_u8_bt_into};
+use crate::tensor::{Conv2dParams, I8Tensor, U8Tensor};
+use crate::util::parallel;
+
+use super::plan::Requant;
+
+/// Reusable scratch for the integer conv/dense path (the engine keeps one
+/// across layers and requests, making the hot loop allocation-free once
+/// shapes have been seen).
+#[derive(Default)]
+pub struct Int8Workspace {
+    /// im2col columns, [groups * cg*k*k, N*Ho*Wo] stacked group-major
+    cols: Vec<u8>,
+    /// i32 accumulators, [O, N*Ho*Wo] (conv) or [N, O] (dense)
+    acc: Vec<i32>,
+}
+
+impl Int8Workspace {
+    pub fn new() -> Int8Workspace {
+        Int8Workspace::default()
+    }
+
+    fn ensure_cols(&mut self, len: usize) -> &mut Vec<u8> {
+        if self.cols.len() != len {
+            self.cols.resize(len, 0);
+        }
+        &mut self.cols
+    }
+
+    fn ensure_acc(&mut self, len: usize) -> &mut Vec<i32> {
+        if self.acc.len() != len {
+            self.acc.resize(len, 0);
+        }
+        &mut self.acc
+    }
+}
+
+/// Saturating requant of one accumulator to u8: `zp_out + round(M·acc)`,
+/// clamped to `[lo, 255]` (`lo = zp_out` fuses ReLU: real 0 sits exactly
+/// at the zero point).
+#[inline]
+fn requant_u8(acc: i32, r: Requant, zp_out: i32, lo: i32) -> u8 {
+    (zp_out + r.apply(acc)).clamp(lo, 255) as u8
+}
+
+/// im2col for u8 activations; padding positions get the input zero point
+/// (the integer encoding of real 0). Layout identical to the f32
+/// [`crate::tensor::im2col_into`]: [cg*k*k, N*Ho*Wo], columns ordered
+/// (n, ho, wo). Parallel over patch rows.
+pub fn im2col_u8_into(input: &U8Tensor, group: usize, p: Conv2dParams, zp: u8, out: &mut [u8]) {
+    let (n, c) = (input.shape[0], input.shape[1]);
+    let (h, w) = (input.shape[2], input.shape[3]);
+    let cg = c / p.groups;
+    let (ho, wo) = (out_size(h, p.k, p.stride, p.pad), out_size(w, p.k, p.stride, p.pad));
+    let npos = n * ho * wo;
+    let rows = cg * p.k * p.k;
+    assert_eq!(out.len(), rows * npos);
+    let c0 = group * cg;
+    let grain = ((1 << 16) / npos.max(1)).max(1);
+    parallel::par_chunks_mut(out, npos, grain, |r, orow| {
+        let ci = r / (p.k * p.k);
+        let ky = (r / p.k) % p.k;
+        let kx = r % p.k;
+        let mut col = 0usize;
+        for ni in 0..n {
+            let base = ((ni * c + c0 + ci) * h) * w;
+            for oy in 0..ho {
+                let iy = (oy * p.stride + ky) as isize - p.pad as isize;
+                if iy < 0 || iy >= h as isize {
+                    orow[col..col + wo].fill(zp);
+                    col += wo;
+                    continue;
+                }
+                let irow = base + iy as usize * w;
+                for ox in 0..wo {
+                    let ix = (ox * p.stride + kx) as isize - p.pad as isize;
+                    orow[col] = if ix >= 0 && ix < w as isize {
+                        input.data[irow + ix as usize]
+                    } else {
+                        zp
+                    };
+                    col += 1;
+                }
+            }
+        }
+    });
+}
+
+/// Integer conv2d: input [N,C,H,W] u8, weights [O, C/g·k·k] i8 (grouped
+/// rows) -> [N,O,Ho,Wo] u8. The three passes (im2col, per-group GEMM,
+/// requant scatter) follow [`crate::tensor::conv2d_with`].
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_i8(
+    ws: &mut Int8Workspace,
+    input: &U8Tensor,
+    w: &I8Tensor,
+    p: Conv2dParams,
+    bias_q: &[i32],
+    wsum: &[i32],
+    requant: &[Requant],
+    zp_in: i32,
+    zp_out: i32,
+    relu: bool,
+) -> U8Tensor {
+    let (n, h, wd) = (input.shape[0], input.shape[2], input.shape[3]);
+    let o = w.shape[0];
+    let og = o / p.groups;
+    let patch = w.numel() / o;
+    let (ho, wo) = (out_size(h, p.k, p.stride, p.pad), out_size(wd, p.k, p.stride, p.pad));
+    let npos = n * ho * wo;
+    let hw = ho * wo;
+
+    // pass 1: im2col of every group (groups fan out; within a group the
+    // im2col itself row-parallelizes when groups == 1)
+    let cols: &mut Vec<u8> = ws.ensure_cols(p.groups * patch * npos);
+    parallel::par_chunks_mut(cols, patch * npos, 1, |g, chunk| {
+        im2col_u8_into(input, g, p, zp_in as u8, chunk);
+    });
+
+    // pass 2: per-group i8 GEMM into the i32 accumulator
+    let cols_len = p.groups * patch * npos;
+    let acc: &mut Vec<i32> = ws.ensure_acc(o * npos);
+    acc.fill(0);
+    // split the borrow: cols is read-only below
+    let (cols_ref, acc_ref) = (&ws.cols[..cols_len], &mut ws.acc);
+    parallel::par_chunks_mut(acc_ref, og * npos, 1, |g, chunk| {
+        let wslice = &w.data[g * og * patch..(g + 1) * og * patch];
+        let cslice = &cols_ref[g * patch * npos..(g + 1) * patch * npos];
+        gemm_i8_into(wslice, cslice, chunk, og, patch, npos);
+    });
+
+    // pass 3: zero-point correction + bias + requant + relu + saturate,
+    // scattered [O, n*ho*wo] -> [n, O, ho, wo]; parallel over images
+    let mut out = U8Tensor::zeros(&[n, o, ho, wo]);
+    let acc_ref = &ws.acc;
+    let lo = if relu { zp_out } else { 0 };
+    let grain = ((1 << 16) / (o * hw).max(1)).max(1);
+    parallel::par_chunks_mut(&mut out.data, o * hw, grain, |ni, dst| {
+        for oc in 0..o {
+            let corr = bias_q[oc] - zp_in * wsum[oc];
+            let r = requant[oc];
+            let src = &acc_ref[oc * npos + ni * hw..oc * npos + (ni + 1) * hw];
+            let drow = &mut dst[oc * hw..(oc + 1) * hw];
+            for (d, &a) in drow.iter_mut().zip(src) {
+                *d = requant_u8(a + corr, r, zp_out, lo);
+            }
+        }
+    });
+    out
+}
+
+/// Integer dense layer: input [N, C] u8, weights [O, C] i8 -> [N, O] u8.
+#[allow(clippy::too_many_arguments)]
+pub fn dense_i8(
+    ws: &mut Int8Workspace,
+    input: &U8Tensor,
+    w: &I8Tensor,
+    bias_q: &[i32],
+    wsum: &[i32],
+    requant: &[Requant],
+    zp_in: i32,
+    zp_out: i32,
+    relu: bool,
+) -> U8Tensor {
+    let (n, c) = (input.shape[0], input.shape[1]);
+    let o = w.shape[0];
+    assert_eq!(w.numel(), o * c, "dense weight shape mismatch");
+    let acc: &mut Vec<i32> = ws.ensure_acc(n * o);
+    gemm_u8_bt_into(&input.data, &w.data, acc, n, c, o);
+    let mut out = U8Tensor::zeros(&[n, o]);
+    let lo = if relu { zp_out } else { 0 };
+    let acc_ref = &ws.acc;
+    let grain = ((1 << 14) / o.max(1)).max(1);
+    parallel::par_chunks_mut(&mut out.data, o, grain, |ni, orow| {
+        let arow = &acc_ref[ni * o..(ni + 1) * o];
+        for (oc, (d, &a)) in orow.iter_mut().zip(arow).enumerate() {
+            let corr = bias_q[oc] - zp_in * wsum[oc];
+            *d = requant_u8(a + corr, requant[oc], zp_out, lo);
+        }
+    });
+    out
+}
+
+/// Integer residual add: out = zp_o + Ra·(qa - za) + Rb·(qb - zb).
+#[allow(clippy::too_many_arguments)]
+pub fn add_i8(
+    a: &U8Tensor,
+    b: &U8Tensor,
+    ra: Requant,
+    rb: Requant,
+    za: i32,
+    zb: i32,
+    zp_out: i32,
+    relu: bool,
+) -> U8Tensor {
+    assert_eq!(a.shape, b.shape);
+    let mut out = U8Tensor::zeros(&a.shape);
+    let lo = if relu { zp_out } else { 0 };
+    for ((o, &qa), &qb) in out.data.iter_mut().zip(&a.data).zip(&b.data) {
+        let v = ra.apply(qa as i32 - za) + rb.apply(qb as i32 - zb);
+        *o = (zp_out + v).clamp(lo, 255) as u8;
+    }
+    out
+}
+
+/// Standalone ReLU node: rescale to the output grid, clamped at zero.
+pub fn relu_i8(a: &U8Tensor, r: Requant, zp_in: i32, zp_out: i32) -> U8Tensor {
+    let mut out = U8Tensor::zeros(&a.shape);
+    for (o, &q) in out.data.iter_mut().zip(&a.data) {
+        *o = requant_u8(q as i32 - zp_in, r, zp_out, zp_out);
+    }
+    out
+}
+
+/// Integer average pool (VALID): the k²-window sum requants by
+/// `s_in/(s_out·k²)` in one go — no intermediate division.
+pub fn avgpool_i8(
+    a: &U8Tensor,
+    k: usize,
+    stride: usize,
+    r: Requant,
+    zp_in: i32,
+    zp_out: i32,
+) -> U8Tensor {
+    let (n, c, h, w) = (a.shape[0], a.shape[1], a.shape[2], a.shape[3]);
+    let ho = (h - k) / stride + 1;
+    let wo = (w - k) / stride + 1;
+    let mut out = U8Tensor::zeros(&[n, c, ho, wo]);
+    let kk2 = (k * k) as i32;
+    for nc in 0..n * c {
+        let src = &a.data[nc * h * w..(nc + 1) * h * w];
+        let dst = &mut out.data[nc * ho * wo..(nc + 1) * ho * wo];
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let mut sum = 0i32;
+                for ky in 0..k {
+                    for kx in 0..k {
+                        sum += src[(oy * stride + ky) * w + ox * stride + kx] as i32;
+                    }
+                }
+                dst[oy * wo + ox] = requant_u8(sum - kk2 * zp_in, r, zp_out, 0);
+            }
+        }
+    }
+    out
+}
+
+/// Integer global average pool: [N,C,H,W] -> [N,C]; `hw` is baked into
+/// the requant multiplier at compile time and re-checked here.
+pub fn gpool_i8(a: &U8Tensor, r: Requant, hw: usize, zp_in: i32, zp_out: i32) -> U8Tensor {
+    let (n, c, h, w) = (a.shape[0], a.shape[1], a.shape[2], a.shape[3]);
+    assert_eq!(h * w, hw, "gpool compiled for {hw} positions, got {h}x{w}");
+    let mut out = U8Tensor::zeros(&[n, c]);
+    for nc in 0..n * c {
+        let src = &a.data[nc * hw..(nc + 1) * hw];
+        let sum: i32 = src.iter().map(|&q| q as i32).sum();
+        out.data[nc] = requant_u8(sum - (hw as i32) * zp_in, r, zp_out, 0);
+    }
+    out
+}
+
+/// Nearest-neighbor x2 upsample with rescale to the output grid.
+pub fn upsample_i8(a: &U8Tensor, r: Requant, zp_in: i32, zp_out: i32) -> U8Tensor {
+    let (n, c, h, w) = (a.shape[0], a.shape[1], a.shape[2], a.shape[3]);
+    let mut out = U8Tensor::zeros(&[n, c, 2 * h, 2 * w]);
+    for nc in 0..n * c {
+        let src = &a.data[nc * h * w..(nc + 1) * h * w];
+        let dst = &mut out.data[nc * 4 * h * w..(nc + 1) * 4 * h * w];
+        for y in 0..2 * h {
+            for x in 0..2 * w {
+                let q = src[(y / 2) * w + x / 2] as i32;
+                dst[y * 2 * w + x] = requant_u8(q - zp_in, r, zp_out, 0);
+            }
+        }
+    }
+    out
+}
+
+/// Channel concat with per-input rescale to the shared output grid.
+pub fn concat_i8(
+    inputs: &[&U8Tensor],
+    rs: &[Requant],
+    zps: &[i32],
+    zp_out: i32,
+) -> U8Tensor {
+    let (n, h, w) = (inputs[0].shape[0], inputs[0].shape[2], inputs[0].shape[3]);
+    let ctot: usize = inputs.iter().map(|t| t.shape[1]).sum();
+    let mut out = U8Tensor::zeros(&[n, ctot, h, w]);
+    let hw = h * w;
+    for ni in 0..n {
+        let mut coff = 0;
+        for (ti, t) in inputs.iter().enumerate() {
+            let ci = t.shape[1];
+            let src = &t.data[ni * ci * hw..(ni + 1) * ci * hw];
+            let dst = &mut out.data[(ni * ctot + coff) * hw..(ni * ctot + coff + ci) * hw];
+            for (d, &q) in dst.iter_mut().zip(src) {
+                *d = requant_u8(q as i32 - zps[ti], rs[ti], zp_out, 0);
+            }
+            coff += ci;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{conv2d, Tensor};
+
+    fn identity_requant() -> Requant {
+        Requant::from_real(1.0)
+    }
+
+    #[test]
+    fn requant_identity_is_exact() {
+        let r = identity_requant();
+        for acc in [-300i32, -1, 0, 1, 17, 255, 100_000] {
+            assert_eq!(r.apply(acc), acc);
+        }
+    }
+
+    #[test]
+    fn im2col_u8_matches_f32_on_symmetric_input() {
+        // zp = 0 and values 0..=N: the u8 and f32 im2col layouts must agree
+        let p = Conv2dParams { k: 3, stride: 1, pad: 1, groups: 1 };
+        let shape = [2usize, 3, 5, 5];
+        let n: usize = shape.iter().product();
+        let qdata: Vec<u8> = (0..n).map(|i| (i % 200) as u8).collect();
+        let qin = U8Tensor::from_vec(&shape, qdata.clone());
+        let fin = Tensor::from_vec(&shape, qdata.iter().map(|&v| v as f32).collect());
+        let cg_kk = 3 * 9;
+        let npos = 2 * 5 * 5;
+        let mut got = vec![0u8; cg_kk * npos];
+        im2col_u8_into(&qin, 0, p, 0, &mut got);
+        let want = crate::tensor::im2col(&fin, 0, p);
+        for (g, w) in got.iter().zip(&want.data) {
+            assert_eq!(*g as f32, *w);
+        }
+    }
+
+    #[test]
+    fn conv_i8_matches_f32_conv_in_integer_domain() {
+        // unit scales everywhere: the integer conv must equal the f32 conv
+        // computed on the raw codes (zp_in = 3 exercises the correction)
+        let p = Conv2dParams { k: 3, stride: 1, pad: 1, groups: 1 };
+        let (n, c, o, hw) = (2usize, 2usize, 3usize, 6usize);
+        let mut rng = crate::util::Rng::new(5);
+        let zp_in = 3i32;
+        let qin = U8Tensor::from_vec(
+            &[n, c, hw, hw],
+            (0..n * c * hw * hw).map(|_| rng.below(20) as u8).collect(),
+        );
+        let wi = I8Tensor::from_vec(
+            &[o, c, 3, 3],
+            (0..o * c * 9).map(|_| (rng.below(7) as i32 - 3) as i8).collect(),
+        );
+        let bias_q = vec![5i32, -2, 0];
+        let patch = c * 9;
+        let wsum: Vec<i32> = (0..o)
+            .map(|oc| wi.data[oc * patch..(oc + 1) * patch].iter().map(|&z| z as i32).sum())
+            .collect();
+        let requant = vec![identity_requant(); o];
+        let mut ws = Int8Workspace::new();
+        let got = conv2d_i8(&mut ws, &qin, &wi, p, &bias_q, &wsum, &requant, zp_in, 0, false);
+        // f32 oracle on real values (q - zp) with unit scale
+        let fin = Tensor::from_vec(
+            &[n, c, hw, hw],
+            qin.data.iter().map(|&q| (q as i32 - zp_in) as f32).collect(),
+        );
+        let fw = Tensor::from_vec(&[o, c, 3, 3], wi.data.iter().map(|&z| z as f32).collect());
+        let fb: Vec<f32> = bias_q.iter().map(|&b| b as f32).collect();
+        let want = conv2d(&fin, &fw, Some(&fb), p);
+        assert_eq!(got.shape, want.shape);
+        for (g, w) in got.data.iter().zip(&want.data) {
+            let clamped = w.round().clamp(0.0, 255.0);
+            assert_eq!(*g as f32, clamped, "int {g} vs f32 {w}");
+        }
+    }
+
+    #[test]
+    fn dense_i8_matches_oracle() {
+        let (n, c, o) = (3usize, 5usize, 4usize);
+        let mut rng = crate::util::Rng::new(9);
+        let zp_in = 7i32;
+        let qin = U8Tensor::from_vec(
+            &[n, c],
+            (0..n * c).map(|_| rng.below(40) as u8).collect(),
+        );
+        let wi = I8Tensor::from_vec(
+            &[o, c],
+            (0..o * c).map(|_| (rng.below(11) as i32 - 5) as i8).collect(),
+        );
+        let bias_q = vec![1i32, 0, -4, 9];
+        let wsum: Vec<i32> = (0..o)
+            .map(|oc| wi.data[oc * c..(oc + 1) * c].iter().map(|&z| z as i32).sum())
+            .collect();
+        let requant = vec![identity_requant(); o];
+        let mut ws = Int8Workspace::new();
+        let got = dense_i8(&mut ws, &qin, &wi, &bias_q, &wsum, &requant, zp_in, 0, true);
+        for ni in 0..n {
+            for oc in 0..o {
+                let mut acc = bias_q[oc];
+                for cc in 0..c {
+                    acc += (qin.data[ni * c + cc] as i32 - zp_in) * wi.data[oc * c + cc] as i32;
+                }
+                // relu with zp_out = 0 clamps at 0
+                let want = acc.clamp(0, 255) as u8;
+                assert_eq!(got.data[ni * o + oc], want);
+            }
+        }
+    }
+
+    #[test]
+    fn pooling_and_movers() {
+        let r = identity_requant();
+        // gpool: mean of codes (requant multiplier folds the 1/hw — here
+        // emulate hw=4 with multiplier 1/4)
+        let quarter = Requant::from_real(0.25);
+        let a = U8Tensor::from_vec(&[1, 1, 2, 2], vec![4, 8, 12, 16]);
+        let g = gpool_i8(&a, quarter, 4, 0, 0);
+        assert_eq!(g.shape, vec![1, 1]);
+        assert_eq!(g.data, vec![10]);
+        // avgpool 2x2 stride 2 on the same data
+        let ap = avgpool_i8(&a, 2, 2, quarter, 0, 0);
+        assert_eq!(ap.data, vec![10]);
+        // upsample doubles spatially, identity scale
+        let up = upsample_i8(&a, r, 0, 0);
+        assert_eq!(up.shape, vec![1, 1, 4, 4]);
+        assert_eq!(up.data[0], 4);
+        assert_eq!(up.data[5], 4);
+        assert_eq!(up.data[15], 16);
+        // add with both zero points 2: (qa-2)+(qb-2)+zo
+        let b = U8Tensor::from_vec(&[1, 1, 2, 2], vec![2, 3, 4, 5]);
+        let s = add_i8(&a, &b, r, r, 2, 2, 2, false);
+        assert_eq!(s.data, vec![4, 9, 14, 19]); // (qa-2) + (qb-2) + 2
+        // concat rescales each input to the shared grid
+        let cc = concat_i8(&[&a, &b], &[r, r], &[0, 0], 0);
+        assert_eq!(cc.shape, vec![1, 2, 2, 2]);
+        assert_eq!(&cc.data[..4], &a.data[..]);
+        assert_eq!(&cc.data[4..], &b.data[..]);
+        // standalone relu clamps below the output zero point
+        let rl = relu_i8(&b, r, 4, 0);
+        assert_eq!(rl.data, vec![0, 0, 0, 1]);
+    }
+}

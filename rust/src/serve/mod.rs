@@ -1,0 +1,60 @@
+//! `pallas-serve` — integer-domain inference engine + batched serving
+//! front-end.
+//!
+//! The PTQ pipeline produces weights that live exactly on a fixed-point
+//! grid; this subsystem serves them *as integers* instead of re-simulating
+//! quantization in f32:
+//!
+//! 1. **compile** ([`plan`]): lower a [`crate::nn::Model`] +
+//!    [`crate::coordinator::QuantizedModel`] into a [`QuantizedPlan`] —
+//!    i8 weights with per-channel scales recovered from the grid, i32
+//!    bias, and fixed-point requantization multipliers. All float math
+//!    happens here, once.
+//! 2. **execute** ([`engine`], [`ikernels`]): a [`ServeEngine`] walks the
+//!    plan with u8 activations, i8×u8→i32 GEMMs and fused
+//!    requant+ReLU+saturate — no float ops in the layer loop.
+//! 3. **serve** ([`batch`]): a [`Batcher`] coalesces single-image requests
+//!    into batched forwards under a max-batch / max-wait policy.
+//!
+//! Accuracy contract: the integer engine mirrors the f32 fake-quant
+//! simulation up to requantization rounding (argmax parity on the test
+//! models; see `rust/tests/serve_parity.rs`).
+//!
+//! ```text
+//! adaround quantize --model micro18 --bits 4 --act-bits 8 --save m.qtz
+//! adaround serve-bench --model micro18 --quantized m.qtz
+//! ```
+
+pub mod batch;
+pub mod engine;
+pub mod ikernels;
+pub mod plan;
+
+pub use batch::{offered_load_latencies, Batcher, BatcherHandle, BatchPolicy};
+pub use engine::ServeEngine;
+pub use plan::{compile_plan, ActQ, QuantizedPlan, Requant};
+
+use std::collections::BTreeMap;
+
+use crate::util::Json;
+
+/// `BENCH_serving.json` result entry: throughput at one batch size. The
+/// field names here are the contract `bench-diff` string-matches on —
+/// both emitters (`benches/serving.rs` and `adaround serve-bench`) build
+/// entries through these constructors so the schema lives in one place.
+pub fn throughput_entry(name: &str, imgs_per_sec: f64) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("name".to_string(), Json::Str(name.to_string()));
+    o.insert("imgs_per_sec".to_string(), Json::Num(imgs_per_sec));
+    Json::Obj(o)
+}
+
+/// `BENCH_serving.json` result entry: latency percentiles at one offered
+/// load.
+pub fn latency_entry(name: &str, p50_ms: f64, p99_ms: f64) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("name".to_string(), Json::Str(name.to_string()));
+    o.insert("p50_ms".to_string(), Json::Num(p50_ms));
+    o.insert("p99_ms".to_string(), Json::Num(p99_ms));
+    Json::Obj(o)
+}

@@ -1,0 +1,263 @@
+//! Integer tensor substrate for the serving engine: i8 weights, u8
+//! activations, i32 accumulators.
+//!
+//! The serving convention follows the standard asymmetric scheme: an
+//! activation tensor holds `q: u8` with `real = scale * (q - zero_point)`,
+//! weights hold `z: i8` with `real = scale * z` (symmetric, per output
+//! channel). GEMMs accumulate in i32 and requantize back to u8 at the
+//! layer boundary ([`crate::serve`]).
+//!
+//! The GEMM kernels mirror the f32 kernels in [`super::matmul`]: output
+//! rows split into contiguous per-thread spans over
+//! [`crate::util::parallel`], serial per-item code, so results are
+//! identical for any `PALLAS_THREADS` (trivially bit-exact here — integer
+//! arithmetic has no reduction-order sensitivity, but the splitting rule
+//! is kept anyway for uniformity).
+
+use crate::util::parallel;
+
+/// Row-major dense i8 tensor (quantized weights).
+#[derive(Clone, Debug, PartialEq)]
+pub struct I8Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<i8>,
+}
+
+impl I8Tensor {
+    pub fn zeros(shape: &[usize]) -> I8Tensor {
+        let n: usize = shape.iter().product();
+        I8Tensor { shape: shape.to_vec(), data: vec![0; n] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<i8>) -> I8Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(),
+                   "shape {:?} != data len {}", shape, data.len());
+        I8Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+}
+
+/// Row-major dense u8 tensor (quantized activations).
+#[derive(Clone, Debug, PartialEq)]
+pub struct U8Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<u8>,
+}
+
+impl U8Tensor {
+    pub fn zeros(shape: &[usize]) -> U8Tensor {
+        let n: usize = shape.iter().product();
+        U8Tensor { shape: shape.to_vec(), data: vec![0; n] }
+    }
+
+    pub fn full(shape: &[usize], v: u8) -> U8Tensor {
+        let n: usize = shape.iter().product();
+        U8Tensor { shape: shape.to_vec(), data: vec![v; n] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<u8>) -> U8Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(),
+                   "shape {:?} != data len {}", shape, data.len());
+        U8Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+}
+
+/// Don't spawn a worker for less than ~256k MACs of row work (integer MACs
+/// are cheaper than f32 FMA, so the grain sits above the f32 kernel's).
+const MIN_PAR_MACS: usize = 1 << 18;
+
+fn row_grain(k: usize, n: usize) -> usize {
+    (MIN_PAR_MACS / (k * n).max(1)).max(1)
+}
+
+/// C += A @ B with A i8 [m,k], B u8 [k,n], C i32 [m,n] — the conv GEMM of
+/// the integer engine (A = weights, B = im2col columns). Same k-streaming
+/// loop order as [`super::matmul::matmul_into`]: within a row span, each
+/// B row is widened once and fanned into the i32 C row, which stays hot.
+pub fn gemm_i8_into(a: &[i8], b: &[u8], c: &mut [i32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    parallel::par_ranges_mut(c, n, row_grain(k, n), |rows, span| {
+        for i in rows.clone() {
+            let arow = &a[i * k..(i + 1) * k];
+            let crow = &mut span[(i - rows.start) * n..(i - rows.start + 1) * n];
+            for (kk, &av) in arow.iter().enumerate() {
+                if av == 0 {
+                    continue;
+                }
+                let av = av as i32;
+                let brow = &b[kk * n..(kk + 1) * n];
+                // widening multiply-accumulate over the row; vectorizes to
+                // packed 8->32 widening + 32-bit multiply-add
+                for (cv, &bv) in crow.iter_mut().zip(brow.iter()) {
+                    *cv += av * bv as i32;
+                }
+            }
+        }
+    });
+}
+
+/// C[i,j] = dot(A_row_i_u8, B_row_j_i8) for A [m,k] u8, B [n,k] i8 —
+/// C = A @ B^T, the dense-layer form (activations x weight rows). Four
+/// weight rows share one streaming pass over the activation row, as in
+/// [`super::matmul::matmul_bt_into`].
+pub fn gemm_u8_bt_into(a: &[u8], bt: &[i8], c: &mut [i32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(bt.len(), n * k);
+    debug_assert_eq!(c.len(), m * n);
+    parallel::par_ranges_mut(c, n, row_grain(k, n), |rows, span| {
+        for i in rows.clone() {
+            let arow = &a[i * k..(i + 1) * k];
+            let crow = &mut span[(i - rows.start) * n..(i - rows.start + 1) * n];
+            dot_rows_u8_i8(arow, bt, crow, k, n);
+        }
+    });
+}
+
+/// One output row of A @ B^T: crow[j] = dot(arow, bt[j]).
+fn dot_rows_u8_i8(arow: &[u8], bt: &[i8], crow: &mut [i32], k: usize, n: usize) {
+    let arow = &arow[..k];
+    let n4 = n - n % 4;
+    let mut j = 0;
+    while j < n4 {
+        let b0 = &bt[j * k..][..k];
+        let b1 = &bt[(j + 1) * k..][..k];
+        let b2 = &bt[(j + 2) * k..][..k];
+        let b3 = &bt[(j + 3) * k..][..k];
+        let (mut s0, mut s1, mut s2, mut s3) = (0i32, 0i32, 0i32, 0i32);
+        for t in 0..k {
+            let av = arow[t] as i32;
+            s0 += av * b0[t] as i32;
+            s1 += av * b1[t] as i32;
+            s2 += av * b2[t] as i32;
+            s3 += av * b3[t] as i32;
+        }
+        crow[j] = s0;
+        crow[j + 1] = s1;
+        crow[j + 2] = s2;
+        crow[j + 3] = s3;
+        j += 4;
+    }
+    while j < n {
+        let brow = &bt[j * k..][..k];
+        let mut acc = 0i32;
+        for t in 0..k {
+            acc += arow[t] as i32 * brow[t] as i32;
+        }
+        crow[j] = acc;
+        j += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::parallel::with_threads;
+    use crate::util::Rng;
+
+    fn rnd_i8(n: usize, rng: &mut Rng) -> Vec<i8> {
+        (0..n).map(|_| (rng.below(255) as i32 - 127) as i8).collect()
+    }
+
+    fn rnd_u8(n: usize, rng: &mut Rng) -> Vec<u8> {
+        (0..n).map(|_| rng.below(256) as u8).collect()
+    }
+
+    fn naive_gemm(a: &[i8], b: &[u8], m: usize, k: usize, n: usize) -> Vec<i32> {
+        let mut c = vec![0i32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0i64;
+                for t in 0..k {
+                    acc += a[i * k + t] as i64 * b[t * n + j] as i64;
+                }
+                c[i * n + j] = acc as i32;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn gemm_matches_naive() {
+        let mut rng = Rng::new(1);
+        for (m, k, n) in [(1usize, 1usize, 1usize), (3, 7, 5), (16, 64, 33), (8, 128, 100)] {
+            let a = rnd_i8(m * k, &mut rng);
+            let b = rnd_u8(k * n, &mut rng);
+            let mut c = vec![0i32; m * n];
+            gemm_i8_into(&a, &b, &mut c, m, k, n);
+            assert_eq!(c, naive_gemm(&a, &b, m, k, n), "gemm {m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn gemm_accumulates() {
+        let a = vec![2i8, -3];
+        let b = vec![1u8, 4];
+        let mut c = vec![10i32];
+        gemm_i8_into(&a, &b, &mut c, 1, 2, 1);
+        assert_eq!(c, vec![10 + 2 - 12]);
+    }
+
+    #[test]
+    fn bt_matches_transposed_gemm() {
+        let mut rng = Rng::new(2);
+        for (m, k, n) in [(2usize, 9usize, 6usize), (5, 40, 13), (1, 3, 1)] {
+            let a = rnd_u8(m * k, &mut rng);
+            let bt = rnd_i8(n * k, &mut rng);
+            let mut c = vec![0i32; m * n];
+            gemm_u8_bt_into(&a, &bt, &mut c, m, k, n);
+            for i in 0..m {
+                for j in 0..n {
+                    let mut acc = 0i32;
+                    for t in 0..k {
+                        acc += a[i * k + t] as i32 * bt[j * k + t] as i32;
+                    }
+                    assert_eq!(c[i * n + j], acc, "bt gemm {m}x{k}x{n} at ({i},{j})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn identical_across_threads() {
+        let mut rng = Rng::new(3);
+        let (m, k, n) = (37, 130, 220);
+        let a = rnd_i8(m * k, &mut rng);
+        let b = rnd_u8(k * n, &mut rng);
+        let run = |threads: usize| {
+            with_threads(threads, || {
+                let mut c = vec![0i32; m * n];
+                gemm_i8_into(&a, &b, &mut c, m, k, n);
+                c
+            })
+        };
+        assert_eq!(run(1), run(4));
+        let bt = rnd_i8(n * k, &mut rng);
+        let au = rnd_u8(m * k, &mut rng);
+        let run_bt = |threads: usize| {
+            with_threads(threads, || {
+                let mut c = vec![0i32; m * n];
+                gemm_u8_bt_into(&au, &bt, &mut c, m, k, n);
+                c
+            })
+        };
+        assert_eq!(run_bt(1), run_bt(4));
+    }
+
+    #[test]
+    fn tensor_constructors() {
+        let t = I8Tensor::from_vec(&[2, 2], vec![1, -2, 3, -4]);
+        assert_eq!(t.numel(), 4);
+        let u = U8Tensor::full(&[3], 7);
+        assert_eq!(u.data, vec![7, 7, 7]);
+        assert_eq!(U8Tensor::zeros(&[2, 3]).numel(), 6);
+    }
+}

@@ -6,10 +6,12 @@
 //! tuned in the perf pass (see EXPERIMENTS.md §Perf).
 
 pub mod conv;
+pub mod int8;
 pub mod matmul;
 pub mod pool;
 
 pub use conv::{conv2d, conv2d_with, im2col, im2col_into, Conv2dParams, Conv2dWorkspace};
+pub use int8::{I8Tensor, U8Tensor};
 pub use matmul::{matmul, matmul_acc, matmul_bt, matmul_bt_into, matmul_into};
 
 /// Row-major dense f32 tensor.
@@ -84,15 +86,22 @@ impl Tensor {
         &mut self.data[r * c..(r + 1) * c]
     }
 
-    /// A^T for 2-D tensors.
+    /// A^T for 2-D tensors. Parallel over output rows (each worker gathers
+    /// one strided column of the source); split by row index, so the
+    /// result is identical for any thread count.
     pub fn transpose2(&self) -> Tensor {
         let (r, c) = (self.rows(), self.cols());
         let mut out = Tensor::zeros(&[c, r]);
-        for i in 0..r {
-            for j in 0..c {
-                out.data[j * r + i] = self.data[i * c + j];
-            }
+        if r == 0 || c == 0 {
+            return out;
         }
+        let src = &self.data;
+        let grain = ((1 << 14) / r.max(1)).max(1);
+        crate::util::parallel::par_chunks_mut(&mut out.data, r, grain, |j, orow| {
+            for (i, o) in orow.iter_mut().enumerate() {
+                *o = src[i * c + j];
+            }
+        });
         out
     }
 

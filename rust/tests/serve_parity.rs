@@ -1,0 +1,230 @@
+//! Integer serving engine vs the f32 fake-quant simulation it mirrors,
+//! plus the batched front-end and the quantize -> export -> serve loop.
+//! Self-contained (synthetic model + data; no `make artifacts`).
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use adaround::coordinator::{
+    load_quantized, save_quantized, Method, Pipeline, PipelineConfig, QuantizedModel,
+};
+use adaround::data::synthetic_stripes;
+use adaround::nn::Model;
+use adaround::serve::{BatchPolicy, Batcher, ServeEngine};
+use adaround::tensor::Tensor;
+use adaround::util::{Json, Rng};
+
+/// Tiny conv classifier exercising conv(+relu), residual add, avgpool,
+/// gpool and dense — every op class the engine lowers for classifiers.
+fn tiny_model(rng: &mut Rng) -> Model {
+    let ir = r#"{"task":"cls","ir":[
+      {"id":"in","op":"input","inputs":[]},
+      {"id":"c1","op":"conv","inputs":["in"],"cin":3,"cout":8,
+       "k":3,"stride":1,"pad":1,"groups":1,"relu":true},
+      {"id":"c2","op":"conv","inputs":["c1"],"cin":8,"cout":8,
+       "k":3,"stride":1,"pad":1,"groups":1,"relu":false},
+      {"id":"a1","op":"add","inputs":["c2","c1"],"relu":true},
+      {"id":"p1","op":"avgpool","inputs":["a1"],"k":2,"stride":2},
+      {"id":"g1","op":"gpool","inputs":["p1"]},
+      {"id":"d1","op":"dense","inputs":["g1"],"cin":8,"cout":2,"relu":false}
+    ]}"#;
+    let entry = Json::parse(ir).unwrap();
+    let mut w = BTreeMap::new();
+    let mut tensor = |shape: &[usize], std: f32, rng: &mut Rng| {
+        let n: usize = shape.iter().product();
+        Tensor::from_vec(shape, (0..n).map(|_| rng.normal_f32(0.0, std)).collect())
+    };
+    w.insert("c1.w".into(), tensor(&[8, 3, 3, 3], 0.25, rng));
+    w.insert("c1.b".into(), tensor(&[8], 0.05, rng));
+    w.insert("c2.w".into(), tensor(&[8, 8, 3, 3], 0.12, rng));
+    w.insert("c2.b".into(), tensor(&[8], 0.05, rng));
+    w.insert("d1.w".into(), tensor(&[2, 8], 0.4, rng));
+    w.insert("d1.b".into(), tensor(&[2], 0.05, rng));
+    Model::from_manifest("tinyserve", &entry, w).unwrap()
+}
+
+fn quantize_8_8(model: &Model, calib: &Tensor, method: Method) -> QuantizedModel {
+    let cfg = PipelineConfig {
+        method,
+        bits: 8,
+        per_channel: true,
+        act_bits: Some(8),
+        calib_n: calib.shape[0],
+        ..Default::default()
+    };
+    Pipeline::new(model, cfg, None).quantize(calib, &mut Rng::new(7)).unwrap()
+}
+
+/// The parity contract, asserted in two self-consistent halves:
+/// 1. dequantized int8 logits track the fake-quant logits within a small
+///    multiple of the output quantization step (the accumulated
+///    requant-rounding tolerance), and
+/// 2. argmax agrees on every sample whose fake-quant margin exceeds twice
+///    the *observed* worst-case logit error — i.e. quantization noise may
+///    only flip genuine near-ties.
+fn assert_parity(logits_fq: &Tensor, logits_i8: &Tensor, pred_i8: &[usize], out_step: f32) {
+    let mut max_err = 0.0f32;
+    for (a, b) in logits_i8.data.iter().zip(&logits_fq.data) {
+        max_err = max_err.max((a - b).abs());
+    }
+    assert!(
+        max_err <= 16.0 * out_step,
+        "logit drift {max_err} exceeds requant tolerance ({}x output step {out_step})",
+        max_err / out_step
+    );
+    let pred_fq = logits_fq.argmax_rows();
+    let mut clear = 0usize;
+    for r in 0..logits_fq.rows() {
+        let row = logits_fq.row(r);
+        let best = row[pred_fq[r]];
+        let second = row
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| *i != pred_fq[r])
+            .map(|(_, &v)| v)
+            .fold(f32::NEG_INFINITY, f32::max);
+        if best - second > 2.0 * max_err {
+            clear += 1;
+            assert_eq!(
+                pred_fq[r], pred_i8[r],
+                "argmax flip on sample {r} with margin {} > 2x max err {max_err}",
+                best - second
+            );
+        }
+    }
+    // the margin filter must not be vacuous
+    assert!(
+        clear * 4 >= logits_fq.rows(),
+        "only {clear}/{} samples had clear fake-quant margins",
+        logits_fq.rows()
+    );
+}
+
+#[test]
+fn int8_engine_matches_fake_quant_argmax() {
+    let mut rng = Rng::new(21);
+    let model = tiny_model(&mut rng);
+    let (calib, _) = synthetic_stripes(64, 3, 16, &mut rng);
+    let (val, _) = synthetic_stripes(96, 3, 16, &mut rng);
+    let qm = quantize_8_8(&model, &calib, Method::Nearest);
+    let mut engine = ServeEngine::compile(&model, &qm, &[3, 16, 16]).unwrap();
+
+    let logits_fq = model.forward(&val, &qm.opts());
+    let logits_i8 = engine.forward(&val);
+    let pred_i8 = engine.classify(&val);
+    assert_parity(&logits_fq, &logits_i8, &pred_i8, engine.out_q().scale);
+}
+
+#[test]
+fn engine_output_identical_across_thread_counts() {
+    use adaround::util::parallel::with_threads;
+    let mut rng = Rng::new(31);
+    let model = tiny_model(&mut rng);
+    let (calib, _) = synthetic_stripes(48, 3, 16, &mut rng);
+    let (val, _) = synthetic_stripes(32, 3, 16, &mut rng);
+    let qm = quantize_8_8(&model, &calib, Method::Nearest);
+    let run = |threads: usize| {
+        with_threads(threads, || {
+            let mut engine = ServeEngine::compile(&model, &qm, &[3, 16, 16]).unwrap();
+            engine.forward_quantized(&val).data
+        })
+    };
+    assert_eq!(run(1), run(4), "integer engine differs across thread counts");
+}
+
+#[test]
+fn export_then_serve_without_float_model_weights() {
+    // the deployment loop: quantize -> save .qtz v2 -> load in a "server"
+    // that never sees the original float weights -> identical predictions
+    let mut rng = Rng::new(41);
+    let model = tiny_model(&mut rng);
+    let (calib, _) = synthetic_stripes(64, 3, 16, &mut rng);
+    let (val, _) = synthetic_stripes(64, 3, 16, &mut rng);
+    let qm = quantize_8_8(&model, &calib, Method::Nearest);
+    let path = std::env::temp_dir().join("serve_roundtrip_v2.qtz");
+    save_quantized(&path, &qm).unwrap();
+
+    // v2 bundles carry i8 codes for every quantized layer
+    let raw = adaround::io::read_qtz(&path).unwrap();
+    for id in ["c1", "c2", "d1"] {
+        assert!(raw.contains_key(&format!("i8:{id}")), "no i8 weights for {id}");
+        assert!(raw.contains_key(&format!("scale:{id}")), "no scales for {id}");
+        assert!(!raw.contains_key(&format!("w:{id}")), "float weights leaked for {id}");
+    }
+
+    let served = load_quantized(&path).unwrap();
+    let mut e1 = ServeEngine::compile(&model, &qm, &[3, 16, 16]).unwrap();
+    let mut e2 = ServeEngine::compile(&model, &served, &[3, 16, 16]).unwrap();
+    assert_eq!(
+        e1.forward_quantized(&val).data,
+        e2.forward_quantized(&val).data,
+        "serving from the bundle must equal serving from the live pipeline"
+    );
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn adaround_weights_serve_too() {
+    // the engine is method-agnostic: AdaRound-optimized grids lower the
+    // same way nearest ones do (short run, small layer budget)
+    let mut rng = Rng::new(51);
+    let model = tiny_model(&mut rng);
+    let (calib, _) = synthetic_stripes(48, 3, 16, &mut rng);
+    let (val, _) = synthetic_stripes(48, 3, 16, &mut rng);
+    let cfg = PipelineConfig {
+        method: Method::AdaRound,
+        bits: 8,
+        per_channel: true,
+        act_bits: Some(8),
+        calib_n: 48,
+        col_budget: 256,
+        adaround: adaround::adaround::AdaRoundConfig { iters: 60, ..Default::default() },
+        ..Default::default()
+    };
+    let qm = Pipeline::new(&model, cfg, None).quantize(&calib, &mut Rng::new(3)).unwrap();
+    let mut engine = ServeEngine::compile(&model, &qm, &[3, 16, 16]).unwrap();
+    let logits_fq = model.forward(&val, &qm.opts());
+    let logits_i8 = engine.forward(&val);
+    let pred_i8 = engine.classify(&val);
+    assert_parity(&logits_fq, &logits_i8, &pred_i8, engine.out_q().scale);
+}
+
+#[test]
+fn batcher_coalesces_and_answers_correctly() {
+    let mut rng = Rng::new(61);
+    let model = tiny_model(&mut rng);
+    let (calib, _) = synthetic_stripes(48, 3, 16, &mut rng);
+    let (val, _) = synthetic_stripes(24, 3, 16, &mut rng);
+    let qm = quantize_8_8(&model, &calib, Method::Nearest);
+    let mut oracle = ServeEngine::compile(&model, &qm, &[3, 16, 16]).unwrap();
+    let want = oracle.forward(&val);
+
+    let engine = ServeEngine::compile(&model, &qm, &[3, 16, 16]).unwrap();
+    let batcher = Batcher::new(
+        engine,
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(20) },
+    );
+    let per: usize = val.shape[1..].iter().product();
+    let rxs: Vec<_> = (0..val.shape[0])
+        .map(|i| {
+            let img = Tensor::from_vec(&[3, 16, 16], val.data[i * per..(i + 1) * per].to_vec());
+            batcher.submit(img).expect("batcher alive")
+        })
+        .collect();
+    let classes = want.cols();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let row = rx.recv().expect("response");
+        assert_eq!(row.len(), classes);
+        for (a, b) in row.iter().zip(want.row(i)) {
+            assert_eq!(a, b, "request {i} differs from direct batched forward");
+        }
+    }
+    // a malformed request is rejected at submit and doesn't kill the worker
+    assert!(batcher.submit(Tensor::zeros(&[3, 8, 8])).is_none());
+    let per2: usize = val.shape[1..].iter().product();
+    let ok = batcher
+        .submit(Tensor::from_vec(&[3, 16, 16], val.data[..per2].to_vec()))
+        .expect("batcher still alive");
+    assert_eq!(ok.recv().expect("response after bad request").len(), classes);
+    batcher.shutdown();
+}
