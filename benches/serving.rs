@@ -15,7 +15,8 @@ use adaround::coordinator::{Method, Pipeline, PipelineConfig};
 use adaround::data::synthetic_stripes;
 use adaround::nn::Model;
 use adaround::serve::{
-    latency_entry, offered_load_latencies, throughput_entry, BatchPolicy, Batcher, ServeEngine,
+    latency_entry, offered_load_latencies, shard_sweep, throughput_entry, BatchPolicy, Batcher,
+    ServeEngine,
 };
 use adaround::tensor::Tensor;
 use adaround::util::stats::percentile;
@@ -135,7 +136,7 @@ fn main() -> anyhow::Result<()> {
     let pool: Vec<Tensor> = (0..16)
         .map(|i| Tensor::from_vec(&[3, 32, 32], val.data[i * per..(i + 1) * per].to_vec()))
         .collect();
-    let policy = BatchPolicy { max_batch: 32, max_wait: Duration::from_millis(2) };
+    let policy = BatchPolicy { max_batch: 32, max_wait: Duration::from_millis(2), shards: 1 };
     let batcher = Batcher::new(engine, policy);
     println!("{:<24} {:>12} {:>12}", "offered load", "p50 ms", "p99 ms");
     for rate in [500.0f64, 2000.0, 8000.0] {
@@ -147,11 +148,24 @@ fn main() -> anyhow::Result<()> {
     }
     batcher.shutdown();
 
+    // shard scaling under batch-heavy closed-loop load: one engine per
+    // core vs the single-engine layout — the first real multi-core
+    // serving entries in the bench trajectory
+    let (entries, shard_speedup) = shard_sweep(
+        || ServeEngine::compile(&model, &qm, &[3, 32, 32]).expect("engine compiled above"),
+        policy,
+        &pool,
+        parallel::num_threads(),
+        24,
+    );
+    results.extend(entries);
+
     let mut root = BTreeMap::new();
     root.insert("bench".to_string(), Json::Str("serving".to_string()));
     root.insert("threads".to_string(), Json::Num(parallel::num_threads() as f64));
     root.insert("parity_agree_frac".to_string(), Json::Num(agree_frac));
     root.insert("int8_speedup_batch8".to_string(), Json::Num(speedup_b8));
+    root.insert("shard_speedup_max".to_string(), Json::Num(shard_speedup));
     root.insert("results".to_string(), Json::Arr(results));
     std::fs::write("BENCH_serving.json", Json::Obj(root).to_string_pretty())?;
     println!("(wrote BENCH_serving.json)");

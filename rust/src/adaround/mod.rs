@@ -11,6 +11,12 @@
 //! Plus the paper's ablation baselines: [`ste`] (straight-through
 //! estimator, Table 5) and [`hopfield`] (sigmoid + temperature annealing,
 //! Table 3).
+//!
+//! The code ↔ paper mapping for the eq. (21)-(25) region (relaxed
+//! objective, soft-quantized weights, rectified sigmoid, regularizer,
+//! asymmetric reconstruction) is spelled out equation-by-equation in
+//! [`relax`]; [`problem`] assembles them into the per-layer loss and its
+//! analytic gradient, and [`schedule`] anneals beta.
 
 pub mod adam;
 pub mod hopfield;

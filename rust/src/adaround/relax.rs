@@ -1,6 +1,30 @@
-//! Rectified sigmoid + regularizer (paper eqs. 22-24) — exact mirror of
+//! Rectified sigmoid + regularizer — the continuous-relaxation substrate
+//! of AdaRound (paper eqs. 21-25; see PAPER.md), as an exact mirror of
 //! `python/compile/kernels/relax.py` so both drivers agree bit-for-bit in
 //! definition (floating-point roundoff aside).
+//!
+//! Equation map (Nagel et al., ICML 2020, §4):
+//! * eq. (21): the relaxed per-layer objective
+//!   `argmin_V ||Wx - W~x||_F^2 + lam * f_reg(V)` — assembled in
+//!   [`super::problem::LayerProblem`], with this module supplying h and
+//!   f_reg.
+//! * eq. (22): soft-quantized weights
+//!   `W~ = s * clip(floor(W/s) + h(V), n, p)` — the h(V) term is
+//!   [`rect_sigmoid`]; at convergence h saturates to {0, 1} and eq. (22)
+//!   collapses to the binary form of eq. (1)
+//!   ([`crate::quant::rounding_mask`]).
+//! * eq. (23): `h(V) = clip(sigmoid(V) * (zeta - gamma) + gamma, 0, 1)`
+//!   with the paper's stretch constants zeta = 1.1, gamma = -0.1 —
+//!   [`rect_sigmoid`] / [`rect_sigmoid_pair`].
+//! * eq. (24): the pull-to-binary regularizer
+//!   `f_reg(V) = sum 1 - |2 h(V) - 1|^beta`, beta annealed high -> low —
+//!   [`f_reg_elem`] / [`f_reg_grad`] ([`super::schedule`] owns the
+//!   annealing).
+//! * eq. (25): the final asymmetric objective
+//!   `argmin_V ||f_a(Wx) - f_a(W~x^)||_F^2 + lam * f_reg(V)` (quantized-
+//!   prefix input x^, activation f_a folded in) — the form
+//!   [`super::problem::LayerProblem::loss_grad_into`] optimizes and
+//!   `recon_mse` reports.
 
 pub const ZETA: f32 = 1.1;
 pub const GAMMA: f32 = -0.1;

@@ -31,7 +31,8 @@ USAGE:
   adaround fig N                                regenerate paper Figure N data
   adaround sweep    --model M --bits-list 8,4,2  bits x method accuracy grid
   adaround bench-engine --model micro18         native vs PJRT engine
-  adaround serve-bench --model M [--quantized B.qtz]  int8 engine + batcher
+  adaround serve-bench --model M [--quantized B.qtz] [--shards N]
+                    int8 engine + sharded batcher (docs/SERVING.md)
   adaround bench-diff A.json B.json [--tol PCT] perf regression gate (CI)
 
 COMMON FLAGS:

@@ -1,8 +1,11 @@
 //! `serve-bench` and `bench-diff` subcommands.
 //!
 //! `serve-bench` quantizes (or loads) a model, compiles the integer
-//! serving engine, and reports accuracy plus f32-vs-int8 throughput and
-//! batched-serving latency percentiles, written to `BENCH_serving.json`.
+//! serving engine, and reports accuracy plus f32-vs-int8 throughput,
+//! batched-serving latency percentiles, and the saturated closed-loop
+//! throughput of a single engine vs a shard per core (`--shards`,
+//! default: the thread count), written to `BENCH_serving.json`. See
+//! `docs/SERVING.md` for the full quickstart and tuning guidance.
 //!
 //! `bench-diff a.json b.json` compares two `BENCH_*.json` files and exits
 //! nonzero on regressions beyond `--tol` percent (default 10) — the CI
@@ -17,7 +20,8 @@ use crate::coordinator::{Method, Pipeline};
 use crate::eval::top1;
 use crate::nn::ForwardOptions;
 use crate::serve::{
-    latency_entry, offered_load_latencies, throughput_entry, BatchPolicy, Batcher, ServeEngine,
+    latency_entry, offered_load_latencies, shard_sweep, throughput_entry, BatchPolicy, Batcher,
+    ServeEngine,
 };
 use crate::tensor::{IntTensor, Tensor};
 use crate::util::cli::Args;
@@ -129,10 +133,12 @@ pub fn cmd_serve_bench(args: &Args) -> Result<()> {
         results.push(throughput_entry(&format!("int8-engine batch{batch}"), int8_tp));
     }
 
-    // batched serving under offered load
+    // batched serving under offered load, sharded across --shards engines
+    let shards = args.usize("shards", parallel::num_threads())?.max(1);
     let policy = BatchPolicy {
         max_batch: args.usize("max-batch", 32)?,
         max_wait: Duration::from_millis(args.usize("max-wait-ms", 3)? as u64),
+        shards,
     };
     let per: usize = val.0.shape[1..].iter().product();
     let pool: Vec<Tensor> = (0..16.min(val.0.shape[0]))
@@ -144,7 +150,8 @@ pub fn cmd_serve_bench(args: &Args) -> Result<()> {
         })
         .collect();
     let batcher = Batcher::new(engine, policy);
-    println!("{:<26} {:>12} {:>12}", "offered load", "p50 ms", "p99 ms");
+    let lat_head = format!("offered load ({shards} shards)");
+    println!("{lat_head:<26} {:>12} {:>12}", "p50 ms", "p99 ms");
     for rate in [500.0f64, 2000.0, 8000.0] {
         let n_req = (rate * 0.5) as usize;
         let lat = offered_load_latencies(&batcher, &pool, n_req.max(50), rate);
@@ -154,10 +161,22 @@ pub fn cmd_serve_bench(args: &Args) -> Result<()> {
     }
     batcher.shutdown();
 
+    // batch-heavy saturation: single engine vs a shard per core — the
+    // multi-core serving headline (closed loop, queue never dry)
+    let (entries, _speedup) = shard_sweep(
+        || ServeEngine::compile(&model, &qm, &val.0.shape[1..]).expect("engine compiled above"),
+        policy,
+        &pool,
+        shards,
+        26,
+    );
+    results.extend(entries);
+
     let mut root = BTreeMap::new();
     root.insert("bench".to_string(), Json::Str("serving".to_string()));
     root.insert("model".to_string(), Json::Str(name));
     root.insert("threads".to_string(), Json::Num(parallel::num_threads() as f64));
+    root.insert("shards".to_string(), Json::Num(shards as f64));
     root.insert("top1_fp32".to_string(), Json::Num(fp));
     root.insert("top1_fake_quant".to_string(), Json::Num(fq));
     root.insert("top1_int8".to_string(), Json::Num(iq));

@@ -27,12 +27,17 @@
 //! ## Threading
 //!
 //! The native compute core (GEMMs, conv, the AdaRound step, per-group
-//! rounding, calibration forwards) is data-parallel over scoped threads
-//! ([`util::parallel`]). The thread count comes from the `PALLAS_THREADS`
-//! environment variable (default: all available cores); results are
-//! **bit-identical for every thread count** — work is split by item index
-//! and each item is computed by the same serial code, with no
-//! reduction-order dependence.
+//! rounding, calibration forwards, the integer serving kernels) is
+//! data-parallel over a lazy, persistent worker pool ([`util::parallel`]).
+//! The thread count comes from the `PALLAS_THREADS` environment variable
+//! (default: all available cores); results are **bit-identical for every
+//! thread count** — work is split by item index and each item is computed
+//! by the same serial code, with no reduction-order dependence. The
+//! serving front-end layers request-level parallelism on top: a
+//! [`serve::Batcher`] shards a read-only plan across N engines, each
+//! running under an equal slice of the thread budget
+//! (`docs/ARCHITECTURE.md` has the full picture, including the
+//! determinism contract).
 //!
 //! ## Workspace API
 //!

@@ -17,7 +17,26 @@ use crate::tensor::Tensor;
 
 /// Fake-quantize a GEMM-shaped weight matrix [rows, cols] with a binary
 /// rounding mask (same shape). The grid's scale is per-row (per-channel)
-/// or broadcast (per-tensor).
+/// or broadcast (per-tensor). This is eq. (1) with the mask as the free
+/// up/down variable `r` — the paper's whole question is which mask to
+/// feed it.
+///
+/// ```
+/// use adaround::quant::{fake_quant, nearest_mask, QuantGrid};
+/// use adaround::tensor::Tensor;
+///
+/// // 4-bit grid with step 0.1: representable points are 0.1 * z, z in [-8, 7]
+/// let grid = QuantGrid::per_tensor(0.1, 4);
+/// let w = Tensor::from_vec(&[1, 3], vec![0.12, -0.27, 5.0]);
+/// let q = fake_quant(&w, &nearest_mask(&w, &grid), &grid);
+/// assert!((q.data[0] - 0.1).abs() < 1e-6); // 0.12 rounds down
+/// assert!((q.data[1] + 0.3).abs() < 1e-6); // -0.27 rounds to -0.3
+/// assert!((q.data[2] - 0.7).abs() < 1e-6); // 5.0 clips at p = 7
+///
+/// // forcing every weight up instead changes the first entry to 0.2
+/// let up = fake_quant(&w, &Tensor::full(&[1, 3], 1.0), &grid);
+/// assert!((up.data[0] - 0.2).abs() < 1e-6);
+/// ```
 ///
 /// The row loop is a pure slice zip (div / floor / add / clamp / mul with
 /// no indexing or branches), so LLVM auto-vectorizes it — `floor` and

@@ -1,5 +1,14 @@
 //! Rounding schemes (Table 1 of the paper): nearest / floor / ceil /
 //! stochastic, all expressed as binary up/down masks over `floor(W/s)`.
+//!
+//! Paper mapping (Nagel et al., ICML 2020; see PAPER.md): the mask R
+//! produced here is the binary variable of the rounding problem — eq. (1)
+//! writes a quantized weight as `s * clip(floor(w/s) + r, n, p)` with
+//! `r ∈ {0, 1}`, and the per-row local-MSE QUBO of eq. (20) optimizes
+//! exactly this R (solved in [`crate::qubo`]). AdaRound's continuous
+//! relaxation (eqs. 21-25, [`crate::adaround::relax`]) replaces R with
+//! the rectified sigmoid h(V) during optimization and snaps back to a
+//! binary mask of this form at the end.
 
 use crate::tensor::Tensor;
 use crate::util::Rng;
@@ -28,7 +37,8 @@ impl RoundingMode {
     }
 }
 
-/// Binary mask R with R[i] = 1 iff weight i rounds up.
+/// Binary mask R with R[i] = 1 iff weight i rounds up — the `r` of
+/// eq. (1); [`crate::quant::fake_quant`] applies it.
 ///
 /// The mode dispatch is hoisted out of the element loop; the nearest path
 /// is a branch-free slice zip (div, floor, compare-select) that LLVM
@@ -69,7 +79,8 @@ pub fn rounding_mask(w: &Tensor, grid: &QuantGrid, mode: RoundingMode, rng: &mut
     mask
 }
 
-/// Round-to-nearest mask (deterministic shortcut).
+/// Round-to-nearest mask (deterministic shortcut) — the eq. (1) baseline
+/// the paper's Figure 1 shows is far from optimal at low bit-widths.
 pub fn nearest_mask(w: &Tensor, grid: &QuantGrid) -> Tensor {
     let mut rng = Rng::new(0); // unused by Nearest
     rounding_mask(w, grid, RoundingMode::Nearest, &mut rng)

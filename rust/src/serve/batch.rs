@@ -1,17 +1,36 @@
 //! Batched serving front-end: coalesce single-image requests into batched
-//! engine forwards under a max-batch / max-wait policy.
+//! engine forwards under a max-batch / max-wait policy, sharded across a
+//! pool of engines for multi-core serving.
 //!
-//! One worker thread owns the [`ServeEngine`] (and therefore its scratch
-//! arenas); clients submit single images over an mpsc channel and block on
-//! a per-request response channel. The worker drains the queue up to
-//! `max_batch` images, waiting at most `max_wait` past the first request
-//! before launching a partial batch — the classic latency/throughput
-//! trade-off surface that `benches/serving.rs` maps out.
+//! `shards` worker threads each own one [`ServeEngine`] (and therefore its
+//! scratch arenas); all shards share ONE read-only plan
+//! ([`ServeEngine::fork`]), so weights are resident once no matter the
+//! shard count. Clients submit single images over an mpsc channel and
+//! block on a per-request response channel. A free shard takes the queue
+//! lock, drains up to `max_batch` images (waiting at most `max_wait` past
+//! the first request before launching a partial batch), releases the lock
+//! and computes — so one shard collects while its siblings run forwards.
+//! The lock is only ever held while *collecting*, which keeps shard
+//! hand-off at queue speed under load.
+//!
+//! Each shard runs its forwards under an equal slice of the machine's
+//! thread budget (`PALLAS_THREADS / shards`, floor 1): at shards=1 the
+//! engine keeps full intra-op parallelism (the PR-2 behavior); at
+//! shards=cores, inter-request parallelism takes over completely.
+//!
+//! **Determinism.** Per-image outputs do not depend on which shard served
+//! the image, how requests were batched together, or the thread count:
+//! every integer kernel computes each image's rows independently with
+//! thread-count-invariant math ([`crate::util::parallel`]), so serving
+//! results are bit-identical for any (`PALLAS_THREADS`, `shards`) pair —
+//! enforced by `rust/tests/pool_serving.rs`.
 
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, SyncSender};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::tensor::Tensor;
+use crate::util::parallel;
 
 use super::engine::ServeEngine;
 
@@ -21,11 +40,14 @@ pub struct BatchPolicy {
     pub max_batch: usize,
     /// launch a partial batch this long after its first request arrived
     pub max_wait: Duration,
+    /// engine shards serving the queue (1 = the single-engine layout);
+    /// see `docs/SERVING.md` for sizing guidance
+    pub shards: usize,
 }
 
 impl Default for BatchPolicy {
     fn default() -> Self {
-        BatchPolicy { max_batch: 32, max_wait: Duration::from_millis(5) }
+        BatchPolicy { max_batch: 32, max_wait: Duration::from_millis(5), shards: 1 }
     }
 }
 
@@ -41,7 +63,7 @@ struct Request {
 pub struct BatcherHandle {
     tx: Sender<Request>,
     /// expected image numel (the plan's C*H*W) — validated at submit so a
-    /// malformed request is rejected at its source, never in the worker
+    /// malformed request is rejected at its source, never in a shard
     per: usize,
 }
 
@@ -62,17 +84,46 @@ impl BatcherHandle {
 pub struct Batcher {
     tx: Option<Sender<Request>>,
     per: usize,
-    worker: Option<std::thread::JoinHandle<()>>,
+    shards: usize,
+    workers: Vec<std::thread::JoinHandle<()>>,
 }
 
 impl Batcher {
-    /// Spawn the worker thread that owns `engine`.
+    /// Spawn `policy.shards` worker threads, one engine each: the last
+    /// owns `engine` itself, the rest own [`ServeEngine::fork`]s of it
+    /// (shared plan, private scratch — the distinction is unobservable,
+    /// forks are exact siblings).
     pub fn new(engine: ServeEngine, policy: BatchPolicy) -> Batcher {
         assert!(policy.max_batch >= 1);
+        assert!(policy.shards >= 1);
         let per: usize = engine.plan.in_shape.iter().product();
         let (tx, rx) = mpsc::channel::<Request>();
-        let worker = std::thread::spawn(move || worker_loop(engine, policy, rx));
-        Batcher { tx: Some(tx), per, worker: Some(worker) }
+        let rx = Arc::new(Mutex::new(rx));
+        // divide the machine: intra-op threads recede as shards take
+        // over. Near-equal split with the remainder spread over the first
+        // shards (as in `parallel::split_ranges`), so e.g. 16 threads /
+        // 3 shards = 6+5+5 rather than stranding a core on floor(16/3).
+        // Captured here so the submitter's thread policy propagates.
+        let total = parallel::num_threads();
+        let mut engines = Vec::with_capacity(policy.shards);
+        for _ in 1..policy.shards {
+            engines.push(engine.fork());
+        }
+        engines.push(engine);
+        let workers = engines
+            .into_iter()
+            .enumerate()
+            .map(|(i, eng)| {
+                let threads =
+                    (total / policy.shards + usize::from(i < total % policy.shards)).max(1);
+                let rx = Arc::clone(&rx);
+                std::thread::Builder::new()
+                    .name(format!("serve-shard-{i}"))
+                    .spawn(move || worker_loop(eng, policy, rx, threads))
+                    .expect("spawn shard worker")
+            })
+            .collect();
+        Batcher { tx: Some(tx), per, shards: policy.shards, workers }
     }
 
     pub fn handle(&self) -> BatcherHandle {
@@ -82,19 +133,28 @@ impl Batcher {
         }
     }
 
+    /// Number of engine shards serving the queue.
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
     /// Convenience: submit directly on the batcher.
     pub fn submit(&self, img: Tensor) -> Option<Receiver<Vec<f32>>> {
         self.handle().submit(img)
     }
 
-    /// Drain outstanding requests and stop the worker.
+    /// Stop accepting new requests, let every shard drain the queue
+    /// (in-flight requests still get responses), then join the workers.
+    /// Drop any cloned [`BatcherHandle`]s first: an outstanding handle
+    /// keeps the queue open, so shards would keep serving (and this call
+    /// would block) until it dies.
     pub fn shutdown(mut self) {
         self.stop();
     }
 
     fn stop(&mut self) {
-        self.tx.take(); // close the channel; worker exits after draining
-        if let Some(w) = self.worker.take() {
+        self.tx.take(); // close the channel; shards exit after draining
+        for w in self.workers.drain(..) {
             let _ = w.join();
         }
     }
@@ -109,8 +169,10 @@ impl Drop for Batcher {
 /// Open-loop load generator for the serving benchmarks: submit
 /// `n_requests` images (cycling through `pool`) at a fixed arrival rate
 /// and return per-request latencies in milliseconds. A drainer thread
-/// receives results in submit order — the worker completes batches FIFO,
-/// so drain time tracks completion time.
+/// receives results in submit order; a single shard completes batches
+/// FIFO so drain time tracks completion time exactly, while multiple
+/// shards may reorder completions slightly — the drain-order measurement
+/// is then a tight upper bound on each request's latency.
 pub fn offered_load_latencies(
     batcher: &Batcher,
     pool: &[Tensor],
@@ -146,46 +208,107 @@ pub fn offered_load_latencies(
     drainer.join().unwrap_or_default()
 }
 
-fn worker_loop(mut engine: ServeEngine, policy: BatchPolicy, rx: Receiver<Request>) {
+/// Closed-loop batch-heavy load generator for the shard-scaling
+/// benchmarks: `clients` submitter threads each keep a window of requests
+/// in flight (submit ahead, drain behind) until `n_requests` total have
+/// completed; returns aggregate throughput in images/sec. The queue never
+/// runs dry, so the number is compute-bound — the regime a shard sweep is
+/// meant to move, as opposed to the latency-bound open-loop measurement
+/// above.
+pub fn saturation_throughput(
+    batcher: &Batcher,
+    pool: &[Tensor],
+    n_requests: usize,
+    clients: usize,
+) -> f64 {
+    assert!(!pool.is_empty() && clients >= 1);
+    let per_client = n_requests.div_ceil(clients);
+    let start = Instant::now();
+    std::thread::scope(|s| {
+        for c in 0..clients {
+            let h = batcher.handle();
+            s.spawn(move || {
+                const WINDOW: usize = 32;
+                let mut inflight = std::collections::VecDeque::with_capacity(WINDOW);
+                for i in 0..per_client {
+                    let img = pool[(c + i * clients) % pool.len()].clone();
+                    if let Some(rx) = h.submit(img) {
+                        inflight.push_back(rx);
+                    }
+                    if inflight.len() >= WINDOW {
+                        let _ = inflight.pop_front().expect("window nonempty").recv();
+                    }
+                }
+                for rx in inflight {
+                    let _ = rx.recv();
+                }
+            });
+        }
+    });
+    (per_client * clients) as f64 / start.elapsed().as_secs_f64()
+}
+
+/// One shard: collect a batch under the shared queue lock, release it,
+/// compute, respond; repeat until the queue is closed AND drained.
+fn worker_loop(
+    mut engine: ServeEngine,
+    policy: BatchPolicy,
+    rx: Arc<Mutex<Receiver<Request>>>,
+    threads: usize,
+) {
     let per: usize = engine.plan.in_shape.iter().product();
     loop {
-        // block for the first request of the batch
-        let first = match rx.recv() {
-            Ok(r) => r,
-            Err(_) => return, // all senders gone
+        let batch = {
+            let q = match rx.lock() {
+                Ok(g) => g,
+                Err(_) => return, // a sibling shard panicked mid-collect
+            };
+            // block for the first request of the batch; Err means every
+            // sender is gone and the queue is empty — fully drained
+            let first = match q.recv() {
+                Ok(r) => r,
+                Err(_) => return,
+            };
+            let deadline = Instant::now() + policy.max_wait;
+            let mut batch = vec![first];
+            while batch.len() < policy.max_batch {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                match q.recv_timeout(deadline - now) {
+                    Ok(r) => batch.push(r),
+                    Err(RecvTimeoutError::Timeout) => break,
+                    Err(RecvTimeoutError::Disconnected) => break,
+                }
+            }
+            batch
         };
-        let deadline = Instant::now() + policy.max_wait;
-        let mut batch = vec![first];
-        while batch.len() < policy.max_batch {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            match rx.recv_timeout(deadline - now) {
-                Ok(r) => batch.push(r),
-                Err(RecvTimeoutError::Timeout) => break,
-                Err(RecvTimeoutError::Disconnected) => break,
-            }
-        }
-        // stack [C,H,W] images into one [B,C,H,W] forward; a malformed
-        // request (submit() already rejects these — belt and braces) is
-        // dropped here, failing only its own response channel
-        batch.retain(|r| r.img.numel() == per);
-        if batch.is_empty() {
-            continue;
-        }
-        let b = batch.len();
-        let mut data = Vec::with_capacity(b * per);
-        for r in &batch {
-            data.extend_from_slice(&r.img.data);
-        }
-        let mut shape = vec![b];
-        shape.extend_from_slice(&engine.plan.in_shape);
-        let out = engine.forward(&Tensor::from_vec(&shape, data));
-        let row = out.numel() / b;
-        for (i, r) in batch.into_iter().enumerate() {
-            // a client that dropped its receiver just misses its row
-            let _ = r.resp.send(out.data[i * row..(i + 1) * row].to_vec());
-        }
+        run_batch(&mut engine, per, threads, batch);
+    }
+}
+
+/// Stack [C,H,W] images into one [B,C,H,W] forward and scatter the
+/// dequantized rows back to their requesters. A malformed request
+/// (`submit` already rejects these — belt and braces) is dropped here,
+/// failing only its own response channel; a client that dropped its
+/// receiver just misses its row.
+fn run_batch(engine: &mut ServeEngine, per: usize, threads: usize, mut batch: Vec<Request>) {
+    batch.retain(|r| r.img.numel() == per);
+    if batch.is_empty() {
+        return;
+    }
+    let b = batch.len();
+    let mut data = Vec::with_capacity(b * per);
+    for r in &batch {
+        data.extend_from_slice(&r.img.data);
+    }
+    let mut shape = vec![b];
+    shape.extend_from_slice(&engine.plan.in_shape);
+    let x = Tensor::from_vec(&shape, data);
+    let out = parallel::with_threads(threads, || engine.forward(&x));
+    let row = out.numel() / b;
+    for (i, r) in batch.into_iter().enumerate() {
+        let _ = r.resp.send(out.data[i * row..(i + 1) * row].to_vec());
     }
 }

@@ -7,6 +7,8 @@
 //! the f32 path and the GEMMs run on i8/u8 with i32 accumulation
 //! ([`crate::tensor::int8`]).
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use crate::coordinator::QuantizedModel;
@@ -20,7 +22,11 @@ use super::ikernels::{
 use super::plan::{compile_plan, ActQ, PlanOp, QuantizedPlan};
 
 pub struct ServeEngine {
-    pub plan: QuantizedPlan,
+    /// The compiled program. Read-only after compilation and shared
+    /// (`Arc`) so a sharded [`super::Batcher`] can run one engine per
+    /// core without duplicating weights — only the scratch below is
+    /// per-engine.
+    pub plan: Arc<QuantizedPlan>,
     /// index of each node's last consumer — lets the forward drop
     /// activation tensors as soon as they're dead, keeping the resident
     /// set at the live frontier instead of the whole network
@@ -30,6 +36,11 @@ pub struct ServeEngine {
 
 impl ServeEngine {
     pub fn new(plan: QuantizedPlan) -> ServeEngine {
+        ServeEngine::from_shared(Arc::new(plan))
+    }
+
+    /// Build an engine over an already-shared plan (fresh scratch).
+    pub fn from_shared(plan: Arc<QuantizedPlan>) -> ServeEngine {
         let n = plan.nodes.len();
         let mut last_use = vec![0usize; n];
         for (i, nd) in plan.nodes.iter().enumerate() {
@@ -42,6 +53,15 @@ impl ServeEngine {
             last_use[n - 1] = usize::MAX; // the output survives the walk
         }
         ServeEngine { plan, last_use, ws: Int8Workspace::new() }
+    }
+
+    /// Fork a sibling engine: same read-only plan (shared, no weight
+    /// copy), fresh private scratch. The unit of sharding in
+    /// [`super::Batcher`] — forwards on forks are bit-identical to
+    /// forwards on `self` because the plan is immutable and every kernel
+    /// is deterministic.
+    pub fn fork(&self) -> ServeEngine {
+        ServeEngine::from_shared(Arc::clone(&self.plan))
     }
 
     /// Compile a float model + its quantized overrides into an engine.

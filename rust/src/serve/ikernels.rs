@@ -7,10 +7,14 @@
 //! at compile time ([`super::plan::Requant`]). Quantize/dequantize at the
 //! engine boundary live in [`super::engine`].
 //!
-//! Parallel structure mirrors the f32 kernels: grouped convs fan out
-//! across groups, the GEMM is row-parallel ([`crate::tensor::int8`]), the
-//! requant scatter fans out per image — deterministic index-based splits
-//! throughout ([`crate::util::parallel`]).
+//! Parallel structure mirrors the f32 kernels: convs fan out over the
+//! FLAT (group x patch-row / group x output-channel) index space so any
+//! `groups` value uses every core, the GEMM is row-parallel
+//! ([`crate::tensor::int8`]), the requant scatter fans out per image, and
+//! the elementwise movers (add / relu / pool / upsample / concat) split
+//! their planes across the pool once a batch carries enough elements —
+//! deterministic index-based splits throughout
+//! ([`crate::util::parallel`]).
 
 use crate::tensor::conv::out_size;
 use crate::tensor::int8::{gemm_i8_into, gemm_u8_bt_into};
@@ -70,35 +74,26 @@ pub fn im2col_u8_into(input: &U8Tensor, group: usize, p: Conv2dParams, zp: u8, o
     let npos = n * ho * wo;
     let rows = cg * p.k * p.k;
     assert_eq!(out.len(), rows * npos);
-    let c0 = group * cg;
     let grain = ((1 << 16) / npos.max(1)).max(1);
     parallel::par_chunks_mut(out, npos, grain, |r, orow| {
-        let ci = r / (p.k * p.k);
-        let ky = (r / p.k) % p.k;
-        let kx = r % p.k;
-        let mut col = 0usize;
-        for ni in 0..n {
-            let base = ((ni * c + c0 + ci) * h) * w;
-            for oy in 0..ho {
-                let iy = (oy * p.stride + ky) as isize - p.pad as isize;
-                if iy < 0 || iy >= h as isize {
-                    orow[col..col + wo].fill(zp);
-                    col += wo;
-                    continue;
-                }
-                let irow = base + iy as usize * w;
-                for ox in 0..wo {
-                    let ix = (ox * p.stride + kx) as isize - p.pad as isize;
-                    orow[col] = if ix >= 0 && ix < w as isize {
-                        input.data[irow + ix as usize]
-                    } else {
-                        zp
-                    };
-                    col += 1;
-                }
-            }
-        }
+        im2col_u8_row(input, group, p, zp, r, orow);
     });
+}
+
+/// Serial extraction of ONE u8 im2col patch row — the per-item unit
+/// behind [`im2col_u8_into`] and the group-flat fan-out in [`conv2d_i8`].
+/// Same geometry implementation as the f32 path
+/// ([`crate::tensor::conv`]'s `im2col_row_any`), with the zero point as
+/// the padding value.
+fn im2col_u8_row(
+    input: &U8Tensor,
+    group: usize,
+    p: Conv2dParams,
+    zp: u8,
+    r: usize,
+    orow: &mut [u8],
+) {
+    crate::tensor::conv::im2col_row_any(&input.shape, &input.data, group, p, zp, r, orow);
 }
 
 /// Integer conv2d: input [N,C,H,W] u8, weights [O, C/g·k·k] i8 (grouped
@@ -125,24 +120,35 @@ pub fn conv2d_i8(
     let npos = n * ho * wo;
     let hw = ho * wo;
 
-    // pass 1: im2col of every group (groups fan out; within a group the
-    // im2col itself row-parallelizes when groups == 1)
+    // pass 1: im2col of every group, fanned out over the FLAT patch-row
+    // index (group-major: row r belongs to group r/patch), so any groups
+    // value saturates the cores
     let cols: &mut Vec<u8> = ws.ensure_cols(p.groups * patch * npos);
-    parallel::par_chunks_mut(cols, patch * npos, 1, |g, chunk| {
-        im2col_u8_into(input, g, p, zp_in as u8, chunk);
+    let grain = ((1 << 16) / npos.max(1)).max(1);
+    parallel::par_chunks_mut(cols, npos, grain, |r, orow| {
+        im2col_u8_row(input, r / patch, p, zp_in as u8, r % patch, orow);
     });
 
-    // pass 2: per-group i8 GEMM into the i32 accumulator
+    // pass 2: grouped i8 GEMM over the FLAT output-channel index; a
+    // unit's row range is cut at group boundaries so each segment
+    // multiplies against its own group's im2col block (integer adds —
+    // trivially identical across any row batching)
     let cols_len = p.groups * patch * npos;
     let acc: &mut Vec<i32> = ws.ensure_acc(o * npos);
     acc.fill(0);
     // split the borrow: cols is read-only below
     let (cols_ref, acc_ref) = (&ws.cols[..cols_len], &mut ws.acc);
-    parallel::par_chunks_mut(acc_ref, og * npos, 1, |g, chunk| {
-        let wslice = &w.data[g * og * patch..(g + 1) * og * patch];
-        let cslice = &cols_ref[g * patch * npos..(g + 1) * patch * npos];
-        gemm_i8_into(wslice, cslice, chunk, og, patch, npos);
-    });
+    parallel::par_grouped_rows_mut(
+        acc_ref,
+        npos,
+        og,
+        crate::tensor::int8::row_grain(patch, npos),
+        |g, rows, seg| {
+            let wslice = &w.data[rows.start * patch..rows.end * patch];
+            let cslice = &cols_ref[g * patch * npos..(g + 1) * patch * npos];
+            gemm_i8_into(wslice, cslice, seg, rows.end - rows.start, patch, npos);
+        },
+    );
 
     // pass 3: zero-point correction + bias + requant + relu + saturate,
     // scattered [O, n*ho*wo] -> [n, O, ho, wo]; parallel over images
@@ -196,7 +202,15 @@ pub fn dense_i8(
     out
 }
 
+/// Minimum elements per unit for the elementwise movers: below this the
+/// loop runs serially on the caller (a mover touches each element once,
+/// so fine-grained fan-out would be pure dispatch overhead).
+const MOVER_GRAIN: usize = 1 << 15;
+
 /// Integer residual add: out = zp_o + Ra·(qa - za) + Rb·(qb - zb).
+/// Element-parallel for large batches (chunk = 1 element, grain
+/// `MOVER_GRAIN`); each element's math is a fixed serial expression, so
+/// outputs are identical for any split.
 #[allow(clippy::too_many_arguments)]
 pub fn add_i8(
     a: &U8Tensor,
@@ -211,24 +225,35 @@ pub fn add_i8(
     assert_eq!(a.shape, b.shape);
     let mut out = U8Tensor::zeros(&a.shape);
     let lo = if relu { zp_out } else { 0 };
-    for ((o, &qa), &qb) in out.data.iter_mut().zip(&a.data).zip(&b.data) {
-        let v = ra.apply(qa as i32 - za) + rb.apply(qb as i32 - zb);
-        *o = (zp_out + v).clamp(lo, 255) as u8;
-    }
+    let (adata, bdata) = (&a.data, &b.data);
+    parallel::par_ranges_mut(&mut out.data, 1, MOVER_GRAIN, |range, span| {
+        let av = &adata[range.start..range.end];
+        let bv = &bdata[range.start..range.end];
+        for ((o, &qa), &qb) in span.iter_mut().zip(av).zip(bv) {
+            let v = ra.apply(qa as i32 - za) + rb.apply(qb as i32 - zb);
+            *o = (zp_out + v).clamp(lo, 255) as u8;
+        }
+    });
     out
 }
 
 /// Standalone ReLU node: rescale to the output grid, clamped at zero.
+/// Element-parallel as in [`add_i8`].
 pub fn relu_i8(a: &U8Tensor, r: Requant, zp_in: i32, zp_out: i32) -> U8Tensor {
     let mut out = U8Tensor::zeros(&a.shape);
-    for (o, &q) in out.data.iter_mut().zip(&a.data) {
-        *o = requant_u8(q as i32 - zp_in, r, zp_out, zp_out);
-    }
+    let adata = &a.data;
+    parallel::par_ranges_mut(&mut out.data, 1, MOVER_GRAIN, |range, span| {
+        let av = &adata[range.start..range.end];
+        for (o, &q) in span.iter_mut().zip(av) {
+            *o = requant_u8(q as i32 - zp_in, r, zp_out, zp_out);
+        }
+    });
     out
 }
 
 /// Integer average pool (VALID): the k²-window sum requants by
-/// `s_in/(s_out·k²)` in one go — no intermediate division.
+/// `s_in/(s_out·k²)` in one go — no intermediate division. Parallel over
+/// (image, channel) planes for large batches.
 pub fn avgpool_i8(
     a: &U8Tensor,
     k: usize,
@@ -242,9 +267,10 @@ pub fn avgpool_i8(
     let wo = (w - k) / stride + 1;
     let mut out = U8Tensor::zeros(&[n, c, ho, wo]);
     let kk2 = (k * k) as i32;
-    for nc in 0..n * c {
-        let src = &a.data[nc * h * w..(nc + 1) * h * w];
-        let dst = &mut out.data[nc * ho * wo..(nc + 1) * ho * wo];
+    let adata = &a.data;
+    let grain = (MOVER_GRAIN / (ho * wo * k * k).max(1)).max(1);
+    parallel::par_chunks_mut(&mut out.data, ho * wo, grain, |nc, dst| {
+        let src = &adata[nc * h * w..(nc + 1) * h * w];
         for oy in 0..ho {
             for ox in 0..wo {
                 let mut sum = 0i32;
@@ -256,42 +282,48 @@ pub fn avgpool_i8(
                 dst[oy * wo + ox] = requant_u8(sum - kk2 * zp_in, r, zp_out, 0);
             }
         }
-    }
+    });
     out
 }
 
 /// Integer global average pool: [N,C,H,W] -> [N,C]; `hw` is baked into
-/// the requant multiplier at compile time and re-checked here.
+/// the requant multiplier at compile time and re-checked here. Parallel
+/// over (image, channel) planes for large batches.
 pub fn gpool_i8(a: &U8Tensor, r: Requant, hw: usize, zp_in: i32, zp_out: i32) -> U8Tensor {
     let (n, c, h, w) = (a.shape[0], a.shape[1], a.shape[2], a.shape[3]);
     assert_eq!(h * w, hw, "gpool compiled for {hw} positions, got {h}x{w}");
     let mut out = U8Tensor::zeros(&[n, c]);
-    for nc in 0..n * c {
-        let src = &a.data[nc * hw..(nc + 1) * hw];
+    let adata = &a.data;
+    let grain = (MOVER_GRAIN / hw.max(1)).max(1);
+    parallel::par_chunks_mut(&mut out.data, 1, grain, |nc, dst| {
+        let src = &adata[nc * hw..(nc + 1) * hw];
         let sum: i32 = src.iter().map(|&q| q as i32).sum();
-        out.data[nc] = requant_u8(sum - (hw as i32) * zp_in, r, zp_out, 0);
-    }
+        dst[0] = requant_u8(sum - (hw as i32) * zp_in, r, zp_out, 0);
+    });
     out
 }
 
 /// Nearest-neighbor x2 upsample with rescale to the output grid.
+/// Parallel over (image, channel) planes for large batches.
 pub fn upsample_i8(a: &U8Tensor, r: Requant, zp_in: i32, zp_out: i32) -> U8Tensor {
     let (n, c, h, w) = (a.shape[0], a.shape[1], a.shape[2], a.shape[3]);
     let mut out = U8Tensor::zeros(&[n, c, 2 * h, 2 * w]);
-    for nc in 0..n * c {
-        let src = &a.data[nc * h * w..(nc + 1) * h * w];
-        let dst = &mut out.data[nc * 4 * h * w..(nc + 1) * 4 * h * w];
+    let adata = &a.data;
+    let grain = (MOVER_GRAIN / (4 * h * w).max(1)).max(1);
+    parallel::par_chunks_mut(&mut out.data, 4 * h * w, grain, |nc, dst| {
+        let src = &adata[nc * h * w..(nc + 1) * h * w];
         for y in 0..2 * h {
             for x in 0..2 * w {
                 let q = src[(y / 2) * w + x / 2] as i32;
                 dst[y * 2 * w + x] = requant_u8(q - zp_in, r, zp_out, 0);
             }
         }
-    }
+    });
     out
 }
 
 /// Channel concat with per-input rescale to the shared output grid.
+/// Parallel over images for large batches.
 pub fn concat_i8(
     inputs: &[&U8Tensor],
     rs: &[Requant],
@@ -302,18 +334,19 @@ pub fn concat_i8(
     let ctot: usize = inputs.iter().map(|t| t.shape[1]).sum();
     let mut out = U8Tensor::zeros(&[n, ctot, h, w]);
     let hw = h * w;
-    for ni in 0..n {
+    let grain = (MOVER_GRAIN / (ctot * hw).max(1)).max(1);
+    parallel::par_chunks_mut(&mut out.data, ctot * hw, grain, |ni, dimg| {
         let mut coff = 0;
         for (ti, t) in inputs.iter().enumerate() {
             let ci = t.shape[1];
             let src = &t.data[ni * ci * hw..(ni + 1) * ci * hw];
-            let dst = &mut out.data[(ni * ctot + coff) * hw..(ni * ctot + coff + ci) * hw];
+            let dst = &mut dimg[coff * hw..(coff + ci) * hw];
             for (d, &q) in dst.iter_mut().zip(src) {
                 *d = requant_u8(q as i32 - zps[ti], rs[ti], zp_out, 0);
             }
             coff += ci;
         }
-    }
+    });
     out
 }
 
@@ -393,6 +426,50 @@ mod tests {
     }
 
     #[test]
+    fn grouped_conv_i8_flat_fanout_matches_oracle_across_threads() {
+        use crate::util::parallel::with_threads;
+        // groups=2 with enough positions that the flat row fan-out engages
+        // (row ranges cut at the group boundary)
+        let p = Conv2dParams { k: 3, stride: 1, pad: 1, groups: 2 };
+        let (n, c, o, hw) = (8usize, 8usize, 8usize, 16usize);
+        let cg = c / p.groups;
+        let mut rng = crate::util::Rng::new(15);
+        let zp_in = 2i32;
+        let qin = U8Tensor::from_vec(
+            &[n, c, hw, hw],
+            (0..n * c * hw * hw).map(|_| rng.below(20) as u8).collect(),
+        );
+        let wi = I8Tensor::from_vec(
+            &[o, cg, 3, 3],
+            (0..o * cg * 9).map(|_| (rng.below(7) as i32 - 3) as i8).collect(),
+        );
+        let patch = cg * 9;
+        let bias_q = vec![0i32; o];
+        let wsum: Vec<i32> = (0..o)
+            .map(|oc| wi.data[oc * patch..(oc + 1) * patch].iter().map(|&z| z as i32).sum())
+            .collect();
+        let requant = vec![identity_requant(); o];
+        let run = |threads: usize| {
+            with_threads(threads, || {
+                let mut ws = Int8Workspace::new();
+                conv2d_i8(&mut ws, &qin, &wi, p, &bias_q, &wsum, &requant, zp_in, 0, false).data
+            })
+        };
+        let got = run(1);
+        assert_eq!(got, run(4), "grouped conv2d_i8 differs across thread counts");
+        // f32 oracle on the real codes (q - zp) with unit scales
+        let fin = Tensor::from_vec(
+            &[n, c, hw, hw],
+            qin.data.iter().map(|&q| (q as i32 - zp_in) as f32).collect(),
+        );
+        let fw = Tensor::from_vec(&[o, cg, 3, 3], wi.data.iter().map(|&z| z as f32).collect());
+        let want = conv2d(&fin, &fw, None, p);
+        for (g, w) in got.iter().zip(&want.data) {
+            assert_eq!(*g as f32, w.round().clamp(0.0, 255.0), "int {g} vs f32 {w}");
+        }
+    }
+
+    #[test]
     fn dense_i8_matches_oracle() {
         let (n, c, o) = (3usize, 5usize, 4usize);
         let mut rng = crate::util::Rng::new(9);
@@ -456,5 +533,30 @@ mod tests {
         // standalone relu clamps below the output zero point
         let rl = relu_i8(&b, r, 4, 0);
         assert_eq!(rl.data, vec![0, 0, 0, 1]);
+    }
+
+    #[test]
+    fn movers_bit_identical_across_threads() {
+        use crate::util::parallel::with_threads;
+        let mut rng = crate::util::Rng::new(77);
+        // big enough to cross MOVER_GRAIN so the fan-out actually engages
+        let shape = [8usize, 16, 24, 24];
+        let numel: usize = shape.iter().product();
+        let a = U8Tensor::from_vec(&shape, (0..numel).map(|_| rng.below(256) as u8).collect());
+        let b = U8Tensor::from_vec(&shape, (0..numel).map(|_| rng.below(256) as u8).collect());
+        let r = Requant::from_real(0.37);
+        let run = |threads: usize| {
+            with_threads(threads, || {
+                (
+                    add_i8(&a, &b, r, r, 3, 5, 2, true).data,
+                    relu_i8(&a, r, 3, 1).data,
+                    avgpool_i8(&a, 2, 2, r, 3, 0).data,
+                    gpool_i8(&a, r, 24 * 24, 3, 0).data,
+                    upsample_i8(&a, r, 3, 0).data,
+                    concat_i8(&[&a, &b], &[r, r], &[3, 5], 0).data,
+                )
+            })
+        };
+        assert_eq!(run(1), run(4));
     }
 }

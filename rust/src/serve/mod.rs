@@ -14,15 +14,78 @@
 //!    plan with u8 activations, i8×u8→i32 GEMMs and fused
 //!    requant+ReLU+saturate — no float ops in the layer loop.
 //! 3. **serve** ([`batch`]): a [`Batcher`] coalesces single-image requests
-//!    into batched forwards under a max-batch / max-wait policy.
+//!    into batched forwards under a max-batch / max-wait policy, sharded
+//!    across `shards` engines that share one read-only plan
+//!    ([`ServeEngine::fork`]) with per-shard scratch.
 //!
 //! Accuracy contract: the integer engine mirrors the f32 fake-quant
 //! simulation up to requantization rounding (argmax parity on the test
-//! models; see `rust/tests/serve_parity.rs`).
+//! models; see `rust/tests/serve_parity.rs`). Determinism contract:
+//! per-image results are bit-identical for any (`PALLAS_THREADS`,
+//! `shards`) pair (`rust/tests/pool_serving.rs`).
+//!
+//! See `docs/SERVING.md` for the CLI quickstart, the `.qtz` format
+//! specification and policy tuning, and `docs/ARCHITECTURE.md` for where
+//! this subsystem sits in the pipeline.
+//!
+//! Compiling and serving in-process:
+//!
+//! ```
+//! use std::collections::BTreeMap;
+//! use adaround::coordinator::{Method, Pipeline, PipelineConfig};
+//! use adaround::data::synthetic_stripes;
+//! use adaround::nn::Model;
+//! use adaround::serve::ServeEngine;
+//! use adaround::tensor::Tensor;
+//! use adaround::util::{Json, Rng};
+//!
+//! // a tiny conv classifier built from an inline manifest
+//! let ir = r#"{"task":"cls","ir":[
+//!   {"id":"in","op":"input","inputs":[]},
+//!   {"id":"c1","op":"conv","inputs":["in"],"cin":3,"cout":4,
+//!    "k":3,"stride":1,"pad":1,"groups":1,"relu":true},
+//!   {"id":"g1","op":"gpool","inputs":["c1"]},
+//!   {"id":"d1","op":"dense","inputs":["g1"],"cin":4,"cout":2,"relu":false}
+//! ]}"#;
+//! let mut rng = Rng::new(5);
+//! let mut weights = BTreeMap::new();
+//! for (name, shape) in [
+//!     ("c1.w", vec![4usize, 3, 3, 3]),
+//!     ("c1.b", vec![4]),
+//!     ("d1.w", vec![2, 4]),
+//!     ("d1.b", vec![2]),
+//! ] {
+//!     let n: usize = shape.iter().product();
+//!     let data = (0..n).map(|_| rng.normal_f32(0.0, 0.2)).collect();
+//!     weights.insert(name.to_string(), Tensor::from_vec(&shape, data));
+//! }
+//! let model = Model::from_manifest("doc", &Json::parse(ir).unwrap(), weights).unwrap();
+//!
+//! // quantize 8/8 (weights AND activations — the integer engine needs
+//! // activation quantizers), then lower to the integer plan
+//! let (calib, _) = synthetic_stripes(16, 3, 8, &mut rng);
+//! let cfg = PipelineConfig {
+//!     method: Method::Nearest,
+//!     bits: 8,
+//!     per_channel: true,
+//!     act_bits: Some(8),
+//!     calib_n: 16,
+//!     ..Default::default()
+//! };
+//! let qm = Pipeline::new(&model, cfg, None).quantize(&calib, &mut Rng::new(1)).unwrap();
+//! let mut engine = ServeEngine::compile(&model, &qm, &[3, 8, 8]).unwrap();
+//!
+//! // batched forward: [N, C, H, W] f32 in, [N, classes] f32 logits out
+//! let (val, _) = synthetic_stripes(4, 3, 8, &mut rng);
+//! let logits = engine.forward(&val);
+//! assert_eq!(logits.shape, vec![4, 2]);
+//! ```
+//!
+//! The CLI wraps the same loop:
 //!
 //! ```text
 //! adaround quantize --model micro18 --bits 4 --act-bits 8 --save m.qtz
-//! adaround serve-bench --model micro18 --quantized m.qtz
+//! adaround serve-bench --model micro18 --quantized m.qtz --shards 4
 //! ```
 
 pub mod batch;
@@ -30,12 +93,15 @@ pub mod engine;
 pub mod ikernels;
 pub mod plan;
 
-pub use batch::{offered_load_latencies, Batcher, BatcherHandle, BatchPolicy};
+pub use batch::{
+    offered_load_latencies, saturation_throughput, Batcher, BatcherHandle, BatchPolicy,
+};
 pub use engine::ServeEngine;
 pub use plan::{compile_plan, ActQ, QuantizedPlan, Requant};
 
 use std::collections::BTreeMap;
 
+use crate::tensor::Tensor;
 use crate::util::Json;
 
 /// `BENCH_serving.json` result entry: throughput at one batch size. The
@@ -57,4 +123,43 @@ pub fn latency_entry(name: &str, p50_ms: f64, p99_ms: f64) -> Json {
     o.insert("p50_ms".to_string(), Json::Num(p50_ms));
     o.insert("p99_ms".to_string(), Json::Num(p99_ms));
     Json::Obj(o)
+}
+
+/// The saturated closed-loop shard sweep shared by `benches/serving.rs`
+/// and `adaround serve-bench`: measure shards=1 and (when `max_shards`
+/// exceeds 1) shards=`max_shards`, printing one row per point. Returns
+/// the `BENCH_serving.json` entries plus the max-shard speedup over the
+/// single-engine baseline. Entry names are machine-independent
+/// (`shards=1` / `shards=max`) so `bench-diff` can track them across
+/// hosts with different core counts — keeping the naming in one place is
+/// what keeps the regression gate's name matching stable.
+pub fn shard_sweep(
+    mut compile: impl FnMut() -> ServeEngine,
+    base_policy: BatchPolicy,
+    pool: &[Tensor],
+    max_shards: usize,
+    label_width: usize,
+) -> (Vec<Json>, f64) {
+    let mut counts = vec![1usize];
+    if max_shards > 1 {
+        counts.push(max_shards);
+    }
+    println!("{:<w$} {:>12} {:>8}", "saturated closed loop", "img/s", "speedup", w = label_width);
+    let mut entries = Vec::new();
+    let mut base_tp = 0.0f64;
+    let mut speedup = 1.0f64;
+    for &sc in &counts {
+        let b = Batcher::new(compile(), BatchPolicy { shards: sc, ..base_policy });
+        let tp = saturation_throughput(&b, pool, 256 * sc.max(4), 2 * sc);
+        b.shutdown();
+        if sc == 1 {
+            base_tp = tp;
+        } else {
+            speedup = tp / base_tp;
+        }
+        println!("{:<w$} {:>12.1} {:>7.2}x", format!("shards {sc}"), tp, tp / base_tp, w = label_width);
+        let label = if sc == 1 { "serve saturated shards=1" } else { "serve saturated shards=max" };
+        entries.push(throughput_entry(label, tp));
+    }
+    (entries, speedup)
 }

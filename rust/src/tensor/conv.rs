@@ -6,14 +6,15 @@
 //! the geometry the Pallas/HLO artifacts were lowered for, so the same
 //! im2col feeds both the native engine and the PJRT engine.
 //!
-//! Parallel structure (see [`crate::util::parallel`]): grouped convs fan
-//! out across groups (each group's im2col block and GEMM block are
-//! disjoint slices of the workspace), while groups==1 convs parallelize
-//! inside im2col (per patch row) and inside the GEMM (per output row);
-//! the nested-parallelism guard in the parallel module picks whichever
-//! level is active. The final scatter fans out per image. All splits are
-//! by item index with serial per-item code, so outputs are bit-identical
-//! across `PALLAS_THREADS` values.
+//! Parallel structure (see [`crate::util::parallel`]): both im2col and the
+//! GEMM parallelize over a FLAT index space that spans all groups — patch
+//! rows `(group, channel-in-group, ky, kx)` for im2col, output channels
+//! for the GEMM — so a conv with any `groups` value uses every core
+//! (the former per-group fan-out idled cores whenever
+//! `1 < groups < PALLAS_THREADS`, e.g. groups=2 on a 16-core box ran on 2
+//! threads). The final scatter fans out per image. All splits are by item
+//! index with serial per-item code, so outputs are bit-identical across
+//! `PALLAS_THREADS` values.
 
 use crate::util::parallel;
 
@@ -84,37 +85,65 @@ pub fn im2col_into(input: &Tensor, group: usize, p: Conv2dParams, out: &mut [f32
     let npos = n * ho * wo;
     let rows = cg * p.k * p.k;
     assert_eq!(out.len(), rows * npos);
-    let c0 = group * cg;
     // a patch row is a pure copy: parallelize only when rows carry real work
     let grain = ((1 << 16) / npos.max(1)).max(1);
     parallel::par_chunks_mut(out, npos, grain, |r, orow| {
-        // decode row r -> (channel-in-group, ky, kx); same layout as before
-        let ci = r / (p.k * p.k);
-        let ky = (r / p.k) % p.k;
-        let kx = r % p.k;
-        let mut col = 0usize;
-        for ni in 0..n {
-            let base = ((ni * c + c0 + ci) * h) * w;
-            for oy in 0..ho {
-                let iy = (oy * p.stride + ky) as isize - p.pad as isize;
-                if iy < 0 || iy >= h as isize {
-                    orow[col..col + wo].fill(0.0);
-                    col += wo;
-                    continue;
-                }
-                let irow = base + iy as usize * w;
-                for ox in 0..wo {
-                    let ix = (ox * p.stride + kx) as isize - p.pad as isize;
-                    orow[col] = if ix >= 0 && ix < w as isize {
-                        input.data[irow + ix as usize]
-                    } else {
-                        0.0
-                    };
-                    col += 1;
-                }
+        im2col_row(input, group, p, r, orow);
+    });
+}
+
+/// Serial extraction of ONE im2col patch row (f32, zero padding): the
+/// per-item unit behind both [`im2col_into`] and the group-flat fan-out
+/// in [`conv2d_with`].
+fn im2col_row(input: &Tensor, group: usize, p: Conv2dParams, r: usize, orow: &mut [f32]) {
+    im2col_row_any(&input.shape, &input.data, group, p, 0.0, r, orow);
+}
+
+/// The patch-row geometry shared by the f32 and u8 im2col paths: row `r`
+/// (decoding to (channel-in-group, ky, kx)) of `group` from an NCHW
+/// buffer, written into its `N*Ho*Wo`-long slice; out-of-image positions
+/// get `pad` (0.0 for f32, the zero point for u8). ONE implementation so
+/// the fake-quant simulation and the integer serving engine can never
+/// disagree on indexing.
+pub(crate) fn im2col_row_any<T: Copy>(
+    shape: &[usize],
+    data: &[T],
+    group: usize,
+    p: Conv2dParams,
+    pad: T,
+    r: usize,
+    orow: &mut [T],
+) {
+    let (n, c) = (shape[0], shape[1]);
+    let (h, w) = (shape[2], shape[3]);
+    let cg = c / p.groups;
+    let (ho, wo) = (out_size(h, p.k, p.stride, p.pad), out_size(w, p.k, p.stride, p.pad));
+    let c0 = group * cg;
+    let ci = r / (p.k * p.k);
+    let ky = (r / p.k) % p.k;
+    let kx = r % p.k;
+    let mut col = 0usize;
+    for ni in 0..n {
+        let base = ((ni * c + c0 + ci) * h) * w;
+        for oy in 0..ho {
+            let iy = (oy * p.stride + ky) as isize - p.pad as isize;
+            if iy < 0 || iy >= h as isize {
+                orow[col..col + wo].fill(pad);
+                col += wo;
+                continue;
+            }
+            let irow = base + iy as usize * w;
+            for ox in 0..wo {
+                let ix = (ox * p.stride + kx) as isize - p.pad as isize;
+                orow[col] = if ix >= 0 && ix < w as isize {
+                    data[irow + ix as usize]
+                } else {
+                    pad
+                };
+                col += 1;
             }
         }
-    });
+    }
 }
 
 /// conv2d: input [N,C,H,W], weight [O, C/g, k, k], bias [O] -> [N,O,Ho,Wo].
@@ -141,24 +170,36 @@ pub fn conv2d_with(
     let npos = n * ho * wo;
     let hw = ho * wo;
 
-    // pass 1: im2col of every group into the stacked workspace.
-    // groups>1: fan out across groups (inner im2col serializes);
-    // groups==1: the single "chunk" runs inline and im2col row-parallelizes.
+    // pass 1: im2col of every group into the stacked workspace, fanned
+    // out over the FLAT patch-row index (group-major: row r belongs to
+    // group r/patch), so any groups value saturates the cores
     Conv2dWorkspace::ensure(&mut ws.cols, p.groups * patch * npos);
     let input_ref = &*input;
-    parallel::par_chunks_mut(&mut ws.cols, patch * npos, 1, |g, chunk| {
-        im2col_into(input_ref, g, p, chunk);
+    let grain = ((1 << 16) / npos.max(1)).max(1);
+    parallel::par_chunks_mut(&mut ws.cols, npos, grain, |r, orow| {
+        im2col_row(input_ref, r / patch, p, r % patch, orow);
     });
 
-    // pass 2: per-group GEMM, [og, patch] @ [patch, npos], same fan-out rule
+    // pass 2: grouped GEMM over the FLAT output-channel index. A unit's
+    // row range may span group boundaries; it is cut at them so each
+    // segment multiplies against its own group's im2col block. Per-element
+    // accumulation stays ascending-k regardless of how rows are batched
+    // into matmul_into calls, so outputs are bit-identical across thread
+    // counts AND across the former per-group split.
     Conv2dWorkspace::ensure(&mut ws.gemm, o * npos);
     ws.gemm.fill(0.0); // matmul_into accumulates
     let cols_ref = &ws.cols;
-    parallel::par_chunks_mut(&mut ws.gemm, og * npos, 1, |g, chunk| {
-        let wslice = &weight.data[g * og * patch..(g + 1) * og * patch];
-        let cslice = &cols_ref[g * patch * npos..(g + 1) * patch * npos];
-        matmul_into(wslice, cslice, chunk, og, patch, npos);
-    });
+    parallel::par_grouped_rows_mut(
+        &mut ws.gemm,
+        npos,
+        og,
+        super::matmul::row_grain(patch, npos),
+        |g, rows, seg| {
+            let wslice = &weight.data[rows.start * patch..rows.end * patch];
+            let cslice = &cols_ref[g * patch * npos..(g + 1) * patch * npos];
+            matmul_into(wslice, cslice, seg, rows.end - rows.start, patch, npos);
+        },
+    );
 
     // pass 3: scatter [O, n*ho*wo] -> [n, O, ho, wo] + bias, parallel over
     // images (each image's [O, hw] block is one contiguous output chunk)
@@ -322,7 +363,9 @@ mod tests {
             &[4, 8, 16, 16],
             (0..4 * 8 * 256).map(|_| rng.normal_f32(0.0, 1.0)).collect(),
         );
-        for groups in [1usize, 8] {
+        // groups=2 exercises the flat two-level fan-out (row ranges cut at
+        // group boundaries); 8 the pure per-group split; 1 the plain GEMM
+        for groups in [1usize, 2, 8] {
             let weight = Tensor::from_vec(
                 &[8, 8 / groups, 3, 3],
                 (0..8 * (8 / groups) * 9).map(|_| rng.normal_f32(0.0, 0.5)).collect(),

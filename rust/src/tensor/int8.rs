@@ -73,7 +73,7 @@ impl U8Tensor {
 /// are cheaper than f32 FMA, so the grain sits above the f32 kernel's).
 const MIN_PAR_MACS: usize = 1 << 18;
 
-fn row_grain(k: usize, n: usize) -> usize {
+pub(crate) fn row_grain(k: usize, n: usize) -> usize {
     (MIN_PAR_MACS / (k * n).max(1)).max(1)
 }
 

@@ -21,8 +21,10 @@ const KB: usize = 64;
 /// Don't spawn a worker for less than ~128k flops of row work.
 const MIN_PAR_FLOPS: usize = 1 << 17;
 
-/// Rows per thread below which parallelism isn't worth the spawn.
-fn row_grain(k: usize, n: usize) -> usize {
+/// Rows per thread below which parallelism isn't worth the dispatch
+/// (shared with the conv fan-out, which parallelizes over the same
+/// output rows).
+pub(crate) fn row_grain(k: usize, n: usize) -> usize {
     (MIN_PAR_FLOPS / (2 * k * n).max(1)).max(1)
 }
 

@@ -1,29 +1,53 @@
-//! Zero-dependency data parallelism over `std::thread::scope`.
+//! Zero-dependency data parallelism over a persistent worker pool.
 //!
 //! The AdaRound hot paths (GEMM rows, conv groups, calibration chunks,
-//! per-group rounding) are embarrassingly parallel, so this module provides
-//! exactly one pattern: split a range of independent work items into
-//! contiguous per-thread spans and run them on scoped threads.
+//! per-group rounding, the integer serving kernels) are embarrassingly
+//! parallel, so this module provides exactly one pattern: split a range of
+//! independent work items into contiguous per-thread spans and fan them
+//! out to long-lived worker threads.
 //!
 //! **Determinism.** Work is assigned by *item index* and every item is
 //! computed by the same serial code regardless of the thread count, so
 //! results are bit-identical for `PALLAS_THREADS=1` and `=N` (verified by
-//! the `*_bit_identical_across_threads` tests in tensor/ and adaround/).
-//! No atomics, no locks, no reduction-order dependence: threads only ever
-//! write disjoint `&mut` sub-slices handed out via `split_at_mut`.
+//! the `*_bit_identical_across_threads` tests in tensor/ and adaround/,
+//! and end-to-end by `rust/tests/pool_serving.rs`). No reduction-order
+//! dependence: units only ever write disjoint sub-slices reconstructed
+//! from a shared base pointer.
 //!
 //! **Thread count.** `PALLAS_THREADS` (clamped to [1, 256]) wins; otherwise
-//! `std::thread::available_parallelism()`. Workers run their items with the
+//! `std::thread::available_parallelism()`. Workers run their units with the
 //! count forced to 1, so nested parallel calls (e.g. the row-parallel
-//! matmul inside a group-parallel conv) never oversubscribe.
+//! matmul inside a row-flat conv) never resubmit to the pool and never
+//! oversubscribe.
 //!
-//! Threads are spawned per call rather than kept in a static pool: spawn
-//! cost (~10-40us) is amortized by the grain thresholds at each call site,
-//! and scoped threads let workers borrow the caller's slices safely.
+//! **The pool.** Workers are spawned lazily on first parallel use and then
+//! live for the process lifetime, parked on a condition variable between
+//! calls. Replacing the former per-call `std::thread::scope` spawns
+//! (~10-40us each) makes the many-small-layer serving regime and the
+//! optimizer's per-step fan-outs pay only a queue push + unpark (~1us).
+//! The pool grows on demand up to [`MAX_THREADS`] - 1 workers (the
+//! submitting thread always executes the first unit itself) and is shared
+//! by every submitting thread — e.g. all shard workers of a
+//! [`crate::serve::Batcher`] — with FIFO unit dispatch.
+//!
+//! ```
+//! use adaround::util::parallel;
+//!
+//! let mut data = vec![0u32; 1024];
+//! parallel::par_chunks_mut(&mut data, 256, 1, |chunk_idx, chunk| {
+//!     for v in chunk.iter_mut() {
+//!         *v = chunk_idx as u32; // each unit owns a disjoint span
+//!     }
+//! });
+//! assert_eq!(data[0], 0);
+//! assert_eq!(data[1023], 3);
+//! ```
 
 use std::cell::Cell;
+use std::collections::VecDeque;
 use std::ops::Range;
-use std::sync::OnceLock;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 /// Hard cap on worker threads (sanity bound for absurd env values).
 pub const MAX_THREADS: usize = 256;
@@ -55,7 +79,8 @@ pub fn num_threads() -> usize {
 
 /// Run `f` with the thread count forced to `n` on this thread (restored on
 /// exit, panic-safe). Used by tests to compare thread counts within one
-/// process, and internally to serialize nested parallelism in workers.
+/// process, by the serving shards to divide the machine, and internally to
+/// serialize nested parallelism in pool workers.
 pub fn with_threads<R>(n: usize, f: impl FnOnce() -> R) -> R {
     struct Guard(Option<usize>);
     impl Drop for Guard {
@@ -88,8 +113,221 @@ pub fn split_ranges(n: usize, parts: usize) -> Vec<Range<usize>> {
     out
 }
 
+// ---------------------------------------------------------------------------
+// The persistent pool
+// ---------------------------------------------------------------------------
+
+/// One fan-out in flight: the type-erased task closure plus the
+/// bookkeeping that lets the submitting thread block until every unit ran.
+struct CallShared {
+    /// The submitter's task closure with its lifetime erased so it can sit
+    /// in the shared queue. Sound because [`run_on_pool`] never returns
+    /// (not even by unwinding) until `remaining` reaches zero, and workers
+    /// never touch this reference after their decrement.
+    task: &'static (dyn Fn(usize) + Sync),
+    /// Units still running on workers (the submitter's own unit 0 is not
+    /// counted). The final `AcqRel` decrement publishes every worker's
+    /// writes to the submitter's `Acquire` read.
+    remaining: AtomicUsize,
+    /// The submitting thread, unparked by whichever worker finishes last.
+    caller: std::thread::Thread,
+    /// First worker panic, re-thrown on the submitter after the wait.
+    panic: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+}
+
+/// One queue entry: unit `idx` of `call`.
+struct Unit {
+    call: Arc<CallShared>,
+    idx: usize,
+}
+
+struct Pool {
+    queue: Mutex<VecDeque<Unit>>,
+    available: Condvar,
+    /// Workers spawned so far (atomic mirror for the lock-free hot-path
+    /// check in [`Pool::ensure_workers`]); grows on demand, never shrinks.
+    census: AtomicUsize,
+    /// Serializes growth so two submitters can't double-spawn.
+    grow: Mutex<()>,
+}
+
+fn pool() -> &'static Pool {
+    static POOL: OnceLock<Pool> = OnceLock::new();
+    POOL.get_or_init(|| Pool {
+        queue: Mutex::new(VecDeque::new()),
+        available: Condvar::new(),
+        census: AtomicUsize::new(0),
+        grow: Mutex::new(()),
+    })
+}
+
+/// Number of pool workers spawned so far. Purely observational (tests and
+/// diagnostics); 0 until the first parallel call actually fans out.
+pub fn pool_size() -> usize {
+    pool().census.load(Ordering::Relaxed)
+}
+
+impl Pool {
+    /// Ensure at least `want` workers exist. Workers are shared by all
+    /// concurrent submitters, so this is a capacity floor, not a
+    /// reservation: units queue FIFO and drain as workers free up. Once
+    /// the pool is grown, this is a single relaxed load — no lock on the
+    /// dispatch hot path.
+    fn ensure_workers(&'static self, want: usize) {
+        let want = want.min(MAX_THREADS - 1);
+        if self.census.load(Ordering::Relaxed) >= want {
+            return;
+        }
+        let _g = self.grow.lock().unwrap();
+        let mut n = self.census.load(Ordering::Relaxed);
+        while n < want {
+            std::thread::Builder::new()
+                .name(format!("pallas-worker-{n}"))
+                .spawn(move || worker_loop(self))
+                .expect("spawn pool worker");
+            n += 1;
+            self.census.store(n, Ordering::Relaxed);
+        }
+    }
+
+    fn submit(&'static self, call: &Arc<CallShared>, units: Range<usize>) {
+        // size the pool for AGGREGATE demand, not this one call: with
+        // several concurrent submitters (e.g. serving shards each running
+        // under a slice of the machine) each call's own fan-out is small,
+        // but together they need the whole machine's worth of workers
+        let k = units.len();
+        self.ensure_workers(k.max(env_threads().saturating_sub(1)));
+        let mut q = self.queue.lock().unwrap();
+        for idx in units {
+            q.push_back(Unit { call: Arc::clone(call), idx });
+        }
+        drop(q);
+        // wake exactly as many workers as there are new units
+        for _ in 0..k {
+            self.available.notify_one();
+        }
+    }
+}
+
+/// Execute one queued unit (on a worker or a helping submitter): run the
+/// task with nested parallelism forced serial, capture a panic into the
+/// call, then decrement. The decrement must be the unit's LAST touch of
+/// `call.task` — once `remaining` hits zero the submitter may return and
+/// invalidate the borrow behind it.
+fn run_unit(unit: &Unit) {
+    let task = unit.call.task;
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        with_threads(1, || task(unit.idx));
+    }));
+    if let Err(p) = result {
+        let mut slot = unit.call.panic.lock().unwrap();
+        if slot.is_none() {
+            *slot = Some(p);
+        }
+    }
+    if unit.call.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+        unit.call.caller.unpark();
+    }
+}
+
+fn worker_loop(pool: &'static Pool) {
+    loop {
+        let unit = {
+            let mut q = pool.queue.lock().unwrap();
+            loop {
+                if let Some(u) = q.pop_front() {
+                    break u;
+                }
+                q = pool.available.wait(q).unwrap();
+            }
+        };
+        run_unit(&unit);
+    }
+}
+
+/// Erase the task closure's lifetime so it can be shared with pool
+/// workers.
+///
+/// # Safety
+/// The caller must not let the closure (or anything it borrows) die until
+/// every worker has finished with it — [`run_on_pool`] guarantees this by
+/// blocking until `remaining == 0` on every exit path, unwinding included.
+unsafe fn erase_lifetime<'a>(
+    f: &'a (dyn Fn(usize) + Sync + 'a),
+) -> &'static (dyn Fn(usize) + Sync + 'static) {
+    std::mem::transmute::<&'a (dyn Fn(usize) + Sync + 'a), &'static (dyn Fn(usize) + Sync)>(f)
+}
+
+/// Run `n` task units `f(0) .. f(n-1)` across the persistent pool. The
+/// submitting thread executes unit 0 inline (thread count forced to 1,
+/// exactly like the workers), then parks until the rest finish. Panics
+/// from any unit are re-thrown here — after every other unit has stopped,
+/// so borrows stay valid throughout.
+fn run_on_pool(n: usize, f: &(dyn Fn(usize) + Sync)) {
+    if n <= 1 {
+        with_threads(1, || f(0));
+        return;
+    }
+    let call = Arc::new(CallShared {
+        // SAFETY: this function blocks until `remaining == 0` before
+        // returning or unwinding, so the erased borrow outlives all uses.
+        task: unsafe { erase_lifetime(f) },
+        remaining: AtomicUsize::new(n - 1),
+        caller: std::thread::current(),
+        panic: Mutex::new(None),
+    });
+    pool().submit(&call, 1..n);
+    let own = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        with_threads(1, || f(0));
+    }));
+    // wait for the workers, HELPING with this call's own still-queued
+    // units instead of idling. Self-help (never foreign units — those
+    // would head-of-line-block this call behind another call's long
+    // work) guarantees progress even in the pathological case where
+    // every worker is itself parked as a nested submitter (a unit that
+    // re-raises its thread count via `with_threads`): each submitter can
+    // always drain its own queued units itself.
+    while call.remaining.load(Ordering::Acquire) != 0 {
+        let own_unit = {
+            let mut q = pool().queue.lock().unwrap();
+            let pos = q.iter().position(|u| Arc::ptr_eq(&u.call, &call));
+            pos.and_then(|i| q.remove(i))
+        };
+        match own_unit {
+            Some(u) => run_unit(&u),
+            None => std::thread::park(),
+        }
+    }
+    if let Err(p) = own {
+        std::panic::resume_unwind(p);
+    }
+    if let Some(p) = call.panic.lock().unwrap().take() {
+        std::panic::resume_unwind(p);
+    }
+}
+
+/// Base pointer handed across threads; every unit reconstructs only its
+/// own disjoint span from it (enforced by the range arithmetic at the two
+/// call sites below).
+struct SendPtr<T>(*mut T);
+
+impl<T> Clone for SendPtr<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T> Copy for SendPtr<T> {}
+// SAFETY: only used to rebuild disjoint `&mut` spans on units whose
+// element type is `Send` (bounds at the call sites).
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+// ---------------------------------------------------------------------------
+// Public fan-out entry points
+// ---------------------------------------------------------------------------
+
 /// Parallel split of `data` into per-thread spans of whole chunks: each
-/// thread receives ONE contiguous range of chunk indices plus the matching
+/// unit receives ONE contiguous range of chunk indices plus the matching
 /// sub-slice, and `f(range, span)` processes it serially. This is the
 /// primitive behind the K-blocked row-parallel GEMM, where a thread wants
 /// its whole row range at once (to reuse cache blocks across rows) rather
@@ -97,7 +335,9 @@ pub fn split_ranges(n: usize, parts: usize) -> Vec<Range<usize>> {
 ///
 /// `grain` is the minimum number of chunks per thread — below it the call
 /// degrades to `f(0..nchunks, data)` on the caller thread (allocating
-/// nothing), so tiny inputs never pay spawn cost.
+/// nothing and touching no pool state), so tiny inputs stay serial and the
+/// optimizer's zero-allocation contract (`rust/tests/perf_invariants.rs`)
+/// holds on the `PALLAS_THREADS=1` path.
 ///
 /// Panics if `data.len()` is not a multiple of `chunk`.
 pub fn par_ranges_mut<T, F>(data: &mut [T], chunk: usize, grain: usize, f: F)
@@ -115,25 +355,23 @@ where
         return;
     }
     let ranges = split_ranges(nchunks, t);
-    // main thread takes ranges[0]; workers get the rest
-    let (main_part, mut rest) = data.split_at_mut(ranges[0].end * chunk);
-    std::thread::scope(|s| {
-        for r in &ranges[1..] {
-            let len = (r.end - r.start) * chunk;
-            let (part, tail) = std::mem::take(&mut rest).split_at_mut(len);
-            rest = tail;
-            let range = r.clone();
-            let fr = &f;
-            s.spawn(move || with_threads(1, || fr(range, part)));
-        }
-        let r0 = ranges[0].clone();
-        with_threads(1, || f(r0, main_part));
+    let base = SendPtr(data.as_mut_ptr());
+    let ranges_ref = &ranges;
+    let fr = &f;
+    run_on_pool(ranges.len(), &move |ti: usize| {
+        let r = ranges_ref[ti].clone();
+        // SAFETY: `split_ranges` yields disjoint, in-bounds chunk ranges,
+        // so every unit's span is a disjoint sub-slice of `data`.
+        let span = unsafe {
+            std::slice::from_raw_parts_mut(base.0.add(r.start * chunk), (r.end - r.start) * chunk)
+        };
+        fr(r, span);
     });
 }
 
 /// Parallel iteration over the equal-size chunks of `data`: calls
 /// `f(chunk_index, chunk)` for every `chunk`-sized piece, fanning
-/// contiguous runs of chunks out to worker threads (see [`par_ranges_mut`]
+/// contiguous runs of chunks out to pool workers (see [`par_ranges_mut`]
 /// for grain semantics and the determinism contract).
 pub fn par_chunks_mut<T, F>(data: &mut [T], chunk: usize, grain: usize, f: F)
 where
@@ -143,6 +381,36 @@ where
     par_ranges_mut(data, chunk, grain, |range, span| {
         for (j, c) in span.chunks_mut(chunk).enumerate() {
             f(range.start + j, c);
+        }
+    });
+}
+
+/// [`par_ranges_mut`] specialization for GROUPED row work, the flat-index
+/// fan-out of the grouped convolutions: rows belong to consecutive groups
+/// of `rows_per_group`, a unit's contiguous row range is cut at group
+/// boundaries, and `f(group, rows, seg)` runs once per segment with
+/// global row indices and the matching sub-span. Keeping the cut
+/// arithmetic here means the f32 and i8 conv paths can never diverge on
+/// it. Grain/determinism semantics as in [`par_ranges_mut`].
+pub fn par_grouped_rows_mut<T, F>(
+    data: &mut [T],
+    chunk: usize,
+    rows_per_group: usize,
+    grain: usize,
+    f: F,
+) where
+    T: Send,
+    F: Fn(usize, Range<usize>, &mut [T]) + Sync,
+{
+    assert!(rows_per_group > 0, "rows_per_group must be positive");
+    par_ranges_mut(data, chunk, grain, |rows, span| {
+        let mut r0 = rows.start;
+        while r0 < rows.end {
+            let g = r0 / rows_per_group;
+            let r1 = ((g + 1) * rows_per_group).min(rows.end);
+            let seg = &mut span[(r0 - rows.start) * chunk..(r1 - rows.start) * chunk];
+            f(g, r0..r1, seg);
+            r0 = r1;
         }
     });
 }
@@ -175,19 +443,21 @@ where
         return;
     }
     let ranges = split_ranges(nchunks, t);
-    let (a_main, mut a_rest) = a.split_at_mut(ranges[0].end * ca);
-    let (b_main, mut b_rest) = b.split_at_mut(ranges[0].end * cb);
-    std::thread::scope(|s| {
-        for r in &ranges[1..] {
-            let (ap, at) = std::mem::take(&mut a_rest).split_at_mut((r.end - r.start) * ca);
-            let (bp, bt) = std::mem::take(&mut b_rest).split_at_mut((r.end - r.start) * cb);
-            a_rest = at;
-            b_rest = bt;
-            let start = r.start;
-            let sr = &serial;
-            s.spawn(move || with_threads(1, || sr(start, ap, bp)));
-        }
-        with_threads(1, || serial(0, a_main, b_main));
+    let abase = SendPtr(a.as_mut_ptr());
+    let bbase = SendPtr(b.as_mut_ptr());
+    let ranges_ref = &ranges;
+    let sr = &serial;
+    run_on_pool(ranges.len(), &move |ti: usize| {
+        let r = ranges_ref[ti].clone();
+        // SAFETY: disjoint in-bounds ranges, as in `par_ranges_mut`, for
+        // both slices in lock-step.
+        let aspan = unsafe {
+            std::slice::from_raw_parts_mut(abase.0.add(r.start * ca), (r.end - r.start) * ca)
+        };
+        let bspan = unsafe {
+            std::slice::from_raw_parts_mut(bbase.0.add(r.start * cb), (r.end - r.start) * cb)
+        };
+        sr(r.start, aspan, bspan);
     });
 }
 
@@ -341,5 +611,69 @@ mod tests {
         let mut data = vec![0u8; 6];
         par_chunks_mut(&mut data, 2, 100, |_, c| c.iter_mut().for_each(|v| *v = 1));
         assert!(data.iter().all(|&v| v == 1));
+    }
+
+    #[test]
+    fn pool_workers_are_reused_across_calls() {
+        use std::collections::HashSet;
+        use std::thread::ThreadId;
+        // 20 fan-outs of 4 units each: per-call spawning would mint a
+        // fresh thread per spawned unit (up to 60 distinct ids); a
+        // persistent pool can only ever run units on its named workers
+        // (or the submitter itself), so the distinct pool-worker count is
+        // bounded by the pool census — an invariant that stays true
+        // however concurrently-running tests grow the shared pool
+        let on_pool_worker = || {
+            std::thread::current()
+                .name()
+                .is_some_and(|n| n.starts_with("pallas-worker"))
+        };
+        let mut seen: HashSet<ThreadId> = HashSet::new();
+        for _ in 0..20 {
+            let ids = with_threads(4, || {
+                par_map(4, 1, |_| (std::thread::current().id(), on_pool_worker()))
+            });
+            seen.extend(ids.into_iter().filter(|(_, pw)| *pw).map(|(id, _)| id));
+        }
+        assert!(pool_size() >= 1);
+        assert!(
+            seen.len() <= pool_size(),
+            "{} distinct worker threads from a pool of {} — pool not persistent?",
+            seen.len(),
+            pool_size()
+        );
+    }
+
+    #[test]
+    fn worker_panic_propagates_and_pool_survives() {
+        let boom = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut data = vec![0u8; 8];
+            with_threads(4, || {
+                par_chunks_mut(&mut data, 1, 1, |i, _| {
+                    assert!(i != 5, "intentional test panic on item 5");
+                });
+            });
+        }));
+        assert!(boom.is_err(), "panic in a unit must reach the submitter");
+        // the pool must keep serving after a unit panicked
+        let got = with_threads(4, || par_map(8, 1, |i| i + 1));
+        assert_eq!(got, (1..=8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn concurrent_submitters_share_the_pool() {
+        // several client threads fanning out at once (the sharded-serving
+        // shape): every call must see exactly its own results
+        let handles: Vec<_> = (0..4)
+            .map(|c| {
+                std::thread::spawn(move || {
+                    with_threads(3, || par_map(30, 1, |i| c * 1000 + i))
+                })
+            })
+            .collect();
+        for (c, h) in handles.into_iter().enumerate() {
+            let got = h.join().expect("client thread");
+            assert_eq!(got, (0..30).map(|i| c * 1000 + i).collect::<Vec<_>>());
+        }
     }
 }

@@ -1,0 +1,215 @@
+//! The pool + sharding determinism contract, end to end: serving results
+//! and rounding decisions must be bit-identical for every
+//! (`PALLAS_THREADS`, shard-count) combination, and the sharded batcher
+//! must survive concurrent submitters and drain cleanly on shutdown.
+//! Self-contained (synthetic model + data; no `make artifacts`).
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use adaround::coordinator::{Method, Pipeline, PipelineConfig, QuantizedModel};
+use adaround::data::synthetic_stripes;
+use adaround::nn::Model;
+use adaround::serve::{BatchPolicy, Batcher, ServeEngine};
+use adaround::tensor::Tensor;
+use adaround::util::parallel::with_threads;
+use adaround::util::{Json, Rng};
+
+/// Tiny conv classifier: conv(+relu), residual add, avgpool, gpool,
+/// dense — every op class the engine lowers for classifiers.
+fn tiny_model(rng: &mut Rng) -> Model {
+    let ir = r#"{"task":"cls","ir":[
+      {"id":"in","op":"input","inputs":[]},
+      {"id":"c1","op":"conv","inputs":["in"],"cin":3,"cout":8,
+       "k":3,"stride":1,"pad":1,"groups":1,"relu":true},
+      {"id":"c2","op":"conv","inputs":["c1"],"cin":8,"cout":8,
+       "k":3,"stride":1,"pad":1,"groups":2,"relu":false},
+      {"id":"a1","op":"add","inputs":["c2","c1"],"relu":true},
+      {"id":"p1","op":"avgpool","inputs":["a1"],"k":2,"stride":2},
+      {"id":"g1","op":"gpool","inputs":["p1"]},
+      {"id":"d1","op":"dense","inputs":["g1"],"cin":8,"cout":3,"relu":false}
+    ]}"#;
+    let entry = Json::parse(ir).unwrap();
+    let mut w = BTreeMap::new();
+    let mut tensor = |shape: &[usize], std: f32, rng: &mut Rng| {
+        let n: usize = shape.iter().product();
+        Tensor::from_vec(shape, (0..n).map(|_| rng.normal_f32(0.0, std)).collect())
+    };
+    w.insert("c1.w".into(), tensor(&[8, 3, 3, 3], 0.25, rng));
+    w.insert("c1.b".into(), tensor(&[8], 0.05, rng));
+    // groups=2: cin/g = 4 — exercises the flat two-level conv fan-out
+    w.insert("c2.w".into(), tensor(&[8, 4, 3, 3], 0.12, rng));
+    w.insert("c2.b".into(), tensor(&[8], 0.05, rng));
+    w.insert("d1.w".into(), tensor(&[3, 8], 0.4, rng));
+    w.insert("d1.b".into(), tensor(&[3], 0.05, rng));
+    Model::from_manifest("poolserve", &entry, w).unwrap()
+}
+
+fn quantize_8_8(model: &Model, calib: &Tensor, method: Method) -> QuantizedModel {
+    let cfg = PipelineConfig {
+        method,
+        bits: 8,
+        per_channel: true,
+        act_bits: Some(8),
+        calib_n: calib.shape[0],
+        ..Default::default()
+    };
+    Pipeline::new(model, cfg, None).quantize(calib, &mut Rng::new(7)).unwrap()
+}
+
+/// Split a [N,C,H,W] batch into per-image tensors.
+fn images_of(x: &Tensor) -> Vec<Tensor> {
+    let per: usize = x.shape[1..].iter().product();
+    (0..x.shape[0])
+        .map(|i| Tensor::from_vec(&x.shape[1..], x.data[i * per..(i + 1) * per].to_vec()))
+        .collect()
+}
+
+#[test]
+fn serving_bit_identical_across_threads_and_shards() {
+    let mut rng = Rng::new(101);
+    let model = tiny_model(&mut rng);
+    let (calib, _) = synthetic_stripes(48, 3, 16, &mut rng);
+    let (val, _) = synthetic_stripes(24, 3, 16, &mut rng);
+    let qm = quantize_8_8(&model, &calib, Method::Nearest);
+    let images = images_of(&val);
+
+    let serve_all = |threads: usize, shards: usize| -> Vec<Vec<f32>> {
+        with_threads(threads, || {
+            let engine = ServeEngine::compile(&model, &qm, &[3, 16, 16]).unwrap();
+            let batcher = Batcher::new(
+                engine,
+                BatchPolicy {
+                    max_batch: 5, // forces several partial batches per run
+                    max_wait: Duration::from_millis(2),
+                    shards,
+                },
+            );
+            let rxs: Vec<_> = images
+                .iter()
+                .map(|img| batcher.submit(img.clone()).expect("batcher alive"))
+                .collect();
+            let rows: Vec<Vec<f32>> = rxs
+                .into_iter()
+                .map(|rx| rx.recv().expect("response"))
+                .collect();
+            batcher.shutdown();
+            rows
+        })
+    };
+
+    let reference = serve_all(1, 1);
+    assert_eq!(reference.len(), images.len());
+    for threads in [1usize, 2, 8] {
+        for shards in [1usize, 4] {
+            let got = serve_all(threads, shards);
+            assert_eq!(
+                got, reference,
+                "serving differs at threads={threads} shards={shards}"
+            );
+        }
+    }
+}
+
+#[test]
+fn rounding_masks_bit_identical_across_threads() {
+    // stochastic rounding goes through the per-row rng forks of
+    // util::parallel::par_map_rng — the rounding-side half of the pool
+    // determinism contract
+    let mut rng = Rng::new(202);
+    let model = tiny_model(&mut rng);
+    let (calib, _) = synthetic_stripes(32, 3, 16, &mut rng);
+    let run = |threads: usize| {
+        with_threads(threads, || quantize_8_8(&model, &calib, Method::Stochastic))
+    };
+    let reference = run(1);
+    for threads in [2usize, 8] {
+        let got = run(threads);
+        for (id, w) in &reference.weight_overrides {
+            let other = got.weight_overrides.get(id).expect("same layer set");
+            assert_eq!(
+                w.data, other.data,
+                "rounded weights for {id} differ at threads={threads}"
+            );
+        }
+    }
+}
+
+#[test]
+fn batcher_stress_concurrent_submitters_no_loss() {
+    let mut rng = Rng::new(303);
+    let model = tiny_model(&mut rng);
+    let (calib, _) = synthetic_stripes(32, 3, 16, &mut rng);
+    let (val, _) = synthetic_stripes(8, 3, 16, &mut rng);
+    let qm = quantize_8_8(&model, &calib, Method::Nearest);
+    let images = images_of(&val);
+
+    // oracle rows per pool image (per-image outputs are batch-invariant)
+    let mut oracle_engine = ServeEngine::compile(&model, &qm, &[3, 16, 16]).unwrap();
+    let oracle: Vec<Vec<f32>> = images
+        .iter()
+        .map(|img| {
+            let mut shape = vec![1usize];
+            shape.extend_from_slice(&img.shape);
+            let out = oracle_engine.forward(&Tensor::from_vec(&shape, img.data.clone()));
+            out.data
+        })
+        .collect();
+
+    let engine = ServeEngine::compile(&model, &qm, &[3, 16, 16]).unwrap();
+    let batcher = Batcher::new(
+        engine,
+        BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1), shards: 4 },
+    );
+    let n_clients = 6usize;
+    let per_client = 40usize;
+    std::thread::scope(|s| {
+        for c in 0..n_clients {
+            let h = batcher.handle();
+            let images = &images;
+            let oracle = &oracle;
+            s.spawn(move || {
+                let mut pending = Vec::with_capacity(per_client);
+                for i in 0..per_client {
+                    let idx = (c * per_client + i) % images.len();
+                    let rx = h.submit(images[idx].clone()).expect("batcher alive");
+                    pending.push((idx, rx));
+                }
+                for (idx, rx) in pending {
+                    let row = rx.recv().expect("no request may be lost");
+                    assert_eq!(row, oracle[idx], "wrong answer for pool image {idx}");
+                }
+            });
+        }
+    });
+    batcher.shutdown();
+}
+
+#[test]
+fn shutdown_drains_in_flight_requests_without_loss() {
+    let mut rng = Rng::new(404);
+    let model = tiny_model(&mut rng);
+    let (calib, _) = synthetic_stripes(32, 3, 16, &mut rng);
+    let (val, _) = synthetic_stripes(4, 3, 16, &mut rng);
+    let qm = quantize_8_8(&model, &calib, Method::Nearest);
+    let images = images_of(&val);
+
+    let engine = ServeEngine::compile(&model, &qm, &[3, 16, 16]).unwrap();
+    let batcher = Batcher::new(
+        engine,
+        // long max_wait: shutdown must not wait out the batching window
+        // per batch, it must just drain
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(50), shards: 2 },
+    );
+    // flood the queue, then shut down immediately with most requests
+    // still in flight
+    let rxs: Vec<_> = (0..64)
+        .map(|i| batcher.submit(images[i % images.len()].clone()).expect("batcher alive"))
+        .collect();
+    batcher.shutdown(); // blocks until the queue is drained
+    let classes = 3usize;
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let row = rx.recv().unwrap_or_else(|_| panic!("request {i} lost in shutdown"));
+        assert_eq!(row.len(), classes);
+    }
+}

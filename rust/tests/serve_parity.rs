@@ -202,7 +202,7 @@ fn batcher_coalesces_and_answers_correctly() {
     let engine = ServeEngine::compile(&model, &qm, &[3, 16, 16]).unwrap();
     let batcher = Batcher::new(
         engine,
-        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(20) },
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(20), ..Default::default() },
     );
     let per: usize = val.shape[1..].iter().product();
     let rxs: Vec<_> = (0..val.shape[0])
