@@ -1,65 +1,16 @@
-//! Pipeline-level benchmarks: end-to-end PTQ wall-clock per method and the
-//! native-vs-PJRT driver and engine comparisons (EXPERIMENTS.md §Perf).
+//! Pipeline-level benchmark: end-to-end `quantize` wall-clock and
+//! calibration layer-forward counts on a deep synthetic model, streaming
+//! (O(L)) vs full-replay (O(L²)) sampler, per method. Self-contained —
+//! no `make artifacts` — and doubles as an equivalence gate: it fails if
+//! the two samplers produce different weights.
 //!
 //!     cargo bench --bench pipeline
+//!
+//! Emits `BENCH_pipeline.json` for `adaround bench-diff` (the CI perf
+//! gate compares it against the committed `BENCH_baseline_pipeline.json`).
 
-use adaround::coordinator::{Method, Pipeline, PipelineConfig};
-use adaround::nn::ForwardOptions;
-use adaround::runtime::Runtime;
-use adaround::tensor::Tensor;
-use adaround::util::{Rng, Stopwatch};
+use adaround::cli::quantize::{run_quantize_bench, QuantizeBenchOpts};
 
 fn main() -> anyhow::Result<()> {
-    let dir = adaround::artifacts_dir();
-    if !std::path::Path::new(&dir).join("manifest.json").exists() {
-        println!("pipeline bench requires `make artifacts`");
-        return Ok(());
-    }
-    let rt = Runtime::new(&dir)?;
-    let model = rt.manifest.load_model("micro18")?;
-    let (calib, _) = rt.manifest.load_dataset("calib_gabor")?;
-    println!("== pipeline benchmarks (micro18, 2-bit, calib 256) ==");
-
-    // full-model quantization wall-clock per method (one run each)
-    for method in [
-        Method::Nearest,
-        Method::BiasCorr,
-        Method::Omse,
-        Method::Ocs,
-        Method::Hopfield,
-        Method::Ste,
-        Method::AdaRound,
-        Method::AdaRoundPjrt,
-        Method::LocalQuboCem,
-    ] {
-        let cfg = PipelineConfig { method, bits: 2, ..Default::default() };
-        let pipe = Pipeline::new(&model, cfg, Some(&rt));
-        let sw = Stopwatch::start();
-        let qm = pipe.quantize(&calib, &mut Rng::new(1))?;
-        println!(
-            "{:<16} {:>8.1}s   (sum recon-mse {:.3e} -> {:.3e})",
-            method.name(),
-            sw.secs(),
-            qm.total_mse_before(),
-            qm.total_mse_after()
-        );
-    }
-
-    // inference engine throughput (native graph executor)
-    let (vx, _) = rt.manifest.load_dataset("val_gabor")?;
-    let per: usize = vx.shape[1..].iter().product();
-    let batch = 64;
-    let xb = Tensor::from_vec(&[batch, 3, 32, 32], vx.data[..batch * per].to_vec());
-    let sw = Stopwatch::start();
-    let reps = 20;
-    for _ in 0..reps {
-        std::hint::black_box(model.forward(&xb, &ForwardOptions::default()));
-    }
-    let s = sw.secs() / reps as f64;
-    println!(
-        "native inference  {:>8.1} ms/batch-of-{batch}  ({:.0} img/s)",
-        s * 1e3,
-        batch as f64 / s
-    );
-    Ok(())
+    run_quantize_bench(&QuantizeBenchOpts::default())
 }

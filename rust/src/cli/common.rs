@@ -88,6 +88,9 @@ pub fn config_from_args(args: &Args) -> Result<PipelineConfig> {
     if args.bool("pre-cle") {
         cfg.pre_cle = true;
     }
+    if args.bool("replay-sampler") {
+        cfg.replay_sampler = true; // O(L²) reference path (A/B verification)
+    }
     Ok(cfg)
 }
 

@@ -77,11 +77,7 @@ fn fig1(ctx: &Ctx, args: &Args) -> Result<()> {
         let wq = fake_quant(&w, &mask, &grid);
         let mut ov = std::collections::BTreeMap::new();
         ov.insert(node.id.clone(), Tensor::from_vec(&w4.shape, wq.data));
-        let opts = ForwardOptions {
-            weight_overrides: Some(&ov),
-            bias_overrides: None,
-            act_quant: None,
-        };
+        let opts = ForwardOptions { weight_overrides: Some(&ov), ..Default::default() };
         let acc = ctx.metric(&model, &val.0, &val.1, &opts);
         println!("{cost:.6e},{acc:.2}");
         costs.push(cost);

@@ -8,6 +8,7 @@
 //!   fig <1|2|3|4>          regenerate a paper figure's data
 //!   bench-engine           native vs PJRT inference engine comparison
 //!   serve-bench            f32 fake-quant vs int8 serving engine
+//!   quantize-bench         streaming vs replay calibration pipeline bench
 //!   bench-diff             compare two BENCH_*.json files (CI perf gate)
 
 pub mod common;
@@ -33,6 +34,8 @@ USAGE:
   adaround bench-engine --model micro18         native vs PJRT engine
   adaround serve-bench --model M [--quantized B.qtz] [--shards N]
                     int8 engine + sharded batcher (docs/SERVING.md)
+  adaround quantize-bench [--depth D] [--calib-n N] [--iters I]
+                    O(L) streaming vs O(L²) replay calibration pipeline
   adaround bench-diff A.json B.json [--tol PCT] perf regression gate (CI)
 
 COMMON FLAGS:
@@ -50,6 +53,8 @@ COMMON FLAGS:
   --seeds S         seeds per table cell
   --val-n V         validation images per evaluation (default 512)
   --first-layer     quantize only the first layer
+  --replay-sampler  O(L²) full-replay calibration sampler (A/B reference;
+                    default is the bit-identical O(L) streaming store)
 ";
 
 pub fn run(args: Args) -> Result<()> {
@@ -60,6 +65,7 @@ pub fn run(args: Args) -> Result<()> {
         "table" => tables::cmd_table(&args),
         "fig" => figs::cmd_fig(&args),
         "bench-engine" => quantize::cmd_bench_engine(&args),
+        "quantize-bench" => quantize::cmd_quantize_bench(&args),
         "serve-bench" => serve::cmd_serve_bench(&args),
         "bench-diff" => serve::cmd_bench_diff(&args),
         "sweep" => quantize::cmd_sweep(&args),

@@ -1,12 +1,16 @@
-//! `quantize`, `eval` and `bench-engine` subcommands.
+//! `quantize`, `eval`, `bench-engine` and `quantize-bench` subcommands.
 
-use anyhow::Result;
+use std::collections::BTreeMap;
 
-use crate::coordinator::Pipeline;
-use crate::nn::ForwardOptions;
+use anyhow::{bail, Result};
+
+use crate::adaround::AdaRoundConfig;
+use crate::coordinator::{Method, Pipeline, PipelineConfig};
+use crate::data::synthetic_stripes;
+use crate::nn::{ForwardOptions, Model};
 use crate::tensor::{im2col, Conv2dParams, Tensor};
 use crate::util::cli::Args;
-use crate::util::{Rng, Stopwatch};
+use crate::util::{parallel, Json, Rng, Stopwatch};
 
 use super::common::{config_from_args, first_layer, Ctx};
 
@@ -71,7 +75,9 @@ pub fn cmd_quantize(args: &Args) -> Result<()> {
     }
     println!(
         "fp32 {fp:.2}%  ->  quantized {acc:.2}%   (quantize {q_secs:.1}s, \
-         {} executables compiled)",
+         {} calibration layer-forwards [{} sampler], {} executables compiled)",
+        qm.layer_execs,
+        if cfg.replay_sampler { "O(L²) replay" } else { "O(L) streaming" },
         ctx.rt.compiled_count()
     );
     if let Some(path) = args.opt("save") {
@@ -79,6 +85,134 @@ pub fn cmd_quantize(args: &Args) -> Result<()> {
         println!("quantized model saved to {path}");
     }
     Ok(())
+}
+
+/// Parameters of the pipeline benchmark (`adaround quantize-bench` and
+/// `benches/pipeline.rs` share this harness).
+pub struct QuantizeBenchOpts {
+    /// conv depth of the synthetic model (quant layers = depth + 1)
+    pub depth: usize,
+    /// channel width of the synthetic model
+    pub ch: usize,
+    pub calib_n: usize,
+    /// AdaRound iterations (kept small: the bench measures the pipeline,
+    /// not the optimizer)
+    pub iters: usize,
+    /// output JSON path
+    pub out: String,
+}
+
+impl Default for QuantizeBenchOpts {
+    fn default() -> Self {
+        QuantizeBenchOpts {
+            depth: 16,
+            ch: 8,
+            calib_n: 128,
+            iters: 100,
+            out: "BENCH_pipeline.json".to_string(),
+        }
+    }
+}
+
+/// End-to-end `quantize` wall-clock + calibration layer-forward counts on
+/// a deep synthetic model, streaming vs full-replay sampler, per method.
+/// Self-contained (no `make artifacts`). Emits `BENCH_pipeline.json` for
+/// `bench-diff` and FAILS if the two samplers disagree on the produced
+/// weights — the CI bench run doubles as an equivalence gate.
+pub fn run_quantize_bench(o: &QuantizeBenchOpts) -> Result<()> {
+    let mut rng = Rng::new(4242);
+    let model = Model::synthetic_chain(o.depth, o.ch, true, &mut rng);
+    let (calib, _) = synthetic_stripes(o.calib_n, 3, 16, &mut rng);
+    let n_layers = model.quant_layers().len();
+    println!(
+        "== pipeline benchmarks (synthetic depth {}, {} quant layers, calib {}, threads {}) ==",
+        o.depth,
+        n_layers,
+        o.calib_n,
+        parallel::num_threads()
+    );
+    println!("{:<12} {:<10} {:>10} {:>16}", "method", "sampler", "secs", "layer-forwards");
+
+    let mut results: Vec<Json> = Vec::new();
+    let (mut stream_execs, mut replay_execs) = (0u64, 0u64);
+    let mut ada_speedup = 0.0f64;
+    for method in [Method::Nearest, Method::BiasCorr, Method::AdaRound] {
+        let mut secs = [0.0f64; 2];
+        let mut weights: Vec<BTreeMap<String, Tensor>> = Vec::new();
+        for (mi, replay) in [(0usize, false), (1usize, true)] {
+            let cfg = PipelineConfig {
+                method,
+                bits: 4,
+                calib_n: o.calib_n,
+                col_budget: 512,
+                adaround: AdaRoundConfig { iters: o.iters, ..Default::default() },
+                replay_sampler: replay,
+                ..Default::default()
+            };
+            let pipe = Pipeline::new(&model, cfg, None);
+            let sw = Stopwatch::start();
+            let qm = pipe.quantize(&calib, &mut Rng::new(7))?;
+            secs[mi] = sw.secs();
+            let mode = if replay { "replay" } else { "streaming" };
+            println!(
+                "{:<12} {:<10} {:>9.2}s {:>16}",
+                method.name(),
+                mode,
+                secs[mi],
+                qm.layer_execs
+            );
+            if replay {
+                replay_execs = qm.layer_execs;
+            } else {
+                stream_execs = qm.layer_execs;
+            }
+            let mut e = BTreeMap::new();
+            e.insert(
+                "name".to_string(),
+                Json::Str(format!("quantize {} {mode} d{}", method.name(), o.depth)),
+            );
+            e.insert("mean_ms".to_string(), Json::Num(secs[mi] * 1e3));
+            e.insert("layer_execs".to_string(), Json::Num(qm.layer_execs as f64));
+            results.push(Json::Obj(e));
+            weights.push(qm.weight_overrides);
+        }
+        if weights[0] != weights[1] {
+            bail!("streaming and replay samplers disagree for {}", method.name());
+        }
+        if method == Method::AdaRound {
+            ada_speedup = secs[1] / secs[0].max(1e-9);
+        }
+    }
+    println!(
+        "layer-forwards: streaming {stream_execs} vs replay {replay_execs} \
+         ({:.1}x fewer); adaround pipeline speedup {ada_speedup:.2}x",
+        replay_execs as f64 / stream_execs.max(1) as f64
+    );
+
+    let mut root = BTreeMap::new();
+    root.insert("bench".to_string(), Json::Str("pipeline".to_string()));
+    root.insert("threads".to_string(), Json::Num(parallel::num_threads() as f64));
+    root.insert("depth".to_string(), Json::Num(o.depth as f64));
+    root.insert("streaming_layer_execs".to_string(), Json::Num(stream_execs as f64));
+    root.insert("replay_layer_execs".to_string(), Json::Num(replay_execs as f64));
+    root.insert("adaround_replay_over_streaming".to_string(), Json::Num(ada_speedup));
+    root.insert("results".to_string(), Json::Arr(results));
+    std::fs::write(&o.out, Json::Obj(root).to_string_pretty())?;
+    println!("(wrote {})", o.out);
+    Ok(())
+}
+
+/// `quantize-bench` subcommand: CLI front-end of [`run_quantize_bench`].
+pub fn cmd_quantize_bench(args: &Args) -> Result<()> {
+    let d = QuantizeBenchOpts::default();
+    let o = QuantizeBenchOpts {
+        depth: args.usize("depth", d.depth)?,
+        ch: args.usize("ch", d.ch)?,
+        calib_n: args.usize("calib-n", d.calib_n)?,
+        iters: args.usize("iters", d.iters)?,
+        out: args.str("out", &d.out),
+    };
+    run_quantize_bench(&o)
 }
 
 /// `sweep`: bits x method accuracy grid for one model.

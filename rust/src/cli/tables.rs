@@ -149,11 +149,7 @@ fn task_loss_cem(
         let wq4 = Tensor::from_vec(&w4.shape, wq.data.clone());
         let mut ov = std::collections::BTreeMap::new();
         ov.insert(node.id.clone(), wq4);
-        let opts = ForwardOptions {
-            weight_overrides: Some(&ov),
-            bias_overrides: None,
-            act_quant: None,
-        };
+        let opts = ForwardOptions { weight_overrides: Some(&ov), ..Default::default() };
         let logits = model.forward(&bx, &opts);
         // mean cross-entropy
         let mut loss = 0.0f64;
@@ -208,7 +204,7 @@ fn task_loss_cem(
     let wq4 = Tensor::from_vec(&w4.shape, wq.data);
     let mut ov = std::collections::BTreeMap::new();
     ov.insert(node.id.clone(), wq4);
-    let opts = ForwardOptions { weight_overrides: Some(&ov), bias_overrides: None, act_quant: None };
+    let opts = ForwardOptions { weight_overrides: Some(&ov), ..Default::default() };
     Ok(ctx.metric(model, &val.0, &val.1, &opts))
 }
 

@@ -8,12 +8,23 @@
 //! streamed in chunks; a deterministic per-chunk subsample keeps the
 //! column budget fixed regardless of layer spatial size.
 //!
+//! Two samplers share the collection/assembly code in this module:
+//!
+//! * the **streaming** sampler ([`super::stream::TapStore`], the default)
+//!   reads both activations from incrementally advanced per-chunk
+//!   frontiers — O(L) layer-forwards over the whole pipeline;
+//! * the **full-replay** sampler ([`sample_layer_cached`], retained as
+//!   the paper-literal reference and A/B path) re-runs the quantized
+//!   prefix from the network input for every layer — O(L²). Both produce
+//!   bit-identical samples (`rust/tests/stream_pipeline.rs`).
+//!
 //! The per-chunk forwards fan out across threads, so peak activation
 //! memory scales with `min(PALLAS_THREADS, n_chunks)` concurrent chunks
 //! (one chunk at a time in the serial case). On memory-constrained hosts
 //! with large calibration sets, bound it by lowering `PALLAS_THREADS`.
 
 use std::collections::BTreeSet;
+use std::sync::atomic::AtomicU64;
 
 use crate::data::chunks;
 use crate::nn::{ForwardOptions, Model, Node, Op};
@@ -57,10 +68,83 @@ fn pick_cols(total: usize, want: usize, rng: &mut Rng) -> Vec<usize> {
     }
 }
 
+/// Column sample of one calibration chunk: per-group row-major blocks
+/// `[dim, n]` (samples as columns), ready to splice into the final
+/// sample matrices without a transpose pass.
+pub(crate) struct ChunkCols {
+    pub fp: Vec<Vec<f32>>,
+    pub q: Vec<Vec<f32>>,
+    pub dim: usize,
+    /// columns picked from this chunk
+    pub n: usize,
+}
+
+/// im2col both activation variants of one chunk and gather the
+/// deterministic column subsample, writing row-major directly.
+/// `q_act = None` means the quantized prefix equals the FP32 activation
+/// (no overrides installed yet, or symmetric mode): X^ copies X without
+/// a second im2col. Borrows the activations — sampling never mutates or
+/// clones a stored tap.
+pub(crate) fn collect_chunk_cols(
+    node: &Node,
+    fp_act: &Tensor,
+    q_act: Option<&Tensor>,
+    budget: usize,
+    rng: &mut Rng,
+) -> ChunkCols {
+    let cols_fp = im2col_sample(node, fp_act);
+    let cols_q: Option<Vec<Tensor>> = q_act.map(|a| im2col_sample(node, a));
+    let groups = cols_fp.len();
+    let total = cols_fp[0].cols();
+    let picked = pick_cols(total, budget, rng);
+    let dim = cols_fp[0].rows();
+    let mut fp: Vec<Vec<f32>> = vec![Vec::with_capacity(picked.len() * dim); groups];
+    let mut q: Vec<Vec<f32>> = vec![Vec::with_capacity(picked.len() * dim); groups];
+    for g in 0..groups {
+        let src_fp = &cols_fp[g];
+        let src_q = cols_q.as_ref().map(|c| &c[g]).unwrap_or(src_fp);
+        for r in 0..dim {
+            for &c in &picked {
+                fp[g].push(src_fp.at2(r, c));
+                q[g].push(src_q.at2(r, c));
+            }
+        }
+    }
+    ChunkCols { fp, q, dim, n: picked.len() }
+}
+
+/// Concatenate per-chunk blocks in chunk order into the final
+/// `[dim, n_cols]` sample matrices. Chunk results always splice in chunk
+/// order regardless of which thread produced them, and rows copy as
+/// contiguous segments (this replaced a per-element column-major→
+/// row-major transpose).
+pub(crate) fn assemble_sample(chunk_cols: Vec<ChunkCols>) -> LayerSample {
+    let groups = chunk_cols.first().map(|c| c.fp.len()).unwrap_or(0);
+    let dim = chunk_cols.first().map(|c| c.dim).unwrap_or(0);
+    let ncols: usize = chunk_cols.iter().map(|c| c.n).sum();
+    let mut x_fp: Vec<Tensor> = (0..groups).map(|_| Tensor::zeros(&[dim, ncols])).collect();
+    let mut x_q: Vec<Tensor> = (0..groups).map(|_| Tensor::zeros(&[dim, ncols])).collect();
+    for g in 0..groups {
+        let mut off = 0;
+        for ch in &chunk_cols {
+            for r in 0..dim {
+                x_fp[g].data[r * ncols + off..r * ncols + off + ch.n]
+                    .copy_from_slice(&ch.fp[g][r * ch.n..(r + 1) * ch.n]);
+                x_q[g].data[r * ncols + off..r * ncols + off + ch.n]
+                    .copy_from_slice(&ch.q[g][r * ch.n..(r + 1) * ch.n]);
+            }
+            off += ch.n;
+        }
+    }
+    LayerSample { x_fp, x_q }
+}
+
 /// Cache of FP32 input activations per layer-input node, per calibration
-/// chunk. The FP32 pass does not depend on quantization overrides, so it
-/// is computed ONCE per pipeline run instead of once per layer — the
-/// biggest single wall-clock win of the perf pass (EXPERIMENTS.md §Perf).
+/// chunk — the **full-replay** sampler's FP32 half. The streaming
+/// pipeline replaces this with [`super::stream::TapStore`] (live frontier
+/// instead of every tap resident at once); the cache remains as the
+/// reference path (`PipelineConfig::replay_sampler`) and for callers
+/// outside the pipeline.
 pub struct FpTapCache {
     pub chunk_imgs: usize,
     /// input-node id -> per-chunk activation tensors
@@ -70,14 +154,17 @@ pub struct FpTapCache {
 /// Build the FP32 tap cache for the given input-node ids. The per-chunk
 /// forwards are independent and fan out across threads; taps are
 /// assembled in chunk order so the cache never depends on scheduling.
+/// `counter`, if set, counts the executed Conv/Dense nodes.
 pub fn build_fp_cache(
     model: &Model,
     calib: &Tensor,
     input_ids: &BTreeSet<String>,
     chunk_imgs: usize,
+    counter: Option<&AtomicU64>,
 ) -> FpTapCache {
     let n = calib.shape[0];
     let per: usize = calib.shape[1..].iter().product();
+    let opts = ForwardOptions { layer_counter: counter, ..Default::default() };
     let chunk_list: Vec<(usize, usize)> = chunks(n, chunk_imgs).collect();
     let per_chunk: Vec<std::collections::BTreeMap<String, Tensor>> =
         parallel::par_map(chunk_list.len(), 1, |ci| {
@@ -86,7 +173,7 @@ pub fn build_fp_cache(
                 &[e - s, calib.shape[1], calib.shape[2], calib.shape[3]],
                 calib.data[s * per..e * per].to_vec(),
             );
-            let (_, got) = model.forward_collect(&xb, &ForwardOptions::default(), input_ids);
+            let (_, got) = model.forward_collect(&xb, &opts, input_ids);
             got
         });
     let mut taps: std::collections::BTreeMap<String, Vec<Tensor>> =
@@ -99,12 +186,15 @@ pub fn build_fp_cache(
     FpTapCache { chunk_imgs, taps }
 }
 
-/// Stream the calibration images through the FP32 model and the
-/// quantized-prefix model, collecting paired im2col column samples for
-/// `node`. `quant_opts` carries the overrides accumulated so far;
-/// `fp_cache` (if present, and covering this node) supplies the FP32 taps
-/// without re-running the FP32 forward; `prefix_quantized` = false skips
-/// the quantized-prefix forward entirely (x^ == x before any override).
+/// Full-replay sampler: stream the calibration images through the FP32
+/// model and the quantized-prefix model — the latter re-executed from
+/// the network input — collecting paired im2col column samples for
+/// `node`. `quant_opts` carries the overrides accumulated so far (its
+/// `layer_counter`, if any, counts every forward this call runs);
+/// `fp_cache` (if present, and covering this node) supplies the FP32
+/// taps without re-running the FP32 forward; `prefix_quantized` = false
+/// skips the quantized-prefix forward entirely (x^ == x before any
+/// override).
 #[allow(clippy::too_many_arguments)]
 pub fn sample_layer_cached(
     model: &Model,
@@ -121,10 +211,6 @@ pub fn sample_layer_cached(
     let want: BTreeSet<String> = [input_id.clone()].into();
     let n = calib.shape[0];
     let per: usize = calib.shape[1..].iter().product();
-    let groups = match conv_params(node) {
-        Some(p) => p.groups,
-        None => 1,
-    };
     let cache_ok = fp_cache
         .map(|c| c.chunk_imgs == chunk_imgs && c.taps.contains_key(&input_id))
         .unwrap_or(false);
@@ -136,12 +222,6 @@ pub fn sample_layer_cached(
     // the same whatever thread executes the chunk
     let mut crngs: Vec<Rng> = (0..n_chunks).map(|ci| rng.fork(ci as u64)).collect();
 
-    // column sample of one calibration chunk, per group
-    struct ChunkCols {
-        fp: Vec<Vec<f32>>,
-        q: Vec<Vec<f32>>,
-        dim: usize,
-    }
     let chunk_cols: Vec<ChunkCols> = parallel::par_map_rng(&mut crngs, 1, |ci, crng| {
         let (s, e) = chunk_list[ci];
         let xb = || {
@@ -150,61 +230,29 @@ pub fn sample_layer_cached(
                 calib.data[s * per..e * per].to_vec(),
             )
         };
-        let fp_act: Tensor = if cache_ok {
-            fp_cache.unwrap().taps[&input_id][ci].clone()
+        // borrow cached taps; only a cache miss materializes a tensor
+        let computed_fp;
+        let fp_act: &Tensor = if cache_ok {
+            &fp_cache.unwrap().taps[&input_id][ci]
         } else {
-            let (_, taps_fp) = model.forward_collect(&xb(), &ForwardOptions::default(), &want);
-            taps_fp.into_iter().next().unwrap().1
+            let fp_opts =
+                ForwardOptions { layer_counter: quant_opts.layer_counter, ..Default::default() };
+            let (_, taps_fp) = model.forward_collect(&xb(), &fp_opts, &want);
+            computed_fp = taps_fp.into_iter().next().unwrap().1;
+            &computed_fp
         };
-        let cols_fp = im2col_sample(node, &fp_act);
-        let cols_q = if prefix_quantized {
-            let (_, taps_q) = model.forward_collect(&xb(), quant_opts, &want);
-            im2col_sample(node, &taps_q[&input_id])
+        let computed_q;
+        let q_act: Option<&Tensor> = if prefix_quantized {
+            let (_, mut taps_q) = model.forward_collect(&xb(), quant_opts, &want);
+            computed_q = taps_q.remove(&input_id).unwrap();
+            Some(&computed_q)
         } else {
-            cols_fp.clone()
+            None
         };
-        let total = cols_fp[0].cols();
-        let picked = pick_cols(total, per_chunk_budget, crng);
-        let dim = cols_fp[0].rows();
-        let mut fp: Vec<Vec<f32>> = vec![Vec::with_capacity(picked.len() * dim); groups];
-        let mut q: Vec<Vec<f32>> = vec![Vec::with_capacity(picked.len() * dim); groups];
-        for g in 0..groups {
-            for &c in &picked {
-                for r in 0..dim {
-                    fp[g].push(cols_fp[g].at2(r, c));
-                    q[g].push(cols_q[g].at2(r, c));
-                }
-            }
-        }
-        ChunkCols { fp, q, dim }
+        collect_chunk_cols(node, fp_act, q_act, per_chunk_budget, crng)
     });
 
-    // ordered assembly: chunk results concatenate in chunk order
-    let mut x_fp: Vec<Vec<f32>> = vec![Vec::new(); groups];
-    let mut x_q: Vec<Vec<f32>> = vec![Vec::new(); groups];
-    let mut cols_dim = 0usize;
-    for s in chunk_cols {
-        cols_dim = s.dim;
-        for g in 0..groups {
-            x_fp[g].extend_from_slice(&s.fp[g]);
-            x_q[g].extend_from_slice(&s.q[g]);
-        }
-    }
-    // data was pushed column-major [c0r0 c0r1 ...]; transpose into [cols, n]
-    let ncols = x_fp[0].len() / cols_dim;
-    let finish = |raw: Vec<f32>| {
-        let mut t = Tensor::zeros(&[cols_dim, ncols]);
-        for c in 0..ncols {
-            for r in 0..cols_dim {
-                t.data[r * ncols + c] = raw[c * cols_dim + r];
-            }
-        }
-        t
-    };
-    LayerSample {
-        x_fp: x_fp.into_iter().map(finish).collect(),
-        x_q: x_q.into_iter().map(finish).collect(),
-    }
+    assemble_sample(chunk_cols)
 }
 
 /// Uncached variant (kept for callers outside the pipeline: figs, tests).
@@ -275,11 +323,7 @@ mod tests {
         let node = m.node("c2").unwrap().clone();
         let mut ov = BTreeMap::new();
         ov.insert("c1".to_string(), Tensor::full(&[3, 2, 3, 3], 0.05));
-        let opts = ForwardOptions {
-            weight_overrides: Some(&ov),
-            bias_overrides: None,
-            act_quant: None,
-        };
+        let opts = ForwardOptions { weight_overrides: Some(&ov), ..Default::default() };
         let s = sample_layer(&m, &node, &calib, &opts, 16, 2, &mut rng);
         assert_ne!(s.x_fp[0].data, s.x_q[0].data);
         // halved weights => halved activations
@@ -311,5 +355,43 @@ mod tests {
         let s = sample_layer(&m, &node, &calib, &ForwardOptions::default(), 100, 2, &mut rng);
         assert_eq!(s.x_fp[0].shape, vec![2, 3]); // [cin, n_images]
         assert!(s.x_fp[0].data.iter().all(|&v| (v - 2.0).abs() < 1e-6));
+    }
+
+    #[test]
+    fn cached_taps_are_borrowed_not_recomputed() {
+        // the cache-backed path and the cache-less path must agree bit
+        // for bit (the sampler reads the same tensors either way)
+        let m = conv_model();
+        let calib = Tensor::from_vec(
+            &[4, 2, 8, 8],
+            (0..4 * 2 * 64).map(|i| ((i % 7) as f32 - 3.0) * 0.2).collect(),
+        );
+        let node = m.node("c2").unwrap().clone();
+        let ids: BTreeSet<String> = ["c1".to_string()].into();
+        let cache = build_fp_cache(&m, &calib, &ids, 2, None);
+        let opts = ForwardOptions::default();
+        let a = sample_layer_cached(&m, &node, &calib, &opts, false, Some(&cache),
+                                    24, 2, &mut Rng::new(9));
+        let b = sample_layer_cached(&m, &node, &calib, &opts, false, None,
+                                    24, 2, &mut Rng::new(9));
+        assert_eq!(a.x_fp[0].data, b.x_fp[0].data);
+        assert_eq!(a.x_q[0].data, b.x_q[0].data);
+    }
+
+    #[test]
+    fn assembly_is_row_major_in_chunk_order() {
+        // two chunks with distinct values: chunk 0's columns must precede
+        // chunk 1's, rows laid out [dim, ncols] row-major
+        let mk = |dim: usize, n: usize, base: f32| ChunkCols {
+            fp: vec![(0..dim * n).map(|i| base + i as f32).collect()],
+            q: vec![(0..dim * n).map(|i| -(base + i as f32)).collect()],
+            dim,
+            n,
+        };
+        let s = assemble_sample(vec![mk(2, 3, 0.0), mk(2, 2, 100.0)]);
+        assert_eq!(s.x_fp[0].shape, vec![2, 5]);
+        assert_eq!(s.x_fp[0].data, vec![0.0, 1.0, 2.0, 100.0, 101.0,
+                                        3.0, 4.0, 5.0, 102.0, 103.0]);
+        assert_eq!(s.x_q[0].data[3], -100.0);
     }
 }

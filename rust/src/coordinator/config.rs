@@ -105,6 +105,13 @@ pub struct PipelineConfig {
     /// apply cross-layer equalization before quantizing (paper Table 7:
     /// "using CLE as preprocessing" for the MobilenetV2 analog)
     pub pre_cle: bool,
+    /// use the full-replay sampler (re-runs the quantized prefix from the
+    /// network input for every layer, O(L²) layer-forwards) instead of
+    /// the streaming `TapStore` (O(L)). Retained as the paper-literal
+    /// reference path: both produce bit-identical `QuantizedModel`s
+    /// (`rust/tests/stream_pipeline.rs`), so this is only for A/B
+    /// verification and the `quantize-bench` comparison.
+    pub replay_sampler: bool,
 }
 
 impl Default for PipelineConfig {
@@ -123,6 +130,7 @@ impl Default for PipelineConfig {
             adaround: AdaRoundConfig::default(),
             ocs_expand: 0.05,
             pre_cle: false,
+            replay_sampler: false,
         }
     }
 }

@@ -126,6 +126,7 @@ pub fn load_quantized(path: impl AsRef<Path>) -> Result<QuantizedModel> {
         act_quant: None,
         scales: BTreeMap::new(),
         stats: Vec::new(),
+        layer_execs: 0,
     };
     let mut aq: BTreeMap<String, ActQuant> = BTreeMap::new();
     for (k, v) in &bundle {
@@ -195,6 +196,7 @@ mod tests {
             act_quant: None,
             scales: BTreeMap::new(),
             stats: Vec::new(),
+            layer_execs: 0,
         };
         qm.weight_overrides
             .insert("c1".into(), Tensor::from_vec(&[2, 1, 1, 1], vec![0.5, -0.5]));

@@ -6,8 +6,10 @@ pub mod calib;
 pub mod config;
 pub mod export;
 pub mod pipeline;
+pub mod stream;
 
 pub use calib::{im2col_sample, LayerSample};
 pub use export::{load_quantized, save_quantized};
 pub use config::{Method, PipelineConfig};
 pub use pipeline::{LayerStat, Pipeline, QuantizedModel};
+pub use stream::TapStore;

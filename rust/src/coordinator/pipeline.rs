@@ -2,14 +2,23 @@
 //!
 //! For each quantizable layer in topological order:
 //!   1. fit the quantization grid (§5 "determined prior to AdaRound"),
-//!   2. stream the calibration set to sample paired (X, X^) im2col columns
-//!      ([`super::calib`]), where X^ sees all *previously quantized* layers
-//!      (the paper's asymmetric reconstruction, eq. 25),
+//!   2. sample paired (X, X^) im2col columns from the streaming
+//!      activation store ([`super::stream::TapStore`]), where X^ sees all
+//!      *previously quantized* layers (the paper's asymmetric
+//!      reconstruction, eq. 25) through incrementally advanced
+//!      per-chunk frontiers — O(L) layer-forwards over the whole run,
 //!   3. choose the rounding per the configured [`Method`],
-//!   4. install the quantized weights and move to the next layer.
+//!   4. install the quantized weights and move to the next layer (which
+//!      advances both streams through exactly the newly-quantized
+//!      segment).
 //!
 //! Finally, optional activation quantizers are calibrated on the fully
 //! quantized network.
+//!
+//! `PipelineConfig::replay_sampler` swaps step 2 for the retained
+//! full-replay sampler (O(L²), [`super::calib::sample_layer_cached`]);
+//! both paths produce bit-identical `QuantizedModel`s — the equivalence
+//! is enforced by `rust/tests/stream_pipeline.rs`.
 //!
 //! Layers are inherently sequential (each one reconstructs against the
 //! quantized prefix), but the per-group rounding problems of a grouped
@@ -19,6 +28,7 @@
 //! runtime owns single-threaded state, so it stays on the caller thread.
 
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use anyhow::{bail, Result};
 
@@ -34,8 +44,14 @@ use crate::runtime::Runtime;
 use crate::tensor::{matmul, Tensor};
 use crate::util::{parallel, Rng, Stopwatch};
 
-use super::calib::{build_fp_cache, sample_layer_cached, FpTapCache};
+use super::calib::{build_fp_cache, sample_layer_cached, LayerSample};
 use super::config::{Method, PipelineConfig};
+use super::stream::TapStore;
+
+/// Calibration images per chunk: the granularity of streaming forwards
+/// and of the per-chunk column subsample/RNG forks. Part of the
+/// determinism contract — changing it changes the sampled columns.
+pub const CHUNK_IMGS: usize = 64;
 
 #[derive(Clone, Debug)]
 pub struct LayerStat {
@@ -59,6 +75,9 @@ pub struct QuantizedModel {
     /// and the integer serving engine skip scale recovery.
     pub scales: BTreeMap<String, Vec<f32>>,
     pub stats: Vec<LayerStat>,
+    /// Conv/Dense executions the calibration sampling performed (the
+    /// streaming pipeline's O(L) instrumentation; `quantize` reports it).
+    pub layer_execs: u64,
 }
 
 impl QuantizedModel {
@@ -71,6 +90,7 @@ impl QuantizedModel {
                 Some(&self.bias_overrides)
             },
             act_quant: self.act_quant.as_ref(),
+            layer_counter: None,
         }
     }
 
@@ -127,24 +147,76 @@ impl<'a> Pipeline<'a> {
             act_quant: None,
             scales: BTreeMap::new(),
             stats: Vec::new(),
+            layer_execs: 0,
         };
         let nodes: Vec<Node> = self.work.quant_layers().into_iter().cloned().collect();
-        // perf: FP32 taps don't depend on overrides — compute once for all
-        // selected layers instead of once per layer
-        let input_ids: std::collections::BTreeSet<String> = nodes
-            .iter()
-            .filter(|n| self.layer_selected(&n.id))
-            .map(|n| n.inputs[0].clone())
-            .collect();
-        let fp_cache = build_fp_cache(&self.work, &calib, &input_ids, 64);
+        // reference path: FP32 taps for every selected layer resident at
+        // once + per-layer prefix replays (the streaming store makes both
+        // obsolete on the default path)
+        let replay_execs = AtomicU64::new(0);
+        let fp_cache = if self.cfg.replay_sampler {
+            let input_ids: std::collections::BTreeSet<String> = nodes
+                .iter()
+                .filter(|n| self.layer_selected(&n.id))
+                .map(|n| n.inputs[0].clone())
+                .collect();
+            Some(build_fp_cache(&self.work, &calib, &input_ids, CHUNK_IMGS, Some(&replay_execs)))
+        } else {
+            None
+        };
+        let mut store = if self.cfg.replay_sampler {
+            None
+        } else {
+            Some(TapStore::new(&self.work, &calib, CHUNK_IMGS))
+        };
         for node in &nodes {
             if !self.layer_selected(&node.id) {
                 continue;
             }
             let sw = Stopwatch::start();
-            let stat = self.quantize_layer(node, &calib, &fp_cache, &mut out, rng)?;
+            // the quantized-prefix forward is only needed in asymmetric
+            // mode once at least one earlier layer has been overridden
+            let prefix_quantized = self.cfg.asymmetric
+                && (!out.weight_overrides.is_empty() || !out.bias_overrides.is_empty());
+            let sample = {
+                let quant_opts = ForwardOptions {
+                    weight_overrides: Some(&out.weight_overrides),
+                    bias_overrides: if out.bias_overrides.is_empty() {
+                        None
+                    } else {
+                        Some(&out.bias_overrides)
+                    },
+                    act_quant: None,
+                    layer_counter: Some(&replay_execs),
+                };
+                match &mut store {
+                    Some(st) => st.sample_layer(
+                        node,
+                        &quant_opts,
+                        prefix_quantized,
+                        self.cfg.col_budget,
+                        rng,
+                    ),
+                    None => sample_layer_cached(
+                        &self.work,
+                        node,
+                        &calib,
+                        &quant_opts,
+                        prefix_quantized,
+                        fp_cache.as_ref(),
+                        self.cfg.col_budget,
+                        CHUNK_IMGS,
+                        rng,
+                    ),
+                }
+            };
+            let stat = self.quantize_layer(node, &sample, &mut out, rng)?;
             out.stats.push(LayerStat { secs: sw.secs(), ..stat });
         }
+        out.layer_execs = match &store {
+            Some(st) => st.layer_execs(),
+            None => replay_execs.load(Ordering::Relaxed),
+        };
         if let Some(bits) = self.cfg.act_bits {
             out.act_quant = Some(self.calibrate_activations(&calib, &out, bits));
         }
@@ -160,11 +232,12 @@ impl<'a> Pipeline<'a> {
         )
     }
 
+    /// Grid fit + per-group rounding + assembly for one layer, from an
+    /// already-collected calibration sample.
     fn quantize_layer(
         &self,
         node: &Node,
-        calib: &Tensor,
-        fp_cache: &FpTapCache,
+        sample: &LayerSample,
         out: &mut QuantizedModel,
         rng: &mut Rng,
     ) -> Result<LayerStat> {
@@ -175,32 +248,6 @@ impl<'a> Pipeline<'a> {
         // full GEMM view [cout, cols] (groups stacked along rows)
         let cout = w4.shape[0];
         let w_gemm = Tensor::from_vec(&[cout, geom.cols], w4.data.clone());
-
-        // --- calibration sample (paired FP / quantized-prefix columns) ---
-        let quant_opts = ForwardOptions {
-            weight_overrides: Some(&out.weight_overrides),
-            bias_overrides: if out.bias_overrides.is_empty() {
-                None
-            } else {
-                Some(&out.bias_overrides)
-            },
-            act_quant: None,
-        };
-        // the quantized-prefix forward is only needed in asymmetric mode
-        // once at least one earlier layer has been overridden
-        let prefix_quantized = cfg.asymmetric
-            && (!out.weight_overrides.is_empty() || !out.bias_overrides.is_empty());
-        let sample = sample_layer_cached(
-            &self.work,
-            node,
-            calib,
-            &quant_opts,
-            prefix_quantized,
-            Some(fp_cache),
-            cfg.col_budget,
-            64,
-            rng,
-        );
 
         // --- grid fit (per layer, before rounding optimization) ---
         let (grid_method, per_channel) = match cfg.method {
@@ -267,6 +314,9 @@ impl<'a> Pipeline<'a> {
         let mut mse_before = 0.0;
         let mut mse_after = 0.0;
         let mut flipped = 0.0;
+        // bias-correction deltas accumulate into ONE clone of the layer
+        // bias (groups touch disjoint row ranges), inserted once at the end
+        let mut bias_new: Option<Tensor> = None;
         for (g, res) in results.into_iter().enumerate() {
             let go = res?;
             let row0 = g * og;
@@ -274,18 +324,20 @@ impl<'a> Pipeline<'a> {
             mse_before += go.near_mse;
             mse_after += go.after;
             flipped += go.flipped;
-            // bias correction methods adjust the bias from the same sample
             if let Some(delta) = go.bias_delta {
-                let mut nb = out
-                    .bias_overrides
-                    .get(&node.id)
-                    .cloned()
-                    .unwrap_or_else(|| bias_full.clone());
+                let nb = bias_new.get_or_insert_with(|| {
+                    out.bias_overrides
+                        .get(&node.id)
+                        .cloned()
+                        .unwrap_or_else(|| bias_full.clone())
+                });
                 for (i, d) in delta.iter().enumerate() {
                     nb.data[row0 + i] += d;
                 }
-                out.bias_overrides.insert(node.id.clone(), nb);
             }
+        }
+        if let Some(nb) = bias_new {
+            out.bias_overrides.insert(node.id.clone(), nb);
         }
         out.weight_overrides.insert(
             node.id.clone(),
@@ -354,8 +406,9 @@ impl<'a> Pipeline<'a> {
                 Some(&qm.bias_overrides)
             },
             act_quant: None,
+            layer_counter: None,
         };
-        let chunk_list: Vec<(usize, usize)> = chunks(n, 64).collect();
+        let chunk_list: Vec<(usize, usize)> = chunks(n, CHUNK_IMGS).collect();
         // bind the model by field so the worker closure never captures
         // `self` (the PJRT runtime reference is not Sync)
         let work = &self.work;

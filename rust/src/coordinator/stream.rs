@@ -1,0 +1,318 @@
+//! Streaming calibration activations: incremental quantized-prefix
+//! propagation, the O(L) heart of the PTQ pipeline.
+//!
+//! The paper's asymmetric reconstruction (eq. 25) needs, for every layer,
+//! the layer input as seen through the *already-quantized prefix*. The
+//! obvious implementation replays the whole network from the input for
+//! each layer — O(L²) layer-forwards over the calibration set. This
+//! module keeps, per calibration chunk, a **live activation frontier**
+//! for two forward variants instead:
+//!
+//! * the **FP32 stream** (no overrides) — supplies X and the targets,
+//! * the **quantized-prefix stream** — supplies X^, advanced with the
+//!   override map as it exists at that point of the pipeline.
+//!
+//! After `quantize_layer` installs layer i's overrides, both streams are
+//! advanced only through the *newly covered segment* of the graph
+//! ([`crate::nn::Model::forward_segment`]); values whose last consumer
+//! has run are evicted ([`crate::nn::Model::last_use`]), so resident
+//! memory is `n_chunks × live-set` rather than `n_chunks × all taps`.
+//! Every node executes exactly once per chunk per stream: O(L) total.
+//!
+//! **Correctness of lazy advancement.** A node's output depends only on
+//! overrides of nodes at or before it, and the pipeline quantizes layers
+//! in topological order — so by the time the quantized stream executes
+//! node j, every override that could ever affect node j is already
+//! installed. The streamed X^ is therefore bit-identical to a full
+//! replay under the same override map (asserted per method by
+//! `rust/tests/stream_pipeline.rs`).
+//!
+//! **Determinism.** Chunks advance independently (fanned out over
+//! [`crate::util::parallel`]) and are sampled with RNGs forked serially
+//! in chunk order, then assembled in chunk order — results are
+//! bit-identical for every `PALLAS_THREADS`.
+//!
+//! ```
+//! use adaround::coordinator::TapStore;
+//! use adaround::nn::{ForwardOptions, Model};
+//! use adaround::tensor::Tensor;
+//! use adaround::util::Rng;
+//!
+//! let mut rng = Rng::new(5);
+//! let model = Model::synthetic_chain(3, 4, false, &mut rng);
+//! let calib = Tensor::full(&[4, 3, 8, 8], 0.5);
+//! let mut store = TapStore::new(&model, &calib, 2);
+//!
+//! // first layer: no overrides yet, X^ == X and only the FP32 stream runs
+//! let c1 = model.node("c1").unwrap().clone();
+//! let s = store.sample_layer(&c1, &ForwardOptions::default(), false, 16, &mut rng);
+//! assert_eq!(s.x_fp[0].rows(), 3 * 9); // im2col patch of the 3x3 stem
+//! assert_eq!(s.x_fp[0].data, s.x_q[0].data);
+//! assert_eq!(store.layer_execs(), 0); // the stem's input is the image
+//!
+//! // a later layer advances the frontier through c1 once per chunk
+//! let c2 = model.node("c2").unwrap().clone();
+//! let s2 = store.sample_layer(&c2, &ForwardOptions::default(), false, 16, &mut rng);
+//! assert_eq!(s2.x_fp[0].rows(), 4 * 9);
+//! assert_eq!(store.layer_execs(), 2); // c1 executed for each of the 2 chunks
+//! ```
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::data::chunks;
+use crate::nn::{ForwardOptions, Model, Node, Op};
+use crate::tensor::Tensor;
+use crate::util::{parallel, Rng};
+
+use super::calib::{assemble_sample, collect_chunk_cols, LayerSample};
+
+/// One forward variant's per-chunk execution state: how far every chunk
+/// has advanced through the node list, and the values still live there.
+struct ActStream {
+    /// all nodes `< frontier` executed for every chunk
+    frontier: usize,
+    /// live node values per chunk (empty until first use — the quantized
+    /// stream never materializes anything in symmetric mode)
+    vals: Vec<BTreeMap<String, Tensor>>,
+}
+
+impl ActStream {
+    fn new() -> ActStream {
+        ActStream { frontier: 0, vals: Vec::new() }
+    }
+}
+
+/// Streaming store of calibration activations for the layer-by-layer
+/// reconstruction pipeline: the FP32 stream (replacing the former
+/// all-taps-resident `FpTapCache`) and the quantized-prefix stream,
+/// advanced segment-by-segment as layers get quantized.
+pub struct TapStore<'a> {
+    model: &'a Model,
+    calib: &'a Tensor,
+    chunk_list: Vec<(usize, usize)>,
+    fp: ActStream,
+    q: ActStream,
+    /// Conv/Dense executions across both streams, all chunks — the
+    /// pipeline's O(L) instrumentation.
+    execs: AtomicU64,
+}
+
+/// Slice images [s, e) out of the [N,C,H,W] calibration tensor.
+fn chunk_tensor(calib: &Tensor, s: usize, e: usize) -> Tensor {
+    let per: usize = calib.shape[1..].iter().product();
+    let mut shape = calib.shape.clone();
+    shape[0] = e - s;
+    Tensor::from_vec(&shape, calib.data[s * per..e * per].to_vec())
+}
+
+/// Advance one stream to the frontier cut `cut` (exclusive node index),
+/// executing `frontier..cut` once per chunk with `opts`. Chunks fan out
+/// across threads; each runs the same serial segment executor, so the
+/// stored values never depend on scheduling.
+fn advance(
+    model: &Model,
+    calib: &Tensor,
+    chunk_list: &[(usize, usize)],
+    stream: &mut ActStream,
+    cut: usize,
+    opts: &ForwardOptions,
+) {
+    if cut <= stream.frontier {
+        return;
+    }
+    if stream.vals.is_empty() {
+        stream.vals = chunk_list
+            .iter()
+            .map(|&(s, e)| {
+                let xb = chunk_tensor(calib, s, e);
+                let mut seed = BTreeMap::new();
+                for nd in &model.nodes {
+                    if matches!(nd.op, Op::Input) {
+                        seed.insert(nd.id.clone(), xb.clone());
+                    }
+                }
+                seed
+            })
+            .collect();
+    }
+    let range = stream.frontier..cut;
+    let no_taps = BTreeSet::new();
+    // one liveness map shared by every chunk's segment execution
+    let last_use = model.last_use();
+    parallel::par_chunks_mut(&mut stream.vals, 1, 1, |_ci, slot| {
+        model.forward_segment_with(&mut slot[0], range.clone(), opts, &no_taps, &last_use);
+    });
+    stream.frontier = cut;
+}
+
+impl<'a> TapStore<'a> {
+    /// Set up the streams over `calib`, cut into chunks of `chunk_imgs`
+    /// images. Nothing is executed until the first [`Self::sample_layer`].
+    pub fn new(model: &'a Model, calib: &'a Tensor, chunk_imgs: usize) -> TapStore<'a> {
+        TapStore {
+            model,
+            calib,
+            chunk_list: chunks(calib.shape[0], chunk_imgs).collect(),
+            fp: ActStream::new(),
+            q: ActStream::new(),
+            execs: AtomicU64::new(0),
+        }
+    }
+
+    /// Paired (X, X^) im2col column sample for `node`, read from the
+    /// streams' live frontiers. `quant_opts` carries the override map
+    /// accumulated so far; `prefix_quantized` = false skips the
+    /// quantized stream entirely (X^ == X before any override, and
+    /// always in symmetric mode). Must be called with `node`s in
+    /// topological order — the frontier only moves forward.
+    ///
+    /// RNG discipline matches the full-replay sampler exactly: one fork
+    /// per chunk, serially, before the parallel sampling fan-out.
+    pub fn sample_layer(
+        &mut self,
+        node: &Node,
+        quant_opts: &ForwardOptions,
+        prefix_quantized: bool,
+        col_budget: usize,
+        rng: &mut Rng,
+    ) -> LayerSample {
+        let input_id = node.inputs[0].as_str();
+        let cut = self
+            .model
+            .node_index(input_id)
+            .unwrap_or_else(|| panic!("layer input '{input_id}' not in graph"))
+            + 1;
+        // inception-style layers sharing an input give cut == frontier; a
+        // cut BEHIND the frontier means out-of-order sampling (the fp
+        // frontier is the furthest one — it advances on every sample)
+        assert!(
+            cut >= self.fp.frontier,
+            "layers must be sampled in topological order (frontier {} past cut {cut})",
+            self.fp.frontier
+        );
+        let fp_opts = ForwardOptions { layer_counter: Some(&self.execs), ..Default::default() };
+        advance(self.model, self.calib, &self.chunk_list, &mut self.fp, cut, &fp_opts);
+        if prefix_quantized {
+            let q_opts = ForwardOptions {
+                weight_overrides: quant_opts.weight_overrides,
+                bias_overrides: quant_opts.bias_overrides,
+                act_quant: quant_opts.act_quant,
+                layer_counter: Some(&self.execs),
+            };
+            advance(self.model, self.calib, &self.chunk_list, &mut self.q, cut, &q_opts);
+        }
+        let n_chunks = self.chunk_list.len();
+        let per_chunk_budget = col_budget.div_ceil(n_chunks.max(1));
+        let mut crngs: Vec<Rng> = (0..n_chunks).map(|ci| rng.fork(ci as u64)).collect();
+        let fp_vals = &self.fp.vals;
+        let q_vals = &self.q.vals;
+        let chunk_cols = parallel::par_map_rng(&mut crngs, 1, |ci, crng| {
+            let fp_act = &fp_vals[ci][input_id];
+            let q_act = if prefix_quantized { Some(&q_vals[ci][input_id]) } else { None };
+            collect_chunk_cols(node, fp_act, q_act, per_chunk_budget, crng)
+        });
+        assemble_sample(chunk_cols)
+    }
+
+    /// Total Conv/Dense node executions so far, across both streams and
+    /// every chunk. O(L · n_chunks · 2) over a whole pipeline run — the
+    /// number the `stream_pipeline` tests pin down.
+    pub fn layer_execs(&self) -> u64 {
+        self.execs.load(Ordering::Relaxed)
+    }
+
+    /// Current (fp, quantized) frontiers — diagnostics/tests.
+    pub fn frontiers(&self) -> (usize, usize) {
+        (self.fp.frontier, self.q.frontier)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::calib::{build_fp_cache, sample_layer_cached};
+
+    fn deep() -> (Model, Tensor) {
+        let mut rng = Rng::new(17);
+        let model = Model::synthetic_chain(5, 4, true, &mut rng);
+        let n = 5; // 2 chunks of (4, 1) at chunk_imgs = 4
+        let calib = Tensor::from_vec(
+            &[n, 3, 8, 8],
+            (0..n * 3 * 64).map(|i| ((i % 23) as f32 - 11.0) * 0.07).collect(),
+        );
+        (model, calib)
+    }
+
+    /// Quantized-prefix override map: halve c1's weights.
+    fn overrides(model: &Model) -> BTreeMap<String, Tensor> {
+        let mut ov = BTreeMap::new();
+        ov.insert("c1".to_string(), model.weight("c1").map(|v| v * 0.5));
+        ov
+    }
+
+    #[test]
+    fn streaming_matches_full_replay_per_layer() {
+        let (model, calib) = deep();
+        let ov = overrides(&model);
+        let mut store = TapStore::new(&model, &calib, 4);
+        let layers: Vec<Node> = model.quant_layers().into_iter().cloned().collect();
+        let input_ids: BTreeSet<String> =
+            layers.iter().map(|n| n.inputs[0].clone()).collect();
+        let cache = build_fp_cache(&model, &calib, &input_ids, 4, None);
+        for (i, node) in layers.iter().enumerate() {
+            let quant_opts = ForwardOptions { weight_overrides: Some(&ov), ..Default::default() };
+            let prefix = i > 0; // first layer pre-override, like the pipeline
+            let mut srng = Rng::new(100 + i as u64);
+            let a = store.sample_layer(node, &quant_opts, prefix, 32, &mut srng);
+            let b = sample_layer_cached(&model, node, &calib, &quant_opts, prefix,
+                                        Some(&cache), 32, 4, &mut Rng::new(100 + i as u64));
+            for g in 0..a.x_fp.len() {
+                assert_eq!(a.x_fp[g].data, b.x_fp[g].data, "X  differs at layer {}", node.id);
+                assert_eq!(a.x_q[g].data, b.x_q[g].data, "X^ differs at layer {}", node.id);
+            }
+        }
+    }
+
+    #[test]
+    fn frontier_advances_lazily_and_evicts() {
+        let (model, calib) = deep();
+        let ov = overrides(&model);
+        let mut store = TapStore::new(&model, &calib, 4);
+        assert_eq!(store.frontiers(), (0, 0));
+        let c1 = model.node("c1").unwrap().clone();
+        store.sample_layer(&c1, &ForwardOptions::default(), false, 8, &mut Rng::new(1));
+        // c1's input is the image: fp frontier 1, q stream untouched
+        assert_eq!(store.frontiers(), (1, 0));
+        assert!(store.q.vals.is_empty(), "symmetric sampling must not seed the q stream");
+
+        let c4 = model.node("c4").unwrap().clone();
+        let quant_opts = ForwardOptions { weight_overrides: Some(&ov), ..Default::default() };
+        store.sample_layer(&c4, &quant_opts, true, 8, &mut Rng::new(2));
+        // c4 reads m1(5): both frontiers at 6, live sets match the analysis
+        assert_eq!(store.frontiers(), (6, 6));
+        for vals in store.fp.vals.iter().chain(&store.q.vals) {
+            let keys: BTreeSet<String> = vals.keys().cloned().collect();
+            assert_eq!(keys, model.live_at(6));
+            assert!(!keys.contains("c1"), "dead taps must be evicted");
+        }
+    }
+
+    #[test]
+    fn layer_exec_count_is_linear() {
+        let (model, calib) = deep(); // 6 quantizable layers, 2 chunks
+        let ov = overrides(&model);
+        let mut store = TapStore::new(&model, &calib, 4);
+        let layers: Vec<Node> = model.quant_layers().into_iter().cloned().collect();
+        for (i, node) in layers.iter().enumerate() {
+            let quant_opts = ForwardOptions { weight_overrides: Some(&ov), ..Default::default() };
+            store.sample_layer(node, &quant_opts, i > 0, 8, &mut Rng::new(i as u64));
+        }
+        let n_chunks = 2u64;
+        let l = layers.len() as u64;
+        // each stream executes each quantizable node at most once per chunk
+        assert!(store.layer_execs() <= 2 * n_chunks * l,
+                "layer execs {} not O(L)", store.layer_execs());
+        assert!(store.layer_execs() > 0);
+    }
+}

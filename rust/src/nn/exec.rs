@@ -4,8 +4,20 @@
 //! taps (capture intermediate tensors for calibration), and optional
 //! activation fake-quantization — everything the PTQ pipeline needs to
 //! build FP32 targets and quantized-prefix inputs.
+//!
+//! Execution is *segmented*: [`Model::forward_segment`] resumes from a
+//! map of live node values instead of the network input, evicting each
+//! value the moment its last consumer has run (the liveness analysis of
+//! [`super::graph`]). [`Model::forward_collect`] is the whole-network
+//! special case (seed the input, run segment `0..len`), so both paths
+//! share one node evaluator, one conv workspace discipline and one
+//! override/act-quant policy — the streaming calibration pipeline
+//! (`coordinator/stream.rs`) produces bit-identical activations to a
+//! full replay by construction.
 
 use std::collections::{BTreeMap, BTreeSet};
+use std::ops::Range;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::quant::ActQuant;
 use crate::tensor::conv::{conv2d_with, Conv2dWorkspace};
@@ -24,6 +36,11 @@ pub struct ForwardOptions<'a> {
     pub bias_overrides: Option<&'a BTreeMap<String, Tensor>>,
     /// Activation quantizers per node id (applied to that node's output).
     pub act_quant: Option<&'a BTreeMap<String, ActQuant>>,
+    /// When set, incremented once per executed Conv/Dense node — the
+    /// instrumentation behind the streaming pipeline's O(L) layer-forward
+    /// guarantee (asserted by `rust/tests/stream_pipeline.rs`, reported
+    /// by `adaround quantize`).
+    pub layer_counter: Option<&'a AtomicU64>,
 }
 
 impl Model {
@@ -39,14 +56,65 @@ impl Model {
         opts: &ForwardOptions,
         want: &BTreeSet<String>,
     ) -> (Tensor, Taps) {
-        let mut vals: BTreeMap<&str, Tensor> = BTreeMap::new();
-        let mut taps = Taps::new();
-        // one im2col/GEMM workspace shared by every conv in this pass
-        let mut conv_ws = Conv2dWorkspace::new();
+        let mut vals: BTreeMap<String, Tensor> = BTreeMap::new();
         for nd in &self.nodes {
+            if matches!(nd.op, Op::Input) {
+                vals.insert(nd.id.clone(), x.clone());
+            }
+        }
+        let taps = self.forward_segment(&mut vals, 0..self.nodes.len(), opts, want);
+        let last = self.nodes.last().unwrap().id.clone();
+        (vals.remove(&last).expect("network output live at end of pass"), taps)
+    }
+
+    /// Execute the contiguous node range `range`, resuming from `vals` —
+    /// the live node values at the frontier cut `range.start` (for
+    /// `range.start == 0`, the values of the `Op::Input` nodes). On
+    /// return `vals` holds exactly the values live at `range.end` (plus
+    /// the network output once produced): every value is dropped the
+    /// moment its last consumer has run, so peak memory tracks the
+    /// graph's live set, not its depth. Outputs of nodes named in `want`
+    /// are cloned into the returned [`Taps`] at production time
+    /// (after activation fake-quant, like every consumer sees them).
+    ///
+    /// One im2col/GEMM workspace is shared by every conv in the segment,
+    /// as in a whole-network pass. Panics if a required value is missing
+    /// from `vals` (a non-contiguous resume or an unseeded input).
+    pub fn forward_segment(
+        &self,
+        vals: &mut BTreeMap<String, Tensor>,
+        range: Range<usize>,
+        opts: &ForwardOptions,
+        want: &BTreeSet<String>,
+    ) -> Taps {
+        self.forward_segment_with(vals, range, opts, want, &self.last_use())
+    }
+
+    /// [`Self::forward_segment`] with a caller-supplied liveness map
+    /// ([`Model::last_use`]) so fan-outs running the same segment on many
+    /// chunks (the streaming calibration store) amortize its construction
+    /// instead of rebuilding it per chunk.
+    pub fn forward_segment_with(
+        &self,
+        vals: &mut BTreeMap<String, Tensor>,
+        range: Range<usize>,
+        opts: &ForwardOptions,
+        want: &BTreeSet<String>,
+        last_use: &BTreeMap<String, usize>,
+    ) -> Taps {
+        let mut taps = Taps::new();
+        // one im2col/GEMM workspace shared by every conv in this segment
+        let mut conv_ws = Conv2dWorkspace::new();
+        for j in range {
+            let nd = &self.nodes[j];
             let out = match &nd.op {
-                Op::Input => x.clone(),
+                Op::Input => vals.remove(&nd.id).unwrap_or_else(|| {
+                    panic!("input '{}' not seeded in segment values", nd.id)
+                }),
                 Op::Conv { k, stride, pad, groups, relu } => {
+                    if let Some(c) = opts.layer_counter {
+                        c.fetch_add(1, Ordering::Relaxed);
+                    }
                     let inp = &vals[nd.inputs[0].as_str()];
                     let w = opts
                         .weight_overrides
@@ -69,6 +137,9 @@ impl Model {
                     y
                 }
                 Op::Dense { relu } => {
+                    if let Some(c) = opts.layer_counter {
+                        c.fetch_add(1, Ordering::Relaxed);
+                    }
                     let inp = &vals[nd.inputs[0].as_str()]; // [N, C]
                     let w = opts
                         .weight_overrides
@@ -121,10 +192,15 @@ impl Model {
             if want.contains(&nd.id) {
                 taps.insert(nd.id.clone(), out.clone());
             }
-            vals.insert(nd.id.as_str(), out);
+            vals.insert(nd.id.clone(), out);
+            // evict every value this node consumed for the last time
+            for inp in &nd.inputs {
+                if last_use.get(inp) == Some(&j) {
+                    vals.remove(inp);
+                }
+            }
         }
-        let last = self.nodes.last().unwrap().id.as_str();
-        (vals.remove(last).unwrap(), taps)
+        taps
     }
 
     /// The node ids whose outputs feed each quantizable layer (its input
@@ -141,6 +217,7 @@ impl Model {
 mod tests {
     use super::super::graph::tests::{tiny_model_json, tiny_weights};
     use super::*;
+    use crate::util::Rng;
 
     fn tiny() -> Model {
         Model::from_manifest("tiny", &tiny_model_json(), tiny_weights()).unwrap()
@@ -173,8 +250,7 @@ mod tests {
         let base = m.forward(&x, &ForwardOptions::default());
         let mut ov = BTreeMap::new();
         ov.insert("c1".to_string(), Tensor::zeros(&[4, 3, 3, 3]));
-        let opts = ForwardOptions {
-            weight_overrides: Some(&ov), bias_overrides: None, act_quant: None };
+        let opts = ForwardOptions { weight_overrides: Some(&ov), ..Default::default() };
         let z = m.forward(&x, &opts);
         assert_ne!(base.data, z.data);
         assert!((z.data[1] - 1.0).abs() < 1e-6); // only dense bias remains
@@ -191,5 +267,47 @@ mod tests {
         let map = m.layer_input_ids();
         assert_eq!(map["c1"], "in");
         assert_eq!(map["d1"], "g1");
+    }
+
+    #[test]
+    fn segments_match_whole_pass_and_evict_dead_values() {
+        let mut rng = Rng::new(21);
+        let m = Model::synthetic_chain(5, 4, true, &mut rng);
+        let n: usize = 2;
+        let x = Tensor::from_vec(
+            &[n, 3, 8, 8],
+            (0..n * 3 * 64).map(|i| ((i % 17) as f32 - 8.0) * 0.1).collect(),
+        );
+        let want: BTreeSet<String> = ["a1".to_string(), "g".to_string()].into();
+        let (y_full, taps_full) = m.forward_collect(&x, &ForwardOptions::default(), &want);
+
+        // same pass cut into three segments at arbitrary frontiers
+        let mut vals = BTreeMap::new();
+        vals.insert("in".to_string(), x.clone());
+        let len = m.nodes.len();
+        let mut taps_seg = Taps::new();
+        for cut in [0..4usize, 4..7, 7..len] {
+            let opts = ForwardOptions::default();
+            taps_seg.extend(m.forward_segment(&mut vals, cut.clone(), &opts, &want));
+            // the live map holds exactly the liveness analysis' answer
+            // (plus the output once produced — live_at includes it)
+            let keys: BTreeSet<String> = vals.keys().cloned().collect();
+            assert_eq!(keys, m.live_at(cut.end), "live set at cut {}", cut.end);
+        }
+        let y_seg = vals.remove("d1").unwrap();
+        assert_eq!(y_full.data, y_seg.data, "segmented == whole pass, bit-identical");
+        assert_eq!(taps_full, taps_seg);
+    }
+
+    #[test]
+    fn layer_counter_counts_conv_and_dense() {
+        let m = tiny();
+        let x = Tensor::full(&[1, 3, 32, 32], 1.0);
+        let ctr = AtomicU64::new(0);
+        let opts = ForwardOptions { layer_counter: Some(&ctr), ..Default::default() };
+        m.forward(&x, &opts);
+        assert_eq!(ctr.load(Ordering::Relaxed), 2); // c1 + d1
+        m.forward(&x, &opts);
+        assert_eq!(ctr.load(Ordering::Relaxed), 4);
     }
 }

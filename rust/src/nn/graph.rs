@@ -1,12 +1,19 @@
 //! Graph IR: mirrors the node schema documented in
 //! `python/compile/models.py`.
+//!
+//! Besides parsing/validation this module provides the *topological
+//! liveness analysis* the streaming calibration pipeline is built on
+//! ([`Model::last_use`], [`Model::successor_counts`], [`Model::live_at`]):
+//! for any frontier cut through the (already topologically ordered) node
+//! list, it answers which node outputs must stay resident for execution
+//! to resume from that cut.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
 use anyhow::{anyhow, bail, Result};
 
 use crate::tensor::Tensor;
-use crate::util::Json;
+use crate::util::{Json, Rng};
 
 #[derive(Clone, Debug, PartialEq)]
 pub enum Op {
@@ -175,6 +182,148 @@ impl Model {
         self.weights.values().map(|t| t.numel()).sum()
     }
 
+    /// Position of a node in the (topological) node list.
+    pub fn node_index(&self, id: &str) -> Option<usize> {
+        self.nodes.iter().position(|n| n.id == id)
+    }
+
+    /// Number of consumers per node id (how many nodes list it as an
+    /// input; duplicate uses by one node count once per mention). Nodes
+    /// that never appear as an input — the network output, in a valid
+    /// graph — are absent from the map. Count-based companion view of
+    /// the liveness analysis for diagnostics/refcount-style callers; the
+    /// segment executor itself evicts by [`Self::last_use`] index.
+    pub fn successor_counts(&self) -> BTreeMap<String, usize> {
+        let mut counts: BTreeMap<String, usize> = BTreeMap::new();
+        for nd in &self.nodes {
+            for inp in &nd.inputs {
+                *counts.entry(inp.clone()).or_insert(0) += 1;
+            }
+        }
+        counts
+    }
+
+    /// For each node id, the index of the LAST node that consumes it.
+    /// Ids that are never consumed (the network output) are absent. The
+    /// segment executor evicts a value the moment its last consumer has
+    /// run; everything a later segment could still read survives.
+    pub fn last_use(&self) -> BTreeMap<String, usize> {
+        let mut last: BTreeMap<String, usize> = BTreeMap::new();
+        for (j, nd) in self.nodes.iter().enumerate() {
+            for inp in &nd.inputs {
+                last.insert(inp.clone(), j); // ascending j: final insert wins
+            }
+        }
+        last
+    }
+
+    /// Node ids that must be live at the frontier cut `at` (all nodes
+    /// `< at` executed, `>= at` pending): produced before the cut and
+    /// consumed at or after it, plus the network output once produced.
+    pub fn live_at(&self, at: usize) -> BTreeSet<String> {
+        let last = self.last_use();
+        let mut live = BTreeSet::new();
+        for (i, nd) in self.nodes.iter().enumerate().take(at) {
+            let needed_later = last.get(&nd.id).is_some_and(|&j| j >= at);
+            let is_output = i + 1 == self.nodes.len();
+            if needed_later || is_output {
+                live.insert(nd.id.clone());
+            }
+        }
+        live
+    }
+
+    /// Synthetic deep conv classifier for tests/benches that must run
+    /// without `make artifacts`: `depth` 3x3 convs (3→`ch` stem, then
+    /// `ch`→`ch`) feeding gpool + a 10-way dense head, so
+    /// `quant_layers().len() == depth + 1`. With `branchy` the early
+    /// chain carries a residual Add and a channel Concat — the shapes the
+    /// streaming liveness analysis has to keep alive across segments.
+    /// Weights are He-init from `rng`; `depth >= 4` required if `branchy`.
+    pub fn synthetic_chain(depth: usize, ch: usize, branchy: bool, rng: &mut Rng) -> Model {
+        assert!(depth >= 1, "need at least one conv");
+        assert!(!branchy || depth >= 4, "branchy layout needs depth >= 4");
+        let conv = |id: &str, inputs: Vec<String>, cin: usize, cout: usize, relu: bool| Node {
+            id: id.to_string(),
+            op: Op::Conv { k: 3, stride: 1, pad: 1, groups: 1, relu },
+            inputs,
+            cin,
+            cout,
+        };
+        let mut nodes = vec![Node {
+            id: "in".into(),
+            op: Op::Input,
+            inputs: vec![],
+            cin: 0,
+            cout: 0,
+        }];
+        let mut weights = BTreeMap::new();
+        let init = |w: &mut BTreeMap<String, Tensor>, id: &str, shape: &[usize], rng: &mut Rng| {
+            let fan_in: usize = shape[1..].iter().product();
+            let std = (2.0 / fan_in as f32).sqrt();
+            let n: usize = shape.iter().product();
+            w.insert(
+                format!("{id}.w"),
+                Tensor::from_vec(shape, (0..n).map(|_| rng.normal_f32(0.0, std)).collect()),
+            );
+            let biases = (0..shape[0]).map(|_| rng.normal_f32(0.0, 0.01)).collect();
+            w.insert(format!("{id}.b"), Tensor::from_vec(&[shape[0]], biases));
+        };
+        let mut prev = "in".to_string();
+        for i in 1..=depth {
+            let id = format!("c{i}");
+            let cin = if i == 1 { 3 } else { ch };
+            if branchy && i == 3 {
+                // a1 = relu(c2 + c1): keeps c1 live past c2
+                nodes.push(Node {
+                    id: "a1".into(),
+                    op: Op::Add { relu: true },
+                    inputs: vec!["c2".into(), "c1".into()],
+                    cin: 0,
+                    cout: 0,
+                });
+                prev = "a1".into();
+            }
+            if branchy && i == 4 {
+                // m1 = concat(c3, a1): a second long-lived value + a
+                // channel-doubled consumer
+                nodes.push(Node {
+                    id: "m1".into(),
+                    op: Op::Concat,
+                    inputs: vec!["c3".into(), "a1".into()],
+                    cin: 0,
+                    cout: 0,
+                });
+                nodes.push(conv(&id, vec!["m1".into()], 2 * ch, ch, true));
+                init(&mut weights, &id, &[ch, 2 * ch, 3, 3], rng);
+                prev = id;
+                continue;
+            }
+            // c2 stays pre-activation so the branchy Add has signal
+            let relu = !(branchy && i == 2);
+            nodes.push(conv(&id, vec![prev.clone()], cin, ch, relu));
+            init(&mut weights, &id, &[ch, cin, 3, 3], rng);
+            prev = id;
+        }
+        nodes.push(Node { id: "g".into(), op: Op::GPool, inputs: vec![prev], cin: 0, cout: 0 });
+        nodes.push(Node {
+            id: "d1".into(),
+            op: Op::Dense { relu: false },
+            inputs: vec!["g".into()],
+            cin: ch,
+            cout: 10,
+        });
+        init(&mut weights, "d1", &[10, ch], rng);
+        let model = Model {
+            name: format!("synth{depth}{}", if branchy { "b" } else { "" }),
+            task: "cls".into(),
+            nodes,
+            weights,
+        };
+        model.validate().expect("synthetic chain is a valid graph");
+        model
+    }
+
     /// Weight matrix of a quantizable node reshaped to per-group GEMM form:
     /// `groups` matrices of [rows, cols] (a view-copy).
     pub fn weight_as_gemm(&self, id: &str) -> Vec<Tensor> {
@@ -244,6 +393,59 @@ pub(crate) mod tests {
         )
         .unwrap();
         assert!(Model::from_manifest("x", &j, BTreeMap::new()).is_err());
+    }
+
+    #[test]
+    fn liveness_on_linear_chain() {
+        let m = Model::from_manifest("tiny", &tiny_model_json(), tiny_weights()).unwrap();
+        // in(0) -> c1(1) -> g1(2) -> d1(3)
+        assert_eq!(m.node_index("in"), Some(0));
+        assert_eq!(m.node_index("d1"), Some(3));
+        assert_eq!(m.node_index("ghost"), None);
+        let last = m.last_use();
+        assert_eq!(last.get("in"), Some(&1));
+        assert_eq!(last.get("c1"), Some(&2));
+        assert_eq!(last.get("g1"), Some(&3));
+        assert_eq!(last.get("d1"), None, "output is never consumed");
+        let sc = m.successor_counts();
+        assert_eq!(sc.get("c1"), Some(&1));
+        assert_eq!(sc.get("d1"), None);
+        // at cut 2 only c1 is live; the input image is already dead
+        let only_c1: BTreeSet<String> = ["c1".to_string()].into();
+        let only_d1: BTreeSet<String> = ["d1".to_string()].into();
+        assert_eq!(m.live_at(2), only_c1);
+        assert_eq!(m.live_at(4), only_d1);
+    }
+
+    #[test]
+    fn liveness_on_branchy_graph() {
+        let mut rng = Rng::new(3);
+        let m = Model::synthetic_chain(5, 4, true, &mut rng);
+        // in(0) c1(1) c2(2) a1(3) c3(4) m1(5) c4(6) c5(7) g(8) d1(9)
+        assert_eq!(m.quant_layers().len(), 6);
+        let last = m.last_use();
+        // c1 feeds c2 AND the residual add
+        assert_eq!(last.get("c1"), Some(&3));
+        // a1 feeds c3 AND the concat
+        assert_eq!(last.get("a1"), Some(&5));
+        assert_eq!(m.successor_counts().get("a1"), Some(&2));
+        // at the cut before c3 both the skip value and c2's output are gone,
+        // but a1 survives for the concat
+        let live = m.live_at(4);
+        assert!(live.contains("a1"));
+        assert!(!live.contains("c1") && !live.contains("c2"));
+    }
+
+    #[test]
+    fn synthetic_chain_shapes() {
+        let mut rng = Rng::new(7);
+        let m = Model::synthetic_chain(6, 4, false, &mut rng);
+        assert_eq!(m.quant_layers().len(), 7);
+        assert!(m.weights.contains_key("c6.w"));
+        assert_eq!(m.weight("c1").shape, vec![4, 3, 3, 3]);
+        assert_eq!(m.weight("d1").shape, vec![10, 4]);
+        let mb = Model::synthetic_chain(4, 4, true, &mut rng);
+        assert_eq!(mb.weight("c4").shape, vec![4, 8, 3, 3], "concat doubles cin");
     }
 
     #[test]

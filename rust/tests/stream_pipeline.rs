@@ -1,0 +1,194 @@
+//! Streaming-calibration guarantees, end to end and artifact-free:
+//!
+//! 1. the streaming sampler's total prefix layer-forwards are O(L) on a
+//!    deep synthetic model (the replay reference is O(L²)),
+//! 2. the streaming pipeline reproduces the full-replay `QuantizedModel`
+//!    **bit-identically** — weights, biases, scales, activation
+//!    quantizers and per-layer stats — for Nearest, AdaRound and
+//!    BiasCorr, including on a branchy Add/Concat graph,
+//! 3. results are invariant across `PALLAS_THREADS` {1, 4}.
+
+use adaround::adaround::AdaRoundConfig;
+use adaround::coordinator::pipeline::CHUNK_IMGS;
+use adaround::coordinator::{Method, Pipeline, PipelineConfig, QuantizedModel};
+use adaround::data::synthetic_stripes;
+use adaround::nn::Model;
+use adaround::tensor::Tensor;
+use adaround::util::{parallel, Rng};
+
+fn chain(depth: usize, branchy: bool) -> Model {
+    Model::synthetic_chain(depth, 4, branchy, &mut Rng::new(33))
+}
+
+fn calib(n: usize) -> Tensor {
+    synthetic_stripes(n, 3, 8, &mut Rng::new(44)).0
+}
+
+fn cfg(method: Method, replay: bool) -> PipelineConfig {
+    PipelineConfig {
+        method,
+        bits: 3,
+        calib_n: 80, // 2 chunks at CHUNK_IMGS = 64
+        col_budget: 96,
+        adaround: AdaRoundConfig { iters: 40, ..Default::default() },
+        replay_sampler: replay,
+        ..Default::default()
+    }
+}
+
+fn quantize(model: &Model, c: &Tensor, cfg: PipelineConfig, threads: usize) -> QuantizedModel {
+    parallel::with_threads(threads, || {
+        Pipeline::new(model, cfg, None)
+            .quantize(c, &mut Rng::new(1000))
+            .expect("quantize")
+    })
+}
+
+/// Bit-identity over everything the pipeline produces except wall-clock
+/// (`secs`) and the instrumentation counter (which differs by design).
+fn assert_identical(a: &QuantizedModel, b: &QuantizedModel, what: &str) {
+    assert_eq!(a.weight_overrides, b.weight_overrides, "{what}: weight overrides");
+    assert_eq!(a.bias_overrides, b.bias_overrides, "{what}: bias overrides");
+    assert_eq!(a.scales, b.scales, "{what}: grid scales");
+    match (&a.act_quant, &b.act_quant) {
+        (None, None) => {}
+        (Some(x), Some(y)) => {
+            assert_eq!(x.len(), y.len(), "{what}: act-quant count");
+            for (id, qa) in x {
+                let qb = &y[id];
+                assert_eq!(
+                    (qa.min.to_bits(), qa.max.to_bits(), qa.bits),
+                    (qb.min.to_bits(), qb.max.to_bits(), qb.bits),
+                    "{what}: act quant {id}"
+                );
+            }
+        }
+        _ => panic!("{what}: act_quant presence differs"),
+    }
+    assert_eq!(a.stats.len(), b.stats.len(), "{what}: stats length");
+    for (sa, sb) in a.stats.iter().zip(&b.stats) {
+        assert_eq!(sa.id, sb.id, "{what}: stat order");
+        let ga = (sa.rows, sa.cols, sa.groups);
+        assert_eq!(ga, (sb.rows, sb.cols, sb.groups), "{what}: geometry {}", sa.id);
+        let mb = (sa.mse_before.to_bits(), sb.mse_before.to_bits());
+        assert_eq!(mb.0, mb.1, "{what}: mse_before {}", sa.id);
+        assert_eq!(sa.mse_after.to_bits(), sb.mse_after.to_bits(), "{what}: mse_after {}", sa.id);
+        assert_eq!(sa.flipped_frac.to_bits(), sb.flipped_frac.to_bits(), "{what}: flips {}", sa.id);
+    }
+}
+
+#[test]
+fn prefix_work_is_linear_in_depth() {
+    let c = calib(80);
+    let n_chunks = (80usize).div_ceil(CHUNK_IMGS) as u64; // = 2
+    let mut streaming_counts = Vec::new();
+    for depth in [6usize, 12] {
+        let model = chain(depth, false);
+        let l = model.quant_layers().len() as u64;
+        let qm = quantize(&model, &c, cfg(Method::Nearest, false), 1);
+        // each stream (FP32 + quantized prefix) executes each quantizable
+        // node at most once per chunk — the O(L) contract, exactly
+        assert!(
+            qm.layer_execs <= 2 * n_chunks * l,
+            "depth {depth}: {} layer-forwards exceeds the streaming bound {}",
+            qm.layer_execs,
+            2 * n_chunks * l
+        );
+        assert!(qm.layer_execs > 0, "instrumentation must count something");
+        streaming_counts.push(qm.layer_execs);
+    }
+    // doubling the depth must (at most) double the prefix work
+    assert!(
+        streaming_counts[1] <= streaming_counts[0] * 5 / 2,
+        "streaming forwards not linear: depth 6 -> {}, depth 12 -> {}",
+        streaming_counts[0],
+        streaming_counts[1]
+    );
+
+    // the replay reference on the deep model is quadratic — and the
+    // streaming path beats it by a wide margin
+    let model = chain(12, false);
+    let l = model.quant_layers().len() as u64;
+    let replay = quantize(&model, &c, cfg(Method::Nearest, true), 1);
+    assert!(
+        replay.layer_execs >= n_chunks * l * (l - 1) / 2,
+        "replay count {} is not O(L²)?",
+        replay.layer_execs
+    );
+    assert!(
+        replay.layer_execs >= 3 * streaming_counts[1],
+        "streaming ({}) should do several times fewer layer-forwards than replay ({})",
+        streaming_counts[1],
+        replay.layer_execs
+    );
+}
+
+#[test]
+fn streaming_matches_replay_bit_for_bit() {
+    let model = chain(8, false);
+    let c = calib(80);
+    for method in [Method::Nearest, Method::AdaRound, Method::BiasCorr] {
+        let s = quantize(&model, &c, cfg(method, false), 1);
+        let r = quantize(&model, &c, cfg(method, true), 1);
+        assert_identical(&s, &r, &format!("{method:?}"));
+        assert!(
+            r.layer_execs > s.layer_execs,
+            "{method:?}: replay must do more prefix work ({} vs {})",
+            r.layer_execs,
+            s.layer_execs
+        );
+    }
+}
+
+#[test]
+fn branchy_graph_matches_replay_with_act_quant() {
+    // Add + Concat keep long-lived taps across frontiers; activation
+    // quantization exercises the post-pipeline calibration pass too
+    let model = chain(5, true);
+    let c = calib(80);
+    for method in [Method::Nearest, Method::BiasCorr] {
+        let mut cs = cfg(method, false);
+        cs.act_bits = Some(8);
+        let mut cr = cfg(method, true);
+        cr.act_bits = Some(8);
+        let s = quantize(&model, &c, cs, 1);
+        let r = quantize(&model, &c, cr, 1);
+        assert!(s.act_quant.is_some(), "act quant requested");
+        assert_identical(&s, &r, &format!("branchy {method:?}"));
+    }
+}
+
+#[test]
+fn streaming_is_thread_count_invariant() {
+    let model = chain(6, true);
+    let c = calib(80);
+    for method in [Method::Nearest, Method::AdaRound, Method::BiasCorr] {
+        let t1 = quantize(&model, &c, cfg(method, false), 1);
+        let t4 = quantize(&model, &c, cfg(method, false), 4);
+        assert_identical(&t1, &t4, &format!("{method:?} threads 1 vs 4"));
+        assert_eq!(
+            t1.layer_execs, t4.layer_execs,
+            "{method:?}: even the forward count must not depend on threads"
+        );
+        // close the grid: replay at 4 threads equals streaming at 1
+        let r4 = quantize(&model, &c, cfg(method, true), 4);
+        assert_identical(&t1, &r4, &format!("{method:?} streaming/1 vs replay/4"));
+    }
+}
+
+#[test]
+fn only_layers_subset_streams_identically() {
+    // layer selection skips overrides for unselected layers; the stream
+    // still propagates through them with FP32 weights, like the replay
+    let model = chain(6, false);
+    let c = calib(80);
+    let subset = vec!["c2".to_string(), "c5".to_string()];
+    let mut cs = cfg(Method::Nearest, false);
+    cs.only_layers = Some(subset.clone());
+    let mut cr = cfg(Method::Nearest, true);
+    cr.only_layers = Some(subset);
+    let s = quantize(&model, &c, cs, 1);
+    let r = quantize(&model, &c, cr, 1);
+    assert_eq!(s.weight_overrides.len(), 2);
+    assert_identical(&s, &r, "only-layers subset");
+}
