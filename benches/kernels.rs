@@ -21,7 +21,10 @@ use adaround::adaround::{Adam, LayerProblem, StepWorkspace};
 use adaround::quant::{fake_quant_nearest, rounding_mask, QuantGrid, RoundingMode};
 use adaround::qubo::{solve_cem, solve_tabu, CemParams, QuboProblem, TabuParams};
 use adaround::runtime::{Runtime, StepState};
-use adaround::tensor::int8::gemm_i8_into;
+use adaround::tensor::int8::kernel::{
+    self as ikern, gemm_conv_packed_into, gemm_dense_packed_into, Kernel, PackedConv, PackedDense,
+};
+use adaround::tensor::int8::{gemm_i8_into, gemm_u8_bt_into};
 use adaround::tensor::{conv2d, matmul, Conv2dParams, Tensor};
 use adaround::util::bench::{Bench, BenchResult};
 use adaround::util::{parallel, Json, Rng};
@@ -111,7 +114,11 @@ fn main() {
     });
     record(&mut results, r);
 
-    // int8 GEMM at a conv-bucket shape (the serving engine's hot kernel)
+    // int8 GEMMs at a conv-bucket shape (the serving engine's hot kernel):
+    // the old unpacked scalar loop vs the packed micro-kernels, portable
+    // and (when the CPU has it) AVX2. Entry names carry the kernel label;
+    // bench-diff skips entries absent from one side, so the avx2 rows
+    // vanish harmlessly on machines without it.
     {
         let (m, k, n) = (32usize, 288usize, 1024usize);
         let a: Vec<i8> = (0..m * k).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
@@ -123,6 +130,48 @@ fn main() {
             std::hint::black_box(&c);
         });
         record(&mut results, r);
+
+        let mut kerns = vec![Kernel::Portable];
+        if ikern::avx2_available() {
+            kerns.push(Kernel::Avx2);
+        }
+        let packed = PackedConv::pack(&a, m, k);
+        for &kern in &kerns {
+            let r = b.run_with_items(
+                &format!("gemm_i8 packed-{} {m}x{k}x{n} (MACs/s)", kern.name()),
+                m * k * n,
+                &mut || {
+                    gemm_conv_packed_into(kern, &packed.data, m, k, packed.kp, &bq, &mut c, n);
+                    std::hint::black_box(&c);
+                },
+            );
+            record(&mut results, r);
+        }
+
+        // dense orientation: u8 activations x i8 weight rows (A · W^T)
+        let act: Vec<u8> = (0..m * k).map(|_| rng.below(256) as u8).collect();
+        let wt: Vec<i8> = (0..n * k).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+        let r = b.run_with_items(
+            &format!("gemm_u8_bt scalar {m}x{k}x{n} (MACs/s)"),
+            m * k * n,
+            &mut || {
+                gemm_u8_bt_into(&act, &wt, &mut c, m, k, n);
+                std::hint::black_box(&c);
+            },
+        );
+        record(&mut results, r);
+        let pdense = PackedDense::pack(&wt, n, k);
+        for &kern in &kerns {
+            let r = b.run_with_items(
+                &format!("gemm_u8_bt packed-{} {m}x{k}x{n} (MACs/s)", kern.name()),
+                m * k * n,
+                &mut || {
+                    gemm_dense_packed_into(kern, &act, &pdense, &mut c, m);
+                    std::hint::black_box(&c);
+                },
+            );
+            record(&mut results, r);
+        }
     }
 
     // native AdaRound step (loss_grad_into + Adam, reused workspace) at

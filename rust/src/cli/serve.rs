@@ -92,11 +92,16 @@ pub fn cmd_serve_bench(args: &Args) -> Result<()> {
     };
 
     let mut engine = ServeEngine::compile(&model, &qm, &val.0.shape[1..])?;
+    let kernel_name = engine.kernel().name();
     let opts = qm.opts();
     let fp = top1(&model, &val.0, &val.1, &ForwardOptions::default(), 64);
     let fq = top1(&model, &val.0, &val.1, &opts, 64);
     let iq = engine_top1(&mut engine, &val.0, &val.1, 64);
     println!("== serve-bench {name} (threads: {}) ==", parallel::num_threads());
+    println!(
+        "gemm kernel: {} (PALLAS_NO_SIMD forces portable; outputs are bit-identical either way)",
+        engine.kernel().name()
+    );
     println!("top-1: fp32 {fp:.2}%   fake-quant {fq:.2}%   int8 engine {iq:.2}%");
 
     let mut results: Vec<Json> = Vec::new();
@@ -176,6 +181,7 @@ pub fn cmd_serve_bench(args: &Args) -> Result<()> {
     root.insert("bench".to_string(), Json::Str("serving".to_string()));
     root.insert("model".to_string(), Json::Str(name));
     root.insert("threads".to_string(), Json::Num(parallel::num_threads() as f64));
+    root.insert("kernel".to_string(), Json::Str(kernel_name.to_string()));
     root.insert("shards".to_string(), Json::Num(shards as f64));
     root.insert("top1_fp32".to_string(), Json::Num(fp));
     root.insert("top1_fake_quant".to_string(), Json::Num(fq));

@@ -13,6 +13,7 @@ use anyhow::Result;
 
 use crate::coordinator::QuantizedModel;
 use crate::nn::Model;
+use crate::tensor::int8::kernel::{self, Kernel};
 use crate::tensor::{Tensor, U8Tensor};
 
 use super::ikernels::{
@@ -31,6 +32,11 @@ pub struct ServeEngine {
     /// activation tensors as soon as they're dead, keeping the resident
     /// set at the live frontier instead of the whole network
     last_use: Vec<usize>,
+    /// GEMM micro-kernel implementation, captured once at construction
+    /// ([`kernel::select`]: AVX2 when detected, unless `PALLAS_NO_SIMD`)
+    /// and passed down every call — so each worker thread of a forward
+    /// runs the same code path, and tests can pin the portable one
+    kernel: Kernel,
     ws: Int8Workspace,
 }
 
@@ -52,16 +58,32 @@ impl ServeEngine {
         if n > 0 {
             last_use[n - 1] = usize::MAX; // the output survives the walk
         }
-        ServeEngine { plan, last_use, ws: Int8Workspace::new() }
+        ServeEngine { plan, last_use, kernel: kernel::select(), ws: Int8Workspace::new() }
     }
 
     /// Fork a sibling engine: same read-only plan (shared, no weight
-    /// copy), fresh private scratch. The unit of sharding in
-    /// [`super::Batcher`] — forwards on forks are bit-identical to
-    /// forwards on `self` because the plan is immutable and every kernel
-    /// is deterministic.
+    /// copy), same kernel choice, fresh private scratch. The unit of
+    /// sharding in [`super::Batcher`] — forwards on forks are
+    /// bit-identical to forwards on `self` because the plan is immutable
+    /// and every kernel is deterministic.
     pub fn fork(&self) -> ServeEngine {
-        ServeEngine::from_shared(Arc::clone(&self.plan))
+        let mut e = ServeEngine::from_shared(Arc::clone(&self.plan));
+        e.kernel = self.kernel;
+        e
+    }
+
+    /// Pin a specific GEMM micro-kernel (tests, benches, the differential
+    /// harness). Results are bit-identical across kernels, so this is
+    /// never needed for correctness.
+    pub fn with_kernel(mut self, kernel: Kernel) -> ServeEngine {
+        self.kernel = kernel;
+        self
+    }
+
+    /// The GEMM micro-kernel this engine dispatches to (reported by
+    /// `adaround serve-bench`).
+    pub fn kernel(&self) -> Kernel {
+        self.kernel
     }
 
     /// Compile a float model + its quantized overrides into an engine.
@@ -110,6 +132,7 @@ impl ServeEngine {
                     let inp = vals[nd.inputs[0]].as_ref().expect("topological order");
                     conv2d_i8(
                         &mut self.ws,
+                        self.kernel,
                         inp,
                         w,
                         *p,
@@ -125,6 +148,7 @@ impl ServeEngine {
                     let inp = vals[nd.inputs[0]].as_ref().expect("topological order");
                     dense_i8(
                         &mut self.ws,
+                        self.kernel,
                         inp,
                         w,
                         bias_q,

@@ -15,10 +15,18 @@
 //! their planes across the pool once a batch carries enough elements —
 //! deterministic index-based splits throughout
 //! ([`crate::util::parallel`]).
+//!
+//! The conv/dense GEMMs run on the runtime-dispatched packed micro-kernels
+//! ([`crate::tensor::int8::kernel`]): weights arrive pre-packed from plan
+//! compilation, the [`Kernel`] choice is captured by the engine and passed
+//! down, and packed-layout invariants are re-checked by `debug_assert!`
+//! here so a layout bug fails loudly instead of corrupting accumulators.
 
 use crate::tensor::conv::out_size;
-use crate::tensor::int8::{gemm_i8_into, gemm_u8_bt_into};
-use crate::tensor::{Conv2dParams, I8Tensor, U8Tensor};
+use crate::tensor::int8::kernel::{
+    gemm_conv_packed_into, gemm_dense_packed_into, Kernel, PackedConv, PackedDense,
+};
+use crate::tensor::{Conv2dParams, U8Tensor};
 use crate::util::parallel;
 
 use super::plan::Requant;
@@ -96,14 +104,16 @@ fn im2col_u8_row(
     crate::tensor::conv::im2col_row_any(&input.shape, &input.data, group, p, zp, r, orow);
 }
 
-/// Integer conv2d: input [N,C,H,W] u8, weights [O, C/g·k·k] i8 (grouped
-/// rows) -> [N,O,Ho,Wo] u8. The three passes (im2col, per-group GEMM,
-/// requant scatter) follow [`crate::tensor::conv2d_with`].
+/// Integer conv2d: input [N,C,H,W] u8, packed weights ([`PackedConv`],
+/// `O` rows of the grouped patch `C/g·k·k`) -> [N,O,Ho,Wo] u8. The three
+/// passes (im2col, per-group GEMM, requant scatter) follow
+/// [`crate::tensor::conv2d_with`]; the GEMM runs the `kern` micro-kernel.
 #[allow(clippy::too_many_arguments)]
 pub fn conv2d_i8(
     ws: &mut Int8Workspace,
+    kern: Kernel,
     input: &U8Tensor,
-    w: &I8Tensor,
+    w: &PackedConv,
     p: Conv2dParams,
     bias_q: &[i32],
     wsum: &[i32],
@@ -112,10 +122,14 @@ pub fn conv2d_i8(
     zp_out: i32,
     relu: bool,
 ) -> U8Tensor {
-    let (n, h, wd) = (input.shape[0], input.shape[2], input.shape[3]);
-    let o = w.shape[0];
+    let (n, c, h, wd) = (input.shape[0], input.shape[1], input.shape[2], input.shape[3]);
+    let o = w.rows;
     let og = o / p.groups;
-    let patch = w.numel() / o;
+    let patch = w.k;
+    // packed-layout invariants: a stale or corrupted pack must fail here,
+    // in tests, not silently poison the accumulators below
+    debug_assert_eq!(patch, (c / p.groups) * p.k * p.k, "packed patch vs input geometry");
+    debug_assert!(w.layout_ok(), "PackedConv layout invariants violated");
     let (ho, wo) = (out_size(h, p.k, p.stride, p.pad), out_size(wd, p.k, p.stride, p.pad));
     let npos = n * ho * wo;
     let hw = ho * wo;
@@ -131,11 +145,11 @@ pub fn conv2d_i8(
 
     // pass 2: grouped i8 GEMM over the FLAT output-channel index; a
     // unit's row range is cut at group boundaries so each segment
-    // multiplies against its own group's im2col block (integer adds —
-    // trivially identical across any row batching)
+    // multiplies against its own group's im2col block. Packed rows stay
+    // contiguous, so the group/row split slices the pack directly; the
+    // micro-kernel overwrites its rows, so no accumulator clear is needed
     let cols_len = p.groups * patch * npos;
-    let acc: &mut Vec<i32> = ws.ensure_acc(o * npos);
-    acc.fill(0);
+    ws.ensure_acc(o * npos);
     // split the borrow: cols is read-only below
     let (cols_ref, acc_ref) = (&ws.cols[..cols_len], &mut ws.acc);
     parallel::par_grouped_rows_mut(
@@ -144,9 +158,18 @@ pub fn conv2d_i8(
         og,
         crate::tensor::int8::row_grain(patch, npos),
         |g, rows, seg| {
-            let wslice = &w.data[rows.start * patch..rows.end * patch];
+            let wslice = w.row_slice(rows.clone());
             let cslice = &cols_ref[g * patch * npos..(g + 1) * patch * npos];
-            gemm_i8_into(wslice, cslice, seg, rows.end - rows.start, patch, npos);
+            gemm_conv_packed_into(
+                kern,
+                wslice,
+                rows.end - rows.start,
+                patch,
+                w.kp,
+                cslice,
+                seg,
+                npos,
+            );
         },
     );
 
@@ -170,12 +193,14 @@ pub fn conv2d_i8(
     out
 }
 
-/// Integer dense layer: input [N, C] u8, weights [O, C] i8 -> [N, O] u8.
+/// Integer dense layer: input [N, C] u8, packed weights
+/// ([`PackedDense`], `O` rows of `C`) -> [N, O] u8.
 #[allow(clippy::too_many_arguments)]
 pub fn dense_i8(
     ws: &mut Int8Workspace,
+    kern: Kernel,
     input: &U8Tensor,
-    w: &I8Tensor,
+    w: &PackedDense,
     bias_q: &[i32],
     wsum: &[i32],
     requant: &[Requant],
@@ -184,10 +209,11 @@ pub fn dense_i8(
     relu: bool,
 ) -> U8Tensor {
     let (n, c) = (input.shape[0], input.shape[1]);
-    let o = w.shape[0];
-    assert_eq!(w.numel(), o * c, "dense weight shape mismatch");
+    let o = w.n;
+    assert_eq!(w.k, c, "dense weight shape mismatch");
+    debug_assert!(w.layout_ok(), "PackedDense layout invariants violated");
     let acc: &mut Vec<i32> = ws.ensure_acc(n * o);
-    gemm_u8_bt_into(&input.data, &w.data, acc, n, c, o);
+    gemm_dense_packed_into(kern, &input.data, w, acc, n);
     let mut out = U8Tensor::zeros(&[n, o]);
     let lo = if relu { zp_out } else { 0 };
     let acc_ref = &ws.acc;
@@ -353,10 +379,15 @@ pub fn concat_i8(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::tensor::{conv2d, Tensor};
+    use crate::tensor::{conv2d, I8Tensor, Tensor};
 
     fn identity_requant() -> Requant {
         Requant::from_real(1.0)
+    }
+
+    fn pack_conv(w: &I8Tensor) -> PackedConv {
+        let o = w.shape[0];
+        PackedConv::pack(&w.data, o, w.numel() / o)
     }
 
     #[test]
@@ -409,7 +440,20 @@ mod tests {
             .collect();
         let requant = vec![identity_requant(); o];
         let mut ws = Int8Workspace::new();
-        let got = conv2d_i8(&mut ws, &qin, &wi, p, &bias_q, &wsum, &requant, zp_in, 0, false);
+        let wp = pack_conv(&wi);
+        let got = conv2d_i8(
+            &mut ws,
+            crate::tensor::int8::kernel::select(),
+            &qin,
+            &wp,
+            p,
+            &bias_q,
+            &wsum,
+            &requant,
+            zp_in,
+            0,
+            false,
+        );
         // f32 oracle on real values (q - zp) with unit scale
         let fin = Tensor::from_vec(
             &[n, c, hw, hw],
@@ -449,10 +493,24 @@ mod tests {
             .map(|oc| wi.data[oc * patch..(oc + 1) * patch].iter().map(|&z| z as i32).sum())
             .collect();
         let requant = vec![identity_requant(); o];
+        let wp = pack_conv(&wi);
         let run = |threads: usize| {
             with_threads(threads, || {
                 let mut ws = Int8Workspace::new();
-                conv2d_i8(&mut ws, &qin, &wi, p, &bias_q, &wsum, &requant, zp_in, 0, false).data
+                conv2d_i8(
+                    &mut ws,
+                    crate::tensor::int8::kernel::select(),
+                    &qin,
+                    &wp,
+                    p,
+                    &bias_q,
+                    &wsum,
+                    &requant,
+                    zp_in,
+                    0,
+                    false,
+                )
+                .data
             })
         };
         let got = run(1);
@@ -488,7 +546,19 @@ mod tests {
             .collect();
         let requant = vec![identity_requant(); o];
         let mut ws = Int8Workspace::new();
-        let got = dense_i8(&mut ws, &qin, &wi, &bias_q, &wsum, &requant, zp_in, 0, true);
+        let wp = PackedDense::pack(&wi.data, o, c);
+        let got = dense_i8(
+            &mut ws,
+            crate::tensor::int8::kernel::select(),
+            &qin,
+            &wp,
+            &bias_q,
+            &wsum,
+            &requant,
+            zp_in,
+            0,
+            true,
+        );
         for ni in 0..n {
             for oc in 0..o {
                 let mut acc = bias_q[oc];

@@ -12,7 +12,11 @@
 //!    happens here, once.
 //! 2. **execute** ([`engine`], [`ikernels`]): a [`ServeEngine`] walks the
 //!    plan with u8 activations, i8×u8→i32 GEMMs and fused
-//!    requant+ReLU+saturate — no float ops in the layer loop.
+//!    requant+ReLU+saturate — no float ops in the layer loop. The GEMMs
+//!    run a runtime-dispatched micro-kernel
+//!    ([`crate::tensor::int8::kernel`]): AVX2 `vpmaddwd` over weights
+//!    packed at compile time, or a bit-identical portable fallback
+//!    (`PALLAS_NO_SIMD=1` forces it).
 //! 3. **serve** ([`batch`]): a [`Batcher`] coalesces single-image requests
 //!    into batched forwards under a max-batch / max-wait policy, sharded
 //!    across `shards` engines that share one read-only plan
@@ -98,6 +102,7 @@ pub use batch::{
 };
 pub use engine::ServeEngine;
 pub use plan::{compile_plan, ActQ, QuantizedPlan, Requant};
+pub use crate::tensor::int8::kernel::Kernel;
 
 use std::collections::BTreeMap;
 

@@ -26,6 +26,7 @@ use anyhow::{anyhow, bail, Result};
 use crate::coordinator::QuantizedModel;
 use crate::nn::{Model, Op};
 use crate::quant::ActQuant;
+use crate::tensor::int8::kernel::{PackedConv, PackedDense};
 use crate::tensor::{Conv2dParams, I8Tensor, Tensor};
 
 /// Fixed-point multiplier: `real ≈ m / 2^shift`, `m` in `[0, 2^31)`.
@@ -123,13 +124,17 @@ impl ActQ {
 }
 
 /// One integer layer. Weight-bearing variants carry everything the kernel
-/// needs precomputed; data-movement variants carry per-input requant pairs.
+/// needs precomputed — including the weights already packed into the
+/// micro-kernel layout ([`crate::tensor::int8::kernel`]), so the serving
+/// hot loop does zero repacking; data-movement variants carry per-input
+/// requant pairs.
 pub enum PlanOp {
     /// f32 input -> u8 (the only op touching floats at run time).
     Quantize,
     Conv {
-        /// i8 weights, grouped GEMM layout [cout, cin/g·k·k]
-        w: I8Tensor,
+        /// i8 weights in the packed conv-GEMM layout: `cout` rows of the
+        /// grouped patch (`cin/g·k·k`), K-padded per row
+        w: PackedConv,
         p: Conv2dParams,
         /// bias folded to the accumulator domain, per output channel
         bias_q: Vec<i32>,
@@ -140,8 +145,8 @@ pub enum PlanOp {
         relu: bool,
     },
     Dense {
-        /// i8 weights [cout, cin]
-        w: I8Tensor,
+        /// i8 weights `[cout, cin]` in the packed quad-interleaved layout
+        w: PackedDense,
         bias_q: Vec<i32>,
         wsum: Vec<i32>,
         requant: Vec<Requant>,
@@ -304,17 +309,23 @@ fn lower_node(
     let op = match &nd.op {
         Op::Input => return Ok((PlanOp::Quantize, in_hw)),
         Op::Conv { k, stride, pad, groups, relu } => {
-            let (w, bias_q, wsum, requant) = lower_weights(model, qm, nd, in_q[0], out_q)?;
+            let (wi, bias_q, wsum, requant) = lower_weights(model, qm, nd, in_q[0], out_q)?;
             let p = Conv2dParams { k: *k, stride: *stride, pad: *pad, groups: *groups };
             let ho = out_size(in_hw.0, *k, *stride, *pad);
             let wo = out_size(in_hw.1, *k, *stride, *pad);
+            // pack once, at compile time: the batcher's hot loop feeds the
+            // micro-kernel straight from this buffer
+            let cout = wi.shape[0];
+            let w = PackedConv::pack(&wi.data, cout, wi.numel() / cout);
             return Ok((
                 PlanOp::Conv { w, p, bias_q, wsum, requant, relu: *relu },
                 (ho, wo),
             ));
         }
         Op::Dense { relu } => {
-            let (w, bias_q, wsum, requant) = lower_weights(model, qm, nd, in_q[0], out_q)?;
+            let (wi, bias_q, wsum, requant) = lower_weights(model, qm, nd, in_q[0], out_q)?;
+            let cout = wi.shape[0];
+            let w = PackedDense::pack(&wi.data, cout, wi.numel() / cout);
             PlanOp::Dense { w, bias_q, wsum, requant, relu: *relu }
         }
         Op::Add { relu } => PlanOp::Add {

@@ -1,0 +1,589 @@
+//! Runtime-dispatched i8 GEMM micro-kernels over ahead-of-time packed
+//! weights — the serving engine's hot loop.
+//!
+//! Two kernel shapes cover the integer engine:
+//!
+//! * **conv** ([`gemm_conv_packed_into`]): `C[m,n] = A_i8[m,k] · B_u8[k,n]`
+//!   with A = packed weights and B = im2col columns. Vectorized over the
+//!   position axis `n` with the weight pair broadcast, two output rows per
+//!   register tile.
+//! * **dense** ([`gemm_dense_packed_into`]): `C[m,n] = A_u8[m,k] · W^T`
+//!   with W = packed weight rows. Vectorized over the reduction axis `k`,
+//!   four weight rows sharing one streaming pass of the activation row.
+//!
+//! The AVX2 path is built on `vpmaddwd` (`_mm256_madd_epi16`) after
+//! explicit u8→i16 / i8→i16 widening. Every 16-bit product of a u8
+//! activation and an i8 weight fits i16 (|255·−128| = 32640), and each
+//! `vpmaddwd` pair-sum fits i32, so — unlike the classic `vpmaddubsw`
+//! trick, which saturates at i16 — **every intermediate is exact**. i32
+//! accumulation then wraps mod 2³², under which addition is associative
+//! and commutative, so any blocking/vector width/ISA produces
+//! bit-identical accumulators. That is the determinism contract: the
+//! portable fallback mirrors the same K-blocking and is bit-for-bit equal
+//! to the AVX2 path on every input (proved against the scalar reference
+//! in `rust/tests/int8_kernels.rs`, including near-`i32::MIN` accumulator
+//! edges), so `PALLAS_NO_SIMD=1` is a pure performance knob.
+//!
+//! Packing ([`PackedConv`], [`PackedDense`]) happens once at plan-compile
+//! time ([`crate::serve::plan`]); the batcher's hot loop does zero
+//! repacking. Layout invariants (zero padding, block alignment) are
+//! re-checked by `debug_assert!`s in the serve kernels so a layout bug
+//! fails loudly in tests instead of silently corrupting accumulators.
+
+#![allow(clippy::needless_range_loop)]
+
+use std::ops::Range;
+use std::sync::OnceLock;
+
+use crate::util::parallel;
+
+/// K blocking of the conv kernel: weights are consumed as `vpmaddwd`
+/// pairs, so packed conv rows are zero-padded to a multiple of 2.
+pub const CONV_KB: usize = 2;
+/// K blocking of the dense kernel: one 128-bit load widened to 16×i16.
+pub const DENSE_KB: usize = 16;
+/// Dense register tile: weight rows interleaved (and zero-row padded) in
+/// quads so four dot products share one activation stream.
+pub const DENSE_NR: usize = 4;
+
+fn round_up(x: usize, to: usize) -> usize {
+    x.div_ceil(to) * to
+}
+
+/// Which micro-kernel implementation to run. Selected once per process by
+/// [`select`]; engines capture the choice at construction so every worker
+/// thread of a forward uses the same implementation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kernel {
+    /// `vpmaddwd`-based x86_64 path (requires AVX2; the GEMM entry points
+    /// demote it to [`Kernel::Portable`] on CPUs without it, so passing it
+    /// is always safe).
+    Avx2,
+    /// Chunked scalar path with the identical blocking; compiles on every
+    /// ISA and auto-vectorizes reasonably. Bit-identical to [`Kernel::Avx2`].
+    Portable,
+}
+
+impl Kernel {
+    /// Stable label used by `serve-bench` and the bench entry names.
+    pub fn name(self) -> &'static str {
+        match self {
+            Kernel::Avx2 => "avx2",
+            Kernel::Portable => "portable",
+        }
+    }
+}
+
+/// CPUID-level availability of the AVX2 path (ignores `PALLAS_NO_SIMD`).
+pub fn avx2_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        is_x86_feature_detected!("avx2")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// `PALLAS_NO_SIMD` contract: any non-empty value other than `0` disables
+/// the SIMD path (so `PALLAS_NO_SIMD=1`, `=true`, `=yes` all work).
+pub fn no_simd_requested(v: Option<&str>) -> bool {
+    matches!(v.map(str::trim), Some(s) if !s.is_empty() && s != "0")
+}
+
+/// One uncached dispatch decision: `PALLAS_NO_SIMD` wins, then CPU
+/// feature detection. Exposed for tests that exercise the env contract;
+/// production paths go through the cached [`select`].
+pub fn select_uncached() -> Kernel {
+    if no_simd_requested(std::env::var("PALLAS_NO_SIMD").ok().as_deref()) {
+        Kernel::Portable
+    } else if avx2_available() {
+        Kernel::Avx2
+    } else {
+        Kernel::Portable
+    }
+}
+
+/// The process-wide kernel choice, detected once and cached.
+pub fn select() -> Kernel {
+    static K: OnceLock<Kernel> = OnceLock::new();
+    *K.get_or_init(select_uncached)
+}
+
+/// Demote a requested kernel to one this CPU can actually run: the GEMM
+/// entry points are safe functions, so a caller-supplied
+/// [`Kernel::Avx2`] must never reach target-feature code on a machine
+/// without AVX2 (that would be UB) — it falls back to the portable path,
+/// which is bit-identical anyway.
+fn usable(kern: Kernel) -> Kernel {
+    match kern {
+        Kernel::Avx2 if avx2_available() => Kernel::Avx2,
+        _ => Kernel::Portable,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Packed weight layouts
+// ---------------------------------------------------------------------------
+
+/// Conv weights packed for [`gemm_conv_packed_into`]: row-major `[rows]`
+/// rows of `kp` bytes each, where `kp` is `k` rounded up to [`CONV_KB`]
+/// and the pad byte is zero. Rows stay contiguous (no row interleaving),
+/// so a grouped conv can hand any `[r0, r1)` row range to the kernel by
+/// plain slicing — the `par_grouped_rows_mut` fan-out cuts at group
+/// boundaries exactly as before.
+#[derive(Clone, Debug)]
+pub struct PackedConv {
+    pub rows: usize,
+    /// logical reduction length (im2col patch size)
+    pub k: usize,
+    /// padded row stride in bytes (`k` rounded up to [`CONV_KB`])
+    pub kp: usize,
+    pub data: Vec<i8>,
+}
+
+impl PackedConv {
+    pub fn pack(w: &[i8], rows: usize, k: usize) -> PackedConv {
+        assert_eq!(w.len(), rows * k, "conv pack: {} weights for {rows}x{k}", w.len());
+        let kp = round_up(k.max(1), CONV_KB);
+        let mut data = vec![0i8; rows * kp];
+        for r in 0..rows {
+            data[r * kp..r * kp + k].copy_from_slice(&w[r * k..(r + 1) * k]);
+        }
+        PackedConv { rows, k, kp, data }
+    }
+
+    /// The packed bytes of rows `r.start..r.end` (group slicing).
+    pub fn row_slice(&self, r: Range<usize>) -> &[i8] {
+        &self.data[r.start * self.kp..r.end * self.kp]
+    }
+
+    /// Layout invariants: stride math and zeroed K padding. O(weights) —
+    /// meant for `debug_assert!` at kernel entry, not the hot loop.
+    pub fn layout_ok(&self) -> bool {
+        self.kp == round_up(self.k.max(1), CONV_KB)
+            && self.data.len() == self.rows * self.kp
+            && (0..self.rows).all(|r| {
+                self.data[r * self.kp + self.k..(r + 1) * self.kp].iter().all(|&z| z == 0)
+            })
+    }
+}
+
+/// Dense weights `[n, k]` packed for [`gemm_dense_packed_into`]:
+/// row quads interleaved at [`DENSE_KB`] granularity. With
+/// `nb = kp / DENSE_KB` blocks per row, the block for (quad `q`, k-block
+/// `t`, lane `r`) lives at byte offset `((q·nb + t)·DENSE_NR + r)·DENSE_KB`
+/// — i.e. the four rows of a quad alternate K-blocks, so the kernel's four
+/// accumulators read one contiguous 64-byte span per k-step. `k` pads to
+/// `kp` (zero bytes), `n` pads to `np` (all-zero rows).
+#[derive(Clone, Debug)]
+pub struct PackedDense {
+    /// logical output count (rows of the original weight matrix)
+    pub n: usize,
+    /// logical reduction length
+    pub k: usize,
+    /// padded reduction length (multiple of [`DENSE_KB`])
+    pub kp: usize,
+    /// padded row count (multiple of [`DENSE_NR`])
+    pub np: usize,
+    pub data: Vec<i8>,
+}
+
+impl PackedDense {
+    pub fn pack(w: &[i8], n: usize, k: usize) -> PackedDense {
+        assert_eq!(w.len(), n * k, "dense pack: {} weights for {n}x{k}", w.len());
+        let kp = round_up(k.max(1), DENSE_KB);
+        let np = round_up(n.max(1), DENSE_NR);
+        let nb = kp / DENSE_KB;
+        let mut data = vec![0i8; np * kp];
+        for j in 0..n {
+            let (q, r) = (j / DENSE_NR, j % DENSE_NR);
+            for t in 0..nb {
+                let k0 = t * DENSE_KB;
+                if k0 >= k {
+                    break;
+                }
+                let kend = k.min(k0 + DENSE_KB);
+                let base = ((q * nb + t) * DENSE_NR + r) * DENSE_KB;
+                data[base..base + (kend - k0)].copy_from_slice(&w[j * k + k0..j * k + kend]);
+            }
+        }
+        PackedDense { n, k, kp, np, data }
+    }
+
+    /// Layout invariants: stride math, zeroed K padding of every real row
+    /// and all-zero pad rows. O(weights); for `debug_assert!` use.
+    pub fn layout_ok(&self) -> bool {
+        let nb = self.kp / DENSE_KB;
+        if self.kp != round_up(self.k.max(1), DENSE_KB)
+            || self.np != round_up(self.n.max(1), DENSE_NR)
+            || self.data.len() != self.np * self.kp
+        {
+            return false;
+        }
+        for j in 0..self.np {
+            let (q, r) = (j / DENSE_NR, j % DENSE_NR);
+            for t in 0..nb {
+                let base = ((q * nb + t) * DENSE_NR + r) * DENSE_KB;
+                let blk = &self.data[base..base + DENSE_KB];
+                for (tt, &z) in blk.iter().enumerate() {
+                    let kk = t * DENSE_KB + tt;
+                    if (j >= self.n || kk >= self.k) && z != 0 {
+                        return false;
+                    }
+                }
+            }
+        }
+        true
+    }
+}
+
+// ---------------------------------------------------------------------------
+// GEMM entry points (parallel over output rows, overwrite semantics)
+// ---------------------------------------------------------------------------
+
+/// `C[m,n] = A · B` for packed conv weights `a` (`m` rows of `kp` bytes,
+/// logical reduction `k`), u8 im2col block `b` (`[k, n]` row-major) and
+/// i32 output `c` (`[m, n]`, overwritten). Row-parallel over the worker
+/// pool with the same grain as the scalar GEMM; inside a pool worker the
+/// nested call runs serially, so the grouped-conv fan-out keeps its
+/// existing split.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_conv_packed_into(
+    kern: Kernel,
+    a: &[i8],
+    m: usize,
+    k: usize,
+    kp: usize,
+    b: &[u8],
+    c: &mut [i32],
+    n: usize,
+) {
+    debug_assert!(k >= 1, "conv GEMM needs a nonempty reduction");
+    debug_assert_eq!(a.len(), m * kp, "packed A length");
+    debug_assert_eq!(kp, round_up(k.max(1), CONV_KB), "conv K padding");
+    debug_assert_eq!(b.len(), k * n, "B shape");
+    debug_assert_eq!(c.len(), m * n, "C shape");
+    if m == 0 || n == 0 {
+        return;
+    }
+    let kern = usable(kern);
+    parallel::par_ranges_mut(c, n, super::row_grain(k, n), |rows, span| {
+        let aspan = &a[rows.start * kp..rows.end * kp];
+        match kern {
+            Kernel::Avx2 => {
+                // SAFETY: usable() only lets Avx2 through when the CPU
+                // has it, so the target feature is present.
+                #[cfg(target_arch = "x86_64")]
+                unsafe {
+                    conv_span_avx2(aspan, rows.end - rows.start, k, kp, b, span, n);
+                }
+                #[cfg(not(target_arch = "x86_64"))]
+                conv_span_portable(aspan, rows.end - rows.start, k, kp, b, span, n);
+            }
+            Kernel::Portable => conv_span_portable(aspan, rows.end - rows.start, k, kp, b, span, n),
+        }
+    });
+}
+
+/// `C[m,n] = A · W^T` for u8 activations `a` (`[m, k]` row-major), packed
+/// dense weights `w` (`n = w.n` outputs) and i32 output `c` (`[m, w.n]`,
+/// overwritten). Row-parallel over images.
+pub fn gemm_dense_packed_into(kern: Kernel, a: &[u8], w: &PackedDense, c: &mut [i32], m: usize) {
+    let (k, nout) = (w.k, w.n);
+    debug_assert_eq!(a.len(), m * k, "A shape");
+    debug_assert_eq!(c.len(), m * nout, "C shape");
+    if m == 0 || nout == 0 {
+        return;
+    }
+    let kern = usable(kern);
+    parallel::par_ranges_mut(c, nout, super::row_grain(k, nout), |rows, span| {
+        for i in rows.clone() {
+            let arow = &a[i * k..(i + 1) * k];
+            let crow = &mut span[(i - rows.start) * nout..(i - rows.start + 1) * nout];
+            match kern {
+                Kernel::Avx2 => {
+                    // SAFETY: usable() only lets Avx2 through when the
+                    // CPU has it.
+                    #[cfg(target_arch = "x86_64")]
+                    unsafe {
+                        dense_row_avx2(arow, w, crow);
+                    }
+                    #[cfg(not(target_arch = "x86_64"))]
+                    dense_row_portable(arow, w, crow);
+                }
+                Kernel::Portable => dense_row_portable(arow, w, crow),
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Portable cores (the reference blocking; bit-identical to AVX2 because
+// every product is exact and i32 accumulation commutes mod 2^32)
+// ---------------------------------------------------------------------------
+
+/// One row span of the conv GEMM: for each row, stream B row-by-row and
+/// fan the broadcast weight into the i32 C row (the scalar GEMM's loop
+/// order, which auto-vectorizes to widening multiply-adds).
+fn conv_span_portable(a: &[i8], m: usize, k: usize, kp: usize, b: &[u8], c: &mut [i32], n: usize) {
+    for i in 0..m {
+        let arow = &a[i * kp..i * kp + k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        crow.fill(0);
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0 {
+                continue;
+            }
+            let av = av as i32;
+            let brow = &b[kk * n..(kk + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow.iter()) {
+                *cv = cv.wrapping_add(av * bv as i32);
+            }
+        }
+    }
+}
+
+/// One output row of the dense GEMM over the packed quad layout: walk the
+/// interleaved K-blocks exactly as the AVX2 core does (weight padding is
+/// zero, so only `kk < k` activation reads are needed).
+fn dense_row_portable(arow: &[u8], w: &PackedDense, crow: &mut [i32]) {
+    let (k, nb) = (w.k, w.kp / DENSE_KB);
+    for (j, cv) in crow.iter_mut().enumerate() {
+        let (q, r) = (j / DENSE_NR, j % DENSE_NR);
+        let mut s = 0i32;
+        for t in 0..nb {
+            let base = ((q * nb + t) * DENSE_NR + r) * DENSE_KB;
+            let blk = &w.data[base..base + DENSE_KB];
+            let k0 = t * DENSE_KB;
+            let kend = k.min(k0 + DENSE_KB);
+            for kk in k0..kend {
+                s = s.wrapping_add(arow[kk] as i32 * blk[kk - k0] as i32);
+            }
+        }
+        *cv = s;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AVX2 cores
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use core::arch::x86_64::*;
+
+    use super::{PackedDense, DENSE_KB, DENSE_NR};
+
+    /// Broadcast the (sign-extended) weight pair at `a[off], a[off+1]` as
+    /// `[a0, a1, a0, a1, ...]` i16 lanes — the second `vpmaddwd` operand.
+    /// The packed row stride is even, so `off + 1` is always in bounds
+    /// (the pad byte is zero).
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn weight_pair(a: &[i8], off: usize) -> __m256i {
+        let a0 = *a.get_unchecked(off) as i16 as u16 as u32;
+        let a1 = *a.get_unchecked(off + 1) as i16 as u16 as u32;
+        _mm256_set1_epi32(((a1 << 16) | a0) as i32)
+    }
+
+    /// Conv GEMM row span: 2 output rows × 32 positions per register
+    /// tile, reduction consumed as `vpmaddwd` pairs. B rows `k0`/`k0+1`
+    /// are byte-interleaved in registers (`vpunpck[lh]bw`), widened to
+    /// i16 and paired against the broadcast weights — all products exact,
+    /// see the module docs.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn conv_span(
+        a: &[i8],
+        m: usize,
+        k: usize,
+        kp: usize,
+        b: &[u8],
+        c: &mut [i32],
+        n: usize,
+    ) {
+        let n32 = n - n % 32;
+        let kpairs = kp / 2;
+        let bp = b.as_ptr();
+        let mut i = 0;
+        while i < m {
+            let mr = if m - i >= 2 { 2 } else { 1 };
+            let mut j = 0;
+            while j < n32 {
+                let mut acc = [[_mm256_setzero_si256(); 4]; 2];
+                for t in 0..kpairs {
+                    let k0 = 2 * t;
+                    // the pad pair of an odd K clamps its B row index;
+                    // its weight lane is the zero pad byte, so the
+                    // duplicated row contributes nothing
+                    let k1 = (k0 + 1).min(k - 1);
+                    let b0 = _mm256_loadu_si256(bp.add(k0 * n + j) as *const __m256i);
+                    let b1 = _mm256_loadu_si256(bp.add(k1 * n + j) as *const __m256i);
+                    let lo = _mm256_unpacklo_epi8(b0, b1);
+                    let hi = _mm256_unpackhi_epi8(b0, b1);
+                    // pair-interleaved positions: lo/hi 128-bit lanes hold
+                    // j+0..7, j+8..15, j+16..23, j+24..31 in that order
+                    let w0 = _mm256_cvtepu8_epi16(_mm256_castsi256_si128(lo));
+                    let w1 = _mm256_cvtepu8_epi16(_mm256_castsi256_si128(hi));
+                    let w2 = _mm256_cvtepu8_epi16(_mm256_extracti128_si256(lo, 1));
+                    let w3 = _mm256_cvtepu8_epi16(_mm256_extracti128_si256(hi, 1));
+                    for r in 0..mr {
+                        let ap = weight_pair(a, (i + r) * kp + k0);
+                        acc[r][0] = _mm256_add_epi32(acc[r][0], _mm256_madd_epi16(w0, ap));
+                        acc[r][1] = _mm256_add_epi32(acc[r][1], _mm256_madd_epi16(w1, ap));
+                        acc[r][2] = _mm256_add_epi32(acc[r][2], _mm256_madd_epi16(w2, ap));
+                        acc[r][3] = _mm256_add_epi32(acc[r][3], _mm256_madd_epi16(w3, ap));
+                    }
+                }
+                for r in 0..mr {
+                    let crow = c.as_mut_ptr().add((i + r) * n + j);
+                    _mm256_storeu_si256(crow as *mut __m256i, acc[r][0]);
+                    _mm256_storeu_si256(crow.add(8) as *mut __m256i, acc[r][1]);
+                    _mm256_storeu_si256(crow.add(16) as *mut __m256i, acc[r][2]);
+                    _mm256_storeu_si256(crow.add(24) as *mut __m256i, acc[r][3]);
+                }
+                j += 32;
+            }
+            // position tail: exact scalar (integer products commute with
+            // the vector body, so the seam is bit-invisible)
+            for r in 0..mr {
+                let arow = &a[(i + r) * kp..(i + r) * kp + k];
+                for jj in n32..n {
+                    let mut s = 0i32;
+                    for (kk, &av) in arow.iter().enumerate() {
+                        s = s.wrapping_add(av as i32 * *b.get_unchecked(kk * n + jj) as i32);
+                    }
+                    *c.get_unchecked_mut((i + r) * n + jj) = s;
+                }
+            }
+            i += mr;
+        }
+    }
+
+    /// Wrapping horizontal sum of the 8 i32 lanes.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn hsum_epi32(v: __m256i) -> i32 {
+        let s = _mm_add_epi32(_mm256_castsi256_si128(v), _mm256_extracti128_si256(v, 1));
+        let s = _mm_add_epi32(s, _mm_shuffle_epi32(s, 0b01_00_11_10));
+        let s = _mm_add_epi32(s, _mm_shuffle_epi32(s, 0b00_00_00_01));
+        _mm_cvtsi128_si32(s)
+    }
+
+    /// Dense GEMM, one activation row: four packed weight rows per quad
+    /// share each widened 16-byte activation block; the K tail reads a
+    /// zero-padded stack copy (matching the zero K padding of the packed
+    /// rows, so tail products vanish on both operands).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dense_row(arow: &[u8], w: &PackedDense, crow: &mut [i32]) {
+        let (k, kp) = (w.k, w.kp);
+        let nb = kp / DENSE_KB;
+        let full = k / DENSE_KB;
+        let tail = k % DENSE_KB;
+        let mut tailbuf = [0u8; DENSE_KB];
+        if tail > 0 {
+            tailbuf[..tail].copy_from_slice(&arow[full * DENSE_KB..]);
+        }
+        let wp = w.data.as_ptr();
+        for q in 0..w.np / DENSE_NR {
+            let mut acc = [_mm256_setzero_si256(); 4];
+            let base = q * nb * (DENSE_NR * DENSE_KB);
+            for t in 0..nb {
+                let av = if t < full {
+                    _mm_loadu_si128(arow.as_ptr().add(t * DENSE_KB) as *const __m128i)
+                } else {
+                    _mm_loadu_si128(tailbuf.as_ptr() as *const __m128i)
+                };
+                let a16 = _mm256_cvtepu8_epi16(av);
+                let blk = wp.add(base + t * DENSE_NR * DENSE_KB);
+                for r in 0..4 {
+                    let w16 = _mm256_cvtepi8_epi16(_mm_loadu_si128(
+                        blk.add(r * DENSE_KB) as *const __m128i
+                    ));
+                    acc[r] = _mm256_add_epi32(acc[r], _mm256_madd_epi16(a16, w16));
+                }
+            }
+            for r in 0..4 {
+                let j = q * DENSE_NR + r;
+                if j < crow.len() {
+                    *crow.get_unchecked_mut(j) = hsum_epi32(acc[r]);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+use avx2::{conv_span as conv_span_avx2, dense_row as dense_row_avx2};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_simd_env_contract() {
+        assert!(!no_simd_requested(None));
+        assert!(!no_simd_requested(Some("")));
+        assert!(!no_simd_requested(Some("0")));
+        assert!(!no_simd_requested(Some(" 0 ")));
+        assert!(no_simd_requested(Some("1")));
+        assert!(no_simd_requested(Some("true")));
+        assert!(no_simd_requested(Some("yes")));
+    }
+
+    #[test]
+    fn select_is_consistent_with_detection() {
+        let k = select();
+        if k == Kernel::Avx2 {
+            assert!(avx2_available(), "selected AVX2 without CPU support");
+        }
+        assert_eq!(k, select(), "cached selection must be stable");
+    }
+
+    #[test]
+    fn conv_pack_layout() {
+        let w: Vec<i8> = (0..3 * 5).map(|v| v as i8 - 7).collect();
+        let p = PackedConv::pack(&w, 3, 5);
+        assert_eq!((p.rows, p.k, p.kp), (3, 5, 6));
+        assert!(p.layout_ok());
+        for r in 0..3 {
+            assert_eq!(&p.data[r * 6..r * 6 + 5], &w[r * 5..(r + 1) * 5]);
+            assert_eq!(p.data[r * 6 + 5], 0, "pad byte of row {r}");
+        }
+        assert_eq!(p.row_slice(1..3).len(), 2 * 6);
+        // even K needs no padding
+        let q = PackedConv::pack(&w[..12], 3, 4);
+        assert_eq!(q.kp, 4);
+        assert!(q.layout_ok());
+        // a corrupted pad byte must fail the invariant
+        let mut bad = p.clone();
+        bad.data[5] = 1;
+        assert!(!bad.layout_ok());
+    }
+
+    #[test]
+    fn dense_pack_layout_roundtrip() {
+        // n and k both off the block sizes: 6 rows (np 8), k 21 (kp 32)
+        let (n, k) = (6usize, 21usize);
+        let w: Vec<i8> = (0..n * k).map(|v| (v as i32 % 251 - 125) as i8).collect();
+        let p = PackedDense::pack(&w, n, k);
+        assert_eq!((p.np, p.kp), (8, 32));
+        assert!(p.layout_ok());
+        let nb = p.kp / DENSE_KB;
+        // every logical weight must be recoverable from the quad layout
+        for j in 0..n {
+            let (q, r) = (j / DENSE_NR, j % DENSE_NR);
+            for kk in 0..k {
+                let (t, tt) = (kk / DENSE_KB, kk % DENSE_KB);
+                let byte = p.data[((q * nb + t) * DENSE_NR + r) * DENSE_KB + tt];
+                assert_eq!(byte, w[j * k + kk], "row {j} k {kk}");
+            }
+        }
+        // a corrupted pad row must fail the invariant (row 6 is padding)
+        let mut bad = p.clone();
+        let (q, r) = (6 / DENSE_NR, 6 % DENSE_NR);
+        bad.data[((q * nb) * DENSE_NR + r) * DENSE_KB] = 3;
+        assert!(!bad.layout_ok());
+    }
+}

@@ -13,6 +13,15 @@
 //! identical for any `PALLAS_THREADS` (trivially bit-exact here — integer
 //! arithmetic has no reduction-order sensitivity, but the splitting rule
 //! is kept anyway for uniformity).
+//!
+//! The scalar GEMMs in this file ([`gemm_i8_into`], [`gemm_u8_bt_into`])
+//! are the *reference* implementations — simple, unpacked, and the oracle
+//! the differential harness (`rust/tests/int8_kernels.rs`) checks against.
+//! The serving engine's hot loop runs the runtime-dispatched packed
+//! micro-kernels in [`kernel`] instead, which are bit-identical to these
+//! by construction.
+
+pub mod kernel;
 
 use crate::util::parallel;
 

@@ -1,0 +1,294 @@
+//! Differential harness for the i8 GEMM micro-kernel layer: every
+//! implementation (AVX2, portable-packed, the unpacked scalar reference)
+//! must be **bit-for-bit identical** on every input — randomized shapes
+//! (K off the block sizes, M/N = 1, grouped convs), i32-accumulator
+//! magnitude edges, and requant zero-point corners. This is the contract
+//! that makes `PALLAS_NO_SIMD` and ISA differences pure performance
+//! knobs: the serving stack's outputs never depend on which kernel ran.
+
+use adaround::serve::ikernels::{conv2d_i8, dense_i8, Int8Workspace};
+use adaround::serve::Requant;
+use adaround::tensor::int8::kernel::{
+    self, gemm_conv_packed_into, gemm_dense_packed_into, Kernel, PackedConv, PackedDense,
+};
+use adaround::tensor::int8::{gemm_i8_into, gemm_u8_bt_into};
+use adaround::tensor::{Conv2dParams, I8Tensor, U8Tensor};
+use adaround::util::parallel::with_threads;
+use adaround::util::Rng;
+
+/// Every kernel implementation runnable on this machine. The portable
+/// path always runs; AVX2 joins when the CPU has it (CI x86 runners do).
+fn kernels() -> Vec<Kernel> {
+    let mut v = vec![Kernel::Portable];
+    if kernel::avx2_available() {
+        v.push(Kernel::Avx2);
+    }
+    v
+}
+
+fn rnd_i8(n: usize, rng: &mut Rng) -> Vec<i8> {
+    (0..n).map(|_| (rng.below(256) as i32 - 128) as i8).collect()
+}
+
+fn rnd_u8(n: usize, rng: &mut Rng) -> Vec<u8> {
+    (0..n).map(|_| rng.below(256) as u8).collect()
+}
+
+/// Naive i64 oracle for C = A_i8 [m,k] · B_u8 [k,n].
+fn naive_conv_gemm(a: &[i8], b: &[u8], m: usize, k: usize, n: usize) -> Vec<i32> {
+    let mut c = vec![0i32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0i64;
+            for t in 0..k {
+                acc += a[i * k + t] as i64 * b[t * n + j] as i64;
+            }
+            c[i * n + j] = acc as i32;
+        }
+    }
+    c
+}
+
+/// Naive i64 oracle for C = A_u8 [m,k] · W^T with W [n,k] i8.
+fn naive_dense_gemm(a: &[u8], w: &[i8], m: usize, k: usize, n: usize) -> Vec<i32> {
+    let mut c = vec![0i32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0i64;
+            for t in 0..k {
+                acc += a[i * k + t] as i64 * w[j * k + t] as i64;
+            }
+            c[i * n + j] = acc as i32;
+        }
+    }
+    c
+}
+
+#[test]
+fn conv_gemm_bit_identical_across_kernels() {
+    // K even/odd/1, K < and > the j-tile, M = 1, N = 1, N off the 32-wide
+    // tile, N exactly on it — the seams where a packed kernel can go wrong
+    let shapes = [
+        (1usize, 1usize, 1usize),
+        (1, 2, 1),
+        (2, 1, 3),
+        (3, 7, 5),
+        (4, 15, 33),
+        (5, 16, 32),
+        (8, 17, 100),
+        (1, 33, 64),
+        (16, 64, 31),
+        (2, 3, 257),
+        (6, 128, 96),
+    ];
+    let mut rng = Rng::new(401);
+    for (m, k, n) in shapes {
+        let a = rnd_i8(m * k, &mut rng);
+        let b = rnd_u8(k * n, &mut rng);
+        let want = naive_conv_gemm(&a, &b, m, k, n);
+        // the unpacked scalar reference kernel
+        let mut c_scalar = vec![0i32; m * n];
+        gemm_i8_into(&a, &b, &mut c_scalar, m, k, n);
+        assert_eq!(c_scalar, want, "scalar reference vs naive at {m}x{k}x{n}");
+        let packed = PackedConv::pack(&a, m, k);
+        assert!(packed.layout_ok());
+        for kern in kernels() {
+            let mut c = vec![-1i32; m * n]; // poison: kernel must overwrite
+            gemm_conv_packed_into(kern, &packed.data, m, k, packed.kp, &b, &mut c, n);
+            assert_eq!(c, want, "{} conv kernel at {m}x{k}x{n}", kern.name());
+        }
+    }
+}
+
+#[test]
+fn dense_gemm_bit_identical_across_kernels() {
+    // K and N straddling the 16-wide K block and the 4-row quad
+    let shapes = [
+        (1usize, 1usize, 1usize),
+        (2, 16, 4),
+        (3, 15, 5),
+        (1, 16, 1),
+        (4, 17, 8),
+        (5, 31, 3),
+        (2, 33, 9),
+        (7, 64, 13),
+        (3, 100, 2),
+        (1, 129, 31),
+    ];
+    let mut rng = Rng::new(402);
+    for (m, k, n) in shapes {
+        let a = rnd_u8(m * k, &mut rng);
+        let w = rnd_i8(n * k, &mut rng);
+        let want = naive_dense_gemm(&a, &w, m, k, n);
+        let mut c_scalar = vec![0i32; m * n];
+        gemm_u8_bt_into(&a, &w, &mut c_scalar, m, k, n);
+        assert_eq!(c_scalar, want, "scalar reference vs naive at {m}x{k}x{n}");
+        let packed = PackedDense::pack(&w, n, k);
+        assert!(packed.layout_ok());
+        for kern in kernels() {
+            let mut c = vec![-1i32; m * n];
+            gemm_dense_packed_into(kern, &a, &packed, &mut c, m);
+            assert_eq!(c, want, "{} dense kernel at {m}x{k}x{n}", kern.name());
+        }
+    }
+}
+
+#[test]
+fn grouped_conv_kernels_and_threads_agree() {
+    // groups > 1 with an ODD row count per group (og = 3), so the
+    // group-boundary row slicing hands the kernel both 2-row tiles and a
+    // 1-row tail inside every group
+    let p = Conv2dParams { k: 3, stride: 1, pad: 1, groups: 4 };
+    let (n, c, o, hw) = (4usize, 8usize, 12usize, 11usize);
+    let cg = c / p.groups;
+    let patch = cg * 9;
+    let mut rng = Rng::new(403);
+    let qin = U8Tensor::from_vec(
+        &[n, c, hw, hw],
+        (0..n * c * hw * hw).map(|_| rng.below(256) as u8).collect(),
+    );
+    let wi = I8Tensor::from_vec(&[o, cg, 3, 3], rnd_i8(o * patch, &mut rng));
+    let wp = PackedConv::pack(&wi.data, o, patch);
+    let bias_q: Vec<i32> = (0..o as i32).map(|v| v * 3 - 7).collect();
+    let wsum: Vec<i32> = (0..o)
+        .map(|oc| wi.data[oc * patch..(oc + 1) * patch].iter().map(|&z| z as i32).sum())
+        .collect();
+    let requant = vec![Requant::from_real(0.031); o];
+    let run = |kern: Kernel, threads: usize| {
+        with_threads(threads, || {
+            let mut ws = Int8Workspace::new();
+            conv2d_i8(&mut ws, kern, &qin, &wp, p, &bias_q, &wsum, &requant, 3, 5, true).data
+        })
+    };
+    let base = run(Kernel::Portable, 1);
+    for kern in kernels() {
+        for threads in [1usize, 4] {
+            assert_eq!(
+                run(kern, threads),
+                base,
+                "grouped conv differs for {} kernel, {threads} threads",
+                kern.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn accumulator_magnitude_edges_are_exact() {
+    // all-i8::MIN weights x all-255 inputs at the largest K whose sum
+    // still fits i32: acc = 65792 * (-32640) = -2_147_450_880, within
+    // 32_768 of i32::MIN. Any kernel that saturates an intermediate (the
+    // pmaddubsw i16 trap) or mis-widens breaks long before this point.
+    let k = 65_792usize;
+    let a_min = vec![i8::MIN; k];
+    let b_max = vec![255u8; k];
+    let want_min = -2_147_450_880i32;
+    // ...and the positive mirror with +127 weights
+    let a_max = vec![127i8; k];
+    let want_max = 2_130_673_920i32;
+    for (a, want) in [(&a_min, want_min), (&a_max, want_max)] {
+        let mut c = vec![0i32; 1];
+        gemm_i8_into(a, &b_max, &mut c, 1, k, 1);
+        assert_eq!(c[0], want, "scalar conv reference");
+        let packed = PackedConv::pack(a, 1, k);
+        for kern in kernels() {
+            let mut c = vec![0i32; 1];
+            gemm_conv_packed_into(kern, &packed.data, 1, k, packed.kp, &b_max, &mut c, 1);
+            assert_eq!(c[0], want, "{} conv kernel near i32 edge", kern.name());
+        }
+        let mut c = vec![0i32; 1];
+        gemm_u8_bt_into(&b_max, a, &mut c, 1, k, 1);
+        assert_eq!(c[0], want, "scalar dense reference");
+        let packed = PackedDense::pack(a, 1, k);
+        for kern in kernels() {
+            let mut c = vec![0i32; 1];
+            gemm_dense_packed_into(kern, &b_max, &packed, &mut c, 1);
+            assert_eq!(c[0], want, "{} dense kernel near i32 edge", kern.name());
+        }
+    }
+}
+
+#[test]
+fn requant_zero_point_corners() {
+    // zero points at the u8 corners and midpoint, both sides of the
+    // requant, on every kernel — checked against an inline scalar oracle
+    // of the serving convention (zp_out + round(M*(acc - zp_in*wsum)),
+    // clamped to [relu-floor, 255])
+    let (n, c, o) = (3usize, 21usize, 5usize);
+    let mut rng = Rng::new(405);
+    let qin = U8Tensor::from_vec(&[n, c], rnd_u8(n * c, &mut rng));
+    let w = rnd_i8(o * c, &mut rng);
+    let packed = PackedDense::pack(&w, o, c);
+    let bias_q = vec![11i32, -4, 0, 250, -99];
+    let wsum: Vec<i32> =
+        (0..o).map(|oc| w[oc * c..(oc + 1) * c].iter().map(|&z| z as i32).sum()).collect();
+    let r = Requant::from_real(0.73);
+    let requant = vec![r; o];
+    for zp_in in [0i32, 128, 255] {
+        for zp_out in [0i32, 128, 255] {
+            for relu in [false, true] {
+                let mut oracle = vec![0u8; n * o];
+                for i in 0..n {
+                    for oc in 0..o {
+                        let mut acc = bias_q[oc] - zp_in * wsum[oc];
+                        for cc in 0..c {
+                            acc += qin.data[i * c + cc] as i32 * w[oc * c + cc] as i32;
+                        }
+                        let lo = if relu { zp_out } else { 0 };
+                        oracle[i * o + oc] = (zp_out + r.apply(acc)).clamp(lo, 255) as u8;
+                    }
+                }
+                for kern in kernels() {
+                    let mut ws = Int8Workspace::new();
+                    let got = dense_i8(
+                        &mut ws, kern, &qin, &packed, &bias_q, &wsum, &requant, zp_in, zp_out,
+                        relu,
+                    );
+                    assert_eq!(
+                        got.data,
+                        oracle,
+                        "{} dense zp_in={zp_in} zp_out={zp_out} relu={relu}",
+                        kern.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Layout corruption must fail loudly (debug_assert in the serve kernels),
+/// not silently corrupt accumulators. Debug builds only — release strips
+/// the check by design (the plan compiler is the only production packer).
+#[cfg(debug_assertions)]
+#[test]
+#[should_panic(expected = "PackedDense layout")]
+fn corrupted_dense_pack_fails_loudly() {
+    let (c, o) = (10usize, 3usize);
+    let mut rng = Rng::new(406);
+    let qin = U8Tensor::from_vec(&[1, c], rnd_u8(c, &mut rng));
+    let w = rnd_i8(o * c, &mut rng);
+    let mut packed = PackedDense::pack(&w, o, c);
+    // scribble on a K-pad byte of row 0 (k=10 pads to kp=16)
+    packed.data[10] = 1;
+    let mut ws = Int8Workspace::new();
+    let z = vec![0i32; o];
+    let r = vec![Requant::from_real(1.0); o];
+    dense_i8(&mut ws, Kernel::Portable, &qin, &packed, &z, &z, &r, 0, 0, false);
+}
+
+#[cfg(debug_assertions)]
+#[test]
+#[should_panic(expected = "PackedConv layout")]
+fn corrupted_conv_pack_fails_loudly() {
+    let p = Conv2dParams { k: 1, stride: 1, pad: 0, groups: 1 };
+    let (c, o) = (3usize, 2usize);
+    let mut rng = Rng::new(407);
+    let qin = U8Tensor::from_vec(&[1, c, 4, 4], rnd_u8(c * 16, &mut rng));
+    let w = rnd_i8(o * c, &mut rng);
+    let mut packed = PackedConv::pack(&w, o, c); // k=3 pads to kp=4
+    packed.data[3] = 1;
+    let mut ws = Int8Workspace::new();
+    let z = vec![0i32; o];
+    let r = vec![Requant::from_real(1.0); o];
+    conv2d_i8(&mut ws, Kernel::Portable, &qin, &packed, p, &z, &z, &r, 0, 0, false);
+}

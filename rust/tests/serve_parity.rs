@@ -190,6 +190,49 @@ fn adaround_weights_serve_too() {
 }
 
 #[test]
+fn portable_kernel_override_serves_bit_identical() {
+    use adaround::tensor::int8::kernel::{self, Kernel};
+    // the PALLAS_NO_SIMD=1 env override must resolve dispatch to the
+    // portable kernel (the full-suite CI job runs every test under it;
+    // here we pin the uncached decision so the assertion is
+    // order-independent within this test binary). The prior value is
+    // RESTORED, not removed — under the PALLAS_NO_SIMD=1 CI job the
+    // override must stay in force for the rest of this test binary.
+    let prior = std::env::var("PALLAS_NO_SIMD").ok();
+    std::env::set_var("PALLAS_NO_SIMD", "1");
+    assert_eq!(
+        kernel::select_uncached(),
+        Kernel::Portable,
+        "PALLAS_NO_SIMD=1 must force the portable kernel"
+    );
+    match prior {
+        Some(v) => std::env::set_var("PALLAS_NO_SIMD", v),
+        None => std::env::remove_var("PALLAS_NO_SIMD"),
+    }
+
+    // ...and serving on the forced portable path must be bit-identical
+    // to whatever kernel dispatch picked for this machine
+    let mut rng = Rng::new(71);
+    let model = tiny_model(&mut rng);
+    let (calib, _) = synthetic_stripes(48, 3, 16, &mut rng);
+    let (val, _) = synthetic_stripes(32, 3, 16, &mut rng);
+    let qm = quantize_8_8(&model, &calib, Method::Nearest);
+    let mut dispatched = ServeEngine::compile(&model, &qm, &[3, 16, 16]).unwrap();
+    let mut portable = ServeEngine::compile(&model, &qm, &[3, 16, 16])
+        .unwrap()
+        .with_kernel(Kernel::Portable);
+    assert_eq!(portable.kernel(), Kernel::Portable);
+    assert_eq!(
+        dispatched.forward_quantized(&val).data,
+        portable.forward_quantized(&val).data,
+        "served outputs differ between the {} kernel and the portable override",
+        dispatched.kernel().name()
+    );
+    // forks inherit the pinned kernel (the sharded-batcher path)
+    assert_eq!(portable.fork().kernel(), Kernel::Portable);
+}
+
+#[test]
 fn batcher_coalesces_and_answers_correctly() {
     let mut rng = Rng::new(61);
     let model = tiny_model(&mut rng);
