@@ -22,7 +22,8 @@ use adaround::quant::{fake_quant_nearest, rounding_mask, QuantGrid, RoundingMode
 use adaround::qubo::{solve_cem, solve_tabu, CemParams, QuboProblem, TabuParams};
 use adaround::runtime::{Runtime, StepState};
 use adaround::tensor::int8::kernel::{
-    self as ikern, gemm_conv_packed_into, gemm_dense_packed_into, Kernel, PackedConv, PackedDense,
+    self as ikern, gemm_conv4_packed_into, gemm_conv_packed_into, gemm_dense4_packed_into,
+    gemm_dense_packed_into, Kernel, PackedConv, PackedConv4, PackedDense, PackedDense4,
 };
 use adaround::tensor::int8::{gemm_i8_into, gemm_u8_bt_into};
 use adaround::tensor::{conv2d, matmul, Conv2dParams, Tensor};
@@ -148,6 +149,22 @@ fn main() {
             record(&mut results, r);
         }
 
+        // nibble-packed w4 variant of the same conv shape: half the weight
+        // bytes through the same vpmaddwd pipeline, codes in [-8, 7]
+        let a4: Vec<i8> = (0..m * k).map(|_| (rng.below(16) as i32 - 8) as i8).collect();
+        let packed4 = PackedConv4::pack(&a4, m, k);
+        for &kern in &kerns {
+            let r = b.run_with_items(
+                &format!("gemm_i8 packed4-{} {m}x{k}x{n} (MACs/s)", kern.name()),
+                m * k * n,
+                &mut || {
+                    gemm_conv4_packed_into(kern, &packed4.data, m, k, packed4.kp, &bq, &mut c, n);
+                    std::hint::black_box(&c);
+                },
+            );
+            record(&mut results, r);
+        }
+
         // dense orientation: u8 activations x i8 weight rows (A · W^T)
         let act: Vec<u8> = (0..m * k).map(|_| rng.below(256) as u8).collect();
         let wt: Vec<i8> = (0..n * k).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
@@ -167,6 +184,19 @@ fn main() {
                 m * k * n,
                 &mut || {
                     gemm_dense_packed_into(kern, &act, &pdense, &mut c, m);
+                    std::hint::black_box(&c);
+                },
+            );
+            record(&mut results, r);
+        }
+        let wt4: Vec<i8> = (0..n * k).map(|_| (rng.below(16) as i32 - 8) as i8).collect();
+        let pdense4 = PackedDense4::pack(&wt4, n, k);
+        for &kern in &kerns {
+            let r = b.run_with_items(
+                &format!("gemm_u8_bt packed4-{} {m}x{k}x{n} (MACs/s)", kern.name()),
+                m * k * n,
+                &mut || {
+                    gemm_dense4_packed_into(kern, &act, &pdense4, &mut c, m);
                     std::hint::black_box(&c);
                 },
             );

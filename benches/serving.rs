@@ -80,9 +80,21 @@ fn main() -> anyhow::Result<()> {
         calib_n: 96,
         ..Default::default()
     };
-    let qm = Pipeline::new(&model, cfg, None).quantize(&calib, &mut Rng::new(1))?;
+    let qm = Pipeline::new(&model, cfg.clone(), None).quantize(&calib, &mut Rng::new(1))?;
     let mut engine = ServeEngine::compile(&model, &qm, &[3, 32, 32])?;
     let opts = qm.opts();
+
+    // int4 twin: same model and calibration set, weights quantized at 4
+    // bits — the pipeline records per-layer wbits, so the compiler packs
+    // every conv/dense nibble-packed (w4)
+    let cfg4 = PipelineConfig { bits: 4, ..cfg };
+    let qm4 = Pipeline::new(&model, cfg4, None).quantize(&calib, &mut Rng::new(1))?;
+    let mut engine4 = ServeEngine::compile(&model, &qm4, &[3, 32, 32])?;
+    let (wb8, wb4) = (engine.plan.weight_bytes(), engine4.plan.weight_bytes());
+    println!(
+        "packed weight bytes: w8 plan {wb8}, w4 plan {wb4} ({:.2}x smaller)",
+        wb8 as f64 / wb4 as f64
+    );
 
     // parity: the int8 engine must mirror the fake-quant simulation
     let logits_fq = model.forward(&val, &opts);
@@ -99,12 +111,16 @@ fn main() -> anyhow::Result<()> {
     let mut results: Vec<Json> = Vec::new();
     let mut speedup_b8 = 0.0f64;
     let reps = 20;
-    println!("{:<24} {:>12} {:>12} {:>8}", "batch", "f32 img/s", "int8 img/s", "speedup");
+    println!(
+        "{:<24} {:>12} {:>12} {:>12} {:>8}",
+        "batch", "f32 img/s", "int8 img/s", "int4 img/s", "speedup"
+    );
     for batch in [1usize, 8, 32] {
         let xb = batch_of(&val, batch);
-        // warmup both paths
+        // warmup all paths
         std::hint::black_box(model.forward(&xb, &opts));
         std::hint::black_box(engine.forward(&xb));
+        std::hint::black_box(engine4.forward(&xb));
         let sw = Stopwatch::start();
         for _ in 0..reps {
             std::hint::black_box(model.forward(&xb, &opts));
@@ -115,18 +131,29 @@ fn main() -> anyhow::Result<()> {
             std::hint::black_box(engine.forward(&xb));
         }
         let int8_s = sw.secs() / reps as f64;
-        let (f32_tp, int8_tp) = (batch as f64 / f32_s, batch as f64 / int8_s);
+        let sw = Stopwatch::start();
+        for _ in 0..reps {
+            std::hint::black_box(engine4.forward(&xb));
+        }
+        let int4_s = sw.secs() / reps as f64;
+        let (f32_tp, int8_tp, int4_tp) =
+            (batch as f64 / f32_s, batch as f64 / int8_s, batch as f64 / int4_s);
         if batch == 8 {
             speedup_b8 = int8_tp / f32_tp;
         }
         println!(
-            "{:<24} {:>12.1} {:>12.1} {:>7.2}x",
+            "{:<24} {:>12.1} {:>12.1} {:>12.1} {:>7.2}x",
             format!("batch {batch}"),
             f32_tp,
             int8_tp,
+            int4_tp,
             int8_tp / f32_tp
         );
-        for (engine_name, tp) in [("f32-fake-quant", f32_tp), ("int8-engine", int8_tp)] {
+        for (engine_name, tp) in [
+            ("f32-fake-quant", f32_tp),
+            ("int8-engine", int8_tp),
+            ("int4-engine", int4_tp),
+        ] {
             results.push(throughput_entry(&format!("{engine_name} batch{batch}"), tp));
         }
     }
@@ -165,6 +192,19 @@ fn main() -> anyhow::Result<()> {
     root.insert("threads".to_string(), Json::Num(parallel::num_threads() as f64));
     root.insert("parity_agree_frac".to_string(), Json::Num(agree_frac));
     root.insert("int8_speedup_batch8".to_string(), Json::Num(speedup_b8));
+    root.insert("weight_bytes_w8".to_string(), Json::Num(wb8 as f64));
+    root.insert("weight_bytes_w4".to_string(), Json::Num(wb4 as f64));
+    root.insert(
+        "op_dtypes_w4_plan".to_string(),
+        Json::Arr(
+            engine4
+                .plan
+                .op_dtypes()
+                .iter()
+                .map(|(id, d)| Json::Str(format!("{id}:{d}")))
+                .collect(),
+        ),
+    );
     root.insert("shard_speedup_max".to_string(), Json::Num(shard_speedup));
     root.insert("results".to_string(), Json::Arr(results));
     std::fs::write("BENCH_serving.json", Json::Obj(root).to_string_pretty())?;

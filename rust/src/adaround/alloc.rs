@@ -1,0 +1,168 @@
+//! Mixed-precision bit allocation: spend a global weight-bit budget
+//! across layers by sensitivity.
+//!
+//! The paper quantizes every layer at the same width; serving wants the
+//! opposite trade: most layers tolerate 4 bits, a few (first conv, final
+//! classifier, anything with heavy-tailed weights) lose real accuracy.
+//! This module turns per-layer sensitivity scores into a w8/w4
+//! assignment under a *mean bits per weight* budget.
+//!
+//! The sensitivity proxy reuses the AdaRound machinery: for candidate
+//! width `b`, the pipeline builds the layer's [`super::LayerProblem`]
+//! on the b-bit grid and evaluates `recon_mse` of nearest-rounded
+//! weights against the FP32 output on calibration columns. That is the
+//! diagonal Gauss-Newton form Δwᵀ·(x xᵀ)·Δw from eq. (14) — the same
+//! quadratic the rounding optimizer minimizes — so "cost of serving
+//! this layer at b bits" and "objective AdaRound optimizes" agree by
+//! construction. The allocator itself is pure and deterministic: greedy
+//! upgrades from the cheapest width, best Δcost per budget-byte first.
+
+use std::collections::BTreeMap;
+
+/// Per-layer sensitivity curve: proxy loss at each candidate width.
+#[derive(Clone, Debug)]
+pub struct LayerSensitivity {
+    pub id: String,
+    /// number of weights — the layer's footprint in the budget
+    pub params: usize,
+    /// `(bits, proxy_cost)` pairs, ascending in bits. Cost is the
+    /// Gauss-Newton reconstruction MSE of nearest rounding at that
+    /// width (lower = layer tolerates the width better).
+    pub cost: Vec<(u32, f64)>,
+}
+
+/// Result of [`allocate_bits`]: the chosen per-layer widths plus the
+/// realized budget numbers for reporting.
+#[derive(Clone, Debug)]
+pub struct BitAllocation {
+    pub bits: BTreeMap<String, u32>,
+    /// parameter-weighted mean bits actually spent
+    pub mean_bits: f64,
+    /// sum of the chosen widths' proxy costs
+    pub total_cost: f64,
+}
+
+/// Greedy budgeted allocation. Every layer starts at its cheapest
+/// candidate width; while budget remains, apply the upgrade with the
+/// best cost reduction per budget bit (`Δcost / (Δbits · params)`).
+/// Ties break on input order, so the result is deterministic. A budget
+/// below the all-minimum mean returns the all-minimum assignment; a
+/// budget at or above the all-maximum mean saturates every layer.
+pub fn allocate_bits(layers: &[LayerSensitivity], budget_mean_bits: f64) -> BitAllocation {
+    let total_params: usize = layers.iter().map(|l| l.params).sum();
+    // current choice index into each layer's cost curve
+    let mut idx: Vec<usize> = vec![0; layers.len()];
+    for layer in layers {
+        assert!(!layer.cost.is_empty(), "layer {:?} has no candidate widths", layer.id);
+        for w in layer.cost.windows(2) {
+            assert!(w[0].0 < w[1].0, "layer {:?}: candidate widths must ascend", layer.id);
+        }
+    }
+    let spent = |idx: &[usize]| -> f64 {
+        layers
+            .iter()
+            .zip(idx)
+            .map(|(l, &i)| l.cost[i].0 as f64 * l.params as f64)
+            .sum()
+    };
+    let budget_bits = budget_mean_bits * total_params as f64;
+    loop {
+        // best available upgrade: one step up some layer's curve
+        let mut best: Option<(usize, f64)> = None;
+        let used = spent(&idx);
+        for (l, layer) in layers.iter().enumerate() {
+            let i = idx[l];
+            if i + 1 >= layer.cost.len() {
+                continue;
+            }
+            let (b0, c0) = layer.cost[i];
+            let (b1, c1) = layer.cost[i + 1];
+            let extra = (b1 - b0) as f64 * layer.params as f64;
+            if used + extra > budget_bits + 1e-9 {
+                continue; // doesn't fit in what's left
+            }
+            let gain = (c0 - c1) / extra.max(1.0);
+            match best {
+                Some((_, g)) if g >= gain => {}
+                _ => best = Some((l, gain)),
+            }
+        }
+        match best {
+            Some((l, _)) => idx[l] += 1,
+            None => break,
+        }
+    }
+    let mut bits = BTreeMap::new();
+    let mut total_cost = 0.0;
+    for (layer, &i) in layers.iter().zip(&idx) {
+        bits.insert(layer.id.clone(), layer.cost[i].0);
+        total_cost += layer.cost[i].1;
+    }
+    let mean_bits = if total_params == 0 { 0.0 } else { spent(&idx) / total_params as f64 };
+    BitAllocation { bits, mean_bits, total_cost }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layer(id: &str, params: usize, c4: f64, c8: f64) -> LayerSensitivity {
+        LayerSensitivity {
+            id: id.to_string(),
+            params,
+            cost: vec![(4, c4), (8, c8)],
+        }
+    }
+
+    #[test]
+    fn sensitive_layer_gets_the_budget() {
+        // a hurts badly at 4 bits, b barely at all; budget mean 6 over
+        // equal params affords exactly one upgrade
+        let layers = vec![layer("a", 100, 50.0, 0.1), layer("b", 100, 0.5, 0.1)];
+        let out = allocate_bits(&layers, 6.0);
+        assert_eq!(out.bits["a"], 8);
+        assert_eq!(out.bits["b"], 4);
+        assert!((out.mean_bits - 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn budget_extremes_saturate() {
+        let layers = vec![layer("a", 10, 9.0, 1.0), layer("b", 30, 5.0, 1.0)];
+        let low = allocate_bits(&layers, 4.0);
+        assert!(low.bits.values().all(|&b| b == 4));
+        let high = allocate_bits(&layers, 8.0);
+        assert!(high.bits.values().all(|&b| b == 8));
+        assert!((high.mean_bits - 8.0).abs() < 1e-9);
+        // below-minimum budget degrades gracefully to all-minimum
+        let floor = allocate_bits(&layers, 2.0);
+        assert!(floor.bits.values().all(|&b| b == 4));
+    }
+
+    #[test]
+    fn upgrade_prefers_gain_per_budget_bit() {
+        // c's upgrade is cheap (few params) and removes real cost; d's
+        // is bulky for the same absolute gain. Budget fits only c.
+        let layers = vec![layer("c", 10, 2.0, 0.0), layer("d", 1000, 2.0, 0.0)];
+        let out = allocate_bits(&layers, 4.1);
+        assert_eq!(out.bits["c"], 8);
+        assert_eq!(out.bits["d"], 4);
+        assert!(out.total_cost < 2.5);
+    }
+
+    #[test]
+    fn fractional_budget_partial_fill() {
+        // four equal layers, mean 5 ⇒ exactly one of four upgrades fits;
+        // the largest 4-bit cost wins, deterministically
+        let layers = vec![
+            layer("l0", 50, 1.0, 0.0),
+            layer("l1", 50, 3.0, 0.0),
+            layer("l2", 50, 2.0, 0.0),
+            layer("l3", 50, 1.0, 0.0),
+        ];
+        let out = allocate_bits(&layers, 5.0);
+        let n8 = out.bits.values().filter(|&&b| b == 8).count();
+        assert_eq!(n8, 1);
+        assert_eq!(out.bits["l1"], 8);
+        assert!((out.mean_bits - 5.0).abs() < 1e-9);
+    }
+}

@@ -19,6 +19,7 @@
 //! analytic gradient, and [`schedule`] anneals beta.
 
 pub mod adam;
+pub mod alloc;
 pub mod hopfield;
 pub mod native;
 pub mod pjrt;
@@ -28,6 +29,7 @@ pub mod schedule;
 pub mod ste;
 
 pub use adam::Adam;
+pub use alloc::{allocate_bits, BitAllocation, LayerSensitivity};
 pub use native::{gather_cols, gather_cols_into, NativeOptimizer};
 pub use pjrt::PjrtOptimizer;
 pub use problem::{LayerProblem, StepWorkspace};

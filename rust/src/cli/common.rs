@@ -79,6 +79,10 @@ pub fn config_from_args(args: &Args) -> Result<PipelineConfig> {
     if let Some(b) = args.opt("act-bits") {
         cfg.act_bits = Some(b.parse()?);
     }
+    if let Some(b) = args.opt("bit-budget") {
+        // mixed precision: mean bits per weight the allocator may spend
+        cfg.bit_budget = Some(b.parse()?);
+    }
     cfg.adaround = AdaRoundConfig {
         iters: args.usize("iters", 800)?,
         lr: args.f32("lr", 1e-2)?,

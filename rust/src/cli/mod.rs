@@ -45,6 +45,9 @@ COMMON FLAGS:
                     ste|hopfield|sigmoid-freg|qubo-cem|qubo-tabu|biascorr|
                     dfq|ocs|omse
   --bits B          weight bits (default 4)
+  --bit-budget X    mixed precision: mean bits/weight (e.g. 4.5); a
+                    sensitivity pre-pass assigns each layer 4 or 8 bits,
+                    4-bit layers serve nibble-packed (w4)
   --act-bits B      quantize activations to B bits
   --grid G          minmax|mse-w|mse-out (default mse-w)
   --per-channel     per-channel weight scales

@@ -73,6 +73,29 @@ pub fn cmd_quantize(args: &Args) -> Result<()> {
             100.0 * s.flipped_frac, s.secs
         );
     }
+    // per-layer weight widths + the packed size serving will actually
+    // ship (i4 nibble-packs two weights per byte)
+    if !qm.wbits.is_empty() {
+        let (mut wsum, mut bsum, mut packed) = (0usize, 0u64, 0usize);
+        println!("{:<6} {:>5} {:>14}", "layer", "wbits", "packed bytes");
+        for s in &qm.stats {
+            let Some(&b) = qm.wbits.get(&s.id) else { continue };
+            let params = s.rows * s.cols * s.groups;
+            let bytes = if b <= 4 { params.div_ceil(2) } else { params };
+            println!("{:<6} {:>5} {:>14}", s.id, b, bytes);
+            wsum += params;
+            bsum += b as u64 * params as u64;
+            packed += bytes;
+        }
+        println!(
+            "weight assignment: mean {:.2} bits, {packed} packed weight bytes{}",
+            bsum as f64 / wsum.max(1) as f64,
+            match cfg.bit_budget {
+                Some(t) => format!(" (budget {t} bits/weight)"),
+                None => String::new(),
+            }
+        );
+    }
     println!(
         "fp32 {fp:.2}%  ->  quantized {acc:.2}%   (quantize {q_secs:.1}s, \
          {} calibration layer-forwards [{} sampler], {} executables compiled)",

@@ -103,10 +103,55 @@ pub fn cmd_serve_bench(args: &Args) -> Result<()> {
         engine.kernel().name()
     );
     println!("top-1: fp32 {fp:.2}%   fake-quant {fq:.2}%   int8 engine {iq:.2}%");
+    let wb8 = engine.plan.weight_bytes();
+    let dtypes = engine.plan.op_dtypes();
+    let n_w4 = dtypes.iter().filter(|(_, d)| *d == "w4").count();
+    println!(
+        "plan: {wb8} packed weight bytes, {} gemm ops ({n_w4} w4, {} w8)",
+        dtypes.len(),
+        dtypes.len() - n_w4
+    );
+
+    // 4-bit twin: the same model re-quantized with 4-bit weights so the
+    // bench compares the nibble-packed (w4) serve path against w8 at
+    // batch 1, where weight bandwidth dominates. Skipped when serving a
+    // pre-exported bundle — the bundle already fixed its layer widths.
+    let mut engine4 = match args.opt("quantized") {
+        Some(_) => None,
+        None => {
+            let mut cfg = config_from_args(args)?;
+            if !args.flags.contains_key("method") {
+                cfg.method = Method::Nearest;
+            }
+            cfg.bits = 4; // the point of this engine
+            if !args.flags.contains_key("per-channel") {
+                cfg.per_channel = true;
+            }
+            if cfg.act_bits.is_none() {
+                cfg.act_bits = Some(8);
+            }
+            let pipe = Pipeline::new(&model, cfg, Some(&ctx.rt));
+            let qm4 = pipe.quantize(&calib, &mut Rng::new(args.usize("seed", 1000)? as u64))?;
+            Some(ServeEngine::compile(&model, &qm4, &val.0.shape[1..])?)
+        }
+    };
+    let mut wb4 = None;
+    if let Some(e4) = &mut engine4 {
+        let bytes = e4.plan.weight_bytes();
+        let i4 = engine_top1(e4, &val.0, &val.1, 64);
+        println!(
+            "int4 twin: top-1 {i4:.2}%, {bytes} packed weight bytes ({:.2}x smaller than w8)",
+            wb8 as f64 / bytes.max(1) as f64
+        );
+        wb4 = Some((bytes, i4));
+    }
 
     let mut results: Vec<Json> = Vec::new();
     let reps = args.usize("reps", 10)?;
-    println!("{:<26} {:>12} {:>12} {:>8}", "batch", "f32 img/s", "int8 img/s", "speedup");
+    println!(
+        "{:<26} {:>12} {:>12} {:>12} {:>8}",
+        "batch", "f32 img/s", "int8 img/s", "int4 img/s", "speedup"
+    );
     for batch in [1usize, 8, 32, 64] {
         if batch > val.0.shape[0] {
             continue; // val set too small for an honest measurement
@@ -126,16 +171,27 @@ pub fn cmd_serve_bench(args: &Args) -> Result<()> {
             }
             sw.secs() / reps as f64
         };
+        let int4_tp = engine4.as_mut().map(|e4| {
+            let sw = Stopwatch::start();
+            for _ in 0..reps {
+                std::hint::black_box(e4.forward(&xb));
+            }
+            batch as f64 / (sw.secs() / reps as f64)
+        });
         let (f32_tp, int8_tp) = (batch as f64 / f32_s, batch as f64 / int8_s);
         println!(
-            "{:<26} {:>12.1} {:>12.1} {:>7.2}x",
+            "{:<26} {:>12.1} {:>12.1} {:>12} {:>7.2}x",
             format!("batch {batch}"),
             f32_tp,
             int8_tp,
+            int4_tp.map_or("-".to_string(), |t| format!("{t:.1}")),
             int8_tp / f32_tp
         );
         results.push(throughput_entry(&format!("f32-fake-quant batch{batch}"), f32_tp));
         results.push(throughput_entry(&format!("int8-engine batch{batch}"), int8_tp));
+        if let Some(tp) = int4_tp {
+            results.push(throughput_entry(&format!("int4-engine batch{batch}"), tp));
+        }
     }
 
     // batched serving under offered load, sharded across --shards engines
@@ -186,6 +242,17 @@ pub fn cmd_serve_bench(args: &Args) -> Result<()> {
     root.insert("top1_fp32".to_string(), Json::Num(fp));
     root.insert("top1_fake_quant".to_string(), Json::Num(fq));
     root.insert("top1_int8".to_string(), Json::Num(iq));
+    // weight footprint + per-op dtype of the compiled plan(s) — the model
+    // size axis of the w8/w4 trade-off
+    root.insert("weight_bytes_w8".to_string(), Json::Num(wb8 as f64));
+    if let Some((bytes, i4)) = wb4 {
+        root.insert("weight_bytes_w4".to_string(), Json::Num(bytes as f64));
+        root.insert("top1_int4".to_string(), Json::Num(i4));
+    }
+    root.insert(
+        "op_dtypes".to_string(),
+        Json::Arr(dtypes.iter().map(|(n, d)| Json::Str(format!("{n}:{d}"))).collect()),
+    );
     root.insert("results".to_string(), Json::Arr(results));
     std::fs::write("BENCH_serving.json", Json::Obj(root).to_string_pretty())?;
     println!("(wrote BENCH_serving.json)");

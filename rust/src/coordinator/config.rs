@@ -99,6 +99,12 @@ pub struct PipelineConfig {
     pub col_budget: usize,
     /// activation quantization bit-width (None = FP32 activations)
     pub act_bits: Option<u32>,
+    /// mixed-precision weight budget, in *mean bits per weight* (e.g.
+    /// 4.5). When set, a sensitivity pre-pass
+    /// ([`crate::adaround::alloc`]) assigns each layer 4 or 8 bits so the
+    /// parameter-weighted mean stays within budget, overriding the
+    /// uniform `bits` for weights. None = uniform `bits` everywhere.
+    pub bit_budget: Option<f32>,
     pub adaround: AdaRoundConfig,
     /// OCS channel expand ratio
     pub ocs_expand: f64,
@@ -127,6 +133,7 @@ impl Default for PipelineConfig {
             calib_n: 512,
             col_budget: 2048,
             act_bits: None,
+            bit_budget: None,
             adaround: AdaRoundConfig::default(),
             ocs_expand: 0.05,
             pre_cle: false,

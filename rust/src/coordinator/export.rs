@@ -2,20 +2,29 @@
 //! bundle so quantization (expensive) and serving (cheap) can run in
 //! different processes — the deployment hand-off of the framework.
 //!
-//! v2 layout (written by [`save_quantized`]):
-//!   __meta.version        [2] (i32)
+//! v3 layout (written by [`save_quantized`]):
+//!   __meta.version        [2] or [3] (i32; 3 iff any i4 entry below)
 //!   __meta.counts         [n_weights, n_biases, n_actquant] (i32)
+//!   i4:<node>             nibble-packed weight codes (two per byte) for
+//!                         layers quantized at <= 4 bits
 //!   i8:<node>             raw integer weight codes (i8, grid multiples)
 //!   scale:<node>          per-output-channel grid scales (f32, len cout)
 //!   w:<node>              f32 fallback for layers without a clean grid
 //!   b:<node>              corrected bias tensor (f32)
 //!   aq:<node>             [min, max, bits] (f32 triple)
 //!
-//! The i8 + scale pair is what the integer serving engine boots from —
-//! weight payloads are 4x smaller than v1, and dequantization
-//! (`scale[oc] * z`) reproduces the fake-quant f32 values bit-exactly
-//! because it is the same multiplication [`crate::quant::fake_quant`]
-//! performed. v1 bundles (f32 `w:` entries, no version tag) still load.
+//! The i8/i4 + scale pair is what the integer serving engine boots from —
+//! i8 payloads are 4x smaller than v1 f32, i4 another 2x, and
+//! dequantization (`scale[oc] * z`) reproduces the fake-quant f32 values
+//! bit-exactly because it is the same multiplication
+//! [`crate::quant::fake_quant`] performed: the unpacked nibble IS the i8
+//! code. A layer gets `i4:` only when the pipeline recorded
+//! `QuantizedModel::wbits <= 4` for it AND every code fits `[-8, 7]`;
+//! loading restores `wbits` from the entry kind (i4 -> 4, i8 -> 8), which
+//! is what makes the serve compiler pick the nibble-packed w4 kernels.
+//! v1 bundles (f32 `w:` entries, no version tag) and v2 bundles (i8
+//! only) still load bit-exactly; bundles with no i4 entry are still
+//! written as v2 so older builds keep reading them.
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -56,11 +65,23 @@ fn encode_i8(w: &Tensor, scales: &[f32]) -> Option<I8Tensor> {
 
 pub fn save_quantized(path: impl AsRef<Path>, qm: &QuantizedModel) -> Result<()> {
     let mut bundle: BTreeMap<String, QtzValue> = BTreeMap::new();
+    let mut any_i4 = false;
     for (id, w) in &qm.weight_overrides {
         let enc = qm.scales.get(id).and_then(|sc| encode_i8(w, sc));
         match enc {
             Some(wi) => {
-                bundle.insert(format!("i8:{id}"), QtzValue::I8(wi));
+                // nibble-pack when the pipeline quantized this layer at
+                // <= 4 bits; the grid guarantees codes in [-8, 7] then,
+                // but verify anyway so a hand-built QuantizedModel with
+                // inconsistent wbits degrades to i8 instead of panicking
+                let sub_byte = qm.wbits.get(id).is_some_and(|&b| b <= 4)
+                    && crate::tensor::int8::fits_i4(&wi.data);
+                if sub_byte {
+                    bundle.insert(format!("i4:{id}"), QtzValue::from_i4_codes(&wi.data, &wi.shape));
+                    any_i4 = true;
+                } else {
+                    bundle.insert(format!("i8:{id}"), QtzValue::I8(wi));
+                }
                 bundle.insert(
                     format!("scale:{id}"),
                     QtzValue::F32(Tensor::from_vec(
@@ -86,9 +107,11 @@ pub fn save_quantized(path: impl AsRef<Path>, qm: &QuantizedModel) -> Result<()>
             );
         }
     }
+    // stay on v2 when nothing is nibble-packed so older builds keep
+    // loading budget-free exports
     bundle.insert(
         "__meta.version".into(),
-        QtzValue::I32(IntTensor::from_vec(&[1], vec![2])),
+        QtzValue::I32(IntTensor::from_vec(&[1], vec![if any_i4 { 3 } else { 2 }])),
     );
     bundle.insert(
         "__meta.counts".into(),
@@ -117,7 +140,7 @@ pub fn load_quantized(path: impl AsRef<Path>) -> Result<QuantizedModel> {
         .and_then(|v| v.as_i32().ok())
         .and_then(|t| t.data.first().copied())
         .unwrap_or(1);
-    if version > 2 {
+    if version > 3 {
         bail!("bundle version {version} is newer than this build understands");
     }
     let mut qm = QuantizedModel {
@@ -125,6 +148,7 @@ pub fn load_quantized(path: impl AsRef<Path>) -> Result<QuantizedModel> {
         bias_overrides: BTreeMap::new(),
         act_quant: None,
         scales: BTreeMap::new(),
+        wbits: BTreeMap::new(),
         stats: Vec::new(),
         layer_execs: 0,
     };
@@ -141,36 +165,42 @@ pub fn load_quantized(path: impl AsRef<Path>) -> Result<QuantizedModel> {
             aq.insert(id.to_string(), ActQuant::new(t.data[0], t.data[1], t.data[2] as u32));
         }
     }
-    // dequantize i8 weight codes (after the scale pass above, so the map
-    // iteration order doesn't matter)
+    // dequantize integer weight codes — i4 unpacks to the same i8 code
+    // space first — (after the scale pass above, so the map iteration
+    // order doesn't matter)
     for (k, v) in &bundle {
-        if let Some(id) = k.strip_prefix("i8:") {
-            let wi = v.as_i8()?;
-            let sc = qm
-                .scales
-                .get(id)
-                .ok_or_else(|| anyhow::anyhow!("i8 weights for {id} without scale:{id}"))?;
-            let cout = *wi.shape.first().unwrap_or(&0);
-            if cout == 0 {
-                bail!("i8 weights for {id} have empty shape {:?}", wi.shape);
-            }
-            if sc.len() != cout && sc.len() != 1 {
-                bail!("scale:{id} has {} entries for {cout} output channels", sc.len());
-            }
-            let cols = wi.numel() / cout;
-            let mut data = vec![0.0f32; wi.numel()];
-            for oc in 0..cout {
-                let s = if sc.len() == 1 { sc[0] } else { sc[oc] };
-                for (d, &z) in data[oc * cols..(oc + 1) * cols]
-                    .iter_mut()
-                    .zip(&wi.data[oc * cols..])
-                {
-                    *d = s * z as f32;
-                }
-            }
-            qm.weight_overrides
-                .insert(id.to_string(), Tensor::from_vec(&wi.shape, data));
+        let (id, wi, bits) = if let Some(id) = k.strip_prefix("i8:") {
+            (id, v.as_i8()?.clone(), 8u32)
+        } else if let Some(id) = k.strip_prefix("i4:") {
+            (id, v.i4_to_i8()?, 4u32)
+        } else {
+            continue;
+        };
+        let sc = qm
+            .scales
+            .get(id)
+            .ok_or_else(|| anyhow::anyhow!("integer weights for {id} without scale:{id}"))?;
+        let cout = *wi.shape.first().unwrap_or(&0);
+        if cout == 0 {
+            bail!("integer weights for {id} have empty shape {:?}", wi.shape);
         }
+        if sc.len() != cout && sc.len() != 1 {
+            bail!("scale:{id} has {} entries for {cout} output channels", sc.len());
+        }
+        let cols = wi.numel() / cout;
+        let mut data = vec![0.0f32; wi.numel()];
+        for oc in 0..cout {
+            let s = if sc.len() == 1 { sc[0] } else { sc[oc] };
+            for (d, &z) in data[oc * cols..(oc + 1) * cols]
+                .iter_mut()
+                .zip(&wi.data[oc * cols..])
+            {
+                *d = s * z as f32;
+            }
+        }
+        qm.wbits.insert(id.to_string(), bits);
+        qm.weight_overrides
+            .insert(id.to_string(), Tensor::from_vec(&wi.shape, data));
     }
     if !aq.is_empty() {
         qm.act_quant = Some(aq);
@@ -195,6 +225,7 @@ mod tests {
             bias_overrides: BTreeMap::new(),
             act_quant: None,
             scales: BTreeMap::new(),
+            wbits: BTreeMap::new(),
             stats: Vec::new(),
             layer_execs: 0,
         };
@@ -291,6 +322,75 @@ mod tests {
         assert!(!raw.contains_key("i8:c1"));
         let back = load_quantized(&path).unwrap();
         assert_eq!(back.weight_overrides["c1"].data, vec![0.51, -0.52]);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn v3_i4_roundtrip_is_bit_exact() {
+        // a 4-bit layer nibble-packs: half the payload of i8, same f32
+        // values back, wbits restored so the serve compiler goes w4
+        let path = std::env::temp_dir().join("qm_i4_roundtrip.qtz");
+        let mut qm = sample_qm();
+        let scales = vec![0.013f32, 0.07];
+        let zs: [i32; 8] = [-8, 7, 0, -1, 1, 3, -5, 6]; // full i4 corner set
+        let w: Vec<f32> = zs
+            .iter()
+            .enumerate()
+            .map(|(i, &z)| scales[i / 4] * z as f32)
+            .collect();
+        qm.weight_overrides
+            .insert("c1".into(), Tensor::from_vec(&[2, 4], w.clone()));
+        qm.scales.insert("c1".into(), scales.clone());
+        qm.wbits.insert("c1".into(), 4);
+        save_quantized(&path, &qm).unwrap();
+        let raw = crate::io::read_qtz(&path).unwrap();
+        assert!(raw.contains_key("i4:c1"));
+        assert!(!raw.contains_key("i8:c1"));
+        assert_eq!(raw["__meta.version"].as_i32().unwrap().data, vec![3]);
+        match &raw["i4:c1"] {
+            QtzValue::I4(p, _) => assert_eq!(p.len(), 4, "8 codes in 4 bytes"),
+            _ => panic!("expected i4 entry"),
+        }
+        let back = load_quantized(&path).unwrap();
+        assert_eq!(back.weight_overrides["c1"].data, w, "dequant must be bit-exact");
+        assert_eq!(back.wbits.get("c1"), Some(&4));
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn v2_kept_when_no_layer_is_sub_byte() {
+        // 8-bit-only exports must stay loadable by older builds: version
+        // tag 2, no i4 entries, and the loader records wbits = 8
+        let path = std::env::temp_dir().join("qm_v2_stable.qtz");
+        let mut qm = sample_qm();
+        qm.weight_overrides
+            .insert("c1".into(), Tensor::from_vec(&[2, 1, 1, 1], vec![0.5, -0.5]));
+        qm.scales.insert("c1".into(), vec![0.25, 0.25]);
+        qm.wbits.insert("c1".into(), 8);
+        save_quantized(&path, &qm).unwrap();
+        let raw = crate::io::read_qtz(&path).unwrap();
+        assert_eq!(raw["__meta.version"].as_i32().unwrap().data, vec![2]);
+        assert!(raw.contains_key("i8:c1"));
+        let back = load_quantized(&path).unwrap();
+        assert_eq!(back.wbits.get("c1"), Some(&8));
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn inconsistent_wbits_degrade_to_i8() {
+        // wbits says 4 but a code is outside [-8, 7]: the exporter must
+        // fall back to i8 rather than panic in the packer
+        let path = std::env::temp_dir().join("qm_wbits_lies.qtz");
+        let mut qm = sample_qm();
+        qm.weight_overrides
+            .insert("c1".into(), Tensor::from_vec(&[2, 1, 1, 1], vec![5.0, -0.5]));
+        qm.scales.insert("c1".into(), vec![0.5, 0.5]); // code 10 > 7
+        qm.wbits.insert("c1".into(), 4);
+        save_quantized(&path, &qm).unwrap();
+        let raw = crate::io::read_qtz(&path).unwrap();
+        assert!(raw.contains_key("i8:c1"));
+        assert!(!raw.contains_key("i4:c1"));
+        assert_eq!(raw["__meta.version"].as_i32().unwrap().data, vec![2]);
         std::fs::remove_file(path).ok();
     }
 

@@ -32,6 +32,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 
 use anyhow::{bail, Result};
 
+use crate::adaround::alloc::{allocate_bits, BitAllocation, LayerSensitivity};
 use crate::adaround::hopfield::{optimize_hopfield, optimize_sigmoid_freg, TempSchedule};
 use crate::adaround::ste::optimize_ste;
 use crate::adaround::{AdaRoundConfig, LayerProblem, NativeOptimizer, PjrtOptimizer, RoundingOptimizer};
@@ -52,6 +53,17 @@ use super::stream::TapStore;
 /// and of the per-chunk column subsample/RNG forks. Part of the
 /// determinism contract — changing it changes the sampled columns.
 pub const CHUNK_IMGS: usize = 64;
+
+/// Candidate per-layer weight widths for the mixed-precision allocator
+/// (`PipelineConfig::bit_budget`): serve packs ≤4-bit layers as nibbles
+/// (w4) and everything else as plain i8 (w8), so these are the only two
+/// widths with distinct serving cost.
+pub const BIT_CHOICES: &[u32] = &[4, 8];
+
+/// RNG fork tag for the allocator's sensitivity pre-pass — chosen out of
+/// the per-group tag range (small integers) so budgeted runs never
+/// collide with a group stream.
+const ALLOC_FORK_TAG: u64 = 0xA110C;
 
 #[derive(Clone, Debug)]
 pub struct LayerStat {
@@ -74,6 +86,13 @@ pub struct QuantizedModel {
     /// exact scales the overridden weights live on). Lets the export path
     /// and the integer serving engine skip scale recovery.
     pub scales: BTreeMap<String, Vec<f32>>,
+    /// Per-layer weight bit-width actually used (uniform `cfg.bits`, or
+    /// the mixed-precision allocator's choice under `cfg.bit_budget`).
+    /// The serve compiler honors this: layers recorded at ≤ 4 bits pack
+    /// nibble (w4) weights; the `.qtz` v3 exporter stores them as i4.
+    /// Only present for methods whose codes land exactly on the grid
+    /// (same condition as `scales`).
+    pub wbits: BTreeMap<String, u32>,
     pub stats: Vec<LayerStat>,
     /// Conv/Dense executions the calibration sampling performed (the
     /// streaming pipeline's O(L) instrumentation; `quantize` reports it).
@@ -146,10 +165,22 @@ impl<'a> Pipeline<'a> {
             bias_overrides: BTreeMap::new(),
             act_quant: None,
             scales: BTreeMap::new(),
+            wbits: BTreeMap::new(),
             stats: Vec::new(),
             layer_execs: 0,
         };
         let nodes: Vec<Node> = self.work.quant_layers().into_iter().cloned().collect();
+        // mixed-precision pre-pass: only when a budget is set, so
+        // budget-free runs fork no extra RNG streams and stay
+        // byte-identical with earlier versions
+        let layer_bits: Option<BTreeMap<String, u32>> = match self.cfg.bit_budget {
+            Some(budget) => {
+                let alloc =
+                    self.allocate_layer_bits(&calib, budget as f64, &mut rng.fork(ALLOC_FORK_TAG))?;
+                Some(alloc.bits)
+            }
+            None => None,
+        };
         // reference path: FP32 taps for every selected layer resident at
         // once + per-layer prefix replays (the streaming store makes both
         // obsolete on the default path)
@@ -210,7 +241,11 @@ impl<'a> Pipeline<'a> {
                     ),
                 }
             };
-            let stat = self.quantize_layer(node, &sample, &mut out, rng)?;
+            let bits = layer_bits
+                .as_ref()
+                .and_then(|m| m.get(&node.id).copied())
+                .unwrap_or(self.cfg.bits);
+            let stat = self.quantize_layer(node, &sample, &mut out, rng, bits)?;
             out.stats.push(LayerStat { secs: sw.secs(), ..stat });
         }
         out.layer_execs = match &store {
@@ -232,16 +267,89 @@ impl<'a> Pipeline<'a> {
         )
     }
 
+    /// Sensitivity pre-pass for the mixed-precision budget: sample FP32
+    /// calibration columns for every selected layer (no quantized prefix
+    /// — sensitivities must not depend on rounding decisions that the
+    /// allocation itself will influence), score nearest rounding on each
+    /// candidate grid with the Gauss-Newton reconstruction proxy, and
+    /// let the greedy allocator spend the budget.
+    pub fn allocate_layer_bits(
+        &self,
+        calib: &Tensor,
+        budget_mean_bits: f64,
+        rng: &mut Rng,
+    ) -> Result<BitAllocation> {
+        let nodes: Vec<Node> = self.work.quant_layers().into_iter().cloned().collect();
+        let mut store = TapStore::new(&self.work, calib, CHUNK_IMGS);
+        let quant_opts = ForwardOptions {
+            weight_overrides: None,
+            bias_overrides: None,
+            act_quant: None,
+            layer_counter: None,
+        };
+        let mut layers = Vec::new();
+        for node in &nodes {
+            if !self.layer_selected(&node.id) {
+                continue;
+            }
+            let sample = store.sample_layer(node, &quant_opts, false, self.cfg.col_budget, rng);
+            layers.push(self.layer_sensitivity(node, &sample)?);
+        }
+        Ok(allocate_bits(&layers, budget_mean_bits))
+    }
+
+    /// Proxy cost of serving one layer at each candidate width: the
+    /// reconstruction MSE of nearest rounding on that width's grid over
+    /// the layer's FP32 calibration columns — the Δwᵀ(x xᵀ)Δw quadratic
+    /// of eq. (14), evaluated with the same [`LayerProblem`] machinery
+    /// the rounding optimizer uses.
+    fn layer_sensitivity(&self, node: &Node, sample: &LayerSample) -> Result<LayerSensitivity> {
+        let geom = node.geom().expect("quantizable node");
+        let w_full = self.work.weight(&node.id).clone();
+        let bias_full = self.work.bias(&node.id).clone();
+        let cout = w_full.shape[0];
+        let w_gemm = Tensor::from_vec(&[cout, geom.cols], w_full.data.clone());
+        let (grid_method, per_channel) = match self.cfg.method {
+            Method::Omse => (GridMethod::MseW, true),
+            _ => (self.cfg.grid, self.cfg.per_channel),
+        };
+        let og = geom.rows;
+        let relu = self.cfg.use_relu && geom.relu;
+        let mut cost = Vec::new();
+        for &b in BIT_CHOICES {
+            let grid = QuantGrid::fit(&w_gemm, b, grid_method, per_channel, Some(&sample.x_fp[0]));
+            let mut c = 0.0;
+            for g in 0..geom.groups {
+                let row0 = g * og;
+                let w_g = Tensor::from_vec(
+                    &[og, geom.cols],
+                    w_gemm.data[row0 * geom.cols..(row0 + og) * geom.cols].to_vec(),
+                );
+                let bias_g: Vec<f32> = bias_full.data[row0..row0 + og].to_vec();
+                let prob = LayerProblem::new(w_g, &grid, row0, bias_g, relu);
+                let x_fp = &sample.x_fp[g];
+                let t = group_target(&prob, x_fp);
+                c += prob.recon_mse(&prob.hard_weights(&prob.nearest_mask()), x_fp, &t);
+            }
+            cost.push((b, c));
+        }
+        Ok(LayerSensitivity { id: node.id.clone(), params: w_full.numel(), cost })
+    }
+
     /// Grid fit + per-group rounding + assembly for one layer, from an
-    /// already-collected calibration sample.
+    /// already-collected calibration sample. `bits` is this layer's
+    /// weight width — `cfg.bits` on uniform runs, the allocator's choice
+    /// under a `bit_budget`.
     fn quantize_layer(
         &self,
         node: &Node,
         sample: &LayerSample,
         out: &mut QuantizedModel,
         rng: &mut Rng,
+        bits: u32,
     ) -> Result<LayerStat> {
-        let cfg = &self.cfg;
+        let lcfg = PipelineConfig { bits, ..self.cfg.clone() };
+        let cfg = &lcfg;
         let geom = node.geom().expect("quantizable node");
         let w4 = self.work.weight(&node.id).clone();
         let bias_full = self.work.bias(&node.id).clone();
@@ -269,6 +377,10 @@ impl<'a> Pipeline<'a> {
                 node.id.clone(),
                 (0..cout).map(|r| grid.scale_for_row(r)).collect(),
             );
+            // wbits shares the condition: it is a promise that the
+            // overridden weights are exact multiples of `scales` with
+            // codes inside the `bits`-wide signed range
+            out.wbits.insert(node.id.clone(), bits);
         }
 
         // --- per-group rounding ---

@@ -3,7 +3,11 @@
 //!
 //! Dtype codes: 0 = f32, 1 = i32, 2 = u8, 3 = i8 (added for the v2
 //! quantized-model layout carrying raw integer weights; old bundles never
-//! contain code 3 and keep loading unchanged).
+//! contain code 3 and keep loading unchanged), 4 = i4 (v3 bundles:
+//! nibble-packed signed 4-bit codes, two per byte, low nibble first —
+//! the payload is `ceil(numel/2)` bytes; see `docs/SERVING.md` for the
+//! byte-level spec). Unknown codes produce a descriptive error, not a
+//! panic, so bundles from newer tools fail loudly but cleanly.
 
 use std::collections::BTreeMap;
 use std::io::{Read, Write};
@@ -11,6 +15,7 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
+use crate::tensor::int8::{pack_i4, unpack_i4};
 use crate::tensor::{I8Tensor, IntTensor, Tensor};
 
 const MAGIC: &[u8; 4] = b"QTZ1";
@@ -22,9 +27,18 @@ pub enum QtzValue {
     I32(IntTensor),
     U8(Vec<u8>, Vec<usize>),
     I8(I8Tensor),
+    /// Nibble-packed i4 codes: raw packed bytes plus the logical shape
+    /// (`numel` codes in `ceil(numel/2)` bytes).
+    I4(Vec<u8>, Vec<usize>),
 }
 
 impl QtzValue {
+    /// Nibble-pack i8 codes (each in `[-8, 7]`) into an i4 entry.
+    pub fn from_i4_codes(codes: &[i8], shape: &[usize]) -> QtzValue {
+        assert_eq!(shape.iter().product::<usize>(), codes.len());
+        QtzValue::I4(pack_i4(codes), shape.to_vec())
+    }
+
     pub fn as_f32(&self) -> Result<&Tensor> {
         match self {
             QtzValue::F32(t) => Ok(t),
@@ -46,12 +60,25 @@ impl QtzValue {
         }
     }
 
+    /// The codes of an i4 entry, unpacked to an [`I8Tensor`] (i4 ⊂ i8;
+    /// the nibble stream is the storage format, i8 the working one).
+    pub fn i4_to_i8(&self) -> Result<I8Tensor> {
+        match self {
+            QtzValue::I4(raw, s) => {
+                let n: usize = s.iter().product();
+                Ok(I8Tensor::from_vec(s, unpack_i4(raw, n)))
+            }
+            _ => bail!("tensor is not i4"),
+        }
+    }
+
     pub fn shape(&self) -> &[usize] {
         match self {
             QtzValue::F32(t) => &t.shape,
             QtzValue::I32(t) => &t.shape,
             QtzValue::U8(_, s) => s,
             QtzValue::I8(t) => &t.shape,
+            QtzValue::I4(_, s) => s,
         }
     }
 }
@@ -123,7 +150,16 @@ pub fn read_qtz(path: impl AsRef<Path>) -> Result<BTreeMap<String, QtzValue>> {
                 let data = raw.into_iter().map(|b| b as i8).collect();
                 QtzValue::I8(I8Tensor::from_vec(&shape, data))
             }
-            d => bail!("{path:?}: unknown dtype code {d}"),
+            4 => {
+                let mut raw = vec![0u8; n.div_ceil(2)];
+                r.read_exact(&mut raw)?;
+                QtzValue::I4(raw, shape)
+            }
+            d => bail!(
+                "{path:?}: entry {name:?} has unknown dtype code {d} \
+                 (this build understands 0=f32, 1=i32, 2=u8, 3=i8, 4=i4); \
+                 the bundle was likely written by a newer tool"
+            ),
         };
         out.insert(name, value);
     }
@@ -144,6 +180,7 @@ pub fn write_qtz(path: impl AsRef<Path>, tensors: &BTreeMap<String, QtzValue>) -
             QtzValue::I32(t) => (1, &t.shape),
             QtzValue::U8(_, s) => (2, s),
             QtzValue::I8(t) => (3, &t.shape),
+            QtzValue::I4(_, s) => (4, s),
         };
         w.write_all(&[code, shape.len() as u8])?;
         for &d in shape {
@@ -164,6 +201,11 @@ pub fn write_qtz(path: impl AsRef<Path>, tensors: &BTreeMap<String, QtzValue>) -
             QtzValue::I8(t) => {
                 let raw: Vec<u8> = t.data.iter().map(|&x| x as u8).collect();
                 w.write_all(&raw)?;
+            }
+            QtzValue::I4(raw, s) => {
+                let n: usize = s.iter().product();
+                assert_eq!(raw.len(), n.div_ceil(2), "i4 payload length");
+                w.write_all(raw)?;
             }
         }
     }
@@ -209,6 +251,48 @@ mod tests {
         assert_eq!(back["z"].as_i8().unwrap().data, vec![-128, -1, 0, 1, 64, 127]);
         assert_eq!(back["z"].shape(), &[2, 3]);
         assert!(back["z"].as_f32().is_err());
+        std::fs::remove_file(dir).ok();
+    }
+
+    #[test]
+    fn i4_roundtrip_even_and_odd() {
+        let dir = std::env::temp_dir().join("qtz_test_i4.qtz");
+        // odd numel exercises the pad nibble, corners exercise ±7/−8
+        let codes: Vec<i8> = vec![-8, 7, -1, 0, 3, -5, 6];
+        let mut m = BTreeMap::new();
+        m.insert("q".to_string(), QtzValue::from_i4_codes(&codes, &[7]));
+        m.insert("e".to_string(), QtzValue::from_i4_codes(&codes[..6], &[2, 3]));
+        write_qtz(&dir, &m).unwrap();
+        let back = read_qtz(&dir).unwrap();
+        assert_eq!(back["q"].i4_to_i8().unwrap().data, codes);
+        assert_eq!(back["e"].i4_to_i8().unwrap().data, &codes[..6]);
+        assert_eq!(back["e"].shape(), &[2, 3]);
+        assert!(back["q"].as_i8().is_err(), "i4 is a distinct dtype");
+        // payload is half-size: 7 codes -> 4 bytes, 6 codes -> 3 bytes
+        match &back["q"] {
+            QtzValue::I4(raw, _) => assert_eq!(raw.len(), 4),
+            _ => panic!("expected i4"),
+        }
+        std::fs::remove_file(dir).ok();
+    }
+
+    #[test]
+    fn unknown_future_dtype_is_a_clear_error() {
+        let dir = std::env::temp_dir().join("qtz_test_future.qtz");
+        // hand-rolled bundle with one entry of dtype code 9
+        let mut raw: Vec<u8> = Vec::new();
+        raw.extend_from_slice(b"QTZ1");
+        raw.extend_from_slice(&1u32.to_le_bytes());
+        raw.extend_from_slice(&1u16.to_le_bytes());
+        raw.push(b'x');
+        raw.push(9); // dtype
+        raw.push(1); // ndim
+        raw.extend_from_slice(&2u32.to_le_bytes());
+        raw.extend_from_slice(&[0, 0]);
+        std::fs::write(&dir, &raw).unwrap();
+        let err = read_qtz(&dir).unwrap_err().to_string();
+        assert!(err.contains("unknown dtype code 9"), "got: {err}");
+        assert!(err.contains("newer tool"), "got: {err}");
         std::fs::remove_file(dir).ok();
     }
 

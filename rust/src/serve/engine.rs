@@ -92,6 +92,19 @@ impl ServeEngine {
         Ok(ServeEngine::new(compile_plan(model, qm, in_shape)?))
     }
 
+    /// [`ServeEngine::compile`] with explicit plan options — e.g.
+    /// `PlanOptions { force_w4: true }` to nibble-pack every layer whose
+    /// codes fit i4 regardless of the recorded bit width (the w4-vs-w8
+    /// comparison in `serve-bench`, and CI's forced-w4 job).
+    pub fn compile_with(
+        model: &Model,
+        qm: &QuantizedModel,
+        in_shape: &[usize],
+        opts: super::plan::PlanOptions,
+    ) -> Result<ServeEngine> {
+        Ok(ServeEngine::new(super::plan::compile_plan_with(model, qm, in_shape, opts)?))
+    }
+
     /// Quantization of the final output tensor (for external dequant).
     pub fn out_q(&self) -> ActQ {
         self.plan.nodes.last().expect("empty plan").out_q

@@ -24,12 +24,13 @@
 
 use crate::tensor::conv::out_size;
 use crate::tensor::int8::kernel::{
-    gemm_conv_packed_into, gemm_dense_packed_into, Kernel, PackedConv, PackedDense,
+    gemm_conv4_packed_into, gemm_conv_packed_into, gemm_dense4_packed_into,
+    gemm_dense_packed_into, Kernel,
 };
 use crate::tensor::{Conv2dParams, U8Tensor};
 use crate::util::parallel;
 
-use super::plan::Requant;
+use super::plan::{ConvW, DenseW, Requant};
 
 /// Reusable scratch for the integer conv/dense path (the engine keeps one
 /// across layers and requests, making the hot loop allocation-free once
@@ -104,16 +105,17 @@ fn im2col_u8_row(
     crate::tensor::conv::im2col_row_any(&input.shape, &input.data, group, p, zp, r, orow);
 }
 
-/// Integer conv2d: input [N,C,H,W] u8, packed weights ([`PackedConv`],
-/// `O` rows of the grouped patch `C/g·k·k`) -> [N,O,Ho,Wo] u8. The three
-/// passes (im2col, per-group GEMM, requant scatter) follow
-/// [`crate::tensor::conv2d_with`]; the GEMM runs the `kern` micro-kernel.
+/// Integer conv2d: input [N,C,H,W] u8, packed weights ([`ConvW`]: w8 or
+/// nibble-packed w4, `O` rows of the grouped patch `C/g·k·k`) ->
+/// [N,O,Ho,Wo] u8. The three passes (im2col, per-group GEMM, requant
+/// scatter) follow [`crate::tensor::conv2d_with`]; the GEMM runs the
+/// `kern` micro-kernel for the weight precision of the pack.
 #[allow(clippy::too_many_arguments)]
 pub fn conv2d_i8(
     ws: &mut Int8Workspace,
     kern: Kernel,
     input: &U8Tensor,
-    w: &PackedConv,
+    w: &ConvW,
     p: Conv2dParams,
     bias_q: &[i32],
     wsum: &[i32],
@@ -123,9 +125,9 @@ pub fn conv2d_i8(
     relu: bool,
 ) -> U8Tensor {
     let (n, c, h, wd) = (input.shape[0], input.shape[1], input.shape[2], input.shape[3]);
-    let o = w.rows;
+    let o = w.rows();
     let og = o / p.groups;
-    let patch = w.k;
+    let patch = w.k();
     // packed-layout invariants: a stale or corrupted pack must fail here,
     // in tests, not silently poison the accumulators below
     debug_assert_eq!(patch, (c / p.groups) * p.k * p.k, "packed patch vs input geometry");
@@ -158,18 +160,30 @@ pub fn conv2d_i8(
         og,
         crate::tensor::int8::row_grain(patch, npos),
         |g, rows, seg| {
-            let wslice = w.row_slice(rows.clone());
             let cslice = &cols_ref[g * patch * npos..(g + 1) * patch * npos];
-            gemm_conv_packed_into(
-                kern,
-                wslice,
-                rows.end - rows.start,
-                patch,
-                w.kp,
-                cslice,
-                seg,
-                npos,
-            );
+            let m = rows.end - rows.start;
+            match w {
+                ConvW::W8(pw) => gemm_conv_packed_into(
+                    kern,
+                    pw.row_slice(rows.clone()),
+                    m,
+                    patch,
+                    pw.kp,
+                    cslice,
+                    seg,
+                    npos,
+                ),
+                ConvW::W4(pw) => gemm_conv4_packed_into(
+                    kern,
+                    pw.row_slice(rows.clone()),
+                    m,
+                    patch,
+                    pw.kp,
+                    cslice,
+                    seg,
+                    npos,
+                ),
+            }
         },
     );
 
@@ -193,14 +207,14 @@ pub fn conv2d_i8(
     out
 }
 
-/// Integer dense layer: input [N, C] u8, packed weights
-/// ([`PackedDense`], `O` rows of `C`) -> [N, O] u8.
+/// Integer dense layer: input [N, C] u8, packed weights ([`DenseW`]: w8
+/// or nibble-packed w4, `O` rows of `C`) -> [N, O] u8.
 #[allow(clippy::too_many_arguments)]
 pub fn dense_i8(
     ws: &mut Int8Workspace,
     kern: Kernel,
     input: &U8Tensor,
-    w: &PackedDense,
+    w: &DenseW,
     bias_q: &[i32],
     wsum: &[i32],
     requant: &[Requant],
@@ -209,11 +223,14 @@ pub fn dense_i8(
     relu: bool,
 ) -> U8Tensor {
     let (n, c) = (input.shape[0], input.shape[1]);
-    let o = w.n;
-    assert_eq!(w.k, c, "dense weight shape mismatch");
+    let o = w.n();
+    assert_eq!(w.k(), c, "dense weight shape mismatch");
     debug_assert!(w.layout_ok(), "PackedDense layout invariants violated");
     let acc: &mut Vec<i32> = ws.ensure_acc(n * o);
-    gemm_dense_packed_into(kern, &input.data, w, acc, n);
+    match w {
+        DenseW::W8(pw) => gemm_dense_packed_into(kern, &input.data, pw, acc, n),
+        DenseW::W4(pw) => gemm_dense4_packed_into(kern, &input.data, pw, acc, n),
+    }
     let mut out = U8Tensor::zeros(&[n, o]);
     let lo = if relu { zp_out } else { 0 };
     let acc_ref = &ws.acc;
@@ -379,15 +396,16 @@ pub fn concat_i8(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::tensor::int8::kernel::{PackedConv, PackedDense};
     use crate::tensor::{conv2d, I8Tensor, Tensor};
 
     fn identity_requant() -> Requant {
         Requant::from_real(1.0)
     }
 
-    fn pack_conv(w: &I8Tensor) -> PackedConv {
+    fn pack_conv(w: &I8Tensor) -> ConvW {
         let o = w.shape[0];
-        PackedConv::pack(&w.data, o, w.numel() / o)
+        ConvW::W8(PackedConv::pack(&w.data, o, w.numel() / o))
     }
 
     #[test]
@@ -546,7 +564,7 @@ mod tests {
             .collect();
         let requant = vec![identity_requant(); o];
         let mut ws = Int8Workspace::new();
-        let wp = PackedDense::pack(&wi.data, o, c);
+        let wp = DenseW::W8(PackedDense::pack(&wi.data, o, c));
         let got = dense_i8(
             &mut ws,
             crate::tensor::int8::kernel::select(),

@@ -101,7 +101,9 @@ pub use batch::{
     offered_load_latencies, saturation_throughput, Batcher, BatcherHandle, BatchPolicy,
 };
 pub use engine::ServeEngine;
-pub use plan::{compile_plan, ActQ, QuantizedPlan, Requant};
+pub use plan::{
+    compile_plan, compile_plan_with, ActQ, ConvW, DenseW, PlanOptions, QuantizedPlan, Requant,
+};
 pub use crate::tensor::int8::kernel::Kernel;
 
 use std::collections::BTreeMap;

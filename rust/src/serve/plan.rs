@@ -26,7 +26,8 @@ use anyhow::{anyhow, bail, Result};
 use crate::coordinator::QuantizedModel;
 use crate::nn::{Model, Op};
 use crate::quant::ActQuant;
-use crate::tensor::int8::kernel::{PackedConv, PackedDense};
+use crate::tensor::int8::fits_i4;
+use crate::tensor::int8::kernel::{PackedConv, PackedConv4, PackedDense, PackedDense4};
 use crate::tensor::{Conv2dParams, I8Tensor, Tensor};
 
 /// Fixed-point multiplier: `real ≈ m / 2^shift`, `m` in `[0, 2^31)`.
@@ -123,6 +124,100 @@ impl ActQ {
     }
 }
 
+/// Conv weights packed at either serving precision. The w4 variant holds
+/// the same codes at half the bytes (two's-complement nibbles) and its
+/// GEMM is bit-identical to w8 over the same codes, so the choice is a
+/// pure bandwidth/footprint knob.
+pub enum ConvW {
+    W8(PackedConv),
+    W4(PackedConv4),
+}
+
+impl ConvW {
+    pub fn rows(&self) -> usize {
+        match self {
+            ConvW::W8(p) => p.rows,
+            ConvW::W4(p) => p.rows,
+        }
+    }
+
+    pub fn k(&self) -> usize {
+        match self {
+            ConvW::W8(p) => p.k,
+            ConvW::W4(p) => p.k,
+        }
+    }
+
+    /// Packed payload size in bytes — the weight-bandwidth metric
+    /// `serve-bench` reports per plan.
+    pub fn weight_bytes(&self) -> usize {
+        match self {
+            ConvW::W8(p) => p.data.len(),
+            ConvW::W4(p) => p.data.len(),
+        }
+    }
+
+    /// Stable label for benches and `serve-bench` output.
+    pub fn dtype(&self) -> &'static str {
+        match self {
+            ConvW::W8(_) => "w8",
+            ConvW::W4(_) => "w4",
+        }
+    }
+
+    pub fn layout_ok(&self) -> bool {
+        match self {
+            ConvW::W8(p) => p.layout_ok(),
+            ConvW::W4(p) => p.layout_ok(),
+        }
+    }
+}
+
+/// Dense weights packed at either serving precision (see [`ConvW`]).
+pub enum DenseW {
+    W8(PackedDense),
+    W4(PackedDense4),
+}
+
+impl DenseW {
+    pub fn n(&self) -> usize {
+        match self {
+            DenseW::W8(p) => p.n,
+            DenseW::W4(p) => p.n,
+        }
+    }
+
+    pub fn k(&self) -> usize {
+        match self {
+            DenseW::W8(p) => p.k,
+            DenseW::W4(p) => p.k,
+        }
+    }
+
+    /// Packed payload size in bytes.
+    pub fn weight_bytes(&self) -> usize {
+        match self {
+            DenseW::W8(p) => p.data.len(),
+            DenseW::W4(p) => p.data.len(),
+        }
+    }
+
+    /// Stable label for benches and `serve-bench` output.
+    pub fn dtype(&self) -> &'static str {
+        match self {
+            DenseW::W8(_) => "w8",
+            DenseW::W4(_) => "w4",
+        }
+    }
+
+    pub fn layout_ok(&self) -> bool {
+        match self {
+            DenseW::W8(p) => p.layout_ok(),
+            DenseW::W4(p) => p.layout_ok(),
+        }
+    }
+}
+
 /// One integer layer. Weight-bearing variants carry everything the kernel
 /// needs precomputed — including the weights already packed into the
 /// micro-kernel layout ([`crate::tensor::int8::kernel`]), so the serving
@@ -132,9 +227,9 @@ pub enum PlanOp {
     /// f32 input -> u8 (the only op touching floats at run time).
     Quantize,
     Conv {
-        /// i8 weights in the packed conv-GEMM layout: `cout` rows of the
-        /// grouped patch (`cin/g·k·k`), K-padded per row
-        w: PackedConv,
+        /// weights in the packed conv-GEMM layout (w8 or nibble-packed
+        /// w4): `cout` rows of the grouped patch (`cin/g·k·k`), K-padded
+        w: ConvW,
         p: Conv2dParams,
         /// bias folded to the accumulator domain, per output channel
         bias_q: Vec<i32>,
@@ -145,8 +240,9 @@ pub enum PlanOp {
         relu: bool,
     },
     Dense {
-        /// i8 weights `[cout, cin]` in the packed quad-interleaved layout
-        w: PackedDense,
+        /// weights `[cout, cin]` in the packed quad-interleaved layout
+        /// (w8 or nibble-packed w4)
+        w: DenseW,
         bias_q: Vec<i32>,
         wsum: Vec<i32>,
         requant: Vec<Requant>,
@@ -183,6 +279,59 @@ pub struct QuantizedPlan {
     pub nodes: Vec<PlanNode>,
     /// input image geometry [C, H, W] the plan was compiled for
     pub in_shape: Vec<usize>,
+}
+
+impl QuantizedPlan {
+    /// Total packed weight bytes across conv/dense ops — the bandwidth
+    /// and model-footprint metric the w4 path halves.
+    pub fn weight_bytes(&self) -> usize {
+        self.nodes
+            .iter()
+            .map(|n| match &n.op {
+                PlanOp::Conv { w, .. } => w.weight_bytes(),
+                PlanOp::Dense { w, .. } => w.weight_bytes(),
+                _ => 0,
+            })
+            .sum()
+    }
+
+    /// `(node id, "w8" | "w4")` for every weight-bearing op, in plan
+    /// order — recorded by `serve-bench` alongside the latency entries.
+    pub fn op_dtypes(&self) -> Vec<(String, &'static str)> {
+        self.nodes
+            .iter()
+            .filter_map(|n| match &n.op {
+                PlanOp::Conv { w, .. } => Some((n.id.clone(), w.dtype())),
+                PlanOp::Dense { w, .. } => Some((n.id.clone(), w.dtype())),
+                _ => None,
+            })
+            .collect()
+    }
+}
+
+/// Compile-time knobs for [`compile_plan_with`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PlanOptions {
+    /// Pack w4 wherever the codes happen to fit `[-8, 7]`, even without
+    /// a recorded ≤4-bit width (the `PALLAS_FORCE_W4` CI knob). Layers
+    /// whose codes don't fit keep w8, so numerics never change — this
+    /// exercises the w4 kernels under the full 8-bit test suite.
+    pub force_w4: bool,
+}
+
+impl PlanOptions {
+    /// Options implied by the environment (`PALLAS_FORCE_W4`).
+    pub fn from_env() -> PlanOptions {
+        PlanOptions {
+            force_w4: force_w4_requested(std::env::var("PALLAS_FORCE_W4").ok().as_deref()),
+        }
+    }
+}
+
+/// `PALLAS_FORCE_W4` contract: same parsing as `PALLAS_NO_SIMD` — any
+/// non-empty value other than `0` requests opportunistic w4 packing.
+pub fn force_w4_requested(v: Option<&str>) -> bool {
+    matches!(v.map(str::trim), Some(s) if !s.is_empty() && s != "0")
 }
 
 /// Recover the grid scale of one weight row whose entries lie on
@@ -254,11 +403,23 @@ fn weight_to_i8(w: &Tensor, cout: usize, scales: Option<&[f32]>) -> Result<(I8Te
 
 /// Compile a quantized model into an integer plan. Needs activation
 /// quantizers for every node (run the pipeline with `--act-bits 8`) and
-/// the input image geometry (e.g. `[3, 32, 32]`).
+/// the input image geometry (e.g. `[3, 32, 32]`). Honors the
+/// `PALLAS_FORCE_W4` env knob; use [`compile_plan_with`] to pass
+/// explicit [`PlanOptions`].
 pub fn compile_plan(
     model: &Model,
     qm: &QuantizedModel,
     in_shape: &[usize],
+) -> Result<QuantizedPlan> {
+    compile_plan_with(model, qm, in_shape, PlanOptions::from_env())
+}
+
+/// [`compile_plan`] with explicit compile-time options.
+pub fn compile_plan_with(
+    model: &Model,
+    qm: &QuantizedModel,
+    in_shape: &[usize],
+    opts: PlanOptions,
 ) -> Result<QuantizedPlan> {
     let aq = qm
         .act_quant
@@ -289,7 +450,7 @@ pub fn compile_plan(
             .first()
             .and_then(|i| spatial.get(i.as_str()).copied())
             .unwrap_or((in_shape[1], in_shape[2]));
-        let (op, out_hw) = lower_node(model, qm, nd, &in_q, out_q, in_hw)?;
+        let (op, out_hw) = lower_node(model, qm, nd, &in_q, out_q, in_hw, opts)?;
         spatial.insert(nd.id.as_str(), out_hw);
         idx.insert(nd.id.as_str(), nodes.len());
         nodes.push(PlanNode { id: nd.id.clone(), op, inputs, in_q, out_q });
@@ -297,6 +458,26 @@ pub fn compile_plan(
     Ok(QuantizedPlan { nodes, in_shape: in_shape.to_vec() })
 }
 
+/// Decide the packed precision for one layer. The pipeline's recorded
+/// bit width wins: a layer quantized at ≤4 bits packs w4 (its codes fit
+/// `[-8, 7]` by construction, so a miss means a corrupt bundle and is an
+/// error, not a silent fallback). Without a recorded width, `force_w4`
+/// packs w4 opportunistically wherever the codes happen to fit and keeps
+/// w8 otherwise — numerics are unchanged either way.
+fn choose_w4(qm: &QuantizedModel, id: &str, codes: &[i8], force_w4: bool) -> Result<bool> {
+    let fits = fits_i4(codes);
+    if let Some(&b) = qm.wbits.get(id) {
+        if b <= 4 {
+            if !fits {
+                bail!("layer {id}: recorded {b}-bit weights, but codes exceed [-8, 7]");
+            }
+            return Ok(true);
+        }
+    }
+    Ok(force_w4 && fits)
+}
+
+#[allow(clippy::too_many_arguments)]
 fn lower_node(
     model: &Model,
     qm: &QuantizedModel,
@@ -304,6 +485,7 @@ fn lower_node(
     in_q: &[ActQ],
     out_q: ActQ,
     in_hw: (usize, usize),
+    opts: PlanOptions,
 ) -> Result<(PlanOp, (usize, usize))> {
     use crate::tensor::conv::out_size;
     let op = match &nd.op {
@@ -316,7 +498,12 @@ fn lower_node(
             // pack once, at compile time: the batcher's hot loop feeds the
             // micro-kernel straight from this buffer
             let cout = wi.shape[0];
-            let w = PackedConv::pack(&wi.data, cout, wi.numel() / cout);
+            let cols = wi.numel() / cout;
+            let w = if choose_w4(qm, &nd.id, &wi.data, opts.force_w4)? {
+                ConvW::W4(PackedConv4::pack(&wi.data, cout, cols))
+            } else {
+                ConvW::W8(PackedConv::pack(&wi.data, cout, cols))
+            };
             return Ok((
                 PlanOp::Conv { w, p, bias_q, wsum, requant, relu: *relu },
                 (ho, wo),
@@ -325,7 +512,12 @@ fn lower_node(
         Op::Dense { relu } => {
             let (wi, bias_q, wsum, requant) = lower_weights(model, qm, nd, in_q[0], out_q)?;
             let cout = wi.shape[0];
-            let w = PackedDense::pack(&wi.data, cout, wi.numel() / cout);
+            let cols = wi.numel() / cout;
+            let w = if choose_w4(qm, &nd.id, &wi.data, opts.force_w4)? {
+                DenseW::W4(PackedDense4::pack(&wi.data, cout, cols))
+            } else {
+                DenseW::W8(PackedDense::pack(&wi.data, cout, cols))
+            };
             PlanOp::Dense { w, bias_q, wsum, requant, relu: *relu }
         }
         Op::Add { relu } => PlanOp::Add {
@@ -445,6 +637,36 @@ mod tests {
             assert!((z - z.round()).abs() < 1e-3, "{v} not on recovered grid {g2}");
         }
         assert_eq!(recover_row_scale(&[0.0, 0.0]), 1.0);
+    }
+
+    #[test]
+    fn force_w4_env_contract() {
+        assert!(!force_w4_requested(None));
+        assert!(!force_w4_requested(Some("")));
+        assert!(!force_w4_requested(Some("0")));
+        assert!(!force_w4_requested(Some(" 0 ")));
+        assert!(force_w4_requested(Some("1")));
+        assert!(force_w4_requested(Some("true")));
+        assert!(force_w4_requested(Some("yes")));
+    }
+
+    #[test]
+    fn packed_weight_enums_report_shape_and_bytes() {
+        let codes: Vec<i8> = (0..6).map(|v| v - 3).collect();
+        let w8 = ConvW::W8(PackedConv::pack(&codes, 2, 3));
+        let w4 = ConvW::W4(PackedConv4::pack(&codes, 2, 3));
+        assert_eq!((w8.rows(), w8.k(), w8.dtype()), (2, 3, "w8"));
+        assert_eq!((w4.rows(), w4.k(), w4.dtype()), (2, 3, "w4"));
+        // kp = 4 -> w8 stores 8 bytes, w4 stores 4
+        assert_eq!(w8.weight_bytes(), 8);
+        assert_eq!(w4.weight_bytes(), 4);
+        assert!(w8.layout_ok() && w4.layout_ok());
+        let d8 = DenseW::W8(PackedDense::pack(&codes, 2, 3));
+        let d4 = DenseW::W4(PackedDense4::pack(&codes, 2, 3));
+        assert_eq!((d8.n(), d8.k(), d8.dtype()), (2, 3, "w8"));
+        assert_eq!((d4.n(), d4.k(), d4.dtype()), (2, 3, "w4"));
+        assert_eq!(d8.weight_bytes(), 2 * d4.weight_bytes());
+        assert!(d8.layout_ok() && d4.layout_ok());
     }
 
     #[test]

@@ -29,12 +29,29 @@
 //! repacking. Layout invariants (zero padding, block alignment) are
 //! re-checked by `debug_assert!`s in the serve kernels so a layout bug
 //! fails loudly in tests instead of silently corrupting accumulators.
+//!
+//! ## Int4 (w4) variants
+//!
+//! [`PackedConv4`] / [`PackedDense4`] store weights as two's-complement
+//! nibbles, two per byte (codes in `[-8, 7]`): byte `j` of a K-run holds
+//! weight `2j` in the **low** nibble and weight `2j+1` in the **high**
+//! nibble. The K-blocking is identical to the w8 layouts ([`CONV_KB`]
+//! pairs map 1:1 onto nibble pairs; [`DENSE_KB`] weights become
+//! `DENSE_KB/2` bytes per block), so the w4 GEMM cores are the existing
+//! cores with a nibble→i8 unpack epilogue in front of the same
+//! `vpmaddwd` feed: sign-extension is shift-left-then-arithmetic-
+//! shift-right (`(b << 4) >> 4` for the low nibble, `b >> 4` for the
+//! high), done on i16 lanes in the dense AVX2 path and scalar-side for
+//! the broadcast conv pair. Every unpacked value is the exact i8 code,
+//! so the exact-intermediate argument above applies unchanged and
+//! w4 SIMD == w4 portable == scalar-on-unpacked-weights, bit for bit.
 
 #![allow(clippy::needless_range_loop)]
 
 use std::ops::Range;
 use std::sync::OnceLock;
 
+use super::{i4_hi, i4_lo, pack_i4};
 use crate::util::parallel;
 
 /// K blocking of the conv kernel: weights are consumed as `vpmaddwd`
@@ -239,6 +256,135 @@ impl PackedDense {
     }
 }
 
+/// Logical weight `kk` of a nibble-packed K-run (low nibble first).
+#[inline]
+fn nibble(bytes: &[u8], kk: usize) -> i8 {
+    let b = bytes[kk / 2];
+    if kk % 2 == 0 { i4_lo(b) } else { i4_hi(b) }
+}
+
+/// Conv weights nibble-packed for [`gemm_conv4_packed_into`]: the
+/// [`PackedConv`] layout at half the bytes. Rows are zero-padded to `kp`
+/// (a [`CONV_KB`] multiple, so every row is a whole number of bytes) and
+/// stored as `kp/2` bytes each; pad nibbles are zero. Rows stay
+/// contiguous, so grouped convs slice `[r0, r1)` exactly as in w8.
+#[derive(Clone, Debug)]
+pub struct PackedConv4 {
+    pub rows: usize,
+    /// logical reduction length (im2col patch size)
+    pub k: usize,
+    /// padded logical row length (`k` rounded up to [`CONV_KB`]); the
+    /// byte stride per row is `kp / 2`
+    pub kp: usize,
+    pub data: Vec<u8>,
+}
+
+impl PackedConv4 {
+    /// Packs codes that must already fit `[-8, 7]` (panics otherwise —
+    /// the plan compiler checks range before choosing the w4 layout).
+    pub fn pack(w: &[i8], rows: usize, k: usize) -> PackedConv4 {
+        assert_eq!(w.len(), rows * k, "conv4 pack: {} weights for {rows}x{k}", w.len());
+        let kp = round_up(k.max(1), CONV_KB);
+        let mut row = vec![0i8; kp];
+        let mut data = Vec::with_capacity(rows * kp / 2);
+        for r in 0..rows {
+            row[..k].copy_from_slice(&w[r * k..(r + 1) * k]);
+            data.extend_from_slice(&pack_i4(&row));
+        }
+        PackedConv4 { rows, k, kp, data }
+    }
+
+    /// The packed bytes of rows `r.start..r.end` (group slicing).
+    pub fn row_slice(&self, r: Range<usize>) -> &[u8] {
+        let stride = self.kp / 2;
+        &self.data[r.start * stride..r.end * stride]
+    }
+
+    /// Layout invariants: stride math and zeroed pad nibbles. O(weights);
+    /// for `debug_assert!` at kernel entry.
+    pub fn layout_ok(&self) -> bool {
+        let stride = self.kp / 2;
+        self.kp == round_up(self.k.max(1), CONV_KB)
+            && self.data.len() == self.rows * stride
+            && (0..self.rows).all(|r| {
+                let row = &self.data[r * stride..(r + 1) * stride];
+                (self.k..self.kp).all(|kk| nibble(row, kk) == 0)
+            })
+    }
+}
+
+/// Dense weights `[n, k]` nibble-packed for [`gemm_dense4_packed_into`]:
+/// the [`PackedDense`] quad-interleave with each [`DENSE_KB`]-weight
+/// block stored as `DENSE_KB/2` bytes, so the block for (quad `q`,
+/// k-block `t`, lane `r`) lives at byte offset
+/// `((q·nb + t)·DENSE_NR + r)·DENSE_KB/2`. Padding (K bytes and whole
+/// pad rows) is zero nibbles, exactly as in w8.
+#[derive(Clone, Debug)]
+pub struct PackedDense4 {
+    /// logical output count (rows of the original weight matrix)
+    pub n: usize,
+    /// logical reduction length
+    pub k: usize,
+    /// padded reduction length (multiple of [`DENSE_KB`])
+    pub kp: usize,
+    /// padded row count (multiple of [`DENSE_NR`])
+    pub np: usize,
+    pub data: Vec<u8>,
+}
+
+impl PackedDense4 {
+    /// Packs codes that must already fit `[-8, 7]` (panics otherwise).
+    pub fn pack(w: &[i8], n: usize, k: usize) -> PackedDense4 {
+        assert_eq!(w.len(), n * k, "dense4 pack: {} weights for {n}x{k}", w.len());
+        let kp = round_up(k.max(1), DENSE_KB);
+        let np = round_up(n.max(1), DENSE_NR);
+        let nb = kp / DENSE_KB;
+        let mut blk = [0i8; DENSE_KB];
+        let mut data = vec![0u8; np * kp / 2];
+        for j in 0..n {
+            let (q, r) = (j / DENSE_NR, j % DENSE_NR);
+            for t in 0..nb {
+                let k0 = t * DENSE_KB;
+                if k0 >= k {
+                    break;
+                }
+                let kend = k.min(k0 + DENSE_KB);
+                blk.fill(0);
+                blk[..kend - k0].copy_from_slice(&w[j * k + k0..j * k + kend]);
+                let base = ((q * nb + t) * DENSE_NR + r) * (DENSE_KB / 2);
+                data[base..base + DENSE_KB / 2].copy_from_slice(&pack_i4(&blk));
+            }
+        }
+        PackedDense4 { n, k, kp, np, data }
+    }
+
+    /// Layout invariants: stride math, zeroed pad nibbles of every real
+    /// row and all-zero pad rows. O(weights); for `debug_assert!` use.
+    pub fn layout_ok(&self) -> bool {
+        let nb = self.kp / DENSE_KB;
+        if self.kp != round_up(self.k.max(1), DENSE_KB)
+            || self.np != round_up(self.n.max(1), DENSE_NR)
+            || self.data.len() != self.np * self.kp / 2
+        {
+            return false;
+        }
+        for j in 0..self.np {
+            let (q, r) = (j / DENSE_NR, j % DENSE_NR);
+            for t in 0..nb {
+                let base = ((q * nb + t) * DENSE_NR + r) * (DENSE_KB / 2);
+                let blk = &self.data[base..base + DENSE_KB / 2];
+                for tt in 0..DENSE_KB {
+                    let kk = t * DENSE_KB + tt;
+                    if (j >= self.n || kk >= self.k) && nibble(blk, tt) != 0 {
+                        return false;
+                    }
+                }
+            }
+        }
+        true
+    }
+}
+
 // ---------------------------------------------------------------------------
 // GEMM entry points (parallel over output rows, overwrite semantics)
 // ---------------------------------------------------------------------------
@@ -319,6 +465,82 @@ pub fn gemm_dense_packed_into(kern: Kernel, a: &[u8], w: &PackedDense, c: &mut [
     });
 }
 
+/// w4 conv GEMM: like [`gemm_conv_packed_into`], but `a` holds
+/// nibble-packed rows of `kp/2` bytes ([`PackedConv4`] row slices). The
+/// unpacked nibble is the exact i8 code, so the output is bit-identical
+/// to the w8 GEMM over the same codes.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_conv4_packed_into(
+    kern: Kernel,
+    a: &[u8],
+    m: usize,
+    k: usize,
+    kp: usize,
+    b: &[u8],
+    c: &mut [i32],
+    n: usize,
+) {
+    debug_assert!(k >= 1, "conv GEMM needs a nonempty reduction");
+    debug_assert_eq!(a.len(), m * kp / 2, "packed4 A length");
+    debug_assert_eq!(kp, round_up(k.max(1), CONV_KB), "conv K padding");
+    debug_assert_eq!(b.len(), k * n, "B shape");
+    debug_assert_eq!(c.len(), m * n, "C shape");
+    if m == 0 || n == 0 {
+        return;
+    }
+    let kern = usable(kern);
+    let stride = kp / 2;
+    parallel::par_ranges_mut(c, n, super::row_grain(k, n), |rows, span| {
+        let aspan = &a[rows.start * stride..rows.end * stride];
+        match kern {
+            Kernel::Avx2 => {
+                // SAFETY: usable() only lets Avx2 through when the CPU
+                // has it, so the target feature is present.
+                #[cfg(target_arch = "x86_64")]
+                unsafe {
+                    conv4_span_avx2(aspan, rows.end - rows.start, k, kp, b, span, n);
+                }
+                #[cfg(not(target_arch = "x86_64"))]
+                conv4_span_portable(aspan, rows.end - rows.start, k, kp, b, span, n);
+            }
+            Kernel::Portable => {
+                conv4_span_portable(aspan, rows.end - rows.start, k, kp, b, span, n)
+            }
+        }
+    });
+}
+
+/// w4 dense GEMM: like [`gemm_dense_packed_into`] over a nibble-packed
+/// quad layout. Bit-identical to the w8 GEMM over the same codes.
+pub fn gemm_dense4_packed_into(kern: Kernel, a: &[u8], w: &PackedDense4, c: &mut [i32], m: usize) {
+    let (k, nout) = (w.k, w.n);
+    debug_assert_eq!(a.len(), m * k, "A shape");
+    debug_assert_eq!(c.len(), m * nout, "C shape");
+    if m == 0 || nout == 0 {
+        return;
+    }
+    let kern = usable(kern);
+    parallel::par_ranges_mut(c, nout, super::row_grain(k, nout), |rows, span| {
+        for i in rows.clone() {
+            let arow = &a[i * k..(i + 1) * k];
+            let crow = &mut span[(i - rows.start) * nout..(i - rows.start + 1) * nout];
+            match kern {
+                Kernel::Avx2 => {
+                    // SAFETY: usable() only lets Avx2 through when the
+                    // CPU has it.
+                    #[cfg(target_arch = "x86_64")]
+                    unsafe {
+                        dense4_row_avx2(arow, w, crow);
+                    }
+                    #[cfg(not(target_arch = "x86_64"))]
+                    dense4_row_portable(arow, w, crow);
+                }
+                Kernel::Portable => dense4_row_portable(arow, w, crow),
+            }
+        }
+    });
+}
+
 // ---------------------------------------------------------------------------
 // Portable cores (the reference blocking; bit-identical to AVX2 because
 // every product is exact and i32 accumulation commutes mod 2^32)
@@ -366,6 +588,48 @@ fn dense_row_portable(arow: &[u8], w: &PackedDense, crow: &mut [i32]) {
     }
 }
 
+/// One row span of the w4 conv GEMM: identical loop order to
+/// [`conv_span_portable`], the weight decoded from its nibble on the fly.
+fn conv4_span_portable(a: &[u8], m: usize, k: usize, kp: usize, b: &[u8], c: &mut [i32], n: usize) {
+    let stride = kp / 2;
+    for i in 0..m {
+        let arow = &a[i * stride..(i + 1) * stride];
+        let crow = &mut c[i * n..(i + 1) * n];
+        crow.fill(0);
+        for kk in 0..k {
+            let av = nibble(arow, kk);
+            if av == 0 {
+                continue;
+            }
+            let av = av as i32;
+            let brow = &b[kk * n..(kk + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow.iter()) {
+                *cv = cv.wrapping_add(av * bv as i32);
+            }
+        }
+    }
+}
+
+/// One output row of the w4 dense GEMM: walks the nibble-packed quad
+/// blocks with the same K-blocking as [`dense_row_portable`].
+fn dense4_row_portable(arow: &[u8], w: &PackedDense4, crow: &mut [i32]) {
+    let (k, nb) = (w.k, w.kp / DENSE_KB);
+    for (j, cv) in crow.iter_mut().enumerate() {
+        let (q, r) = (j / DENSE_NR, j % DENSE_NR);
+        let mut s = 0i32;
+        for t in 0..nb {
+            let base = ((q * nb + t) * DENSE_NR + r) * (DENSE_KB / 2);
+            let blk = &w.data[base..base + DENSE_KB / 2];
+            let k0 = t * DENSE_KB;
+            let kend = k.min(k0 + DENSE_KB);
+            for kk in k0..kend {
+                s = s.wrapping_add(arow[kk] as i32 * nibble(blk, kk - k0) as i32);
+            }
+        }
+        *cv = s;
+    }
+}
+
 // ---------------------------------------------------------------------------
 // AVX2 cores
 // ---------------------------------------------------------------------------
@@ -374,7 +638,7 @@ fn dense_row_portable(arow: &[u8], w: &PackedDense, crow: &mut [i32]) {
 mod avx2 {
     use core::arch::x86_64::*;
 
-    use super::{PackedDense, DENSE_KB, DENSE_NR};
+    use super::{i4_hi, i4_lo, nibble, PackedDense, PackedDense4, DENSE_KB, DENSE_NR};
 
     /// Broadcast the (sign-extended) weight pair at `a[off], a[off+1]` as
     /// `[a0, a1, a0, a1, ...]` i16 lanes — the second `vpmaddwd` operand.
@@ -461,6 +725,88 @@ mod avx2 {
         }
     }
 
+    /// Broadcast the sign-extended nibble pair in byte `a[off]` as
+    /// `[lo, hi, lo, hi, ...]` i16 lanes. One packed byte *is* one
+    /// `vpmaddwd` weight pair (CONV_KB == 2 nibbles), so the w4 conv
+    /// core is the w8 core with this decode in front.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn weight_pair4(a: &[u8], off: usize) -> __m256i {
+        let b = *a.get_unchecked(off);
+        let a0 = i4_lo(b) as i16 as u16 as u32;
+        let a1 = i4_hi(b) as i16 as u16 as u32;
+        _mm256_set1_epi32(((a1 << 16) | a0) as i32)
+    }
+
+    /// w4 conv GEMM row span: the [`conv_span`] register tile (2 rows ×
+    /// 32 positions, `vpmaddwd` pairs) with the weight pair decoded from
+    /// one packed byte. Same blocking, exact products — bit-identical.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn conv4_span(
+        a: &[u8],
+        m: usize,
+        k: usize,
+        kp: usize,
+        b: &[u8],
+        c: &mut [i32],
+        n: usize,
+    ) {
+        let n32 = n - n % 32;
+        let kpairs = kp / 2; // also the byte stride per packed row
+        let bp = b.as_ptr();
+        let mut i = 0;
+        while i < m {
+            let mr = if m - i >= 2 { 2 } else { 1 };
+            let mut j = 0;
+            while j < n32 {
+                let mut acc = [[_mm256_setzero_si256(); 4]; 2];
+                for t in 0..kpairs {
+                    let k0 = 2 * t;
+                    // odd-K pad pair: clamp the B row; the pad nibble is
+                    // zero, so the duplicated row contributes nothing
+                    let k1 = (k0 + 1).min(k - 1);
+                    let b0 = _mm256_loadu_si256(bp.add(k0 * n + j) as *const __m256i);
+                    let b1 = _mm256_loadu_si256(bp.add(k1 * n + j) as *const __m256i);
+                    let lo = _mm256_unpacklo_epi8(b0, b1);
+                    let hi = _mm256_unpackhi_epi8(b0, b1);
+                    let w0 = _mm256_cvtepu8_epi16(_mm256_castsi256_si128(lo));
+                    let w1 = _mm256_cvtepu8_epi16(_mm256_castsi256_si128(hi));
+                    let w2 = _mm256_cvtepu8_epi16(_mm256_extracti128_si256(lo, 1));
+                    let w3 = _mm256_cvtepu8_epi16(_mm256_extracti128_si256(hi, 1));
+                    for r in 0..mr {
+                        let ap = weight_pair4(a, (i + r) * kpairs + t);
+                        acc[r][0] = _mm256_add_epi32(acc[r][0], _mm256_madd_epi16(w0, ap));
+                        acc[r][1] = _mm256_add_epi32(acc[r][1], _mm256_madd_epi16(w1, ap));
+                        acc[r][2] = _mm256_add_epi32(acc[r][2], _mm256_madd_epi16(w2, ap));
+                        acc[r][3] = _mm256_add_epi32(acc[r][3], _mm256_madd_epi16(w3, ap));
+                    }
+                }
+                for r in 0..mr {
+                    let crow = c.as_mut_ptr().add((i + r) * n + j);
+                    _mm256_storeu_si256(crow as *mut __m256i, acc[r][0]);
+                    _mm256_storeu_si256(crow.add(8) as *mut __m256i, acc[r][1]);
+                    _mm256_storeu_si256(crow.add(16) as *mut __m256i, acc[r][2]);
+                    _mm256_storeu_si256(crow.add(24) as *mut __m256i, acc[r][3]);
+                }
+                j += 32;
+            }
+            // position tail: exact scalar over decoded nibbles
+            for r in 0..mr {
+                let arow = &a[(i + r) * kpairs..(i + r + 1) * kpairs];
+                for jj in n32..n {
+                    let mut s = 0i32;
+                    for kk in 0..k {
+                        s = s.wrapping_add(
+                            nibble(arow, kk) as i32 * *b.get_unchecked(kk * n + jj) as i32,
+                        );
+                    }
+                    *c.get_unchecked_mut((i + r) * n + jj) = s;
+                }
+            }
+            i += mr;
+        }
+    }
+
     /// Wrapping horizontal sum of the 8 i32 lanes.
     #[inline]
     #[target_feature(enable = "avx2")]
@@ -512,10 +858,73 @@ mod avx2 {
             }
         }
     }
+
+    /// The nibble→i8 unpack epilogue: 8 packed bytes → 16 sign-extended
+    /// i16 weight lanes in logical order, ready for `vpmaddwd`. Each
+    /// byte is duplicated (`vpunpcklbw x,x`), widened to 16-bit lanes,
+    /// the target nibble is shifted to the top four bits (`vpmullw` by
+    /// alternating `1<<12` / `1<<8` — a per-lane left shift mod 2¹⁶),
+    /// and an arithmetic right shift by 12 sign-extends it: the
+    /// shift-left-then-arithmetic-shift-right idiom on the madd lanes.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn nibbles_to_i16(p: *const u8) -> __m256i {
+        let x = _mm_loadl_epi64(p as *const __m128i);
+        let dup = _mm_unpacklo_epi8(x, x);
+        let v = _mm256_cvtepu8_epi16(dup);
+        // even i16 lanes (low nibbles) multiply by 1<<12, odd lanes
+        // (high nibbles) by 1<<8
+        let mul = _mm256_set1_epi32(((1 << 8) << 16) | (1 << 12));
+        _mm256_srai_epi16(_mm256_mullo_epi16(v, mul), 12)
+    }
+
+    /// w4 dense GEMM, one activation row: [`dense_row`] with each
+    /// 16-weight block decoded from 8 packed bytes by [`nibbles_to_i16`].
+    /// Block loads are exact (`DENSE_KB/2` = 8 bytes per block, blocks
+    /// contiguous), so there is no overread.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dense4_row(arow: &[u8], w: &PackedDense4, crow: &mut [i32]) {
+        const KB2: usize = DENSE_KB / 2;
+        let (k, kp) = (w.k, w.kp);
+        let nb = kp / DENSE_KB;
+        let full = k / DENSE_KB;
+        let tail = k % DENSE_KB;
+        let mut tailbuf = [0u8; DENSE_KB];
+        if tail > 0 {
+            tailbuf[..tail].copy_from_slice(&arow[full * DENSE_KB..]);
+        }
+        let wp = w.data.as_ptr();
+        for q in 0..w.np / DENSE_NR {
+            let mut acc = [_mm256_setzero_si256(); 4];
+            let base = q * nb * (DENSE_NR * KB2);
+            for t in 0..nb {
+                let av = if t < full {
+                    _mm_loadu_si128(arow.as_ptr().add(t * DENSE_KB) as *const __m128i)
+                } else {
+                    _mm_loadu_si128(tailbuf.as_ptr() as *const __m128i)
+                };
+                let a16 = _mm256_cvtepu8_epi16(av);
+                let blk = wp.add(base + t * DENSE_NR * KB2);
+                for r in 0..4 {
+                    let w16 = nibbles_to_i16(blk.add(r * KB2));
+                    acc[r] = _mm256_add_epi32(acc[r], _mm256_madd_epi16(a16, w16));
+                }
+            }
+            for r in 0..4 {
+                let j = q * DENSE_NR + r;
+                if j < crow.len() {
+                    *crow.get_unchecked_mut(j) = hsum_epi32(acc[r]);
+                }
+            }
+        }
+    }
 }
 
 #[cfg(target_arch = "x86_64")]
-use avx2::{conv_span as conv_span_avx2, dense_row as dense_row_avx2};
+use avx2::{
+    conv4_span as conv4_span_avx2, conv_span as conv_span_avx2, dense4_row as dense4_row_avx2,
+    dense_row as dense_row_avx2,
+};
 
 #[cfg(test)]
 mod tests {
@@ -560,6 +969,86 @@ mod tests {
         let mut bad = p.clone();
         bad.data[5] = 1;
         assert!(!bad.layout_ok());
+    }
+
+    #[test]
+    fn conv4_pack_layout() {
+        // odd K exercises the pad nibble
+        let w: Vec<i8> = (0..3 * 5).map(|v| (v % 16 - 8) as i8).collect();
+        let p = PackedConv4::pack(&w, 3, 5);
+        assert_eq!((p.rows, p.k, p.kp), (3, 5, 6));
+        assert_eq!(p.data.len(), 3 * 3);
+        assert!(p.layout_ok());
+        for r in 0..3 {
+            let row = p.row_slice(r..r + 1);
+            for kk in 0..5 {
+                assert_eq!(nibble(row, kk), w[r * 5 + kk], "row {r} k {kk}");
+            }
+            assert_eq!(nibble(row, 5), 0, "pad nibble of row {r}");
+        }
+        // a corrupted pad nibble (high nibble of row 0's last byte) must
+        // fail the invariant
+        let mut bad = p;
+        bad.data[2] |= 0xF0;
+        assert!(!bad.layout_ok());
+    }
+
+    #[test]
+    fn dense4_pack_layout_roundtrip() {
+        // n and k both off the block sizes: 6 rows (np 8), k 21 (kp 32)
+        let (n, k) = (6usize, 21usize);
+        let w: Vec<i8> = (0..n * k).map(|v| (v % 16 - 8) as i8).collect();
+        let p = PackedDense4::pack(&w, n, k);
+        assert_eq!((p.np, p.kp), (8, 32));
+        assert_eq!(p.data.len(), 8 * 32 / 2);
+        assert!(p.layout_ok());
+        let nb = p.kp / DENSE_KB;
+        // every logical weight must be recoverable from the quad layout
+        for j in 0..n {
+            let (q, r) = (j / DENSE_NR, j % DENSE_NR);
+            for kk in 0..k {
+                let (t, tt) = (kk / DENSE_KB, kk % DENSE_KB);
+                let base = ((q * nb + t) * DENSE_NR + r) * (DENSE_KB / 2);
+                let got = nibble(&p.data[base..base + DENSE_KB / 2], tt);
+                assert_eq!(got, w[j * k + kk], "row {j} k {kk}");
+            }
+        }
+        // a corrupted pad row must fail the invariant (row 6 is padding)
+        let mut bad = p;
+        let (q, r) = (6 / DENSE_NR, 6 % DENSE_NR);
+        bad.data[((q * nb) * DENSE_NR + r) * (DENSE_KB / 2)] = 3;
+        assert!(!bad.layout_ok());
+    }
+
+    #[test]
+    fn w4_gemms_match_w8_over_same_codes() {
+        // identical codes through the w8 and w4 paths must agree exactly
+        let mut state = 12345u64;
+        let mut next = move || {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            (state >> 33) as u8
+        };
+        let (m, k, n) = (5usize, 27usize, 37usize);
+        let w: Vec<i8> = (0..m * k).map(|_| (next() % 16) as i8 - 8).collect();
+        let b: Vec<u8> = (0..k * n).map(|_| next()).collect();
+        let p8 = PackedConv::pack(&w, m, k);
+        let p4 = PackedConv4::pack(&w, m, k);
+        let mut c8 = vec![0i32; m * n];
+        let mut c4 = vec![0i32; m * n];
+        gemm_conv_packed_into(Kernel::Portable, &p8.data, m, k, p8.kp, &b, &mut c8, n);
+        gemm_conv4_packed_into(Kernel::Portable, &p4.data, m, k, p4.kp, &b, &mut c4, n);
+        assert_eq!(c8, c4, "conv w4 != w8");
+
+        let (mm, kk, nn) = (3usize, 21usize, 6usize);
+        let wd: Vec<i8> = (0..nn * kk).map(|_| (next() % 16) as i8 - 8).collect();
+        let a: Vec<u8> = (0..mm * kk).map(|_| next()).collect();
+        let d8 = PackedDense::pack(&wd, nn, kk);
+        let d4 = PackedDense4::pack(&wd, nn, kk);
+        let mut c8 = vec![0i32; mm * nn];
+        let mut c4 = vec![0i32; mm * nn];
+        gemm_dense_packed_into(Kernel::Portable, &a, &d8, &mut c8, mm);
+        gemm_dense4_packed_into(Kernel::Portable, &a, &d4, &mut c4, mm);
+        assert_eq!(c8, c4, "dense w4 != w8");
     }
 
     #[test]

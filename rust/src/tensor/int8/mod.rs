@@ -78,6 +78,51 @@ impl U8Tensor {
     }
 }
 
+/// True iff every code fits the signed 4-bit range `[-8, 7]` — the
+/// precondition for the nibble-packed w4 layouts and `.qtz` i4 entries.
+pub fn fits_i4(codes: &[i8]) -> bool {
+    codes.iter().all(|&z| (-8..=7).contains(&z))
+}
+
+/// Sign-extend the **low** nibble of `b`: shift-left-then-arithmetic-
+/// shift-right, the scalar form of the SIMD unpack epilogue.
+#[inline]
+pub fn i4_lo(b: u8) -> i8 {
+    ((b << 4) as i8) >> 4
+}
+
+/// Sign-extend the **high** nibble of `b`.
+#[inline]
+pub fn i4_hi(b: u8) -> i8 {
+    (b as i8) >> 4
+}
+
+/// Pack i4 codes (each in `[-8, 7]`, checked) two per byte: element `2j`
+/// in the low nibble of byte `j`, element `2j+1` in the high nibble. An
+/// odd tail leaves the final high nibble zero, so `n.div_ceil(2)` bytes
+/// always reproduce exactly `n` codes.
+pub fn pack_i4(codes: &[i8]) -> Vec<u8> {
+    assert!(fits_i4(codes), "i4 pack: code outside [-8, 7]");
+    let mut out = vec![0u8; codes.len().div_ceil(2)];
+    for (j, pair) in codes.chunks(2).enumerate() {
+        let lo = (pair[0] as u8) & 0x0F;
+        let hi = if pair.len() == 2 { (pair[1] as u8) & 0x0F } else { 0 };
+        out[j] = (hi << 4) | lo;
+    }
+    out
+}
+
+/// Unpack `n` i4 codes from the nibble stream written by [`pack_i4`].
+pub fn unpack_i4(packed: &[u8], n: usize) -> Vec<i8> {
+    assert_eq!(packed.len(), n.div_ceil(2), "i4 unpack: {} bytes for {n} codes", packed.len());
+    (0..n)
+        .map(|j| {
+            let b = packed[j / 2];
+            if j % 2 == 0 { i4_lo(b) } else { i4_hi(b) }
+        })
+        .collect()
+}
+
 /// Don't spawn a worker for less than ~256k MACs of row work (integer MACs
 /// are cheaper than f32 FMA, so the grain sits above the f32 kernel's).
 const MIN_PAR_MACS: usize = 1 << 18;
@@ -259,6 +304,32 @@ mod tests {
             })
         };
         assert_eq!(run_bt(1), run_bt(4));
+    }
+
+    #[test]
+    fn i4_codec_roundtrips_all_codes() {
+        // every code value, even and odd lengths, including the -8/7 corners
+        let codes: Vec<i8> = (-8..=7).collect();
+        for n in 0..codes.len() {
+            let sub = &codes[..n];
+            let packed = pack_i4(sub);
+            assert_eq!(packed.len(), n.div_ceil(2));
+            assert_eq!(unpack_i4(&packed, n), sub, "roundtrip n={n}");
+            if n % 2 == 1 {
+                assert_eq!(packed[n / 2] >> 4, 0, "odd tail pad nibble must be zero");
+            }
+        }
+        assert_eq!(i4_lo(0xF8), -8);
+        assert_eq!(i4_lo(0x07), 7);
+        assert_eq!(i4_hi(0x80), -8);
+        assert_eq!(i4_hi(0x7F), 7);
+        assert_eq!(i4_hi(0xFF), -1);
+    }
+
+    #[test]
+    #[should_panic(expected = "i4 pack")]
+    fn i4_pack_rejects_out_of_range() {
+        pack_i4(&[8]);
     }
 
     #[test]

@@ -7,9 +7,10 @@
 //! knobs: the serving stack's outputs never depend on which kernel ran.
 
 use adaround::serve::ikernels::{conv2d_i8, dense_i8, Int8Workspace};
-use adaround::serve::Requant;
+use adaround::serve::{ConvW, DenseW, Requant};
 use adaround::tensor::int8::kernel::{
-    self, gemm_conv_packed_into, gemm_dense_packed_into, Kernel, PackedConv, PackedDense,
+    self, gemm_conv4_packed_into, gemm_conv_packed_into, gemm_dense4_packed_into,
+    gemm_dense_packed_into, Kernel, PackedConv, PackedConv4, PackedDense, PackedDense4,
 };
 use adaround::tensor::int8::{gemm_i8_into, gemm_u8_bt_into};
 use adaround::tensor::{Conv2dParams, I8Tensor, U8Tensor};
@@ -148,7 +149,7 @@ fn grouped_conv_kernels_and_threads_agree() {
         (0..n * c * hw * hw).map(|_| rng.below(256) as u8).collect(),
     );
     let wi = I8Tensor::from_vec(&[o, cg, 3, 3], rnd_i8(o * patch, &mut rng));
-    let wp = PackedConv::pack(&wi.data, o, patch);
+    let wp = ConvW::W8(PackedConv::pack(&wi.data, o, patch));
     let bias_q: Vec<i32> = (0..o as i32).map(|v| v * 3 - 7).collect();
     let wsum: Vec<i32> = (0..o)
         .map(|oc| wi.data[oc * patch..(oc + 1) * patch].iter().map(|&z| z as i32).sum())
@@ -218,7 +219,7 @@ fn requant_zero_point_corners() {
     let mut rng = Rng::new(405);
     let qin = U8Tensor::from_vec(&[n, c], rnd_u8(n * c, &mut rng));
     let w = rnd_i8(o * c, &mut rng);
-    let packed = PackedDense::pack(&w, o, c);
+    let packed = DenseW::W8(PackedDense::pack(&w, o, c));
     let bias_q = vec![11i32, -4, 0, 250, -99];
     let wsum: Vec<i32> =
         (0..o).map(|oc| w[oc * c..(oc + 1) * c].iter().map(|&z| z as i32).sum()).collect();
@@ -256,6 +257,123 @@ fn requant_zero_point_corners() {
     }
 }
 
+fn rnd_i4(n: usize, rng: &mut Rng) -> Vec<i8> {
+    (0..n).map(|_| (rng.below(16) as i32 - 8) as i8).collect()
+}
+
+#[test]
+fn conv4_gemm_bit_identical_across_kernels() {
+    // same seam catalogue as the w8 test, but K odd shapes additionally
+    // exercise the nibble tail (last packed byte half-used)
+    let shapes = [
+        (1usize, 1usize, 1usize),
+        (1, 2, 1),
+        (2, 1, 3),
+        (3, 7, 5),
+        (4, 15, 33),
+        (5, 16, 32),
+        (8, 17, 100),
+        (1, 33, 64),
+        (16, 64, 31),
+        (2, 3, 257),
+        (6, 128, 96),
+    ];
+    let mut rng = Rng::new(411);
+    for (m, k, n) in shapes {
+        let a = rnd_i4(m * k, &mut rng);
+        let b = rnd_u8(k * n, &mut rng);
+        // the oracle is the *w8 semantics over the same codes*: i4 is a
+        // storage format, not a different arithmetic
+        let want = naive_conv_gemm(&a, &b, m, k, n);
+        let packed = PackedConv4::pack(&a, m, k);
+        assert!(packed.layout_ok());
+        for kern in kernels() {
+            let mut c = vec![-1i32; m * n]; // poison: kernel must overwrite
+            gemm_conv4_packed_into(kern, &packed.data, m, k, packed.kp, &b, &mut c, n);
+            assert_eq!(c, want, "{} conv4 kernel at {m}x{k}x{n}", kern.name());
+        }
+    }
+}
+
+#[test]
+fn dense4_gemm_bit_identical_across_kernels() {
+    let shapes = [
+        (1usize, 1usize, 1usize),
+        (2, 16, 4),
+        (3, 15, 5),
+        (1, 16, 1),
+        (4, 17, 8),
+        (5, 31, 3),
+        (2, 33, 9),
+        (7, 64, 13),
+        (3, 100, 2),
+        (1, 129, 31),
+    ];
+    let mut rng = Rng::new(412);
+    for (m, k, n) in shapes {
+        let a = rnd_u8(m * k, &mut rng);
+        let w = rnd_i4(n * k, &mut rng);
+        let want = naive_dense_gemm(&a, &w, m, k, n);
+        let packed = PackedDense4::pack(&w, n, k);
+        assert!(packed.layout_ok());
+        for kern in kernels() {
+            let mut c = vec![-1i32; m * n];
+            gemm_dense4_packed_into(kern, &a, &packed, &mut c, m);
+            assert_eq!(c, want, "{} dense4 kernel at {m}x{k}x{n}", kern.name());
+        }
+    }
+}
+
+#[test]
+fn int4_sign_extension_corners() {
+    // the unpack seam: -8 (0b1000) and 7 (0b0111) in both nibble
+    // positions, plus -1 (all ones) which a logical instead of
+    // arithmetic shift would turn into +15. K odd so the tail nibble of
+    // the last byte is the zero pad.
+    let w: Vec<i8> = vec![-8, 7, -1, -8, 7, -1, -8];
+    let k = w.len();
+    let b = vec![255u8; k];
+    let want = naive_conv_gemm(&w, &b, 1, k, 1);
+    assert_eq!(want[0], (-8 + 7 - 1 - 8 + 7 - 1 - 8) * 255);
+    let pc = PackedConv4::pack(&w, 1, k);
+    let pd = PackedDense4::pack(&w, 1, k);
+    for kern in kernels() {
+        let mut c = vec![0i32; 1];
+        gemm_conv4_packed_into(kern, &pc.data, 1, k, pc.kp, &b, &mut c, 1);
+        assert_eq!(c, want, "{} conv4 sign corners", kern.name());
+        let mut c = vec![0i32; 1];
+        gemm_dense4_packed_into(kern, &b, &pd, &mut c, 1);
+        assert_eq!(c, want, "{} dense4 sign corners", kern.name());
+    }
+}
+
+#[test]
+fn int4_accumulator_magnitude_edges_are_exact() {
+    // all -8 weights x all-255 inputs at the largest K whose product sum
+    // still fits i32: 1_052_688 * (-2040) = -2_147_483_520, within 128
+    // of i32::MIN. The positive mirror with +7 weights lands at
+    // 1_879_048_080. Saturating or mis-widened intermediates in the
+    // nibble unpack break far before this magnitude.
+    let k = 1_052_688usize;
+    let b_max = vec![255u8; k];
+    for (code, want) in [(-8i8, -2_147_483_520i32), (7, 1_879_048_080)] {
+        let a = vec![code; k];
+        let mut c = vec![0i32; 1];
+        gemm_i8_into(&a, &b_max, &mut c, 1, k, 1);
+        assert_eq!(c[0], want, "scalar reference at the i32 edge");
+        let pc = PackedConv4::pack(&a, 1, k);
+        let pd = PackedDense4::pack(&a, 1, k);
+        for kern in kernels() {
+            let mut c = vec![0i32; 1];
+            gemm_conv4_packed_into(kern, &pc.data, 1, k, pc.kp, &b_max, &mut c, 1);
+            assert_eq!(c[0], want, "{} conv4 kernel near i32 edge", kern.name());
+            let mut c = vec![0i32; 1];
+            gemm_dense4_packed_into(kern, &b_max, &pd, &mut c, 1);
+            assert_eq!(c[0], want, "{} dense4 kernel near i32 edge", kern.name());
+        }
+    }
+}
+
 /// Layout corruption must fail loudly (debug_assert in the serve kernels),
 /// not silently corrupt accumulators. Debug builds only — release strips
 /// the check by design (the plan compiler is the only production packer).
@@ -273,7 +391,7 @@ fn corrupted_dense_pack_fails_loudly() {
     let mut ws = Int8Workspace::new();
     let z = vec![0i32; o];
     let r = vec![Requant::from_real(1.0); o];
-    dense_i8(&mut ws, Kernel::Portable, &qin, &packed, &z, &z, &r, 0, 0, false);
+    dense_i8(&mut ws, Kernel::Portable, &qin, &DenseW::W8(packed), &z, &z, &r, 0, 0, false);
 }
 
 #[cfg(debug_assertions)]
@@ -290,5 +408,5 @@ fn corrupted_conv_pack_fails_loudly() {
     let mut ws = Int8Workspace::new();
     let z = vec![0i32; o];
     let r = vec![Requant::from_real(1.0); o];
-    conv2d_i8(&mut ws, Kernel::Portable, &qin, &packed, p, &z, &z, &r, 0, 0, false);
+    conv2d_i8(&mut ws, Kernel::Portable, &qin, &ConvW::W8(packed), p, &z, &z, &r, 0, 0, false);
 }

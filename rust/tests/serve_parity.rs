@@ -232,6 +232,175 @@ fn portable_kernel_override_serves_bit_identical() {
     assert_eq!(portable.fork().kernel(), Kernel::Portable);
 }
 
+/// 4-bit weights + 8-bit activations: every layer records `wbits = 4`,
+/// so the serve compiler must lower nibble-packed (w4) GEMMs.
+fn quantize_4_8(model: &Model, calib: &Tensor) -> QuantizedModel {
+    let cfg = PipelineConfig {
+        method: Method::Nearest,
+        bits: 4,
+        per_channel: true,
+        act_bits: Some(8),
+        calib_n: calib.shape[0],
+        ..Default::default()
+    };
+    Pipeline::new(model, cfg, None).quantize(calib, &mut Rng::new(7)).unwrap()
+}
+
+/// The same quantized weights with the bit-width record stripped: the
+/// serve compiler sees no `wbits` and packs plain i8 (w8) — the
+/// reference the w4 path must match bit-for-bit, since the unpacked
+/// nibble IS the i8 code.
+fn strip_wbits(qm: &QuantizedModel) -> QuantizedModel {
+    QuantizedModel {
+        weight_overrides: qm.weight_overrides.clone(),
+        bias_overrides: qm.bias_overrides.clone(),
+        act_quant: qm.act_quant.clone(),
+        scales: qm.scales.clone(),
+        wbits: BTreeMap::new(),
+        stats: Vec::new(),
+        layer_execs: 0,
+    }
+}
+
+#[test]
+fn w4_plan_bit_identical_to_w8_and_fake_quant_parity() {
+    use adaround::tensor::int8::kernel::Kernel;
+    use adaround::util::parallel::with_threads;
+    let mut rng = Rng::new(81);
+    let model = tiny_model(&mut rng);
+    let (calib, _) = synthetic_stripes(64, 3, 16, &mut rng);
+    let (val, _) = synthetic_stripes(96, 3, 16, &mut rng);
+    let qm = quantize_4_8(&model, &calib);
+    let qm_w8 = strip_wbits(&qm);
+
+    let mut e4 = ServeEngine::compile(&model, &qm, &[3, 16, 16]).unwrap();
+    let mut e8 = ServeEngine::compile(&model, &qm_w8, &[3, 16, 16]).unwrap();
+    // the 4-bit model really lowered to nibble-packed ops, at about half
+    // the weight footprint of the w8 lowering of the same codes
+    assert!(
+        e4.plan.op_dtypes().iter().all(|(_, d)| *d == "w4"),
+        "4-bit model must lower every gemm as w4: {:?}",
+        e4.plan.op_dtypes()
+    );
+    assert!(e8.plan.op_dtypes().iter().all(|(_, d)| *d == "w8"));
+    let (b4, b8) = (e4.plan.weight_bytes(), e8.plan.weight_bytes());
+    assert!(
+        b4 * 2 <= b8 + e4.plan.op_dtypes().len(), // +1 byte/op odd-K slack
+        "w4 plan ({b4} B) not ~half of w8 ({b8} B)"
+    );
+
+    // w4 == w8 bit-for-bit: same codes, same exact-intermediate GEMMs
+    let q8 = e8.forward_quantized(&val).data;
+    assert_eq!(e4.forward_quantized(&val).data, q8, "w4 plan diverged from w8");
+    // ...on every kernel and thread count
+    for kern in [Kernel::Portable, Kernel::Avx2] {
+        if kern == Kernel::Avx2 && !adaround::tensor::int8::kernel::avx2_available() {
+            continue;
+        }
+        for threads in [1usize, 4] {
+            let got = with_threads(threads, || {
+                let mut e = ServeEngine::compile(&model, &qm, &[3, 16, 16])
+                    .unwrap()
+                    .with_kernel(kern);
+                e.forward_quantized(&val).data
+            });
+            assert_eq!(got, q8, "w4 differs on {} kernel, {threads} threads", kern.name());
+        }
+    }
+
+    // and the integer path still tracks the f32 fake-quant simulation
+    let logits_fq = model.forward(&val, &qm.opts());
+    let logits_i4 = e4.forward(&val);
+    let pred_i4 = e4.classify(&val);
+    assert_parity(&logits_fq, &logits_i4, &pred_i4, e4.out_q().scale);
+}
+
+#[test]
+fn export_v3_nibble_bundle_roundtrip() {
+    // quantize 4-bit -> save .qtz v3 (i4 entries) -> serve from the
+    // bundle with no float weights: identical integer outputs
+    let mut rng = Rng::new(91);
+    let model = tiny_model(&mut rng);
+    let (calib, _) = synthetic_stripes(64, 3, 16, &mut rng);
+    let (val, _) = synthetic_stripes(48, 3, 16, &mut rng);
+    let qm = quantize_4_8(&model, &calib);
+    let path = std::env::temp_dir().join("serve_roundtrip_v3.qtz");
+    save_quantized(&path, &qm).unwrap();
+
+    let raw = adaround::io::read_qtz(&path).unwrap();
+    assert_eq!(raw["__meta.version"].as_i32().unwrap().data, vec![3]);
+    for id in ["c1", "c2", "d1"] {
+        assert!(raw.contains_key(&format!("i4:{id}")), "no i4 weights for {id}");
+        assert!(!raw.contains_key(&format!("i8:{id}")), "i8 leaked for {id}");
+        assert!(!raw.contains_key(&format!("w:{id}")), "f32 leaked for {id}");
+    }
+
+    let served = load_quantized(&path).unwrap();
+    assert!(served.wbits.values().all(|&b| b == 4), "wbits not restored: {:?}", served.wbits);
+    let mut e1 = ServeEngine::compile(&model, &qm, &[3, 16, 16]).unwrap();
+    let mut e2 = ServeEngine::compile(&model, &served, &[3, 16, 16]).unwrap();
+    assert!(e2.plan.op_dtypes().iter().all(|(_, d)| *d == "w4"));
+    assert_eq!(
+        e1.forward_quantized(&val).data,
+        e2.forward_quantized(&val).data,
+        "serving from the v3 bundle must equal serving from the live pipeline"
+    );
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn forced_w4_on_8bit_model_is_output_invariant() {
+    // PALLAS_FORCE_W4 semantics (CI's forced-w4 job): layers whose i8
+    // codes happen to fit [-8, 7] repack as nibbles, the rest stay w8 —
+    // and outputs are bit-identical either way, so the whole 8-bit test
+    // suite stays green under the override
+    use adaround::serve::PlanOptions;
+    let mut rng = Rng::new(93);
+    let model = tiny_model(&mut rng);
+    let (calib, _) = synthetic_stripes(48, 3, 16, &mut rng);
+    let (val, _) = synthetic_stripes(32, 3, 16, &mut rng);
+    let qm = quantize_8_8(&model, &calib, Method::Nearest);
+    let mut plain = ServeEngine::compile(&model, &qm, &[3, 16, 16]).unwrap();
+    let mut forced =
+        ServeEngine::compile_with(&model, &qm, &[3, 16, 16], PlanOptions { force_w4: true })
+            .unwrap();
+    assert_eq!(
+        plain.forward_quantized(&val).data,
+        forced.forward_quantized(&val).data,
+        "force_w4 changed integer outputs"
+    );
+}
+
+#[test]
+fn v3_bundles_are_at_least_1p9x_smaller_than_v2() {
+    // the headline size claim: on a model whose weight payload dominates
+    // the per-layer metadata, nibble packing nearly halves the bundle
+    let mut rng = Rng::new(97);
+    let model = Model::synthetic_chain(8, 32, true, &mut rng);
+    let (calib, _) = synthetic_stripes(32, 3, 16, &mut rng);
+    let cfg = PipelineConfig {
+        method: Method::Nearest,
+        bits: 4,
+        per_channel: true,
+        calib_n: 32,
+        ..Default::default()
+    };
+    let qm = Pipeline::new(&model, cfg, None).quantize(&calib, &mut Rng::new(7)).unwrap();
+    let p3 = std::env::temp_dir().join("size_v3.qtz");
+    let p2 = std::env::temp_dir().join("size_v2.qtz");
+    save_quantized(&p3, &qm).unwrap();
+    save_quantized(&p2, &strip_wbits(&qm)).unwrap();
+    let s3 = std::fs::metadata(&p3).unwrap().len() as f64;
+    let s2 = std::fs::metadata(&p2).unwrap().len() as f64;
+    assert!(
+        s2 / s3 >= 1.9,
+        "v3 bundle only {:.2}x smaller than v2 ({s2} vs {s3} bytes)",
+        s2 / s3
+    );
+    std::fs::remove_file(p3).ok();
+    std::fs::remove_file(p2).ok();
+}
+
 #[test]
 fn batcher_coalesces_and_answers_correctly() {
     let mut rng = Rng::new(61);
