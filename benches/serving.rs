@@ -15,8 +15,8 @@ use adaround::coordinator::{Method, Pipeline, PipelineConfig};
 use adaround::data::synthetic_stripes;
 use adaround::nn::Model;
 use adaround::serve::{
-    latency_entry, offered_load_latencies, shard_sweep, throughput_entry, BatchPolicy, Batcher,
-    ServeEngine,
+    http_offered_load_latencies, infer_body, latency_entry, offered_load_latencies, shard_sweep,
+    throughput_entry, BatchPolicy, Batcher, HttpConfig, HttpServer, ServeEngine,
 };
 use adaround::tensor::Tensor;
 use adaround::util::stats::percentile;
@@ -163,7 +163,15 @@ fn main() -> anyhow::Result<()> {
     let pool: Vec<Tensor> = (0..16)
         .map(|i| Tensor::from_vec(&[3, 32, 32], val.data[i * per..(i + 1) * per].to_vec()))
         .collect();
-    let policy = BatchPolicy { max_batch: 32, max_wait: Duration::from_millis(2), shards: 1 };
+    // depth budget high enough that admission never rejects here: these
+    // entries measure queueing latency, and must stay comparable to the
+    // pre-admission baselines
+    let policy = BatchPolicy {
+        max_batch: 32,
+        max_wait: Duration::from_millis(2),
+        shards: 1,
+        depth_budget: 4096,
+    };
     let batcher = Batcher::new(engine, policy);
     println!("{:<24} {:>12} {:>12}", "offered load", "p50 ms", "p99 ms");
     for rate in [500.0f64, 2000.0, 8000.0] {
@@ -174,6 +182,33 @@ fn main() -> anyhow::Result<()> {
         results.push(latency_entry(&format!("serve offered={rate:.0}"), p50, p99));
     }
     batcher.shutdown();
+
+    // the same offered-load shape measured over a real loopback socket:
+    // serialize → HTTP → admission → batcher → shard → response. The gap
+    // to the in-process entries above is the front-end's cost.
+    let engine_http = ServeEngine::compile(&model, &qm, &[3, 32, 32])?;
+    let server = HttpServer::bind(
+        Batcher::new(engine_http, policy),
+        "127.0.0.1:0",
+        HttpConfig::default(),
+    )?;
+    let addr = server.local_addr();
+    let bodies: Vec<Vec<u8>> = pool.iter().map(infer_body).collect();
+    println!("{:<24} {:>12} {:>12} {:>10}", "http offered load", "p50 ms", "p99 ms", "rejected");
+    for rate in [500.0f64, 2000.0] {
+        let n_req = ((rate * 0.4) as usize).max(100);
+        let (lat, rejected) = http_offered_load_latencies(addr, &bodies, n_req, rate, 4);
+        let (p50, p99) = (percentile(&lat, 50.0), percentile(&lat, 99.0));
+        println!(
+            "{:<24} {:>12.2} {:>12.2} {:>10}",
+            format!("{rate:.0} req/s"),
+            p50,
+            p99,
+            rejected
+        );
+        results.push(latency_entry(&format!("http offered={rate:.0}"), p50, p99));
+    }
+    server.shutdown();
 
     // shard scaling under batch-heavy closed-loop load: one engine per
     // core vs the single-engine layout — the first real multi-core

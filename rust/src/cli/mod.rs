@@ -7,6 +7,7 @@
 //!   table <1|2|...|10>     regenerate a paper table
 //!   fig <1|2|3|4>          regenerate a paper figure's data
 //!   bench-engine           native vs PJRT inference engine comparison
+//!   serve                  HTTP serving front-end (/v1/infer, /metrics)
 //!   serve-bench            f32 fake-quant vs int8 serving engine
 //!   quantize-bench         streaming vs replay calibration pipeline bench
 //!   bench-diff             compare two BENCH_*.json files (CI perf gate)
@@ -32,6 +33,12 @@ USAGE:
   adaround fig N                                regenerate paper Figure N data
   adaround sweep    --model M --bits-list 8,4,2  bits x method accuracy grid
   adaround bench-engine --model micro18         native vs PJRT engine
+  adaround serve    --listen HOST:PORT [--synthetic|--model M]
+                    [--quantized B.qtz] [--shards N] [--depth-budget D]
+                    [--auth-token T] [--drain-after-secs S]
+                    HTTP front-end: POST /v1/infer, GET /metrics (Prometheus),
+                    GET /healthz; 429 past the admission budget, graceful
+                    drain on SIGTERM/ctrl-c (docs/SERVING.md)
   adaround serve-bench --model M [--quantized B.qtz] [--shards N]
                     int8 engine + sharded batcher (docs/SERVING.md)
   adaround quantize-bench [--depth D] [--calib-n N] [--iters I]
@@ -69,6 +76,7 @@ pub fn run(args: Args) -> Result<()> {
         "fig" => figs::cmd_fig(&args),
         "bench-engine" => quantize::cmd_bench_engine(&args),
         "quantize-bench" => quantize::cmd_quantize_bench(&args),
+        "serve" => serve::cmd_serve(&args),
         "serve-bench" => serve::cmd_serve_bench(&args),
         "bench-diff" => serve::cmd_bench_diff(&args),
         "sweep" => quantize::cmd_sweep(&args),

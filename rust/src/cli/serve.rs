@@ -1,4 +1,12 @@
-//! `serve-bench` and `bench-diff` subcommands.
+//! `serve`, `serve-bench` and `bench-diff` subcommands.
+//!
+//! `serve --listen ADDR` puts the zero-dependency HTTP front-end
+//! ([`crate::serve::http`]) over a sharded batcher: `POST /v1/infer`,
+//! Prometheus `GET /metrics`, `GET /healthz`, bounded admission
+//! (429 past `--depth-budget` in-flight per shard) and a graceful drain
+//! on SIGTERM/ctrl-c that answers every in-flight request before
+//! exiting. `--synthetic` serves a tiny built-in model quantized
+//! in-process — no artifacts needed (CI's socket smoke test).
 //!
 //! `serve-bench` quantizes (or loads) a model, compiles the integer
 //! serving engine, and reports accuracy plus f32-vs-int8 throughput,
@@ -12,16 +20,17 @@
 //! gate on the perf trajectory.
 
 use std::collections::BTreeMap;
-use std::time::Duration;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::coordinator::{Method, Pipeline};
+use crate::coordinator::{Method, Pipeline, PipelineConfig, QuantizedModel};
 use crate::eval::top1;
-use crate::nn::ForwardOptions;
+use crate::nn::{ForwardOptions, Model};
 use crate::serve::{
     latency_entry, offered_load_latencies, shard_sweep, throughput_entry, BatchPolicy, Batcher,
-    ServeEngine,
+    HttpConfig, HttpServer, ServeEngine,
 };
 use crate::tensor::{IntTensor, Tensor};
 use crate::util::cli::Args;
@@ -58,20 +67,18 @@ fn engine_top1(engine: &mut ServeEngine, x: &Tensor, y: &IntTensor, batch: usize
     100.0 * correct as f64 / n as f64
 }
 
-pub fn cmd_serve_bench(args: &Args) -> Result<()> {
-    let ctx = Ctx::load(args)?;
-    let name = args.str("model", "micro18");
-    let model = ctx.model(&name)?;
-    let (calib, _) = ctx.calib(&model)?;
-    let val = ctx.val(&model)?;
-    if model.task == "seg" {
-        bail!("serve-bench covers classifiers; {name} is a segmentation model");
-    }
-
-    // quantize here (8-bit nearest by default — the serving sweet spot)
-    // unless a previously exported bundle is given
-    let qm = match args.opt("quantized") {
-        Some(path) => crate::coordinator::load_quantized(path)?,
+/// Quantize with the serving defaults (8-bit nearest, per-channel, 8-bit
+/// activations — each overridable) or load a previously exported `.qtz`
+/// bundle when `--quantized` is given. Shared by `serve` and
+/// `serve-bench` so both front doors accept the same flags.
+fn load_or_quantize(
+    args: &Args,
+    ctx: &Ctx,
+    model: &Model,
+    calib: &Tensor,
+) -> Result<QuantizedModel> {
+    match args.opt("quantized") {
+        Some(path) => crate::coordinator::load_quantized(path),
         None => {
             let mut cfg = config_from_args(args)?;
             if !args.flags.contains_key("method") {
@@ -86,10 +93,25 @@ pub fn cmd_serve_bench(args: &Args) -> Result<()> {
             if cfg.act_bits.is_none() {
                 cfg.act_bits = Some(8);
             }
-            let pipe = Pipeline::new(&model, cfg, Some(&ctx.rt));
-            pipe.quantize(&calib, &mut Rng::new(args.usize("seed", 1000)? as u64))?
+            let pipe = Pipeline::new(model, cfg, Some(&ctx.rt));
+            pipe.quantize(calib, &mut Rng::new(args.usize("seed", 1000)? as u64))
         }
-    };
+    }
+}
+
+pub fn cmd_serve_bench(args: &Args) -> Result<()> {
+    let ctx = Ctx::load(args)?;
+    let name = args.str("model", "micro18");
+    let model = ctx.model(&name)?;
+    let (calib, _) = ctx.calib(&model)?;
+    let val = ctx.val(&model)?;
+    if model.task == "seg" {
+        bail!("serve-bench covers classifiers; {name} is a segmentation model");
+    }
+
+    // quantize here (8-bit nearest by default — the serving sweet spot)
+    // unless a previously exported bundle is given
+    let qm = load_or_quantize(args, &ctx, &model, &calib)?;
 
     let mut engine = ServeEngine::compile(&model, &qm, &val.0.shape[1..])?;
     let kernel_name = engine.kernel().name();
@@ -200,6 +222,10 @@ pub fn cmd_serve_bench(args: &Args) -> Result<()> {
         max_batch: args.usize("max-batch", 32)?,
         max_wait: Duration::from_millis(args.usize("max-wait-ms", 3)? as u64),
         shards,
+        // effectively unbounded: the latency entries measure queueing,
+        // not admission control, and must stay comparable to the
+        // pre-admission baselines
+        depth_budget: 4096,
     };
     let per: usize = val.0.shape[1..].iter().product();
     let pool: Vec<Tensor> = (0..16.min(val.0.shape[0]))
@@ -259,6 +285,147 @@ pub fn cmd_serve_bench(args: &Args) -> Result<()> {
     if (fq - iq).abs() > 0.2 {
         bail!("int8 engine top-1 {iq:.2}% drifted >0.2% from fake-quant {fq:.2}%");
     }
+    Ok(())
+}
+
+/// Zero-dependency Unix signal latch for the graceful drain: `signal(2)`
+/// from libc (already linked by std), a static flag flipped in the
+/// handler, polled by the serve loop. Windows builds just never see the
+/// flag set (ctrl-c kills the process, as before).
+#[cfg(unix)]
+mod sig {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    static TERM: AtomicBool = AtomicBool::new(false);
+
+    extern "C" fn on_signal(_signum: i32) {
+        // async-signal-safe: one atomic store, nothing else
+        TERM.store(true, Ordering::SeqCst);
+    }
+
+    extern "C" {
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+
+    pub fn install() {
+        const SIGINT: i32 = 2;
+        const SIGTERM: i32 = 15;
+        unsafe {
+            signal(SIGINT, on_signal);
+            signal(SIGTERM, on_signal);
+        }
+    }
+
+    pub fn requested() -> bool {
+        TERM.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(not(unix))]
+mod sig {
+    pub fn install() {}
+
+    pub fn requested() -> bool {
+        false
+    }
+}
+
+/// A tiny self-contained classifier ([3,16,16] conv→gpool→dense),
+/// quantized 8/8 nearest in-process — `serve --synthetic` boots without
+/// artifacts, which is what CI's socket smoke test runs against.
+fn synthetic_engine() -> Result<ServeEngine> {
+    let ir = r#"{"task":"cls","ir":[
+      {"id":"in","op":"input","inputs":[]},
+      {"id":"c1","op":"conv","inputs":["in"],"cin":3,"cout":8,
+       "k":3,"stride":1,"pad":1,"groups":1,"relu":true},
+      {"id":"g1","op":"gpool","inputs":["c1"]},
+      {"id":"d1","op":"dense","inputs":["g1"],"cin":8,"cout":4,"relu":false}
+    ]}"#;
+    let mut rng = Rng::new(7);
+    let mut w = BTreeMap::new();
+    for (name, shape, std) in [
+        ("c1.w", vec![8usize, 3, 3, 3], 0.25f32),
+        ("c1.b", vec![8], 0.05),
+        ("d1.w", vec![4, 8], 0.4),
+        ("d1.b", vec![4], 0.05),
+    ] {
+        let n: usize = shape.iter().product();
+        let data = (0..n).map(|_| rng.normal_f32(0.0, std)).collect();
+        w.insert(name.to_string(), Tensor::from_vec(&shape, data));
+    }
+    let model = Model::from_manifest("synthetic", &Json::parse(ir)?, w)?;
+    let (calib, _) = crate::data::synthetic_stripes(32, 3, 16, &mut rng);
+    let cfg = PipelineConfig {
+        method: Method::Nearest,
+        bits: 8,
+        per_channel: true,
+        act_bits: Some(8),
+        calib_n: calib.shape[0],
+        ..Default::default()
+    };
+    let qm = Pipeline::new(&model, cfg, None).quantize(&calib, &mut Rng::new(1))?;
+    ServeEngine::compile(&model, &qm, &[3, 16, 16])
+}
+
+pub fn cmd_serve(args: &Args) -> Result<()> {
+    let listen = args.str("listen", "127.0.0.1:8780");
+    let engine = if args.bool("synthetic") {
+        synthetic_engine()?
+    } else {
+        let ctx = Ctx::load(args)?;
+        let name = args.str("model", "micro18");
+        let model = ctx.model(&name)?;
+        if model.task == "seg" {
+            bail!("serve covers classifiers; {name} is a segmentation model");
+        }
+        let (calib, _) = ctx.calib(&model)?;
+        let in_shape = calib.shape[1..].to_vec();
+        let qm = load_or_quantize(args, &ctx, &model, &calib)?;
+        ServeEngine::compile(&model, &qm, &in_shape)?
+    };
+    let policy = BatchPolicy {
+        max_batch: args.usize("max-batch", 32)?,
+        max_wait: Duration::from_millis(args.usize("max-wait-ms", 3)? as u64),
+        shards: args.usize("shards", parallel::num_threads())?.max(1),
+        depth_budget: args.usize("depth-budget", 128)?.max(1),
+    };
+    let cfg = HttpConfig {
+        auth_token: args.opt("auth-token").map(|s| s.to_string()),
+        ..Default::default()
+    };
+    sig::install();
+    let batcher = Batcher::new(engine, policy);
+    let server = HttpServer::bind(batcher, &listen, cfg)?;
+    println!(
+        "serving on http://{}  ({} shards, depth budget {}; POST /v1/infer, GET /metrics, GET /healthz)",
+        server.local_addr(),
+        policy.shards,
+        policy.depth_budget * policy.shards,
+    );
+    println!("SIGTERM or ctrl-c drains: in-flight requests finish, then the pool joins");
+    // --drain-after-secs: self-terminate (tests and demos; 0 = run until
+    // signalled)
+    let drain_after = args.f32("drain-after-secs", 0.0)? as f64;
+    let start = Instant::now();
+    while !sig::requested() {
+        if drain_after > 0.0 && start.elapsed().as_secs_f64() >= drain_after {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    println!("draining...");
+    let metrics = Arc::clone(server.metrics());
+    server.shutdown();
+    let (full, drain, shape) = (
+        metrics.rejected_full.get(),
+        metrics.rejected_draining.get(),
+        metrics.rejected_shape.get(),
+    );
+    println!(
+        "drained: {} answered, {} rejected (queue_full {full}, draining {drain}, bad_shape {shape})",
+        metrics.responses.get(),
+        full + drain + shape,
+    );
     Ok(())
 }
 

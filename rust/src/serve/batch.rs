@@ -18,6 +18,16 @@
 //! engine keeps full intra-op parallelism (the PR-2 behavior); at
 //! shards=cores, inter-request parallelism takes over completely.
 //!
+//! **Admission.** The queue is bounded by in-flight depth: a submit past
+//! `depth_budget × shards` admitted-but-unanswered requests fails with
+//! [`SubmitError::QueueFull`] instead of growing the queue without
+//! limit, and a drain ([`Batcher::begin_drain`] / shutdown) fails new
+//! submits with [`SubmitError::ShuttingDown`] while in-flight requests
+//! complete. Every admission outcome, queue depth, batch fill and
+//! service time lands in a shared [`ServeMetrics`]
+//! ([`super::telemetry`]) — a few relaxed atomics per event, exported
+//! live by the HTTP front-end ([`super::http`]).
+//!
 //! **Determinism.** Per-image outputs do not depend on which shard served
 //! the image, how requests were batched together, or the thread count:
 //! every integer kernel computes each image's rows independently with
@@ -29,10 +39,13 @@ use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, SyncSender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::tensor::int8::kernel::Kernel;
 use crate::tensor::Tensor;
 use crate::util::parallel;
 
 use super::engine::ServeEngine;
+use super::plan::QuantizedPlan;
+use super::telemetry::ServeMetrics;
 
 #[derive(Clone, Copy, Debug)]
 pub struct BatchPolicy {
@@ -43,11 +56,47 @@ pub struct BatchPolicy {
     /// engine shards serving the queue (1 = the single-engine layout);
     /// see `docs/SERVING.md` for sizing guidance
     pub shards: usize,
+    /// bounded admission: max in-flight requests (admitted, response not
+    /// yet sent) *per shard* — the effective budget is
+    /// `depth_budget × shards`, and a submit past it fails with
+    /// [`SubmitError::QueueFull`] (the HTTP layer's 429)
+    pub depth_budget: usize,
 }
 
 impl Default for BatchPolicy {
     fn default() -> Self {
-        BatchPolicy { max_batch: 32, max_wait: Duration::from_millis(5), shards: 1 }
+        BatchPolicy {
+            max_batch: 32,
+            max_wait: Duration::from_millis(5),
+            shards: 1,
+            depth_budget: 128,
+        }
+    }
+}
+
+/// Why a [`BatcherHandle::submit`] was refused — the admission outcomes
+/// the HTTP front-end maps onto status codes (429 / 503 / 400).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// in-flight depth is at the admission budget; retry after a drain
+    QueueFull { budget: u64 },
+    /// the batcher is draining or has shut down
+    ShuttingDown,
+    /// image numel doesn't match the plan's input geometry
+    BadShape { got: usize, want: usize },
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::QueueFull { budget } => {
+                write!(f, "queue full: {budget} requests already in flight")
+            }
+            SubmitError::ShuttingDown => write!(f, "batcher is shutting down"),
+            SubmitError::BadShape { got, want } => {
+                write!(f, "bad image shape: {got} values, plan expects {want}")
+            }
+        }
     }
 }
 
@@ -56,6 +105,8 @@ struct Request {
     img: Tensor,
     /// where the dequantized output row goes
     resp: SyncSender<Vec<f32>>,
+    /// submit time — start of the service-time measurement
+    t0: Instant,
 }
 
 /// Handle for submitting requests; cheap to clone across client threads.
@@ -65,19 +116,45 @@ pub struct BatcherHandle {
     /// expected image numel (the plan's C*H*W) — validated at submit so a
     /// malformed request is rejected at its source, never in a shard
     per: usize,
+    metrics: Arc<ServeMetrics>,
 }
 
 impl BatcherHandle {
-    /// Enqueue one image; returns the channel the result row arrives on.
-    /// Returns `None` if the image geometry is wrong or the batcher has
-    /// shut down.
-    pub fn submit(&self, img: Tensor) -> Option<Receiver<Vec<f32>>> {
+    /// Enqueue one image; returns the channel the result row arrives on,
+    /// or the admission failure: geometry mismatch, in-flight depth at
+    /// budget, or drain/shutdown. Admission is lock-free (one CAS on the
+    /// in-flight counter) and every outcome is counted in
+    /// [`ServeMetrics`].
+    pub fn submit(&self, img: Tensor) -> Result<Receiver<Vec<f32>>, SubmitError> {
+        let m = &*self.metrics;
         if img.numel() != self.per {
-            return None;
+            m.rejected_shape.inc();
+            return Err(SubmitError::BadShape { got: img.numel(), want: self.per });
+        }
+        if m.draining() {
+            m.rejected_draining.inc();
+            return Err(SubmitError::ShuttingDown);
+        }
+        if !m.try_admit() {
+            m.rejected_full.inc();
+            return Err(SubmitError::QueueFull { budget: m.budget() });
         }
         let (rtx, rrx) = mpsc::sync_channel(1);
-        self.tx.send(Request { img, resp: rtx }).ok()?;
-        Some(rrx)
+        let req = Request { img, resp: rtx, t0: Instant::now() };
+        if self.tx.send(req).is_err() {
+            // workers gone (shutdown raced the drain flag)
+            m.release_admission();
+            m.rejected_draining.inc();
+            return Err(SubmitError::ShuttingDown);
+        }
+        m.submitted.inc();
+        m.queue_depth.inc();
+        Ok(rrx)
+    }
+
+    /// The live metrics shared with the batcher.
+    pub fn metrics(&self) -> &Arc<ServeMetrics> {
+        &self.metrics
     }
 }
 
@@ -85,6 +162,11 @@ pub struct Batcher {
     tx: Option<Sender<Request>>,
     per: usize,
     shards: usize,
+    /// the shared read-only plan — kept so the HTTP front-end can report
+    /// plan identity/footprint without holding an engine
+    plan: Arc<QuantizedPlan>,
+    kernel: Kernel,
+    metrics: Arc<ServeMetrics>,
     workers: Vec<std::thread::JoinHandle<()>>,
 }
 
@@ -96,7 +178,14 @@ impl Batcher {
     pub fn new(engine: ServeEngine, policy: BatchPolicy) -> Batcher {
         assert!(policy.max_batch >= 1);
         assert!(policy.shards >= 1);
+        assert!(policy.depth_budget >= 1);
         let per: usize = engine.plan.in_shape.iter().product();
+        let plan = Arc::clone(&engine.plan);
+        let kernel = engine.kernel();
+        let metrics = Arc::new(ServeMetrics::new(
+            policy.shards,
+            policy.depth_budget.saturating_mul(policy.shards),
+        ));
         let (tx, rx) = mpsc::channel::<Request>();
         let rx = Arc::new(Mutex::new(rx));
         // divide the machine: intra-op threads recede as shards take
@@ -117,19 +206,21 @@ impl Batcher {
                 let threads =
                     (total / policy.shards + usize::from(i < total % policy.shards)).max(1);
                 let rx = Arc::clone(&rx);
+                let metrics = Arc::clone(&metrics);
                 std::thread::Builder::new()
                     .name(format!("serve-shard-{i}"))
-                    .spawn(move || worker_loop(eng, policy, rx, threads))
+                    .spawn(move || worker_loop(eng, policy, rx, threads, metrics, i))
                     .expect("spawn shard worker")
             })
             .collect();
-        Batcher { tx: Some(tx), per, shards: policy.shards, workers }
+        Batcher { tx: Some(tx), per, shards: policy.shards, plan, kernel, metrics, workers }
     }
 
     pub fn handle(&self) -> BatcherHandle {
         BatcherHandle {
             tx: self.tx.as_ref().expect("batcher running").clone(),
             per: self.per,
+            metrics: Arc::clone(&self.metrics),
         }
     }
 
@@ -138,8 +229,32 @@ impl Batcher {
         self.shards
     }
 
+    /// The shared compiled plan (read-only) — identity and footprint for
+    /// `/healthz` and `/metrics`.
+    pub fn plan(&self) -> &Arc<QuantizedPlan> {
+        &self.plan
+    }
+
+    /// The GEMM micro-kernel every shard dispatches to.
+    pub fn kernel(&self) -> Kernel {
+        self.kernel
+    }
+
+    /// Live serving telemetry (shared with every handle and worker).
+    pub fn metrics(&self) -> &Arc<ServeMetrics> {
+        &self.metrics
+    }
+
+    /// Start a graceful drain without blocking: new submits fail with
+    /// [`SubmitError::ShuttingDown`] from this point on, while admitted
+    /// requests keep flowing to completion. [`Batcher::shutdown`] (or
+    /// drop) still joins the workers.
+    pub fn begin_drain(&self) {
+        self.metrics.begin_drain();
+    }
+
     /// Convenience: submit directly on the batcher.
-    pub fn submit(&self, img: Tensor) -> Option<Receiver<Vec<f32>>> {
+    pub fn submit(&self, img: Tensor) -> Result<Receiver<Vec<f32>>, SubmitError> {
         self.handle().submit(img)
     }
 
@@ -153,6 +268,7 @@ impl Batcher {
     }
 
     fn stop(&mut self) {
+        self.metrics.begin_drain(); // reject new submits from live handles
         self.tx.take(); // close the channel; shards exit after draining
         for w in self.workers.drain(..) {
             let _ = w.join();
@@ -200,7 +316,7 @@ pub fn offered_load_latencies(
         }
         let img = pool[i % pool.len()].clone();
         let t0 = Instant::now();
-        if let Some(rx) = batcher.submit(img) {
+        if let Ok(rx) = batcher.submit(img) {
             let _ = ltx.send((t0, rx));
         }
     }
@@ -232,7 +348,7 @@ pub fn saturation_throughput(
                 let mut inflight = std::collections::VecDeque::with_capacity(WINDOW);
                 for i in 0..per_client {
                     let img = pool[(c + i * clients) % pool.len()].clone();
-                    if let Some(rx) = h.submit(img) {
+                    if let Ok(rx) = h.submit(img) {
                         inflight.push_back(rx);
                     }
                     if inflight.len() >= WINDOW {
@@ -255,6 +371,8 @@ fn worker_loop(
     policy: BatchPolicy,
     rx: Arc<Mutex<Receiver<Request>>>,
     threads: usize,
+    metrics: Arc<ServeMetrics>,
+    shard: usize,
 ) {
     let per: usize = engine.plan.in_shape.iter().product();
     loop {
@@ -269,6 +387,7 @@ fn worker_loop(
                 Ok(r) => r,
                 Err(_) => return,
             };
+            metrics.queue_depth.dec();
             let deadline = Instant::now() + policy.max_wait;
             let mut batch = vec![first];
             while batch.len() < policy.max_batch {
@@ -277,28 +396,44 @@ fn worker_loop(
                     break;
                 }
                 match q.recv_timeout(deadline - now) {
-                    Ok(r) => batch.push(r),
+                    Ok(r) => {
+                        metrics.queue_depth.dec();
+                        batch.push(r);
+                    }
                     Err(RecvTimeoutError::Timeout) => break,
                     Err(RecvTimeoutError::Disconnected) => break,
                 }
             }
             batch
         };
-        run_batch(&mut engine, per, threads, batch);
+        run_batch(&mut engine, per, threads, batch, &metrics, shard);
     }
 }
 
 /// Stack [C,H,W] images into one [B,C,H,W] forward and scatter the
-/// dequantized rows back to their requesters. A malformed request
-/// (`submit` already rejects these — belt and braces) is dropped here,
-/// failing only its own response channel; a client that dropped its
-/// receiver just misses its row.
-fn run_batch(engine: &mut ServeEngine, per: usize, threads: usize, mut batch: Vec<Request>) {
-    batch.retain(|r| r.img.numel() == per);
+/// dequantized rows back to their requesters. `submit` validated the
+/// geometry, so every request in the batch is well-formed; a client that
+/// dropped its receiver just misses its row. Telemetry (batch fill,
+/// per-shard counters, service time, admission release) is a handful of
+/// relaxed atomics around the forward — off the hot path.
+fn run_batch(
+    engine: &mut ServeEngine,
+    per: usize,
+    threads: usize,
+    batch: Vec<Request>,
+    metrics: &ServeMetrics,
+    shard: usize,
+) {
+    debug_assert!(batch.iter().all(|r| r.img.numel() == per));
     if batch.is_empty() {
         return;
     }
     let b = batch.len();
+    let stats = &metrics.shards[shard];
+    metrics.batch_fill.observe(b as f64);
+    stats.batches.inc();
+    stats.images.add(b as u64);
+    stats.busy.set(1);
     let mut data = Vec::with_capacity(b * per);
     for r in &batch {
         data.extend_from_slice(&r.img.data);
@@ -307,8 +442,12 @@ fn run_batch(engine: &mut ServeEngine, per: usize, threads: usize, mut batch: Ve
     shape.extend_from_slice(&engine.plan.in_shape);
     let x = Tensor::from_vec(&shape, data);
     let out = parallel::with_threads(threads, || engine.forward(&x));
+    stats.busy.set(0);
     let row = out.numel() / b;
     for (i, r) in batch.into_iter().enumerate() {
         let _ = r.resp.send(out.data[i * row..(i + 1) * row].to_vec());
+        metrics.service_time.observe(r.t0.elapsed().as_secs_f64());
+        metrics.responses.inc();
+        metrics.release_admission();
     }
 }

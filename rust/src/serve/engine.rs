@@ -105,6 +105,13 @@ impl ServeEngine {
         Ok(ServeEngine::new(super::plan::compile_plan_with(model, qm, in_shape, opts)?))
     }
 
+    /// Stable identity of the compiled plan (forks share it) — see
+    /// [`QuantizedPlan::plan_id`]. O(weight bytes); callers that report
+    /// it repeatedly (the HTTP front-end) compute it once and cache.
+    pub fn plan_id(&self) -> u64 {
+        self.plan.plan_id()
+    }
+
     /// Quantization of the final output tensor (for external dequant).
     pub fn out_q(&self) -> ActQ {
         self.plan.nodes.last().expect("empty plan").out_q

@@ -1,0 +1,963 @@
+//! Zero-dependency HTTP/1.1 front-end for the batched serving stack:
+//! `std::net::TcpListener`, blocking I/O, one thread per connection with
+//! keep-alive — no tokio/hyper (the offline vendor registry has neither),
+//! mirroring the endpoint *shape* of surver's `server.rs`
+//! (status/data/metrics routes, optional bearer token), not its async
+//! stack.
+//!
+//! Routes:
+//!
+//! | route          | method | body                                   |
+//! |----------------|--------|----------------------------------------|
+//! | `/v1/infer`    | POST   | one image, LE f32 bytes or JSON array  |
+//! | `/metrics`     | GET    | Prometheus text ([`super::telemetry`]) |
+//! | `/healthz`     | GET    | JSON: plan id, shards, drain state     |
+//! | `/`            | GET    | plain-text route index                 |
+//!
+//! Admission maps [`SubmitError`] onto status codes: `QueueFull` → 429 +
+//! `Retry-After`, `ShuttingDown` → 503, `BadShape` → 400. Graceful drain
+//! ([`HttpServer::shutdown`]): flip the shared drain flag (new infers
+//! 503, `/healthz` reports `draining`), stop accepting, let every
+//! connection finish its in-flight response, then drain and join the
+//! shard pool — no admitted request is ever dropped (enforced by
+//! `rust/tests/http_serving.rs`).
+//!
+//! The exact metric names and the full status-code table live in
+//! `docs/SERVING.md`; the socket→admission→batcher→shard data flow in
+//! `docs/ARCHITECTURE.md`.
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::tensor::Tensor;
+use crate::util::Json;
+
+use super::batch::{Batcher, BatcherHandle, SubmitError};
+use super::telemetry::{Counter, ServeMetrics};
+
+// ---------------------------------------------------------------------
+// request/response parsing (shared by the server and the test client)
+// ---------------------------------------------------------------------
+
+/// Why reading or parsing an HTTP message failed. The server maps these
+/// onto status codes (see [`HttpError::status`]).
+#[derive(Debug, PartialEq, Eq)]
+pub enum HttpError {
+    /// header block exceeds the limit → 431
+    HeadTooLarge,
+    /// declared content-length exceeds the limit → 413
+    BodyTooLarge { len: usize },
+    /// syntactically invalid message → 400
+    Malformed(&'static str),
+    /// the read timed out; `started` = mid-message (some bytes consumed)
+    Timeout { started: bool },
+    /// peer closed the stream mid-message
+    Eof,
+    /// transport error
+    Io(ErrorKind),
+}
+
+impl HttpError {
+    /// Status code the server answers with before closing.
+    pub fn status(&self) -> u16 {
+        match self {
+            HttpError::HeadTooLarge => 431,
+            HttpError::BodyTooLarge { .. } => 413,
+            HttpError::Malformed(_) => 400,
+            HttpError::Timeout { .. } => 408,
+            HttpError::Eof | HttpError::Io(_) => 400,
+        }
+    }
+}
+
+/// First line + headers of one HTTP message (request or response).
+/// Header names are lowercased; values are trimmed.
+#[derive(Debug)]
+pub struct MsgHead {
+    pub line: String,
+    pub headers: Vec<(String, String)>,
+}
+
+impl MsgHead {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+fn find_head_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+fn parse_head(bytes: &[u8]) -> Result<MsgHead, HttpError> {
+    let text = std::str::from_utf8(bytes).map_err(|_| HttpError::Malformed("non-utf8 head"))?;
+    let mut lines = text.split("\r\n");
+    let line = lines.next().unwrap_or("").to_string();
+    if line.is_empty() {
+        return Err(HttpError::Malformed("empty start line"));
+    }
+    let mut headers = Vec::new();
+    for l in lines {
+        if l.is_empty() {
+            continue;
+        }
+        let (k, v) = l.split_once(':').ok_or(HttpError::Malformed("header missing ':'"))?;
+        headers.push((k.trim().to_ascii_lowercase(), v.trim().to_string()));
+    }
+    Ok(MsgHead { line, headers })
+}
+
+/// Read one HTTP/1.1 message (head + content-length body) from `r`.
+///
+/// `carry` holds bytes already read but not yet consumed — pass the same
+/// buffer across calls on a keep-alive connection and partial reads,
+/// pipelining and timeouts all resume cleanly: the buffer is only
+/// drained once a complete message has been parsed, so a
+/// [`HttpError::Timeout`] mid-message loses nothing.
+///
+/// Returns `Ok(None)` on a clean close at a message boundary.
+pub fn read_message<R: Read>(
+    r: &mut R,
+    carry: &mut Vec<u8>,
+    max_head: usize,
+    max_body: usize,
+) -> Result<Option<(MsgHead, Vec<u8>)>, HttpError> {
+    let mut tmp = [0u8; 8192];
+    loop {
+        if let Some(head_end) = find_head_end(carry) {
+            let head = parse_head(&carry[..head_end])?;
+            if head.header("transfer-encoding").is_some() {
+                return Err(HttpError::Malformed("transfer-encoding unsupported"));
+            }
+            let content_len = match head.header("content-length") {
+                None => 0usize,
+                Some(v) => v
+                    .parse()
+                    .map_err(|_| HttpError::Malformed("bad content-length"))?,
+            };
+            if content_len > max_body {
+                return Err(HttpError::BodyTooLarge { len: content_len });
+            }
+            let total = head_end + 4 + content_len;
+            if carry.len() >= total {
+                let body = carry[head_end + 4..total].to_vec();
+                carry.drain(..total);
+                return Ok(Some((head, body)));
+            }
+        } else if carry.len() > max_head {
+            return Err(HttpError::HeadTooLarge);
+        }
+        match r.read(&mut tmp) {
+            Ok(0) => {
+                return if carry.is_empty() { Ok(None) } else { Err(HttpError::Eof) };
+            }
+            Ok(n) => carry.extend_from_slice(&tmp[..n]),
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
+                return Err(HttpError::Timeout { started: !carry.is_empty() });
+            }
+            Err(e) => return Err(HttpError::Io(e.kind())),
+        }
+    }
+}
+
+/// Split a request start line into (METHOD, path, version).
+pub fn parse_request_line(line: &str) -> Result<(&str, &str, &str), HttpError> {
+    let mut it = line.split_whitespace();
+    let (m, p, v) = (it.next(), it.next(), it.next());
+    match (m, p, v, it.next()) {
+        (Some(m), Some(p), Some(v), None) if v.starts_with("HTTP/1.") => Ok((m, p, v)),
+        _ => Err(HttpError::Malformed("bad request line")),
+    }
+}
+
+fn reason(code: u16) -> &'static str {
+    match code {
+        200 => "OK",
+        400 => "Bad Request",
+        401 => "Unauthorized",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+/// One response, ready to serialize.
+struct Response {
+    code: u16,
+    ctype: &'static str,
+    extra: Vec<(&'static str, String)>,
+    body: Vec<u8>,
+}
+
+impl Response {
+    fn new(code: u16, ctype: &'static str, body: Vec<u8>) -> Response {
+        Response { code, ctype, extra: Vec::new(), body }
+    }
+
+    fn text(code: u16, msg: &str) -> Response {
+        Response::new(code, "text/plain", format!("{msg}\n").into_bytes())
+    }
+
+    fn with(mut self, k: &'static str, v: String) -> Response {
+        self.extra.push((k, v));
+        self
+    }
+}
+
+fn write_response(w: &mut impl Write, r: &Response, keep_alive: bool) -> std::io::Result<()> {
+    let mut head = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n",
+        r.code,
+        reason(r.code),
+        r.ctype,
+        r.body.len(),
+        if keep_alive { "keep-alive" } else { "close" },
+    );
+    for (k, v) in &r.extra {
+        head.push_str(k);
+        head.push_str(": ");
+        head.push_str(v);
+        head.push_str("\r\n");
+    }
+    head.push_str("\r\n");
+    w.write_all(head.as_bytes())?;
+    w.write_all(&r.body)?;
+    w.flush()
+}
+
+// ---------------------------------------------------------------------
+// server
+// ---------------------------------------------------------------------
+
+/// Front-end configuration. Defaults serve curl out of the box.
+#[derive(Clone)]
+pub struct HttpConfig {
+    /// when set, `POST /v1/infer` requires `Authorization: Bearer <tok>`
+    /// (`/healthz` and `/metrics` stay open for probes and scrapers)
+    pub auth_token: Option<String>,
+    /// 413 past this declared content-length
+    pub max_body_bytes: usize,
+    /// 431 past this header-block size
+    pub max_head_bytes: usize,
+    /// read-timeout granularity: how often an idle connection rechecks
+    /// the drain flag
+    pub read_poll: Duration,
+    /// a connection stalled mid-request longer than this gets 408
+    pub request_deadline: Duration,
+}
+
+impl Default for HttpConfig {
+    fn default() -> Self {
+        HttpConfig {
+            auth_token: None,
+            max_body_bytes: 16 << 20,
+            max_head_bytes: 16 << 10,
+            read_poll: Duration::from_millis(100),
+            request_deadline: Duration::from_secs(10),
+        }
+    }
+}
+
+/// HTTP-layer counters, rendered after the batcher block in `/metrics`.
+struct HttpStats {
+    routes: [(&'static str, Counter); 5],
+    codes: [(u16, Counter); 11],
+}
+
+impl HttpStats {
+    fn new() -> HttpStats {
+        let routes = ["infer", "metrics", "healthz", "index", "other"]
+            .map(|r| (r, Counter::default()));
+        let codes = [200u16, 400, 401, 404, 405, 408, 413, 429, 431, 500, 503]
+            .map(|c| (c, Counter::default()));
+        HttpStats { routes, codes }
+    }
+
+    fn count_route(&self, path: &str) {
+        let key = match path {
+            "/v1/infer" => "infer",
+            "/metrics" => "metrics",
+            "/healthz" => "healthz",
+            "/" => "index",
+            _ => "other",
+        };
+        if let Some((_, c)) = self.routes.iter().find(|(r, _)| *r == key) {
+            c.inc();
+        }
+    }
+
+    fn count_code(&self, code: u16) {
+        if let Some((_, c)) = self.codes.iter().find(|(k, _)| *k == code) {
+            c.inc();
+        }
+    }
+
+    fn render(&self, out: &mut String) {
+        use std::fmt::Write as _;
+        let _ = writeln!(out, "# HELP pallas_http_requests_total HTTP requests by route");
+        let _ = writeln!(out, "# TYPE pallas_http_requests_total counter");
+        for (r, c) in &self.routes {
+            let _ = writeln!(out, "pallas_http_requests_total{{route=\"{r}\"}} {}", c.get());
+        }
+        let _ = writeln!(out, "# HELP pallas_http_responses_total HTTP responses by status code");
+        let _ = writeln!(out, "# TYPE pallas_http_responses_total counter");
+        for (k, c) in &self.codes {
+            let _ = writeln!(out, "pallas_http_responses_total{{code=\"{k}\"}} {}", c.get());
+        }
+    }
+}
+
+/// Immutable facts about the plan being served, captured once at bind.
+struct PlanInfo {
+    id_hex: String,
+    shards: usize,
+    kernel: &'static str,
+    weight_bytes: usize,
+    w8_ops: usize,
+    w4_ops: usize,
+    in_shape: Vec<usize>,
+    per: usize,
+}
+
+impl PlanInfo {
+    fn render(&self, out: &mut String) {
+        use std::fmt::Write as _;
+        let _ = writeln!(out, "# HELP pallas_plan_info identity of the plan being served");
+        let _ = writeln!(out, "# TYPE pallas_plan_info gauge");
+        let _ = writeln!(
+            out,
+            "pallas_plan_info{{id=\"{}\",kernel=\"{}\",shards=\"{}\"}} 1",
+            self.id_hex, self.kernel, self.shards
+        );
+        let _ = writeln!(out, "# HELP pallas_plan_weight_bytes packed weight footprint");
+        let _ = writeln!(out, "# TYPE pallas_plan_weight_bytes gauge");
+        let _ = writeln!(out, "pallas_plan_weight_bytes {}", self.weight_bytes);
+        let _ = writeln!(out, "# HELP pallas_plan_ops weight-bearing ops by packed dtype");
+        let _ = writeln!(out, "# TYPE pallas_plan_ops gauge");
+        let _ = writeln!(out, "pallas_plan_ops{{dtype=\"w8\"}} {}", self.w8_ops);
+        let _ = writeln!(out, "pallas_plan_ops{{dtype=\"w4\"}} {}", self.w4_ops);
+    }
+}
+
+struct ServerState {
+    handle: BatcherHandle,
+    metrics: Arc<ServeMetrics>,
+    http: HttpStats,
+    plan: PlanInfo,
+    cfg: HttpConfig,
+}
+
+impl ServerState {
+    fn draining(&self) -> bool {
+        self.metrics.draining()
+    }
+}
+
+/// The serving front-end: a listener, an accept thread, one thread per
+/// connection, all sharing the batcher's telemetry. Owns the [`Batcher`]
+/// so [`HttpServer::shutdown`] can drain the whole stack in order.
+pub struct HttpServer {
+    addr: SocketAddr,
+    state: Option<Arc<ServerState>>,
+    stop_accept: Arc<AtomicBool>,
+    accept: Option<std::thread::JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>,
+    batcher: Option<Batcher>,
+    metrics: Arc<ServeMetrics>,
+}
+
+impl HttpServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:8080"`, port 0 for ephemeral) and
+    /// start serving the batcher's queue over HTTP.
+    pub fn bind(batcher: Batcher, addr: &str, cfg: HttpConfig) -> Result<HttpServer> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+        let addr = listener.local_addr()?;
+        let plan = batcher.plan();
+        let dtypes = plan.op_dtypes();
+        let w4_ops = dtypes.iter().filter(|(_, d)| *d == "w4").count();
+        let info = PlanInfo {
+            id_hex: format!("{:016x}", plan.plan_id()),
+            shards: batcher.shards(),
+            kernel: batcher.kernel().name(),
+            weight_bytes: plan.weight_bytes(),
+            w8_ops: dtypes.len() - w4_ops,
+            w4_ops,
+            in_shape: plan.in_shape.clone(),
+            per: plan.in_shape.iter().product(),
+        };
+        let metrics = Arc::clone(batcher.metrics());
+        let state = Arc::new(ServerState {
+            handle: batcher.handle(),
+            metrics: Arc::clone(&metrics),
+            http: HttpStats::new(),
+            plan: info,
+            cfg,
+        });
+        let stop_accept = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>> =
+            Arc::new(Mutex::new(Vec::new()));
+        let accept = {
+            let state = Arc::clone(&state);
+            let stop = Arc::clone(&stop_accept);
+            let conns = Arc::clone(&conns);
+            std::thread::Builder::new()
+                .name("serve-accept".into())
+                .spawn(move || {
+                    for stream in listener.incoming() {
+                        if stop.load(Ordering::SeqCst) {
+                            break;
+                        }
+                        let Ok(stream) = stream else { continue };
+                        let state = Arc::clone(&state);
+                        let h = std::thread::Builder::new()
+                            .name("serve-http".into())
+                            .spawn(move || conn_loop(stream, state));
+                        if let Ok(h) = h {
+                            let mut guard = conns.lock().expect("conns lock");
+                            // reap finished connection threads in passing
+                            let mut i = 0;
+                            while i < guard.len() {
+                                if guard[i].is_finished() {
+                                    let _ = guard.swap_remove(i).join();
+                                } else {
+                                    i += 1;
+                                }
+                            }
+                            guard.push(h);
+                        }
+                    }
+                })
+                .expect("spawn accept thread")
+        };
+        Ok(HttpServer {
+            addr,
+            state: Some(state),
+            stop_accept,
+            accept: Some(accept),
+            conns,
+            batcher: Some(batcher),
+            metrics,
+        })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The live telemetry — valid after shutdown too (tests assert
+    /// zero-loss against it).
+    pub fn metrics(&self) -> &Arc<ServeMetrics> {
+        &self.metrics
+    }
+
+    /// Graceful drain: reject new infers with 503 (drain flag), stop
+    /// accepting connections, let every connection write its in-flight
+    /// response, then drain the batcher queue and join the shard pool.
+    /// Blocks until everything has stopped; admitted requests always get
+    /// their response.
+    pub fn shutdown(mut self) {
+        self.shutdown_impl();
+    }
+
+    fn shutdown_impl(&mut self) {
+        if self.batcher.is_none() {
+            return; // already shut down
+        }
+        // 1. no new work: submits fail ShuttingDown, /healthz says draining
+        self.metrics.begin_drain();
+        // 2. stop accepting (poke the blocking accept loop awake)
+        self.stop_accept.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(self.addr);
+        if let Some(a) = self.accept.take() {
+            let _ = a.join();
+        }
+        // 3. connections: each finishes its in-flight response, then
+        // notices the drain flag at its next read poll and exits
+        loop {
+            let handles: Vec<_> = {
+                let mut guard = self.conns.lock().expect("conns lock");
+                guard.drain(..).collect()
+            };
+            if handles.is_empty() {
+                break;
+            }
+            for h in handles {
+                let _ = h.join();
+            }
+        }
+        // 4. drop our submit handle (the last sender), then join shards:
+        // the workers drain what's queued and exit
+        self.state.take();
+        if let Some(b) = self.batcher.take() {
+            b.shutdown();
+        }
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.shutdown_impl();
+    }
+}
+
+/// One connection: keep-alive request loop with drain-aware idling.
+fn conn_loop(mut stream: TcpStream, state: Arc<ServerState>) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(state.cfg.read_poll));
+    let mut carry = Vec::new();
+    let mut stalled_since: Option<Instant> = None;
+    loop {
+        let msg = read_message(
+            &mut stream,
+            &mut carry,
+            state.cfg.max_head_bytes,
+            state.cfg.max_body_bytes,
+        );
+        match msg {
+            Ok(Some((head, body))) => {
+                stalled_since = None;
+                let resp = handle_request(&state, &head, body);
+                // drain closes the connection after the in-flight
+                // response; so does an explicit Connection: close
+                let keep = !state.draining()
+                    && head.header("connection").map(|v| v.eq_ignore_ascii_case("close"))
+                        != Some(true);
+                state.http.count_code(resp.code);
+                if write_response(&mut stream, &resp, keep).is_err() || !keep {
+                    return;
+                }
+            }
+            Ok(None) => return, // clean close at a message boundary
+            Err(HttpError::Timeout { started: false }) => {
+                stalled_since = None;
+                if state.draining() {
+                    return; // idle and draining: close
+                }
+            }
+            Err(HttpError::Timeout { started: true }) => {
+                let t = *stalled_since.get_or_insert_with(Instant::now);
+                if t.elapsed() > state.cfg.request_deadline
+                    || (state.draining() && t.elapsed() > Duration::from_secs(1))
+                {
+                    let resp = Response::text(408, "request timed out");
+                    state.http.count_code(resp.code);
+                    let _ = write_response(&mut stream, &resp, false);
+                    return;
+                }
+            }
+            Err(e) => {
+                // answer what we can, then close; a vanished peer (Eof /
+                // transport error) gets nothing
+                if !matches!(e, HttpError::Eof | HttpError::Io(_)) {
+                    let resp = Response::text(e.status(), &format!("{e:?}"));
+                    state.http.count_code(resp.code);
+                    let _ = write_response(&mut stream, &resp, false);
+                }
+                return;
+            }
+        }
+    }
+}
+
+fn handle_request(state: &ServerState, head: &MsgHead, body: Vec<u8>) -> Response {
+    let Ok((method, path, _)) = parse_request_line(&head.line) else {
+        return Response::text(400, "malformed request line");
+    };
+    state.http.count_route(path);
+    match (method, path) {
+        ("GET", "/healthz") => healthz(state),
+        ("GET", "/metrics") => metrics_page(state),
+        ("POST", "/v1/infer") => infer(state, head, body),
+        ("GET", "/") => Response::text(
+            200,
+            "pallas-serve\n  POST /v1/infer  (LE f32 bytes or JSON array)\n  GET /metrics\n  GET /healthz",
+        ),
+        (_, "/healthz" | "/metrics" | "/") => {
+            Response::text(405, "method not allowed").with("Allow", "GET".into())
+        }
+        (_, "/v1/infer") => Response::text(405, "method not allowed").with("Allow", "POST".into()),
+        _ => Response::text(404, "unknown route"),
+    }
+}
+
+fn healthz(state: &ServerState) -> Response {
+    let m = &state.metrics;
+    let mut o = std::collections::BTreeMap::new();
+    let status = if m.draining() { "draining" } else { "ok" };
+    o.insert("status".to_string(), Json::Str(status.to_string()));
+    o.insert("draining".to_string(), Json::Bool(m.draining()));
+    o.insert("plan_id".to_string(), Json::Str(state.plan.id_hex.clone()));
+    o.insert("shards".to_string(), Json::Num(state.plan.shards as f64));
+    o.insert("kernel".to_string(), Json::Str(state.plan.kernel.to_string()));
+    o.insert(
+        "in_shape".to_string(),
+        Json::Arr(state.plan.in_shape.iter().map(|&d| Json::Num(d as f64)).collect()),
+    );
+    o.insert("queue_depth".to_string(), Json::Num(m.queue_depth.get() as f64));
+    o.insert("inflight".to_string(), Json::Num(m.inflight() as f64));
+    o.insert("admission_budget".to_string(), Json::Num(m.budget() as f64));
+    o.insert("requests_total".to_string(), Json::Num(m.submitted.get() as f64));
+    o.insert("responses_total".to_string(), Json::Num(m.responses.get() as f64));
+    Response::new(200, "application/json", Json::Obj(o).to_string_pretty().into_bytes())
+}
+
+fn metrics_page(state: &ServerState) -> Response {
+    let mut out = String::with_capacity(8 << 10);
+    state.metrics.render_prometheus(&mut out);
+    state.http.render(&mut out);
+    state.plan.render(&mut out);
+    Response::new(200, "text/plain; version=0.0.4", out.into_bytes())
+}
+
+/// Flatten a JSON number tree (`[...]`, nested arrays, or `{"data": ...}`)
+/// into f32s.
+fn flatten_numbers(j: &Json, out: &mut Vec<f32>) -> bool {
+    match j {
+        Json::Num(n) => {
+            out.push(*n as f32);
+            true
+        }
+        Json::Arr(items) => items.iter().all(|it| flatten_numbers(it, out)),
+        Json::Obj(_) => match j.get("data") {
+            Some(inner) => flatten_numbers(inner, out),
+            None => false,
+        },
+        _ => false,
+    }
+}
+
+fn infer(state: &ServerState, head: &MsgHead, body: Vec<u8>) -> Response {
+    if let Some(tok) = &state.cfg.auth_token {
+        let want = format!("Bearer {tok}");
+        if head.header("authorization") != Some(want.as_str()) {
+            return Response::text(401, "missing or invalid bearer token")
+                .with("WWW-Authenticate", "Bearer".into());
+        }
+    }
+    let per = state.plan.per;
+    let ctype = head.header("content-type").unwrap_or("");
+    let floats: Vec<f32> = if ctype.contains("json") {
+        let Ok(text) = std::str::from_utf8(&body) else {
+            return Response::text(400, "JSON body is not UTF-8");
+        };
+        let Ok(j) = Json::parse(text) else {
+            return Response::text(400, "invalid JSON body");
+        };
+        let mut f = Vec::with_capacity(per);
+        if !flatten_numbers(&j, &mut f) {
+            return Response::text(400, "JSON body must be an array of numbers");
+        }
+        f
+    } else {
+        if body.len() != per * 4 {
+            return Response::text(
+                400,
+                &format!(
+                    "body must be {} little-endian f32 bytes ({} values), got {}",
+                    per * 4,
+                    per,
+                    body.len()
+                ),
+            );
+        }
+        body.chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect()
+    };
+    if floats.len() != per {
+        return Response::text(400, &format!("expected {per} values, got {}", floats.len()));
+    }
+    let img = Tensor::from_vec(&state.plan.in_shape, floats);
+    match state.handle.submit(img) {
+        Ok(rx) => match rx.recv() {
+            Ok(row) => {
+                if head.header("accept").map(|a| a.contains("json")) == Some(true) {
+                    let arr = Json::Arr(row.iter().map(|&v| Json::Num(v as f64)).collect());
+                    Response::new(200, "application/json", arr.to_string_pretty().into_bytes())
+                } else {
+                    let bytes = row.iter().flat_map(|v| v.to_le_bytes()).collect();
+                    Response::new(200, "application/octet-stream", bytes)
+                }
+            }
+            // the batch worker died between admit and respond — only
+            // possible in a shutdown race
+            Err(_) => Response::text(503, "shutting down").with("Retry-After", "2".into()),
+        },
+        Err(SubmitError::QueueFull { budget }) => {
+            Response::text(429, &format!("queue full ({budget} in flight)"))
+                .with("Retry-After", "1".into())
+        }
+        Err(SubmitError::ShuttingDown) => {
+            Response::text(503, "draining").with("Retry-After", "2".into())
+        }
+        Err(e @ SubmitError::BadShape { .. }) => Response::text(400, &e.to_string()),
+    }
+}
+
+// ---------------------------------------------------------------------
+// minimal blocking client (benches, tests, smoke tooling)
+// ---------------------------------------------------------------------
+
+/// A keep-alive HTTP/1.1 client over one `TcpStream` — just enough for
+/// the socket load generator and the integration tests.
+pub struct HttpClient {
+    stream: TcpStream,
+    carry: Vec<u8>,
+}
+
+impl HttpClient {
+    pub fn connect(addr: SocketAddr) -> std::io::Result<HttpClient> {
+        let stream = TcpStream::connect(addr)?;
+        let _ = stream.set_nodelay(true);
+        Ok(HttpClient { stream, carry: Vec::new() })
+    }
+
+    /// One round trip; returns (status code, response body).
+    pub fn request(
+        &mut self,
+        method: &str,
+        path: &str,
+        headers: &[(&str, &str)],
+        body: &[u8],
+    ) -> std::io::Result<(u16, Vec<u8>)> {
+        self.request_full(method, path, headers, body).map(|(c, _, b)| (c, b))
+    }
+
+    /// One round trip, keeping the response head (status-code tests
+    /// assert on `Retry-After` / `Allow`).
+    pub fn request_full(
+        &mut self,
+        method: &str,
+        path: &str,
+        headers: &[(&str, &str)],
+        body: &[u8],
+    ) -> std::io::Result<(u16, MsgHead, Vec<u8>)> {
+        let mut req = format!(
+            "{method} {path} HTTP/1.1\r\nHost: pallas\r\nContent-Length: {}\r\n",
+            body.len()
+        );
+        for (k, v) in headers {
+            req.push_str(k);
+            req.push_str(": ");
+            req.push_str(v);
+            req.push_str("\r\n");
+        }
+        req.push_str("\r\n");
+        self.stream.write_all(req.as_bytes())?;
+        self.stream.write_all(body)?;
+        self.stream.flush()?;
+        let msg = read_message(&mut self.stream, &mut self.carry, 64 << 10, 64 << 20)
+            .map_err(|e| std::io::Error::new(ErrorKind::InvalidData, format!("{e:?}")))?;
+        let (head, rbody) = msg.ok_or_else(|| {
+            std::io::Error::new(ErrorKind::UnexpectedEof, "connection closed")
+        })?;
+        let code = head
+            .line
+            .split_whitespace()
+            .nth(1)
+            .and_then(|c| c.parse().ok())
+            .ok_or_else(|| std::io::Error::new(ErrorKind::InvalidData, "bad status line"))?;
+        Ok((code, head, rbody))
+    }
+}
+
+/// Serialize one [C,H,W] image to the `/v1/infer` binary body format.
+pub fn infer_body(img: &Tensor) -> Vec<u8> {
+    img.data.iter().flat_map(|v| v.to_le_bytes()).collect()
+}
+
+/// Open-loop load generator over the socket: `connections` keep-alive
+/// clients drain a shared job queue fed at `rate_per_sec` — end-to-end
+/// latency (serialize, socket, parse, admission, batcher, shard,
+/// response) measured from each request's *scheduled* dispatch time, so
+/// client-side queueing counts, as open loop demands. Returns
+/// (latencies of 200s in ms, rejected count: 429/503/non-200).
+pub fn http_offered_load_latencies(
+    addr: SocketAddr,
+    bodies: &[Vec<u8>],
+    n_requests: usize,
+    rate_per_sec: f64,
+    connections: usize,
+) -> (Vec<f64>, usize) {
+    assert!(!bodies.is_empty() && rate_per_sec > 0.0 && connections >= 1);
+    let (jtx, jrx) = mpsc::channel::<(Instant, usize)>();
+    let jrx = Arc::new(Mutex::new(jrx));
+    std::thread::scope(|s| {
+        let workers: Vec<_> = (0..connections)
+            .map(|_| {
+                let jrx = Arc::clone(&jrx);
+                s.spawn(move || {
+                    let Ok(mut cli) = HttpClient::connect(addr) else {
+                        return (Vec::new(), 0usize);
+                    };
+                    let hdr = [("Content-Type", "application/octet-stream")];
+                    let mut lat = Vec::new();
+                    let mut rejected = 0usize;
+                    loop {
+                        let job = jrx.lock().expect("job queue lock").recv();
+                        let Ok((t0, idx)) = job else { break };
+                        match cli.request("POST", "/v1/infer", &hdr, &bodies[idx]) {
+                            Ok((200, _)) => lat.push(t0.elapsed().as_secs_f64() * 1e3),
+                            Ok(_) => rejected += 1,
+                            Err(_) => break,
+                        }
+                    }
+                    (lat, rejected)
+                })
+            })
+            .collect();
+        let interval = Duration::from_secs_f64(1.0 / rate_per_sec);
+        let start = Instant::now();
+        for i in 0..n_requests {
+            let target = start + interval.mul_f64(i as f64);
+            let now = Instant::now();
+            if target > now {
+                std::thread::sleep(target - now);
+            }
+            let _ = jtx.send((Instant::now(), i % bodies.len()));
+        }
+        drop(jtx);
+        let mut all = Vec::new();
+        let mut rejected = 0usize;
+        for w in workers {
+            let (l, r) = w.join().unwrap_or_default();
+            all.extend(l);
+            rejected += r;
+        }
+        (all, rejected)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A reader that hands out at most `chunk` bytes per read — the
+    /// partial-read torture harness for the parser.
+    struct Dribble<'a> {
+        data: &'a [u8],
+        pos: usize,
+        chunk: usize,
+    }
+
+    impl Read for Dribble<'_> {
+        fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+            let n = self.chunk.min(self.data.len() - self.pos).min(buf.len());
+            buf[..n].copy_from_slice(&self.data[self.pos..self.pos + n]);
+            self.pos += n;
+            Ok(n)
+        }
+    }
+
+    fn read_all(data: &[u8], chunk: usize) -> Result<Option<(MsgHead, Vec<u8>)>, HttpError> {
+        let mut r = Dribble { data, pos: 0, chunk };
+        let mut carry = Vec::new();
+        read_message(&mut r, &mut carry, 8 << 10, 1 << 20)
+    }
+
+    #[test]
+    fn parses_simple_get() {
+        let raw = b"GET /healthz HTTP/1.1\r\nHost: x\r\nAccept: */*\r\n\r\n";
+        let (head, body) = read_all(raw, 8192).unwrap().unwrap();
+        let (m, p, v) = parse_request_line(&head.line).unwrap();
+        assert_eq!((m, p, v), ("GET", "/healthz", "HTTP/1.1"));
+        assert_eq!(head.header("host"), Some("x"));
+        assert!(body.is_empty());
+    }
+
+    #[test]
+    fn parses_across_partial_reads() {
+        let raw = b"POST /v1/infer HTTP/1.1\r\nContent-Length: 8\r\nContent-Type: application/octet-stream\r\n\r\nabcdefgh";
+        for chunk in [1usize, 2, 3, 7, 64] {
+            let (head, body) = read_all(raw, chunk).unwrap().unwrap();
+            let (m, p, _) = parse_request_line(&head.line).unwrap();
+            assert_eq!((m, p), ("POST", "/v1/infer"), "chunk={chunk}");
+            assert_eq!(body, b"abcdefgh", "chunk={chunk}");
+        }
+    }
+
+    #[test]
+    fn keep_alive_carry_resumes_pipelined_messages() {
+        let raw = b"GET /a HTTP/1.1\r\n\r\nGET /b HTTP/1.1\r\nContent-Length: 2\r\n\r\nhi";
+        let mut r = Dribble { data: raw, pos: 0, chunk: 5 };
+        let mut carry = Vec::new();
+        let (h1, b1) = read_message(&mut r, &mut carry, 8192, 1024).unwrap().unwrap();
+        assert_eq!(parse_request_line(&h1.line).unwrap().1, "/a");
+        assert!(b1.is_empty());
+        let (h2, b2) = read_message(&mut r, &mut carry, 8192, 1024).unwrap().unwrap();
+        assert_eq!(parse_request_line(&h2.line).unwrap().1, "/b");
+        assert_eq!(b2, b"hi");
+        assert!(read_message(&mut r, &mut carry, 8192, 1024).unwrap().is_none());
+    }
+
+    #[test]
+    fn malformed_request_lines_rejected() {
+        for line in ["GARBAGE", "GET /x", "GET /x SPDY/3", "GET /x HTTP/1.1 extra"] {
+            assert!(
+                parse_request_line(line).is_err(),
+                "'{line}' should not parse"
+            );
+        }
+        // header without a colon
+        let raw = b"GET / HTTP/1.1\r\nbroken header line\r\n\r\n";
+        assert!(matches!(read_all(raw, 8192), Err(HttpError::Malformed(_))));
+    }
+
+    #[test]
+    fn oversized_body_is_413() {
+        let raw = b"POST / HTTP/1.1\r\nContent-Length: 9999999\r\n\r\n";
+        let mut r = Dribble { data: raw, pos: 0, chunk: 64 };
+        let mut carry = Vec::new();
+        let err = read_message(&mut r, &mut carry, 8192, 1024).unwrap_err();
+        assert_eq!(err, HttpError::BodyTooLarge { len: 9999999 });
+        assert_eq!(err.status(), 413);
+    }
+
+    #[test]
+    fn truncated_body_is_eof() {
+        // declares 10 bytes, peer sends 4 then closes
+        let raw = b"POST / HTTP/1.1\r\nContent-Length: 10\r\n\r\nabcd";
+        assert_eq!(read_all(raw, 3).unwrap_err(), HttpError::Eof);
+    }
+
+    #[test]
+    fn huge_head_is_431() {
+        let mut raw = b"GET / HTTP/1.1\r\n".to_vec();
+        raw.extend(vec![b'x'; 9000]);
+        let mut r = Dribble { data: &raw, pos: 0, chunk: 512 };
+        let mut carry = Vec::new();
+        let err = read_message(&mut r, &mut carry, 8192, 1024).unwrap_err();
+        assert_eq!(err, HttpError::HeadTooLarge);
+        assert_eq!(err.status(), 431);
+    }
+
+    #[test]
+    fn json_body_flattening() {
+        let mut out = Vec::new();
+        let j = Json::parse("[1, [2, 3], 4]").unwrap();
+        assert!(flatten_numbers(&j, &mut out));
+        assert_eq!(out, vec![1.0, 2.0, 3.0, 4.0]);
+        let j = Json::parse("{\"data\": [5, 6]}").unwrap();
+        let mut out = Vec::new();
+        assert!(flatten_numbers(&j, &mut out));
+        assert_eq!(out, vec![5.0, 6.0]);
+        let j = Json::parse("[1, \"x\"]").unwrap();
+        assert!(!flatten_numbers(&j, &mut Vec::new()));
+    }
+}

@@ -20,7 +20,15 @@
 //! 3. **serve** ([`batch`]): a [`Batcher`] coalesces single-image requests
 //!    into batched forwards under a max-batch / max-wait policy, sharded
 //!    across `shards` engines that share one read-only plan
-//!    ([`ServeEngine::fork`]) with per-shard scratch.
+//!    ([`ServeEngine::fork`]) with per-shard scratch. Admission is
+//!    bounded ([`SubmitError`]): past `depth_budget × shards` in-flight
+//!    requests a submit fails instead of growing the queue.
+//! 4. **expose** ([`http`], [`telemetry`]): `adaround serve --listen`
+//!    puts a zero-dependency HTTP/1.1 front-end over the batcher —
+//!    `POST /v1/infer`, Prometheus `GET /metrics`, `GET /healthz` —
+//!    with lock-free counters/histograms ([`ServeMetrics`]) recorded off
+//!    the hot path and a graceful drain on SIGTERM/ctrl-c that answers
+//!    every in-flight request before exiting.
 //!
 //! Accuracy contract: the integer engine mirrors the f32 fake-quant
 //! simulation up to requantization rounding (argmax parity on the test
@@ -94,13 +102,18 @@
 
 pub mod batch;
 pub mod engine;
+pub mod http;
 pub mod ikernels;
 pub mod plan;
+pub mod telemetry;
 
 pub use batch::{
     offered_load_latencies, saturation_throughput, Batcher, BatcherHandle, BatchPolicy,
+    SubmitError,
 };
 pub use engine::ServeEngine;
+pub use http::{http_offered_load_latencies, infer_body, HttpClient, HttpConfig, HttpServer};
+pub use telemetry::ServeMetrics;
 pub use plan::{
     compile_plan, compile_plan_with, ActQ, ConvW, DenseW, PlanOptions, QuantizedPlan, Requant,
 };

@@ -295,6 +295,53 @@ impl QuantizedPlan {
             .sum()
     }
 
+    /// Stable identity of the compiled program: FNV-1a over the input
+    /// geometry, node ids, weight dtypes and every packed weight byte.
+    /// Two plans agree iff they run the same integer program, so this is
+    /// the "which model generation is live" answer `/healthz` reports.
+    /// O(weight bytes) — compute once and cache, not per request.
+    pub fn plan_id(&self) -> u64 {
+        const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+        const PRIME: u64 = 0x0000_0100_0000_01b3;
+        fn eat(mut h: u64, bytes: &[u8]) -> u64 {
+            for &b in bytes {
+                h = (h ^ b as u64).wrapping_mul(PRIME);
+            }
+            h
+        }
+        fn eat_i8(mut h: u64, data: &[i8]) -> u64 {
+            for &b in data {
+                h = (h ^ b as u8 as u64).wrapping_mul(PRIME);
+            }
+            h
+        }
+        let mut h = OFFSET;
+        for &d in &self.in_shape {
+            h = eat(h, &(d as u64).to_le_bytes());
+        }
+        for n in &self.nodes {
+            h = eat(h, n.id.as_bytes());
+            match &n.op {
+                PlanOp::Conv { w, .. } => {
+                    h = eat(h, w.dtype().as_bytes());
+                    h = match w {
+                        ConvW::W8(p) => eat_i8(h, &p.data),
+                        ConvW::W4(p) => eat_i8(h, &p.data),
+                    };
+                }
+                PlanOp::Dense { w, .. } => {
+                    h = eat(h, w.dtype().as_bytes());
+                    h = match w {
+                        DenseW::W8(p) => eat_i8(h, &p.data),
+                        DenseW::W4(p) => eat_i8(h, &p.data),
+                    };
+                }
+                _ => {}
+            }
+        }
+        h
+    }
+
     /// `(node id, "w8" | "w4")` for every weight-bearing op, in plan
     /// order — recorded by `serve-bench` alongside the latency entries.
     pub fn op_dtypes(&self) -> Vec<(String, &'static str)> {

@@ -1,0 +1,413 @@
+//! Live serving telemetry: lock-free counters, gauges and fixed-bucket
+//! histograms threaded through the [`super::Batcher`] off the hot path,
+//! rendered as Prometheus text by the HTTP front-end ([`super::http`]).
+//!
+//! Every instrument is a plain atomic — one `fetch_add` per event, no
+//! locks, no allocation after construction — so recording a batch or a
+//! response costs a few nanoseconds next to a forward that costs
+//! micro-to-milliseconds. Histograms use fixed bucket bounds chosen at
+//! construction (powers of two for batch fill, log-spaced seconds for
+//! service time); observations land in the first bucket whose upper
+//! bound covers the value, and the running sum is kept in scaled integer
+//! units so integer-valued histograms (batch fill) stay *exact* — the
+//! integration tests assert `pallas_batch_fill_sum` equals the ground
+//! truth request count, bit for bit.
+//!
+//! [`ServeMetrics`] also owns the admission state: the in-flight gauge
+//! doubles as the bounded-admission counter ([`ServeMetrics::try_admit`]
+//! is a CAS loop against the depth budget) and the draining flag is the
+//! single source of truth the batcher, the HTTP layer and `/healthz` all
+//! read. Metric names are part of the public contract — the full
+//! reference table lives in `docs/SERVING.md`.
+
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering};
+
+use crate::util::stats::histogram_quantile;
+
+/// Monotonic event counter (Prometheus `counter`).
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Instantaneous level (Prometheus `gauge`).
+#[derive(Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn dec(&self) {
+        self.0.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Fixed-bucket histogram: `bounds.len() + 1` atomic bucket counters
+/// (the last is the overflow bucket) plus a running sum in integer units
+/// of `1/scale` — `scale = 1.0` makes integer-valued observations exact,
+/// `scale = 1e6` keeps seconds at microsecond resolution.
+pub struct Histogram {
+    bounds: Vec<f64>,
+    counts: Vec<AtomicU64>,
+    sum_scaled: AtomicU64,
+    scale: f64,
+}
+
+impl Histogram {
+    pub fn new(bounds: &[f64], scale: f64) -> Histogram {
+        assert!(!bounds.is_empty() && scale > 0.0);
+        assert!(bounds.windows(2).all(|w| w[0] < w[1]), "bounds must increase");
+        Histogram {
+            bounds: bounds.to_vec(),
+            counts: (0..=bounds.len()).map(|_| AtomicU64::new(0)).collect(),
+            sum_scaled: AtomicU64::new(0),
+            scale,
+        }
+    }
+
+    pub fn observe(&self, v: f64) {
+        let i = self
+            .bounds
+            .iter()
+            .position(|&b| v <= b)
+            .unwrap_or(self.bounds.len());
+        self.counts[i].fetch_add(1, Ordering::Relaxed);
+        self.sum_scaled
+            .fetch_add((v * self.scale).round().max(0.0) as u64, Ordering::Relaxed);
+    }
+
+    /// Total observation count.
+    pub fn count(&self) -> u64 {
+        self.counts.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Sum of observations (exact when `scale` matches their granularity).
+    pub fn sum(&self) -> f64 {
+        self.sum_scaled.load(Ordering::Relaxed) as f64 / self.scale
+    }
+
+    /// Per-bucket counts, overflow bucket last.
+    pub fn snapshot(&self) -> Vec<u64> {
+        self.counts.iter().map(|c| c.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Estimated q-quantile (q in 0..=1) by linear interpolation within
+    /// the covering bucket; NaN while empty.
+    pub fn quantile(&self, q: f64) -> f64 {
+        histogram_quantile(&self.bounds, &self.snapshot(), q)
+    }
+
+    /// Render in Prometheus histogram exposition format (cumulative
+    /// `_bucket{le=...}` series plus `_sum` and `_count`).
+    pub fn render(&self, name: &str, help: &str, out: &mut String) {
+        let snap = self.snapshot();
+        let _ = writeln!(out, "# HELP {name} {help}");
+        let _ = writeln!(out, "# TYPE {name} histogram");
+        let mut cum = 0u64;
+        for (i, &b) in self.bounds.iter().enumerate() {
+            cum += snap[i];
+            let _ = writeln!(out, "{name}_bucket{{le=\"{b}\"}} {cum}");
+        }
+        cum += snap[self.bounds.len()];
+        let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {cum}");
+        let _ = writeln!(out, "{name}_sum {}", self.sum());
+        let _ = writeln!(out, "{name}_count {cum}");
+    }
+}
+
+/// Per-shard serving counters (the queue itself is shared — see
+/// `docs/SERVING.md` for what "per shard" means under the shared-queue
+/// batcher design).
+#[derive(Default)]
+pub struct ShardStats {
+    /// batches this shard has computed
+    pub batches: Counter,
+    /// images this shard has computed
+    pub images: Counter,
+    /// 1 while the shard is inside an engine forward
+    pub busy: Gauge,
+}
+
+/// All live serving instruments, shared (`Arc`) between the batcher, its
+/// shard workers, every [`super::BatcherHandle`] and the HTTP front-end.
+pub struct ServeMetrics {
+    /// infer requests admitted into the queue
+    pub submitted: Counter,
+    /// responses delivered back to requesters
+    pub responses: Counter,
+    /// rejections at admission: in-flight depth at budget
+    pub rejected_full: Counter,
+    /// rejections at admission: batcher draining / shut down
+    pub rejected_draining: Counter,
+    /// rejections at admission: image geometry mismatch
+    pub rejected_shape: Counter,
+    /// requests sitting in the shared queue (admitted, not yet collected
+    /// into a batch)
+    pub queue_depth: Gauge,
+    /// batch sizes at launch; `sum` == images served, `count` == batches
+    pub batch_fill: Histogram,
+    /// submit-to-response seconds (queue wait + batching wait + forward)
+    pub service_time: Histogram,
+    pub shards: Vec<ShardStats>,
+    /// admitted requests whose response has not been sent yet — the
+    /// bounded-admission counter
+    inflight: AtomicU64,
+    /// admission budget: max in-flight requests (depth_budget × shards)
+    budget: u64,
+    /// set once at drain start; never cleared
+    draining: AtomicBool,
+}
+
+/// Batch-fill bucket upper bounds (powers of two up to the largest
+/// `max_batch` anyone configures in practice).
+pub const BATCH_FILL_BOUNDS: [f64; 8] = [1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0];
+
+/// Service-time bucket upper bounds in seconds, log-spaced 0.5ms..5s.
+pub const SERVICE_TIME_BOUNDS: [f64; 13] = [
+    0.0005, 0.001, 0.002, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0,
+];
+
+impl ServeMetrics {
+    pub fn new(shards: usize, budget: usize) -> ServeMetrics {
+        ServeMetrics {
+            submitted: Counter::default(),
+            responses: Counter::default(),
+            rejected_full: Counter::default(),
+            rejected_draining: Counter::default(),
+            rejected_shape: Counter::default(),
+            queue_depth: Gauge::default(),
+            batch_fill: Histogram::new(&BATCH_FILL_BOUNDS, 1.0),
+            service_time: Histogram::new(&SERVICE_TIME_BOUNDS, 1e6),
+            shards: (0..shards).map(|_| ShardStats::default()).collect(),
+            inflight: AtomicU64::new(0),
+            budget: budget as u64,
+            draining: AtomicBool::new(false),
+        }
+    }
+
+    /// Try to take one admission slot; `false` means the in-flight depth
+    /// is at budget (the caller maps this to 429). Lock-free CAS loop.
+    pub fn try_admit(&self) -> bool {
+        let mut cur = self.inflight.load(Ordering::Relaxed);
+        loop {
+            if cur >= self.budget {
+                return false;
+            }
+            match self.inflight.compare_exchange_weak(
+                cur,
+                cur + 1,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return true,
+                Err(c) => cur = c,
+            }
+        }
+    }
+
+    /// Release one admission slot (response sent, or submit failed after
+    /// admission).
+    pub fn release_admission(&self) {
+        self.inflight.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    pub fn inflight(&self) -> u64 {
+        self.inflight.load(Ordering::Relaxed)
+    }
+
+    pub fn budget(&self) -> u64 {
+        self.budget
+    }
+
+    /// Flip the drain flag: every subsequent submit is rejected with
+    /// `ShuttingDown`; in-flight requests are unaffected.
+    pub fn begin_drain(&self) {
+        self.draining.store(true, Ordering::SeqCst);
+    }
+
+    pub fn draining(&self) -> bool {
+        self.draining.load(Ordering::SeqCst)
+    }
+
+    /// Render every batcher-level instrument in Prometheus text format.
+    /// The HTTP front-end appends its own route/status counters and plan
+    /// info lines after this block.
+    pub fn render_prometheus(&self, out: &mut String) {
+        let counter = |out: &mut String, name: &str, help: &str, v: u64| {
+            let _ = writeln!(out, "# HELP {name} {help}");
+            let _ = writeln!(out, "# TYPE {name} counter");
+            let _ = writeln!(out, "{name} {v}");
+        };
+        let gauge = |out: &mut String, name: &str, help: &str, v: i64| {
+            let _ = writeln!(out, "# HELP {name} {help}");
+            let _ = writeln!(out, "# TYPE {name} gauge");
+            let _ = writeln!(out, "{name} {v}");
+        };
+        let submitted = self.submitted.get();
+        let responses = self.responses.get();
+        counter(out, "pallas_infer_requests_total", "infer requests admitted", submitted);
+        counter(out, "pallas_infer_responses_total", "infer responses delivered", responses);
+        let _ = writeln!(
+            out,
+            "# HELP pallas_infer_rejected_total infer requests rejected at admission"
+        );
+        let _ = writeln!(out, "# TYPE pallas_infer_rejected_total counter");
+        for (reason, c) in [
+            ("queue_full", &self.rejected_full),
+            ("draining", &self.rejected_draining),
+            ("bad_shape", &self.rejected_shape),
+        ] {
+            let _ = writeln!(out, "pallas_infer_rejected_total{{reason=\"{reason}\"}} {}", c.get());
+        }
+        let depth = self.queue_depth.get();
+        let inflight = self.inflight() as i64;
+        gauge(out, "pallas_queue_depth", "requests waiting in the shared queue", depth);
+        gauge(out, "pallas_inflight_requests", "admitted requests not yet answered", inflight);
+        let budget = self.budget as i64;
+        let draining = i64::from(self.draining());
+        gauge(out, "pallas_admission_budget", "max in-flight requests before 429", budget);
+        gauge(out, "pallas_draining", "1 once graceful drain has begun", draining);
+        for (name, help, pick) in [
+            ("pallas_shard_batches_total", "batches computed", 0usize),
+            ("pallas_shard_images_total", "images computed", 1),
+        ] {
+            let _ = writeln!(out, "# HELP {name} {help} by this shard");
+            let _ = writeln!(out, "# TYPE {name} counter");
+            for (i, s) in self.shards.iter().enumerate() {
+                let v = if pick == 0 { s.batches.get() } else { s.images.get() };
+                let _ = writeln!(out, "{name}{{shard=\"{i}\"}} {v}");
+            }
+        }
+        let _ = writeln!(out, "# HELP pallas_shard_busy 1 while the shard is inside a forward");
+        let _ = writeln!(out, "# TYPE pallas_shard_busy gauge");
+        for (i, s) in self.shards.iter().enumerate() {
+            let _ = writeln!(out, "pallas_shard_busy{{shard=\"{i}\"}} {}", s.busy.get());
+        }
+        self.batch_fill
+            .render("pallas_batch_fill", "images per launched batch", out);
+        self.service_time.render(
+            "pallas_service_time_seconds",
+            "submit-to-response latency in seconds",
+            out,
+        );
+        for (q, name) in [
+            (0.5, "pallas_service_time_seconds_p50"),
+            (0.99, "pallas_service_time_seconds_p99"),
+        ] {
+            let v = self.service_time.quantile(q);
+            let v = if v.is_nan() { 0.0 } else { v };
+            gauge_f(out, name, "estimated from the service-time histogram", v);
+        }
+    }
+}
+
+fn gauge_f(out: &mut String, name: &str, help: &str, v: f64) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} gauge");
+    let _ = writeln!(out, "{name} {v}");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge() {
+        let c = Counter::default();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        let g = Gauge::default();
+        g.inc();
+        g.inc();
+        g.dec();
+        assert_eq!(g.get(), 1);
+        g.set(-3);
+        assert_eq!(g.get(), -3);
+    }
+
+    #[test]
+    fn histogram_exact_integer_sum() {
+        let h = Histogram::new(&[1.0, 2.0, 4.0], 1.0);
+        for v in [1.0, 1.0, 2.0, 3.0, 9.0] {
+            h.observe(v);
+        }
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.sum(), 16.0); // exact at scale 1
+        assert_eq!(h.snapshot(), vec![2, 1, 1, 1]); // overflow bucket last
+    }
+
+    #[test]
+    fn histogram_renders_cumulative_buckets() {
+        let h = Histogram::new(&[1.0, 2.0], 1.0);
+        h.observe(1.0);
+        h.observe(2.0);
+        h.observe(5.0);
+        let mut s = String::new();
+        h.render("x", "help", &mut s);
+        assert!(s.contains("x_bucket{le=\"1\"} 1"));
+        assert!(s.contains("x_bucket{le=\"2\"} 2"));
+        assert!(s.contains("x_bucket{le=\"+Inf\"} 3"));
+        assert!(s.contains("x_sum 4"));
+        assert!(s.contains("x_count 3"));
+    }
+
+    #[test]
+    fn admission_budget_is_a_hard_cap() {
+        let m = ServeMetrics::new(2, 3);
+        assert!(m.try_admit() && m.try_admit() && m.try_admit());
+        assert!(!m.try_admit(), "budget 3 must reject the 4th admission");
+        m.release_admission();
+        assert!(m.try_admit());
+        assert_eq!(m.inflight(), 3);
+    }
+
+    #[test]
+    fn drain_flag_latches() {
+        let m = ServeMetrics::new(1, 1);
+        assert!(!m.draining());
+        m.begin_drain();
+        assert!(m.draining());
+    }
+
+    #[test]
+    fn prometheus_render_contains_core_series() {
+        let m = ServeMetrics::new(2, 8);
+        m.submitted.inc();
+        m.batch_fill.observe(1.0);
+        let mut s = String::new();
+        m.render_prometheus(&mut s);
+        for needle in [
+            "pallas_infer_requests_total 1",
+            "pallas_infer_rejected_total{reason=\"queue_full\"} 0",
+            "pallas_admission_budget 8",
+            "pallas_shard_batches_total{shard=\"1\"} 0",
+            "pallas_batch_fill_sum 1",
+        ] {
+            assert!(s.contains(needle), "missing {needle} in:\n{s}");
+        }
+    }
+}

@@ -61,6 +61,40 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
     v[k.min(v.len() - 1)]
 }
 
+/// Estimated q-quantile (q in 0..=1) of a fixed-bucket histogram:
+/// `bounds` are increasing bucket upper bounds, `counts` the per-bucket
+/// observation counts with the overflow bucket last
+/// (`counts.len() == bounds.len() + 1`). Linear interpolation within the
+/// covering bucket (the Prometheus `histogram_quantile` convention);
+/// observations past the last bound clamp to it. NaN for an empty
+/// histogram — the serving telemetry layer's p50/p99 estimator.
+pub fn histogram_quantile(bounds: &[f64], counts: &[u64], q: f64) -> f64 {
+    assert_eq!(counts.len(), bounds.len() + 1, "need an overflow bucket");
+    assert!((0.0..=1.0).contains(&q));
+    let total: u64 = counts.iter().sum();
+    if total == 0 {
+        return f64::NAN;
+    }
+    // rank of the target observation, 1-based, at least 1
+    let rank = ((q * total as f64).ceil() as u64).max(1);
+    let mut cum = 0u64;
+    for (i, &c) in counts.iter().enumerate() {
+        if c == 0 {
+            continue;
+        }
+        if cum + c >= rank {
+            if i == bounds.len() {
+                return bounds[bounds.len() - 1]; // overflow: clamp
+            }
+            let lower = if i == 0 { 0.0 } else { bounds[i - 1] };
+            let frac = (rank - cum) as f64 / c as f64;
+            return lower + (bounds[i] - lower) * frac;
+        }
+        cum += c;
+    }
+    bounds[bounds.len() - 1]
+}
+
 /// Format "mean±std" the way the paper's tables do.
 pub fn fmt_mean_std(xs: &[f64]) -> String {
     if xs.len() == 1 {
@@ -95,6 +129,30 @@ mod tests {
         let xs = [1.0, 2.0, 3.0, 4.0];
         let ys = [1.0, 10.0, 100.0, 1000.0]; // nonlinear but monotone
         assert!((spearman(&xs, &ys) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_quantile_interpolates() {
+        // buckets (0,1], (1,2], (2,4], overflow
+        let bounds = [1.0, 2.0, 4.0];
+        // 10 obs in (0,1], 10 in (1,2]
+        let counts = [10u64, 10, 0, 0];
+        assert!((histogram_quantile(&bounds, &counts, 0.5) - 1.0).abs() < 1e-12);
+        assert!((histogram_quantile(&bounds, &counts, 0.75) - 1.5).abs() < 1e-12);
+        // everything in one bucket: interpolate from its lower edge
+        let one = [0u64, 4, 0, 0];
+        assert!((histogram_quantile(&bounds, &one, 0.5) - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_quantile_edges() {
+        let bounds = [1.0, 2.0];
+        assert!(histogram_quantile(&bounds, &[0, 0, 0], 0.5).is_nan());
+        // overflow observations clamp to the last finite bound
+        assert_eq!(histogram_quantile(&bounds, &[0, 0, 5], 0.99), 2.0);
+        // q=0 still returns the first occupied bucket's estimate
+        let counts = [3u64, 0, 0];
+        assert!(histogram_quantile(&bounds, &counts, 0.0) > 0.0);
     }
 
     #[test]

@@ -1,0 +1,353 @@
+//! The HTTP front-end's observable contract, over real loopback sockets:
+//! `/metrics` values must equal ground truth (request counts, batch-fill
+//! sum), bounded admission must demonstrably fire 429 under saturating
+//! load while accepted requests keep a bounded p99, and a graceful drain
+//! must answer every admitted in-flight request. Self-contained
+//! (synthetic model + data; no `make artifacts`).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Duration;
+
+use adaround::coordinator::{Method, Pipeline, PipelineConfig, QuantizedModel};
+use adaround::data::synthetic_stripes;
+use adaround::nn::Model;
+use adaround::serve::{
+    infer_body, BatchPolicy, Batcher, HttpClient, HttpConfig, HttpServer, ServeEngine,
+};
+use adaround::tensor::Tensor;
+use adaround::util::{Json, Rng};
+
+/// Tiny conv classifier (same shape as the pool-serving suite).
+fn tiny_model(rng: &mut Rng) -> Model {
+    let ir = r#"{"task":"cls","ir":[
+      {"id":"in","op":"input","inputs":[]},
+      {"id":"c1","op":"conv","inputs":["in"],"cin":3,"cout":8,
+       "k":3,"stride":1,"pad":1,"groups":1,"relu":true},
+      {"id":"g1","op":"gpool","inputs":["c1"]},
+      {"id":"d1","op":"dense","inputs":["g1"],"cin":8,"cout":3,"relu":false}
+    ]}"#;
+    let entry = Json::parse(ir).unwrap();
+    let mut w = BTreeMap::new();
+    let mut tensor = |shape: &[usize], std: f32, rng: &mut Rng| {
+        let n: usize = shape.iter().product();
+        Tensor::from_vec(shape, (0..n).map(|_| rng.normal_f32(0.0, std)).collect())
+    };
+    w.insert("c1.w".into(), tensor(&[8, 3, 3, 3], 0.25, rng));
+    w.insert("c1.b".into(), tensor(&[8], 0.05, rng));
+    w.insert("d1.w".into(), tensor(&[3, 8], 0.4, rng));
+    w.insert("d1.b".into(), tensor(&[3], 0.05, rng));
+    Model::from_manifest("httpserve", &entry, w).unwrap()
+}
+
+fn quantize_8_8(model: &Model, calib: &Tensor) -> QuantizedModel {
+    let cfg = PipelineConfig {
+        method: Method::Nearest,
+        bits: 8,
+        per_channel: true,
+        act_bits: Some(8),
+        calib_n: calib.shape[0],
+        ..Default::default()
+    };
+    Pipeline::new(model, cfg, None).quantize(calib, &mut Rng::new(7)).unwrap()
+}
+
+fn images_of(x: &Tensor) -> Vec<Tensor> {
+    let per: usize = x.shape[1..].iter().product();
+    (0..x.shape[0])
+        .map(|i| Tensor::from_vec(&x.shape[1..], x.data[i * per..(i + 1) * per].to_vec()))
+        .collect()
+}
+
+/// Build (model, qm, oracle rows per pool image, images).
+fn fixture(seed: u64) -> (Model, QuantizedModel, Vec<Vec<f32>>, Vec<Tensor>) {
+    let mut rng = Rng::new(seed);
+    let model = tiny_model(&mut rng);
+    let (calib, _) = synthetic_stripes(32, 3, 16, &mut rng);
+    let (val, _) = synthetic_stripes(8, 3, 16, &mut rng);
+    let qm = quantize_8_8(&model, &calib);
+    let images = images_of(&val);
+    let mut oracle_engine = ServeEngine::compile(&model, &qm, &[3, 16, 16]).unwrap();
+    let oracle: Vec<Vec<f32>> = images
+        .iter()
+        .map(|img| {
+            let mut shape = vec![1usize];
+            shape.extend_from_slice(&img.shape);
+            oracle_engine.forward(&Tensor::from_vec(&shape, img.data.clone())).data
+        })
+        .collect();
+    (model, qm, oracle, images)
+}
+
+fn bind_server(
+    model: &Model,
+    qm: &QuantizedModel,
+    policy: BatchPolicy,
+    cfg: HttpConfig,
+) -> HttpServer {
+    let engine = ServeEngine::compile(model, qm, &[3, 16, 16]).unwrap();
+    HttpServer::bind(Batcher::new(engine, policy), "127.0.0.1:0", cfg).unwrap()
+}
+
+/// Value of an exact metric line ("name v" or "name{labels} v").
+fn metric(text: &str, series: &str) -> f64 {
+    text.lines()
+        .find(|l| {
+            l.starts_with(series) && l.as_bytes().get(series.len()) == Some(&b' ')
+        })
+        .and_then(|l| l.split_whitespace().nth(1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or_else(|| panic!("series '{series}' not found in:\n{text}"))
+}
+
+fn le_f32(bytes: &[u8]) -> Vec<f32> {
+    bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect()
+}
+
+#[test]
+fn metrics_match_ground_truth_request_count() {
+    let (model, qm, oracle, images) = fixture(1001);
+    let server = bind_server(
+        &model,
+        &qm,
+        BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1), ..Default::default() },
+        HttpConfig::default(),
+    );
+    let mut cli = HttpClient::connect(server.local_addr()).unwrap();
+    let k = 12usize;
+    for i in 0..k {
+        let idx = i % images.len();
+        let (code, body) = cli
+            .request("POST", "/v1/infer", &[], &infer_body(&images[idx]))
+            .unwrap();
+        assert_eq!(code, 200, "request {i}");
+        // exact bytes: response rows must match the oracle engine bit for bit
+        assert_eq!(le_f32(&body), oracle[idx], "row {i} differs from oracle");
+    }
+    let (code, body) = cli.request("GET", "/metrics", &[], &[]).unwrap();
+    assert_eq!(code, 200);
+    let text = String::from_utf8(body).unwrap();
+    // ground truth: exactly k requests were admitted, answered, and
+    // batched — the integer-sum histogram makes the last check exact
+    assert_eq!(metric(&text, "pallas_infer_requests_total"), k as f64);
+    assert_eq!(metric(&text, "pallas_infer_responses_total"), k as f64);
+    assert_eq!(metric(&text, "pallas_batch_fill_sum"), k as f64);
+    assert_eq!(metric(&text, "pallas_infer_rejected_total{reason=\"queue_full\"}"), 0.0);
+    assert_eq!(metric(&text, "pallas_inflight_requests"), 0.0);
+    assert!(metric(&text, "pallas_http_responses_total{code=\"200\"}") >= k as f64);
+    assert!(metric(&text, "pallas_service_time_seconds_count") == k as f64);
+    assert!(metric(&text, "pallas_plan_weight_bytes") > 0.0);
+    server.shutdown();
+}
+
+#[test]
+fn healthz_reports_plan_and_drain_state() {
+    let (model, qm, _, _) = fixture(1002);
+    let server = bind_server(
+        &model,
+        &qm,
+        BatchPolicy { shards: 2, ..Default::default() },
+        HttpConfig::default(),
+    );
+    let mut cli = HttpClient::connect(server.local_addr()).unwrap();
+    let (code, body) = cli.request("GET", "/healthz", &[], &[]).unwrap();
+    assert_eq!(code, 200);
+    let j = Json::parse(&String::from_utf8(body).unwrap()).unwrap();
+    assert_eq!(j.get("status").and_then(|s| s.as_str()), Some("ok"));
+    assert_eq!(j.get("shards").and_then(|s| s.as_f64()), Some(2.0));
+    let id = j.get("plan_id").and_then(|s| s.as_str()).expect("plan_id present");
+    assert_eq!(id.len(), 16, "plan id is 16 hex chars, got '{id}'");
+    server.shutdown();
+}
+
+#[test]
+fn saturating_load_fires_429_with_bounded_p99() {
+    let (model, qm, oracle, images) = fixture(1003);
+    // tiny budget + a long batching window: while a batch is collecting,
+    // in-flight depth stays at the cap, so concurrent submitters must
+    // see 429 deterministically
+    let server = bind_server(
+        &model,
+        &qm,
+        BatchPolicy {
+            max_batch: 64,
+            max_wait: Duration::from_millis(30),
+            shards: 1,
+            depth_budget: 4,
+        },
+        HttpConfig::default(),
+    );
+    let addr = server.local_addr();
+    let oks = AtomicUsize::new(0);
+    let rejected = AtomicUsize::new(0);
+    let retry_after_seen = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for c in 0..8usize {
+            let (oks, rejected, retry_after_seen) = (&oks, &rejected, &retry_after_seen);
+            let (images, oracle) = (&images, &oracle);
+            s.spawn(move || {
+                let mut cli = HttpClient::connect(addr).unwrap();
+                for i in 0..10usize {
+                    let idx = (c * 10 + i) % images.len();
+                    let (code, head, body) = cli
+                        .request_full("POST", "/v1/infer", &[], &infer_body(&images[idx]))
+                        .unwrap();
+                    match code {
+                        200 => {
+                            assert_eq!(le_f32(&body), oracle[idx], "accepted row must be exact");
+                            oks.fetch_add(1, Ordering::Relaxed);
+                        }
+                        429 => {
+                            if head.header("retry-after").is_some() {
+                                retry_after_seen.fetch_add(1, Ordering::Relaxed);
+                            }
+                            rejected.fetch_add(1, Ordering::Relaxed);
+                        }
+                        other => panic!("unexpected status {other}"),
+                    }
+                }
+            });
+        }
+    });
+    let (oks, rejected) = (oks.load(Ordering::Relaxed), rejected.load(Ordering::Relaxed));
+    assert!(rejected > 0, "8 clients against budget 4 must see 429s");
+    assert_eq!(oks + rejected, 80);
+    assert_eq!(
+        retry_after_seen.load(Ordering::Relaxed),
+        rejected,
+        "every 429 carries Retry-After"
+    );
+    // metrics agree with the client-side ground truth exactly
+    let mut cli = HttpClient::connect(addr).unwrap();
+    let (_, body) = cli.request("GET", "/metrics", &[], &[]).unwrap();
+    let text = String::from_utf8(body).unwrap();
+    assert_eq!(metric(&text, "pallas_infer_requests_total"), oks as f64);
+    assert_eq!(metric(&text, "pallas_infer_responses_total"), oks as f64);
+    assert_eq!(
+        metric(&text, "pallas_infer_rejected_total{reason=\"queue_full\"}"),
+        rejected as f64
+    );
+    assert_eq!(metric(&text, "pallas_admission_budget"), 4.0);
+    // accepted requests stay bounded: within the histogram's finite range
+    // (5s), not pushed into the overflow bucket by the rejected flood
+    let p99 = metric(&text, "pallas_service_time_seconds_p99");
+    assert!(p99.is_finite() && p99 <= 5.0, "accepted p99 {p99} out of range");
+    server.shutdown();
+}
+
+#[test]
+fn graceful_drain_loses_no_inflight_response() {
+    let (model, qm, oracle, images) = fixture(1004);
+    let server = bind_server(
+        &model,
+        &qm,
+        BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_millis(5),
+            shards: 2,
+            depth_budget: 128,
+        },
+        HttpConfig::default(),
+    );
+    let addr = server.local_addr();
+    let metrics = std::sync::Arc::clone(server.metrics());
+    let got_200 = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for c in 0..4usize {
+            let got_200 = &got_200;
+            let (images, oracle) = (&images, &oracle);
+            s.spawn(move || {
+                let Ok(mut cli) = HttpClient::connect(addr) else { return };
+                for i in 0..200usize {
+                    let idx = (c + i * 4) % images.len();
+                    match cli.request("POST", "/v1/infer", &[], &infer_body(&images[idx])) {
+                        Ok((200, body)) => {
+                            // an accepted request must get the full,
+                            // correct response even mid-drain
+                            assert_eq!(le_f32(&body), oracle[idx], "drained row must be exact");
+                            got_200.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Ok((503, _)) => break, // draining: refused cleanly
+                        Ok((other, _)) => panic!("unexpected status {other}"),
+                        Err(_) => break, // connection closed by the drain
+                    }
+                }
+            });
+        }
+        // let the clients get going, then drain under load
+        std::thread::sleep(Duration::from_millis(30));
+        server.shutdown();
+    });
+    let client_200s = got_200.load(Ordering::Relaxed) as u64;
+    assert!(client_200s > 0, "some requests must complete before the drain");
+    // zero loss, both ways: the batcher answered everything it admitted,
+    // and every one of those answers reached a client as a 200
+    assert_eq!(metrics.submitted.get(), metrics.responses.get());
+    assert_eq!(metrics.responses.get(), client_200s);
+    assert_eq!(metrics.inflight(), 0);
+    assert!(metrics.draining());
+}
+
+#[test]
+fn unknown_routes_and_bad_bodies() {
+    let (model, qm, _, images) = fixture(1005);
+    let server = bind_server(&model, &qm, BatchPolicy::default(), HttpConfig::default());
+    let mut cli = HttpClient::connect(server.local_addr()).unwrap();
+    let (code, _) = cli.request("GET", "/nope", &[], &[]).unwrap();
+    assert_eq!(code, 404);
+    let (code, head, _) = cli.request_full("DELETE", "/metrics", &[], &[]).unwrap();
+    assert_eq!(code, 405);
+    assert_eq!(head.header("allow"), Some("GET"));
+    let (code, head, _) = cli.request_full("GET", "/v1/infer", &[], &[]).unwrap();
+    assert_eq!(code, 405);
+    assert_eq!(head.header("allow"), Some("POST"));
+    // wrong byte count -> 400 at the HTTP layer (shape guard)
+    let (code, _) = cli.request("POST", "/v1/infer", &[], &[0u8; 12]).unwrap();
+    assert_eq!(code, 400);
+    // JSON body with the wrong value count -> 400 too
+    let (code, _) = cli
+        .request(
+            "POST",
+            "/v1/infer",
+            &[("Content-Type", "application/json")],
+            b"[1, 2, 3]",
+        )
+        .unwrap();
+    assert_eq!(code, 400);
+    let (code, _) = cli.request("GET", "/", &[], &[]).unwrap();
+    assert_eq!(code, 200);
+    // the happy path still works on the same keep-alive connection
+    let (code, _) = cli
+        .request("POST", "/v1/infer", &[], &infer_body(&images[0]))
+        .unwrap();
+    assert_eq!(code, 200);
+    server.shutdown();
+}
+
+#[test]
+fn bearer_auth_guards_infer_only() {
+    let (model, qm, _, images) = fixture(1006);
+    let cfg = HttpConfig { auth_token: Some("sekrit".to_string()), ..Default::default() };
+    let server = bind_server(&model, &qm, BatchPolicy::default(), cfg);
+    let mut cli = HttpClient::connect(server.local_addr()).unwrap();
+    let body = infer_body(&images[0]);
+    let (code, _) = cli.request("POST", "/v1/infer", &[], &body).unwrap();
+    assert_eq!(code, 401, "no token");
+    let (code, _) = cli
+        .request("POST", "/v1/infer", &[("Authorization", "Bearer wrong")], &body)
+        .unwrap();
+    assert_eq!(code, 401, "wrong token");
+    let (code, _) = cli
+        .request("POST", "/v1/infer", &[("Authorization", "Bearer sekrit")], &body)
+        .unwrap();
+    assert_eq!(code, 200, "correct token");
+    // probes and scrapers stay open
+    let (code, _) = cli.request("GET", "/healthz", &[], &[]).unwrap();
+    assert_eq!(code, 200);
+    let (code, _) = cli.request("GET", "/metrics", &[], &[]).unwrap();
+    assert_eq!(code, 200);
+    server.shutdown();
+}

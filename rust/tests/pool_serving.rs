@@ -83,6 +83,7 @@ fn serving_bit_identical_across_threads_and_shards() {
                     max_batch: 5, // forces several partial batches per run
                     max_wait: Duration::from_millis(2),
                     shards,
+                    ..Default::default()
                 },
             );
             let rxs: Vec<_> = images
@@ -159,7 +160,12 @@ fn batcher_stress_concurrent_submitters_no_loss() {
     let engine = ServeEngine::compile(&model, &qm, &[3, 16, 16]).unwrap();
     let batcher = Batcher::new(
         engine,
-        BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1), shards: 4 },
+        BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            shards: 4,
+            ..Default::default()
+        },
     );
     let n_clients = 6usize;
     let per_client = 40usize;
@@ -199,7 +205,12 @@ fn shutdown_drains_in_flight_requests_without_loss() {
         engine,
         // long max_wait: shutdown must not wait out the batching window
         // per batch, it must just drain
-        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(50), shards: 2 },
+        BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(50),
+            shards: 2,
+            ..Default::default()
+        },
     );
     // flood the queue, then shut down immediately with most requests
     // still in flight

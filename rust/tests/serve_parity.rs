@@ -432,7 +432,7 @@ fn batcher_coalesces_and_answers_correctly() {
         }
     }
     // a malformed request is rejected at submit and doesn't kill the worker
-    assert!(batcher.submit(Tensor::zeros(&[3, 8, 8])).is_none());
+    assert!(batcher.submit(Tensor::zeros(&[3, 8, 8])).is_err());
     let per2: usize = val.shape[1..].iter().product();
     let ok = batcher
         .submit(Tensor::from_vec(&[3, 16, 16], val.data[..per2].to_vec()))
