@@ -15,8 +15,8 @@ use adaround::coordinator::{Method, Pipeline, PipelineConfig};
 use adaround::data::synthetic_stripes;
 use adaround::nn::Model;
 use adaround::serve::{
-    http_offered_load_latencies, infer_body, latency_entry, offered_load_latencies, shard_sweep,
-    throughput_entry, BatchPolicy, Batcher, HttpConfig, HttpServer, ServeEngine,
+    compile_plan, http_offered_load_latencies, infer_body, latency_entry, offered_load_latencies,
+    shard_sweep, throughput_entry, BatchPolicy, Batcher, HttpConfig, HttpServer, ServeEngine,
 };
 use adaround::tensor::Tensor;
 use adaround::util::stats::percentile;
@@ -221,6 +221,35 @@ fn main() -> anyhow::Result<()> {
         24,
     );
     results.extend(entries);
+
+    // zero-downtime hot-swap: publish a freshly compiled plan into a
+    // live sharded batcher and measure how long until every shard has
+    // adopted it — i.e. the old generation's Arc is fully released.
+    // Idle shards re-check between batches, so under zero traffic this
+    // is bounded by the per-shard idle recheck interval.
+    let swap_shards = parallel::num_threads().clamp(2, 4);
+    let swap_policy = BatchPolicy { shards: swap_shards, ..policy };
+    let swap_batcher = Batcher::new(ServeEngine::compile(&model, &qm, &[3, 32, 32])?, swap_policy);
+    let mut adopt_ms: Vec<f64> = Vec::new();
+    for _ in 0..8 {
+        let plan = compile_plan(&model, &qm, &[3, 32, 32])?;
+        let old = swap_batcher.plan();
+        let sw = Stopwatch::start();
+        swap_batcher.swap_plan(plan).expect("same input geometry");
+        while std::sync::Arc::strong_count(&old) > 1 {
+            std::thread::sleep(Duration::from_micros(200));
+        }
+        adopt_ms.push(sw.secs() * 1e3);
+    }
+    swap_batcher.shutdown();
+    let (swap_p50, swap_p99) = (percentile(&adopt_ms, 50.0), percentile(&adopt_ms, 99.0));
+    println!(
+        "{:<24} {:>12.2} {:>12.2}",
+        format!("hot-swap adopt x{swap_shards}"),
+        swap_p50,
+        swap_p99
+    );
+    results.push(latency_entry("hot-swap adopt", swap_p50, swap_p99));
 
     let mut root = BTreeMap::new();
     root.insert("bench".to_string(), Json::Str("serving".to_string()));

@@ -8,6 +8,17 @@
 //! exiting. `--synthetic` serves a tiny built-in model quantized
 //! in-process — no artifacts needed (CI's socket smoke test).
 //!
+//! Multi-model + hot reload ([`crate::serve::registry`]): repeated
+//! `--model id=path.qtz` flags register one model per bundle (routed at
+//! `POST /v1/models/<id>/infer`; the first is the default behind
+//! `/v1/infer`), `--arch NAME` picks the float architecture they share
+//! (or `--synthetic` the built-in one), and `--watch` starts the mtime
+//! watcher that hot-swaps a re-exported bundle with zero downtime
+//! (`--watch-interval-ms`, default 500). `--export-synthetic PATH`
+//! writes the built-in model's quantized bundle (vary weights with
+//! `--seed`) and exits — the tool CI's hot-swap smoke uses to overwrite
+//! a watched bundle mid-traffic.
+//!
 //! `serve-bench` quantizes (or loads) a model, compiles the integer
 //! serving engine, and reports accuracy plus f32-vs-int8 throughput,
 //! batched-serving latency percentiles, and the saturated closed-loop
@@ -30,7 +41,7 @@ use crate::eval::top1;
 use crate::nn::{ForwardOptions, Model};
 use crate::serve::{
     latency_entry, offered_load_latencies, shard_sweep, throughput_entry, BatchPolicy, Batcher,
-    HttpConfig, HttpServer, ServeEngine,
+    HttpConfig, HttpServer, ModelRegistry, ServeEngine, ServeMetrics, DEFAULT_MODEL_ID,
 };
 use crate::tensor::{IntTensor, Tensor};
 use crate::util::cli::Args;
@@ -330,10 +341,12 @@ mod sig {
     }
 }
 
-/// A tiny self-contained classifier ([3,16,16] conv→gpool→dense),
-/// quantized 8/8 nearest in-process — `serve --synthetic` boots without
-/// artifacts, which is what CI's socket smoke test runs against.
-fn synthetic_engine() -> Result<ServeEngine> {
+/// The float architecture of the tiny self-contained classifier
+/// ([3,16,16] conv→gpool→dense) behind `--synthetic` and
+/// `--export-synthetic`. `weight_seed` draws the weights — two seeds
+/// give two models with distinct outputs, which is exactly what the
+/// hot-swap smoke needs to observe a generation change end to end.
+fn synthetic_model(weight_seed: u64) -> Result<Model> {
     let ir = r#"{"task":"cls","ir":[
       {"id":"in","op":"input","inputs":[]},
       {"id":"c1","op":"conv","inputs":["in"],"cin":3,"cout":8,
@@ -341,7 +354,7 @@ fn synthetic_engine() -> Result<ServeEngine> {
       {"id":"g1","op":"gpool","inputs":["c1"]},
       {"id":"d1","op":"dense","inputs":["g1"],"cin":8,"cout":4,"relu":false}
     ]}"#;
-    let mut rng = Rng::new(7);
+    let mut rng = Rng::new(weight_seed);
     let mut w = BTreeMap::new();
     for (name, shape, std) in [
         ("c1.w", vec![8usize, 3, 3, 3], 0.25f32),
@@ -353,7 +366,14 @@ fn synthetic_engine() -> Result<ServeEngine> {
         let data = (0..n).map(|_| rng.normal_f32(0.0, std)).collect();
         w.insert(name.to_string(), Tensor::from_vec(&shape, data));
     }
-    let model = Model::from_manifest("synthetic", &Json::parse(ir)?, w)?;
+    Model::from_manifest("synthetic", &Json::parse(ir)?, w)
+}
+
+/// Synthetic model + its 8/8-nearest quantization. Seed 7 is the
+/// historical `serve --synthetic` model, bit for bit.
+fn synthetic_parts(weight_seed: u64) -> Result<(Model, QuantizedModel)> {
+    let model = synthetic_model(weight_seed)?;
+    let mut rng = Rng::new(weight_seed.wrapping_add(1000));
     let (calib, _) = crate::data::synthetic_stripes(32, 3, 16, &mut rng);
     let cfg = PipelineConfig {
         method: Method::Nearest,
@@ -364,25 +384,39 @@ fn synthetic_engine() -> Result<ServeEngine> {
         ..Default::default()
     };
     let qm = Pipeline::new(&model, cfg, None).quantize(&calib, &mut Rng::new(1))?;
+    Ok((model, qm))
+}
+
+/// A tiny self-contained classifier quantized in-process — `serve
+/// --synthetic` boots without artifacts, which is what CI's socket
+/// smoke test runs against.
+fn synthetic_engine() -> Result<ServeEngine> {
+    let (model, qm) = synthetic_parts(7)?;
     ServeEngine::compile(&model, &qm, &[3, 16, 16])
 }
 
+/// Parse repeated `--model id=path.qtz` flags; a bare `--model NAME`
+/// (no '=') is the legacy architecture selector, not a registry entry.
+fn model_specs(args: &Args) -> Vec<(String, String)> {
+    args.all("model")
+        .iter()
+        .filter_map(|m| m.split_once('='))
+        .map(|(id, path)| (id.to_string(), path.to_string()))
+        .collect()
+}
+
 pub fn cmd_serve(args: &Args) -> Result<()> {
+    // --export-synthetic PATH: write the built-in model's bundle and
+    // exit. `--seed N` varies the weights, so re-exporting with a new
+    // seed over a watched path exercises a real hot-swap.
+    if let Some(path) = args.opt("export-synthetic") {
+        let seed = args.usize("seed", 7)? as u64;
+        let (_, qm) = synthetic_parts(seed)?;
+        crate::coordinator::save_quantized(path, &qm)?;
+        println!("exported synthetic .qtz bundle (weight seed {seed}) to {path}");
+        return Ok(());
+    }
     let listen = args.str("listen", "127.0.0.1:8780");
-    let engine = if args.bool("synthetic") {
-        synthetic_engine()?
-    } else {
-        let ctx = Ctx::load(args)?;
-        let name = args.str("model", "micro18");
-        let model = ctx.model(&name)?;
-        if model.task == "seg" {
-            bail!("serve covers classifiers; {name} is a segmentation model");
-        }
-        let (calib, _) = ctx.calib(&model)?;
-        let in_shape = calib.shape[1..].to_vec();
-        let qm = load_or_quantize(args, &ctx, &model, &calib)?;
-        ServeEngine::compile(&model, &qm, &in_shape)?
-    };
     let policy = BatchPolicy {
         max_batch: args.usize("max-batch", 32)?,
         max_wait: Duration::from_millis(args.usize("max-wait-ms", 3)? as u64),
@@ -393,15 +427,81 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
         auth_token: args.opt("auth-token").map(|s| s.to_string()),
         ..Default::default()
     };
+    let watch = args.bool("watch");
+    let interval = Duration::from_millis(args.usize("watch-interval-ms", 500)? as u64);
+    let specs = model_specs(args);
+    let mut builder = ModelRegistry::builder();
+    if !specs.is_empty() {
+        // multi-model registry: every bundle shares one float
+        // architecture — the built-in one under --synthetic, else
+        // --arch from the artifact store
+        if args.bool("synthetic") {
+            for (id, path) in &specs {
+                builder = builder.register_qtz(id, synthetic_model(7)?, path, &[3, 16, 16], policy)?;
+            }
+        } else {
+            let ctx = Ctx::load(args)?;
+            let name = args.str("arch", "micro18");
+            let model = ctx.model(&name)?;
+            if model.task == "seg" {
+                bail!("serve covers classifiers; {name} is a segmentation model");
+            }
+            let (calib, _) = ctx.calib(&model)?;
+            let in_shape = calib.shape[1..].to_vec();
+            for (id, path) in &specs {
+                builder = builder.register_qtz(id, model.clone(), path, &in_shape, policy)?;
+            }
+        }
+    } else if args.bool("synthetic") {
+        builder = builder.register(DEFAULT_MODEL_ID, synthetic_engine()?, policy)?;
+    } else {
+        let ctx = Ctx::load(args)?;
+        let name = args.str("model", "micro18");
+        let model = ctx.model(&name)?;
+        if model.task == "seg" {
+            bail!("serve covers classifiers; {name} is a segmentation model");
+        }
+        let (calib, _) = ctx.calib(&model)?;
+        let in_shape = calib.shape[1..].to_vec();
+        match args.opt("quantized") {
+            // a bundle on disk: register reloadable so --watch works
+            Some(path) => {
+                builder = builder.register_qtz(DEFAULT_MODEL_ID, model, path, &in_shape, policy)?;
+            }
+            None => {
+                let qm = load_or_quantize(args, &ctx, &model, &calib)?;
+                let engine = ServeEngine::compile(&model, &qm, &in_shape)?;
+                builder = builder.register(DEFAULT_MODEL_ID, engine, policy)?;
+            }
+        }
+    }
     sig::install();
-    let batcher = Batcher::new(engine, policy);
-    let server = HttpServer::bind(batcher, &listen, cfg)?;
+    let registry = if watch { builder.build_watched(interval)? } else { builder.build()? };
+    if watch && !registry.watching() {
+        println!("note: --watch has nothing to do (no model is backed by a .qtz bundle)");
+    }
+    let server = HttpServer::bind_registry(registry, &listen, cfg)?;
     println!(
-        "serving on http://{}  ({} shards, depth budget {}; POST /v1/infer, GET /metrics, GET /healthz)",
+        "serving on http://{}  ({} shards/model, depth budget {}/model; POST /v1/infer, POST /v1/models/<id>/infer, GET /metrics, GET /healthz)",
         server.local_addr(),
         policy.shards,
         policy.depth_budget * policy.shards,
     );
+    let mut model_metrics: Vec<(String, Arc<ServeMetrics>)> = Vec::new();
+    if let Some(reg) = server.registry() {
+        for (id, entry) in reg.entries() {
+            let stamp = entry.stamp();
+            let src = entry
+                .qtz_path()
+                .map(|p| format!("{}{}", p.display(), if reg.watching() { " (watched)" } else { "" }))
+                .unwrap_or_else(|| "in-process".to_string());
+            println!(
+                "  model '{id}': plan {} generation {} — {src}",
+                stamp.id_hex, stamp.generation
+            );
+            model_metrics.push((id.to_string(), Arc::clone(entry.metrics())));
+        }
+    }
     println!("SIGTERM or ctrl-c drains: in-flight requests finish, then the pool joins");
     // --drain-after-secs: self-terminate (tests and demos; 0 = run until
     // signalled)
@@ -414,16 +514,24 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
         std::thread::sleep(Duration::from_millis(50));
     }
     println!("draining...");
-    let metrics = Arc::clone(server.metrics());
     server.shutdown();
-    let (full, drain, shape) = (
-        metrics.rejected_full.get(),
-        metrics.rejected_draining.get(),
-        metrics.rejected_shape.get(),
-    );
+    let (mut answered, mut full, mut drain, mut shape) = (0u64, 0u64, 0u64, 0u64);
+    for (id, m) in &model_metrics {
+        answered += m.responses.get();
+        full += m.rejected_full.get();
+        drain += m.rejected_draining.get();
+        shape += m.rejected_shape.get();
+        if model_metrics.len() > 1 {
+            println!(
+                "  model '{id}': {} answered, {} reloads ok, {} reloads failed",
+                m.responses.get(),
+                m.reloads_ok.get(),
+                m.reloads_failed.get()
+            );
+        }
+    }
     println!(
-        "drained: {} answered, {} rejected (queue_full {full}, draining {drain}, bad_shape {shape})",
-        metrics.responses.get(),
+        "drained: {answered} answered, {} rejected (queue_full {full}, draining {drain}, bad_shape {shape})",
         full + drain + shape,
     );
     Ok(())

@@ -10,7 +10,7 @@
 //! panic, so bundles from newer tools fail loudly but cleanly.
 
 use std::collections::BTreeMap;
-use std::io::{Read, Write};
+use std::io::Write;
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
@@ -83,77 +83,118 @@ impl QtzValue {
     }
 }
 
-fn read_u16(r: &mut impl Read) -> Result<u16> {
-    let mut b = [0u8; 2];
-    r.read_exact(&mut b)?;
-    Ok(u16::from_le_bytes(b))
+/// Bounds-checked cursor over a fully-read bundle. Every access verifies
+/// the remaining length *before* touching (or allocating for) the bytes,
+/// so a truncated or corrupted file produces a descriptive error instead
+/// of a short-read panic or a multi-gigabyte allocation driven by a
+/// garbage shape field.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
 }
 
-fn read_u32(r: &mut impl Read) -> Result<u32> {
-    let mut b = [0u8; 4];
-    r.read_exact(&mut b)?;
-    Ok(u32::from_le_bytes(b))
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Cursor<'a> {
+        Cursor { buf, pos: 0 }
+    }
+
+    /// Take the next `n` bytes, or fail with what was wanted vs present.
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8]> {
+        let have = self.buf.len() - self.pos;
+        if have < n {
+            bail!("truncated bundle: {what} needs {n} bytes, {have} remain");
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u16(&mut self, what: &str) -> Result<u16> {
+        let b = self.take(2, what)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    fn u32(&mut self, what: &str) -> Result<u32> {
+        let b = self.take(4, what)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+}
+
+/// `numel * elem_size` with overflow detection — shape dims come straight
+/// off disk, so the product of a hostile shape can overflow `usize`.
+fn payload_len(shape: &[usize], elem: usize, name: &str) -> Result<usize> {
+    let mut n = 1usize;
+    for &d in shape {
+        n = n
+            .checked_mul(d)
+            .with_context(|| format!("entry {name:?}: shape {shape:?} overflows"))?;
+    }
+    n.checked_mul(elem)
+        .with_context(|| format!("entry {name:?}: payload size for shape {shape:?} overflows"))
 }
 
 /// Read a bundle into name -> tensor.
+///
+/// Hardened against malformed input: the whole file is read up front and
+/// parsed from a slice with an explicit bounds check before every field
+/// and every payload, so truncation at any byte offset, an undersized
+/// payload, or a shape that lies about the payload size all surface as
+/// clean `Err`s — never a panic, never an allocation sized by
+/// unvalidated on-disk integers.
 pub fn read_qtz(path: impl AsRef<Path>) -> Result<BTreeMap<String, QtzValue>> {
     let path = path.as_ref();
-    let file = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
-    let mut r = std::io::BufReader::new(file);
-    let mut magic = [0u8; 4];
-    r.read_exact(&mut magic)?;
-    if &magic != MAGIC {
+    let buf = std::fs::read(path).with_context(|| format!("open {path:?}"))?;
+    parse_qtz(&buf, path)
+}
+
+fn parse_qtz(buf: &[u8], path: &Path) -> Result<BTreeMap<String, QtzValue>> {
+    let mut c = Cursor::new(buf);
+    let magic = c.take(4, "magic")?;
+    if magic != MAGIC {
         bail!("{path:?}: bad magic {magic:?}");
     }
-    let count = read_u32(&mut r)?;
+    let count = c.u32("entry count")?;
     let mut out = BTreeMap::new();
-    for _ in 0..count {
-        let name_len = read_u16(&mut r)? as usize;
-        let mut name_b = vec![0u8; name_len];
-        r.read_exact(&mut name_b)?;
-        let name = String::from_utf8(name_b)?;
-        let mut hdr = [0u8; 2];
-        r.read_exact(&mut hdr)?;
+    for i in 0..count {
+        let entry = format!("entry {i} of {count}");
+        let name_len = c.u16(&entry)? as usize;
+        let name = String::from_utf8(c.take(name_len, &entry)?.to_vec())
+            .with_context(|| format!("{entry}: name is not UTF-8"))?;
+        let hdr = c.take(2, &name)?;
         let (dtype, ndim) = (hdr[0], hdr[1] as usize);
         let mut shape = Vec::with_capacity(ndim);
         for _ in 0..ndim {
-            shape.push(read_u32(&mut r)? as usize);
+            shape.push(c.u32(&name)? as usize);
         }
-        let n: usize = shape.iter().product();
         let value = match dtype {
             0 => {
-                let mut raw = vec![0u8; n * 4];
-                r.read_exact(&mut raw)?;
+                let raw = c.take(payload_len(&shape, 4, &name)?, &name)?;
                 let data = raw
                     .chunks_exact(4)
-                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
                     .collect();
                 QtzValue::F32(Tensor::from_vec(&shape, data))
             }
             1 => {
-                let mut raw = vec![0u8; n * 4];
-                r.read_exact(&mut raw)?;
+                let raw = c.take(payload_len(&shape, 4, &name)?, &name)?;
                 let data = raw
                     .chunks_exact(4)
-                    .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .map(|b| i32::from_le_bytes([b[0], b[1], b[2], b[3]]))
                     .collect();
                 QtzValue::I32(IntTensor::from_vec(&shape, data))
             }
             2 => {
-                let mut raw = vec![0u8; n];
-                r.read_exact(&mut raw)?;
-                QtzValue::U8(raw, shape)
+                let raw = c.take(payload_len(&shape, 1, &name)?, &name)?;
+                QtzValue::U8(raw.to_vec(), shape)
             }
             3 => {
-                let mut raw = vec![0u8; n];
-                r.read_exact(&mut raw)?;
-                let data = raw.into_iter().map(|b| b as i8).collect();
+                let raw = c.take(payload_len(&shape, 1, &name)?, &name)?;
+                let data = raw.iter().map(|&b| b as i8).collect();
                 QtzValue::I8(I8Tensor::from_vec(&shape, data))
             }
             4 => {
-                let mut raw = vec![0u8; n.div_ceil(2)];
-                r.read_exact(&mut raw)?;
-                QtzValue::I4(raw, shape)
+                let raw = c.take(payload_len(&shape, 1, &name)?.div_ceil(2), &name)?;
+                QtzValue::I4(raw.to_vec(), shape)
             }
             d => bail!(
                 "{path:?}: entry {name:?} has unknown dtype code {d} \
@@ -302,5 +343,62 @@ mod tests {
         std::fs::write(&dir, b"NOPE\x00\x00\x00\x00").unwrap();
         assert!(read_qtz(&dir).is_err());
         std::fs::remove_file(dir).ok();
+    }
+
+    #[test]
+    fn truncation_at_every_offset_is_a_clean_error() {
+        // a valid two-entry bundle, then every proper prefix of it must
+        // fail with a descriptive error (and the full file must load)
+        let dir = std::env::temp_dir().join("qtz_test_trunc.qtz");
+        let mut m = BTreeMap::new();
+        m.insert("w".to_string(), QtzValue::F32(Tensor::from_vec(&[2, 2], vec![1., 2., 3., 4.])));
+        m.insert("q".to_string(), QtzValue::from_i4_codes(&[-3, 5, 1], &[3]));
+        write_qtz(&dir, &m).unwrap();
+        let full = std::fs::read(&dir).unwrap();
+        for cut in 0..full.len() {
+            let err = parse_qtz(&full[..cut], Path::new("t.qtz")).unwrap_err().to_string();
+            assert!(
+                err.contains("truncated") || err.contains("bad magic"),
+                "prefix {cut}/{}: unexpected error {err:?}",
+                full.len()
+            );
+        }
+        assert_eq!(parse_qtz(&full, Path::new("t.qtz")).unwrap().len(), 2);
+        std::fs::remove_file(dir).ok();
+    }
+
+    #[test]
+    fn hostile_shape_does_not_allocate() {
+        // shape [u32::MAX, u32::MAX, u32::MAX] would overflow (or try to
+        // allocate exabytes); the parser must reject it before touching
+        // the payload
+        let mut raw: Vec<u8> = Vec::new();
+        raw.extend_from_slice(b"QTZ1");
+        raw.extend_from_slice(&1u32.to_le_bytes());
+        raw.extend_from_slice(&1u16.to_le_bytes());
+        raw.push(b'x');
+        raw.push(0); // dtype f32
+        raw.push(3); // ndim
+        for _ in 0..3 {
+            raw.extend_from_slice(&u32::MAX.to_le_bytes());
+        }
+        let err = parse_qtz(&raw, Path::new("t.qtz")).unwrap_err().to_string();
+        assert!(
+            err.contains("overflows") || err.contains("truncated"),
+            "got: {err}"
+        );
+        // a merely-huge (non-overflowing) shape must also fail cleanly:
+        // declared payload far exceeds the file
+        let mut raw2: Vec<u8> = Vec::new();
+        raw2.extend_from_slice(b"QTZ1");
+        raw2.extend_from_slice(&1u32.to_le_bytes());
+        raw2.extend_from_slice(&1u16.to_le_bytes());
+        raw2.push(b'x');
+        raw2.push(2); // dtype u8
+        raw2.push(1); // ndim
+        raw2.extend_from_slice(&(1u32 << 30).to_le_bytes());
+        raw2.extend_from_slice(&[0u8; 8]); // only 8 payload bytes present
+        let err2 = parse_qtz(&raw2, Path::new("t.qtz")).unwrap_err().to_string();
+        assert!(err2.contains("truncated"), "got: {err2}");
     }
 }

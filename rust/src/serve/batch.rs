@@ -28,6 +28,17 @@
 //! ([`super::telemetry`]) — a few relaxed atomics per event, exported
 //! live by the HTTP front-end ([`super::http`]).
 //!
+//! **Hot-swap.** The plan lives in a generation cell ([`PlanCell`]): one
+//! atomic sequence number plus a mutex-guarded `Arc<QuantizedPlan>` and
+//! its precomputed identity stamp. [`Batcher::swap_plan`] publishes a new
+//! generation (validated to keep the input geometry); each shard checks
+//! the sequence between batches — one relaxed-cost load on the hot path —
+//! and rebuilds its engine from the new `Arc` when it moved, so in-flight
+//! batches always finish on the generation they started on and the old
+//! weights are freed once the last shard adopts. Idle shards wake every
+//! [`IDLE_RECHECK`] to adopt without traffic. The multi-model wrapper
+//! (registry, watcher thread, `.qtz` reload) is [`super::registry`].
+//!
 //! **Determinism.** Per-image outputs do not depend on which shard served
 //! the image, how requests were batched together, or the thread count:
 //! every integer kernel computes each image's rows independently with
@@ -35,6 +46,7 @@
 //! results are bit-identical for any (`PALLAS_THREADS`, `shards`) pair —
 //! enforced by `rust/tests/pool_serving.rs`.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, SyncSender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -100,6 +112,108 @@ impl std::fmt::Display for SubmitError {
     }
 }
 
+/// Why a [`Batcher::swap_plan`] was refused: the replacement must keep
+/// the input geometry outstanding handles were validated against.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SwapError {
+    ShapeMismatch { got: Vec<usize>, want: Vec<usize> },
+}
+
+impl std::fmt::Display for SwapError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SwapError::ShapeMismatch { got, want } => {
+                write!(f, "swap rejected: plan input {got:?} differs from serving input {want:?}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SwapError {}
+
+/// Identity snapshot of one plan generation — captured once per swap so
+/// `/healthz` and `/metrics` never pay the O(weight-bytes) plan hash on
+/// the scrape path. Cheap to clone.
+#[derive(Clone, Debug)]
+pub struct PlanStamp {
+    /// 1 at boot, +1 per successful [`Batcher::swap_plan`]
+    pub generation: u64,
+    /// [`QuantizedPlan::plan_id`] in hex
+    pub id_hex: String,
+    pub weight_bytes: usize,
+    pub w8_ops: usize,
+    pub w4_ops: usize,
+    pub in_shape: Vec<usize>,
+}
+
+fn stamp_of(plan: &QuantizedPlan, generation: u64) -> PlanStamp {
+    let dtypes = plan.op_dtypes();
+    let w4_ops = dtypes.iter().filter(|(_, d)| *d == "w4").count();
+    PlanStamp {
+        generation,
+        id_hex: format!("{:016x}", plan.plan_id()),
+        weight_bytes: plan.weight_bytes(),
+        w8_ops: dtypes.len() - w4_ops,
+        w4_ops,
+        in_shape: plan.in_shape.clone(),
+    }
+}
+
+/// The generation cell: the ONE place the live plan `Arc` is published.
+/// Shard workers watch `seq` (a single relaxed-cost atomic load between
+/// batches) and take the lock only when it moved, so the steady state
+/// adds one uncontended load per batch to the hot path. Once every shard
+/// has adopted a newer generation, nothing holds the old `Arc` and the
+/// old weights are freed — asserted by the strong-count probe in
+/// `rust/tests/registry_serving.rs`.
+struct PlanCell {
+    seq: AtomicU64,
+    cur: Mutex<(Arc<QuantizedPlan>, PlanStamp)>,
+}
+
+impl PlanCell {
+    fn new(plan: Arc<QuantizedPlan>) -> PlanCell {
+        let stamp = stamp_of(&plan, 1);
+        PlanCell { seq: AtomicU64::new(1), cur: Mutex::new((plan, stamp)) }
+    }
+
+    fn generation(&self) -> u64 {
+        self.seq.load(Ordering::Acquire)
+    }
+
+    fn current(&self) -> (Arc<QuantizedPlan>, PlanStamp) {
+        let g = self.cur.lock().unwrap_or_else(|e| e.into_inner());
+        (Arc::clone(&g.0), g.1.clone())
+    }
+
+    fn publish(&self, plan: Arc<QuantizedPlan>) -> u64 {
+        let mut g = self.cur.lock().unwrap_or_else(|e| e.into_inner());
+        let generation = g.1.generation + 1;
+        g.1 = stamp_of(&plan, generation);
+        g.0 = plan;
+        self.seq.store(generation, Ordering::Release);
+        generation
+    }
+}
+
+/// A read-only window onto a batcher's generation cell — what the HTTP
+/// front-end holds so `/healthz` and `/metrics` report the *live*
+/// generation after a hot-swap, without keeping a plan `Arc` pinned.
+#[derive(Clone)]
+pub struct PlanView {
+    cell: Arc<PlanCell>,
+}
+
+impl PlanView {
+    pub fn generation(&self) -> u64 {
+        self.cell.generation()
+    }
+
+    pub fn stamp(&self) -> PlanStamp {
+        self.cell.current().1
+    }
+}
+
 struct Request {
     /// one image [C, H, W]
     img: Tensor,
@@ -162,9 +276,11 @@ pub struct Batcher {
     tx: Option<Sender<Request>>,
     per: usize,
     shards: usize,
-    /// the shared read-only plan — kept so the HTTP front-end can report
-    /// plan identity/footprint without holding an engine
-    plan: Arc<QuantizedPlan>,
+    /// the live generation: plan `Arc` + identity stamp, swapped by
+    /// [`Batcher::swap_plan`] and adopted by shard workers between
+    /// batches. The batcher itself keeps no direct plan reference, so an
+    /// old generation is freed as soon as the last shard moves off it.
+    cell: Arc<PlanCell>,
     kernel: Kernel,
     metrics: Arc<ServeMetrics>,
     workers: Vec<std::thread::JoinHandle<()>>,
@@ -174,26 +290,36 @@ impl Batcher {
     /// Spawn `policy.shards` worker threads, one engine each: the last
     /// owns `engine` itself, the rest own [`ServeEngine::fork`]s of it
     /// (shared plan, private scratch — the distinction is unobservable,
-    /// forks are exact siblings).
+    /// forks are exact siblings). Uses the whole machine thread budget
+    /// ([`parallel::num_threads`]); a multi-model registry divides the
+    /// budget instead via [`Batcher::with_threads`].
     pub fn new(engine: ServeEngine, policy: BatchPolicy) -> Batcher {
+        Batcher::with_threads(engine, policy, parallel::num_threads())
+    }
+
+    /// [`Batcher::new`] under an explicit intra-op thread budget —
+    /// `thread_budget` threads are divided across the shards. The
+    /// registry gives each model an equal slice of the machine so
+    /// per-model batchers coexist without oversubscribing cores.
+    pub fn with_threads(engine: ServeEngine, policy: BatchPolicy, thread_budget: usize) -> Batcher {
         assert!(policy.max_batch >= 1);
         assert!(policy.shards >= 1);
         assert!(policy.depth_budget >= 1);
         let per: usize = engine.plan.in_shape.iter().product();
-        let plan = Arc::clone(&engine.plan);
+        let cell = Arc::new(PlanCell::new(Arc::clone(&engine.plan)));
         let kernel = engine.kernel();
         let metrics = Arc::new(ServeMetrics::new(
             policy.shards,
             policy.depth_budget.saturating_mul(policy.shards),
         ));
+        metrics.generation.set(1);
         let (tx, rx) = mpsc::channel::<Request>();
         let rx = Arc::new(Mutex::new(rx));
-        // divide the machine: intra-op threads recede as shards take
+        // divide the budget: intra-op threads recede as shards take
         // over. Near-equal split with the remainder spread over the first
         // shards (as in `parallel::split_ranges`), so e.g. 16 threads /
         // 3 shards = 6+5+5 rather than stranding a core on floor(16/3).
-        // Captured here so the submitter's thread policy propagates.
-        let total = parallel::num_threads();
+        let total = thread_budget.max(1);
         let mut engines = Vec::with_capacity(policy.shards);
         for _ in 1..policy.shards {
             engines.push(engine.fork());
@@ -207,13 +333,48 @@ impl Batcher {
                     (total / policy.shards + usize::from(i < total % policy.shards)).max(1);
                 let rx = Arc::clone(&rx);
                 let metrics = Arc::clone(&metrics);
+                let cell = Arc::clone(&cell);
                 std::thread::Builder::new()
                     .name(format!("serve-shard-{i}"))
-                    .spawn(move || worker_loop(eng, policy, rx, threads, metrics, i))
+                    .spawn(move || worker_loop(eng, policy, rx, cell, threads, metrics, i))
                     .expect("spawn shard worker")
             })
             .collect();
-        Batcher { tx: Some(tx), per, shards: policy.shards, plan, kernel, metrics, workers }
+        Batcher { tx: Some(tx), per, shards: policy.shards, cell, kernel, metrics, workers }
+    }
+
+    /// Publish a new plan generation without stopping the world: the
+    /// `Arc` is swapped atomically under the cell lock, each shard worker
+    /// adopts it between batches (in-flight batches finish on the old
+    /// generation), and the old weights are freed once the last shard
+    /// moves off them. The replacement must keep the serving input
+    /// geometry — outstanding [`BatcherHandle`]s validated against it.
+    /// Returns the new generation number.
+    pub fn swap_plan(&self, plan: QuantizedPlan) -> Result<u64, SwapError> {
+        let want = self.cell.current().1.in_shape;
+        if plan.in_shape != want {
+            return Err(SwapError::ShapeMismatch { got: plan.in_shape.clone(), want });
+        }
+        let generation = self.cell.publish(Arc::new(plan));
+        self.metrics.generation.set(generation as i64);
+        Ok(generation)
+    }
+
+    /// The generation currently published (shards may still be finishing
+    /// a batch on the previous one).
+    pub fn generation(&self) -> u64 {
+        self.cell.generation()
+    }
+
+    /// Identity snapshot of the published generation (precomputed at
+    /// swap, O(1) to read) — what `/healthz` and `/metrics` report.
+    pub fn plan_stamp(&self) -> PlanStamp {
+        self.cell.current().1
+    }
+
+    /// A cloneable live view of the generation cell (see [`PlanView`]).
+    pub fn plan_view(&self) -> PlanView {
+        PlanView { cell: Arc::clone(&self.cell) }
     }
 
     pub fn handle(&self) -> BatcherHandle {
@@ -229,10 +390,11 @@ impl Batcher {
         self.shards
     }
 
-    /// The shared compiled plan (read-only) — identity and footprint for
-    /// `/healthz` and `/metrics`.
-    pub fn plan(&self) -> &Arc<QuantizedPlan> {
-        &self.plan
+    /// The published plan generation (read-only). A clone of the live
+    /// `Arc` at call time — the caller's reference does NOT pin future
+    /// generations, and holding it across a swap keeps only the old one.
+    pub fn plan(&self) -> Arc<QuantizedPlan> {
+        self.cell.current().0
     }
 
     /// The GEMM micro-kernel every shard dispatches to.
@@ -364,28 +526,48 @@ pub fn saturation_throughput(
     (per_client * clients) as f64 / start.elapsed().as_secs_f64()
 }
 
-/// One shard: collect a batch under the shared queue lock, release it,
-/// compute, respond; repeat until the queue is closed AND drained.
+/// How long an idle shard waits for a first request before releasing the
+/// queue lock to re-check the generation cell. Bounds hot-swap adoption
+/// latency on an idle server at roughly `shards × IDLE_RECHECK`.
+const IDLE_RECHECK: Duration = Duration::from_millis(25);
+
+/// One shard: adopt the published plan generation if it moved, collect a
+/// batch under the shared queue lock, release it, compute, respond;
+/// repeat until the queue is closed AND drained. Adoption happens only
+/// between batches, so a batch is always computed by exactly one
+/// generation — never a torn mix.
 fn worker_loop(
     mut engine: ServeEngine,
     policy: BatchPolicy,
     rx: Arc<Mutex<Receiver<Request>>>,
+    cell: Arc<PlanCell>,
     threads: usize,
     metrics: Arc<ServeMetrics>,
     shard: usize,
 ) {
     let per: usize = engine.plan.in_shape.iter().product();
+    // the engine was built from generation 1's plan; if a swap already
+    // landed, the check below adopts it before the first batch
+    let mut my_generation = 1u64;
     loop {
+        if cell.generation() != my_generation {
+            let (plan, stamp) = cell.current();
+            engine.adopt_plan(plan);
+            my_generation = stamp.generation;
+        }
         let batch = {
             let q = match rx.lock() {
                 Ok(g) => g,
                 Err(_) => return, // a sibling shard panicked mid-collect
             };
-            // block for the first request of the batch; Err means every
-            // sender is gone and the queue is empty — fully drained
-            let first = match q.recv() {
+            // wait for the first request of the batch, but wake up every
+            // IDLE_RECHECK to let an idle shard notice a hot-swap;
+            // Disconnected means every sender is gone and the queue is
+            // empty — fully drained
+            let first = match q.recv_timeout(IDLE_RECHECK) {
                 Ok(r) => r,
-                Err(_) => return,
+                Err(RecvTimeoutError::Timeout) => continue,
+                Err(RecvTimeoutError::Disconnected) => return,
             };
             metrics.queue_depth.dec();
             let deadline = Instant::now() + policy.max_wait;

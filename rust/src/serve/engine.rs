@@ -72,6 +72,16 @@ impl ServeEngine {
         e
     }
 
+    /// Replace the plan in place: rebuild the liveness table and scratch
+    /// for `plan`, keeping the kernel choice. The hot-swap adoption step —
+    /// a shard worker calls this between batches when the generation cell
+    /// has moved, dropping its reference to the old generation's Arc.
+    pub fn adopt_plan(&mut self, plan: Arc<QuantizedPlan>) {
+        let kernel = self.kernel;
+        *self = ServeEngine::from_shared(plan);
+        self.kernel = kernel;
+    }
+
     /// Pin a specific GEMM micro-kernel (tests, benches, the differential
     /// harness). Results are bit-identical across kernels, so this is
     /// never needed for correctness.

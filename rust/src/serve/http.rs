@@ -7,12 +7,20 @@
 //!
 //! Routes:
 //!
-//! | route          | method | body                                   |
-//! |----------------|--------|----------------------------------------|
-//! | `/v1/infer`    | POST   | one image, LE f32 bytes or JSON array  |
-//! | `/metrics`     | GET    | Prometheus text ([`super::telemetry`]) |
-//! | `/healthz`     | GET    | JSON: plan id, shards, drain state     |
-//! | `/`            | GET    | plain-text route index                 |
+//! | route                    | method | body                                   |
+//! |--------------------------|--------|----------------------------------------|
+//! | `/v1/infer`              | POST   | one image, LE f32 bytes or JSON array  |
+//! | `/v1/models/<id>/infer`  | POST   | same, routed to model `<id>`           |
+//! | `/v1/models`             | GET    | JSON: registered model ids             |
+//! | `/metrics`               | GET    | Prometheus text ([`super::telemetry`]) |
+//! | `/healthz`               | GET    | JSON: per-model generation/drain state |
+//! | `/`                      | GET    | plain-text route index                 |
+//!
+//! `/v1/infer` aliases the registry's default model, so a single-model
+//! server ([`HttpServer::bind`]) behaves exactly as before the registry
+//! existed; [`HttpServer::bind_registry`] serves many models, each with
+//! its own batcher, queue and generation counter
+//! ([`super::registry::ModelRegistry`]).
 //!
 //! Admission maps [`SubmitError`] onto status codes: `QueueFull` → 429 +
 //! `Retry-After`, `ShuttingDown` → 503, `BadShape` → 400. Graceful drain
@@ -38,7 +46,8 @@ use anyhow::{Context, Result};
 use crate::tensor::Tensor;
 use crate::util::Json;
 
-use super::batch::{Batcher, BatcherHandle, SubmitError};
+use super::batch::{Batcher, BatcherHandle, PlanView, SubmitError};
+use super::registry::ModelRegistry;
 use super::telemetry::{Counter, ServeMetrics};
 
 // ---------------------------------------------------------------------
@@ -275,13 +284,13 @@ impl Default for HttpConfig {
 
 /// HTTP-layer counters, rendered after the batcher block in `/metrics`.
 struct HttpStats {
-    routes: [(&'static str, Counter); 5],
+    routes: [(&'static str, Counter); 6],
     codes: [(u16, Counter); 11],
 }
 
 impl HttpStats {
     fn new() -> HttpStats {
-        let routes = ["infer", "metrics", "healthz", "index", "other"]
+        let routes = ["infer", "metrics", "healthz", "index", "models", "other"]
             .map(|r| (r, Counter::default()));
         let codes = [200u16, 400, 401, 404, 405, 408, 413, 429, 431, 500, 503]
             .map(|c| (c, Counter::default()));
@@ -294,6 +303,8 @@ impl HttpStats {
             "/metrics" => "metrics",
             "/healthz" => "healthz",
             "/" => "index",
+            "/v1/models" => "models",
+            p if model_route(p).is_some() => "infer",
             _ => "other",
         };
         if let Some((_, c)) = self.routes.iter().find(|(r, _)| *r == key) {
@@ -322,90 +333,122 @@ impl HttpStats {
     }
 }
 
-/// Immutable facts about the plan being served, captured once at bind.
-struct PlanInfo {
-    id_hex: String,
+/// Extract the model id from a `/v1/models/<id>/infer` path.
+fn model_route(path: &str) -> Option<&str> {
+    let id = path.strip_prefix("/v1/models/")?.strip_suffix("/infer")?;
+    (!id.is_empty() && !id.contains('/')).then_some(id)
+}
+
+/// Per-model serving context, captured at bind. The submit handle,
+/// metrics, shard count, kernel and input geometry are fixed for the
+/// server's lifetime; plan identity (generation, plan id, footprint) is
+/// read live through `view` so `/healthz` and `/metrics` stay truthful
+/// across hot-swaps.
+struct ModelCtx {
+    handle: BatcherHandle,
+    metrics: Arc<ServeMetrics>,
+    view: PlanView,
+    reloadable: bool,
     shards: usize,
     kernel: &'static str,
-    weight_bytes: usize,
-    w8_ops: usize,
-    w4_ops: usize,
     in_shape: Vec<usize>,
     per: usize,
 }
 
-impl PlanInfo {
-    fn render(&self, out: &mut String) {
+impl ModelCtx {
+    fn render_plan(&self, out: &mut String) {
         use std::fmt::Write as _;
+        let stamp = self.view.stamp();
         let _ = writeln!(out, "# HELP pallas_plan_info identity of the plan being served");
         let _ = writeln!(out, "# TYPE pallas_plan_info gauge");
         let _ = writeln!(
             out,
-            "pallas_plan_info{{id=\"{}\",kernel=\"{}\",shards=\"{}\"}} 1",
-            self.id_hex, self.kernel, self.shards
+            "pallas_plan_info{{id=\"{}\",kernel=\"{}\",shards=\"{}\",generation=\"{}\"}} 1",
+            stamp.id_hex, self.kernel, self.shards, stamp.generation
         );
         let _ = writeln!(out, "# HELP pallas_plan_weight_bytes packed weight footprint");
         let _ = writeln!(out, "# TYPE pallas_plan_weight_bytes gauge");
-        let _ = writeln!(out, "pallas_plan_weight_bytes {}", self.weight_bytes);
+        let _ = writeln!(out, "pallas_plan_weight_bytes {}", stamp.weight_bytes);
         let _ = writeln!(out, "# HELP pallas_plan_ops weight-bearing ops by packed dtype");
         let _ = writeln!(out, "# TYPE pallas_plan_ops gauge");
-        let _ = writeln!(out, "pallas_plan_ops{{dtype=\"w8\"}} {}", self.w8_ops);
-        let _ = writeln!(out, "pallas_plan_ops{{dtype=\"w4\"}} {}", self.w4_ops);
+        let _ = writeln!(out, "pallas_plan_ops{{dtype=\"w8\"}} {}", stamp.w8_ops);
+        let _ = writeln!(out, "pallas_plan_ops{{dtype=\"w4\"}} {}", stamp.w4_ops);
     }
 }
 
 struct ServerState {
-    handle: BatcherHandle,
-    metrics: Arc<ServeMetrics>,
+    models: std::collections::BTreeMap<String, ModelCtx>,
+    default_id: String,
     http: HttpStats,
-    plan: PlanInfo,
     cfg: HttpConfig,
 }
 
 impl ServerState {
+    fn default_model(&self) -> &ModelCtx {
+        &self.models[&self.default_id]
+    }
+
     fn draining(&self) -> bool {
-        self.metrics.draining()
+        // the drain flag is flipped on every model at once (shutdown),
+        // so the default model's is the connection-level truth
+        self.default_model().metrics.draining()
     }
 }
 
 /// The serving front-end: a listener, an accept thread, one thread per
-/// connection, all sharing the batcher's telemetry. Owns the [`Batcher`]
-/// so [`HttpServer::shutdown`] can drain the whole stack in order.
+/// connection, all sharing the registry's telemetry. Owns the
+/// [`ModelRegistry`] (and through it every [`Batcher`]) so
+/// [`HttpServer::shutdown`] can drain the whole stack in order.
 pub struct HttpServer {
     addr: SocketAddr,
     state: Option<Arc<ServerState>>,
     stop_accept: Arc<AtomicBool>,
     accept: Option<std::thread::JoinHandle<()>>,
     conns: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>,
-    batcher: Option<Batcher>,
+    registry: Option<ModelRegistry>,
     metrics: Arc<ServeMetrics>,
 }
 
 impl HttpServer {
     /// Bind `addr` (e.g. `"127.0.0.1:8080"`, port 0 for ephemeral) and
-    /// start serving the batcher's queue over HTTP.
+    /// serve one batcher as the registry's sole (default) model — the
+    /// single-model layout every pre-registry caller keeps using.
     pub fn bind(batcher: Batcher, addr: &str, cfg: HttpConfig) -> Result<HttpServer> {
+        HttpServer::bind_registry(ModelRegistry::single(batcher), addr, cfg)
+    }
+
+    /// Bind `addr` and serve every model in `registry`: `/v1/infer`
+    /// aliases the default model, `/v1/models/<id>/infer` routes by id.
+    pub fn bind_registry(
+        registry: ModelRegistry,
+        addr: &str,
+        cfg: HttpConfig,
+    ) -> Result<HttpServer> {
         let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
         let addr = listener.local_addr()?;
-        let plan = batcher.plan();
-        let dtypes = plan.op_dtypes();
-        let w4_ops = dtypes.iter().filter(|(_, d)| *d == "w4").count();
-        let info = PlanInfo {
-            id_hex: format!("{:016x}", plan.plan_id()),
-            shards: batcher.shards(),
-            kernel: batcher.kernel().name(),
-            weight_bytes: plan.weight_bytes(),
-            w8_ops: dtypes.len() - w4_ops,
-            w4_ops,
-            in_shape: plan.in_shape.clone(),
-            per: plan.in_shape.iter().product(),
-        };
-        let metrics = Arc::clone(batcher.metrics());
+        let mut models = std::collections::BTreeMap::new();
+        for (id, entry) in registry.entries() {
+            let b = entry.batcher();
+            let stamp = b.plan_stamp();
+            models.insert(
+                id.to_string(),
+                ModelCtx {
+                    handle: b.handle(),
+                    metrics: Arc::clone(b.metrics()),
+                    view: b.plan_view(),
+                    reloadable: entry.reloadable(),
+                    shards: b.shards(),
+                    kernel: b.kernel().name(),
+                    per: stamp.in_shape.iter().product(),
+                    in_shape: stamp.in_shape,
+                },
+            );
+        }
+        let metrics = Arc::clone(registry.default_entry().batcher().metrics());
         let state = Arc::new(ServerState {
-            handle: batcher.handle(),
-            metrics: Arc::clone(&metrics),
+            models,
+            default_id: registry.default_id().to_string(),
             http: HttpStats::new(),
-            plan: info,
             cfg,
         });
         let stop_accept = Arc::new(AtomicBool::new(false));
@@ -450,7 +493,7 @@ impl HttpServer {
             stop_accept,
             accept: Some(accept),
             conns,
-            batcher: Some(batcher),
+            registry: Some(registry),
             metrics,
         })
     }
@@ -460,10 +503,16 @@ impl HttpServer {
         self.addr
     }
 
-    /// The live telemetry — valid after shutdown too (tests assert
-    /// zero-loss against it).
+    /// The default model's live telemetry — valid after shutdown too
+    /// (tests assert zero-loss against it).
     pub fn metrics(&self) -> &Arc<ServeMetrics> {
         &self.metrics
+    }
+
+    /// The registry being served (for manual [`ModelRegistry::reload`]
+    /// calls from tests and tooling). `None` after shutdown.
+    pub fn registry(&self) -> Option<&ModelRegistry> {
+        self.registry.as_ref()
     }
 
     /// Graceful drain: reject new infers with 503 (drain flag), stop
@@ -476,11 +525,12 @@ impl HttpServer {
     }
 
     fn shutdown_impl(&mut self) {
-        if self.batcher.is_none() {
+        let Some(registry) = self.registry.as_ref() else {
             return; // already shut down
-        }
-        // 1. no new work: submits fail ShuttingDown, /healthz says draining
-        self.metrics.begin_drain();
+        };
+        // 1. no new work: every model's submits fail ShuttingDown,
+        // /healthz says draining
+        registry.begin_drain();
         // 2. stop accepting (poke the blocking accept loop awake)
         self.stop_accept.store(true, Ordering::SeqCst);
         let _ = TcpStream::connect(self.addr);
@@ -501,11 +551,12 @@ impl HttpServer {
                 let _ = h.join();
             }
         }
-        // 4. drop our submit handle (the last sender), then join shards:
-        // the workers drain what's queued and exit
+        // 4. drop our submit handles (the last senders), then stop the
+        // watcher and join every model's shards: the workers drain
+        // what's queued and exit
         self.state.take();
-        if let Some(b) = self.batcher.take() {
-            b.shutdown();
+        if let Some(r) = self.registry.take() {
+            r.shutdown();
         }
     }
 }
@@ -580,15 +631,25 @@ fn handle_request(state: &ServerState, head: &MsgHead, body: Vec<u8>) -> Respons
         return Response::text(400, "malformed request line");
     };
     state.http.count_route(path);
+    if let Some(id) = model_route(path) {
+        return match (method, state.models.get(id)) {
+            ("POST", Some(model)) => infer(state, model, head, body),
+            (_, Some(_)) => {
+                Response::text(405, "method not allowed").with("Allow", "POST".into())
+            }
+            (_, None) => Response::text(404, &format!("unknown model '{id}'")),
+        };
+    }
     match (method, path) {
         ("GET", "/healthz") => healthz(state),
         ("GET", "/metrics") => metrics_page(state),
-        ("POST", "/v1/infer") => infer(state, head, body),
+        ("GET", "/v1/models") => models_page(state),
+        ("POST", "/v1/infer") => infer(state, state.default_model(), head, body),
         ("GET", "/") => Response::text(
             200,
-            "pallas-serve\n  POST /v1/infer  (LE f32 bytes or JSON array)\n  GET /metrics\n  GET /healthz",
+            "pallas-serve\n  POST /v1/infer  (LE f32 bytes or JSON array; default model)\n  POST /v1/models/<id>/infer\n  GET /v1/models\n  GET /metrics\n  GET /healthz",
         ),
-        (_, "/healthz" | "/metrics" | "/") => {
+        (_, "/healthz" | "/metrics" | "/" | "/v1/models") => {
             Response::text(405, "method not allowed").with("Allow", "GET".into())
         }
         (_, "/v1/infer") => Response::text(405, "method not allowed").with("Allow", "POST".into()),
@@ -597,31 +658,69 @@ fn handle_request(state: &ServerState, head: &MsgHead, body: Vec<u8>) -> Respons
 }
 
 fn healthz(state: &ServerState) -> Response {
-    let m = &state.metrics;
+    let def = state.default_model();
+    let m = &def.metrics;
     let mut o = std::collections::BTreeMap::new();
-    let status = if m.draining() { "draining" } else { "ok" };
+    let status = if state.draining() { "draining" } else { "ok" };
     o.insert("status".to_string(), Json::Str(status.to_string()));
-    o.insert("draining".to_string(), Json::Bool(m.draining()));
-    o.insert("plan_id".to_string(), Json::Str(state.plan.id_hex.clone()));
-    o.insert("shards".to_string(), Json::Num(state.plan.shards as f64));
-    o.insert("kernel".to_string(), Json::Str(state.plan.kernel.to_string()));
+    o.insert("draining".to_string(), Json::Bool(state.draining()));
+    // top-level plan facts describe the default model (back-compat with
+    // single-model probes); the "models" object covers every model
+    let stamp = def.view.stamp();
+    o.insert("plan_id".to_string(), Json::Str(stamp.id_hex));
+    o.insert("generation".to_string(), Json::Num(stamp.generation as f64));
+    o.insert("default_model".to_string(), Json::Str(state.default_id.clone()));
+    o.insert("shards".to_string(), Json::Num(def.shards as f64));
+    o.insert("kernel".to_string(), Json::Str(def.kernel.to_string()));
     o.insert(
         "in_shape".to_string(),
-        Json::Arr(state.plan.in_shape.iter().map(|&d| Json::Num(d as f64)).collect()),
+        Json::Arr(def.in_shape.iter().map(|&d| Json::Num(d as f64)).collect()),
     );
     o.insert("queue_depth".to_string(), Json::Num(m.queue_depth.get() as f64));
     o.insert("inflight".to_string(), Json::Num(m.inflight() as f64));
     o.insert("admission_budget".to_string(), Json::Num(m.budget() as f64));
     o.insert("requests_total".to_string(), Json::Num(m.submitted.get() as f64));
     o.insert("responses_total".to_string(), Json::Num(m.responses.get() as f64));
+    let mut models = std::collections::BTreeMap::new();
+    for (id, ctx) in &state.models {
+        let stamp = ctx.view.stamp();
+        let mut mo = std::collections::BTreeMap::new();
+        mo.insert("generation".to_string(), Json::Num(stamp.generation as f64));
+        mo.insert("plan_id".to_string(), Json::Str(stamp.id_hex));
+        mo.insert("reloadable".to_string(), Json::Bool(ctx.reloadable));
+        mo.insert("reloads_ok".to_string(), Json::Num(ctx.metrics.reloads_ok.get() as f64));
+        mo.insert(
+            "reloads_failed".to_string(),
+            Json::Num(ctx.metrics.reloads_failed.get() as f64),
+        );
+        mo.insert("inflight".to_string(), Json::Num(ctx.metrics.inflight() as f64));
+        models.insert(id.clone(), Json::Obj(mo));
+    }
+    o.insert("models".to_string(), Json::Obj(models));
+    Response::new(200, "application/json", Json::Obj(o).to_string_pretty().into_bytes())
+}
+
+fn models_page(state: &ServerState) -> Response {
+    let ids = state.models.keys().map(|k| Json::Str(k.clone())).collect();
+    let mut o = std::collections::BTreeMap::new();
+    o.insert("default".to_string(), Json::Str(state.default_id.clone()));
+    o.insert("models".to_string(), Json::Arr(ids));
     Response::new(200, "application/json", Json::Obj(o).to_string_pretty().into_bytes())
 }
 
 fn metrics_page(state: &ServerState) -> Response {
     let mut out = String::with_capacity(8 << 10);
-    state.metrics.render_prometheus(&mut out);
+    // the classic unlabeled block (batcher + plan) describes the default
+    // model — its series names are a public contract predating the
+    // registry; every model (default included) additionally gets the
+    // labeled pallas_model_* block
+    let def = state.default_model();
+    def.metrics.render_prometheus(&mut out);
     state.http.render(&mut out);
-    state.plan.render(&mut out);
+    def.render_plan(&mut out);
+    for (id, ctx) in &state.models {
+        ctx.metrics.render_model_prometheus(id, &mut out);
+    }
     Response::new(200, "text/plain; version=0.0.4", out.into_bytes())
 }
 
@@ -642,7 +741,7 @@ fn flatten_numbers(j: &Json, out: &mut Vec<f32>) -> bool {
     }
 }
 
-fn infer(state: &ServerState, head: &MsgHead, body: Vec<u8>) -> Response {
+fn infer(state: &ServerState, model: &ModelCtx, head: &MsgHead, body: Vec<u8>) -> Response {
     if let Some(tok) = &state.cfg.auth_token {
         let want = format!("Bearer {tok}");
         if head.header("authorization") != Some(want.as_str()) {
@@ -650,7 +749,7 @@ fn infer(state: &ServerState, head: &MsgHead, body: Vec<u8>) -> Response {
                 .with("WWW-Authenticate", "Bearer".into());
         }
     }
-    let per = state.plan.per;
+    let per = model.per;
     let ctype = head.header("content-type").unwrap_or("");
     let floats: Vec<f32> = if ctype.contains("json") {
         let Ok(text) = std::str::from_utf8(&body) else {
@@ -683,8 +782,8 @@ fn infer(state: &ServerState, head: &MsgHead, body: Vec<u8>) -> Response {
     if floats.len() != per {
         return Response::text(400, &format!("expected {per} values, got {}", floats.len()));
     }
-    let img = Tensor::from_vec(&state.plan.in_shape, floats);
-    match state.handle.submit(img) {
+    let img = Tensor::from_vec(&model.in_shape, floats);
+    match model.handle.submit(img) {
         Ok(rx) => match rx.recv() {
             Ok(row) => {
                 if head.header("accept").map(|a| a.contains("json")) == Some(true) {
@@ -945,6 +1044,106 @@ mod tests {
         let err = read_message(&mut r, &mut carry, 8192, 1024).unwrap_err();
         assert_eq!(err, HttpError::HeadTooLarge);
         assert_eq!(err.status(), 431);
+    }
+
+    #[test]
+    fn model_route_extraction() {
+        assert_eq!(model_route("/v1/models/resnet/infer"), Some("resnet"));
+        assert_eq!(model_route("/v1/models/a.b-c_9/infer"), Some("a.b-c_9"));
+        assert_eq!(model_route("/v1/models//infer"), None);
+        assert_eq!(model_route("/v1/models/a/b/infer"), None);
+        assert_eq!(model_route("/v1/models"), None);
+        assert_eq!(model_route("/v1/models/x"), None);
+        assert_eq!(model_route("/v1/infer"), None);
+    }
+
+    /// Satellite fuzz harness: a seeded-random request mutator (split
+    /// points via random dribble chunks, byte flips, truncation,
+    /// oversized headers/bodies, pipelined garbage) hammering the
+    /// carry-buffer parser. The parser must never panic and every
+    /// failure must map onto a clean answerable status — 400/408/413/431
+    /// — or a close (`Ok(None)`/`Eof`). 10k cases per run; override with
+    /// `PALLAS_FUZZ_ITERS`.
+    #[test]
+    fn fuzz_parser_never_panics_and_fails_clean() {
+        use crate::util::Rng;
+        let iters: usize = std::env::var("PALLAS_FUZZ_ITERS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(10_000);
+        let seeds: &[&[u8]] = &[
+            b"GET /healthz HTTP/1.1\r\nHost: x\r\n\r\n",
+            b"POST /v1/infer HTTP/1.1\r\nContent-Length: 12\r\nContent-Type: application/octet-stream\r\n\r\nharmlessbody",
+            b"POST /v1/models/m-1/infer HTTP/1.1\r\nContent-Length: 2\r\nAccept: application/json\r\n\r\nhi",
+            b"GET / HTTP/1.1\r\nAccept: */*\r\nConnection: close\r\n\r\n",
+        ];
+        let mut rng = Rng::new(0x5eed);
+        for case in 0..iters {
+            let mut data = seeds[rng.below(seeds.len())].to_vec();
+            match rng.below(6) {
+                // byte flips
+                0 => {
+                    for _ in 0..=rng.below(8) {
+                        let p = rng.below(data.len());
+                        data[p] ^= (1 + rng.below(255)) as u8;
+                    }
+                }
+                // truncation at a random split point
+                1 => {
+                    let keep = rng.below(data.len() + 1);
+                    data.truncate(keep);
+                }
+                // oversized header block
+                2 => {
+                    let pad = "a".repeat(2000 + rng.below(12_000));
+                    let extra = format!("X-Fuzz: {pad}\r\n");
+                    if let Some(p) = data.windows(2).position(|w| w == b"\r\n") {
+                        let mut v = data[..p + 2].to_vec();
+                        v.extend_from_slice(extra.as_bytes());
+                        v.extend_from_slice(&data[p + 2..]);
+                        data = v;
+                    }
+                }
+                // oversized declared body
+                3 => {
+                    let len = (1usize << 20) + rng.below(1 << 30);
+                    data = format!("POST /v1/infer HTTP/1.1\r\nContent-Length: {len}\r\n\r\n")
+                        .into_bytes();
+                }
+                // pipelined garbage appended after a valid message
+                4 => {
+                    for _ in 0..rng.below(64) {
+                        data.push(rng.below(256) as u8);
+                    }
+                }
+                // random single-byte insertion
+                _ => {
+                    let p = rng.below(data.len() + 1);
+                    data.insert(p, rng.below(256) as u8);
+                }
+            }
+            let chunk = 1 + rng.below(96);
+            let mut r = Dribble { data: &data, pos: 0, chunk };
+            let mut carry = Vec::new();
+            // drain messages the way conn_loop would, bounded
+            for _ in 0..6 {
+                match read_message(&mut r, &mut carry, 8 << 10, 1 << 20) {
+                    Ok(Some((head, _body))) => {
+                        // routing the head must not panic either
+                        let _ = parse_request_line(&head.line);
+                    }
+                    Ok(None) => break, // clean close at a boundary
+                    Err(e) => {
+                        assert!(
+                            matches!(e.status(), 400 | 408 | 413 | 431),
+                            "case {case}: {e:?} maps to unanswerable status {}",
+                            e.status()
+                        );
+                        break;
+                    }
+                }
+            }
+        }
     }
 
     #[test]

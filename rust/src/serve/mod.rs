@@ -23,12 +23,18 @@
 //!    ([`ServeEngine::fork`]) with per-shard scratch. Admission is
 //!    bounded ([`SubmitError`]): past `depth_budget × shards` in-flight
 //!    requests a submit fails instead of growing the queue.
-//! 4. **expose** ([`http`], [`telemetry`]): `adaround serve --listen`
-//!    puts a zero-dependency HTTP/1.1 front-end over the batcher —
-//!    `POST /v1/infer`, Prometheus `GET /metrics`, `GET /healthz` —
-//!    with lock-free counters/histograms ([`ServeMetrics`]) recorded off
-//!    the hot path and a graceful drain on SIGTERM/ctrl-c that answers
-//!    every in-flight request before exiting.
+//! 4. **operate** ([`registry`]): a [`ModelRegistry`] maps model-id →
+//!    per-model batcher under one shared thread budget, with
+//!    zero-downtime hot reload — a watcher polls each `.qtz` bundle's
+//!    mtime, recompiles off the hot path, and [`Batcher::swap_plan`]
+//!    publishes a new generation that shards adopt between batches.
+//! 5. **expose** ([`http`], [`telemetry`]): `adaround serve --listen`
+//!    puts a zero-dependency HTTP/1.1 front-end over the registry —
+//!    `POST /v1/infer`, `POST /v1/models/<id>/infer`, Prometheus
+//!    `GET /metrics`, `GET /healthz` — with lock-free
+//!    counters/histograms ([`ServeMetrics`]) recorded off the hot path
+//!    and a graceful drain on SIGTERM/ctrl-c that answers every
+//!    in-flight request before exiting.
 //!
 //! Accuracy contract: the integer engine mirrors the f32 fake-quant
 //! simulation up to requantization rounding (argmax parity on the test
@@ -105,14 +111,16 @@ pub mod engine;
 pub mod http;
 pub mod ikernels;
 pub mod plan;
+pub mod registry;
 pub mod telemetry;
 
 pub use batch::{
-    offered_load_latencies, saturation_throughput, Batcher, BatcherHandle, BatchPolicy,
-    SubmitError,
+    offered_load_latencies, saturation_throughput, Batcher, BatcherHandle, BatchPolicy, PlanStamp,
+    PlanView, SubmitError, SwapError,
 };
 pub use engine::ServeEngine;
 pub use http::{http_offered_load_latencies, infer_body, HttpClient, HttpConfig, HttpServer};
+pub use registry::{ModelRegistry, RegistryBuilder, DEFAULT_MODEL_ID, DEFAULT_WATCH_INTERVAL};
 pub use telemetry::ServeMetrics;
 pub use plan::{
     compile_plan, compile_plan_with, ActQ, ConvW, DenseW, PlanOptions, QuantizedPlan, Requant,

@@ -1,0 +1,449 @@
+//! Multi-model registry with zero-downtime hot-swap: the layer that turns
+//! one [`Batcher`] into an operable fleet component.
+//!
+//! A [`ModelRegistry`] maps model-id → [`ModelEntry`], each owning its own
+//! batcher (per-model [`BatchPolicy`], per-model queue — a small model is
+//! never head-of-line blocked behind a large one) under one shared
+//! machine thread budget, divided near-equally across models at build
+//! time. The id map is immutable after [`RegistryBuilder::build`], so
+//! request routing is a lock-free `BTreeMap` lookup; all mutability lives
+//! inside each batcher's generation cell.
+//!
+//! **Hot reload.** A model registered from a `.qtz` bundle
+//! ([`RegistryBuilder::register_qtz`]) remembers its float architecture,
+//! input geometry and bundle path. [`ModelRegistry::reload`] — or the
+//! watcher thread, when built with [`RegistryBuilder::build_watched`] —
+//! re-reads the bundle, compiles the new [`super::QuantizedPlan`] *off
+//! the hot path*, and publishes it through [`Batcher::swap_plan`]: in-flight
+//! batches finish on the old generation, shards adopt between batches,
+//! and the old weights are freed when the last shard moves off them.
+//! A reload that fails (truncated bundle, corrupt payload, compile
+//! error) leaves the old generation serving untouched and counts in
+//! `pallas_model_reloads_total{outcome="failed"}`.
+//!
+//! **Watcher.** One thread polls each registered bundle's mtime every
+//! `interval`. A changed mtime is *debounced*: it must hold still for two
+//! consecutive polls before the reload fires, so a writer mid-`save` is
+//! never half-read (the `last_file_mtime` + reload-in-progress pattern).
+//! A vanished file is ignored (keep serving); the next complete write
+//! triggers a fresh reload.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant, SystemTime};
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::load_quantized;
+use crate::nn::Model;
+use crate::util::parallel;
+
+use super::batch::{BatchPolicy, Batcher, BatcherHandle, PlanStamp};
+use super::engine::ServeEngine;
+use super::plan::compile_plan;
+use super::telemetry::ServeMetrics;
+
+/// Everything a reloadable model needs to rebuild itself from disk: the
+/// float architecture (weights in the bundle override it), the per-image
+/// input geometry, and where the bundle lives.
+struct ReloadSpec {
+    model: Model,
+    in_shape: Vec<usize>,
+    qtz_path: PathBuf,
+}
+
+/// Watcher bookkeeping per model: the mtime we last (attempted to)
+/// load, and a changed mtime awaiting its stability confirmation poll.
+#[derive(Default)]
+struct WatchState {
+    last_mtime: Option<SystemTime>,
+    pending: Option<SystemTime>,
+}
+
+/// One registered model: its batcher plus (for `.qtz`-backed models) the
+/// reload recipe and watcher state.
+pub struct ModelEntry {
+    batcher: Batcher,
+    reload: Option<ReloadSpec>,
+    watch: Mutex<WatchState>,
+}
+
+impl ModelEntry {
+    pub fn batcher(&self) -> &Batcher {
+        &self.batcher
+    }
+
+    pub fn handle(&self) -> BatcherHandle {
+        self.batcher.handle()
+    }
+
+    pub fn metrics(&self) -> &Arc<ServeMetrics> {
+        self.batcher.metrics()
+    }
+
+    /// Identity of the generation currently published for this model.
+    pub fn stamp(&self) -> PlanStamp {
+        self.batcher.plan_stamp()
+    }
+
+    /// Whether this model can hot-reload (registered from a `.qtz`).
+    pub fn reloadable(&self) -> bool {
+        self.reload.is_some()
+    }
+
+    /// The watched bundle path, if reloadable.
+    pub fn qtz_path(&self) -> Option<&Path> {
+        self.reload.as_ref().map(|s| s.qtz_path.as_path())
+    }
+
+    /// Load + compile + swap, with telemetry. The compile runs on the
+    /// caller's thread (the watcher, or a test) — never a shard worker —
+    /// so serving latency is untouched while the new generation builds.
+    fn reload_now(&self, id: &str) -> Result<u64> {
+        let spec = self
+            .reload
+            .as_ref()
+            .with_context(|| format!("model '{id}' was not registered from a .qtz bundle"))?;
+        let m = self.metrics();
+        let t0 = Instant::now();
+        let swapped = (|| -> Result<u64> {
+            let qm = load_quantized(&spec.qtz_path)
+                .with_context(|| format!("reload '{id}': {}", spec.qtz_path.display()))?;
+            let plan = compile_plan(&spec.model, &qm, &spec.in_shape)
+                .with_context(|| format!("reload '{id}': compile"))?;
+            Ok(self.batcher.swap_plan(plan)?)
+        })();
+        match &swapped {
+            Ok(generation) => {
+                m.reloads_ok.inc();
+                m.swap_latency.observe(t0.elapsed().as_secs_f64());
+                crate::info!(
+                    "model '{id}': hot-swapped to generation {generation} in {:.1} ms",
+                    t0.elapsed().as_secs_f64() * 1e3
+                );
+            }
+            Err(e) => {
+                m.reloads_failed.inc();
+                crate::warnlog!("model '{id}': reload failed, serving old generation: {e:#}");
+            }
+        }
+        swapped
+    }
+}
+
+/// A model waiting for [`RegistryBuilder::build`] to learn the final
+/// model count (and therefore its slice of the thread budget).
+struct PendingModel {
+    engine: ServeEngine,
+    policy: BatchPolicy,
+    reload: Option<ReloadSpec>,
+    boot_mtime: Option<SystemTime>,
+}
+
+/// Builder: register models, then [`build`](RegistryBuilder::build) (or
+/// [`build_watched`](RegistryBuilder::build_watched)) to spawn the
+/// batchers under a shared thread budget. The first registered model is
+/// the default (`/v1/infer` routes to it).
+#[derive(Default)]
+pub struct RegistryBuilder {
+    models: Vec<(String, PendingModel)>,
+}
+
+/// Model ids appear in URL paths and metric labels: short, non-empty,
+/// `[A-Za-z0-9._-]` only.
+fn valid_id(id: &str) -> bool {
+    !id.is_empty()
+        && id.len() <= 64
+        && id.chars().all(|c| c.is_ascii_alphanumeric() || matches!(c, '.' | '_' | '-'))
+}
+
+impl RegistryBuilder {
+    fn push(&mut self, id: &str, pending: PendingModel) -> Result<()> {
+        if !valid_id(id) {
+            bail!("invalid model id '{id}': use 1-64 chars from [A-Za-z0-9._-]");
+        }
+        if self.models.iter().any(|(m, _)| m == id) {
+            bail!("duplicate model id '{id}'");
+        }
+        self.models.push((id.to_string(), pending));
+        Ok(())
+    }
+
+    /// Register a model from an already-built engine. Not reloadable —
+    /// there is no bundle on disk to watch.
+    pub fn register(mut self, id: &str, engine: ServeEngine, policy: BatchPolicy) -> Result<Self> {
+        self.push(id, PendingModel { engine, policy, reload: None, boot_mtime: None })?;
+        Ok(self)
+    }
+
+    /// Register a reloadable model: compile the boot generation from the
+    /// bundle at `qtz_path` over the float architecture `model`, and
+    /// remember the recipe so [`ModelRegistry::reload`] (or the watcher)
+    /// can rebuild from the same path later.
+    pub fn register_qtz(
+        mut self,
+        id: &str,
+        model: Model,
+        qtz_path: impl Into<PathBuf>,
+        in_shape: &[usize],
+        policy: BatchPolicy,
+    ) -> Result<Self> {
+        let qtz_path = qtz_path.into();
+        let qm = load_quantized(&qtz_path)
+            .with_context(|| format!("model '{id}': {}", qtz_path.display()))?;
+        let engine = ServeEngine::compile(&model, &qm, in_shape)
+            .with_context(|| format!("model '{id}': compile"))?;
+        let boot_mtime = std::fs::metadata(&qtz_path).and_then(|m| m.modified()).ok();
+        let reload = Some(ReloadSpec { model, in_shape: in_shape.to_vec(), qtz_path });
+        self.push(id, PendingModel { engine, policy, reload, boot_mtime })?;
+        Ok(self)
+    }
+
+    /// Spawn every model's batcher, dividing the machine thread budget
+    /// near-equally (remainder to the first-registered models, floor 1
+    /// thread each). No watcher — hot reload only via
+    /// [`ModelRegistry::reload`].
+    pub fn build(self) -> Result<ModelRegistry> {
+        self.build_inner(None)
+    }
+
+    /// [`build`](RegistryBuilder::build), plus a watcher thread polling
+    /// every reloadable model's bundle mtime at `interval`.
+    pub fn build_watched(self, interval: Duration) -> Result<ModelRegistry> {
+        self.build_inner(Some(interval))
+    }
+
+    fn build_inner(self, watch: Option<Duration>) -> Result<ModelRegistry> {
+        if self.models.is_empty() {
+            bail!("registry needs at least one model");
+        }
+        let n = self.models.len();
+        let total = parallel::num_threads().max(1);
+        let default_id = self.models[0].0.clone();
+        let mut map = BTreeMap::new();
+        for (i, (id, p)) in self.models.into_iter().enumerate() {
+            let budget = (total / n + usize::from(i < total % n)).max(1);
+            let batcher = Batcher::with_threads(p.engine, p.policy, budget);
+            let entry = ModelEntry {
+                batcher,
+                reload: p.reload,
+                watch: Mutex::new(WatchState { last_mtime: p.boot_mtime, pending: None }),
+            };
+            map.insert(id, entry);
+        }
+        let models = Arc::new(map);
+        let stop = Arc::new(AtomicBool::new(false));
+        let watcher = match watch {
+            Some(interval) if models.values().any(|e| e.reloadable()) => {
+                let models = Arc::clone(&models);
+                let stop = Arc::clone(&stop);
+                Some(
+                    std::thread::Builder::new()
+                        .name("qtz-watcher".into())
+                        .spawn(move || watch_loop(models, interval, stop))
+                        .expect("spawn qtz watcher"),
+                )
+            }
+            _ => None,
+        };
+        Ok(ModelRegistry { models, default_id, stop, watcher })
+    }
+}
+
+/// The registry: an immutable id → entry map (lock-free routing), an
+/// optional bundle watcher, and lifecycle plumbing. See the module docs
+/// for the swap protocol.
+pub struct ModelRegistry {
+    models: Arc<BTreeMap<String, ModelEntry>>,
+    default_id: String,
+    stop: Arc<AtomicBool>,
+    watcher: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ModelRegistry {
+    pub fn builder() -> RegistryBuilder {
+        RegistryBuilder::default()
+    }
+
+    /// Wrap one existing batcher as a single-model registry (id
+    /// `default`, not reloadable) — the back-compat path behind
+    /// [`super::HttpServer::bind`].
+    pub fn single(batcher: Batcher) -> ModelRegistry {
+        let mut map = BTreeMap::new();
+        map.insert(
+            DEFAULT_MODEL_ID.to_string(),
+            ModelEntry { batcher, reload: None, watch: Mutex::new(WatchState::default()) },
+        );
+        ModelRegistry {
+            models: Arc::new(map),
+            default_id: DEFAULT_MODEL_ID.to_string(),
+            stop: Arc::new(AtomicBool::new(false)),
+            watcher: None,
+        }
+    }
+
+    /// The model `/v1/infer` aliases (first registered).
+    pub fn default_id(&self) -> &str {
+        &self.default_id
+    }
+
+    pub fn get(&self, id: &str) -> Option<&ModelEntry> {
+        self.models.get(id)
+    }
+
+    pub fn default_entry(&self) -> &ModelEntry {
+        &self.models[&self.default_id]
+    }
+
+    /// Registered ids in sorted order.
+    pub fn ids(&self) -> impl Iterator<Item = &str> {
+        self.models.keys().map(String::as_str)
+    }
+
+    pub fn entries(&self) -> impl Iterator<Item = (&str, &ModelEntry)> {
+        self.models.iter().map(|(k, v)| (k.as_str(), v))
+    }
+
+    pub fn len(&self) -> usize {
+        self.models.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.models.is_empty()
+    }
+
+    /// Whether a watcher thread is polling bundle mtimes.
+    pub fn watching(&self) -> bool {
+        self.watcher.is_some()
+    }
+
+    /// Manually trigger a reload of `id` from its bundle path. Returns
+    /// the new generation; on error the old generation keeps serving
+    /// (and the failure is already counted in the model's metrics).
+    pub fn reload(&self, id: &str) -> Result<u64> {
+        let entry = self.models.get(id).with_context(|| format!("unknown model '{id}'"))?;
+        let generation = entry.reload_now(id)?;
+        // remember what we just loaded so the watcher doesn't re-fire
+        if let Some(spec) = &entry.reload {
+            let mtime = std::fs::metadata(&spec.qtz_path).and_then(|m| m.modified()).ok();
+            let mut w = entry.watch.lock().unwrap_or_else(|e| e.into_inner());
+            w.last_mtime = mtime;
+            w.pending = None;
+        }
+        Ok(generation)
+    }
+
+    /// Flip every model's drain flag: new submits fail with
+    /// `ShuttingDown` while in-flight requests complete.
+    pub fn begin_drain(&self) {
+        for e in self.models.values() {
+            e.batcher.begin_drain();
+        }
+    }
+
+    /// Stop the watcher, then drain and join every model's batcher.
+    /// Outstanding [`BatcherHandle`]s must be dropped first — they keep
+    /// their model's queue open.
+    pub fn shutdown(mut self) {
+        self.stop_watcher();
+        // dropping the map drains each batcher (Batcher::drop → stop)
+    }
+
+    fn stop_watcher(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(w) = self.watcher.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for ModelRegistry {
+    fn drop(&mut self) {
+        self.stop_watcher();
+    }
+}
+
+/// The id [`ModelRegistry::single`] registers under, and the id the CLI
+/// uses when no explicit `--model id=path` is given.
+pub const DEFAULT_MODEL_ID: &str = "default";
+
+/// Poll cadence guidance lives in `docs/SERVING.md`; 500 ms is prompt
+/// without burning a core on stat calls.
+pub const DEFAULT_WATCH_INTERVAL: Duration = Duration::from_millis(500);
+
+/// The watcher: sleep `interval` (in small chunks so shutdown is
+/// prompt), then scan every reloadable model's bundle mtime. A change is
+/// held `pending` until it repeats on the next poll — the stability
+/// debounce that avoids reading a bundle mid-write.
+fn watch_loop(
+    models: Arc<BTreeMap<String, ModelEntry>>,
+    interval: Duration,
+    stop: Arc<AtomicBool>,
+) {
+    while !stop.load(Ordering::SeqCst) {
+        let mut slept = Duration::ZERO;
+        while slept < interval && !stop.load(Ordering::SeqCst) {
+            let chunk = (interval - slept).min(Duration::from_millis(50));
+            std::thread::sleep(chunk);
+            slept += chunk;
+        }
+        if stop.load(Ordering::SeqCst) {
+            return;
+        }
+        for (id, entry) in models.iter() {
+            let Some(spec) = &entry.reload else { continue };
+            let mtime = std::fs::metadata(&spec.qtz_path).and_then(|m| m.modified()).ok();
+            let fire = {
+                let mut w = entry.watch.lock().unwrap_or_else(|e| e.into_inner());
+                match mtime {
+                    // missing / unreadable: keep serving, forget pending
+                    None => {
+                        w.pending = None;
+                        false
+                    }
+                    Some(m) if Some(m) == w.last_mtime => {
+                        w.pending = None;
+                        false
+                    }
+                    Some(m) if w.pending == Some(m) => {
+                        // stable across two polls — commit before the
+                        // attempt so a failing bundle doesn't hot-loop
+                        // (the next *write* re-arms the reload)
+                        w.last_mtime = Some(m);
+                        w.pending = None;
+                        true
+                    }
+                    Some(m) => {
+                        w.pending = Some(m);
+                        false
+                    }
+                }
+            };
+            if fire {
+                let _ = entry.reload_now(id); // outcome already logged + counted
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn id_validation() {
+        for ok in ["a", "resnet-18", "m.v2_final", "X9"] {
+            assert!(valid_id(ok), "{ok} should be valid");
+        }
+        for bad in ["", "a/b", "a b", "ü", "a?b", &"x".repeat(65)] {
+            assert!(!valid_id(bad), "{bad:?} should be invalid");
+        }
+    }
+
+    #[test]
+    fn builder_rejects_duplicates_and_empties() {
+        assert!(ModelRegistry::builder().build().is_err());
+    }
+}

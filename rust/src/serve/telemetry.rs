@@ -171,6 +171,17 @@ pub struct ServeMetrics {
     pub batch_fill: Histogram,
     /// submit-to-response seconds (queue wait + batching wait + forward)
     pub service_time: Histogram,
+    /// plan generation currently being served (1 at boot, +1 per
+    /// successful hot-swap)
+    pub generation: Gauge,
+    /// hot reloads that compiled and swapped in a new generation
+    pub reloads_ok: Counter,
+    /// hot reloads that failed (load or compile error) — the old
+    /// generation keeps serving
+    pub reloads_failed: Counter,
+    /// seconds from reload start to the new generation being published
+    /// (load + compile + swap, all off the hot path)
+    pub swap_latency: Histogram,
     pub shards: Vec<ShardStats>,
     /// admitted requests whose response has not been sent yet — the
     /// bounded-admission counter
@@ -201,6 +212,10 @@ impl ServeMetrics {
             queue_depth: Gauge::default(),
             batch_fill: Histogram::new(&BATCH_FILL_BOUNDS, 1.0),
             service_time: Histogram::new(&SERVICE_TIME_BOUNDS, 1e6),
+            generation: Gauge::default(),
+            reloads_ok: Counter::default(),
+            reloads_failed: Counter::default(),
+            swap_latency: Histogram::new(&SERVICE_TIME_BOUNDS, 1e6),
             shards: (0..shards).map(|_| ShardStats::default()).collect(),
             inflight: AtomicU64::new(0),
             budget: budget as u64,
@@ -322,6 +337,71 @@ impl ServeMetrics {
             gauge_f(out, name, "estimated from the service-time histogram", v);
         }
     }
+
+    /// Render the per-model registry series, labeled with `model="<id>"`.
+    /// Every registered model gets one of these blocks on `/metrics`
+    /// (including single-model servers, where the id is `default`), next
+    /// to the classic unlabeled block the default model keeps for
+    /// backwards compatibility.
+    pub fn render_model_prometheus(&self, model: &str, out: &mut String) {
+        let lbl = format!("{{model=\"{model}\"}}");
+        let series = |out: &mut String, name: &str, kind: &str, help: &str, v: String| {
+            let _ = writeln!(out, "# HELP {name} {help}");
+            let _ = writeln!(out, "# TYPE {name} {kind}");
+            let _ = writeln!(out, "{name}{lbl} {v}");
+        };
+        series(
+            out,
+            "pallas_model_generation",
+            "gauge",
+            "plan generation being served (bumped by hot-swap)",
+            self.generation.get().to_string(),
+        );
+        let _ = writeln!(out, "# HELP pallas_model_reloads_total hot reload attempts by outcome");
+        let _ = writeln!(out, "# TYPE pallas_model_reloads_total counter");
+        for (outcome, c) in [("ok", &self.reloads_ok), ("failed", &self.reloads_failed)] {
+            let _ = writeln!(
+                out,
+                "pallas_model_reloads_total{{model=\"{model}\",outcome=\"{outcome}\"}} {}",
+                c.get()
+            );
+        }
+        // labeled histogram: the model label joins `le` inside the braces
+        let name = "pallas_model_swap_latency_seconds";
+        let snap = self.swap_latency.snapshot();
+        let _ = writeln!(out, "# HELP {name} reload-to-publish latency in seconds");
+        let _ = writeln!(out, "# TYPE {name} histogram");
+        let mut cum = 0u64;
+        for (i, &b) in SERVICE_TIME_BOUNDS.iter().enumerate() {
+            cum += snap[i];
+            let _ = writeln!(out, "{name}_bucket{{model=\"{model}\",le=\"{b}\"}} {cum}");
+        }
+        cum += snap[SERVICE_TIME_BOUNDS.len()];
+        let _ = writeln!(out, "{name}_bucket{{model=\"{model}\",le=\"+Inf\"}} {cum}");
+        let _ = writeln!(out, "{name}_sum{lbl} {}", self.swap_latency.sum());
+        let _ = writeln!(out, "{name}_count{lbl} {cum}");
+        series(
+            out,
+            "pallas_model_requests_total",
+            "counter",
+            "infer requests admitted for this model",
+            self.submitted.get().to_string(),
+        );
+        series(
+            out,
+            "pallas_model_responses_total",
+            "counter",
+            "infer responses delivered for this model",
+            self.responses.get().to_string(),
+        );
+        series(
+            out,
+            "pallas_model_inflight_requests",
+            "gauge",
+            "admitted requests not yet answered for this model",
+            (self.inflight() as i64).to_string(),
+        );
+    }
 }
 
 fn gauge_f(out: &mut String, name: &str, help: &str, v: f64) {
@@ -391,6 +471,28 @@ mod tests {
         assert!(!m.draining());
         m.begin_drain();
         assert!(m.draining());
+    }
+
+    #[test]
+    fn model_render_labels_every_series() {
+        let m = ServeMetrics::new(1, 4);
+        m.generation.set(3);
+        m.reloads_ok.inc();
+        m.reloads_failed.inc();
+        m.swap_latency.observe(0.004);
+        m.submitted.add(7);
+        let mut s = String::new();
+        m.render_model_prometheus("resnet", &mut s);
+        for needle in [
+            "pallas_model_generation{model=\"resnet\"} 3",
+            "pallas_model_reloads_total{model=\"resnet\",outcome=\"ok\"} 1",
+            "pallas_model_reloads_total{model=\"resnet\",outcome=\"failed\"} 1",
+            "pallas_model_swap_latency_seconds_bucket{model=\"resnet\",le=\"+Inf\"} 1",
+            "pallas_model_swap_latency_seconds_count{model=\"resnet\"} 1",
+            "pallas_model_requests_total{model=\"resnet\"} 7",
+        ] {
+            assert!(s.contains(needle), "missing {needle} in:\n{s}");
+        }
     }
 
     #[test]

@@ -12,6 +12,10 @@ pub struct Args {
     pub subcommand: String,
     pub positional: Vec<String>,
     pub flags: BTreeMap<String, String>,
+    /// every value a flag appeared with, in order — `flags` keeps the
+    /// last one (the historical behavior); repeatable flags
+    /// (`--model a=1.qtz --model b=2.qtz`) read [`Args::all`] instead
+    pub multi: BTreeMap<String, Vec<String>>,
 }
 
 impl Args {
@@ -30,11 +34,9 @@ impl Args {
                     .peek()
                     .map(|n| !n.starts_with("--"))
                     .unwrap_or(false);
-                if is_val {
-                    out.flags.insert(name.to_string(), it.next().unwrap());
-                } else {
-                    out.flags.insert(name.to_string(), "true".to_string());
-                }
+                let val = if is_val { it.next().unwrap() } else { "true".to_string() };
+                out.multi.entry(name.to_string()).or_default().push(val.clone());
+                out.flags.insert(name.to_string(), val);
             } else {
                 out.positional.push(a);
             }
@@ -52,6 +54,15 @@ impl Args {
 
     pub fn opt(&self, name: &str) -> Option<&str> {
         self.flags.get(name).map(|s| s.as_str())
+    }
+
+    /// Every occurrence of a repeatable flag, in command-line order
+    /// (empty if absent).
+    pub fn all(&self, name: &str) -> Vec<&str> {
+        self.multi
+            .get(name)
+            .map(|v| v.iter().map(String::as_str).collect())
+            .unwrap_or_default()
     }
 
     pub fn usize(&self, name: &str, default: usize) -> Result<usize> {
@@ -97,6 +108,15 @@ mod tests {
         assert_eq!(a.subcommand, "table");
         assert_eq!(a.positional, vec!["7"]);
         assert_eq!(a.usize("seeds", 1).unwrap(), 3);
+    }
+
+    #[test]
+    fn repeated_flags_collect_in_order() {
+        let a = parse("serve --model a=1.qtz --model b=2.qtz --shards 2");
+        assert_eq!(a.all("model"), vec!["a=1.qtz", "b=2.qtz"]);
+        assert_eq!(a.str("model", ""), "b=2.qtz"); // last wins, as before
+        assert_eq!(a.all("shards"), vec!["2"]);
+        assert!(a.all("absent").is_empty());
     }
 
     #[test]

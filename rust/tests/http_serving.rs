@@ -9,11 +9,12 @@ use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::time::Duration;
 
-use adaround::coordinator::{Method, Pipeline, PipelineConfig, QuantizedModel};
+use adaround::coordinator::{save_quantized, Method, Pipeline, PipelineConfig, QuantizedModel};
 use adaround::data::synthetic_stripes;
 use adaround::nn::Model;
 use adaround::serve::{
-    infer_body, BatchPolicy, Batcher, HttpClient, HttpConfig, HttpServer, ServeEngine,
+    infer_body, BatchPolicy, Batcher, HttpClient, HttpConfig, HttpServer, ModelRegistry,
+    ServeEngine,
 };
 use adaround::tensor::Tensor;
 use adaround::util::{Json, Rng};
@@ -325,6 +326,159 @@ fn unknown_routes_and_bad_bodies() {
         .unwrap();
     assert_eq!(code, 200);
     server.shutdown();
+}
+
+/// Two models behind one server: `/v1/models/<id>/infer` routes by id,
+/// `/v1/infer` aliases the default (first-registered) model, unknown ids
+/// are 404, and both `/healthz` and `/metrics` expose per-model state.
+#[test]
+fn multi_model_routing_and_observability() {
+    let (model_a, qm_a, oracle_a, images) = fixture(2001);
+    let (model_b, qm_b, oracle_b, _) = fixture(2002);
+    assert_ne!(oracle_a, oracle_b, "the two models must be distinguishable");
+    let policy =
+        BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1), ..Default::default() };
+    let registry = ModelRegistry::builder()
+        .register("alpha", ServeEngine::compile(&model_a, &qm_a, &[3, 16, 16]).unwrap(), policy)
+        .unwrap()
+        .register("beta", ServeEngine::compile(&model_b, &qm_b, &[3, 16, 16]).unwrap(), policy)
+        .unwrap()
+        .build()
+        .unwrap();
+    let server = HttpServer::bind_registry(registry, "127.0.0.1:0", HttpConfig::default()).unwrap();
+    let mut cli = HttpClient::connect(server.local_addr()).unwrap();
+
+    // routing: each id answers with its own model's exact rows
+    let body0 = infer_body(&images[0]);
+    let (code, body) = cli.request("POST", "/v1/models/alpha/infer", &[], &body0).unwrap();
+    assert_eq!(code, 200);
+    assert_eq!(le_f32(&body), oracle_a[0]);
+    let (code, body) = cli.request("POST", "/v1/models/beta/infer", &[], &body0).unwrap();
+    assert_eq!(code, 200);
+    assert_eq!(le_f32(&body), oracle_b[0]);
+    // the unprefixed route is the default (first-registered) model
+    let (code, body) = cli.request("POST", "/v1/infer", &[], &body0).unwrap();
+    assert_eq!(code, 200);
+    assert_eq!(le_f32(&body), oracle_a[0]);
+    let (code, _) = cli.request("POST", "/v1/models/nope/infer", &[], &body0).unwrap();
+    assert_eq!(code, 404);
+    let (code, head, _) = cli.request_full("GET", "/v1/models/alpha/infer", &[], &[]).unwrap();
+    assert_eq!(code, 405);
+    assert_eq!(head.header("allow"), Some("POST"));
+
+    // listing
+    let (code, body) = cli.request("GET", "/v1/models", &[], &[]).unwrap();
+    assert_eq!(code, 200);
+    let j = Json::parse(&String::from_utf8(body).unwrap()).unwrap();
+    assert_eq!(j.get("default").and_then(|s| s.as_str()), Some("alpha"));
+    let ids: Vec<String> = j
+        .get("models")
+        .and_then(|m| m.as_arr())
+        .expect("models should be an array")
+        .iter()
+        .filter_map(|x| x.as_str().map(String::from))
+        .collect();
+    assert_eq!(ids, vec!["alpha".to_string(), "beta".to_string()]);
+
+    // healthz: per-model block with generation 1 each
+    let (_, body) = cli.request("GET", "/healthz", &[], &[]).unwrap();
+    let j = Json::parse(&String::from_utf8(body).unwrap()).unwrap();
+    assert_eq!(j.get("default_model").and_then(|s| s.as_str()), Some("alpha"));
+    let models = j.get("models").expect("healthz models object");
+    for id in ["alpha", "beta"] {
+        let m = models.get(id).unwrap_or_else(|| panic!("healthz missing model '{id}'"));
+        assert_eq!(m.get("generation").and_then(|g| g.as_f64()), Some(1.0), "model {id}");
+        assert_eq!(m.get("reloadable").and_then(|b| b.as_bool()), Some(false), "model {id}");
+    }
+
+    // metrics: the classic unlabeled block counts the DEFAULT model only
+    // (2 requests: one /v1/models/alpha/infer + one /v1/infer), while the
+    // labeled per-model series cover both
+    let (_, body) = cli.request("GET", "/metrics", &[], &[]).unwrap();
+    let text = String::from_utf8(body).unwrap();
+    assert_eq!(metric(&text, "pallas_infer_requests_total"), 2.0);
+    assert_eq!(metric(&text, "pallas_model_requests_total{model=\"alpha\"}"), 2.0);
+    assert_eq!(metric(&text, "pallas_model_requests_total{model=\"beta\"}"), 1.0);
+    assert_eq!(metric(&text, "pallas_model_generation{model=\"alpha\"}"), 1.0);
+    assert_eq!(metric(&text, "pallas_model_generation{model=\"beta\"}"), 1.0);
+    server.shutdown();
+}
+
+/// Hot-swap observed through the HTTP layer: a `.qtz`-backed model is
+/// reloaded while the server runs; `/metrics` and `/healthz` report the
+/// new generation and inference flips to the new weights — with zero
+/// non-200 responses along the way (the CI smoke step's in-process twin).
+#[test]
+fn hot_swap_visible_through_http_with_no_errors() {
+    let (model, qm_a, oracle_a, images) = fixture(2003);
+    let (model_b, qm_b, _, _) = fixture(2004);
+    // qm_b over model's arch: the second observable generation
+    let mut oracle_engine = ServeEngine::compile(&model, &qm_b, &[3, 16, 16]).unwrap();
+    let oracle_b: Vec<Vec<f32>> = images
+        .iter()
+        .map(|img| {
+            let mut shape = vec![1usize];
+            shape.extend_from_slice(&img.shape);
+            oracle_engine.forward(&Tensor::from_vec(&shape, img.data.clone())).data
+        })
+        .collect();
+    drop(model_b);
+    assert_ne!(oracle_a, oracle_b);
+
+    let path = std::env::temp_dir().join("http_hot_swap.qtz");
+    save_quantized(&path, &qm_a).unwrap();
+    let registry = ModelRegistry::builder()
+        .register_qtz(
+            "live",
+            model.clone(),
+            &path,
+            &[3, 16, 16],
+            BatchPolicy { max_wait: Duration::from_millis(1), shards: 2, ..Default::default() },
+        )
+        .unwrap()
+        .build()
+        .unwrap();
+    let server = HttpServer::bind_registry(registry, "127.0.0.1:0", HttpConfig::default()).unwrap();
+    let mut cli = HttpClient::connect(server.local_addr()).unwrap();
+    let body0 = infer_body(&images[0]);
+
+    let (code, body) = cli.request("POST", "/v1/models/live/infer", &[], &body0).unwrap();
+    assert_eq!((code, le_f32(&body)), (200, oracle_a[0].clone()));
+
+    save_quantized(&path, &qm_b).unwrap();
+    assert_eq!(server.registry().expect("running").reload("live").unwrap(), 2);
+
+    // every response during adoption is a 200 matching one generation,
+    // and the new one arrives within the idle-recheck window
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    loop {
+        let (code, body) = cli.request("POST", "/v1/models/live/infer", &[], &body0).unwrap();
+        assert_eq!(code, 200, "no request may fail across a hot-swap");
+        let row = le_f32(&body);
+        assert!(row == oracle_a[0] || row == oracle_b[0], "torn response");
+        if row == oracle_b[0] {
+            break;
+        }
+        assert!(std::time::Instant::now() < deadline, "generation 2 never served");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    let (_, body) = cli.request("GET", "/metrics", &[], &[]).unwrap();
+    let text = String::from_utf8(body).unwrap();
+    assert_eq!(metric(&text, "pallas_model_generation{model=\"live\"}"), 2.0);
+    assert_eq!(
+        metric(&text, "pallas_model_reloads_total{model=\"live\",outcome=\"ok\"}"),
+        1.0
+    );
+    assert!(
+        text.contains("generation=\"2\""),
+        "pallas_plan_info must carry the live generation label"
+    );
+    let (_, body) = cli.request("GET", "/healthz", &[], &[]).unwrap();
+    let j = Json::parse(&String::from_utf8(body).unwrap()).unwrap();
+    assert_eq!(j.get("generation").and_then(|g| g.as_f64()), Some(2.0));
+    server.shutdown();
+    std::fs::remove_file(&path).ok();
 }
 
 #[test]

@@ -1,0 +1,401 @@
+//! The hot-swap contract, end to end: concurrent submitters racing
+//! forced plan swaps must never see a torn batch or lose a request; old
+//! generations must actually be freed once every shard adopts; a failed
+//! reload must leave the old generation serving; the mtime watcher must
+//! pick up a rewritten bundle. Self-contained (synthetic model + data;
+//! no `make artifacts`).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use std::collections::BTreeMap;
+
+use adaround::coordinator::{save_quantized, Method, Pipeline, PipelineConfig, QuantizedModel};
+use adaround::data::synthetic_stripes;
+use adaround::nn::Model;
+use adaround::serve::{
+    compile_plan, BatchPolicy, Batcher, ModelRegistry, ServeEngine, SubmitError, SwapError,
+};
+use adaround::tensor::Tensor;
+use adaround::util::parallel::with_threads;
+use adaround::util::{Json, Rng};
+
+/// Tiny conv classifier (conv+relu, residual add, avgpool, gpool,
+/// dense); `seed` picks the weights, so two seeds give two models with
+/// identical geometry and different outputs — the two distinguishable
+/// generations every test here swaps between.
+fn tiny_model(seed: u64) -> Model {
+    let ir = r#"{"task":"cls","ir":[
+      {"id":"in","op":"input","inputs":[]},
+      {"id":"c1","op":"conv","inputs":["in"],"cin":3,"cout":8,
+       "k":3,"stride":1,"pad":1,"groups":1,"relu":true},
+      {"id":"c2","op":"conv","inputs":["c1"],"cin":8,"cout":8,
+       "k":3,"stride":1,"pad":1,"groups":1,"relu":false},
+      {"id":"a1","op":"add","inputs":["c2","c1"],"relu":true},
+      {"id":"p1","op":"avgpool","inputs":["a1"],"k":2,"stride":2},
+      {"id":"g1","op":"gpool","inputs":["p1"]},
+      {"id":"d1","op":"dense","inputs":["g1"],"cin":8,"cout":3,"relu":false}
+    ]}"#;
+    let entry = Json::parse(ir).unwrap();
+    let mut rng = Rng::new(seed);
+    let mut w = BTreeMap::new();
+    let mut tensor = |shape: &[usize], std: f32, rng: &mut Rng| {
+        let n: usize = shape.iter().product();
+        Tensor::from_vec(shape, (0..n).map(|_| rng.normal_f32(0.0, std)).collect())
+    };
+    w.insert("c1.w".into(), tensor(&[8, 3, 3, 3], 0.25, &mut rng));
+    w.insert("c1.b".into(), tensor(&[8], 0.05, &mut rng));
+    w.insert("c2.w".into(), tensor(&[8, 8, 3, 3], 0.12, &mut rng));
+    w.insert("c2.b".into(), tensor(&[8], 0.05, &mut rng));
+    w.insert("d1.w".into(), tensor(&[3, 8], 0.4, &mut rng));
+    w.insert("d1.b".into(), tensor(&[3], 0.05, &mut rng));
+    Model::from_manifest("hotswap", &entry, w).unwrap()
+}
+
+fn quantize_8_8(model: &Model, calib: &Tensor) -> QuantizedModel {
+    let cfg = PipelineConfig {
+        method: Method::Nearest,
+        bits: 8,
+        per_channel: true,
+        act_bits: Some(8),
+        calib_n: calib.shape[0],
+        ..Default::default()
+    };
+    Pipeline::new(model, cfg, None).quantize(calib, &mut Rng::new(7)).unwrap()
+}
+
+/// Split a [N,C,H,W] batch into per-image tensors.
+fn images_of(x: &Tensor) -> Vec<Tensor> {
+    let per: usize = x.shape[1..].iter().product();
+    (0..x.shape[0])
+        .map(|i| Tensor::from_vec(&x.shape[1..], x.data[i * per..(i + 1) * per].to_vec()))
+        .collect()
+}
+
+/// Per-image oracle rows for one (arch, quantized-weights) pair: what a
+/// single-engine forward answers for each pool image, batch-invariantly.
+fn oracle_rows(model: &Model, qm: &QuantizedModel, images: &[Tensor]) -> Vec<Vec<f32>> {
+    let mut engine = ServeEngine::compile(model, qm, &[3, 16, 16]).unwrap();
+    images
+        .iter()
+        .map(|img| {
+            let mut shape = vec![1usize];
+            shape.extend_from_slice(&img.shape);
+            engine.forward(&Tensor::from_vec(&shape, img.data.clone())).data
+        })
+        .collect()
+}
+
+/// Everything the swap tests share: one float arch, two quantized weight
+/// sets over it (generation A and B), the image pool and both oracles.
+struct SwapFixture {
+    model: Model,
+    qm_a: QuantizedModel,
+    qm_b: QuantizedModel,
+    images: Vec<Tensor>,
+    oracle_a: Vec<Vec<f32>>,
+    oracle_b: Vec<Vec<f32>>,
+}
+
+fn swap_fixture() -> SwapFixture {
+    let mut rng = Rng::new(11);
+    let model = tiny_model(1);
+    let model_b = tiny_model(2);
+    let (calib, _) = synthetic_stripes(32, 3, 16, &mut rng);
+    let (val, _) = synthetic_stripes(8, 3, 16, &mut rng);
+    let qm_a = quantize_8_8(&model, &calib);
+    // qm_b carries model_b's rounded weights; compiled over `model`'s
+    // arch they form the second, observably-different generation
+    let qm_b = quantize_8_8(&model_b, &calib);
+    let images = images_of(&val);
+    let oracle_a = oracle_rows(&model, &qm_a, &images);
+    let oracle_b = oracle_rows(&model, &qm_b, &images);
+    assert_ne!(oracle_a, oracle_b, "the two generations must be distinguishable");
+    SwapFixture { model, qm_a, qm_b, images, oracle_a, oracle_b }
+}
+
+/// Satellite 1, the core race: concurrent submitters vs repeated forced
+/// hot-swaps between two plans with distinct oracle outputs. Every
+/// response must bit-match exactly one generation's oracle (a batch is
+/// never computed by a torn mix of weights) and no request may be lost —
+/// across every (PALLAS_THREADS, shards) combination the acceptance
+/// criteria name.
+#[test]
+fn swap_race_every_response_matches_exactly_one_generation() {
+    let fx = swap_fixture();
+    const SWAPS: usize = 6;
+    const CLIENTS: usize = 4;
+    const PER_CLIENT: usize = 40;
+    for threads in [1usize, 4] {
+        for shards in [1usize, 4] {
+            with_threads(threads, || {
+                let engine = ServeEngine::compile(&fx.model, &fx.qm_a, &[3, 16, 16]).unwrap();
+                let batcher = Batcher::new(
+                    engine,
+                    BatchPolicy {
+                        max_batch: 4,
+                        max_wait: Duration::from_millis(1),
+                        shards,
+                        depth_budget: 512, // no QueueFull noise in this test
+                    },
+                );
+                let answered = AtomicUsize::new(0);
+                std::thread::scope(|s| {
+                    for c in 0..CLIENTS {
+                        let h = batcher.handle();
+                        let (fx, answered) = (&fx, &answered);
+                        s.spawn(move || {
+                            let mut pending = Vec::new();
+                            for i in 0..PER_CLIENT {
+                                let idx = (c * PER_CLIENT + i) % fx.images.len();
+                                let rx = h.submit(fx.images[idx].clone()).expect("admitted");
+                                pending.push((idx, rx));
+                                // a sliding window keeps swaps landing
+                                // while requests are still in flight
+                                if pending.len() >= 8 {
+                                    let (idx, rx) = pending.remove(0);
+                                    let row = rx.recv().expect("request lost");
+                                    assert!(
+                                        row == fx.oracle_a[idx] || row == fx.oracle_b[idx],
+                                        "image {idx}: response matches neither generation"
+                                    );
+                                    answered.fetch_add(1, Ordering::Relaxed);
+                                }
+                            }
+                            for (idx, rx) in pending {
+                                let row = rx.recv().expect("request lost");
+                                assert!(
+                                    row == fx.oracle_a[idx] || row == fx.oracle_b[idx],
+                                    "image {idx}: response matches neither generation"
+                                );
+                                answered.fetch_add(1, Ordering::Relaxed);
+                            }
+                        });
+                    }
+                    // the swapper: alternate B, A, B, ... while traffic flows
+                    let (batcher, fx) = (&batcher, &fx);
+                    s.spawn(move || {
+                        for k in 0..SWAPS {
+                            std::thread::sleep(Duration::from_millis(3));
+                            let qm = if k % 2 == 0 { &fx.qm_b } else { &fx.qm_a };
+                            let plan = compile_plan(&fx.model, qm, &[3, 16, 16]).unwrap();
+                            batcher.swap_plan(plan).expect("swap accepted");
+                        }
+                    });
+                });
+                assert_eq!(
+                    answered.load(Ordering::Relaxed),
+                    CLIENTS * PER_CLIENT,
+                    "zero-loss violated at threads={threads} shards={shards}"
+                );
+                assert_eq!(batcher.generation(), 1 + SWAPS as u64);
+                assert_eq!(batcher.metrics().generation.get(), 1 + SWAPS as i64);
+                batcher.shutdown();
+            });
+        }
+    }
+}
+
+/// After a swap, idle shards adopt within IDLE_RECHECK and the last
+/// adopter drops the final reference: the old generation's weights are
+/// actually freed, observed directly via `Arc::strong_count`.
+#[test]
+fn old_generation_is_freed_after_all_shards_adopt() {
+    let fx = swap_fixture();
+    let engine = ServeEngine::compile(&fx.model, &fx.qm_a, &[3, 16, 16]).unwrap();
+    let batcher = Batcher::new(
+        engine,
+        BatchPolicy { shards: 2, max_wait: Duration::from_millis(1), ..Default::default() },
+    );
+    let old = batcher.plan(); // our probe reference to generation 1
+    assert!(
+        Arc::strong_count(&old) >= 4,
+        "cell + 2 shard engines + probe should hold generation 1"
+    );
+    let plan_b = compile_plan(&fx.model, &fx.qm_b, &[3, 16, 16]).unwrap();
+    assert_eq!(batcher.swap_plan(plan_b).unwrap(), 2);
+    // no traffic at all: adoption must happen via the idle recheck
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while Arc::strong_count(&old) > 1 {
+        assert!(
+            Instant::now() < deadline,
+            "old generation still referenced ({} strong) after swap",
+            Arc::strong_count(&old)
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    // and the swapped-in generation actually answers
+    let rx = batcher.submit(fx.images[0].clone()).expect("admitted");
+    assert_eq!(rx.recv().expect("response"), fx.oracle_b[0]);
+    batcher.shutdown();
+}
+
+/// A replacement plan with different input geometry is refused — the
+/// invariant every outstanding `BatcherHandle` was validated against.
+#[test]
+fn swap_rejects_input_shape_mismatch() {
+    let fx = swap_fixture();
+    let engine = ServeEngine::compile(&fx.model, &fx.qm_a, &[3, 16, 16]).unwrap();
+    let batcher = Batcher::new(engine, BatchPolicy::default());
+    let small = compile_plan(&fx.model, &fx.qm_b, &[3, 8, 8]).unwrap();
+    match batcher.swap_plan(small) {
+        Err(SwapError::ShapeMismatch { got, want }) => {
+            assert_eq!(got, vec![3, 8, 8]);
+            assert_eq!(want, vec![3, 16, 16]);
+        }
+        other => panic!("expected ShapeMismatch, got {other:?}"),
+    }
+    assert_eq!(batcher.generation(), 1, "a rejected swap must not bump the generation");
+    batcher.shutdown();
+}
+
+/// Poll traffic until the served answer for image 0 equals `want`
+/// (adoption is asynchronous); every interim answer must still match one
+/// of the two known generations.
+fn await_served(registry: &ModelRegistry, id: &str, fx: &SwapFixture, want: &[Vec<f32>]) {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let rx =
+            registry.get(id).unwrap().handle().submit(fx.images[0].clone()).expect("admitted");
+        let row = rx.recv().expect("response");
+        assert!(
+            row == fx.oracle_a[0] || row == fx.oracle_b[0],
+            "response matches neither generation"
+        );
+        if row == want[0] {
+            return;
+        }
+        assert!(Instant::now() < deadline, "new generation never served");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+/// Satellite 2's serving half: a `.qtz`-backed registry hot-reloads a
+/// rewritten bundle on demand, and a reload over a corrupted bundle
+/// fails cleanly — counted in the metrics — while the previous
+/// generation keeps answering.
+#[test]
+fn reload_swaps_bundle_and_failed_reload_keeps_serving() {
+    let fx = swap_fixture();
+    let path = std::env::temp_dir().join("registry_reload_test.qtz");
+    save_quantized(&path, &fx.qm_a).unwrap();
+    let registry = ModelRegistry::builder()
+        .register_qtz(
+            "m",
+            fx.model.clone(),
+            &path,
+            &[3, 16, 16],
+            BatchPolicy { shards: 2, max_wait: Duration::from_millis(1), ..Default::default() },
+        )
+        .unwrap()
+        .build()
+        .unwrap();
+    assert_eq!(registry.default_id(), "m");
+    let entry = registry.get("m").unwrap();
+    assert!(entry.reloadable());
+    assert_eq!(entry.stamp().generation, 1);
+    await_served(&registry, "m", &fx, &fx.oracle_a);
+
+    // rewrite the bundle -> manual reload -> generation 2 serves B
+    save_quantized(&path, &fx.qm_b).unwrap();
+    assert_eq!(registry.reload("m").unwrap(), 2);
+    assert_eq!(entry.stamp().generation, 2);
+    assert_eq!(entry.metrics().reloads_ok.get(), 1);
+    await_served(&registry, "m", &fx, &fx.oracle_b);
+
+    // corrupt the bundle -> reload fails -> generation 2 keeps serving
+    std::fs::write(&path, b"QTZ1 definitely not a bundle").unwrap();
+    assert!(registry.reload("m").is_err());
+    assert_eq!(entry.metrics().reloads_failed.get(), 1);
+    assert_eq!(entry.stamp().generation, 2, "failed reload must not bump the generation");
+    let mut prom = String::new();
+    entry.metrics().render_model_prometheus("m", &mut prom);
+    assert!(prom.contains("pallas_model_reloads_total{model=\"m\",outcome=\"failed\"} 1"));
+    await_served(&registry, "m", &fx, &fx.oracle_b);
+
+    registry.shutdown();
+    std::fs::remove_file(&path).ok();
+}
+
+/// The watcher path: build with `build_watched`, rewrite the bundle on
+/// disk, and the mtime debounce reloads it with no explicit call.
+#[test]
+fn watcher_hot_swaps_a_rewritten_bundle() {
+    let fx = swap_fixture();
+    let path = std::env::temp_dir().join("registry_watch_test.qtz");
+    save_quantized(&path, &fx.qm_a).unwrap();
+    let registry = ModelRegistry::builder()
+        .register_qtz(
+            "w",
+            fx.model.clone(),
+            &path,
+            &[3, 16, 16],
+            BatchPolicy { shards: 1, max_wait: Duration::from_millis(1), ..Default::default() },
+        )
+        .unwrap()
+        .build_watched(Duration::from_millis(50))
+        .unwrap();
+    assert!(registry.watching());
+    let entry = registry.get("w").unwrap();
+    await_served(&registry, "w", &fx, &fx.oracle_a);
+
+    save_quantized(&path, &fx.qm_b).unwrap();
+    let deadline = Instant::now() + Duration::from_secs(15);
+    while entry.stamp().generation < 2 {
+        assert!(Instant::now() < deadline, "watcher never picked up the rewritten bundle");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    assert_eq!(entry.metrics().reloads_ok.get(), 1);
+    await_served(&registry, "w", &fx, &fx.oracle_b);
+    registry.shutdown();
+    std::fs::remove_file(&path).ok();
+}
+
+/// Satellite 4 regression: shape validation happens BEFORE the admission
+/// CAS, so a burst of malformed submits can neither consume in-flight
+/// slots nor release ones it never took — the inflight gauge is
+/// untouched and well-formed traffic still sees the full budget.
+#[test]
+fn bad_shape_burst_leaves_admission_state_untouched() {
+    let fx = swap_fixture();
+    let engine = ServeEngine::compile(&fx.model, &fx.qm_a, &[3, 16, 16]).unwrap();
+    let batcher = Batcher::new(
+        engine,
+        // long max_wait + large max_batch: the two admitted requests
+        // stay in flight while the burst runs
+        BatchPolicy {
+            max_batch: 64,
+            max_wait: Duration::from_millis(500),
+            shards: 1,
+            depth_budget: 2,
+        },
+    );
+    let m = Arc::clone(batcher.metrics());
+    let rx1 = batcher.submit(fx.images[0].clone()).expect("first admitted");
+    let rx2 = batcher.submit(fx.images[1].clone()).expect("second admitted");
+    assert_eq!(m.inflight(), 2, "budget filled");
+
+    for _ in 0..100 {
+        match batcher.submit(Tensor::zeros(&[3, 8, 8])) {
+            Err(SubmitError::BadShape { got, want }) => {
+                assert_eq!((got, want), (3 * 8 * 8, 3 * 16 * 16));
+            }
+            other => panic!("bad-shape submit must fail with BadShape, got {other:?}"),
+        }
+        assert_eq!(m.inflight(), 2, "a bad-shape submit must not touch the inflight gauge");
+    }
+    assert_eq!(m.rejected_shape.get(), 100);
+    assert_eq!(m.rejected_full.get(), 0, "bad shapes must be rejected before the CAS");
+
+    // the budget is still genuinely full for well-formed traffic...
+    match batcher.submit(fx.images[0].clone()) {
+        Err(SubmitError::QueueFull { budget: 2 }) => {}
+        Ok(_) => panic!("submit admitted past the budget"),
+        Err(e) => panic!("expected QueueFull at budget 2, got {e:?}"),
+    }
+    // ...and the two admitted requests are answered untouched
+    assert_eq!(rx1.recv().expect("response"), fx.oracle_a[0]);
+    assert_eq!(rx2.recv().expect("response"), fx.oracle_a[1]);
+    batcher.shutdown();
+}

@@ -401,6 +401,84 @@ fn v3_bundles_are_at_least_1p9x_smaller_than_v2() {
     std::fs::remove_file(p2).ok();
 }
 
+/// Corrupt-bundle matrix: every malformed `.qtz` a server might be
+/// pointed at (truncation anywhere, bad magic, payloads smaller than the
+/// declared shape, dtype codes from the future) must surface as a clean
+/// `Err` from the loader — never a panic, never a garbage model. This is
+/// what makes a failed hot reload safe: the registry counts the error
+/// and keeps serving the old generation (`rust/tests/registry_serving.rs`
+/// asserts that half).
+#[test]
+fn corrupt_bundles_fail_cleanly() {
+    let mut rng = Rng::new(111);
+    let model = tiny_model(&mut rng);
+    let (calib, _) = synthetic_stripes(32, 3, 16, &mut rng);
+    let dir = std::env::temp_dir();
+    let check = |name: &str, bytes: &[u8], needle: &str| {
+        let p = dir.join(name);
+        std::fs::write(&p, bytes).unwrap();
+        let err = load_quantized(&p)
+            .err()
+            .unwrap_or_else(|| panic!("{name}: corrupt bundle loaded successfully"));
+        let msg = format!("{err:#}"); // full anyhow chain
+        assert!(msg.contains(needle), "{name}: error {msg:?} lacks {needle:?}");
+        std::fs::remove_file(&p).ok();
+    };
+
+    // a real v2 and a real v3 bundle as corruption substrates
+    for (version, qm) in [
+        (2, strip_wbits(&quantize_4_8(&model, &calib))),
+        (3, quantize_4_8(&model, &calib)),
+    ] {
+        let p = dir.join(format!("corrupt_src_v{version}.qtz"));
+        save_quantized(&p, &qm).unwrap();
+        let full = std::fs::read(&p).unwrap();
+        std::fs::remove_file(&p).ok();
+        // truncation at a spread of offsets: inside the header, inside an
+        // entry name, inside a shape, inside payloads, one byte short
+        for cut in [3, 6, 11, full.len() / 4, full.len() / 2, full.len() - 1] {
+            let needle = if cut < 4 { "" } else { "truncated" };
+            check(&format!("trunc_v{version}_{cut}.qtz"), &full[..cut], needle);
+        }
+        // flipped magic on otherwise-valid bytes
+        let mut bad = full.clone();
+        bad[0] = b'X';
+        check(&format!("badmagic_v{version}.qtz"), &bad, "bad magic");
+    }
+
+    // hand-crafted single-entry bundles whose payload is smaller than the
+    // declared shape demands (i8 wants 10 bytes, i4 wants ceil(9/2)=5)
+    let entry = |dtype: u8, dim: u32, payload: &[u8]| -> Vec<u8> {
+        let mut raw = Vec::new();
+        raw.extend_from_slice(b"QTZ1");
+        raw.extend_from_slice(&1u32.to_le_bytes());
+        raw.extend_from_slice(&1u16.to_le_bytes());
+        raw.push(b'x');
+        raw.push(dtype);
+        raw.push(1); // ndim
+        raw.extend_from_slice(&dim.to_le_bytes());
+        raw.extend_from_slice(payload);
+        raw
+    };
+    check("undersized_i8.qtz", &entry(3, 10, &[1, 2, 3, 4]), "truncated");
+    check("undersized_i4.qtz", &entry(4, 9, &[0xAB, 0xCD]), "truncated");
+    check("undersized_f32.qtz", &entry(0, 4, &[0; 7]), "truncated");
+    // a dtype code this build has never heard of
+    check("future_dtype.qtz", &entry(9, 2, &[0; 8]), "unknown dtype code 9");
+    // a shape engineered to overflow the payload-size arithmetic
+    let mut huge = Vec::new();
+    huge.extend_from_slice(b"QTZ1");
+    huge.extend_from_slice(&1u32.to_le_bytes());
+    huge.extend_from_slice(&1u16.to_le_bytes());
+    huge.push(b'x');
+    huge.push(0);
+    huge.push(3);
+    for _ in 0..3 {
+        huge.extend_from_slice(&u32::MAX.to_le_bytes());
+    }
+    check("overflow_shape.qtz", &huge, "overflow");
+}
+
 #[test]
 fn batcher_coalesces_and_answers_correctly() {
     let mut rng = Rng::new(61);
