@@ -22,7 +22,7 @@ use adaround::quant::{fake_quant_nearest, rounding_mask, QuantGrid, RoundingMode
 use adaround::qubo::{solve_cem, solve_tabu, CemParams, QuboProblem, TabuParams};
 use adaround::runtime::{Runtime, StepState};
 use adaround::tensor::int8::kernel::{
-    self as ikern, gemm_conv4_packed_into, gemm_conv_packed_into, gemm_dense4_packed_into,
+    autotune, gemm_conv4_packed_into, gemm_conv_packed_into, gemm_dense4_packed_into,
     gemm_dense_packed_into, Kernel, PackedConv, PackedConv4, PackedDense, PackedDense4,
 };
 use adaround::tensor::int8::{gemm_i8_into, gemm_u8_bt_into};
@@ -116,10 +116,10 @@ fn main() {
     record(&mut results, r);
 
     // int8 GEMMs at a conv-bucket shape (the serving engine's hot kernel):
-    // the old unpacked scalar loop vs the packed micro-kernels, portable
-    // and (when the CPU has it) AVX2. Entry names carry the kernel label;
-    // bench-diff skips entries absent from one side, so the avx2 rows
-    // vanish harmlessly on machines without it.
+    // the old unpacked scalar loop vs the packed micro-kernels across
+    // every ISA variant this machine can run. Entry names carry the
+    // kernel label; bench-diff skips entries absent from one side, so
+    // ISA-specific rows vanish harmlessly on machines without them.
     {
         let (m, k, n) = (32usize, 288usize, 1024usize);
         let a: Vec<i8> = (0..m * k).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
@@ -132,10 +132,10 @@ fn main() {
         });
         record(&mut results, r);
 
-        let mut kerns = vec![Kernel::Portable];
-        if ikern::avx2_available() {
-            kerns.push(Kernel::Avx2);
-        }
+        // every ISA variant this machine can run (portable always;
+        // avx2/avx512/neon when available) — absent rows vanish
+        // harmlessly from bench-diff on machines without the ISA
+        let kerns: Vec<Kernel> = Kernel::all().into_iter().filter(|kk| kk.available()).collect();
         let packed = PackedConv::pack(&a, m, k);
         for &kern in &kerns {
             let r = b.run_with_items(
@@ -202,6 +202,18 @@ fn main() {
             );
             record(&mut results, r);
         }
+
+        // what one per-shape autotune costs at compile_plan time: times
+        // every available (kernel, cfg) candidate on this conv shape and
+        // picks the winner — the per-op price of the dispatch layer
+        let r = b.run(&format!("autotune conv {m}x{k}x{n}"), || {
+            std::hint::black_box(autotune::tune_conv(m, k, n, false));
+        });
+        record(&mut results, r);
+        let r = b.run(&format!("autotune dense {n}x{k}"), || {
+            std::hint::black_box(autotune::tune_dense(n, k, false));
+        });
+        record(&mut results, r);
     }
 
     // native AdaRound step (loss_grad_into + Adam, reused workspace) at

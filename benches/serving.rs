@@ -95,6 +95,16 @@ fn main() -> anyhow::Result<()> {
         "packed weight bytes: w8 plan {wb8}, w4 plan {wb4} ({:.2}x smaller)",
         wb8 as f64 / wb4 as f64
     );
+    let autotune_ms = engine.plan.autotune_ms;
+    let op_kernels = engine.plan.op_choices();
+    println!(
+        "autotune: {autotune_ms:.1} ms, per-op choices: {}",
+        op_kernels
+            .iter()
+            .map(|(op, ch)| format!("{op}={}", ch.label()))
+            .collect::<Vec<_>>()
+            .join(" ")
+    );
 
     // parity: the int8 engine must mirror the fake-quant simulation
     let logits_fq = model.forward(&val, &opts);
@@ -171,6 +181,7 @@ fn main() -> anyhow::Result<()> {
         max_wait: Duration::from_millis(2),
         shards: 1,
         depth_budget: 4096,
+        ..Default::default()
     };
     let batcher = Batcher::new(engine, policy);
     println!("{:<24} {:>12} {:>12}", "offered load", "p50 ms", "p99 ms");
@@ -250,6 +261,12 @@ fn main() -> anyhow::Result<()> {
         swap_p99
     );
     results.push(latency_entry("hot-swap adopt", swap_p50, swap_p99));
+    results.push({
+        let mut o = BTreeMap::new();
+        o.insert("name".to_string(), Json::Str("plan autotune".to_string()));
+        o.insert("mean_ms".to_string(), Json::Num(autotune_ms));
+        Json::Obj(o)
+    });
 
     let mut root = BTreeMap::new();
     root.insert("bench".to_string(), Json::Str("serving".to_string()));
@@ -269,6 +286,13 @@ fn main() -> anyhow::Result<()> {
                 .collect(),
         ),
     );
+    root.insert(
+        "op_kernels".to_string(),
+        Json::Arr(
+            op_kernels.iter().map(|(id, ch)| Json::Str(format!("{id}:{}", ch.label()))).collect(),
+        ),
+    );
+    root.insert("autotune_ms".to_string(), Json::Num(autotune_ms));
     root.insert("shard_speedup_max".to_string(), Json::Num(shard_speedup));
     root.insert("results".to_string(), Json::Arr(results));
     std::fs::write("BENCH_serving.json", Json::Obj(root).to_string_pretty())?;

@@ -1,0 +1,33 @@
+// Toolchain gate for the AVX-512 VNNI kernels.
+//
+// The AVX-512 intrinsics and their `#[target_feature]` strings were
+// stabilized in Rust 1.89; on older toolchains the `tensor::int8::kernel`
+// AVX-512 module must not be compiled at all. We probe `rustc --version`
+// and emit the `pallas_avx512` cfg only when the compiler is new enough,
+// so the crate builds unchanged on older stable toolchains (the dispatch
+// layer then simply never offers the AVX-512 candidate).
+
+use std::process::Command;
+
+fn rustc_minor() -> Option<(u32, u32)> {
+    let rustc = std::env::var("RUSTC").unwrap_or_else(|_| "rustc".to_string());
+    let out = Command::new(rustc).arg("--version").output().ok()?;
+    let text = String::from_utf8(out.stdout).ok()?;
+    // "rustc 1.89.0 (abc 2025-08-01)" — second whitespace field is the version
+    let ver = text.split_whitespace().nth(1)?;
+    let mut parts = ver.split(['.', '-', '+']);
+    let major = parts.next()?.parse().ok()?;
+    let minor = parts.next()?.parse().ok()?;
+    Some((major, minor))
+}
+
+fn main() {
+    // keep `cargo clippy -- -D warnings` happy about the custom cfg
+    println!("cargo:rustc-check-cfg=cfg(pallas_avx512)");
+    if let Some((major, minor)) = rustc_minor() {
+        if (major, minor) >= (1, 89) {
+            println!("cargo:rustc-cfg=pallas_avx512");
+        }
+    }
+    println!("cargo:rerun-if-changed=build.rs");
+}

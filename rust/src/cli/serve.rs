@@ -6,7 +6,9 @@
 //! (429 past `--depth-budget` in-flight per shard) and a graceful drain
 //! on SIGTERM/ctrl-c that answers every in-flight request before
 //! exiting. `--synthetic` serves a tiny built-in model quantized
-//! in-process — no artifacts needed (CI's socket smoke test).
+//! in-process — no artifacts needed (CI's socket smoke test). Multi-shard
+//! layouts pin each shard to a NUMA-aware core set by default; `--no-pin`
+//! (or `PALLAS_NO_PIN=1`) leaves placement to the scheduler.
 //!
 //! Multi-model + hot reload ([`crate::serve::registry`]): repeated
 //! `--model id=path.qtz` flags register one model per bundle (routed at
@@ -126,6 +128,8 @@ pub fn cmd_serve_bench(args: &Args) -> Result<()> {
 
     let mut engine = ServeEngine::compile(&model, &qm, &val.0.shape[1..])?;
     let kernel_name = engine.kernel().name();
+    let op_choices = engine.plan.op_choices();
+    let autotune_ms = engine.plan.autotune_ms;
     let opts = qm.opts();
     let fp = top1(&model, &val.0, &val.1, &ForwardOptions::default(), 64);
     let fq = top1(&model, &val.0, &val.1, &opts, 64);
@@ -134,6 +138,16 @@ pub fn cmd_serve_bench(args: &Args) -> Result<()> {
     println!(
         "gemm kernel: {} (PALLAS_NO_SIMD forces portable; outputs are bit-identical either way)",
         engine.kernel().name()
+    );
+    // per-op autotuned variants (PALLAS_AUTOTUNE=0 pins the heuristic)
+    println!(
+        "autotune: {:.1} ms, per-op choices: {}",
+        autotune_ms,
+        op_choices
+            .iter()
+            .map(|(op, ch)| format!("{op}={}", ch.label()))
+            .collect::<Vec<_>>()
+            .join(" ")
     );
     println!("top-1: fp32 {fp:.2}%   fake-quant {fq:.2}%   int8 engine {iq:.2}%");
     let wb8 = engine.plan.weight_bytes();
@@ -180,6 +194,14 @@ pub fn cmd_serve_bench(args: &Args) -> Result<()> {
     }
 
     let mut results: Vec<Json> = Vec::new();
+    // compile-time autotuning cost as a bench entry (mean_ms so
+    // bench-diff's regression gate covers it once a baseline records it)
+    results.push({
+        let mut o = BTreeMap::new();
+        o.insert("name".to_string(), Json::Str("plan autotune".to_string()));
+        o.insert("mean_ms".to_string(), Json::Num(autotune_ms));
+        Json::Obj(o)
+    });
     let reps = args.usize("reps", 10)?;
     println!(
         "{:<26} {:>12} {:>12} {:>12} {:>8}",
@@ -237,6 +259,7 @@ pub fn cmd_serve_bench(args: &Args) -> Result<()> {
         // not admission control, and must stay comparable to the
         // pre-admission baselines
         depth_budget: 4096,
+        pin: !args.bool("no-pin"),
     };
     let per: usize = val.0.shape[1..].iter().product();
     let pool: Vec<Tensor> = (0..16.min(val.0.shape[0]))
@@ -290,6 +313,13 @@ pub fn cmd_serve_bench(args: &Args) -> Result<()> {
         "op_dtypes".to_string(),
         Json::Arr(dtypes.iter().map(|(n, d)| Json::Str(format!("{n}:{d}"))).collect()),
     );
+    root.insert(
+        "op_kernels".to_string(),
+        Json::Arr(
+            op_choices.iter().map(|(n, ch)| Json::Str(format!("{n}:{}", ch.label()))).collect(),
+        ),
+    );
+    root.insert("autotune_ms".to_string(), Json::Num(autotune_ms));
     root.insert("results".to_string(), Json::Arr(results));
     std::fs::write("BENCH_serving.json", Json::Obj(root).to_string_pretty())?;
     println!("(wrote BENCH_serving.json)");
@@ -422,6 +452,7 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
         max_wait: Duration::from_millis(args.usize("max-wait-ms", 3)? as u64),
         shards: args.usize("shards", parallel::num_threads())?.max(1),
         depth_budget: args.usize("depth-budget", 128)?.max(1),
+        pin: !args.bool("no-pin"),
     };
     let cfg = HttpConfig {
         auth_token: args.opt("auth-token").map(|s| s.to_string()),

@@ -13,10 +13,15 @@
 //! The lock is only ever held while *collecting*, which keeps shard
 //! hand-off at queue speed under load.
 //!
-//! Each shard runs its forwards under an equal slice of the machine's
-//! thread budget (`PALLAS_THREADS / shards`, floor 1): at shards=1 the
-//! engine keeps full intra-op parallelism (the PR-2 behavior); at
-//! shards=cores, inter-request parallelism takes over completely.
+//! Each shard runs its forwards under a near-equal slice of the
+//! machine's thread budget ([`parallel::split_budget`] — the remainder
+//! of `PALLAS_THREADS / shards` is spread over the first shards, floor
+//! 1/shard): at shards=1 the engine keeps full intra-op parallelism (the
+//! PR-2 behavior); at shards=cores, inter-request parallelism takes over
+//! completely. Multi-shard layouts additionally pin each shard (and the
+//! pool threads serving its forwards) to a distinct NUMA-aware core set
+//! ([`crate::util::topo`]), unless `BatchPolicy::pin` is off or
+//! `PALLAS_NO_PIN=1` — placement only, never results.
 //!
 //! **Admission.** The queue is bounded by in-flight depth: a submit past
 //! `depth_budget × shards` admitted-but-unanswered requests fails with
@@ -51,9 +56,9 @@ use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, SyncSender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use crate::tensor::int8::kernel::Kernel;
+use crate::tensor::int8::kernel::{GemmChoice, Kernel};
 use crate::tensor::Tensor;
-use crate::util::parallel;
+use crate::util::{parallel, topo};
 
 use super::engine::ServeEngine;
 use super::plan::QuantizedPlan;
@@ -73,6 +78,11 @@ pub struct BatchPolicy {
     /// `depth_budget × shards`, and a submit past it fails with
     /// [`SubmitError::QueueFull`] (the HTTP layer's 429)
     pub depth_budget: usize,
+    /// pin each shard's threads to a distinct NUMA-aware core set
+    /// ([`crate::util::topo`]). On by default for multi-shard layouts;
+    /// `PALLAS_NO_PIN=1` (or the serve CLI's `--no-pin`) overrides this
+    /// process-wide. Placement only — results are bit-identical either way.
+    pub pin: bool,
 }
 
 impl Default for BatchPolicy {
@@ -82,6 +92,7 @@ impl Default for BatchPolicy {
             max_wait: Duration::from_millis(5),
             shards: 1,
             depth_budget: 128,
+            pin: true,
         }
     }
 }
@@ -144,6 +155,12 @@ pub struct PlanStamp {
     pub w8_ops: usize,
     pub w4_ops: usize,
     pub in_shape: Vec<usize>,
+    /// autotuned GEMM choice per conv/dense op (plan order) — what
+    /// `serve-bench` prints and `/metrics` exports as `pallas_plan_kernel`
+    pub op_kernels: Vec<(String, GemmChoice)>,
+    /// wall-clock the autotuner spent timing candidates at compile time
+    /// (0.0 when `PALLAS_AUTOTUNE=0` pinned the heuristic)
+    pub autotune_ms: f64,
 }
 
 fn stamp_of(plan: &QuantizedPlan, generation: u64) -> PlanStamp {
@@ -156,6 +173,8 @@ fn stamp_of(plan: &QuantizedPlan, generation: u64) -> PlanStamp {
         w8_ops: dtypes.len() - w4_ops,
         w4_ops,
         in_shape: plan.in_shape.clone(),
+        op_kernels: plan.op_choices(),
+        autotune_ms: plan.autotune_ms,
     }
 }
 
@@ -302,6 +321,21 @@ impl Batcher {
     /// registry gives each model an equal slice of the machine so
     /// per-model batchers coexist without oversubscribing cores.
     pub fn with_threads(engine: ServeEngine, policy: BatchPolicy, thread_budget: usize) -> Batcher {
+        Batcher::with_placement(engine, policy, thread_budget, 0)
+    }
+
+    /// [`Batcher::with_threads`] with an explicit core-slot offset for the
+    /// pinned placement: shard `i` gets [`parallel::split_budget`]`(total,
+    /// shards, i)` threads and (when `policy.pin` and pinning is enabled)
+    /// a matching set of consecutive node-major cores starting at
+    /// `core_offset` ([`topo::shard_core_sets`]). The registry stacks
+    /// several models onto disjoint slots by passing cumulative offsets.
+    pub fn with_placement(
+        engine: ServeEngine,
+        policy: BatchPolicy,
+        thread_budget: usize,
+        core_offset: usize,
+    ) -> Batcher {
         assert!(policy.max_batch >= 1);
         assert!(policy.shards >= 1);
         assert!(policy.depth_budget >= 1);
@@ -317,9 +351,17 @@ impl Batcher {
         let rx = Arc::new(Mutex::new(rx));
         // divide the budget: intra-op threads recede as shards take
         // over. Near-equal split with the remainder spread over the first
-        // shards (as in `parallel::split_ranges`), so e.g. 16 threads /
-        // 3 shards = 6+5+5 rather than stranding a core on floor(16/3).
+        // shards, so e.g. 16 threads / 3 shards = 6+5+5 rather than
+        // stranding a core on floor(16/3).
         let total = thread_budget.max(1);
+        let budgets: Vec<usize> =
+            (0..policy.shards).map(|i| parallel::split_budget(total, policy.shards, i)).collect();
+        // NUMA-aware placement: carve one consecutive node-major core set
+        // per shard, sized to its thread budget. Single-shard layouts skip
+        // pinning — the whole machine is already the right place.
+        let core_sets: Option<Vec<Arc<[usize]>>> =
+            (policy.pin && policy.shards > 1 && topo::pinning_enabled())
+                .then(|| topo::shard_core_sets(&budgets, core_offset));
         let mut engines = Vec::with_capacity(policy.shards);
         for _ in 1..policy.shards {
             engines.push(engine.fork());
@@ -329,14 +371,19 @@ impl Batcher {
             .into_iter()
             .enumerate()
             .map(|(i, eng)| {
-                let threads =
-                    (total / policy.shards + usize::from(i < total % policy.shards)).max(1);
+                let threads = budgets[i];
+                let cores = core_sets.as_ref().map(|s| Arc::clone(&s[i]));
                 let rx = Arc::clone(&rx);
                 let metrics = Arc::clone(&metrics);
                 let cell = Arc::clone(&cell);
                 std::thread::Builder::new()
                     .name(format!("serve-shard-{i}"))
-                    .spawn(move || worker_loop(eng, policy, rx, cell, threads, metrics, i))
+                    .spawn(move || {
+                        // bind this shard (and, transitively, the pool
+                        // units its forwards submit) to its core set
+                        parallel::pin_thread_and_units(cores);
+                        worker_loop(eng, policy, rx, cell, threads, metrics, i)
+                    })
                     .expect("spawn shard worker")
             })
             .collect();

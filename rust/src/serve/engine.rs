@@ -13,7 +13,7 @@ use anyhow::Result;
 
 use crate::coordinator::QuantizedModel;
 use crate::nn::Model;
-use crate::tensor::int8::kernel::{self, Kernel};
+use crate::tensor::int8::kernel::{self, GemmChoice, Kernel};
 use crate::tensor::{Tensor, U8Tensor};
 
 use super::ikernels::{
@@ -32,11 +32,12 @@ pub struct ServeEngine {
     /// activation tensors as soon as they're dead, keeping the resident
     /// set at the live frontier instead of the whole network
     last_use: Vec<usize>,
-    /// GEMM micro-kernel implementation, captured once at construction
-    /// ([`kernel::select`]: AVX2 when detected, unless `PALLAS_NO_SIMD`)
-    /// and passed down every call — so each worker thread of a forward
-    /// runs the same code path, and tests can pin the portable one
-    kernel: Kernel,
+    /// GEMM micro-kernel override. `None` (production) runs each op's
+    /// plan-cached autotuned [`GemmChoice`]; `Some` (tests, benches, the
+    /// differential harness) pins one ISA variant for every op — results
+    /// are bit-identical either way, so the override is never needed for
+    /// correctness.
+    forced: Option<Kernel>,
     ws: Int8Workspace,
 }
 
@@ -58,42 +59,46 @@ impl ServeEngine {
         if n > 0 {
             last_use[n - 1] = usize::MAX; // the output survives the walk
         }
-        ServeEngine { plan, last_use, kernel: kernel::select(), ws: Int8Workspace::new() }
+        ServeEngine { plan, last_use, forced: None, ws: Int8Workspace::new() }
     }
 
     /// Fork a sibling engine: same read-only plan (shared, no weight
-    /// copy), same kernel choice, fresh private scratch. The unit of
+    /// copy), same kernel override, fresh private scratch. The unit of
     /// sharding in [`super::Batcher`] — forwards on forks are
     /// bit-identical to forwards on `self` because the plan is immutable
     /// and every kernel is deterministic.
     pub fn fork(&self) -> ServeEngine {
         let mut e = ServeEngine::from_shared(Arc::clone(&self.plan));
-        e.kernel = self.kernel;
+        e.forced = self.forced;
         e
     }
 
     /// Replace the plan in place: rebuild the liveness table and scratch
-    /// for `plan`, keeping the kernel choice. The hot-swap adoption step —
-    /// a shard worker calls this between batches when the generation cell
-    /// has moved, dropping its reference to the old generation's Arc.
+    /// for `plan`, keeping the kernel override. The hot-swap adoption step
+    /// — a shard worker calls this between batches when the generation
+    /// cell has moved, dropping its reference to the old generation's Arc.
     pub fn adopt_plan(&mut self, plan: Arc<QuantizedPlan>) {
-        let kernel = self.kernel;
+        let forced = self.forced;
         *self = ServeEngine::from_shared(plan);
-        self.kernel = kernel;
+        self.forced = forced;
     }
 
-    /// Pin a specific GEMM micro-kernel (tests, benches, the differential
+    /// Pin a specific GEMM micro-kernel for every op, overriding the
+    /// plan's per-op autotuned choices (tests, benches, the differential
     /// harness). Results are bit-identical across kernels, so this is
     /// never needed for correctness.
     pub fn with_kernel(mut self, kernel: Kernel) -> ServeEngine {
-        self.kernel = kernel;
+        self.forced = Some(kernel);
         self
     }
 
-    /// The GEMM micro-kernel this engine dispatches to (reported by
-    /// `adaround serve-bench`).
+    /// The GEMM micro-kernel family this engine dispatches to: the pinned
+    /// override if [`ServeEngine::with_kernel`] set one, else the
+    /// process-wide heuristic (per-op autotuned choices may still differ
+    /// in blocking config; see [`QuantizedPlan::op_choices`]). Reported by
+    /// `adaround serve-bench` and `/metrics`.
     pub fn kernel(&self) -> Kernel {
-        self.kernel
+        self.forced.unwrap_or_else(kernel::select)
     }
 
     /// Compile a float model + its quantized overrides into an engine.
@@ -103,9 +108,11 @@ impl ServeEngine {
     }
 
     /// [`ServeEngine::compile`] with explicit plan options — e.g.
-    /// `PlanOptions { force_w4: true }` to nibble-pack every layer whose
-    /// codes fit i4 regardless of the recorded bit width (the w4-vs-w8
-    /// comparison in `serve-bench`, and CI's forced-w4 job).
+    /// `PlanOptions { force_w4: true, ..Default::default() }` to
+    /// nibble-pack every layer whose codes fit i4 regardless of the
+    /// recorded bit width (the w4-vs-w8 comparison in `serve-bench`, and
+    /// CI's forced-w4 job), or `autotune: false` to pin the heuristic
+    /// kernel choice instead of timing candidates per shape.
     pub fn compile_with(
         model: &Model,
         qm: &QuantizedModel,
@@ -158,11 +165,13 @@ impl ServeEngine {
                         data: x.data.iter().map(|&v| aq.quantize(v)).collect(),
                     }
                 }
-                PlanOp::Conv { w, p, bias_q, wsum, requant, relu } => {
+                PlanOp::Conv { w, p, bias_q, wsum, requant, relu, choice } => {
                     let inp = vals[nd.inputs[0]].as_ref().expect("topological order");
+                    let ch: GemmChoice =
+                        self.forced.map(GemmChoice::from).unwrap_or(*choice);
                     conv2d_i8(
                         &mut self.ws,
-                        self.kernel,
+                        ch,
                         inp,
                         w,
                         *p,
@@ -174,11 +183,13 @@ impl ServeEngine {
                         *relu,
                     )
                 }
-                PlanOp::Dense { w, bias_q, wsum, requant, relu } => {
+                PlanOp::Dense { w, bias_q, wsum, requant, relu, choice } => {
                     let inp = vals[nd.inputs[0]].as_ref().expect("topological order");
+                    let ch: GemmChoice =
+                        self.forced.map(GemmChoice::from).unwrap_or(*choice);
                     dense_i8(
                         &mut self.ws,
-                        self.kernel,
+                        ch,
                         inp,
                         w,
                         bias_q,

@@ -373,6 +373,23 @@ impl ModelCtx {
         let _ = writeln!(out, "# TYPE pallas_plan_ops gauge");
         let _ = writeln!(out, "pallas_plan_ops{{dtype=\"w8\"}} {}", stamp.w8_ops);
         let _ = writeln!(out, "pallas_plan_ops{{dtype=\"w4\"}} {}", stamp.w4_ops);
+        let _ = writeln!(
+            out,
+            "# HELP pallas_plan_kernel autotuned GEMM variant per weight-bearing op"
+        );
+        let _ = writeln!(out, "# TYPE pallas_plan_kernel gauge");
+        for (op, ch) in &stamp.op_kernels {
+            let _ = writeln!(
+                out,
+                "pallas_plan_kernel{{op=\"{}\",kernel=\"{}\",cfg=\"{}\"}} 1",
+                op,
+                ch.kernel.name(),
+                ch.cfg
+            );
+        }
+        let _ = writeln!(out, "# HELP pallas_plan_autotune_ms compile-time autotuning cost");
+        let _ = writeln!(out, "# TYPE pallas_plan_autotune_ms gauge");
+        let _ = writeln!(out, "pallas_plan_autotune_ms {}", stamp.autotune_ms);
     }
 }
 

@@ -18,14 +18,16 @@
 //!
 //! The conv/dense GEMMs run on the runtime-dispatched packed micro-kernels
 //! ([`crate::tensor::int8::kernel`]): weights arrive pre-packed from plan
-//! compilation, the [`Kernel`] choice is captured by the engine and passed
-//! down, and packed-layout invariants are re-checked by `debug_assert!`
-//! here so a layout bug fails loudly instead of corrupting accumulators.
+//! compilation, the [`GemmChoice`] (per-op autotuned by the plan compiler,
+//! or a pinned [`crate::tensor::int8::kernel::Kernel`] override) is passed
+//! down by the engine, and packed-layout invariants are re-checked by
+//! `debug_assert!` here so a layout bug fails loudly instead of
+//! corrupting accumulators.
 
 use crate::tensor::conv::out_size;
 use crate::tensor::int8::kernel::{
     gemm_conv4_packed_into, gemm_conv_packed_into, gemm_dense4_packed_into,
-    gemm_dense_packed_into, Kernel,
+    gemm_dense_packed_into, GemmChoice,
 };
 use crate::tensor::{Conv2dParams, U8Tensor};
 use crate::util::parallel;
@@ -113,7 +115,7 @@ fn im2col_u8_row(
 #[allow(clippy::too_many_arguments)]
 pub fn conv2d_i8(
     ws: &mut Int8Workspace,
-    kern: Kernel,
+    kern: impl Into<GemmChoice>,
     input: &U8Tensor,
     w: &ConvW,
     p: Conv2dParams,
@@ -124,6 +126,7 @@ pub fn conv2d_i8(
     zp_out: i32,
     relu: bool,
 ) -> U8Tensor {
+    let kern: GemmChoice = kern.into();
     let (n, c, h, wd) = (input.shape[0], input.shape[1], input.shape[2], input.shape[3]);
     let o = w.rows();
     let og = o / p.groups;
@@ -212,7 +215,7 @@ pub fn conv2d_i8(
 #[allow(clippy::too_many_arguments)]
 pub fn dense_i8(
     ws: &mut Int8Workspace,
-    kern: Kernel,
+    kern: impl Into<GemmChoice>,
     input: &U8Tensor,
     w: &DenseW,
     bias_q: &[i32],
@@ -222,6 +225,7 @@ pub fn dense_i8(
     zp_out: i32,
     relu: bool,
 ) -> U8Tensor {
+    let kern: GemmChoice = kern.into();
     let (n, c) = (input.shape[0], input.shape[1]);
     let o = w.n();
     assert_eq!(w.k(), c, "dense weight shape mismatch");

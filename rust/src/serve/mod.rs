@@ -12,11 +12,13 @@
 //!    happens here, once.
 //! 2. **execute** ([`engine`], [`ikernels`]): a [`ServeEngine`] walks the
 //!    plan with u8 activations, i8×u8→i32 GEMMs and fused
-//!    requant+ReLU+saturate — no float ops in the layer loop. The GEMMs
-//!    run a runtime-dispatched micro-kernel
-//!    ([`crate::tensor::int8::kernel`]): AVX2 `vpmaddwd` over weights
-//!    packed at compile time, or a bit-identical portable fallback
-//!    (`PALLAS_NO_SIMD=1` forces it).
+//!    requant+ReLU+saturate — no float ops in the layer loop. Each GEMM
+//!    runs the [`GemmChoice`] the plan compiler autotuned for that op's
+//!    packed shape ([`crate::tensor::int8::kernel`]): AVX-512 VNNI
+//!    `vpdpwssd`, AVX2 `vpmaddwd`, AArch64 NEON `smlal`, or the portable
+//!    scalar core — all bit-identical, so `PALLAS_NO_SIMD=1` /
+//!    `PALLAS_KERNEL=<variant>` / `PALLAS_AUTOTUNE=0` only move time,
+//!    never results.
 //! 3. **serve** ([`batch`]): a [`Batcher`] coalesces single-image requests
 //!    into batched forwards under a max-batch / max-wait policy, sharded
 //!    across `shards` engines that share one read-only plan
@@ -125,7 +127,7 @@ pub use telemetry::ServeMetrics;
 pub use plan::{
     compile_plan, compile_plan_with, ActQ, ConvW, DenseW, PlanOptions, QuantizedPlan, Requant,
 };
-pub use crate::tensor::int8::kernel::Kernel;
+pub use crate::tensor::int8::kernel::{GemmChoice, Kernel};
 
 use std::collections::BTreeMap;
 

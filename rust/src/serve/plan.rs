@@ -27,7 +27,9 @@ use crate::coordinator::QuantizedModel;
 use crate::nn::{Model, Op};
 use crate::quant::ActQuant;
 use crate::tensor::int8::fits_i4;
-use crate::tensor::int8::kernel::{PackedConv, PackedConv4, PackedDense, PackedDense4};
+use crate::tensor::int8::kernel::{
+    autotune, GemmChoice, PackedConv, PackedConv4, PackedDense, PackedDense4,
+};
 use crate::tensor::{Conv2dParams, I8Tensor, Tensor};
 
 /// Fixed-point multiplier: `real ≈ m / 2^shift`, `m` in `[0, 2^31)`.
@@ -238,6 +240,10 @@ pub enum PlanOp {
         /// s_w[oc]·s_in/s_out, per output channel
         requant: Vec<Requant>,
         relu: bool,
+        /// GEMM variant autotuned for this layer's packed shape at compile
+        /// time (or the pinned heuristic under `PALLAS_AUTOTUNE=0`) — the
+        /// hot loop reads it with zero dispatch logic
+        choice: GemmChoice,
     },
     Dense {
         /// weights `[cout, cin]` in the packed quad-interleaved layout
@@ -247,6 +253,9 @@ pub enum PlanOp {
         wsum: Vec<i32>,
         requant: Vec<Requant>,
         relu: bool,
+        /// autotuned GEMM variant for this layer's packed shape (see
+        /// `PlanOp::Conv::choice`)
+        choice: GemmChoice,
     },
     /// out = zp_o + Ra·(qa - za) + Rb·(qb - zb)
     Add { ra: Requant, rb: Requant, relu: bool },
@@ -279,6 +288,10 @@ pub struct QuantizedPlan {
     pub nodes: Vec<PlanNode>,
     /// input image geometry [C, H, W] the plan was compiled for
     pub in_shape: Vec<usize>,
+    /// wall time the per-op kernel autotuner spent during compilation
+    /// (0.0 when `PALLAS_AUTOTUNE=0` pinned the heuristic choice) —
+    /// reported by `serve-bench` as the `plan autotune` entry
+    pub autotune_ms: f64,
 }
 
 impl QuantizedPlan {
@@ -354,23 +367,56 @@ impl QuantizedPlan {
             })
             .collect()
     }
+
+    /// `(node id, autotuned GEMM choice)` for every weight-bearing op, in
+    /// plan order — surfaced by `serve-bench` and the `/metrics`
+    /// `pallas_plan_kernel` gauge. Deliberately excluded from
+    /// [`QuantizedPlan::plan_id`]: all choices are bit-identical, so two
+    /// plans that differ only in tuning outcomes run the same integer
+    /// program.
+    pub fn op_choices(&self) -> Vec<(String, GemmChoice)> {
+        self.nodes
+            .iter()
+            .filter_map(|n| match &n.op {
+                PlanOp::Conv { choice, .. } => Some((n.id.clone(), *choice)),
+                PlanOp::Dense { choice, .. } => Some((n.id.clone(), *choice)),
+                _ => None,
+            })
+            .collect()
+    }
 }
 
 /// Compile-time knobs for [`compile_plan_with`].
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug)]
 pub struct PlanOptions {
     /// Pack w4 wherever the codes happen to fit `[-8, 7]`, even without
     /// a recorded ≤4-bit width (the `PALLAS_FORCE_W4` CI knob). Layers
     /// whose codes don't fit keep w8, so numerics never change — this
     /// exercises the w4 kernels under the full 8-bit test suite.
     pub force_w4: bool,
+    /// Autotune the GEMM variant per op on its actual packed shape
+    /// (default). When off (`PALLAS_AUTOTUNE=0`), every op pins the
+    /// process-wide heuristic [`GemmChoice::heuristic`] — the pre-tuning
+    /// behavior. Results are bit-identical either way; this is a
+    /// compile-latency / reproducible-benchmark knob.
+    pub autotune: bool,
+}
+
+// Manual impl: `derive(Default)` would default `autotune` to false, but
+// tuning is opt-out.
+impl Default for PlanOptions {
+    fn default() -> PlanOptions {
+        PlanOptions { force_w4: false, autotune: true }
+    }
 }
 
 impl PlanOptions {
-    /// Options implied by the environment (`PALLAS_FORCE_W4`).
+    /// Options implied by the environment (`PALLAS_FORCE_W4`,
+    /// `PALLAS_AUTOTUNE`).
     pub fn from_env() -> PlanOptions {
         PlanOptions {
             force_w4: force_w4_requested(std::env::var("PALLAS_FORCE_W4").ok().as_deref()),
+            autotune: autotune_enabled(std::env::var("PALLAS_AUTOTUNE").ok().as_deref()),
         }
     }
 }
@@ -379,6 +425,48 @@ impl PlanOptions {
 /// non-empty value other than `0` requests opportunistic w4 packing.
 pub fn force_w4_requested(v: Option<&str>) -> bool {
     matches!(v.map(str::trim), Some(s) if !s.is_empty() && s != "0")
+}
+
+/// `PALLAS_AUTOTUNE` contract: tuning is **on by default** and only the
+/// exact value `0` turns it off (inverted polarity from the other knobs
+/// because those default to off; `PALLAS_AUTOTUNE=1`, unset, or anything
+/// else keeps tuning on).
+pub fn autotune_enabled(v: Option<&str>) -> bool {
+    !matches!(v.map(str::trim), Some("0"))
+}
+
+/// Compile-time autotune state threaded through [`lower_node`]: memoizes
+/// winners by packed shape so repeated layers (residual towers) tune
+/// once, and accumulates the tuner's wall time for the bench report.
+struct Tuner {
+    enabled: bool,
+    /// key: (is_dense, w4, rows, k, positions)
+    cache: BTreeMap<(bool, bool, usize, usize, usize), GemmChoice>,
+    ms: f64,
+}
+
+impl Tuner {
+    fn new(enabled: bool) -> Tuner {
+        Tuner { enabled, cache: BTreeMap::new(), ms: 0.0 }
+    }
+
+    fn tune(&mut self, dense: bool, w4: bool, rows: usize, k: usize, npos: usize) -> GemmChoice {
+        if !self.enabled {
+            return GemmChoice::heuristic();
+        }
+        if let Some(&ch) = self.cache.get(&(dense, w4, rows, k, npos)) {
+            return ch;
+        }
+        let t0 = std::time::Instant::now();
+        let ch = if dense {
+            autotune::tune_dense(rows, k, w4)
+        } else {
+            autotune::tune_conv(rows, k, npos, w4)
+        };
+        self.ms += t0.elapsed().as_secs_f64() * 1e3;
+        self.cache.insert((dense, w4, rows, k, npos), ch);
+        ch
+    }
 }
 
 /// Recover the grid scale of one weight row whose entries lie on
@@ -477,6 +565,7 @@ pub fn compile_plan_with(
     let mut nodes: Vec<PlanNode> = Vec::with_capacity(model.nodes.len());
     // spatial size of every node's output (for GPool's fixed reduction)
     let mut spatial: BTreeMap<&str, (usize, usize)> = BTreeMap::new();
+    let mut tuner = Tuner::new(opts.autotune);
     for nd in &model.nodes {
         let out_q = ActQ::from_act_quant(
             aq.get(&nd.id)
@@ -497,12 +586,12 @@ pub fn compile_plan_with(
             .first()
             .and_then(|i| spatial.get(i.as_str()).copied())
             .unwrap_or((in_shape[1], in_shape[2]));
-        let (op, out_hw) = lower_node(model, qm, nd, &in_q, out_q, in_hw, opts)?;
+        let (op, out_hw) = lower_node(model, qm, nd, &in_q, out_q, in_hw, opts, &mut tuner)?;
         spatial.insert(nd.id.as_str(), out_hw);
         idx.insert(nd.id.as_str(), nodes.len());
         nodes.push(PlanNode { id: nd.id.clone(), op, inputs, in_q, out_q });
     }
-    Ok(QuantizedPlan { nodes, in_shape: in_shape.to_vec() })
+    Ok(QuantizedPlan { nodes, in_shape: in_shape.to_vec(), autotune_ms: tuner.ms })
 }
 
 /// Decide the packed precision for one layer. The pipeline's recorded
@@ -533,6 +622,7 @@ fn lower_node(
     out_q: ActQ,
     in_hw: (usize, usize),
     opts: PlanOptions,
+    tuner: &mut Tuner,
 ) -> Result<(PlanOp, (usize, usize))> {
     use crate::tensor::conv::out_size;
     let op = match &nd.op {
@@ -551,8 +641,14 @@ fn lower_node(
             } else {
                 ConvW::W8(PackedConv::pack(&wi.data, cout, cols))
             };
+            // tune on the layer's GEMM shape: cout rows x (ho·wo)
+            // positions over the im2col patch (grouped convs hand the
+            // kernel per-group row spans of the same k, so the shape is
+            // representative either way)
+            let w4 = matches!(w, ConvW::W4(_));
+            let choice = tuner.tune(false, w4, cout, cols, ho * wo);
             return Ok((
-                PlanOp::Conv { w, p, bias_q, wsum, requant, relu: *relu },
+                PlanOp::Conv { w, p, bias_q, wsum, requant, relu: *relu, choice },
                 (ho, wo),
             ));
         }
@@ -565,7 +661,11 @@ fn lower_node(
             } else {
                 DenseW::W8(PackedDense::pack(&wi.data, cout, cols))
             };
-            PlanOp::Dense { w, bias_q, wsum, requant, relu: *relu }
+            // dense shapes are batch-dependent; tune at the tuner's
+            // nominal serving batch (autotune::TUNE_BATCH)
+            let w4 = matches!(w, DenseW::W4(_));
+            let choice = tuner.tune(true, w4, cout, cols, autotune::TUNE_BATCH);
+            PlanOp::Dense { w, bias_q, wsum, requant, relu: *relu, choice }
         }
         Op::Add { relu } => PlanOp::Add {
             ra: Requant::from_real(in_q[0].scale as f64 / out_q.scale as f64),
@@ -684,6 +784,34 @@ mod tests {
             assert!((z - z.round()).abs() < 1e-3, "{v} not on recovered grid {g2}");
         }
         assert_eq!(recover_row_scale(&[0.0, 0.0]), 1.0);
+    }
+
+    #[test]
+    fn autotune_env_contract() {
+        // inverted polarity: on unless the value is exactly "0"
+        assert!(autotune_enabled(None));
+        assert!(autotune_enabled(Some("")));
+        assert!(autotune_enabled(Some("1")));
+        assert!(autotune_enabled(Some("yes")));
+        assert!(!autotune_enabled(Some("0")));
+        assert!(!autotune_enabled(Some(" 0 ")));
+        // and the derive-proof default keeps tuning on
+        assert!(PlanOptions::default().autotune);
+        assert!(!PlanOptions::default().force_w4);
+    }
+
+    #[test]
+    fn disabled_tuner_pins_the_heuristic_choice() {
+        let mut t = Tuner::new(false);
+        assert_eq!(t.tune(false, false, 8, 27, 196), GemmChoice::heuristic());
+        assert_eq!(t.ms, 0.0, "disabled tuner must not time anything");
+        // enabled tuner memoizes: same shape twice, one timing
+        let mut t = Tuner::new(true);
+        let a = t.tune(true, false, 10, 64, 8);
+        let ms = t.ms;
+        let b = t.tune(true, false, 10, 64, 8);
+        assert_eq!(a, b);
+        assert_eq!(t.ms, ms, "second identical shape must hit the memo");
     }
 
     #[test]

@@ -223,9 +223,14 @@ impl RegistryBuilder {
         let total = parallel::num_threads().max(1);
         let default_id = self.models[0].0.clone();
         let mut map = BTreeMap::new();
+        // cumulative core-slot offset: each model's pinned shards start
+        // where the previous model's stopped, so co-resident batchers
+        // land on disjoint cores (mod machine capacity)
+        let mut core_offset = 0usize;
         for (i, (id, p)) in self.models.into_iter().enumerate() {
-            let budget = (total / n + usize::from(i < total % n)).max(1);
-            let batcher = Batcher::with_threads(p.engine, p.policy, budget);
+            let budget = parallel::split_budget(total, n, i);
+            let batcher = Batcher::with_placement(p.engine, p.policy, budget, core_offset);
+            core_offset += budget.max(p.policy.shards);
             let entry = ModelEntry {
                 batcher,
                 reload: p.reload,

@@ -1,0 +1,213 @@
+//! Compile-time micro-autotuner: time every available kernel variant ×
+//! blocking config on a layer's *actual packed shape* and return the
+//! fastest. Runs once per distinct shape during `compile_plan` (the plan
+//! compiler memoizes by shape), never in the serving hot loop — the
+//! winning [`GemmChoice`] is cached per op in the `QuantizedPlan`.
+//!
+//! Because every candidate is bit-identical (module docs), the tuner is
+//! free to pick by time alone: a "wrong" pick under timer noise costs
+//! only performance, never correctness or determinism of results.
+//! `PALLAS_AUTOTUNE=0` skips tuning entirely (plans pin the
+//! [`GemmChoice::heuristic`] choice); `PALLAS_KERNEL=<name>` narrows the
+//! candidate set to one variant's blocking configs; `PALLAS_NO_SIMD=1`
+//! narrows it to portable.
+//!
+//! Cost control: shapes are shrunk toward a fixed MAC budget before
+//! timing (fewer rows first, then fewer positions — K is never cut, it
+//! is what distinguishes the blocking configs), warmup 1 + min-of-3
+//! timed reps per candidate, everything forced serial via
+//! `with_threads(1)` so pool scheduling noise cannot leak into the
+//! measurement. A full candidate sweep for one shape is a few
+//! milliseconds; `QuantizedPlan::autotune_ms` reports the total.
+
+use std::time::Instant;
+
+use super::{
+    cfg_count, forced_kernel, gemm_conv4_packed_into, gemm_conv_packed_into,
+    gemm_dense4_packed_into, gemm_dense_packed_into, no_simd_requested, usable, GemmChoice,
+    Kernel, PackedConv, PackedConv4, PackedDense, PackedDense4,
+};
+use crate::util::parallel;
+
+/// Nominal batch (GEMM row count) dense layers are tuned at — the
+/// serving batcher's typical fill, not `max_batch`, so the tuned choice
+/// reflects steady-state traffic.
+pub const TUNE_BATCH: usize = 8;
+
+/// Total MACs one timed rep targets; shapes shrink toward this so a deep
+/// layer doesn't stall plan compilation (64 candidates × a 150M-MAC conv
+/// would be seconds per layer).
+const MAC_BUDGET: usize = 1 << 19;
+/// Timed reps per candidate (min taken); one extra warmup rep runs first.
+const REPS: usize = 3;
+
+/// The candidate set on this machine: every available variant × its
+/// blocking configs, honoring `PALLAS_NO_SIMD` and `PALLAS_KERNEL`.
+/// Deterministic order (widest ISA first), so ties break identically
+/// across runs on the same machine.
+pub fn candidates() -> Vec<GemmChoice> {
+    let kernels: Vec<Kernel> = if no_simd_requested(std::env::var("PALLAS_NO_SIMD").ok().as_deref())
+    {
+        vec![Kernel::Portable]
+    } else if let Some(k) = forced_kernel(std::env::var("PALLAS_KERNEL").ok().as_deref()) {
+        vec![usable(GemmChoice::from(k)).kernel]
+    } else {
+        Kernel::all().into_iter().filter(|k| k.available()).collect()
+    };
+    kernels
+        .into_iter()
+        .flat_map(|k| (0..cfg_count(k)).map(move |cfg| GemmChoice::new(k, cfg)))
+        .collect()
+}
+
+/// Deterministic synthetic fill (LCG) — the tuner must not perturb or
+/// depend on any global RNG state.
+struct Lcg(u64);
+
+impl Lcg {
+    fn next(&mut self) -> u8 {
+        self.0 = self.0.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        (self.0 >> 33) as u8
+    }
+}
+
+/// Shrink `(rows, cols)` toward [`MAC_BUDGET`] for reduction length `k`,
+/// never below the given floors (the floors keep at least one full SIMD
+/// tile in play so the measurement exercises the vector body).
+fn shrink(mut rows: usize, mut cols: usize, k: usize, row_floor: usize, col_floor: usize) -> (usize, usize) {
+    while rows * k * cols > MAC_BUDGET && rows > row_floor {
+        rows = (rows / 2).max(row_floor);
+    }
+    while rows * k * cols > MAC_BUDGET && cols > col_floor {
+        cols = (cols / 2).max(col_floor);
+    }
+    (rows, cols)
+}
+
+/// Warmup + min-of-[`REPS`] wall time of `run`, serial.
+fn time_min(mut run: impl FnMut()) -> f64 {
+    parallel::with_threads(1, &mut run);
+    let mut best = f64::INFINITY;
+    for _ in 0..REPS {
+        let t0 = Instant::now();
+        parallel::with_threads(1, &mut run);
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    best
+}
+
+fn pick(cands: &[GemmChoice], mut run: impl FnMut(GemmChoice)) -> GemmChoice {
+    let mut best = (cands[0], f64::INFINITY);
+    for &ch in cands {
+        let t = time_min(|| run(ch));
+        if t < best.1 {
+            best = (ch, t);
+        }
+    }
+    best.0
+}
+
+/// Tune the conv GEMM for a layer with `rows` output channels, reduction
+/// `k` (im2col patch) and `npos` output positions, in the weight dtype
+/// the plan packed (`w4`). Returns the heuristic choice immediately when
+/// there is only one candidate.
+pub fn tune_conv(rows: usize, k: usize, npos: usize, w4: bool) -> GemmChoice {
+    let cands = candidates();
+    if cands.len() == 1 {
+        return cands[0];
+    }
+    let (m, n) = shrink(rows.max(1), npos.max(1), k.max(1), 2, 64.min(npos.max(1)));
+    let k = k.max(1);
+    let mut lcg = Lcg(0x9e3779b97f4a7c15);
+    let w: Vec<i8> = (0..m * k)
+        .map(|_| if w4 { (lcg.next() % 16) as i8 - 8 } else { lcg.next() as i8 })
+        .collect();
+    let b: Vec<u8> = (0..k * n).map(|_| lcg.next()).collect();
+    let mut c = vec![0i32; m * n];
+    if w4 {
+        let p = PackedConv4::pack(&w, m, k);
+        pick(&cands, |ch| gemm_conv4_packed_into(ch, &p.data, m, k, p.kp, &b, &mut c, n))
+    } else {
+        let p = PackedConv::pack(&w, m, k);
+        pick(&cands, |ch| gemm_conv_packed_into(ch, &p.data, m, k, p.kp, &b, &mut c, n))
+    }
+}
+
+/// Tune the dense GEMM for a layer with `nout` outputs and reduction
+/// `k`, at the nominal serving batch [`TUNE_BATCH`].
+pub fn tune_dense(nout: usize, k: usize, w4: bool) -> GemmChoice {
+    let cands = candidates();
+    if cands.len() == 1 {
+        return cands[0];
+    }
+    let (m, n) = shrink(TUNE_BATCH, nout.max(1), k.max(1), 1, 4.min(nout.max(1)));
+    let k = k.max(1);
+    let mut lcg = Lcg(0xd1b54a32d192ed03);
+    let w: Vec<i8> = (0..n * k)
+        .map(|_| if w4 { (lcg.next() % 16) as i8 - 8 } else { lcg.next() as i8 })
+        .collect();
+    let a: Vec<u8> = (0..m * k).map(|_| lcg.next()).collect();
+    let mut c = vec![0i32; m * n];
+    if w4 {
+        let p = PackedDense4::pack(&w, n, k);
+        pick(&cands, |ch| gemm_dense4_packed_into(ch, &a, &p, &mut c, m))
+    } else {
+        let p = PackedDense::pack(&w, n, k);
+        pick(&cands, |ch| gemm_dense_packed_into(ch, &a, &p, &mut c, m))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn candidates_cover_available_variants_with_all_cfgs() {
+        use super::super::GEMM_CFGS;
+        let cands = candidates();
+        assert!(!cands.is_empty());
+        for ch in &cands {
+            assert!(ch.kernel.available(), "unavailable candidate {}", ch.kernel.name());
+            assert!(ch.cfg < cfg_count(ch.kernel));
+        }
+        // portable is always a candidate unless PALLAS_KERNEL pins
+        // another variant (the env is not set under `cargo test` unless
+        // the CI sweep sets it — then the forced variant must be the
+        // only kernel present)
+        let kernels: std::collections::BTreeSet<&str> =
+            cands.iter().map(|c| c.kernel.name()).collect();
+        match forced_kernel(std::env::var("PALLAS_KERNEL").ok().as_deref()) {
+            Some(_) => assert_eq!(kernels.len(), 1, "forced sweep must pin one variant"),
+            None => assert!(kernels.contains("portable")),
+        }
+        // every candidate must carry each cfg of its kernel
+        for k in kernels {
+            let n = cands.iter().filter(|c| c.kernel.name() == k).count();
+            assert_eq!(n as u8, GEMM_CFGS, "cfg sweep for {k}");
+        }
+    }
+
+    #[test]
+    fn tuner_returns_usable_choices_fast() {
+        let t0 = std::time::Instant::now();
+        for &w4 in &[false, true] {
+            let ch = tune_conv(8, 27, 196, w4);
+            assert!(ch.kernel.available());
+            let ch = tune_dense(10, 64, w4);
+            assert!(ch.kernel.available());
+        }
+        // generous bound: 4 tunes of budgeted shapes must stay well
+        // under a second even on a loaded CI box
+        assert!(t0.elapsed().as_secs_f64() < 10.0, "tuner too slow");
+    }
+
+    #[test]
+    fn shrink_respects_budget_and_floors() {
+        let (r, c) = shrink(64, 512, 4608, 2, 64);
+        assert!(r >= 2 && c >= 64);
+        // K is preserved by construction; rows shrink first
+        assert!(r < 64, "rows should shrink under a 151M-MAC shape");
+        let (r, c) = shrink(4, 16, 9, 2, 16);
+        assert_eq!((r, c), (4, 16), "under-budget shapes are untouched");
+    }
+}

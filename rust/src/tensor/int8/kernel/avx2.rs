@@ -1,0 +1,311 @@
+//! AVX2 cores: `vpmaddwd` (`_mm256_madd_epi16`) after explicit u8→i16 /
+//! i8→i16 widening — every product exact, wrap accumulation in i32 (see
+//! the `kernel` module docs for the full argument).
+//!
+//! Blocking configs: conv `c0` tiles 2 output rows per 32-position
+//! register pass, `c1` tiles 1 (less register pressure, wins on small
+//! row counts). Dense `c0` runs one accumulator quartet over the
+//! K-blocks, `c1` interleaves two quartets over alternating blocks and
+//! folds them (hides madd latency on long K). Both only reorder
+//! wrap-mod-2³² adds, so they are bit-identical.
+
+#![allow(clippy::too_many_arguments)]
+
+use core::arch::x86_64::*;
+
+use super::{i4_hi, i4_lo, nibble, PackedDense, PackedDense4, DENSE_KB, DENSE_NR};
+
+/// Broadcast the (sign-extended) weight pair at `a[off], a[off+1]` as
+/// `[a0, a1, a0, a1, ...]` i16 lanes — the second `vpmaddwd` operand.
+/// The packed row stride is even, so `off + 1` is always in bounds
+/// (the pad byte is zero).
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn weight_pair(a: &[i8], off: usize) -> __m256i {
+    let a0 = *a.get_unchecked(off) as i16 as u16 as u32;
+    let a1 = *a.get_unchecked(off + 1) as i16 as u16 as u32;
+    _mm256_set1_epi32(((a1 << 16) | a0) as i32)
+}
+
+/// Conv GEMM row span: `tile` output rows × 32 positions per register
+/// pass, reduction consumed as `vpmaddwd` pairs. B rows `k0`/`k0+1`
+/// are byte-interleaved in registers (`vpunpck[lh]bw`), widened to
+/// i16 and paired against the broadcast weights — all products exact,
+/// see the module docs.
+#[target_feature(enable = "avx2")]
+pub unsafe fn conv_span(
+    a: &[i8],
+    m: usize,
+    k: usize,
+    kp: usize,
+    b: &[u8],
+    c: &mut [i32],
+    n: usize,
+    cfg: u8,
+) {
+    let tile = if cfg == 0 { 2 } else { 1 };
+    let n32 = n - n % 32;
+    let kpairs = kp / 2;
+    let bp = b.as_ptr();
+    let mut i = 0;
+    while i < m {
+        let mr = (m - i).min(tile);
+        let mut j = 0;
+        while j < n32 {
+            let mut acc = [[_mm256_setzero_si256(); 4]; 2];
+            for t in 0..kpairs {
+                let k0 = 2 * t;
+                // the pad pair of an odd K clamps its B row index;
+                // its weight lane is the zero pad byte, so the
+                // duplicated row contributes nothing
+                let k1 = (k0 + 1).min(k - 1);
+                let b0 = _mm256_loadu_si256(bp.add(k0 * n + j) as *const __m256i);
+                let b1 = _mm256_loadu_si256(bp.add(k1 * n + j) as *const __m256i);
+                let lo = _mm256_unpacklo_epi8(b0, b1);
+                let hi = _mm256_unpackhi_epi8(b0, b1);
+                // pair-interleaved positions: lo/hi 128-bit lanes hold
+                // j+0..7, j+8..15, j+16..23, j+24..31 in that order
+                let w0 = _mm256_cvtepu8_epi16(_mm256_castsi256_si128(lo));
+                let w1 = _mm256_cvtepu8_epi16(_mm256_castsi256_si128(hi));
+                let w2 = _mm256_cvtepu8_epi16(_mm256_extracti128_si256(lo, 1));
+                let w3 = _mm256_cvtepu8_epi16(_mm256_extracti128_si256(hi, 1));
+                for r in 0..mr {
+                    let ap = weight_pair(a, (i + r) * kp + k0);
+                    acc[r][0] = _mm256_add_epi32(acc[r][0], _mm256_madd_epi16(w0, ap));
+                    acc[r][1] = _mm256_add_epi32(acc[r][1], _mm256_madd_epi16(w1, ap));
+                    acc[r][2] = _mm256_add_epi32(acc[r][2], _mm256_madd_epi16(w2, ap));
+                    acc[r][3] = _mm256_add_epi32(acc[r][3], _mm256_madd_epi16(w3, ap));
+                }
+            }
+            for r in 0..mr {
+                let crow = c.as_mut_ptr().add((i + r) * n + j);
+                _mm256_storeu_si256(crow as *mut __m256i, acc[r][0]);
+                _mm256_storeu_si256(crow.add(8) as *mut __m256i, acc[r][1]);
+                _mm256_storeu_si256(crow.add(16) as *mut __m256i, acc[r][2]);
+                _mm256_storeu_si256(crow.add(24) as *mut __m256i, acc[r][3]);
+            }
+            j += 32;
+        }
+        // position tail: exact scalar (integer products commute with
+        // the vector body, so the seam is bit-invisible)
+        for r in 0..mr {
+            let arow = &a[(i + r) * kp..(i + r) * kp + k];
+            for jj in n32..n {
+                let mut s = 0i32;
+                for (kk, &av) in arow.iter().enumerate() {
+                    s = s.wrapping_add(av as i32 * *b.get_unchecked(kk * n + jj) as i32);
+                }
+                *c.get_unchecked_mut((i + r) * n + jj) = s;
+            }
+        }
+        i += mr;
+    }
+}
+
+/// Broadcast the sign-extended nibble pair in byte `a[off]` as
+/// `[lo, hi, lo, hi, ...]` i16 lanes. One packed byte *is* one
+/// `vpmaddwd` weight pair (CONV_KB == 2 nibbles), so the w4 conv
+/// core is the w8 core with this decode in front.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn weight_pair4(a: &[u8], off: usize) -> __m256i {
+    let b = *a.get_unchecked(off);
+    let a0 = i4_lo(b) as i16 as u16 as u32;
+    let a1 = i4_hi(b) as i16 as u16 as u32;
+    _mm256_set1_epi32(((a1 << 16) | a0) as i32)
+}
+
+/// w4 conv GEMM row span: the [`conv_span`] register tile (`vpmaddwd`
+/// pairs) with the weight pair decoded from one packed byte. Same
+/// blocking, exact products — bit-identical.
+#[target_feature(enable = "avx2")]
+pub unsafe fn conv4_span(
+    a: &[u8],
+    m: usize,
+    k: usize,
+    kp: usize,
+    b: &[u8],
+    c: &mut [i32],
+    n: usize,
+    cfg: u8,
+) {
+    let tile = if cfg == 0 { 2 } else { 1 };
+    let n32 = n - n % 32;
+    let kpairs = kp / 2; // also the byte stride per packed row
+    let bp = b.as_ptr();
+    let mut i = 0;
+    while i < m {
+        let mr = (m - i).min(tile);
+        let mut j = 0;
+        while j < n32 {
+            let mut acc = [[_mm256_setzero_si256(); 4]; 2];
+            for t in 0..kpairs {
+                let k0 = 2 * t;
+                // odd-K pad pair: clamp the B row; the pad nibble is
+                // zero, so the duplicated row contributes nothing
+                let k1 = (k0 + 1).min(k - 1);
+                let b0 = _mm256_loadu_si256(bp.add(k0 * n + j) as *const __m256i);
+                let b1 = _mm256_loadu_si256(bp.add(k1 * n + j) as *const __m256i);
+                let lo = _mm256_unpacklo_epi8(b0, b1);
+                let hi = _mm256_unpackhi_epi8(b0, b1);
+                let w0 = _mm256_cvtepu8_epi16(_mm256_castsi256_si128(lo));
+                let w1 = _mm256_cvtepu8_epi16(_mm256_castsi256_si128(hi));
+                let w2 = _mm256_cvtepu8_epi16(_mm256_extracti128_si256(lo, 1));
+                let w3 = _mm256_cvtepu8_epi16(_mm256_extracti128_si256(hi, 1));
+                for r in 0..mr {
+                    let ap = weight_pair4(a, (i + r) * kpairs + t);
+                    acc[r][0] = _mm256_add_epi32(acc[r][0], _mm256_madd_epi16(w0, ap));
+                    acc[r][1] = _mm256_add_epi32(acc[r][1], _mm256_madd_epi16(w1, ap));
+                    acc[r][2] = _mm256_add_epi32(acc[r][2], _mm256_madd_epi16(w2, ap));
+                    acc[r][3] = _mm256_add_epi32(acc[r][3], _mm256_madd_epi16(w3, ap));
+                }
+            }
+            for r in 0..mr {
+                let crow = c.as_mut_ptr().add((i + r) * n + j);
+                _mm256_storeu_si256(crow as *mut __m256i, acc[r][0]);
+                _mm256_storeu_si256(crow.add(8) as *mut __m256i, acc[r][1]);
+                _mm256_storeu_si256(crow.add(16) as *mut __m256i, acc[r][2]);
+                _mm256_storeu_si256(crow.add(24) as *mut __m256i, acc[r][3]);
+            }
+            j += 32;
+        }
+        // position tail: exact scalar over decoded nibbles
+        for r in 0..mr {
+            let arow = &a[(i + r) * kpairs..(i + r + 1) * kpairs];
+            for jj in n32..n {
+                let mut s = 0i32;
+                for kk in 0..k {
+                    s = s.wrapping_add(
+                        nibble(arow, kk) as i32 * *b.get_unchecked(kk * n + jj) as i32,
+                    );
+                }
+                *c.get_unchecked_mut((i + r) * n + jj) = s;
+            }
+        }
+        i += mr;
+    }
+}
+
+/// Wrapping horizontal sum of the 8 i32 lanes.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn hsum_epi32(v: __m256i) -> i32 {
+    let s = _mm_add_epi32(_mm256_castsi256_si128(v), _mm256_extracti128_si256(v, 1));
+    let s = _mm_add_epi32(s, _mm_shuffle_epi32(s, 0b01_00_11_10));
+    let s = _mm_add_epi32(s, _mm_shuffle_epi32(s, 0b00_00_00_01));
+    _mm_cvtsi128_si32(s)
+}
+
+/// The widened activation block `t` (K tail reads a zero-padded stack
+/// copy, matching the zero K padding of the packed rows, so tail
+/// products vanish on both operands).
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn act_block(arow: &[u8], tailbuf: &[u8; DENSE_KB], t: usize, full: usize) -> __m256i {
+    let av = if t < full {
+        _mm_loadu_si128(arow.as_ptr().add(t * DENSE_KB) as *const __m128i)
+    } else {
+        _mm_loadu_si128(tailbuf.as_ptr() as *const __m128i)
+    };
+    _mm256_cvtepu8_epi16(av)
+}
+
+/// Dense GEMM, one activation row: four packed weight rows per quad
+/// share each widened 16-byte activation block. `cfg 1` interleaves a
+/// second accumulator quartet over alternating K-blocks.
+#[target_feature(enable = "avx2")]
+pub unsafe fn dense_row(arow: &[u8], w: &PackedDense, crow: &mut [i32], cfg: u8) {
+    let (k, kp) = (w.k, w.kp);
+    let nb = kp / DENSE_KB;
+    let full = k / DENSE_KB;
+    let tail = k % DENSE_KB;
+    let mut tailbuf = [0u8; DENSE_KB];
+    if tail > 0 {
+        tailbuf[..tail].copy_from_slice(&arow[full * DENSE_KB..]);
+    }
+    let wp = w.data.as_ptr();
+    for q in 0..w.np / DENSE_NR {
+        let mut acc = [_mm256_setzero_si256(); 4];
+        let mut acc2 = [_mm256_setzero_si256(); 4];
+        let base = q * nb * (DENSE_NR * DENSE_KB);
+        for t in 0..nb {
+            let a16 = act_block(arow, &tailbuf, t, full);
+            let blk = wp.add(base + t * DENSE_NR * DENSE_KB);
+            for r in 0..4 {
+                let w16 =
+                    _mm256_cvtepi8_epi16(_mm_loadu_si128(blk.add(r * DENSE_KB) as *const __m128i));
+                if cfg != 0 && t % 2 == 1 {
+                    acc2[r] = _mm256_add_epi32(acc2[r], _mm256_madd_epi16(a16, w16));
+                } else {
+                    acc[r] = _mm256_add_epi32(acc[r], _mm256_madd_epi16(a16, w16));
+                }
+            }
+        }
+        for r in 0..4 {
+            let j = q * DENSE_NR + r;
+            if j < crow.len() {
+                *crow.get_unchecked_mut(j) = hsum_epi32(_mm256_add_epi32(acc[r], acc2[r]));
+            }
+        }
+    }
+}
+
+/// The nibble→i8 unpack epilogue: 8 packed bytes → 16 sign-extended
+/// i16 weight lanes in logical order, ready for `vpmaddwd`. Each
+/// byte is duplicated (`vpunpcklbw x,x`), widened to 16-bit lanes,
+/// the target nibble is shifted to the top four bits (`vpmullw` by
+/// alternating `1<<12` / `1<<8` — a per-lane left shift mod 2¹⁶),
+/// and an arithmetic right shift by 12 sign-extends it: the
+/// shift-left-then-arithmetic-shift-right idiom on the madd lanes.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn nibbles_to_i16(p: *const u8) -> __m256i {
+    let x = _mm_loadl_epi64(p as *const __m128i);
+    let dup = _mm_unpacklo_epi8(x, x);
+    let v = _mm256_cvtepu8_epi16(dup);
+    // even i16 lanes (low nibbles) multiply by 1<<12, odd lanes
+    // (high nibbles) by 1<<8
+    let mul = _mm256_set1_epi32(((1 << 8) << 16) | (1 << 12));
+    _mm256_srai_epi16(_mm256_mullo_epi16(v, mul), 12)
+}
+
+/// w4 dense GEMM, one activation row: [`dense_row`] with each
+/// 16-weight block decoded from 8 packed bytes by [`nibbles_to_i16`].
+/// Block loads are exact (`DENSE_KB/2` = 8 bytes per block, blocks
+/// contiguous), so there is no overread.
+#[target_feature(enable = "avx2")]
+pub unsafe fn dense4_row(arow: &[u8], w: &PackedDense4, crow: &mut [i32], cfg: u8) {
+    const KB2: usize = DENSE_KB / 2;
+    let (k, kp) = (w.k, w.kp);
+    let nb = kp / DENSE_KB;
+    let full = k / DENSE_KB;
+    let tail = k % DENSE_KB;
+    let mut tailbuf = [0u8; DENSE_KB];
+    if tail > 0 {
+        tailbuf[..tail].copy_from_slice(&arow[full * DENSE_KB..]);
+    }
+    let wp = w.data.as_ptr();
+    for q in 0..w.np / DENSE_NR {
+        let mut acc = [_mm256_setzero_si256(); 4];
+        let mut acc2 = [_mm256_setzero_si256(); 4];
+        let base = q * nb * (DENSE_NR * KB2);
+        for t in 0..nb {
+            let a16 = act_block(arow, &tailbuf, t, full);
+            let blk = wp.add(base + t * DENSE_NR * KB2);
+            for r in 0..4 {
+                let w16 = nibbles_to_i16(blk.add(r * KB2));
+                if cfg != 0 && t % 2 == 1 {
+                    acc2[r] = _mm256_add_epi32(acc2[r], _mm256_madd_epi16(a16, w16));
+                } else {
+                    acc[r] = _mm256_add_epi32(acc[r], _mm256_madd_epi16(a16, w16));
+                }
+            }
+        }
+        for r in 0..4 {
+            let j = q * DENSE_NR + r;
+            if j < crow.len() {
+                *crow.get_unchecked_mut(j) = hsum_epi32(_mm256_add_epi32(acc[r], acc2[r]));
+            }
+        }
+    }
+}

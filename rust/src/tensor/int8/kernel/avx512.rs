@@ -1,0 +1,351 @@
+//! AVX-512 VNNI cores: `vpdpwssd` (`_mm512_dpwssd_epi32`) over
+//! explicitly widened i16 operands, 64 positions (conv) / 32 reduction
+//! lanes (dense) per register pass.
+//!
+//! Exactness: `vpdpwssd` multiplies signed 16-bit lanes into exact i32
+//! products, sums adjacent pairs, and accumulates into i32 **without
+//! saturation** — the same pair-sum `vpmaddwd` computes, fused with the
+//! accumulate. Operands are the identical u8→i16 / i8→i16 widenings the
+//! AVX2 path feeds `vpmaddwd` (|255·−128| = 32640 fits i16; a pair-sum
+//! fits i32), so every intermediate is exact and the i32 accumulator
+//! wraps mod 2³² exactly like every other variant. The saturating
+//! `vpdpwssds` form is never used. Bit-identical by the module-docs
+//! argument; proved against scalar in `rust/tests/int8_kernels.rs`.
+//!
+//! This module only compiles when `build.rs` emitted `pallas_avx512`
+//! (rustc ≥ 1.89, where the AVX-512 intrinsics are stable); the dispatch
+//! layer additionally requires F/BW/VNNI at runtime
+//! (`avx512_available`).
+//!
+//! Blocking configs mirror AVX2: conv `c0` = 2-row tile, `c1` = 1-row;
+//! dense `c0` = one accumulator quartet, `c1` = two interleaved quartets
+//! folded at the end.
+
+#![allow(clippy::too_many_arguments)]
+
+use core::arch::x86_64::*;
+
+use super::{i4_hi, i4_lo, nibble, PackedDense, PackedDense4, DENSE_KB, DENSE_NR};
+
+/// Broadcast the (sign-extended) weight pair at `a[off], a[off+1]` as
+/// `[a0, a1, a0, a1, ...]` i16 lanes — the second `vpdpwssd` operand.
+/// The packed row stride is even, so `off + 1` is always in bounds
+/// (the pad byte is zero).
+#[inline]
+#[target_feature(enable = "avx512f,avx512bw,avx512vnni")]
+unsafe fn weight_pair(a: &[i8], off: usize) -> __m512i {
+    let a0 = *a.get_unchecked(off) as i16 as u16 as u32;
+    let a1 = *a.get_unchecked(off + 1) as i16 as u16 as u32;
+    _mm512_set1_epi32(((a1 << 16) | a0) as i32)
+}
+
+/// Broadcast the sign-extended nibble pair in byte `a[off]` — one packed
+/// byte is one weight pair, exactly as in the AVX2 core.
+#[inline]
+#[target_feature(enable = "avx512f,avx512bw,avx512vnni")]
+unsafe fn weight_pair4(a: &[u8], off: usize) -> __m512i {
+    let b = *a.get_unchecked(off);
+    let a0 = i4_lo(b) as i16 as u16 as u32;
+    let a1 = i4_hi(b) as i16 as u16 as u32;
+    _mm512_set1_epi32(((a1 << 16) | a0) as i32)
+}
+
+/// Store the two 256-bit halves of one accumulator at two (possibly
+/// non-adjacent) C offsets — the 512-bit byte interleave works per
+/// 128-bit lane, so each accumulator holds two position octets 16 apart.
+#[inline]
+#[target_feature(enable = "avx512f,avx512bw,avx512vnni")]
+unsafe fn store_halves(acc: __m512i, p0: *mut i32, p1: *mut i32) {
+    _mm256_storeu_si256(p0 as *mut __m256i, _mm512_castsi512_si256(acc));
+    _mm256_storeu_si256(p1 as *mut __m256i, _mm512_extracti64x4_epi64(acc, 1));
+}
+
+/// Conv GEMM row span: `tile` output rows × 64 positions per register
+/// pass. B rows `k0`/`k0+1` are byte-interleaved (`vpunpck[lh]bw`, which
+/// interleaves within each 128-bit lane), widened to i16 and fed to
+/// `vpdpwssd` against the broadcast weight pair. The per-lane interleave
+/// means accumulator `q` holds positions `j+8q..j+8q+8` and
+/// `j+8q+16·…` — see [`store_halves`] and the offsets below.
+#[target_feature(enable = "avx512f,avx512bw,avx512vnni")]
+pub unsafe fn conv_span(
+    a: &[i8],
+    m: usize,
+    k: usize,
+    kp: usize,
+    b: &[u8],
+    c: &mut [i32],
+    n: usize,
+    cfg: u8,
+) {
+    let tile = if cfg == 0 { 2 } else { 1 };
+    let n64 = n - n % 64;
+    let kpairs = kp / 2;
+    let bp = b.as_ptr();
+    let mut i = 0;
+    while i < m {
+        let mr = (m - i).min(tile);
+        let mut j = 0;
+        while j < n64 {
+            let mut acc = [[_mm512_setzero_si512(); 4]; 2];
+            for t in 0..kpairs {
+                let k0 = 2 * t;
+                // odd-K pad pair: clamp the B row; the weight lane is the
+                // zero pad byte, so the duplicated row contributes nothing
+                let k1 = (k0 + 1).min(k - 1);
+                let b0 = _mm512_loadu_si512(bp.add(k0 * n + j) as *const _);
+                let b1 = _mm512_loadu_si512(bp.add(k1 * n + j) as *const _);
+                let lo = _mm512_unpacklo_epi8(b0, b1);
+                let hi = _mm512_unpackhi_epi8(b0, b1);
+                // 256-bit quarters of the interleave, each widened to 32
+                // i16 lanes (16 position pairs): w0 = positions j+0..8 and
+                // j+16..24, w1 = j+8.. and j+24.., w2 = j+32.. and j+48..,
+                // w3 = j+40.. and j+56..
+                let w0 = _mm512_cvtepu8_epi16(_mm512_castsi512_si256(lo));
+                let w1 = _mm512_cvtepu8_epi16(_mm512_castsi512_si256(hi));
+                let w2 = _mm512_cvtepu8_epi16(_mm512_extracti64x4_epi64(lo, 1));
+                let w3 = _mm512_cvtepu8_epi16(_mm512_extracti64x4_epi64(hi, 1));
+                for r in 0..mr {
+                    let ap = weight_pair(a, (i + r) * kp + k0);
+                    acc[r][0] = _mm512_dpwssd_epi32(acc[r][0], w0, ap);
+                    acc[r][1] = _mm512_dpwssd_epi32(acc[r][1], w1, ap);
+                    acc[r][2] = _mm512_dpwssd_epi32(acc[r][2], w2, ap);
+                    acc[r][3] = _mm512_dpwssd_epi32(acc[r][3], w3, ap);
+                }
+            }
+            for r in 0..mr {
+                let crow = c.as_mut_ptr().add((i + r) * n + j);
+                store_halves(acc[r][0], crow, crow.add(16));
+                store_halves(acc[r][1], crow.add(8), crow.add(24));
+                store_halves(acc[r][2], crow.add(32), crow.add(48));
+                store_halves(acc[r][3], crow.add(40), crow.add(56));
+            }
+            j += 64;
+        }
+        // position tail: exact scalar (integer products commute with the
+        // vector body, so the seam is bit-invisible)
+        for r in 0..mr {
+            let arow = &a[(i + r) * kp..(i + r) * kp + k];
+            for jj in n64..n {
+                let mut s = 0i32;
+                for (kk, &av) in arow.iter().enumerate() {
+                    s = s.wrapping_add(av as i32 * *b.get_unchecked(kk * n + jj) as i32);
+                }
+                *c.get_unchecked_mut((i + r) * n + jj) = s;
+            }
+        }
+        i += mr;
+    }
+}
+
+/// w4 conv GEMM row span: [`conv_span`] with the weight pair decoded
+/// from one packed byte. Same blocking, exact products — bit-identical.
+#[target_feature(enable = "avx512f,avx512bw,avx512vnni")]
+pub unsafe fn conv4_span(
+    a: &[u8],
+    m: usize,
+    k: usize,
+    kp: usize,
+    b: &[u8],
+    c: &mut [i32],
+    n: usize,
+    cfg: u8,
+) {
+    let tile = if cfg == 0 { 2 } else { 1 };
+    let n64 = n - n % 64;
+    let kpairs = kp / 2; // also the byte stride per packed row
+    let bp = b.as_ptr();
+    let mut i = 0;
+    while i < m {
+        let mr = (m - i).min(tile);
+        let mut j = 0;
+        while j < n64 {
+            let mut acc = [[_mm512_setzero_si512(); 4]; 2];
+            for t in 0..kpairs {
+                let k0 = 2 * t;
+                let k1 = (k0 + 1).min(k - 1);
+                let b0 = _mm512_loadu_si512(bp.add(k0 * n + j) as *const _);
+                let b1 = _mm512_loadu_si512(bp.add(k1 * n + j) as *const _);
+                let lo = _mm512_unpacklo_epi8(b0, b1);
+                let hi = _mm512_unpackhi_epi8(b0, b1);
+                let w0 = _mm512_cvtepu8_epi16(_mm512_castsi512_si256(lo));
+                let w1 = _mm512_cvtepu8_epi16(_mm512_castsi512_si256(hi));
+                let w2 = _mm512_cvtepu8_epi16(_mm512_extracti64x4_epi64(lo, 1));
+                let w3 = _mm512_cvtepu8_epi16(_mm512_extracti64x4_epi64(hi, 1));
+                for r in 0..mr {
+                    let ap = weight_pair4(a, (i + r) * kpairs + t);
+                    acc[r][0] = _mm512_dpwssd_epi32(acc[r][0], w0, ap);
+                    acc[r][1] = _mm512_dpwssd_epi32(acc[r][1], w1, ap);
+                    acc[r][2] = _mm512_dpwssd_epi32(acc[r][2], w2, ap);
+                    acc[r][3] = _mm512_dpwssd_epi32(acc[r][3], w3, ap);
+                }
+            }
+            for r in 0..mr {
+                let crow = c.as_mut_ptr().add((i + r) * n + j);
+                store_halves(acc[r][0], crow, crow.add(16));
+                store_halves(acc[r][1], crow.add(8), crow.add(24));
+                store_halves(acc[r][2], crow.add(32), crow.add(48));
+                store_halves(acc[r][3], crow.add(40), crow.add(56));
+            }
+            j += 64;
+        }
+        // position tail: exact scalar over decoded nibbles
+        for r in 0..mr {
+            let arow = &a[(i + r) * kpairs..(i + r + 1) * kpairs];
+            for jj in n64..n {
+                let mut s = 0i32;
+                for kk in 0..k {
+                    s = s.wrapping_add(
+                        nibble(arow, kk) as i32 * *b.get_unchecked(kk * n + jj) as i32,
+                    );
+                }
+                *c.get_unchecked_mut((i + r) * n + jj) = s;
+            }
+        }
+        i += mr;
+    }
+}
+
+/// Wrapping horizontal sum of the 16 i32 lanes (explicit halving adds —
+/// all wrap, no saturate).
+#[inline]
+#[target_feature(enable = "avx512f,avx512bw,avx512vnni")]
+unsafe fn hsum_epi32(v: __m512i) -> i32 {
+    let s = _mm256_add_epi32(_mm512_castsi512_si256(v), _mm512_extracti64x4_epi64(v, 1));
+    let s = _mm_add_epi32(_mm256_castsi256_si128(s), _mm256_extracti128_si256(s, 1));
+    let s = _mm_add_epi32(s, _mm_shuffle_epi32(s, 0b01_00_11_10));
+    let s = _mm_add_epi32(s, _mm_shuffle_epi32(s, 0b00_00_00_01));
+    _mm_cvtsi128_si32(s)
+}
+
+/// Dense GEMM, one activation row: the AVX2 quad layout consumed two
+/// K-blocks (32 bytes) per `vpdpwssd`, weight blocks of one lane loaded
+/// as a 128-bit pair (they sit `DENSE_NR·DENSE_KB` = 64 bytes apart in
+/// the interleave). An odd trailing block and the K tail fall back to
+/// exact scalar per lane. `cfg 1` interleaves two accumulator quartets
+/// over alternating block pairs.
+#[target_feature(enable = "avx512f,avx512bw,avx512vnni")]
+pub unsafe fn dense_row(arow: &[u8], w: &PackedDense, crow: &mut [i32], cfg: u8) {
+    let k = w.k;
+    let nb = w.kp / DENSE_KB;
+    let pairs = nb / 2;
+    let wp = w.data.as_ptr();
+    // staged 32-byte activation window for the final (partial) pair:
+    // bytes past k are zero, matching the zero K padding of the pack
+    let mut pairbuf = [0u8; 2 * DENSE_KB];
+    for q in 0..w.np / DENSE_NR {
+        let mut acc = [_mm512_setzero_si512(); 4];
+        let mut acc2 = [_mm512_setzero_si512(); 4];
+        let base = q * nb * (DENSE_NR * DENSE_KB);
+        for p in 0..pairs {
+            let a0 = 2 * p * DENSE_KB;
+            let av = if a0 + 2 * DENSE_KB <= k {
+                _mm256_loadu_si256(arow.as_ptr().add(a0) as *const __m256i)
+            } else {
+                pairbuf.fill(0);
+                pairbuf[..k - a0].copy_from_slice(&arow[a0..]);
+                _mm256_loadu_si256(pairbuf.as_ptr() as *const __m256i)
+            };
+            let a16 = _mm512_cvtepu8_epi16(av);
+            let blk = wp.add(base + 2 * p * DENSE_NR * DENSE_KB);
+            for r in 0..4 {
+                let w0 = _mm_loadu_si128(blk.add(r * DENSE_KB) as *const __m128i);
+                let w1 = _mm_loadu_si128(
+                    blk.add(DENSE_NR * DENSE_KB + r * DENSE_KB) as *const __m128i
+                );
+                let w16 = _mm512_cvtepi8_epi16(_mm256_set_m128i(w1, w0));
+                if cfg != 0 && p % 2 == 1 {
+                    acc2[r] = _mm512_dpwssd_epi32(acc2[r], a16, w16);
+                } else {
+                    acc[r] = _mm512_dpwssd_epi32(acc[r], a16, w16);
+                }
+            }
+        }
+        for r in 0..4 {
+            let j = q * DENSE_NR + r;
+            if j < crow.len() {
+                let mut s = hsum_epi32(_mm512_add_epi32(acc[r], acc2[r]));
+                if nb % 2 == 1 {
+                    // odd trailing block: exact scalar over its real K range
+                    let t = nb - 1;
+                    let bb = base + (t * DENSE_NR + r) * DENSE_KB;
+                    let k0 = t * DENSE_KB;
+                    for kk in k0..k.min(k0 + DENSE_KB) {
+                        s = s.wrapping_add(arow[kk] as i32 * w.data[bb + (kk - k0)] as i32);
+                    }
+                }
+                *crow.get_unchecked_mut(j) = s;
+            }
+        }
+    }
+}
+
+/// The nibble→i8 unpack epilogue at 512-bit width: 16 packed bytes → 32
+/// sign-extended i16 weight lanes in logical order (byte duplication,
+/// u8→i16 widening, per-lane shift-left via `vpmullw`, arithmetic shift
+/// right by 12 — the same idiom as the AVX2 core, twice as wide).
+#[inline]
+#[target_feature(enable = "avx512f,avx512bw,avx512vnni")]
+unsafe fn nibbles_to_i16(x: __m128i) -> __m512i {
+    let dup = _mm256_set_m128i(_mm_unpackhi_epi8(x, x), _mm_unpacklo_epi8(x, x));
+    let v = _mm512_cvtepu8_epi16(dup);
+    // even i16 lanes (low nibbles) multiply by 1<<12, odd lanes (high
+    // nibbles) by 1<<8
+    let mul = _mm512_set1_epi32(((1 << 8) << 16) | (1 << 12));
+    _mm512_srai_epi16(_mm512_mullo_epi16(v, mul), 12)
+}
+
+/// w4 dense GEMM, one activation row: [`dense_row`] with each 32-weight
+/// block pair decoded from 16 packed bytes (two 8-byte lane blocks,
+/// `DENSE_NR·DENSE_KB/2` = 32 bytes apart) by [`nibbles_to_i16`].
+#[target_feature(enable = "avx512f,avx512bw,avx512vnni")]
+pub unsafe fn dense4_row(arow: &[u8], w: &PackedDense4, crow: &mut [i32], cfg: u8) {
+    const KB2: usize = DENSE_KB / 2;
+    let k = w.k;
+    let nb = w.kp / DENSE_KB;
+    let pairs = nb / 2;
+    let wp = w.data.as_ptr();
+    let mut pairbuf = [0u8; 2 * DENSE_KB];
+    for q in 0..w.np / DENSE_NR {
+        let mut acc = [_mm512_setzero_si512(); 4];
+        let mut acc2 = [_mm512_setzero_si512(); 4];
+        let base = q * nb * (DENSE_NR * KB2);
+        for p in 0..pairs {
+            let a0 = 2 * p * DENSE_KB;
+            let av = if a0 + 2 * DENSE_KB <= k {
+                _mm256_loadu_si256(arow.as_ptr().add(a0) as *const __m256i)
+            } else {
+                pairbuf.fill(0);
+                pairbuf[..k - a0].copy_from_slice(&arow[a0..]);
+                _mm256_loadu_si256(pairbuf.as_ptr() as *const __m256i)
+            };
+            let a16 = _mm512_cvtepu8_epi16(av);
+            let blk = wp.add(base + 2 * p * DENSE_NR * KB2);
+            for r in 0..4 {
+                let w0 = _mm_loadl_epi64(blk.add(r * KB2) as *const __m128i);
+                let w1 = _mm_loadl_epi64(blk.add(DENSE_NR * KB2 + r * KB2) as *const __m128i);
+                let w16 = nibbles_to_i16(_mm_unpacklo_epi64(w0, w1));
+                if cfg != 0 && p % 2 == 1 {
+                    acc2[r] = _mm512_dpwssd_epi32(acc2[r], a16, w16);
+                } else {
+                    acc[r] = _mm512_dpwssd_epi32(acc[r], a16, w16);
+                }
+            }
+        }
+        for r in 0..4 {
+            let j = q * DENSE_NR + r;
+            if j < crow.len() {
+                let mut s = hsum_epi32(_mm512_add_epi32(acc[r], acc2[r]));
+                if nb % 2 == 1 {
+                    let t = nb - 1;
+                    let bb = base + (t * DENSE_NR + r) * KB2;
+                    let blk = &w.data[bb..bb + KB2];
+                    let k0 = t * DENSE_KB;
+                    for kk in k0..k.min(k0 + DENSE_KB) {
+                        s = s.wrapping_add(arow[kk] as i32 * nibble(blk, kk - k0) as i32);
+                    }
+                }
+                *crow.get_unchecked_mut(j) = s;
+            }
+        }
+    }
+}

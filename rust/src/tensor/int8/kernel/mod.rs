@@ -1,0 +1,936 @@
+//! Runtime-dispatched i8 GEMM micro-kernels over ahead-of-time packed
+//! weights — the serving engine's hot loop.
+//!
+//! Two kernel shapes cover the integer engine:
+//!
+//! * **conv** ([`gemm_conv_packed_into`]): `C[m,n] = A_i8[m,k] · B_u8[k,n]`
+//!   with A = packed weights and B = im2col columns. Vectorized over the
+//!   position axis `n` with the weight pair broadcast, two output rows per
+//!   register tile.
+//! * **dense** ([`gemm_dense_packed_into`]): `C[m,n] = A_u8[m,k] · W^T`
+//!   with W = packed weight rows. Vectorized over the reduction axis `k`,
+//!   four weight rows sharing one streaming pass of the activation row.
+//!
+//! ## ISA variants and the exactness contract
+//!
+//! Four implementations share the fixed pack layouts, one per submodule:
+//!
+//! * [`Kernel::Avx2`] (`avx2` module): `vpmaddwd` (`_mm256_madd_epi16`)
+//!   after explicit u8→i16 / i8→i16 widening.
+//! * [`Kernel::Avx512`] (`avx512`): `vpdpwssd` (AVX-512 VNNI) over the
+//!   same widened i16 operands at twice the register width. VNNI's
+//!   word-to-dword form multiplies i16 lanes to i32, pair-sums, and
+//!   accumulates **without saturation** — the `vpdpwssds` saturating
+//!   sibling and the u8×i8 `vpdpbusd` byte form (whose quad-sum can
+//!   overflow i16 pairs… it cannot, but its saturating sibling exists to
+//!   be confused with) are never used. Compiled only on toolchains that
+//!   ship stable AVX-512 intrinsics (rustc ≥ 1.89, probed by `build.rs`
+//!   via the `pallas_avx512` cfg).
+//! * [`Kernel::Neon`] (`neon`): AArch64 `smlal`/`smlal2`
+//!   (`vmlal_s16`) widening multiply-accumulates over the same i16
+//!   operands, 128-bit registers.
+//! * [`Kernel::Portable`] ([`portable`]): chunked scalar path with the
+//!   identical blocking; compiles on every ISA and auto-vectorizes
+//!   reasonably.
+//!
+//! Every 16-bit product of a u8 activation and an i8 weight fits i16
+//! (|255·−128| = 32640), every pair-sum fits i32, so — unlike the classic
+//! `vpmaddubsw` trick, which saturates at i16 — **every intermediate is
+//! exact** on every path. i32 accumulation then wraps mod 2³², under
+//! which addition is associative and commutative, so any
+//! blocking/vector width/ISA produces bit-identical accumulators. That is
+//! the determinism contract: all variants are bit-for-bit equal on every
+//! input (proved against the scalar reference in
+//! `rust/tests/int8_kernels.rs`, including near-`i32::MIN` accumulator
+//! edges), so `PALLAS_NO_SIMD=1` — and every autotune outcome — is a pure
+//! performance knob.
+//!
+//! ## Per-shape dispatch
+//!
+//! A GEMM call takes a [`GemmChoice`]: a [`Kernel`] plus a small blocking
+//! config index (`cfg < GEMM_CFGS`, e.g. row-tile height for conv,
+//! accumulator interleave for dense). [`select`] still provides the
+//! process-wide heuristic default (used when no plan is involved), but
+//! the serving plan compiler runs the [`autotune`] micro-tuner on each
+//! layer's actual packed shape and caches the winning choice per op in
+//! the `QuantizedPlan` — the hot loop then pays zero dispatch overhead
+//! beyond reading the cached enum. Blocking configs only reorder
+//! wrap-mod-2³² additions, so they are bit-identical by the argument
+//! above.
+//!
+//! Packing ([`PackedConv`], [`PackedDense`]) happens once at plan-compile
+//! time ([`crate::serve::plan`]); the batcher's hot loop does zero
+//! repacking. The pack layouts are **fixed across variants** — an
+//! autotune or env override can never change bytes in memory, only the
+//! loop structure that reads them. Layout invariants (zero padding, block
+//! alignment) are re-checked by `debug_assert!`s in the serve kernels so
+//! a layout bug fails loudly in tests instead of silently corrupting
+//! accumulators.
+//!
+//! ## Int4 (w4) variants
+//!
+//! [`PackedConv4`] / [`PackedDense4`] store weights as two's-complement
+//! nibbles, two per byte (codes in `[-8, 7]`): byte `j` of a K-run holds
+//! weight `2j` in the **low** nibble and weight `2j+1` in the **high**
+//! nibble. The K-blocking is identical to the w8 layouts ([`CONV_KB`]
+//! pairs map 1:1 onto nibble pairs; [`DENSE_KB`] weights become
+//! `DENSE_KB/2` bytes per block), so the w4 GEMM cores are the existing
+//! cores with a nibble→i8 unpack epilogue in front of the same widened
+//! multiply-accumulate feed: sign-extension is shift-left-then-
+//! arithmetic-shift-right (`(b << 4) >> 4` for the low nibble, `b >> 4`
+//! for the high). Every unpacked value is the exact i8 code, so the
+//! exact-intermediate argument above applies unchanged and
+//! w4 SIMD == w4 portable == scalar-on-unpacked-weights, bit for bit.
+
+#![allow(clippy::needless_range_loop)]
+
+use std::ops::Range;
+use std::sync::OnceLock;
+
+use super::{i4_hi, i4_lo, pack_i4};
+use crate::util::parallel;
+
+pub mod autotune;
+pub mod portable;
+
+#[cfg(target_arch = "x86_64")]
+pub mod avx2;
+#[cfg(all(target_arch = "x86_64", pallas_avx512))]
+pub mod avx512;
+#[cfg(target_arch = "aarch64")]
+pub mod neon;
+
+/// K blocking of the conv kernel: weights are consumed as widened i16
+/// pairs, so packed conv rows are zero-padded to a multiple of 2.
+pub const CONV_KB: usize = 2;
+/// K blocking of the dense kernel: one 128-bit load widened to 16×i16.
+pub const DENSE_KB: usize = 16;
+/// Dense register tile: weight rows interleaved (and zero-row padded) in
+/// quads so four dot products share one activation stream.
+pub const DENSE_NR: usize = 4;
+
+/// Blocking configs per kernel variant (`GemmChoice::cfg < GEMM_CFGS`):
+/// `c0` is each variant's default loop structure, `c1` an alternate
+/// tile/interleave (conv: 1-row tile instead of 2; dense: dual
+/// interleaved accumulators; portable conv: fused k-pair pass). All
+/// configs read the same packed bytes and differ only in add order,
+/// which wrap-mod-2³² accumulation makes bit-invisible.
+pub const GEMM_CFGS: u8 = 2;
+
+/// Blocking configs available for one kernel (currently uniform; the
+/// autotuner iterates `0..cfg_count(k)` so per-variant counts can grow).
+pub const fn cfg_count(_kern: Kernel) -> u8 {
+    GEMM_CFGS
+}
+
+fn round_up(x: usize, to: usize) -> usize {
+    x.div_ceil(to) * to
+}
+
+/// Which micro-kernel implementation to run. The serving plan caches one
+/// [`GemmChoice`] per op (autotuned at compile time); [`select`] provides
+/// the process-wide heuristic default for everything else.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kernel {
+    /// `vpdpwssd`-based x86_64 path (requires AVX-512 F/BW/VNNI **and** a
+    /// rustc ≥ 1.89 build; the GEMM entry points demote it on CPUs or
+    /// builds without it, so passing it is always safe).
+    Avx512,
+    /// `vpmaddwd`-based x86_64 path (requires AVX2; demoted to
+    /// [`Kernel::Portable`] on CPUs without it).
+    Avx2,
+    /// `smlal`-based AArch64 NEON path (baseline on aarch64 targets;
+    /// demoted to portable elsewhere).
+    Neon,
+    /// Chunked scalar path with the identical blocking; compiles on every
+    /// ISA and auto-vectorizes reasonably. Bit-identical to every SIMD
+    /// variant.
+    Portable,
+}
+
+impl Kernel {
+    /// Stable label used by `serve-bench`, `/metrics` and the bench entry
+    /// names.
+    pub fn name(self) -> &'static str {
+        match self {
+            Kernel::Avx512 => "avx512",
+            Kernel::Avx2 => "avx2",
+            Kernel::Neon => "neon",
+            Kernel::Portable => "portable",
+        }
+    }
+
+    /// Inverse of [`Kernel::name`] (used by the `PALLAS_KERNEL` override).
+    pub fn from_name(s: &str) -> Option<Kernel> {
+        match s.trim() {
+            "avx512" => Some(Kernel::Avx512),
+            "avx2" => Some(Kernel::Avx2),
+            "neon" => Some(Kernel::Neon),
+            "portable" => Some(Kernel::Portable),
+            _ => None,
+        }
+    }
+
+    /// All variants in dispatch-precedence order (widest ISA first).
+    pub fn all() -> [Kernel; 4] {
+        [Kernel::Avx512, Kernel::Avx2, Kernel::Neon, Kernel::Portable]
+    }
+
+    /// CPUID/toolchain availability of this variant on the running
+    /// machine (ignores `PALLAS_NO_SIMD`; portable is always available).
+    pub fn available(self) -> bool {
+        match self {
+            Kernel::Avx512 => avx512_available(),
+            Kernel::Avx2 => avx2_available(),
+            Kernel::Neon => neon_available(),
+            Kernel::Portable => true,
+        }
+    }
+}
+
+/// One dispatchable GEMM configuration: an ISA variant plus its blocking
+/// config. `From<Kernel>` yields the variant's default blocking (`cfg 0`),
+/// so call sites that only care about the ISA keep passing a [`Kernel`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GemmChoice {
+    pub kernel: Kernel,
+    /// Blocking config index, `< cfg_count(kernel)` (clamped on entry).
+    pub cfg: u8,
+}
+
+impl GemmChoice {
+    pub fn new(kernel: Kernel, cfg: u8) -> GemmChoice {
+        GemmChoice { kernel, cfg }
+    }
+
+    /// The process-wide heuristic choice ([`select`] at default blocking)
+    /// — what every GEMM ran before per-op autotuning, and what
+    /// `PALLAS_AUTOTUNE=0` pins plans to.
+    pub fn heuristic() -> GemmChoice {
+        GemmChoice { kernel: select(), cfg: 0 }
+    }
+
+    /// Stable label for bench output and metrics, e.g. `avx2.c0`.
+    pub fn label(self) -> String {
+        format!("{}.c{}", self.kernel.name(), self.cfg)
+    }
+}
+
+impl From<Kernel> for GemmChoice {
+    fn from(kernel: Kernel) -> GemmChoice {
+        GemmChoice { kernel, cfg: 0 }
+    }
+}
+
+/// CPUID-level availability of the AVX2 path (ignores `PALLAS_NO_SIMD`).
+pub fn avx2_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        is_x86_feature_detected!("avx2")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// Availability of the AVX-512 VNNI path: requires the F/BW/VNNI feature
+/// trio on the CPU *and* a build whose toolchain ships stable AVX-512
+/// intrinsics (`pallas_avx512`, emitted by `build.rs` on rustc ≥ 1.89).
+/// Ignores `PALLAS_NO_SIMD`.
+pub fn avx512_available() -> bool {
+    #[cfg(all(target_arch = "x86_64", pallas_avx512))]
+    {
+        is_x86_feature_detected!("avx512f")
+            && is_x86_feature_detected!("avx512bw")
+            && is_x86_feature_detected!("avx512vnni")
+    }
+    #[cfg(not(all(target_arch = "x86_64", pallas_avx512)))]
+    {
+        false
+    }
+}
+
+/// Availability of the NEON path: advanced SIMD is baseline on the
+/// aarch64 targets we compile the variant for.
+pub fn neon_available() -> bool {
+    cfg!(target_arch = "aarch64")
+}
+
+/// `PALLAS_NO_SIMD` contract: any non-empty value other than `0` disables
+/// the SIMD paths (so `PALLAS_NO_SIMD=1`, `=true`, `=yes` all work).
+pub fn no_simd_requested(v: Option<&str>) -> bool {
+    matches!(v.map(str::trim), Some(s) if !s.is_empty() && s != "0")
+}
+
+/// `PALLAS_KERNEL` contract: force one named variant
+/// (`avx512|avx2|neon|portable`) as the heuristic selection *and* the
+/// only autotune candidate — the CI forced-variant sweep runs the whole
+/// suite once per variant this way. Unknown or unavailable names demote
+/// exactly like any caller-supplied kernel (bit-identical, never UB);
+/// `PALLAS_NO_SIMD` still wins.
+pub fn forced_kernel(v: Option<&str>) -> Option<Kernel> {
+    Kernel::from_name(v?)
+}
+
+/// One uncached dispatch decision: `PALLAS_NO_SIMD` wins, then a
+/// `PALLAS_KERNEL` override, then CPU feature detection widest-first.
+/// Exposed for tests that exercise the env contract; production paths go
+/// through the cached [`select`].
+pub fn select_uncached() -> Kernel {
+    if no_simd_requested(std::env::var("PALLAS_NO_SIMD").ok().as_deref()) {
+        return Kernel::Portable;
+    }
+    if let Some(k) = forced_kernel(std::env::var("PALLAS_KERNEL").ok().as_deref()) {
+        return usable_kernel(k);
+    }
+    *Kernel::all().iter().find(|k| k.available()).unwrap_or(&Kernel::Portable)
+}
+
+/// The process-wide heuristic kernel choice, detected once and cached.
+pub fn select() -> Kernel {
+    static K: OnceLock<Kernel> = OnceLock::new();
+    *K.get_or_init(select_uncached)
+}
+
+/// Demote a requested kernel to one this CPU/build can actually run: the
+/// GEMM entry points are safe functions, so a caller-supplied SIMD
+/// variant must never reach target-feature code on a machine without it
+/// (that would be UB) — it falls down the precedence ladder to the widest
+/// available path, which is bit-identical anyway.
+fn usable_kernel(kern: Kernel) -> Kernel {
+    match kern {
+        Kernel::Avx512 if avx512_available() => Kernel::Avx512,
+        Kernel::Avx512 | Kernel::Avx2 if avx2_available() => Kernel::Avx2,
+        Kernel::Neon if neon_available() => Kernel::Neon,
+        _ => Kernel::Portable,
+    }
+}
+
+/// [`usable_kernel`] plus a blocking-config clamp; applied once per GEMM
+/// entry so the dispatch match below never sees an impossible choice.
+fn usable(ch: GemmChoice) -> GemmChoice {
+    let kernel = usable_kernel(ch.kernel);
+    GemmChoice { kernel, cfg: ch.cfg.min(cfg_count(kernel).saturating_sub(1)) }
+}
+
+// ---------------------------------------------------------------------------
+// Packed weight layouts
+// ---------------------------------------------------------------------------
+
+/// Conv weights packed for [`gemm_conv_packed_into`]: row-major `[rows]`
+/// rows of `kp` bytes each, where `kp` is `k` rounded up to [`CONV_KB`]
+/// and the pad byte is zero. Rows stay contiguous (no row interleaving),
+/// so a grouped conv can hand any `[r0, r1)` row range to the kernel by
+/// plain slicing — the `par_grouped_rows_mut` fan-out cuts at group
+/// boundaries exactly as before.
+#[derive(Clone, Debug)]
+pub struct PackedConv {
+    pub rows: usize,
+    /// logical reduction length (im2col patch size)
+    pub k: usize,
+    /// padded row stride in bytes (`k` rounded up to [`CONV_KB`])
+    pub kp: usize,
+    pub data: Vec<i8>,
+}
+
+impl PackedConv {
+    pub fn pack(w: &[i8], rows: usize, k: usize) -> PackedConv {
+        assert_eq!(w.len(), rows * k, "conv pack: {} weights for {rows}x{k}", w.len());
+        let kp = round_up(k.max(1), CONV_KB);
+        let mut data = vec![0i8; rows * kp];
+        for r in 0..rows {
+            data[r * kp..r * kp + k].copy_from_slice(&w[r * k..(r + 1) * k]);
+        }
+        PackedConv { rows, k, kp, data }
+    }
+
+    /// The packed bytes of rows `r.start..r.end` (group slicing).
+    pub fn row_slice(&self, r: Range<usize>) -> &[i8] {
+        &self.data[r.start * self.kp..r.end * self.kp]
+    }
+
+    /// Layout invariants: stride math and zeroed K padding. O(weights) —
+    /// meant for `debug_assert!` at kernel entry, not the hot loop.
+    pub fn layout_ok(&self) -> bool {
+        self.kp == round_up(self.k.max(1), CONV_KB)
+            && self.data.len() == self.rows * self.kp
+            && (0..self.rows).all(|r| {
+                self.data[r * self.kp + self.k..(r + 1) * self.kp].iter().all(|&z| z == 0)
+            })
+    }
+}
+
+/// Dense weights `[n, k]` packed for [`gemm_dense_packed_into`]:
+/// row quads interleaved at [`DENSE_KB`] granularity. With
+/// `nb = kp / DENSE_KB` blocks per row, the block for (quad `q`, k-block
+/// `t`, lane `r`) lives at byte offset `((q·nb + t)·DENSE_NR + r)·DENSE_KB`
+/// — i.e. the four rows of a quad alternate K-blocks, so the kernel's four
+/// accumulators read one contiguous 64-byte span per k-step. `k` pads to
+/// `kp` (zero bytes), `n` pads to `np` (all-zero rows).
+#[derive(Clone, Debug)]
+pub struct PackedDense {
+    /// logical output count (rows of the original weight matrix)
+    pub n: usize,
+    /// logical reduction length
+    pub k: usize,
+    /// padded reduction length (multiple of [`DENSE_KB`])
+    pub kp: usize,
+    /// padded row count (multiple of [`DENSE_NR`])
+    pub np: usize,
+    pub data: Vec<i8>,
+}
+
+impl PackedDense {
+    pub fn pack(w: &[i8], n: usize, k: usize) -> PackedDense {
+        assert_eq!(w.len(), n * k, "dense pack: {} weights for {n}x{k}", w.len());
+        let kp = round_up(k.max(1), DENSE_KB);
+        let np = round_up(n.max(1), DENSE_NR);
+        let nb = kp / DENSE_KB;
+        let mut data = vec![0i8; np * kp];
+        for j in 0..n {
+            let (q, r) = (j / DENSE_NR, j % DENSE_NR);
+            for t in 0..nb {
+                let k0 = t * DENSE_KB;
+                if k0 >= k {
+                    break;
+                }
+                let kend = k.min(k0 + DENSE_KB);
+                let base = ((q * nb + t) * DENSE_NR + r) * DENSE_KB;
+                data[base..base + (kend - k0)].copy_from_slice(&w[j * k + k0..j * k + kend]);
+            }
+        }
+        PackedDense { n, k, kp, np, data }
+    }
+
+    /// Layout invariants: stride math, zeroed K padding of every real row
+    /// and all-zero pad rows. O(weights); for `debug_assert!` use.
+    pub fn layout_ok(&self) -> bool {
+        let nb = self.kp / DENSE_KB;
+        if self.kp != round_up(self.k.max(1), DENSE_KB)
+            || self.np != round_up(self.n.max(1), DENSE_NR)
+            || self.data.len() != self.np * self.kp
+        {
+            return false;
+        }
+        for j in 0..self.np {
+            let (q, r) = (j / DENSE_NR, j % DENSE_NR);
+            for t in 0..nb {
+                let base = ((q * nb + t) * DENSE_NR + r) * DENSE_KB;
+                let blk = &self.data[base..base + DENSE_KB];
+                for (tt, &z) in blk.iter().enumerate() {
+                    let kk = t * DENSE_KB + tt;
+                    if (j >= self.n || kk >= self.k) && z != 0 {
+                        return false;
+                    }
+                }
+            }
+        }
+        true
+    }
+}
+
+/// Logical weight `kk` of a nibble-packed K-run (low nibble first).
+#[inline]
+fn nibble(bytes: &[u8], kk: usize) -> i8 {
+    let b = bytes[kk / 2];
+    if kk % 2 == 0 { i4_lo(b) } else { i4_hi(b) }
+}
+
+/// Conv weights nibble-packed for [`gemm_conv4_packed_into`]: the
+/// [`PackedConv`] layout at half the bytes. Rows are zero-padded to `kp`
+/// (a [`CONV_KB`] multiple, so every row is a whole number of bytes) and
+/// stored as `kp/2` bytes each; pad nibbles are zero. Rows stay
+/// contiguous, so grouped convs slice `[r0, r1)` exactly as in w8.
+#[derive(Clone, Debug)]
+pub struct PackedConv4 {
+    pub rows: usize,
+    /// logical reduction length (im2col patch size)
+    pub k: usize,
+    /// padded logical row length (`k` rounded up to [`CONV_KB`]); the
+    /// byte stride per row is `kp / 2`
+    pub kp: usize,
+    pub data: Vec<u8>,
+}
+
+impl PackedConv4 {
+    /// Packs codes that must already fit `[-8, 7]` (panics otherwise —
+    /// the plan compiler checks range before choosing the w4 layout).
+    pub fn pack(w: &[i8], rows: usize, k: usize) -> PackedConv4 {
+        assert_eq!(w.len(), rows * k, "conv4 pack: {} weights for {rows}x{k}", w.len());
+        let kp = round_up(k.max(1), CONV_KB);
+        let mut row = vec![0i8; kp];
+        let mut data = Vec::with_capacity(rows * kp / 2);
+        for r in 0..rows {
+            row[..k].copy_from_slice(&w[r * k..(r + 1) * k]);
+            data.extend_from_slice(&pack_i4(&row));
+        }
+        PackedConv4 { rows, k, kp, data }
+    }
+
+    /// The packed bytes of rows `r.start..r.end` (group slicing).
+    pub fn row_slice(&self, r: Range<usize>) -> &[u8] {
+        let stride = self.kp / 2;
+        &self.data[r.start * stride..r.end * stride]
+    }
+
+    /// Layout invariants: stride math and zeroed pad nibbles. O(weights);
+    /// for `debug_assert!` at kernel entry.
+    pub fn layout_ok(&self) -> bool {
+        let stride = self.kp / 2;
+        self.kp == round_up(self.k.max(1), CONV_KB)
+            && self.data.len() == self.rows * stride
+            && (0..self.rows).all(|r| {
+                let row = &self.data[r * stride..(r + 1) * stride];
+                (self.k..self.kp).all(|kk| nibble(row, kk) == 0)
+            })
+    }
+}
+
+/// Dense weights `[n, k]` nibble-packed for [`gemm_dense4_packed_into`]:
+/// the [`PackedDense`] quad-interleave with each [`DENSE_KB`]-weight
+/// block stored as `DENSE_KB/2` bytes, so the block for (quad `q`,
+/// k-block `t`, lane `r`) lives at byte offset
+/// `((q·nb + t)·DENSE_NR + r)·DENSE_KB/2`. Padding (K bytes and whole
+/// pad rows) is zero nibbles, exactly as in w8.
+#[derive(Clone, Debug)]
+pub struct PackedDense4 {
+    /// logical output count (rows of the original weight matrix)
+    pub n: usize,
+    /// logical reduction length
+    pub k: usize,
+    /// padded reduction length (multiple of [`DENSE_KB`])
+    pub kp: usize,
+    /// padded row count (multiple of [`DENSE_NR`])
+    pub np: usize,
+    pub data: Vec<u8>,
+}
+
+impl PackedDense4 {
+    /// Packs codes that must already fit `[-8, 7]` (panics otherwise).
+    pub fn pack(w: &[i8], n: usize, k: usize) -> PackedDense4 {
+        assert_eq!(w.len(), n * k, "dense4 pack: {} weights for {n}x{k}", w.len());
+        let kp = round_up(k.max(1), DENSE_KB);
+        let np = round_up(n.max(1), DENSE_NR);
+        let nb = kp / DENSE_KB;
+        let mut blk = [0i8; DENSE_KB];
+        let mut data = vec![0u8; np * kp / 2];
+        for j in 0..n {
+            let (q, r) = (j / DENSE_NR, j % DENSE_NR);
+            for t in 0..nb {
+                let k0 = t * DENSE_KB;
+                if k0 >= k {
+                    break;
+                }
+                let kend = k.min(k0 + DENSE_KB);
+                blk.fill(0);
+                blk[..kend - k0].copy_from_slice(&w[j * k + k0..j * k + kend]);
+                let base = ((q * nb + t) * DENSE_NR + r) * (DENSE_KB / 2);
+                data[base..base + DENSE_KB / 2].copy_from_slice(&pack_i4(&blk));
+            }
+        }
+        PackedDense4 { n, k, kp, np, data }
+    }
+
+    /// Layout invariants: stride math, zeroed pad nibbles of every real
+    /// row and all-zero pad rows. O(weights); for `debug_assert!` use.
+    pub fn layout_ok(&self) -> bool {
+        let nb = self.kp / DENSE_KB;
+        if self.kp != round_up(self.k.max(1), DENSE_KB)
+            || self.np != round_up(self.n.max(1), DENSE_NR)
+            || self.data.len() != self.np * self.kp / 2
+        {
+            return false;
+        }
+        for j in 0..self.np {
+            let (q, r) = (j / DENSE_NR, j % DENSE_NR);
+            for t in 0..nb {
+                let base = ((q * nb + t) * DENSE_NR + r) * (DENSE_KB / 2);
+                let blk = &self.data[base..base + DENSE_KB / 2];
+                for tt in 0..DENSE_KB {
+                    let kk = t * DENSE_KB + tt;
+                    if (j >= self.n || kk >= self.k) && nibble(blk, tt) != 0 {
+                        return false;
+                    }
+                }
+            }
+        }
+        true
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Variant dispatch (one cold match per row span; demoted by usable())
+// ---------------------------------------------------------------------------
+
+fn conv_span_dispatch(
+    ch: GemmChoice,
+    a: &[i8],
+    m: usize,
+    k: usize,
+    kp: usize,
+    b: &[u8],
+    c: &mut [i32],
+    n: usize,
+) {
+    match ch.kernel {
+        // SAFETY (all SIMD arms): usable() only lets a variant through
+        // when the CPU/build has it, so the target features are present.
+        #[cfg(all(target_arch = "x86_64", pallas_avx512))]
+        Kernel::Avx512 => unsafe { avx512::conv_span(a, m, k, kp, b, c, n, ch.cfg) },
+        #[cfg(target_arch = "x86_64")]
+        Kernel::Avx2 => unsafe { avx2::conv_span(a, m, k, kp, b, c, n, ch.cfg) },
+        #[cfg(target_arch = "aarch64")]
+        Kernel::Neon => unsafe { neon::conv_span(a, m, k, kp, b, c, n, ch.cfg) },
+        _ => portable::conv_span(a, m, k, kp, b, c, n, ch.cfg),
+    }
+}
+
+fn conv4_span_dispatch(
+    ch: GemmChoice,
+    a: &[u8],
+    m: usize,
+    k: usize,
+    kp: usize,
+    b: &[u8],
+    c: &mut [i32],
+    n: usize,
+) {
+    match ch.kernel {
+        // SAFETY (all SIMD arms): usable() guarantees availability.
+        #[cfg(all(target_arch = "x86_64", pallas_avx512))]
+        Kernel::Avx512 => unsafe { avx512::conv4_span(a, m, k, kp, b, c, n, ch.cfg) },
+        #[cfg(target_arch = "x86_64")]
+        Kernel::Avx2 => unsafe { avx2::conv4_span(a, m, k, kp, b, c, n, ch.cfg) },
+        #[cfg(target_arch = "aarch64")]
+        Kernel::Neon => unsafe { neon::conv4_span(a, m, k, kp, b, c, n, ch.cfg) },
+        _ => portable::conv4_span(a, m, k, kp, b, c, n, ch.cfg),
+    }
+}
+
+fn dense_row_dispatch(ch: GemmChoice, arow: &[u8], w: &PackedDense, crow: &mut [i32]) {
+    match ch.kernel {
+        // SAFETY (all SIMD arms): usable() guarantees availability.
+        #[cfg(all(target_arch = "x86_64", pallas_avx512))]
+        Kernel::Avx512 => unsafe { avx512::dense_row(arow, w, crow, ch.cfg) },
+        #[cfg(target_arch = "x86_64")]
+        Kernel::Avx2 => unsafe { avx2::dense_row(arow, w, crow, ch.cfg) },
+        #[cfg(target_arch = "aarch64")]
+        Kernel::Neon => unsafe { neon::dense_row(arow, w, crow, ch.cfg) },
+        _ => portable::dense_row(arow, w, crow, ch.cfg),
+    }
+}
+
+fn dense4_row_dispatch(ch: GemmChoice, arow: &[u8], w: &PackedDense4, crow: &mut [i32]) {
+    match ch.kernel {
+        // SAFETY (all SIMD arms): usable() guarantees availability.
+        #[cfg(all(target_arch = "x86_64", pallas_avx512))]
+        Kernel::Avx512 => unsafe { avx512::dense4_row(arow, w, crow, ch.cfg) },
+        #[cfg(target_arch = "x86_64")]
+        Kernel::Avx2 => unsafe { avx2::dense4_row(arow, w, crow, ch.cfg) },
+        #[cfg(target_arch = "aarch64")]
+        Kernel::Neon => unsafe { neon::dense4_row(arow, w, crow, ch.cfg) },
+        _ => portable::dense4_row(arow, w, crow, ch.cfg),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// GEMM entry points (parallel over output rows, overwrite semantics)
+// ---------------------------------------------------------------------------
+
+/// `C[m,n] = A · B` for packed conv weights `a` (`m` rows of `kp` bytes,
+/// logical reduction `k`), u8 im2col block `b` (`[k, n]` row-major) and
+/// i32 output `c` (`[m, n]`, overwritten). Row-parallel over the worker
+/// pool with the same grain as the scalar GEMM; inside a pool worker the
+/// nested call runs serially, so the grouped-conv fan-out keeps its
+/// existing split. `kern` is either a bare [`Kernel`] (default blocking)
+/// or a full [`GemmChoice`] from the plan's autotune cache.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_conv_packed_into(
+    kern: impl Into<GemmChoice>,
+    a: &[i8],
+    m: usize,
+    k: usize,
+    kp: usize,
+    b: &[u8],
+    c: &mut [i32],
+    n: usize,
+) {
+    debug_assert!(k >= 1, "conv GEMM needs a nonempty reduction");
+    debug_assert_eq!(a.len(), m * kp, "packed A length");
+    debug_assert_eq!(kp, round_up(k.max(1), CONV_KB), "conv K padding");
+    debug_assert_eq!(b.len(), k * n, "B shape");
+    debug_assert_eq!(c.len(), m * n, "C shape");
+    if m == 0 || n == 0 {
+        return;
+    }
+    let ch = usable(kern.into());
+    parallel::par_ranges_mut(c, n, super::row_grain(k, n), |rows, span| {
+        let aspan = &a[rows.start * kp..rows.end * kp];
+        conv_span_dispatch(ch, aspan, rows.end - rows.start, k, kp, b, span, n);
+    });
+}
+
+/// `C[m,n] = A · W^T` for u8 activations `a` (`[m, k]` row-major), packed
+/// dense weights `w` (`n = w.n` outputs) and i32 output `c` (`[m, w.n]`,
+/// overwritten). Row-parallel over images.
+pub fn gemm_dense_packed_into(
+    kern: impl Into<GemmChoice>,
+    a: &[u8],
+    w: &PackedDense,
+    c: &mut [i32],
+    m: usize,
+) {
+    let (k, nout) = (w.k, w.n);
+    debug_assert_eq!(a.len(), m * k, "A shape");
+    debug_assert_eq!(c.len(), m * nout, "C shape");
+    if m == 0 || nout == 0 {
+        return;
+    }
+    let ch = usable(kern.into());
+    parallel::par_ranges_mut(c, nout, super::row_grain(k, nout), |rows, span| {
+        for i in rows.clone() {
+            let arow = &a[i * k..(i + 1) * k];
+            let crow = &mut span[(i - rows.start) * nout..(i - rows.start + 1) * nout];
+            dense_row_dispatch(ch, arow, w, crow);
+        }
+    });
+}
+
+/// w4 conv GEMM: like [`gemm_conv_packed_into`], but `a` holds
+/// nibble-packed rows of `kp/2` bytes ([`PackedConv4`] row slices). The
+/// unpacked nibble is the exact i8 code, so the output is bit-identical
+/// to the w8 GEMM over the same codes.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_conv4_packed_into(
+    kern: impl Into<GemmChoice>,
+    a: &[u8],
+    m: usize,
+    k: usize,
+    kp: usize,
+    b: &[u8],
+    c: &mut [i32],
+    n: usize,
+) {
+    debug_assert!(k >= 1, "conv GEMM needs a nonempty reduction");
+    debug_assert_eq!(a.len(), m * kp / 2, "packed4 A length");
+    debug_assert_eq!(kp, round_up(k.max(1), CONV_KB), "conv K padding");
+    debug_assert_eq!(b.len(), k * n, "B shape");
+    debug_assert_eq!(c.len(), m * n, "C shape");
+    if m == 0 || n == 0 {
+        return;
+    }
+    let ch = usable(kern.into());
+    let stride = kp / 2;
+    parallel::par_ranges_mut(c, n, super::row_grain(k, n), |rows, span| {
+        let aspan = &a[rows.start * stride..rows.end * stride];
+        conv4_span_dispatch(ch, aspan, rows.end - rows.start, k, kp, b, span, n);
+    });
+}
+
+/// w4 dense GEMM: like [`gemm_dense_packed_into`] over a nibble-packed
+/// quad layout. Bit-identical to the w8 GEMM over the same codes.
+pub fn gemm_dense4_packed_into(
+    kern: impl Into<GemmChoice>,
+    a: &[u8],
+    w: &PackedDense4,
+    c: &mut [i32],
+    m: usize,
+) {
+    let (k, nout) = (w.k, w.n);
+    debug_assert_eq!(a.len(), m * k, "A shape");
+    debug_assert_eq!(c.len(), m * nout, "C shape");
+    if m == 0 || nout == 0 {
+        return;
+    }
+    let ch = usable(kern.into());
+    parallel::par_ranges_mut(c, nout, super::row_grain(k, nout), |rows, span| {
+        for i in rows.clone() {
+            let arow = &a[i * k..(i + 1) * k];
+            let crow = &mut span[(i - rows.start) * nout..(i - rows.start + 1) * nout];
+            dense4_row_dispatch(ch, arow, w, crow);
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_simd_env_contract() {
+        assert!(!no_simd_requested(None));
+        assert!(!no_simd_requested(Some("")));
+        assert!(!no_simd_requested(Some("0")));
+        assert!(!no_simd_requested(Some(" 0 ")));
+        assert!(no_simd_requested(Some("1")));
+        assert!(no_simd_requested(Some("true")));
+        assert!(no_simd_requested(Some("yes")));
+    }
+
+    #[test]
+    fn forced_kernel_env_contract() {
+        assert_eq!(forced_kernel(None), None);
+        assert_eq!(forced_kernel(Some("")), None);
+        assert_eq!(forced_kernel(Some("sse9")), None);
+        assert_eq!(forced_kernel(Some("portable")), Some(Kernel::Portable));
+        assert_eq!(forced_kernel(Some(" avx2 ")), Some(Kernel::Avx2));
+        assert_eq!(forced_kernel(Some("avx512")), Some(Kernel::Avx512));
+        assert_eq!(forced_kernel(Some("neon")), Some(Kernel::Neon));
+        for k in Kernel::all() {
+            assert_eq!(Kernel::from_name(k.name()), Some(k), "name/from_name roundtrip");
+        }
+    }
+
+    #[test]
+    fn select_is_consistent_with_detection() {
+        let k = select();
+        assert!(k.available(), "selected {} without CPU/build support", k.name());
+        assert_eq!(k, select(), "cached selection must be stable");
+    }
+
+    #[test]
+    fn usable_demotes_down_the_ladder() {
+        // whatever the machine, usable() must land on an available kernel
+        // and clamp the blocking config into range
+        for k in Kernel::all() {
+            for cfg in 0..=GEMM_CFGS {
+                let ch = usable(GemmChoice::new(k, cfg));
+                assert!(ch.kernel.available(), "usable() returned unavailable {}", ch.kernel.name());
+                assert!(ch.cfg < cfg_count(ch.kernel), "cfg not clamped");
+            }
+        }
+        // portable never demotes
+        assert_eq!(usable(GemmChoice::new(Kernel::Portable, 0)).kernel, Kernel::Portable);
+        // the Kernel -> GemmChoice adapter picks the default blocking
+        let ch: GemmChoice = Kernel::Portable.into();
+        assert_eq!(ch, GemmChoice::new(Kernel::Portable, 0));
+        assert_eq!(ch.label(), "portable.c0");
+    }
+
+    #[test]
+    fn conv_pack_layout() {
+        let w: Vec<i8> = (0..3 * 5).map(|v| v as i8 - 7).collect();
+        let p = PackedConv::pack(&w, 3, 5);
+        assert_eq!((p.rows, p.k, p.kp), (3, 5, 6));
+        assert!(p.layout_ok());
+        for r in 0..3 {
+            assert_eq!(&p.data[r * 6..r * 6 + 5], &w[r * 5..(r + 1) * 5]);
+            assert_eq!(p.data[r * 6 + 5], 0, "pad byte of row {r}");
+        }
+        assert_eq!(p.row_slice(1..3).len(), 2 * 6);
+        // even K needs no padding
+        let q = PackedConv::pack(&w[..12], 3, 4);
+        assert_eq!(q.kp, 4);
+        assert!(q.layout_ok());
+        // a corrupted pad byte must fail the invariant
+        let mut bad = p.clone();
+        bad.data[5] = 1;
+        assert!(!bad.layout_ok());
+    }
+
+    #[test]
+    fn conv4_pack_layout() {
+        // odd K exercises the pad nibble
+        let w: Vec<i8> = (0..3 * 5).map(|v| (v % 16 - 8) as i8).collect();
+        let p = PackedConv4::pack(&w, 3, 5);
+        assert_eq!((p.rows, p.k, p.kp), (3, 5, 6));
+        assert_eq!(p.data.len(), 3 * 3);
+        assert!(p.layout_ok());
+        for r in 0..3 {
+            let row = p.row_slice(r..r + 1);
+            for kk in 0..5 {
+                assert_eq!(nibble(row, kk), w[r * 5 + kk], "row {r} k {kk}");
+            }
+            assert_eq!(nibble(row, 5), 0, "pad nibble of row {r}");
+        }
+        // a corrupted pad nibble (high nibble of row 0's last byte) must
+        // fail the invariant
+        let mut bad = p;
+        bad.data[2] |= 0xF0;
+        assert!(!bad.layout_ok());
+    }
+
+    #[test]
+    fn dense4_pack_layout_roundtrip() {
+        // n and k both off the block sizes: 6 rows (np 8), k 21 (kp 32)
+        let (n, k) = (6usize, 21usize);
+        let w: Vec<i8> = (0..n * k).map(|v| (v % 16 - 8) as i8).collect();
+        let p = PackedDense4::pack(&w, n, k);
+        assert_eq!((p.np, p.kp), (8, 32));
+        assert_eq!(p.data.len(), 8 * 32 / 2);
+        assert!(p.layout_ok());
+        let nb = p.kp / DENSE_KB;
+        // every logical weight must be recoverable from the quad layout
+        for j in 0..n {
+            let (q, r) = (j / DENSE_NR, j % DENSE_NR);
+            for kk in 0..k {
+                let (t, tt) = (kk / DENSE_KB, kk % DENSE_KB);
+                let base = ((q * nb + t) * DENSE_NR + r) * (DENSE_KB / 2);
+                let got = nibble(&p.data[base..base + DENSE_KB / 2], tt);
+                assert_eq!(got, w[j * k + kk], "row {j} k {kk}");
+            }
+        }
+        // a corrupted pad row must fail the invariant (row 6 is padding)
+        let mut bad = p;
+        let (q, r) = (6 / DENSE_NR, 6 % DENSE_NR);
+        bad.data[((q * nb) * DENSE_NR + r) * (DENSE_KB / 2)] = 3;
+        assert!(!bad.layout_ok());
+    }
+
+    #[test]
+    fn w4_gemms_match_w8_over_same_codes() {
+        // identical codes through the w8 and w4 paths must agree exactly
+        let mut state = 12345u64;
+        let mut next = move || {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            (state >> 33) as u8
+        };
+        let (m, k, n) = (5usize, 27usize, 37usize);
+        let w: Vec<i8> = (0..m * k).map(|_| (next() % 16) as i8 - 8).collect();
+        let b: Vec<u8> = (0..k * n).map(|_| next()).collect();
+        let p8 = PackedConv::pack(&w, m, k);
+        let p4 = PackedConv4::pack(&w, m, k);
+        let mut c8 = vec![0i32; m * n];
+        let mut c4 = vec![0i32; m * n];
+        gemm_conv_packed_into(Kernel::Portable, &p8.data, m, k, p8.kp, &b, &mut c8, n);
+        gemm_conv4_packed_into(Kernel::Portable, &p4.data, m, k, p4.kp, &b, &mut c4, n);
+        assert_eq!(c8, c4, "conv w4 != w8");
+
+        let (mm, kk, nn) = (3usize, 21usize, 6usize);
+        let wd: Vec<i8> = (0..nn * kk).map(|_| (next() % 16) as i8 - 8).collect();
+        let a: Vec<u8> = (0..mm * kk).map(|_| next()).collect();
+        let d8 = PackedDense::pack(&wd, nn, kk);
+        let d4 = PackedDense4::pack(&wd, nn, kk);
+        let mut c8 = vec![0i32; mm * nn];
+        let mut c4 = vec![0i32; mm * nn];
+        gemm_dense_packed_into(Kernel::Portable, &a, &d8, &mut c8, mm);
+        gemm_dense4_packed_into(Kernel::Portable, &a, &d4, &mut c4, mm);
+        assert_eq!(c8, c4, "dense w4 != w8");
+    }
+
+    #[test]
+    fn dense_pack_layout_roundtrip() {
+        // n and k both off the block sizes: 6 rows (np 8), k 21 (kp 32)
+        let (n, k) = (6usize, 21usize);
+        let w: Vec<i8> = (0..n * k).map(|v| (v as i32 % 251 - 125) as i8).collect();
+        let p = PackedDense::pack(&w, n, k);
+        assert_eq!((p.np, p.kp), (8, 32));
+        assert!(p.layout_ok());
+        let nb = p.kp / DENSE_KB;
+        // every logical weight must be recoverable from the quad layout
+        for j in 0..n {
+            let (q, r) = (j / DENSE_NR, j % DENSE_NR);
+            for kk in 0..k {
+                let (t, tt) = (kk / DENSE_KB, kk % DENSE_KB);
+                let byte = p.data[((q * nb + t) * DENSE_NR + r) * DENSE_KB + tt];
+                assert_eq!(byte, w[j * k + kk], "row {j} k {kk}");
+            }
+        }
+        // a corrupted pad row must fail the invariant (row 6 is padding)
+        let mut bad = p.clone();
+        let (q, r) = (6 / DENSE_NR, 6 % DENSE_NR);
+        bad.data[((q * nb) * DENSE_NR + r) * DENSE_KB] = 3;
+        assert!(!bad.layout_ok());
+    }
+}

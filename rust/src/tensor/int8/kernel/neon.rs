@@ -1,0 +1,266 @@
+//! AArch64 NEON cores: `smlal`/`smlal2` (`vmlal_s16`/`vmlal_high_s16`)
+//! widening multiply-accumulates over explicitly widened i16 operands,
+//! 16 positions (conv) / 16 reduction lanes (dense) per register pass.
+//!
+//! Exactness: `smlal` multiplies signed 16-bit lanes into exact i32
+//! products and accumulates with plain (wrapping) i32 adds — no
+//! saturation anywhere (the saturating `sqdmlal` family is never used).
+//! Operands are the same u8→i16 / i8→i16 widenings every other variant
+//! feeds its multiplier, so the module-docs exactness argument applies
+//! unchanged and the NEON path is bit-identical to scalar.
+//!
+//! Blocking configs mirror AVX2: conv `c0` = 2-row tile, `c1` = 1-row;
+//! dense `c0` = one accumulator quartet over the K-blocks, `c1` = two
+//! interleaved quartets folded at the end.
+
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::too_many_arguments)]
+
+use core::arch::aarch64::*;
+
+use super::{nibble, PackedDense, PackedDense4, DENSE_KB, DENSE_NR};
+
+/// Conv GEMM row span: `tile` output rows × 16 positions per pass; each
+/// reduction step widens one 16-byte B row and fans the broadcast i16
+/// weight into four i32 accumulators via `smlal`/`smlal2`.
+#[target_feature(enable = "neon")]
+pub unsafe fn conv_span(
+    a: &[i8],
+    m: usize,
+    k: usize,
+    kp: usize,
+    b: &[u8],
+    c: &mut [i32],
+    n: usize,
+    cfg: u8,
+) {
+    let tile = if cfg == 0 { 2 } else { 1 };
+    let n16 = n - n % 16;
+    let bp = b.as_ptr();
+    let mut i = 0;
+    while i < m {
+        let mr = (m - i).min(tile);
+        let mut j = 0;
+        while j < n16 {
+            let mut acc = [[vdupq_n_s32(0); 4]; 2];
+            for kk in 0..k {
+                let bv = vld1q_u8(bp.add(kk * n + j));
+                let blo = vreinterpretq_s16_u16(vmovl_u8(vget_low_u8(bv)));
+                let bhi = vreinterpretq_s16_u16(vmovl_u8(vget_high_u8(bv)));
+                for r in 0..mr {
+                    let av = *a.get_unchecked((i + r) * kp + kk);
+                    if av == 0 {
+                        continue;
+                    }
+                    let wd = vdup_n_s16(av as i16);
+                    let wq = vdupq_n_s16(av as i16);
+                    acc[r][0] = vmlal_s16(acc[r][0], vget_low_s16(blo), wd);
+                    acc[r][1] = vmlal_high_s16(acc[r][1], blo, wq);
+                    acc[r][2] = vmlal_s16(acc[r][2], vget_low_s16(bhi), wd);
+                    acc[r][3] = vmlal_high_s16(acc[r][3], bhi, wq);
+                }
+            }
+            for r in 0..mr {
+                let crow = c.as_mut_ptr().add((i + r) * n + j);
+                vst1q_s32(crow, acc[r][0]);
+                vst1q_s32(crow.add(4), acc[r][1]);
+                vst1q_s32(crow.add(8), acc[r][2]);
+                vst1q_s32(crow.add(12), acc[r][3]);
+            }
+            j += 16;
+        }
+        // position tail: exact scalar
+        for r in 0..mr {
+            let arow = &a[(i + r) * kp..(i + r) * kp + k];
+            for jj in n16..n {
+                let mut s = 0i32;
+                for (kk, &av) in arow.iter().enumerate() {
+                    s = s.wrapping_add(av as i32 * *b.get_unchecked(kk * n + jj) as i32);
+                }
+                *c.get_unchecked_mut((i + r) * n + jj) = s;
+            }
+        }
+        i += mr;
+    }
+}
+
+/// w4 conv GEMM row span: [`conv_span`] with the weight decoded from its
+/// nibble on the fly. Same blocking, exact products — bit-identical.
+#[target_feature(enable = "neon")]
+pub unsafe fn conv4_span(
+    a: &[u8],
+    m: usize,
+    k: usize,
+    kp: usize,
+    b: &[u8],
+    c: &mut [i32],
+    n: usize,
+    cfg: u8,
+) {
+    let tile = if cfg == 0 { 2 } else { 1 };
+    let n16 = n - n % 16;
+    let stride = kp / 2;
+    let bp = b.as_ptr();
+    let mut i = 0;
+    while i < m {
+        let mr = (m - i).min(tile);
+        let mut j = 0;
+        while j < n16 {
+            let mut acc = [[vdupq_n_s32(0); 4]; 2];
+            for kk in 0..k {
+                let bv = vld1q_u8(bp.add(kk * n + j));
+                let blo = vreinterpretq_s16_u16(vmovl_u8(vget_low_u8(bv)));
+                let bhi = vreinterpretq_s16_u16(vmovl_u8(vget_high_u8(bv)));
+                for r in 0..mr {
+                    let arow = &a[(i + r) * stride..(i + r + 1) * stride];
+                    let av = nibble(arow, kk);
+                    if av == 0 {
+                        continue;
+                    }
+                    let wd = vdup_n_s16(av as i16);
+                    let wq = vdupq_n_s16(av as i16);
+                    acc[r][0] = vmlal_s16(acc[r][0], vget_low_s16(blo), wd);
+                    acc[r][1] = vmlal_high_s16(acc[r][1], blo, wq);
+                    acc[r][2] = vmlal_s16(acc[r][2], vget_low_s16(bhi), wd);
+                    acc[r][3] = vmlal_high_s16(acc[r][3], bhi, wq);
+                }
+            }
+            for r in 0..mr {
+                let crow = c.as_mut_ptr().add((i + r) * n + j);
+                vst1q_s32(crow, acc[r][0]);
+                vst1q_s32(crow.add(4), acc[r][1]);
+                vst1q_s32(crow.add(8), acc[r][2]);
+                vst1q_s32(crow.add(12), acc[r][3]);
+            }
+            j += 16;
+        }
+        // position tail: exact scalar over decoded nibbles
+        for r in 0..mr {
+            let arow = &a[(i + r) * stride..(i + r + 1) * stride];
+            for jj in n16..n {
+                let mut s = 0i32;
+                for kk in 0..k {
+                    s = s.wrapping_add(
+                        nibble(arow, kk) as i32 * *b.get_unchecked(kk * n + jj) as i32,
+                    );
+                }
+                *c.get_unchecked_mut((i + r) * n + jj) = s;
+            }
+        }
+        i += mr;
+    }
+}
+
+/// One K-block's contribution to one weight lane: widen 16 activation
+/// bytes and 16 weight bytes to i16 and chain four widening
+/// multiply-accumulates into an i32x4 partial.
+#[inline]
+#[target_feature(enable = "neon")]
+unsafe fn block_mlal(alo: int16x8_t, ahi: int16x8_t, wv: int8x16_t) -> int32x4_t {
+    let wlo = vmovl_s8(vget_low_s8(wv));
+    let whi = vmovl_s8(vget_high_s8(wv));
+    let mut con = vmull_s16(vget_low_s16(alo), vget_low_s16(wlo));
+    con = vmlal_high_s16(con, alo, wlo);
+    con = vmlal_s16(con, vget_low_s16(ahi), vget_low_s16(whi));
+    vmlal_high_s16(con, ahi, whi)
+}
+
+/// Dense GEMM, one activation row: four packed weight rows per quad
+/// share each widened 16-byte activation block; the K tail reads a
+/// zero-padded stack copy (matching the zero K padding of the packed
+/// rows). `cfg 1` folds alternating blocks through a second quartet.
+#[target_feature(enable = "neon")]
+pub unsafe fn dense_row(arow: &[u8], w: &PackedDense, crow: &mut [i32], cfg: u8) {
+    let (k, kp) = (w.k, w.kp);
+    let nb = kp / DENSE_KB;
+    let full = k / DENSE_KB;
+    let tail = k % DENSE_KB;
+    let mut tailbuf = [0u8; DENSE_KB];
+    if tail > 0 {
+        tailbuf[..tail].copy_from_slice(&arow[full * DENSE_KB..]);
+    }
+    let wp = w.data.as_ptr();
+    for q in 0..w.np / DENSE_NR {
+        let mut acc = [vdupq_n_s32(0); 4];
+        let mut acc2 = [vdupq_n_s32(0); 4];
+        let base = q * nb * (DENSE_NR * DENSE_KB);
+        for t in 0..nb {
+            let ap = if t < full { arow.as_ptr().add(t * DENSE_KB) } else { tailbuf.as_ptr() };
+            let av = vld1q_u8(ap);
+            let alo = vreinterpretq_s16_u16(vmovl_u8(vget_low_u8(av)));
+            let ahi = vreinterpretq_s16_u16(vmovl_u8(vget_high_u8(av)));
+            let blk = wp.add(base + t * DENSE_NR * DENSE_KB);
+            for r in 0..4 {
+                let wv = vld1q_s8(blk.add(r * DENSE_KB));
+                let con = block_mlal(alo, ahi, wv);
+                if cfg != 0 && t % 2 == 1 {
+                    acc2[r] = vaddq_s32(acc2[r], con);
+                } else {
+                    acc[r] = vaddq_s32(acc[r], con);
+                }
+            }
+        }
+        for r in 0..4 {
+            let j = q * DENSE_NR + r;
+            if j < crow.len() {
+                *crow.get_unchecked_mut(j) = vaddvq_s32(vaddq_s32(acc[r], acc2[r]));
+            }
+        }
+    }
+}
+
+/// The nibble→i8 unpack epilogue: 8 packed bytes → 16 sign-extended i8
+/// weights in logical order (low nibble first), via the
+/// shift-left-then-arithmetic-shift-right idiom on i8 lanes and a
+/// low/high zip.
+#[inline]
+#[target_feature(enable = "neon")]
+unsafe fn nibbles_to_i8(p: *const u8) -> int8x16_t {
+    let bytes = vreinterpret_s8_u8(vld1_u8(p));
+    let lo = vshr_n_s8(vshl_n_s8(bytes, 4), 4);
+    let hi = vshr_n_s8(bytes, 4);
+    vcombine_s8(vzip1_s8(lo, hi), vzip2_s8(lo, hi))
+}
+
+/// w4 dense GEMM, one activation row: [`dense_row`] with each 16-weight
+/// block decoded from 8 packed bytes by [`nibbles_to_i8`].
+#[target_feature(enable = "neon")]
+pub unsafe fn dense4_row(arow: &[u8], w: &PackedDense4, crow: &mut [i32], cfg: u8) {
+    const KB2: usize = DENSE_KB / 2;
+    let (k, kp) = (w.k, w.kp);
+    let nb = kp / DENSE_KB;
+    let full = k / DENSE_KB;
+    let tail = k % DENSE_KB;
+    let mut tailbuf = [0u8; DENSE_KB];
+    if tail > 0 {
+        tailbuf[..tail].copy_from_slice(&arow[full * DENSE_KB..]);
+    }
+    let wp = w.data.as_ptr();
+    for q in 0..w.np / DENSE_NR {
+        let mut acc = [vdupq_n_s32(0); 4];
+        let mut acc2 = [vdupq_n_s32(0); 4];
+        let base = q * nb * (DENSE_NR * KB2);
+        for t in 0..nb {
+            let ap = if t < full { arow.as_ptr().add(t * DENSE_KB) } else { tailbuf.as_ptr() };
+            let av = vld1q_u8(ap);
+            let alo = vreinterpretq_s16_u16(vmovl_u8(vget_low_u8(av)));
+            let ahi = vreinterpretq_s16_u16(vmovl_u8(vget_high_u8(av)));
+            let blk = wp.add(base + t * DENSE_NR * KB2);
+            for r in 0..4 {
+                let wv = nibbles_to_i8(blk.add(r * KB2));
+                let con = block_mlal(alo, ahi, wv);
+                if cfg != 0 && t % 2 == 1 {
+                    acc2[r] = vaddq_s32(acc2[r], con);
+                } else {
+                    acc[r] = vaddq_s32(acc[r], con);
+                }
+            }
+        }
+        for r in 0..4 {
+            let j = q * DENSE_NR + r;
+            if j < crow.len() {
+                *crow.get_unchecked_mut(j) = vaddvq_s32(vaddq_s32(acc[r], acc2[r]));
+            }
+        }
+    }
+}

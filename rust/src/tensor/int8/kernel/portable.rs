@@ -1,0 +1,211 @@
+//! Portable scalar cores — the reference blocking; bit-identical to the
+//! SIMD variants because every product is exact and i32 accumulation
+//! commutes mod 2³² (see the `kernel` module docs).
+//!
+//! Blocking configs: conv `c0` streams B row-by-row fanning one
+//! broadcast weight into the C row (the layout that auto-vectorizes to
+//! widening multiply-adds); conv `c1` fuses each `CONV_KB` weight pair
+//! into one pass over the C row (half the C traffic, mirrors the SIMD
+//! pair consumption). Dense `c0` accumulates every K-block into one
+//! scalar; dense `c1` keeps two running partials over alternating blocks
+//! and folds them at the end. All configs reorder wrap-adds only.
+
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::too_many_arguments)]
+
+use super::{nibble, PackedDense, PackedDense4, DENSE_KB, DENSE_NR};
+
+/// One row span of the conv GEMM; `cfg` picks the K consumption order.
+pub fn conv_span(
+    a: &[i8],
+    m: usize,
+    k: usize,
+    kp: usize,
+    b: &[u8],
+    c: &mut [i32],
+    n: usize,
+    cfg: u8,
+) {
+    if cfg == 0 {
+        conv_span_stream(a, m, k, kp, b, c, n);
+    } else {
+        conv_span_paired(a, m, k, kp, b, c, n);
+    }
+}
+
+/// `c0`: for each row, stream B row-by-row and fan the broadcast weight
+/// into the i32 C row (the scalar GEMM's loop order).
+fn conv_span_stream(a: &[i8], m: usize, k: usize, kp: usize, b: &[u8], c: &mut [i32], n: usize) {
+    for i in 0..m {
+        let arow = &a[i * kp..i * kp + k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        crow.fill(0);
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0 {
+                continue;
+            }
+            let av = av as i32;
+            let brow = &b[kk * n..(kk + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow.iter()) {
+                *cv = cv.wrapping_add(av * bv as i32);
+            }
+        }
+    }
+}
+
+/// `c1`: consume K as weight pairs, two B rows fused per C pass —
+/// the scalar mirror of the SIMD pair consumption.
+fn conv_span_paired(a: &[i8], m: usize, k: usize, kp: usize, b: &[u8], c: &mut [i32], n: usize) {
+    for i in 0..m {
+        let arow = &a[i * kp..i * kp + k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        crow.fill(0);
+        let mut kk = 0;
+        while kk + 1 < k {
+            let (a0, a1) = (arow[kk] as i32, arow[kk + 1] as i32);
+            if a0 != 0 || a1 != 0 {
+                let b0 = &b[kk * n..(kk + 1) * n];
+                let b1 = &b[(kk + 1) * n..(kk + 2) * n];
+                for ((cv, &v0), &v1) in crow.iter_mut().zip(b0.iter()).zip(b1.iter()) {
+                    *cv = cv.wrapping_add(a0 * v0 as i32).wrapping_add(a1 * v1 as i32);
+                }
+            }
+            kk += 2;
+        }
+        if kk < k {
+            let a0 = arow[kk] as i32;
+            if a0 != 0 {
+                let b0 = &b[kk * n..(kk + 1) * n];
+                for (cv, &v0) in crow.iter_mut().zip(b0.iter()) {
+                    *cv = cv.wrapping_add(a0 * v0 as i32);
+                }
+            }
+        }
+    }
+}
+
+/// Wrap-sum of one packed dense K-block against the activation row
+/// (weight padding is zero, so only `kk < k` activation reads happen).
+#[inline]
+fn dense_block(arow: &[u8], w: &PackedDense, q: usize, r: usize, t: usize, nb: usize) -> i32 {
+    let base = ((q * nb + t) * DENSE_NR + r) * DENSE_KB;
+    let blk = &w.data[base..base + DENSE_KB];
+    let k0 = t * DENSE_KB;
+    let kend = w.k.min(k0 + DENSE_KB);
+    let mut s = 0i32;
+    for kk in k0..kend {
+        s = s.wrapping_add(arow[kk] as i32 * blk[kk - k0] as i32);
+    }
+    s
+}
+
+/// One output row of the dense GEMM over the packed quad layout: walk the
+/// interleaved K-blocks exactly as the SIMD cores do. `cfg 1` folds
+/// alternating blocks through a second partial (wrap-add associative, so
+/// bit-identical).
+pub fn dense_row(arow: &[u8], w: &PackedDense, crow: &mut [i32], cfg: u8) {
+    let nb = w.kp / DENSE_KB;
+    for (j, cv) in crow.iter_mut().enumerate() {
+        let (q, r) = (j / DENSE_NR, j % DENSE_NR);
+        let (mut s0, mut s1) = (0i32, 0i32);
+        for t in 0..nb {
+            let s = dense_block(arow, w, q, r, t, nb);
+            if cfg != 0 && t % 2 == 1 {
+                s1 = s1.wrapping_add(s);
+            } else {
+                s0 = s0.wrapping_add(s);
+            }
+        }
+        *cv = s0.wrapping_add(s1);
+    }
+}
+
+/// One row span of the w4 conv GEMM; identical loop orders to
+/// [`conv_span`], the weight decoded from its nibble on the fly (`c1`
+/// decodes both nibbles of a packed byte per fused pass).
+pub fn conv4_span(
+    a: &[u8],
+    m: usize,
+    k: usize,
+    kp: usize,
+    b: &[u8],
+    c: &mut [i32],
+    n: usize,
+    cfg: u8,
+) {
+    let stride = kp / 2;
+    for i in 0..m {
+        let arow = &a[i * stride..(i + 1) * stride];
+        let crow = &mut c[i * n..(i + 1) * n];
+        crow.fill(0);
+        if cfg == 0 {
+            for kk in 0..k {
+                let av = nibble(arow, kk);
+                if av == 0 {
+                    continue;
+                }
+                let av = av as i32;
+                let brow = &b[kk * n..(kk + 1) * n];
+                for (cv, &bv) in crow.iter_mut().zip(brow.iter()) {
+                    *cv = cv.wrapping_add(av * bv as i32);
+                }
+            }
+        } else {
+            let mut kk = 0;
+            while kk + 1 < k {
+                let (a0, a1) = (nibble(arow, kk) as i32, nibble(arow, kk + 1) as i32);
+                if a0 != 0 || a1 != 0 {
+                    let b0 = &b[kk * n..(kk + 1) * n];
+                    let b1 = &b[(kk + 1) * n..(kk + 2) * n];
+                    for ((cv, &v0), &v1) in crow.iter_mut().zip(b0.iter()).zip(b1.iter()) {
+                        *cv = cv.wrapping_add(a0 * v0 as i32).wrapping_add(a1 * v1 as i32);
+                    }
+                }
+                kk += 2;
+            }
+            if kk < k {
+                let a0 = nibble(arow, kk) as i32;
+                if a0 != 0 {
+                    let b0 = &b[kk * n..(kk + 1) * n];
+                    for (cv, &v0) in crow.iter_mut().zip(b0.iter()) {
+                        *cv = cv.wrapping_add(a0 * v0 as i32);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Wrap-sum of one nibble-packed dense K-block against the activation
+/// row.
+#[inline]
+fn dense4_block(arow: &[u8], w: &PackedDense4, q: usize, r: usize, t: usize, nb: usize) -> i32 {
+    let base = ((q * nb + t) * DENSE_NR + r) * (DENSE_KB / 2);
+    let blk = &w.data[base..base + DENSE_KB / 2];
+    let k0 = t * DENSE_KB;
+    let kend = w.k.min(k0 + DENSE_KB);
+    let mut s = 0i32;
+    for kk in k0..kend {
+        s = s.wrapping_add(arow[kk] as i32 * nibble(blk, kk - k0) as i32);
+    }
+    s
+}
+
+/// One output row of the w4 dense GEMM: walks the nibble-packed quad
+/// blocks with the same K-blocking (and `cfg` partials) as [`dense_row`].
+pub fn dense4_row(arow: &[u8], w: &PackedDense4, crow: &mut [i32], cfg: u8) {
+    let nb = w.kp / DENSE_KB;
+    for (j, cv) in crow.iter_mut().enumerate() {
+        let (q, r) = (j / DENSE_NR, j % DENSE_NR);
+        let (mut s0, mut s1) = (0i32, 0i32);
+        for t in 0..nb {
+            let s = dense4_block(arow, w, q, r, t, nb);
+            if cfg != 0 && t % 2 == 1 {
+                s1 = s1.wrapping_add(s);
+            } else {
+                s0 = s0.wrapping_add(s);
+            }
+        }
+        *cv = s0.wrapping_add(s1);
+    }
+}

@@ -14,6 +14,7 @@ pub mod proptest;
 pub mod rng;
 pub mod stats;
 pub mod timer;
+pub mod topo;
 
 pub use json::Json;
 pub use rng::Rng;

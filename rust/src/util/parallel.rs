@@ -43,17 +43,45 @@
 //! assert_eq!(data[1023], 3);
 //! ```
 
-use std::cell::Cell;
+use std::cell::{Cell, RefCell};
 use std::collections::VecDeque;
 use std::ops::Range;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+use crate::util::topo;
 
 /// Hard cap on worker threads (sanity bound for absurd env values).
 pub const MAX_THREADS: usize = 256;
 
 thread_local! {
     static OVERRIDE: Cell<Option<usize>> = const { Cell::new(None) };
+    /// Core set the current thread's fan-outs should carry (set on shard
+    /// worker threads by [`pin_thread_and_units`]; `None` = unpinned).
+    static PIN_SET: RefCell<Option<Arc<[usize]>>> = const { RefCell::new(None) };
+    /// Core set last applied to THIS thread — pool workers re-issue the
+    /// affinity syscall only when a unit arrives from a submitter with a
+    /// different set (`Arc` pointer comparison, so the steady state of a
+    /// worker serving one shard is zero syscalls).
+    static PIN_APPLIED: RefCell<Option<Arc<[usize]>>> = const { RefCell::new(None) };
+}
+
+/// Pin the calling thread to `cores` and tag every fan-out it submits so
+/// pool workers running its units re-pin to the same set — the shard
+/// placement mechanism of [`crate::serve::Batcher`]: a shard's nested
+/// GEMM fan-out then executes entirely on the shard's cores. `None`
+/// clears the tag (subsequent units re-open workers to the whole
+/// machine). No-op when `PALLAS_NO_PIN` disables pinning; always a pure
+/// placement hint, never a correctness dependency.
+pub fn pin_thread_and_units(cores: Option<Arc<[usize]>>) {
+    if !topo::pinning_enabled() {
+        return;
+    }
+    if let Some(set) = &cores {
+        topo::pin_current_thread(set);
+    }
+    PIN_SET.with(|c| c.borrow_mut().clone_from(&cores));
+    PIN_APPLIED.with(|c| *c.borrow_mut() = cores);
 }
 
 fn env_threads() -> usize {
@@ -91,6 +119,19 @@ pub fn with_threads<R>(n: usize, f: impl FnOnce() -> R) -> R {
     let prev = OVERRIDE.with(|c| c.replace(Some(n.clamp(1, MAX_THREADS))));
     let _g = Guard(prev);
     f()
+}
+
+/// Thread budget of consumer `i` when dividing `total` pool threads among
+/// `parts` equal consumers (the serving shards, the registry's batchers):
+/// the first `total % parts` consumers get one extra thread, and every
+/// consumer gets at least one even when oversubscribed (`parts > total`).
+/// Replaces the remainder-losing `total / parts` arithmetic — with 16
+/// threads over 3 shards that split stranded a thread; this hands out
+/// 6/5/5.
+pub fn split_budget(total: usize, parts: usize, i: usize) -> usize {
+    let parts = parts.max(1);
+    let total = total.max(1);
+    (total / parts + usize::from(i < total % parts)).max(1)
 }
 
 /// Split `n` items into at most `parts` contiguous near-equal ranges
@@ -133,6 +174,10 @@ struct CallShared {
     caller: std::thread::Thread,
     /// First worker panic, re-thrown on the submitter after the wait.
     panic: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+    /// The submitter's core set at submit time ([`pin_thread_and_units`]):
+    /// workers re-pin to it before running this call's units, so a pinned
+    /// shard's work stays on the shard's cores.
+    cores: Option<Arc<[usize]>>,
 }
 
 /// One queue entry: unit `idx` of `call`.
@@ -215,6 +260,7 @@ impl Pool {
 /// `call.task` — once `remaining` hits zero the submitter may return and
 /// invalidate the borrow behind it.
 fn run_unit(unit: &Unit) {
+    apply_unit_pin(&unit.call);
     let task = unit.call.task;
     let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
         with_threads(1, || task(unit.idx));
@@ -228,6 +274,32 @@ fn run_unit(unit: &Unit) {
     if unit.call.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
         unit.call.caller.unpark();
     }
+}
+
+/// Adopt the unit's submitter affinity on the executing thread, skipping
+/// the syscall when the last applied set is the same `Arc` (or both are
+/// unpinned). An unpinned call after a pinned one re-opens the worker to
+/// the whole machine.
+fn apply_unit_pin(call: &CallShared) {
+    if !topo::pinning_enabled() {
+        return;
+    }
+    let stale = PIN_APPLIED.with(|c| {
+        let cur = c.borrow();
+        match (cur.as_ref(), call.cores.as_ref()) {
+            (None, None) => false,
+            (Some(a), Some(b)) => !Arc::ptr_eq(a, b),
+            _ => true,
+        }
+    });
+    if !stale {
+        return;
+    }
+    match call.cores.as_ref() {
+        Some(set) => topo::pin_current_thread(set),
+        None => topo::pin_current_thread(topo::all_cores()),
+    };
+    PIN_APPLIED.with(|c| c.borrow_mut().clone_from(&call.cores));
 }
 
 fn worker_loop(pool: &'static Pool) {
@@ -275,6 +347,7 @@ fn run_on_pool(n: usize, f: &(dyn Fn(usize) + Sync)) {
         remaining: AtomicUsize::new(n - 1),
         caller: std::thread::current(),
         panic: Mutex::new(None),
+        cores: PIN_SET.with(|c| c.borrow().clone()),
     });
     pool().submit(&call, 1..n);
     let own = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
@@ -519,6 +592,39 @@ mod tests {
                 assert!(a - b <= 1);
             }
         }
+    }
+
+    #[test]
+    fn split_budget_distributes_remainder() {
+        for (total, parts) in [(16usize, 3usize), (8, 3), (9, 4), (4, 4), (7, 2), (1, 1)] {
+            let budgets: Vec<usize> = (0..parts).map(|i| split_budget(total, parts, i)).collect();
+            assert!(budgets.iter().all(|&b| b >= 1), "({total},{parts}): {budgets:?}");
+            assert_eq!(budgets.iter().sum::<usize>(), total, "({total},{parts}) must lose nothing");
+            let (mx, mn) = (budgets.iter().max().unwrap(), budgets.iter().min().unwrap());
+            assert!(mx - mn <= 1, "({total},{parts}): near-equal split");
+        }
+        // the former arithmetic stranded the remainder: 16/3 gave 5+5+5;
+        // the leading shards now absorb it
+        assert_eq!(
+            (0..3).map(|i| split_budget(16, 3, i)).collect::<Vec<_>>(),
+            vec![6, 5, 5]
+        );
+        // oversubscribed: every shard still gets a thread
+        assert!((0..5).map(|i| split_budget(2, 5, i)).all(|b| b == 1));
+        assert_eq!(split_budget(0, 3, 0), 1, "degenerate totals floor at one");
+    }
+
+    #[test]
+    fn pinned_fanout_is_bit_identical_to_unpinned() {
+        let run = || with_threads(3, || par_map(16, 1, |i| i * 31 + 7));
+        let base = run();
+        let cores: Arc<[usize]> = Arc::from(topo::all_cores().to_vec());
+        pin_thread_and_units(Some(cores));
+        let pinned = run();
+        pin_thread_and_units(None);
+        let cleared = run();
+        assert_eq!(base, pinned, "pinning may move threads, never results");
+        assert_eq!(base, cleared);
     }
 
     #[test]

@@ -1,0 +1,244 @@
+//! CPU topology detection and thread pinning for sharded serving.
+//!
+//! Zero-dependency by design (DESIGN.md §1): topology is read straight
+//! from sysfs (`/sys/devices/system/node/node*/cpulist`, falling back to
+//! `/sys/devices/system/cpu/online`, falling back to
+//! `available_parallelism`), and pinning binds the calling thread with a
+//! direct `sched_setaffinity(2)` FFI declaration — no libc crate. Both
+//! are Linux-only; on other targets detection degrades to one synthetic
+//! node and [`pin_current_thread`] is a quiet no-op returning `false`,
+//! so the batcher's placement logic compiles and runs everywhere.
+//!
+//! Why pinning: the sharded [`crate::serve::Batcher`] gives each shard a
+//! slice of the thread budget, but without affinity the kernel scheduler
+//! is free to migrate every shard's threads across all cores (and across
+//! NUMA nodes), defeating the cache- and memory-locality the sharding
+//! exists to buy. [`shard_core_sets`] carves the machine into per-shard
+//! core sets walking node-major order (a shard stays inside one node
+//! whenever its budget fits), and the worker-pool plumbing in
+//! [`crate::util::parallel`] re-pins pool workers to the submitting
+//! shard's set for the duration of its units.
+//!
+//! Pinning never affects results — work assignment is by item index
+//! ([`crate::util::parallel`]'s determinism contract), so affinity moves
+//! *where* threads run, never *what* they compute. `PALLAS_NO_PIN=1` (or
+//! the serve CLI's `--no-pin`) disables the whole mechanism.
+
+use std::sync::OnceLock;
+
+/// `PALLAS_NO_PIN` contract: same parsing as `PALLAS_NO_SIMD` — any
+/// non-empty value other than `0` disables core pinning.
+pub fn no_pin_requested(v: Option<&str>) -> bool {
+    matches!(v.map(str::trim), Some(s) if !s.is_empty() && s != "0")
+}
+
+/// Whether this process may pin threads (the `PALLAS_NO_PIN` kill
+/// switch, read once and cached).
+pub fn pinning_enabled() -> bool {
+    static ON: OnceLock<bool> = OnceLock::new();
+    *ON.get_or_init(|| !no_pin_requested(std::env::var("PALLAS_NO_PIN").ok().as_deref()))
+}
+
+/// Parse a sysfs cpulist (`"0-3,8,10-11"`) into core ids, in list order.
+/// Malformed fields are skipped (sysfs is trusted but this must never
+/// panic on an exotic kernel).
+pub fn parse_cpulist(s: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    for field in s.trim().split(',') {
+        let field = field.trim();
+        if field.is_empty() {
+            continue;
+        }
+        match field.split_once('-') {
+            Some((a, b)) => {
+                if let (Ok(a), Ok(b)) = (a.trim().parse::<usize>(), b.trim().parse::<usize>()) {
+                    if a <= b && b - a < 4096 {
+                        out.extend(a..=b);
+                    }
+                }
+            }
+            None => {
+                if let Ok(v) = field.parse::<usize>() {
+                    out.push(v);
+                }
+            }
+        }
+    }
+    out
+}
+
+fn detect_nodes() -> Vec<Vec<usize>> {
+    let mut nodes: Vec<(usize, Vec<usize>)> = Vec::new();
+    if let Ok(dir) = std::fs::read_dir("/sys/devices/system/node") {
+        for entry in dir.flatten() {
+            let name = entry.file_name();
+            let name = name.to_string_lossy();
+            let Some(id) = name.strip_prefix("node").and_then(|v| v.parse::<usize>().ok()) else {
+                continue;
+            };
+            if let Ok(list) = std::fs::read_to_string(entry.path().join("cpulist")) {
+                let cores = parse_cpulist(&list);
+                if !cores.is_empty() {
+                    nodes.push((id, cores));
+                }
+            }
+        }
+    }
+    nodes.sort_by_key(|(id, _)| *id);
+    if !nodes.is_empty() {
+        return nodes.into_iter().map(|(_, c)| c).collect();
+    }
+    // no NUMA sysfs (non-Linux, containers hiding it): one synthetic node
+    let online = std::fs::read_to_string("/sys/devices/system/cpu/online")
+        .map(|s| parse_cpulist(&s))
+        .unwrap_or_default();
+    if !online.is_empty() {
+        return vec![online];
+    }
+    let n = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    vec![(0..n).collect()]
+}
+
+/// Cores grouped by NUMA node, node id order (detected once). Always at
+/// least one node with at least one core.
+pub fn numa_nodes() -> &'static [Vec<usize>] {
+    static NODES: OnceLock<Vec<Vec<usize>>> = OnceLock::new();
+    NODES.get_or_init(detect_nodes)
+}
+
+/// Every usable core, node-major (all of node 0, then node 1, ...), so
+/// consecutive slices of this list stay NUMA-local whenever they fit.
+pub fn all_cores() -> &'static [usize] {
+    static CORES: OnceLock<Vec<usize>> = OnceLock::new();
+    CORES.get_or_init(|| numa_nodes().iter().flatten().copied().collect())
+}
+
+/// Carve per-shard core sets out of [`all_cores`]: shard `i` gets
+/// `budgets[i]` consecutive cores (its thread budget), walking node-major
+/// order from core slot `offset` and wrapping when the machine is
+/// oversubscribed. Consecutive allocation is the NUMA placement: a shard
+/// whose budget fits inside one node never straddles nodes, because
+/// [`all_cores`] is node-major. `offset` lets a multi-model registry
+/// stack several batchers onto disjoint slots.
+pub fn shard_core_sets(budgets: &[usize], offset: usize) -> Vec<std::sync::Arc<[usize]>> {
+    let cores = all_cores();
+    let n = cores.len();
+    let mut pos = offset;
+    budgets
+        .iter()
+        .map(|&b| {
+            let take = b.clamp(1, n);
+            let set: Vec<usize> = (0..take).map(|j| cores[(pos + j) % n]).collect();
+            pos += take;
+            std::sync::Arc::from(set)
+        })
+        .collect()
+}
+
+/// Bind the calling thread to `cores` via `sched_setaffinity(2)`.
+/// Returns `false` without side effects on non-Linux builds, empty or
+/// out-of-range sets, or syscall failure (e.g. a container cpuset that
+/// forbids the requested cores) — callers treat pinning as best-effort,
+/// since placement never affects results.
+pub fn pin_current_thread(cores: &[usize]) -> bool {
+    #[cfg(target_os = "linux")]
+    {
+        // fixed 1024-bit mask, the kernel's compiled-in CPU_SETSIZE
+        let mut mask = [0u64; 16];
+        let mut any = false;
+        for &c in cores {
+            if c < 64 * mask.len() {
+                mask[c / 64] |= 1u64 << (c % 64);
+                any = true;
+            }
+        }
+        if !any {
+            return false;
+        }
+        extern "C" {
+            fn sched_setaffinity(pid: i32, cpusetsize: usize, mask: *const u64) -> i32;
+        }
+        // SAFETY: `mask` is a valid initialized buffer of the size passed;
+        // pid 0 targets the calling thread; the call reads the mask only.
+        unsafe { sched_setaffinity(0, std::mem::size_of_val(&mask), mask.as_ptr()) == 0 }
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        let _ = cores;
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_pin_env_contract() {
+        assert!(!no_pin_requested(None));
+        assert!(!no_pin_requested(Some("")));
+        assert!(!no_pin_requested(Some("0")));
+        assert!(!no_pin_requested(Some(" 0 ")));
+        assert!(no_pin_requested(Some("1")));
+        assert!(no_pin_requested(Some("true")));
+        assert!(no_pin_requested(Some("yes")));
+    }
+
+    #[test]
+    fn cpulist_parsing() {
+        assert_eq!(parse_cpulist("0-3"), vec![0, 1, 2, 3]);
+        assert_eq!(parse_cpulist("0-2,8,10-11\n"), vec![0, 1, 2, 8, 10, 11]);
+        assert_eq!(parse_cpulist("5"), vec![5]);
+        assert_eq!(parse_cpulist(""), Vec::<usize>::new());
+        assert_eq!(parse_cpulist("3-1"), Vec::<usize>::new(), "inverted range");
+        assert_eq!(parse_cpulist("x,2,y-3"), vec![2], "garbage fields skipped");
+    }
+
+    #[test]
+    fn topology_is_sane() {
+        let nodes = numa_nodes();
+        assert!(!nodes.is_empty());
+        assert!(nodes.iter().all(|n| !n.is_empty()));
+        let cores = all_cores();
+        assert_eq!(cores.len(), nodes.iter().map(|n| n.len()).sum::<usize>());
+    }
+
+    #[test]
+    fn shard_core_sets_are_disjoint_until_wrap() {
+        let n = all_cores().len();
+        let sets = shard_core_sets(&[2, 2, 1], 0);
+        assert_eq!(sets.len(), 3);
+        for s in &sets {
+            assert!(!s.is_empty() && s.len() <= n.max(1));
+        }
+        // within machine capacity the sets must not overlap
+        if n >= 5 {
+            let mut seen = std::collections::BTreeSet::new();
+            for s in &sets {
+                for &c in s.iter() {
+                    assert!(seen.insert(c), "core {c} assigned twice");
+                }
+            }
+        }
+        // offset shifts the walk: first core of the offset=1 carve is the
+        // second core of the machine (mod wrap)
+        let shifted = shard_core_sets(&[1], 1);
+        assert_eq!(shifted[0][0], all_cores()[1 % n]);
+        // zero-budget shards are floored to one core, never empty
+        assert_eq!(shard_core_sets(&[0], 0)[0].len(), 1);
+    }
+
+    #[test]
+    fn pinning_roundtrip_is_best_effort() {
+        let cores = all_cores();
+        // pin to the first core, then back to everything; on Linux inside
+        // an unrestricted cpuset both succeed, anywhere else both must
+        // no-op cleanly — the assertion is only on the consistency
+        let one = pin_current_thread(&cores[..1]);
+        let all = pin_current_thread(cores);
+        if one {
+            assert!(all, "widening a successful pin back to all cores must succeed");
+        }
+        assert!(!pin_current_thread(&[]), "empty set never pins");
+    }
+}

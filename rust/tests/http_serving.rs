@@ -178,6 +178,7 @@ fn saturating_load_fires_429_with_bounded_p99() {
             max_wait: Duration::from_millis(30),
             shards: 1,
             depth_budget: 4,
+            ..Default::default()
         },
         HttpConfig::default(),
     );
@@ -250,6 +251,7 @@ fn graceful_drain_loses_no_inflight_response() {
             max_wait: Duration::from_millis(5),
             shards: 2,
             depth_budget: 128,
+            ..Default::default()
         },
         HttpConfig::default(),
     );

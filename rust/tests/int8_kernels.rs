@@ -1,30 +1,35 @@
 //! Differential harness for the i8 GEMM micro-kernel layer: every
-//! implementation (AVX2, portable-packed, the unpacked scalar reference)
-//! must be **bit-for-bit identical** on every input — randomized shapes
-//! (K off the block sizes, M/N = 1, grouped convs), i32-accumulator
-//! magnitude edges, and requant zero-point corners. This is the contract
-//! that makes `PALLAS_NO_SIMD` and ISA differences pure performance
-//! knobs: the serving stack's outputs never depend on which kernel ran.
+//! implementation (AVX-512 VNNI, AVX2, NEON, portable-packed, the
+//! unpacked scalar reference) in every blocking config must be
+//! **bit-for-bit identical** on every input — randomized shapes (K off
+//! the block sizes, M/N = 1, grouped convs), i32-accumulator magnitude
+//! edges, and requant zero-point corners. This is the contract that
+//! makes `PALLAS_NO_SIMD`, `PALLAS_KERNEL`, `PALLAS_AUTOTUNE` and ISA
+//! differences pure performance knobs: the serving stack's outputs
+//! never depend on which kernel (or which autotuned config) ran.
 
 use adaround::serve::ikernels::{conv2d_i8, dense_i8, Int8Workspace};
 use adaround::serve::{ConvW, DenseW, Requant};
 use adaround::tensor::int8::kernel::{
-    self, gemm_conv4_packed_into, gemm_conv_packed_into, gemm_dense4_packed_into,
-    gemm_dense_packed_into, Kernel, PackedConv, PackedConv4, PackedDense, PackedDense4,
+    cfg_count, gemm_conv4_packed_into, gemm_conv_packed_into, gemm_dense4_packed_into,
+    gemm_dense_packed_into, GemmChoice, Kernel, PackedConv, PackedConv4, PackedDense,
+    PackedDense4,
 };
 use adaround::tensor::int8::{gemm_i8_into, gemm_u8_bt_into};
 use adaround::tensor::{Conv2dParams, I8Tensor, U8Tensor};
 use adaround::util::parallel::with_threads;
 use adaround::util::Rng;
 
-/// Every kernel implementation runnable on this machine. The portable
-/// path always runs; AVX2 joins when the CPU has it (CI x86 runners do).
-fn kernels() -> Vec<Kernel> {
-    let mut v = vec![Kernel::Portable];
-    if kernel::avx2_available() {
-        v.push(Kernel::Avx2);
-    }
-    v
+/// Every (kernel, blocking config) pair runnable on this machine — the
+/// full candidate space the autotuner picks from. The portable path
+/// always runs; AVX2/AVX-512/NEON join when the CPU (and toolchain)
+/// has them, and ISAs this machine lacks skip green by construction.
+fn kernels() -> Vec<GemmChoice> {
+    Kernel::all()
+        .into_iter()
+        .filter(|k| k.available())
+        .flat_map(|k| (0..cfg_count(k)).map(move |cfg| GemmChoice::new(k, cfg)))
+        .collect()
 }
 
 fn rnd_i8(n: usize, rng: &mut Rng) -> Vec<i8> {
@@ -96,7 +101,7 @@ fn conv_gemm_bit_identical_across_kernels() {
         for kern in kernels() {
             let mut c = vec![-1i32; m * n]; // poison: kernel must overwrite
             gemm_conv_packed_into(kern, &packed.data, m, k, packed.kp, &b, &mut c, n);
-            assert_eq!(c, want, "{} conv kernel at {m}x{k}x{n}", kern.name());
+            assert_eq!(c, want, "{} conv kernel at {m}x{k}x{n}", kern.label());
         }
     }
 }
@@ -129,7 +134,7 @@ fn dense_gemm_bit_identical_across_kernels() {
         for kern in kernels() {
             let mut c = vec![-1i32; m * n];
             gemm_dense_packed_into(kern, &a, &packed, &mut c, m);
-            assert_eq!(c, want, "{} dense kernel at {m}x{k}x{n}", kern.name());
+            assert_eq!(c, want, "{} dense kernel at {m}x{k}x{n}", kern.label());
         }
     }
 }
@@ -155,20 +160,20 @@ fn grouped_conv_kernels_and_threads_agree() {
         .map(|oc| wi.data[oc * patch..(oc + 1) * patch].iter().map(|&z| z as i32).sum())
         .collect();
     let requant = vec![Requant::from_real(0.031); o];
-    let run = |kern: Kernel, threads: usize| {
+    let run = |kern: GemmChoice, threads: usize| {
         with_threads(threads, || {
             let mut ws = Int8Workspace::new();
             conv2d_i8(&mut ws, kern, &qin, &wp, p, &bias_q, &wsum, &requant, 3, 5, true).data
         })
     };
-    let base = run(Kernel::Portable, 1);
+    let base = run(GemmChoice::from(Kernel::Portable), 1);
     for kern in kernels() {
         for threads in [1usize, 4] {
             assert_eq!(
                 run(kern, threads),
                 base,
                 "grouped conv differs for {} kernel, {threads} threads",
-                kern.name()
+                kern.label()
             );
         }
     }
@@ -195,7 +200,7 @@ fn accumulator_magnitude_edges_are_exact() {
         for kern in kernels() {
             let mut c = vec![0i32; 1];
             gemm_conv_packed_into(kern, &packed.data, 1, k, packed.kp, &b_max, &mut c, 1);
-            assert_eq!(c[0], want, "{} conv kernel near i32 edge", kern.name());
+            assert_eq!(c[0], want, "{} conv kernel near i32 edge", kern.label());
         }
         let mut c = vec![0i32; 1];
         gemm_u8_bt_into(&b_max, a, &mut c, 1, k, 1);
@@ -204,7 +209,7 @@ fn accumulator_magnitude_edges_are_exact() {
         for kern in kernels() {
             let mut c = vec![0i32; 1];
             gemm_dense_packed_into(kern, &b_max, &packed, &mut c, 1);
-            assert_eq!(c[0], want, "{} dense kernel near i32 edge", kern.name());
+            assert_eq!(c[0], want, "{} dense kernel near i32 edge", kern.label());
         }
     }
 }
@@ -249,7 +254,7 @@ fn requant_zero_point_corners() {
                         got.data,
                         oracle,
                         "{} dense zp_in={zp_in} zp_out={zp_out} relu={relu}",
-                        kern.name()
+                        kern.label()
                     );
                 }
             }
@@ -290,7 +295,7 @@ fn conv4_gemm_bit_identical_across_kernels() {
         for kern in kernels() {
             let mut c = vec![-1i32; m * n]; // poison: kernel must overwrite
             gemm_conv4_packed_into(kern, &packed.data, m, k, packed.kp, &b, &mut c, n);
-            assert_eq!(c, want, "{} conv4 kernel at {m}x{k}x{n}", kern.name());
+            assert_eq!(c, want, "{} conv4 kernel at {m}x{k}x{n}", kern.label());
         }
     }
 }
@@ -319,7 +324,7 @@ fn dense4_gemm_bit_identical_across_kernels() {
         for kern in kernels() {
             let mut c = vec![-1i32; m * n];
             gemm_dense4_packed_into(kern, &a, &packed, &mut c, m);
-            assert_eq!(c, want, "{} dense4 kernel at {m}x{k}x{n}", kern.name());
+            assert_eq!(c, want, "{} dense4 kernel at {m}x{k}x{n}", kern.label());
         }
     }
 }
@@ -340,10 +345,10 @@ fn int4_sign_extension_corners() {
     for kern in kernels() {
         let mut c = vec![0i32; 1];
         gemm_conv4_packed_into(kern, &pc.data, 1, k, pc.kp, &b, &mut c, 1);
-        assert_eq!(c, want, "{} conv4 sign corners", kern.name());
+        assert_eq!(c, want, "{} conv4 sign corners", kern.label());
         let mut c = vec![0i32; 1];
         gemm_dense4_packed_into(kern, &b, &pd, &mut c, 1);
-        assert_eq!(c, want, "{} dense4 sign corners", kern.name());
+        assert_eq!(c, want, "{} dense4 sign corners", kern.label());
     }
 }
 
@@ -366,10 +371,10 @@ fn int4_accumulator_magnitude_edges_are_exact() {
         for kern in kernels() {
             let mut c = vec![0i32; 1];
             gemm_conv4_packed_into(kern, &pc.data, 1, k, pc.kp, &b_max, &mut c, 1);
-            assert_eq!(c[0], want, "{} conv4 kernel near i32 edge", kern.name());
+            assert_eq!(c[0], want, "{} conv4 kernel near i32 edge", kern.label());
             let mut c = vec![0i32; 1];
             gemm_dense4_packed_into(kern, &b_max, &pd, &mut c, 1);
-            assert_eq!(c[0], want, "{} dense4 kernel near i32 edge", kern.name());
+            assert_eq!(c[0], want, "{} dense4 kernel near i32 edge", kern.label());
         }
     }
 }

@@ -138,6 +138,7 @@ fn swap_race_every_response_matches_exactly_one_generation() {
                         max_wait: Duration::from_millis(1),
                         shards,
                         depth_budget: 512, // no QueueFull noise in this test
+                        ..Default::default()
                     },
                 );
                 let answered = AtomicUsize::new(0);
@@ -369,6 +370,7 @@ fn bad_shape_burst_leaves_admission_state_untouched() {
             max_wait: Duration::from_millis(500),
             shards: 1,
             depth_budget: 2,
+            ..Default::default()
         },
     );
     let m = Arc::clone(batcher.metrics());

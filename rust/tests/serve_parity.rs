@@ -362,7 +362,7 @@ fn forced_w4_on_8bit_model_is_output_invariant() {
     let qm = quantize_8_8(&model, &calib, Method::Nearest);
     let mut plain = ServeEngine::compile(&model, &qm, &[3, 16, 16]).unwrap();
     let mut forced =
-        ServeEngine::compile_with(&model, &qm, &[3, 16, 16], PlanOptions { force_w4: true })
+        ServeEngine::compile_with(&model, &qm, &[3, 16, 16], PlanOptions { force_w4: true, ..Default::default() })
             .unwrap();
     assert_eq!(
         plain.forward_quantized(&val).data,

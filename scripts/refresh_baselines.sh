@@ -1,0 +1,32 @@
+#!/bin/sh
+# Refresh the committed bench baselines from a local bench run.
+#
+# The CI regression gate (`adaround bench-diff`) compares BENCH_*.json
+# against the committed BENCH_baseline_*.json floors. After a deliberate
+# perf change (new kernel variant, autotuner, blocking config), re-run
+# the benches on a representative machine and promote the fresh numbers:
+#
+#   cargo bench --bench kernels && cargo bench --bench serving \
+#     && cargo bench --bench pipeline && scripts/refresh_baselines.sh
+#
+# Entries present in the fresh run but absent from the old baseline are
+# picked up automatically — bench-diff skips names the baseline lacks,
+# so promoting a run is what arms the gate for newly added entries
+# (per-variant kernels, autotune timings, batchN serving rows).
+set -eu
+cd "$(dirname "$0")/.."
+
+refreshed=0
+for new in BENCH_kernels.json BENCH_serving.json BENCH_pipeline.json; do
+  base="BENCH_baseline_${new#BENCH_}"
+  if [ -f "$new" ]; then
+    cp "$new" "$base"
+    echo "refreshed $base from $new"
+    refreshed=$((refreshed + 1))
+  else
+    echo "no $new in repo root; run the matching 'cargo bench' first" >&2
+  fi
+done
+
+[ "$refreshed" -gt 0 ] || { echo "nothing refreshed" >&2; exit 1; }
+echo "done — review the diff and commit the new baselines"
