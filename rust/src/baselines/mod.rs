@@ -8,11 +8,16 @@
 //!   the exactly-equivalent merged-weight transform.
 //! * OMSE (Choukroun et al. 2019) needs no code of its own: it is the
 //!   per-channel `GridMethod::MseW` grid with nearest rounding.
+//! * [`attention_round`] — Attention Round (Diao et al. 2022), adapted:
+//!   softmax-attention rounding probabilities over grid neighbors + a
+//!   recon-MSE-scored Bernoulli mask lottery.
 
+pub mod attention_round;
 pub mod bias_correction;
 pub mod cle;
 pub mod ocs;
 
+pub use attention_round::{attention_round, up_probabilities, AttentionRoundConfig};
 pub use bias_correction::correct_bias;
 pub use cle::equalize_model;
 pub use ocs::ocs_quantize;

@@ -29,6 +29,10 @@ USAGE:
   adaround models                               list models
   adaround eval     --model M [--bits B ...]    evaluate
   adaround quantize --model M --method X        quantize + evaluate
+  adaround quantize --synthetic-transformer [--depth D] [--heads H]
+                    [--d-model D] [--seq S] [--assert-beats-nearest]
+                    artifact-free transformer PTQ (per-head grids; reports
+                    per-layer recon-MSE instead of a task metric)
   adaround table N  [--seeds S] [--val-n V]     regenerate paper Table N
   adaround fig N                                regenerate paper Figure N data
   adaround sweep    --model M --bits-list 8,4,2  bits x method accuracy grid
@@ -50,7 +54,7 @@ COMMON FLAGS:
   --model NAME      micro18|micro50|microinc|micromobile|segnet
   --method M        nearest|floor|ceil|stochastic|adaround|adaround-pjrt|
                     ste|hopfield|sigmoid-freg|qubo-cem|qubo-tabu|biascorr|
-                    dfq|ocs|omse
+                    dfq|ocs|omse|attention-round
   --bits B          weight bits (default 4)
   --bit-budget X    mixed precision: mean bits/weight (e.g. 4.5); a
                     sensitivity pre-pass assigns each layer 4 or 8 bits,

@@ -6,7 +6,7 @@ use anyhow::{bail, Result};
 
 use crate::adaround::AdaRoundConfig;
 use crate::coordinator::{Method, Pipeline, PipelineConfig};
-use crate::data::synthetic_stripes;
+use crate::data::{synthetic_stripes, synthetic_tokens};
 use crate::nn::{ForwardOptions, Model};
 use crate::tensor::{im2col, Conv2dParams, Tensor};
 use crate::util::cli::Args;
@@ -39,6 +39,12 @@ pub fn cmd_eval(args: &Args) -> Result<()> {
 }
 
 pub fn cmd_quantize(args: &Args) -> Result<()> {
+    // the synthetic transformer is artifact-free (no `make artifacts`
+    // runtime, no datasets): model + token calibration are built
+    // in-process, so branch before loading the context
+    if args.bool("synthetic-transformer") {
+        return cmd_quantize_transformer(args);
+    }
     let ctx = Ctx::load(args)?;
     let name = args.str("model", "micro18");
     let model = ctx.model(&name)?;
@@ -106,6 +112,64 @@ pub fn cmd_quantize(args: &Args) -> Result<()> {
     if let Some(path) = args.opt("save") {
         crate::coordinator::save_quantized(path, &qm)?;
         println!("quantized model saved to {path}");
+    }
+    Ok(())
+}
+
+/// `quantize --synthetic-transformer`: quantize the synthetic
+/// transformer end-to-end through the streaming pipeline (per-head grids
+/// for the Q/K/V projections, full attention subgraph in the activation
+/// store). Calibration data is a seeded token set; there is no
+/// validation metric — the reported objective is per-layer recon-MSE.
+/// `--assert-beats-nearest` turns "total recon-MSE improved over
+/// round-to-nearest" into the exit status (the CI transformer smoke).
+fn cmd_quantize_transformer(args: &Args) -> Result<()> {
+    let depth = args.usize("depth", 2)?;
+    let heads = args.usize("heads", 2)?;
+    let d_model = args.usize("d-model", 16)?;
+    let seq = args.usize("seq", 8)?;
+    let cfg = config_from_args(args)?;
+    let model = Model::synthetic_transformer(depth, heads, d_model, seq, &mut Rng::new(5));
+    let calib = synthetic_tokens(
+        cfg.calib_n,
+        seq,
+        crate::nn::graph::TRANSFORMER_VOCAB,
+        &mut Rng::new(9),
+    );
+    let mut rng = Rng::new(args.usize("seed", 1000)? as u64);
+
+    let sw = Stopwatch::start();
+    let pipe = Pipeline::new(&model, cfg.clone(), None);
+    let qm = pipe.quantize(&calib, &mut rng)?;
+    let q_secs = sw.secs();
+
+    println!(
+        "== {} | method={} bits={} act={:?} grid={:?} pc={} asym={} heads={}",
+        model.name, cfg.method.name(), cfg.bits, cfg.act_bits, cfg.grid,
+        cfg.per_channel, cfg.asymmetric, heads
+    );
+    println!("{:<8} {:>5}x{:<5} {:>3} {:>12} {:>12} {:>8} {:>7}",
+             "layer", "rows", "cols", "g", "mse(nearest)", "mse(after)", "flip%", "secs");
+    for s in &qm.stats {
+        println!(
+            "{:<8} {:>5}x{:<5} {:>3} {:>12.3e} {:>12.3e} {:>7.1}% {:>6.1}s",
+            s.id, s.rows, s.cols, s.groups, s.mse_before, s.mse_after,
+            100.0 * s.flipped_frac, s.secs
+        );
+    }
+    let (before, after) = (qm.total_mse_before(), qm.total_mse_after());
+    println!(
+        "recon-MSE total: nearest {before:.4e} -> {} {after:.4e}   \
+         (quantize {q_secs:.1}s, {} calibration layer-forwards [{} sampler])",
+        cfg.method.name(),
+        qm.layer_execs,
+        if cfg.replay_sampler { "O(L²) replay" } else { "O(L) streaming" },
+    );
+    if args.bool("assert-beats-nearest") && after >= before {
+        bail!(
+            "{} did not beat nearest rounding on recon-MSE ({after:.4e} >= {before:.4e})",
+            cfg.method.name()
+        );
     }
     Ok(())
 }
@@ -211,6 +275,59 @@ pub fn run_quantize_bench(o: &QuantizeBenchOpts) -> Result<()> {
          ({:.1}x fewer); adaround pipeline speedup {ada_speedup:.2}x",
         replay_execs as f64 / stream_execs.max(1) as f64
     );
+
+    // transformer entries: same streaming-vs-replay equivalence gate on
+    // the branchy multi-consumer attention subgraph (the stress case for
+    // the activation store's liveness tracking)
+    let tdepth = 2;
+    let tmodel = Model::synthetic_transformer(tdepth, 2, 16, 8, &mut Rng::new(5));
+    let tcalib = synthetic_tokens(
+        o.calib_n.min(128),
+        8,
+        crate::nn::graph::TRANSFORMER_VOCAB,
+        &mut Rng::new(9),
+    );
+    for method in [Method::Nearest, Method::AdaRound] {
+        let mut weights: Vec<BTreeMap<String, Tensor>> = Vec::new();
+        for replay in [false, true] {
+            let cfg = PipelineConfig {
+                method,
+                bits: 4,
+                calib_n: tcalib.shape[0],
+                col_budget: 512,
+                adaround: AdaRoundConfig { iters: o.iters, ..Default::default() },
+                replay_sampler: replay,
+                ..Default::default()
+            };
+            let pipe = Pipeline::new(&tmodel, cfg, None);
+            let sw = Stopwatch::start();
+            let qm = pipe.quantize(&tcalib, &mut Rng::new(7))?;
+            let secs = sw.secs();
+            let mode = if replay { "replay" } else { "streaming" };
+            println!(
+                "{:<12} {:<10} {:>9.2}s {:>16}  (transformer d{tdepth})",
+                method.name(),
+                mode,
+                secs,
+                qm.layer_execs
+            );
+            let mut e = BTreeMap::new();
+            e.insert(
+                "name".to_string(),
+                Json::Str(format!("quantize {} {mode} tfm d{tdepth}", method.name())),
+            );
+            e.insert("mean_ms".to_string(), Json::Num(secs * 1e3));
+            e.insert("layer_execs".to_string(), Json::Num(qm.layer_execs as f64));
+            results.push(Json::Obj(e));
+            weights.push(qm.weight_overrides);
+        }
+        if weights[0] != weights[1] {
+            bail!(
+                "streaming and replay samplers disagree for {} on the transformer",
+                method.name()
+            );
+        }
+    }
 
     let mut root = BTreeMap::new();
     root.insert("bench".to_string(), Json::Str("pipeline".to_string()));
@@ -413,6 +530,13 @@ fn forward_pjrt(ctx: &Ctx, model: &crate::nn::Model, x: &Tensor) -> Result<Tenso
             Op::Concat => {
                 let ins: Vec<&Tensor> = nd.inputs.iter().map(|i| &vals[i.as_str()]).collect();
                 crate::tensor::pool::concat_channels(&ins)
+            }
+            Op::LayerNorm | Op::Softmax { .. } | Op::MatMul { .. } | Op::Gelu | Op::Embedding => {
+                bail!(
+                    "bench-engine: no qlinear artifacts for transformer op '{:?}' (node '{}')",
+                    nd.op,
+                    nd.id
+                )
             }
         };
         vals.insert(nd.id.as_str(), out);

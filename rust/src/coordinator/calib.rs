@@ -49,11 +49,26 @@ fn conv_params(node: &Node) -> Option<Conv2dParams> {
 }
 
 /// im2col of an activation for a quantizable node (dense layers use the
-/// activation matrix transposed to [cin, n]).
+/// activation matrix transposed to [cin, n]; inputs with more than 2
+/// dims — token activations [N, S, C] — flatten their leading dims so
+/// every row is a sampleable column).
 pub fn im2col_sample(node: &Node, act: &Tensor) -> Vec<Tensor> {
     match conv_params(node) {
         Some(p) => (0..p.groups).map(|g| im2col(act, g, p)).collect(),
-        None => vec![act.transpose2()], // dense: [n, cin] -> [cin, n]
+        None => {
+            let d = *act.shape.last().expect("activation has dims");
+            let t = if act.ndim() == 2 {
+                act.transpose2() // dense: [n, cin] -> [cin, n]
+            } else {
+                Tensor::from_vec(&[act.numel() / d, d], act.data.clone()).transpose2()
+            };
+            // heads > 1 (per-head Q/K/V groups): every head reads the
+            // full input, so each per-head reconstruction group gets the
+            // same sample matrix — unlike grouped conv, where im2col
+            // slices out per-group input channels
+            let groups = node.geom().map(|g| g.groups).unwrap_or(1);
+            vec![t; groups]
+        }
     }
 }
 
@@ -207,7 +222,35 @@ pub fn sample_layer_cached(
     chunk_imgs: usize,
     rng: &mut Rng,
 ) -> LayerSample {
-    let input_id = node.inputs[0].clone();
+    sample_layer_cached_input(
+        model, node, 0, calib, quant_opts, prefix_quantized, fp_cache, col_budget, chunk_imgs,
+        rng,
+    )
+}
+
+/// [`sample_layer_cached`] generalized to any input index of `node`:
+/// multi-activation-input ops (attention MatMul) tap the activation
+/// feeding `node.inputs[input_idx]` instead of assuming `inputs[0]`.
+#[allow(clippy::too_many_arguments)]
+pub fn sample_layer_cached_input(
+    model: &Model,
+    node: &Node,
+    input_idx: usize,
+    calib: &Tensor,
+    quant_opts: &ForwardOptions,
+    prefix_quantized: bool,
+    fp_cache: Option<&FpTapCache>,
+    col_budget: usize,
+    chunk_imgs: usize,
+    rng: &mut Rng,
+) -> LayerSample {
+    assert!(
+        input_idx < node.inputs.len(),
+        "node '{}' has {} inputs, no index {input_idx}",
+        node.id,
+        node.inputs.len()
+    );
+    let input_id = node.inputs[input_idx].clone();
     let want: BTreeSet<String> = [input_id.clone()].into();
     let n = calib.shape[0];
     let per: usize = calib.shape[1..].iter().product();

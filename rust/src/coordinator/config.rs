@@ -35,6 +35,11 @@ pub enum Method {
     Ocs,
     /// per-channel MSE grids + nearest ("OMSE", Choukroun et al. 2019)
     Omse,
+    /// Attention Round (Diao et al. 2022, adapted): softmax-attention
+    /// over the two grid neighbors picks per-weight up-probabilities, a
+    /// lottery of Bernoulli masks is scored on layer recon-MSE and the
+    /// best (including the nearest mask) wins
+    AttentionRound,
 }
 
 impl Method {
@@ -55,6 +60,7 @@ impl Method {
             "dfq" => Method::Dfq,
             "ocs" => Method::Ocs,
             "omse" => Method::Omse,
+            "attention-round" => Method::AttentionRound,
             _ => return None,
         })
     }
@@ -76,6 +82,7 @@ impl Method {
             Method::Dfq => "dfq",
             Method::Ocs => "ocs",
             Method::Omse => "omse",
+            Method::AttentionRound => "attention-round",
         }
     }
 }
@@ -154,6 +161,7 @@ mod tests {
             Method::LocalQuboCem,
             Method::Dfq,
             Method::Omse,
+            Method::AttentionRound,
         ] {
             assert_eq!(Method::parse(m.name()), Some(m));
         }

@@ -189,7 +189,7 @@ impl<'a> Pipeline<'a> {
             let input_ids: std::collections::BTreeSet<String> = nodes
                 .iter()
                 .filter(|n| self.layer_selected(&n.id))
-                .map(|n| n.inputs[0].clone())
+                .flat_map(|n| n.inputs.iter().cloned())
                 .collect();
             Some(build_fp_cache(&self.work, &calib, &input_ids, CHUNK_IMGS, Some(&replay_execs)))
         } else {
@@ -317,7 +317,7 @@ impl<'a> Pipeline<'a> {
         let relu = self.cfg.use_relu && geom.relu;
         let mut cost = Vec::new();
         for &b in BIT_CHOICES {
-            let grid = QuantGrid::fit(&w_gemm, b, grid_method, per_channel, Some(&sample.x_fp[0]));
+            let grid = fit_layer_grid(node, &w_gemm, b, grid_method, per_channel, &sample.x_fp[0]);
             let mut c = 0.0;
             for g in 0..geom.groups {
                 let row0 = g * og;
@@ -362,13 +362,7 @@ impl<'a> Pipeline<'a> {
             Method::Omse => (GridMethod::MseW, true),
             _ => (cfg.grid, cfg.per_channel),
         };
-        let grid = QuantGrid::fit(
-            &w_gemm,
-            cfg.bits,
-            grid_method,
-            per_channel,
-            Some(&sample.x_fp[0]),
-        );
+        let grid = fit_layer_grid(node, &w_gemm, cfg.bits, grid_method, per_channel, &sample.x_fp[0]);
         // record the exact per-channel scales for export / integer serving
         // (STE's continuous weights and OCS's expanded grid don't land on
         // this grid, so recovery at serve-compile time handles them)
@@ -549,6 +543,28 @@ impl<'a> Pipeline<'a> {
     }
 }
 
+/// Grid fit for one layer: per-channel when requested; otherwise
+/// per-head grids for multi-head projections (`node.heads > 1`, one
+/// scale per contiguous head row-block — each head's value range is
+/// independent, so a shared per-tensor scale wastes codes on the
+/// quietest head) and the plain per-tensor fit for everything else.
+/// heads == 1 is byte-identical to the pre-transformer behavior.
+fn fit_layer_grid(
+    node: &Node,
+    w_gemm: &Tensor,
+    bits: u32,
+    grid_method: GridMethod,
+    per_channel: bool,
+    x_sample: &Tensor,
+) -> QuantGrid {
+    if !per_channel && node.heads > 1 {
+        let geom = node.geom().expect("quantizable node");
+        QuantGrid::fit_grouped(w_gemm, bits, grid_method, geom.rows, Some(x_sample))
+    } else {
+        QuantGrid::fit(w_gemm, bits, grid_method, per_channel, Some(x_sample))
+    }
+}
+
 /// T = W x_fp + b for one group's problem.
 fn group_target(prob: &LayerProblem, x_fp: &Tensor) -> Tensor {
     let mut t = matmul(&prob.w, x_fp);
@@ -657,6 +673,17 @@ fn round_group_native(
             let wq = ocs_quantize(&prob.w, cfg.bits, cfg.ocs_expand);
             let after = prob.recon_mse(&wq, x, &t);
             (wq, 0.0, after)
+        }
+        Method::AttentionRound => {
+            let res = crate::baselines::attention_round(
+                prob,
+                x,
+                &t,
+                &crate::baselines::AttentionRoundConfig::default(),
+                rng,
+            );
+            let fl = flip_frac(&res.mask, &prob.nearest_mask());
+            (prob.hard_weights(&res.mask), fl, res.mse)
         }
     };
     let bias_delta = if matches!(cfg.method, Method::BiasCorr | Method::Dfq) {

@@ -177,7 +177,32 @@ impl<'a> TapStore<'a> {
         col_budget: usize,
         rng: &mut Rng,
     ) -> LayerSample {
-        let input_id = node.inputs[0].as_str();
+        self.sample_layer_input(node, 0, quant_opts, prefix_quantized, col_budget, rng)
+    }
+
+    /// [`Self::sample_layer`] generalized to any input index of `node`:
+    /// multi-activation-input ops (attention MatMul) tap the activation
+    /// feeding `node.inputs[input_idx]` instead of assuming `inputs[0]`.
+    /// Sampling a second input whose producer sits *before* the frontier
+    /// is fine as long as `node` itself has not executed — the value's
+    /// last consumer is at or after `node`, so eviction cannot have
+    /// touched it.
+    pub fn sample_layer_input(
+        &mut self,
+        node: &Node,
+        input_idx: usize,
+        quant_opts: &ForwardOptions,
+        prefix_quantized: bool,
+        col_budget: usize,
+        rng: &mut Rng,
+    ) -> LayerSample {
+        assert!(
+            input_idx < node.inputs.len(),
+            "node '{}' has {} inputs, no index {input_idx}",
+            node.id,
+            node.inputs.len()
+        );
+        let input_id = node.inputs[input_idx].as_str();
         let cut = self
             .model
             .node_index(input_id)
@@ -185,11 +210,19 @@ impl<'a> TapStore<'a> {
             + 1;
         // inception-style layers sharing an input give cut == frontier; a
         // cut BEHIND the frontier means out-of-order sampling (the fp
-        // frontier is the furthest one — it advances on every sample)
+        // frontier is the furthest one — it advances on every sample) —
+        // unless the consuming node is still pending, which keeps every
+        // one of its inputs live regardless of how far the frontier moved
+        let node_at = self
+            .model
+            .node_index(&node.id)
+            .unwrap_or_else(|| panic!("node '{}' not in graph", node.id));
         assert!(
-            cut >= self.fp.frontier,
-            "layers must be sampled in topological order (frontier {} past cut {cut})",
-            self.fp.frontier
+            cut >= self.fp.frontier || node_at >= self.fp.frontier,
+            "layers must be sampled in topological order \
+             (frontier {} past cut {cut}, and node '{}' already executed)",
+            self.fp.frontier,
+            node.id
         );
         let fp_opts = ForwardOptions { layer_counter: Some(&self.execs), ..Default::default() };
         advance(self.model, self.calib, &self.chunk_list, &mut self.fp, cut, &fp_opts);
@@ -207,9 +240,23 @@ impl<'a> TapStore<'a> {
         let mut crngs: Vec<Rng> = (0..n_chunks).map(|ci| rng.fork(ci as u64)).collect();
         let fp_vals = &self.fp.vals;
         let q_vals = &self.q.vals;
+        fn live<'v>(
+            vals: &'v [BTreeMap<String, Tensor>],
+            ci: usize,
+            input_id: &str,
+            node_id: &str,
+        ) -> &'v Tensor {
+            vals[ci].get(input_id).unwrap_or_else(|| {
+                panic!("input '{input_id}' of node '{node_id}' not live at streaming frontier")
+            })
+        }
         let chunk_cols = parallel::par_map_rng(&mut crngs, 1, |ci, crng| {
-            let fp_act = &fp_vals[ci][input_id];
-            let q_act = if prefix_quantized { Some(&q_vals[ci][input_id]) } else { None };
+            let fp_act = live(fp_vals, ci, input_id, &node.id);
+            let q_act = if prefix_quantized {
+                Some(live(q_vals, ci, input_id, &node.id))
+            } else {
+                None
+            };
             collect_chunk_cols(node, fp_act, q_act, per_chunk_budget, crng)
         });
         assemble_sample(chunk_cols)
@@ -296,6 +343,47 @@ mod tests {
             assert_eq!(keys, model.live_at(6));
             assert!(!keys.contains("c1"), "dead taps must be evicted");
         }
+    }
+
+    /// Regression (single-input assumption): on the attention AV matmul
+    /// the tap wiring must pick the tensor for the *requested* input
+    /// index — probs for input 0, values for input 1 — not `inputs[0]`
+    /// for everything.
+    #[test]
+    fn multi_input_sampling_taps_each_input() {
+        let mut rng = Rng::new(5);
+        let model = Model::synthetic_transformer(1, 2, 8, 6, &mut rng);
+        let calib = crate::data::synthetic_tokens(4, 6, 32, &mut Rng::new(9));
+        let mut store = TapStore::new(&model, &calib, 2);
+        let av = model.node("b1.av").unwrap().clone();
+        let s0 = store.sample_layer_input(
+            &av, 0, &ForwardOptions::default(), false, 16, &mut Rng::new(1),
+        );
+        // input 0 = causal softmax probs [N, H, S, S]: columns of dim S
+        assert_eq!(s0.x_fp[0].rows(), 6);
+        assert!(s0.x_fp[0].data.iter().all(|&v| v >= 0.0), "probs are non-negative");
+        // input 1 = V [N, S, D]: its producer sits BEFORE the frontier
+        // now, but stays live because av itself has not executed
+        let s1 = store.sample_layer_input(
+            &av, 1, &ForwardOptions::default(), false, 16, &mut Rng::new(1),
+        );
+        assert_eq!(s1.x_fp[0].rows(), 8);
+        assert!(s1.x_fp[0].data.iter().any(|&v| v < 0.0), "V is a different tensor");
+    }
+
+    #[test]
+    #[should_panic(expected = "topological order")]
+    fn out_of_order_sampling_still_panics() {
+        let mut rng = Rng::new(5);
+        let model = Model::synthetic_transformer(1, 2, 8, 6, &mut rng);
+        let calib = crate::data::synthetic_tokens(4, 6, 32, &mut Rng::new(9));
+        let mut store = TapStore::new(&model, &calib, 2);
+        let wo = model.node("b1.wo").unwrap().clone();
+        store.sample_layer(&wo, &ForwardOptions::default(), false, 8, &mut Rng::new(1));
+        // b1.q executed when the frontier passed it — sampling it now is
+        // a real ordering bug, multi-input relaxation or not
+        let q = model.node("b1.q").unwrap().clone();
+        store.sample_layer(&q, &ForwardOptions::default(), false, 8, &mut Rng::new(2));
     }
 
     #[test]

@@ -59,6 +59,15 @@ pub fn synthetic_stripes(n: usize, ch: usize, hw: usize, rng: &mut Rng) -> (Tens
     (x, IntTensor::from_vec(&[n], y))
 }
 
+/// Synthetic token-id calibration set for the transformer workload:
+/// `[n, 1, 1, seq]` f32 ids drawn uniformly from `[0, vocab)` (the 4-D
+/// layout keeps the image-chunk slicing in the calibration pipeline
+/// working unchanged; the embedding lookup rounds them back to indices).
+pub fn synthetic_tokens(n: usize, seq: usize, vocab: usize, rng: &mut Rng) -> Tensor {
+    let ids = (0..n * seq).map(|_| rng.below(vocab) as f32).collect();
+    Tensor::from_vec(&[n, 1, 1, seq], ids)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -86,6 +95,15 @@ mod tests {
     fn chunk_ranges_cover() {
         let ranges: Vec<_> = chunks(10, 4).collect();
         assert_eq!(ranges, vec![(0, 4), (4, 8), (8, 10)]);
+    }
+
+    #[test]
+    fn tokens_shaped_and_in_vocab() {
+        let mut rng = Rng::new(9);
+        let x = synthetic_tokens(5, 7, 32, &mut rng);
+        assert_eq!(x.shape, vec![5, 1, 1, 7]);
+        assert!(x.data.iter().all(|&v| v >= 0.0 && v < 32.0 && v.fract() == 0.0));
+        assert!(x.data.iter().any(|&v| v != x.data[0]), "not degenerate");
     }
 
     #[test]

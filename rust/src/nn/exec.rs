@@ -21,7 +21,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::quant::ActQuant;
 use crate::tensor::conv::{conv2d_with, Conv2dWorkspace};
-use crate::tensor::{pool, Conv2dParams, Tensor};
+use crate::tensor::{attention, pool, Conv2dParams, Tensor};
 
 use super::graph::{Model, Op};
 
@@ -50,17 +50,59 @@ impl Model {
     }
 
     /// Forward pass capturing the outputs of the nodes named in `want`.
+    ///
+    /// Single-input convenience wrapper over
+    /// [`Self::forward_collect_multi`]: panics with the graph's input ids
+    /// if the model has more than one `Op::Input` node — seeding them all
+    /// with the same tensor is never what a multi-input graph means.
     pub fn forward_collect(
         &self,
         x: &Tensor,
         opts: &ForwardOptions,
         want: &BTreeSet<String>,
     ) -> (Tensor, Taps) {
+        let input_ids: Vec<&str> = self
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.op, Op::Input))
+            .map(|n| n.id.as_str())
+            .collect();
+        assert!(
+            input_ids.len() == 1,
+            "forward_collect needs exactly one Op::Input node, model '{}' has {:?}; \
+             use forward_collect_multi to seed each input explicitly",
+            self.name,
+            input_ids
+        );
+        let mut inputs = BTreeMap::new();
+        inputs.insert(input_ids[0].to_string(), x.clone());
+        self.forward_collect_multi(&inputs, opts, want)
+    }
+
+    /// Forward pass over a graph with any number of `Op::Input` nodes,
+    /// each seeded from `inputs` by node id. Panics if an input node is
+    /// missing from the map or the map names an unknown input.
+    pub fn forward_collect_multi(
+        &self,
+        inputs: &BTreeMap<String, Tensor>,
+        opts: &ForwardOptions,
+        want: &BTreeSet<String>,
+    ) -> (Tensor, Taps) {
         let mut vals: BTreeMap<String, Tensor> = BTreeMap::new();
         for nd in &self.nodes {
             if matches!(nd.op, Op::Input) {
+                let x = inputs.get(&nd.id).unwrap_or_else(|| {
+                    panic!("no tensor provided for input node '{}'", nd.id)
+                });
                 vals.insert(nd.id.clone(), x.clone());
             }
+        }
+        for key in inputs.keys() {
+            assert!(
+                vals.contains_key(key),
+                "'{key}' is not an Op::Input node of model '{}'",
+                self.name
+            );
         }
         let taps = self.forward_segment(&mut vals, 0..self.nodes.len(), opts, want);
         let last = self.nodes.last().unwrap().id.clone();
@@ -105,6 +147,20 @@ impl Model {
         let mut taps = Taps::new();
         // one im2col/GEMM workspace shared by every conv in this segment
         let mut conv_ws = Conv2dWorkspace::new();
+        // missing upstream values name the node and input instead of the
+        // opaque BTreeMap index panic
+        fn need<'v>(
+            vals: &'v BTreeMap<String, Tensor>,
+            nd: &super::graph::Node,
+            i: usize,
+        ) -> &'v Tensor {
+            vals.get(nd.inputs[i].as_str()).unwrap_or_else(|| {
+                panic!(
+                    "node '{}': missing upstream value '{}' (evicted or never produced)",
+                    nd.id, nd.inputs[i]
+                )
+            })
+        }
         for j in range {
             let nd = &self.nodes[j];
             let out = match &nd.op {
@@ -115,7 +171,7 @@ impl Model {
                     if let Some(c) = opts.layer_counter {
                         c.fetch_add(1, Ordering::Relaxed);
                     }
-                    let inp = &vals[nd.inputs[0].as_str()];
+                    let inp = need(vals, nd, 0);
                     let w = opts
                         .weight_overrides
                         .and_then(|m| m.get(&nd.id))
@@ -124,6 +180,12 @@ impl Model {
                         .bias_overrides
                         .and_then(|m| m.get(&nd.id))
                         .unwrap_or_else(|| self.bias(&nd.id));
+                    assert_eq!(
+                        b.data.len(),
+                        w.shape[0],
+                        "node '{}': bias len != out channels",
+                        nd.id
+                    );
                     let mut y = conv2d_with(
                         &mut conv_ws,
                         inp,
@@ -140,7 +202,7 @@ impl Model {
                     if let Some(c) = opts.layer_counter {
                         c.fetch_add(1, Ordering::Relaxed);
                     }
-                    let inp = &vals[nd.inputs[0].as_str()]; // [N, C]
+                    let inp = need(vals, nd, 0); // [N, C] or [N, S, C]
                     let w = opts
                         .weight_overrides
                         .and_then(|m| m.get(&nd.id))
@@ -152,10 +214,34 @@ impl Model {
                     // y = inp @ w^T + b; w is stored [O, C] row-major,
                     // which is exactly matmul_bt's B^T layout — the
                     // register-blocked row-parallel kernel, no transpose
-                    // materialization
-                    let mut y = crate::tensor::matmul_bt(inp, w);
-                    for r in 0..y.rows() {
-                        for (v, bb) in y.row_mut(r).iter_mut().zip(&b.data) {
+                    // materialization. Inputs with more than 2 dims
+                    // (token activations [N, S, C]) flatten their leading
+                    // dims into GEMM rows; the last dim is the feature dim.
+                    let cout = w.shape[0];
+                    assert_eq!(
+                        b.data.len(),
+                        cout,
+                        "node '{}': bias len {} != out features {}",
+                        nd.id,
+                        b.data.len(),
+                        cout
+                    );
+                    let d_last = *inp.shape.last().expect("dense input has dims");
+                    assert_eq!(
+                        d_last, w.shape[1],
+                        "node '{}': input feature dim != weight cols",
+                        nd.id
+                    );
+                    let rows = inp.numel() / d_last;
+                    let mut out_shape = inp.shape.clone();
+                    *out_shape.last_mut().unwrap() = cout;
+                    let mut y = Tensor::zeros(&out_shape);
+                    crate::tensor::matmul_bt_into(
+                        &inp.data, &w.data, &mut y.data, rows, d_last, cout,
+                    );
+                    for r in 0..rows {
+                        let row = &mut y.data[r * cout..(r + 1) * cout];
+                        for (v, bb) in row.iter_mut().zip(&b.data) {
                             *v += bb;
                         }
                     }
@@ -165,24 +251,43 @@ impl Model {
                     y
                 }
                 Op::Add { relu } => {
-                    let a = &vals[nd.inputs[0].as_str()];
-                    let b = &vals[nd.inputs[1].as_str()];
+                    let a = need(vals, nd, 0);
+                    let b = need(vals, nd, 1);
                     let mut y = a.add(b);
                     if *relu {
                         y.relu_inplace();
                     }
                     y
                 }
-                Op::Relu => vals[nd.inputs[0].as_str()].relu(),
-                Op::AvgPool { k, stride } => {
-                    pool::avgpool2d(&vals[nd.inputs[0].as_str()], *k, *stride)
-                }
-                Op::GPool => pool::global_avgpool(&vals[nd.inputs[0].as_str()]),
-                Op::Upsample => pool::upsample2x(&vals[nd.inputs[0].as_str()]),
+                Op::Relu => need(vals, nd, 0).relu(),
+                Op::AvgPool { k, stride } => pool::avgpool2d(need(vals, nd, 0), *k, *stride),
+                Op::GPool => pool::global_avgpool(need(vals, nd, 0)),
+                Op::Upsample => pool::upsample2x(need(vals, nd, 0)),
                 Op::Concat => {
                     let ins: Vec<&Tensor> =
-                        nd.inputs.iter().map(|i| &vals[i.as_str()]).collect();
+                        (0..nd.inputs.len()).map(|i| need(vals, nd, i)).collect();
                     pool::concat_channels(&ins)
+                }
+                Op::LayerNorm => {
+                    let gamma = self.weight(&nd.id);
+                    let beta = self.bias(&nd.id);
+                    attention::layernorm(need(vals, nd, 0), &gamma.data, &beta.data)
+                }
+                Op::Softmax { causal } => {
+                    attention::softmax_lastdim(need(vals, nd, 0), *causal)
+                }
+                Op::MatMul { heads, transpose_b } => {
+                    let a = need(vals, nd, 0);
+                    let b = need(vals, nd, 1);
+                    if *transpose_b {
+                        attention::attn_scores(a, b, *heads)
+                    } else {
+                        attention::attn_apply(a, b, *heads)
+                    }
+                }
+                Op::Gelu => attention::gelu(need(vals, nd, 0)),
+                Op::Embedding => {
+                    attention::embedding_lookup(need(vals, nd, 0), self.weight(&nd.id))
                 }
             };
             let out = match opts.act_quant.and_then(|m| m.get(&nd.id)) {
@@ -203,12 +308,15 @@ impl Model {
         taps
     }
 
-    /// The node ids whose outputs feed each quantizable layer (its input
-    /// activation); used to set up calibration taps.
-    pub fn layer_input_ids(&self) -> BTreeMap<String, String> {
+    /// The node ids whose outputs feed each quantizable layer, in the
+    /// layer's input order; used to set up calibration taps. Every input
+    /// is listed (not just `inputs[0]`) so multi-activation-input ops —
+    /// the attention MatMuls, future two-input quantizable layers — tap
+    /// the right tensor per input index.
+    pub fn layer_input_ids(&self) -> BTreeMap<String, Vec<String>> {
         self.quant_layers()
             .iter()
-            .map(|nd| (nd.id.clone(), nd.inputs[0].clone()))
+            .map(|nd| (nd.id.clone(), nd.inputs.clone()))
             .collect()
     }
 }
@@ -265,8 +373,170 @@ mod tests {
         assert_eq!(taps["in"].shape, vec![1, 3, 32, 32]);
         assert_eq!(taps["g1"].shape, vec![1, 4]);
         let map = m.layer_input_ids();
-        assert_eq!(map["c1"], "in");
-        assert_eq!(map["d1"], "g1");
+        assert_eq!(map["c1"], vec!["in".to_string()]);
+        assert_eq!(map["d1"], vec!["g1".to_string()]);
+    }
+
+    /// Regression (single-input assumption): `layer_input_ids` must list
+    /// EVERY input of a layer in input order, not just `inputs[0]`.
+    #[test]
+    fn layer_input_ids_lists_all_inputs_in_order() {
+        let mut rng = Rng::new(5);
+        let m = Model::synthetic_transformer(1, 2, 8, 4, &mut rng);
+        let map = m.layer_input_ids();
+        assert_eq!(map["b1.q"], vec!["b1.ln1".to_string()]);
+        assert_eq!(map["b1.wo"], vec!["b1.av".to_string()]);
+        // and the graph's own two-input nodes keep both, ordered
+        let av = m.node("b1.av").unwrap();
+        assert_eq!(av.inputs, vec!["b1.sm".to_string(), "b1.v".to_string()]);
+    }
+
+    fn two_input_model() -> Model {
+        use crate::util::Json;
+        let j = Json::parse(
+            r#"{"task":"cls","ir":[
+              {"id":"ina","op":"input","inputs":[]},
+              {"id":"inb","op":"input","inputs":[]},
+              {"id":"s","op":"add","inputs":["ina","inb"],"relu":false}
+            ]}"#,
+        )
+        .unwrap();
+        Model::from_manifest("two", &j, BTreeMap::new()).unwrap()
+    }
+
+    /// Regression: `forward_collect` used to silently seed every input
+    /// node with the same tensor on multi-input graphs.
+    #[test]
+    #[should_panic(expected = "use forward_collect_multi")]
+    fn forward_collect_rejects_multi_input_graphs() {
+        let m = two_input_model();
+        m.forward_collect(
+            &Tensor::full(&[1, 2], 1.0),
+            &ForwardOptions::default(),
+            &BTreeSet::new(),
+        );
+    }
+
+    #[test]
+    fn forward_collect_multi_seeds_each_input() {
+        let m = two_input_model();
+        let mut inputs = BTreeMap::new();
+        inputs.insert("ina".to_string(), Tensor::full(&[1, 2], 1.0));
+        inputs.insert("inb".to_string(), Tensor::full(&[1, 2], 10.0));
+        let (y, _) =
+            m.forward_collect_multi(&inputs, &ForwardOptions::default(), &BTreeSet::new());
+        assert_eq!(y.data, vec![11.0, 11.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "no tensor provided for input node 'inb'")]
+    fn forward_collect_multi_requires_every_input() {
+        let m = two_input_model();
+        let mut inputs = BTreeMap::new();
+        inputs.insert("ina".to_string(), Tensor::full(&[1, 2], 1.0));
+        m.forward_collect_multi(&inputs, &ForwardOptions::default(), &BTreeSet::new());
+    }
+
+    /// Regression: the dense bias add used to zip-truncate silently when
+    /// the bias was shorter than the output row.
+    #[test]
+    #[should_panic(expected = "bias len")]
+    fn dense_bias_length_mismatch_panics() {
+        let m = tiny();
+        let x = Tensor::full(&[1, 3, 32, 32], 1.0);
+        let mut bov = BTreeMap::new();
+        bov.insert("d1".to_string(), Tensor::zeros(&[1])); // d1 has cout=2
+        let opts = ForwardOptions { bias_overrides: Some(&bov), ..Default::default() };
+        m.forward(&x, &opts);
+    }
+
+    /// Regression: a missing upstream value names the node and input id
+    /// instead of the BTreeMap's opaque index panic.
+    #[test]
+    #[should_panic(expected = "node 'c1': missing upstream value 'in'")]
+    fn missing_upstream_value_names_node_and_input() {
+        let m = tiny();
+        let mut vals = BTreeMap::new(); // 'in' never seeded
+        m.forward_segment(
+            &mut vals,
+            1..m.nodes.len(),
+            &ForwardOptions::default(),
+            &BTreeSet::new(),
+        );
+    }
+
+    #[test]
+    fn transformer_forward_shapes_and_segmenting() {
+        let mut rng = Rng::new(5);
+        let m = Model::synthetic_transformer(2, 2, 8, 6, &mut rng);
+        let n = 3;
+        let x = Tensor::from_vec(
+            &[n, 1, 1, 6],
+            (0..n * 6).map(|i| (i % 32) as f32).collect(),
+        );
+        let want: BTreeSet<String> = ["b1.sm".to_string(), "b2.r2".to_string()].into();
+        let ctr = AtomicU64::new(0);
+        let opts = ForwardOptions { layer_counter: Some(&ctr), ..Default::default() };
+        let (y, taps) = m.forward_collect(&x, &opts, &want);
+        assert_eq!(y.shape, vec![n, 10]);
+        assert_eq!(taps["b1.sm"].shape, vec![n, 2, 6, 6]);
+        assert_eq!(taps["b2.r2"].shape, vec![n, 6, 8]);
+        assert_eq!(ctr.load(Ordering::Relaxed), 13, "6 denses per block + head");
+        // causal probs: first query row attends only to key 0
+        let sm = &taps["b1.sm"];
+        assert_eq!(sm.data[0], 1.0);
+        assert_eq!(sm.data[1], 0.0);
+
+        // the same pass cut into segments through the attention block is
+        // bit-identical and the live map matches the liveness analysis
+        let mut vals = BTreeMap::new();
+        vals.insert("in".to_string(), x.clone());
+        let av_at = m.node_index("b1.av").unwrap();
+        let len = m.nodes.len();
+        let mut taps_seg = Taps::new();
+        for cut in [0..av_at, av_at..av_at + 3, av_at + 3..len] {
+            taps_seg.extend(m.forward_segment(
+                &mut vals,
+                cut.clone(),
+                &ForwardOptions::default(),
+                &want,
+            ));
+            let keys: BTreeSet<String> = vals.keys().cloned().collect();
+            assert_eq!(keys, m.live_at(cut.end), "live set at cut {}", cut.end);
+        }
+        let y_seg = vals.remove("head").unwrap();
+        assert_eq!(y.data, y_seg.data, "segmented == whole pass, bit-identical");
+        assert_eq!(taps, taps_seg);
+    }
+
+    #[test]
+    fn dense_generalizes_to_token_inputs() {
+        // [N, S, C] through a dense == each token row through the same
+        // dense as a [N*S, C] matrix
+        let mut rng = Rng::new(9);
+        let m = Model::synthetic_transformer(1, 1, 4, 4, &mut rng);
+        let w = m.weight("b1.fc1");
+        let b = m.bias("b1.fc1");
+        let x3 = Tensor::from_vec(&[2, 3, 4], (0..24).map(|i| i as f32 * 0.1).collect());
+        let mut vals = BTreeMap::new();
+        vals.insert("b1.ln2".to_string(), x3.clone());
+        let at = m.node_index("b1.fc1").unwrap();
+        m.forward_segment(
+            &mut vals,
+            at..at + 1,
+            &ForwardOptions::default(),
+            &BTreeSet::new(),
+        );
+        let y3 = &vals["b1.fc1"];
+        assert_eq!(y3.shape, vec![2, 3, 8]);
+        let x2 = Tensor::from_vec(&[6, 4], x3.data.clone());
+        let mut y2 = crate::tensor::matmul_bt(&x2, w);
+        for r in 0..6 {
+            for (v, bb) in y2.row_mut(r).iter_mut().zip(&b.data) {
+                *v += bb;
+            }
+        }
+        assert_eq!(y3.data, y2.data, "3-D dense == flattened 2-D GEMM bit-for-bit");
     }
 
     #[test]

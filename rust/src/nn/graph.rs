@@ -26,6 +26,19 @@ pub enum Op {
     GPool,
     Upsample,
     Concat,
+    /// Per-token normalization over the last dim; weights `<id>.w`
+    /// (gamma, [D]) and `<id>.b` (beta, [D]).
+    LayerNorm,
+    /// Softmax over the last dim. `causal` masks key j > query i and
+    /// requires square [.., S, S] scores.
+    Softmax { causal: bool },
+    /// Two-activation-input batched matmul. `transpose_b`: QK^T
+    /// ([N,S,D] x [N,S,D] -> [N,H,S,S], scaled 1/sqrt(D/H)); otherwise
+    /// probs · V ([N,H,S,S] x [N,S,D] -> [N,S,D]).
+    MatMul { heads: usize, transpose_b: bool },
+    Gelu,
+    /// Token-id lookup: ids [N,1,1,S] against `<id>.w` [V, D] -> [N,S,D].
+    Embedding,
 }
 
 #[derive(Clone, Debug)]
@@ -35,6 +48,10 @@ pub struct Node {
     pub inputs: Vec<String>,
     pub cin: usize,
     pub cout: usize,
+    /// Attention-head count for Dense projections whose output rows are
+    /// per-head slices (Q/K/V). Drives per-head quantization grids and
+    /// per-head reconstruction groups; 1 for every other layer.
+    pub heads: usize,
 }
 
 /// Per-layer GEMM geometry of a quantizable (weight-bearing) node —
@@ -49,6 +66,10 @@ pub struct LayerGeom {
     /// whether the layer is followed by a ReLU (for asymmetric reconstruction)
     pub relu: bool,
 }
+
+/// Vocabulary size of [`Model::synthetic_transformer`]'s embedding table
+/// (and the id range [`crate::data::synthetic_tokens`] draws from).
+pub const TRANSFORMER_VOCAB: usize = 32;
 
 #[derive(Clone, Debug)]
 pub struct Model {
@@ -96,9 +117,22 @@ impl Node {
             "gpool" => Op::GPool,
             "upsample" => Op::Upsample,
             "concat" => Op::Concat,
+            "layernorm" => Op::LayerNorm,
+            "softmax" => Op::Softmax { causal: j.bool_of("causal").unwrap_or(false) },
+            "matmul" => Op::MatMul {
+                heads: j.usize_of("heads").unwrap_or(1),
+                transpose_b: j.bool_of("transpose_b").unwrap_or(false),
+            },
+            "gelu" => Op::Gelu,
+            "embedding" => {
+                cin = j.usize_of("cin")?; // vocab size
+                cout = j.usize_of("cout")?; // embedding dim
+                Op::Embedding
+            }
             other => bail!("unknown op '{other}'"),
         };
-        Ok(Node { id, op, inputs, cin, cout })
+        let heads = j.usize_of("heads").unwrap_or(1);
+        Ok(Node { id, op, inputs, cin, cout, heads })
     }
 
     pub fn is_quantizable(&self) -> bool {
@@ -113,9 +147,15 @@ impl Node {
                 groups,
                 relu,
             }),
-            Op::Dense { relu } => {
-                Some(LayerGeom { rows: self.cout, cols: self.cin, groups: 1, relu })
-            }
+            // Dense with heads > 1 (attention Q/K/V projections) splits
+            // its output rows into per-head GEMM groups so each head gets
+            // its own quantization grid and reconstruction problem.
+            Op::Dense { relu } => Some(LayerGeom {
+                rows: self.cout / self.heads,
+                cols: self.cin,
+                groups: self.heads,
+                relu,
+            }),
             _ => None,
         }
     }
@@ -148,13 +188,43 @@ impl Model {
                 }
             }
             seen.insert(nd.id.as_str());
-            if nd.is_quantizable() {
-                for suffix in [".w", ".b"] {
+            let need = |keys: &[&str]| -> Result<()> {
+                for suffix in keys {
                     let key = format!("{}{}", nd.id, suffix);
                     if !self.weights.contains_key(&key) {
                         bail!("missing weight {key}");
                     }
                 }
+                Ok(())
+            };
+            match &nd.op {
+                Op::Conv { .. } | Op::Dense { .. } => need(&[".w", ".b"])?,
+                Op::LayerNorm => need(&[".w", ".b"])?,
+                Op::Embedding => need(&[".w"])?,
+                Op::MatMul { heads, .. } => {
+                    if nd.inputs.len() != 2 {
+                        bail!(
+                            "matmul node {} needs exactly 2 inputs, got {}",
+                            nd.id,
+                            nd.inputs.len()
+                        );
+                    }
+                    if *heads == 0 {
+                        bail!("matmul node {} has heads = 0", nd.id);
+                    }
+                }
+                _ => {}
+            }
+            if nd.heads == 0 {
+                bail!("node {} has heads = 0", nd.id);
+            }
+            if matches!(nd.op, Op::Dense { .. }) && nd.cout % nd.heads != 0 {
+                bail!(
+                    "dense node {}: cout {} not divisible by heads {}",
+                    nd.id,
+                    nd.cout,
+                    nd.heads
+                );
             }
         }
         Ok(())
@@ -249,6 +319,7 @@ impl Model {
             inputs,
             cin,
             cout,
+            heads: 1,
         };
         let mut nodes = vec![Node {
             id: "in".into(),
@@ -256,6 +327,7 @@ impl Model {
             inputs: vec![],
             cin: 0,
             cout: 0,
+            heads: 1,
         }];
         let mut weights = BTreeMap::new();
         let init = |w: &mut BTreeMap<String, Tensor>, id: &str, shape: &[usize], rng: &mut Rng| {
@@ -281,6 +353,7 @@ impl Model {
                     inputs: vec!["c2".into(), "c1".into()],
                     cin: 0,
                     cout: 0,
+                    heads: 1,
                 });
                 prev = "a1".into();
             }
@@ -293,6 +366,7 @@ impl Model {
                     inputs: vec!["c3".into(), "a1".into()],
                     cin: 0,
                     cout: 0,
+                    heads: 1,
                 });
                 nodes.push(conv(&id, vec!["m1".into()], 2 * ch, ch, true));
                 init(&mut weights, &id, &[ch, 2 * ch, 3, 3], rng);
@@ -305,13 +379,21 @@ impl Model {
             init(&mut weights, &id, &[ch, cin, 3, 3], rng);
             prev = id;
         }
-        nodes.push(Node { id: "g".into(), op: Op::GPool, inputs: vec![prev], cin: 0, cout: 0 });
+        nodes.push(Node {
+            id: "g".into(),
+            op: Op::GPool,
+            inputs: vec![prev],
+            cin: 0,
+            cout: 0,
+            heads: 1,
+        });
         nodes.push(Node {
             id: "d1".into(),
             op: Op::Dense { relu: false },
             inputs: vec!["g".into()],
             cin: ch,
             cout: 10,
+            heads: 1,
         });
         init(&mut weights, "d1", &[10, ch], rng);
         let model = Model {
@@ -321,6 +403,142 @@ impl Model {
             weights,
         };
         model.validate().expect("synthetic chain is a valid graph");
+        model
+    }
+
+    /// Synthetic pre-LN causal transformer encoder for tests/benches.
+    ///
+    /// Layout per block `b{i}`: `ln1 -> {q,k,v} -> qk (QK^T) -> sm
+    /// (causal softmax) -> av (probs · V) -> wo -> r1 (residual) ->
+    /// ln2 -> fc1 -> gelu -> fc2 -> r2 (residual)`, fed by an embedding
+    /// lookup over [`TRANSFORMER_VOCAB`] tokens and closed by a final
+    /// layernorm + gpool + 10-way dense head, so
+    /// `quant_layers().len() == 6 * depth + 1`.
+    ///
+    /// The Q/K/V projections carry `heads` so their output rows split
+    /// into per-head quantization groups; `wo`/`fc1`/`fc2` stay at
+    /// heads=1 because their output rows are not per-head slices. The
+    /// `ln1` output fans out to three consumers and `r1` to two — the
+    /// multi-consumer shapes the streaming liveness eviction must keep
+    /// alive across segments.
+    pub fn synthetic_transformer(
+        depth: usize,
+        heads: usize,
+        d_model: usize,
+        seq: usize,
+        rng: &mut Rng,
+    ) -> Model {
+        assert!(depth >= 1, "need at least one block");
+        assert!(seq >= 2, "causal masking needs seq >= 2");
+        assert!(heads >= 1 && d_model % heads == 0, "d_model must divide into heads");
+        let mut nodes = vec![Node {
+            id: "in".into(),
+            op: Op::Input,
+            inputs: vec![],
+            cin: 0,
+            cout: 0,
+            heads: 1,
+        }];
+        let mut weights = BTreeMap::new();
+        let dense_init =
+            |w: &mut BTreeMap<String, Tensor>, id: &str, cout: usize, cin: usize, rng: &mut Rng| {
+                let std = (2.0 / cin as f32).sqrt();
+                w.insert(
+                    format!("{id}.w"),
+                    Tensor::from_vec(
+                        &[cout, cin],
+                        (0..cout * cin).map(|_| rng.normal_f32(0.0, std)).collect(),
+                    ),
+                );
+                let biases = (0..cout).map(|_| rng.normal_f32(0.0, 0.01)).collect();
+                w.insert(format!("{id}.b"), Tensor::from_vec(&[cout], biases));
+            };
+        let ln_init = |w: &mut BTreeMap<String, Tensor>, id: &str, d: usize, rng: &mut Rng| {
+            let gamma = (0..d).map(|_| 1.0 + rng.normal_f32(0.0, 0.1)).collect();
+            w.insert(format!("{id}.w"), Tensor::from_vec(&[d], gamma));
+            let beta = (0..d).map(|_| rng.normal_f32(0.0, 0.05)).collect();
+            w.insert(format!("{id}.b"), Tensor::from_vec(&[d], beta));
+        };
+        let dense = |id: &str, input: &str, cin: usize, cout: usize, heads: usize| Node {
+            id: id.to_string(),
+            op: Op::Dense { relu: false },
+            inputs: vec![input.to_string()],
+            cin,
+            cout,
+            heads,
+        };
+        let plain = |id: &str, op: Op, inputs: Vec<String>| Node {
+            id: id.to_string(),
+            op,
+            inputs,
+            cin: 0,
+            cout: 0,
+            heads: 1,
+        };
+        nodes.push(Node {
+            id: "emb".into(),
+            op: Op::Embedding,
+            inputs: vec!["in".into()],
+            cin: TRANSFORMER_VOCAB,
+            cout: d_model,
+            heads: 1,
+        });
+        let emb_std = 1.0 / (d_model as f32).sqrt();
+        weights.insert(
+            "emb.w".into(),
+            Tensor::from_vec(
+                &[TRANSFORMER_VOCAB, d_model],
+                (0..TRANSFORMER_VOCAB * d_model)
+                    .map(|_| rng.normal_f32(0.0, emb_std))
+                    .collect(),
+            ),
+        );
+        let ff = 2 * d_model;
+        let mut prev = "emb".to_string();
+        for b in 1..=depth {
+            let id = |suffix: &str| format!("b{b}.{suffix}");
+            nodes.push(plain(&id("ln1"), Op::LayerNorm, vec![prev.clone()]));
+            ln_init(&mut weights, &id("ln1"), d_model, rng);
+            for proj in ["q", "k", "v"] {
+                nodes.push(dense(&id(proj), &id("ln1"), d_model, d_model, heads));
+                dense_init(&mut weights, &id(proj), d_model, d_model, rng);
+            }
+            nodes.push(plain(
+                &id("qk"),
+                Op::MatMul { heads, transpose_b: true },
+                vec![id("q"), id("k")],
+            ));
+            nodes.push(plain(&id("sm"), Op::Softmax { causal: true }, vec![id("qk")]));
+            nodes.push(plain(
+                &id("av"),
+                Op::MatMul { heads, transpose_b: false },
+                vec![id("sm"), id("v")],
+            ));
+            nodes.push(dense(&id("wo"), &id("av"), d_model, d_model, 1));
+            dense_init(&mut weights, &id("wo"), d_model, d_model, rng);
+            nodes.push(plain(&id("r1"), Op::Add { relu: false }, vec![id("wo"), prev.clone()]));
+            nodes.push(plain(&id("ln2"), Op::LayerNorm, vec![id("r1")]));
+            ln_init(&mut weights, &id("ln2"), d_model, rng);
+            nodes.push(dense(&id("fc1"), &id("ln2"), d_model, ff, 1));
+            dense_init(&mut weights, &id("fc1"), ff, d_model, rng);
+            nodes.push(plain(&id("gelu"), Op::Gelu, vec![id("fc1")]));
+            nodes.push(dense(&id("fc2"), &id("gelu"), ff, d_model, 1));
+            dense_init(&mut weights, &id("fc2"), d_model, ff, rng);
+            nodes.push(plain(&id("r2"), Op::Add { relu: false }, vec![id("fc2"), id("r1")]));
+            prev = id("r2");
+        }
+        nodes.push(plain("lnf", Op::LayerNorm, vec![prev]));
+        ln_init(&mut weights, "lnf", d_model, rng);
+        nodes.push(plain("gp", Op::GPool, vec!["lnf".into()]));
+        nodes.push(dense("head", "gp", d_model, 10, 1));
+        dense_init(&mut weights, "head", 10, d_model, rng);
+        let model = Model {
+            name: format!("tfm{depth}h{heads}d{d_model}s{seq}"),
+            task: "cls".into(),
+            nodes,
+            weights,
+        };
+        model.validate().expect("synthetic transformer is a valid graph");
         model
     }
 
@@ -446,6 +664,111 @@ pub(crate) mod tests {
         assert_eq!(m.weight("d1").shape, vec![10, 4]);
         let mb = Model::synthetic_chain(4, 4, true, &mut rng);
         assert_eq!(mb.weight("c4").shape, vec![4, 8, 3, 3], "concat doubles cin");
+    }
+
+    #[test]
+    fn transformer_builder_shapes_and_fanout() {
+        let mut rng = Rng::new(5);
+        let m = Model::synthetic_transformer(2, 2, 8, 6, &mut rng);
+        // 6 quantizable denses per block + the classification head
+        assert_eq!(m.quant_layers().len(), 13);
+        assert_eq!(m.weight("emb").shape, vec![TRANSFORMER_VOCAB, 8]);
+        assert_eq!(m.weight("b1.q").shape, vec![8, 8]);
+        assert_eq!(m.weight("b1.fc1").shape, vec![16, 8]);
+        assert_eq!(m.weight("head").shape, vec![10, 8]);
+        // ln1 fans out to q, k and v; r1 to ln2 and the block residual
+        let sc = m.successor_counts();
+        assert_eq!(sc.get("b1.ln1"), Some(&3));
+        assert_eq!(sc.get("b1.r1"), Some(&2));
+        // Q projection splits into per-head GEMM groups
+        let g = m.node("b1.q").unwrap().geom().unwrap();
+        assert_eq!((g.rows, g.cols, g.groups), (4, 8, 2));
+        let gs = m.weight_as_gemm("b1.q");
+        assert_eq!(gs.len(), 2);
+        assert_eq!(gs[0].shape, vec![4, 8]);
+        // wo stays a single group
+        let gw = m.node("b1.wo").unwrap().geom().unwrap();
+        assert_eq!((gw.rows, gw.groups), (8, 1));
+        // the embedding is weight-bearing but NOT quantizable
+        assert!(!m.node("emb").unwrap().is_quantizable());
+    }
+
+    #[test]
+    fn transformer_liveness_spans_attention_block() {
+        let mut rng = Rng::new(5);
+        let m = Model::synthetic_transformer(1, 2, 8, 4, &mut rng);
+        let last = m.last_use();
+        // ln1 must survive until v (its last consumer of q/k/v)
+        let v_at = m.node_index("b1.v").unwrap();
+        assert_eq!(last.get("b1.ln1"), Some(&v_at));
+        // the block input (emb) stays live across the whole attention
+        // path for the r1 residual
+        let r1_at = m.node_index("b1.r1").unwrap();
+        assert_eq!(last.get("emb"), Some(&r1_at));
+        // at a cut right before av, sm and v are live (av's inputs) and
+        // emb is live (r1 residual), but q/k/qk are dead
+        let av_at = m.node_index("b1.av").unwrap();
+        let live = m.live_at(av_at);
+        assert!(live.contains("b1.sm") && live.contains("b1.v") && live.contains("emb"));
+        assert!(!live.contains("b1.q") && !live.contains("b1.k") && !live.contains("b1.qk"));
+    }
+
+    #[test]
+    fn transformer_ops_parse_from_json() {
+        let j = Json::parse(
+            r#"{"task":"cls","ir":[
+              {"id":"in","op":"input","inputs":[]},
+              {"id":"e","op":"embedding","inputs":["in"],"cin":4,"cout":2},
+              {"id":"n","op":"layernorm","inputs":["e"]},
+              {"id":"q","op":"dense","inputs":["n"],"cin":2,"cout":2,"relu":false,"heads":2},
+              {"id":"s","op":"matmul","inputs":["q","q"],"heads":2,"transpose_b":true},
+              {"id":"p","op":"softmax","inputs":["s"],"causal":true},
+              {"id":"g","op":"gelu","inputs":["p"]}
+            ]}"#,
+        )
+        .unwrap();
+        let mut w = BTreeMap::new();
+        w.insert("e.w".into(), Tensor::zeros(&[4, 2]));
+        w.insert("n.w".into(), Tensor::full(&[2], 1.0));
+        w.insert("n.b".into(), Tensor::zeros(&[2]));
+        w.insert("q.w".into(), Tensor::zeros(&[2, 2]));
+        w.insert("q.b".into(), Tensor::zeros(&[2]));
+        let m = Model::from_manifest("t", &j, w).unwrap();
+        assert_eq!(m.node("q").unwrap().heads, 2);
+        assert_eq!(m.node("s").unwrap().op, Op::MatMul { heads: 2, transpose_b: true });
+        assert_eq!(m.node("p").unwrap().op, Op::Softmax { causal: true });
+        assert_eq!(m.node("g").unwrap().op, Op::Gelu);
+    }
+
+    #[test]
+    fn validate_rejects_bad_transformer_graphs() {
+        // matmul with one input
+        let j = Json::parse(
+            r#"{"task":"cls","ir":[
+              {"id":"in","op":"input","inputs":[]},
+              {"id":"s","op":"matmul","inputs":["in"],"heads":1}]}"#,
+        )
+        .unwrap();
+        assert!(Model::from_manifest("t", &j, BTreeMap::new()).is_err());
+        // dense whose cout doesn't divide into heads
+        let j = Json::parse(
+            r#"{"task":"cls","ir":[
+              {"id":"in","op":"input","inputs":[]},
+              {"id":"d","op":"dense","inputs":["in"],"cin":4,"cout":6,"relu":false,"heads":4}]}"#,
+        )
+        .unwrap();
+        let mut w = BTreeMap::new();
+        w.insert("d.w".into(), Tensor::zeros(&[6, 4]));
+        w.insert("d.b".into(), Tensor::zeros(&[6]));
+        assert!(Model::from_manifest("t", &j, w).is_err());
+        // layernorm without its gamma/beta weights
+        let j = Json::parse(
+            r#"{"task":"cls","ir":[
+              {"id":"in","op":"input","inputs":[]},
+              {"id":"n","op":"layernorm","inputs":["in"]}]}"#,
+        )
+        .unwrap();
+        assert!(Model::from_manifest("t", &j, BTreeMap::new()).is_err());
     }
 
     #[test]

@@ -92,6 +92,38 @@ impl QuantGrid {
             QuantGrid::per_tensor(fit_scalar(w, bits, method, x_sample), bits)
         }
     }
+
+    /// Fit one scalar scale per contiguous block of `rows_per_group`
+    /// output rows of a GEMM weight [rows, cols] — the per-head grids of
+    /// attention Q/K/V projections (each head's row-block gets its own
+    /// scale, broadcast to its rows so [`Self::scale_for_row`] stays
+    /// row-indexed). `rows_per_group == rows` degenerates to the
+    /// per-tensor fit; per-channel fitting supersedes this (one scale per
+    /// row is strictly finer).
+    pub fn fit_grouped(
+        w: &Tensor,
+        bits: u32,
+        method: GridMethod,
+        rows_per_group: usize,
+        x_sample: Option<&Tensor>,
+    ) -> QuantGrid {
+        let rows = w.shape[0];
+        let cols = w.numel() / rows;
+        assert!(
+            rows_per_group >= 1 && rows % rows_per_group == 0,
+            "rows {rows} not divisible into groups of {rows_per_group}"
+        );
+        let mut scales = Vec::with_capacity(rows);
+        for g in 0..rows / rows_per_group {
+            let block = Tensor::from_vec(
+                &[rows_per_group, cols],
+                w.data[g * rows_per_group * cols..(g + 1) * rows_per_group * cols].to_vec(),
+            );
+            let s = fit_scalar(&block, bits, method, x_sample);
+            scales.resize(scales.len() + rows_per_group, s);
+        }
+        QuantGrid::per_channel(scales, bits)
+    }
 }
 
 /// Scale-candidate sweep resolution for the MSE searches.
@@ -186,6 +218,24 @@ mod tests {
         let gmm = QuantGrid::fit(&w, 4, GridMethod::MinMax, false, None);
         let q2 = fake_quant_nearest(&w, &gmm);
         assert!(y.mse(&matmul(&gq, &x)) <= y.mse(&matmul(&q2, &x)) * 1.0001);
+    }
+
+    #[test]
+    fn grouped_fit_is_per_block() {
+        // rows 0-1 small, rows 2-3 large: two groups must get distinct
+        // scales, constant within each block
+        let mut data = vec![0.1f32; 2 * 8];
+        data.extend(vec![2.0f32; 2 * 8]);
+        let w = Tensor::from_vec(&[4, 8], data);
+        let g = QuantGrid::fit_grouped(&w, 4, GridMethod::MinMax, 2, None);
+        assert_eq!(g.scale.len(), 4);
+        assert_eq!(g.scale[0], g.scale[1]);
+        assert_eq!(g.scale[2], g.scale[3]);
+        assert!(g.scale[2] > g.scale[0] * 10.0, "blocks fit independently");
+        // one group == per-tensor fit
+        let gt = QuantGrid::fit(&w, 4, GridMethod::MinMax, false, None);
+        let g1 = QuantGrid::fit_grouped(&w, 4, GridMethod::MinMax, 4, None);
+        assert_eq!(g1.scale, vec![gt.scale[0]; 4]);
     }
 
     #[test]

@@ -698,6 +698,16 @@ fn lower_node(
                 .map(|q| Requant::from_real(q.scale as f64 / out_q.scale as f64))
                 .collect(),
         },
+        // transformer ops quantize + calibrate fine, but the integer
+        // serving engine has no lowering for them yet (see ROADMAP)
+        Op::LayerNorm | Op::Softmax { .. } | Op::MatMul { .. } | Op::Gelu | Op::Embedding => {
+            bail!(
+                "serve: op '{:?}' of node '{}' has no integer lowering yet \
+                 (transformer graphs are quantize/eval-only)",
+                nd.op,
+                nd.id
+            )
+        }
     };
     Ok((op, in_hw))
 }

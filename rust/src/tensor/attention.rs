@@ -1,0 +1,298 @@
+//! Transformer op math: layernorm, softmax (with causal masking), GELU,
+//! batched multi-head attention matmuls and embedding lookup.
+//!
+//! Activation layout contract (see docs/ARCHITECTURE.md):
+//!
+//! * token ids enter as f32 `[N, 1, 1, S]` (4-D, so the calibration
+//!   pipeline's image-chunk slicing applies unchanged),
+//! * [`embedding_lookup`] produces `[N, S, D]`,
+//! * [`attn_scores`] (QK^T, scaled by 1/sqrt(D/H)) produces `[N, H, S, S]`,
+//! * [`attn_apply`] (probs · V) merges the heads back to `[N, S, D]`.
+//!
+//! All loops here are serial per tensor: the calibration streams already
+//! fan out across chunks ([`crate::util::parallel`]), so keeping the op
+//! bodies serial avoids nested pools and makes bit-identical execution
+//! trivial at any `PALLAS_THREADS`.
+
+use super::Tensor;
+
+/// LayerNorm epsilon (matches the usual transformer default).
+pub const LN_EPS: f32 = 1e-5;
+
+/// Per-token LayerNorm over the last dimension:
+/// y = (x - mean) / sqrt(var + eps) * gamma + beta.
+pub fn layernorm(x: &Tensor, gamma: &[f32], beta: &[f32]) -> Tensor {
+    let d = *x.shape.last().expect("layernorm needs >= 1 dim");
+    assert_eq!(gamma.len(), d, "layernorm gamma len {} != feature dim {d}", gamma.len());
+    assert_eq!(beta.len(), d, "layernorm beta len {} != feature dim {d}", beta.len());
+    let rows = x.numel() / d.max(1);
+    let mut out = Tensor::zeros(&x.shape);
+    for r in 0..rows {
+        let src = &x.data[r * d..(r + 1) * d];
+        let dst = &mut out.data[r * d..(r + 1) * d];
+        let mean = src.iter().sum::<f32>() / d as f32;
+        let var = src.iter().map(|&v| (v - mean) * (v - mean)).sum::<f32>() / d as f32;
+        let inv = 1.0 / (var + LN_EPS).sqrt();
+        for i in 0..d {
+            dst[i] = (src[i] - mean) * inv * gamma[i] + beta[i];
+        }
+    }
+    out
+}
+
+/// Softmax over the last dimension. With `causal` the tensor's last two
+/// dims must be a square `[S, S]` (query x key); entries with key index
+/// j > query index i are masked out before normalization.
+pub fn softmax_lastdim(t: &Tensor, causal: bool) -> Tensor {
+    let d = *t.shape.last().expect("softmax needs >= 1 dim");
+    if causal {
+        assert!(
+            t.ndim() >= 2 && t.shape[t.ndim() - 2] == d,
+            "causal softmax needs square [.., S, S] scores, got {:?}",
+            t.shape
+        );
+    }
+    let rows = t.numel() / d.max(1);
+    let mut out = Tensor::zeros(&t.shape);
+    for r in 0..rows {
+        let src = &t.data[r * d..(r + 1) * d];
+        let dst = &mut out.data[r * d..(r + 1) * d];
+        // within each [S, S] square, row r % d is query index i
+        let keep = if causal { (r % d) + 1 } else { d };
+        let m = src[..keep].iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        let mut sum = 0.0f32;
+        for i in 0..keep {
+            let e = (src[i] - m).exp();
+            dst[i] = e;
+            sum += e;
+        }
+        let inv = 1.0 / sum;
+        for v in &mut dst[..keep] {
+            *v *= inv;
+        }
+        // masked tail stays exactly 0.0
+    }
+    out
+}
+
+/// GELU, tanh approximation (Hendrycks & Gimpel):
+/// 0.5 x (1 + tanh(sqrt(2/pi) (x + 0.044715 x^3))).
+pub fn gelu(x: &Tensor) -> Tensor {
+    const C: f32 = 0.797_884_6; // sqrt(2/pi)
+    x.map(|v| 0.5 * v * (1.0 + (C * (v + 0.044_715 * v * v * v)).tanh()))
+}
+
+/// Scaled multi-head attention scores: Q, K `[N, S, D]` with D = H * Dh
+/// -> scores `[N, H, S, S]`, scores[n,h,i,j] = Q_nh[i] · K_nh[j] / sqrt(Dh).
+pub fn attn_scores(q: &Tensor, k: &Tensor, heads: usize) -> Tensor {
+    assert_eq!(q.ndim(), 3, "attn_scores expects [N,S,D] queries, got {:?}", q.shape);
+    assert_eq!(q.shape, k.shape, "Q {:?} vs K {:?} shape mismatch", q.shape, k.shape);
+    let (n, s, d) = (q.shape[0], q.shape[1], q.shape[2]);
+    assert!(heads >= 1 && d % heads == 0, "d_model {d} not divisible by {heads} heads");
+    let dh = d / heads;
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut out = Tensor::zeros(&[n, heads, s, s]);
+    for ni in 0..n {
+        for h in 0..heads {
+            let h0 = h * dh;
+            for i in 0..s {
+                let qrow = &q.data[(ni * s + i) * d + h0..(ni * s + i) * d + h0 + dh];
+                let orow = &mut out.data[((ni * heads + h) * s + i) * s..][..s];
+                for (j, o) in orow.iter_mut().enumerate() {
+                    let krow = &k.data[(ni * s + j) * d + h0..(ni * s + j) * d + h0 + dh];
+                    let mut acc = 0.0f32;
+                    for t in 0..dh {
+                        acc += qrow[t] * krow[t];
+                    }
+                    *o = acc * scale;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Attention application: probs `[N, H, S, S]` x V `[N, S, D]` (D = H * Dh)
+/// -> `[N, S, D]` with the heads merged back into the feature dim.
+pub fn attn_apply(p: &Tensor, v: &Tensor, heads: usize) -> Tensor {
+    assert_eq!(p.ndim(), 4, "attn_apply expects [N,H,S,S] probs, got {:?}", p.shape);
+    assert_eq!(v.ndim(), 3, "attn_apply expects [N,S,D] values, got {:?}", v.shape);
+    let (n, h, s) = (p.shape[0], p.shape[1], p.shape[2]);
+    let d = v.shape[2];
+    assert_eq!(h, heads, "probs carry {h} heads, op declares {heads}");
+    assert_eq!(p.shape[3], s, "probs must be square [.., S, S], got {:?}", p.shape);
+    assert_eq!(v.shape[0], n, "batch mismatch: probs {:?} vs values {:?}", p.shape, v.shape);
+    assert_eq!(v.shape[1], s, "seq mismatch: probs {:?} vs values {:?}", p.shape, v.shape);
+    assert!(d % heads == 0, "d_model {d} not divisible by {heads} heads");
+    let dh = d / heads;
+    let mut out = Tensor::zeros(&[n, s, d]);
+    for ni in 0..n {
+        for hi in 0..heads {
+            let h0 = hi * dh;
+            for i in 0..s {
+                let prow = &p.data[((ni * heads + hi) * s + i) * s..][..s];
+                let orow = &mut out.data[(ni * s + i) * d + h0..(ni * s + i) * d + h0 + dh];
+                for (j, &pj) in prow.iter().enumerate() {
+                    if pj == 0.0 {
+                        continue; // causal mask tail
+                    }
+                    let vrow = &v.data[(ni * s + j) * d + h0..(ni * s + j) * d + h0 + dh];
+                    for t in 0..dh {
+                        orow[t] += pj * vrow[t];
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Embedding lookup: f32 token ids (any shape with leading batch dim N;
+/// the calibration layout is `[N, 1, 1, S]`) against a `[V, D]` table ->
+/// `[N, S, D]`. Ids are rounded to the nearest integer and must land in
+/// `[0, V)`.
+pub fn embedding_lookup(ids: &Tensor, table: &Tensor) -> Tensor {
+    assert_eq!(table.ndim(), 2, "embedding table must be [V, D], got {:?}", table.shape);
+    let (vocab, d) = (table.shape[0], table.shape[1]);
+    let n = ids.shape[0];
+    let s = ids.numel() / n.max(1);
+    let mut out = Tensor::zeros(&[n, s, d]);
+    for (tok, &raw) in ids.data.iter().enumerate() {
+        let id = raw.round();
+        assert!(
+            id >= 0.0 && (id as usize) < vocab,
+            "token id {raw} out of vocabulary [0, {vocab})"
+        );
+        let row = &table.data[(id as usize) * d..(id as usize + 1) * d];
+        out.data[tok * d..(tok + 1) * d].copy_from_slice(row);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layernorm_normalizes_rows() {
+        let x = Tensor::from_vec(&[2, 4], vec![1., 2., 3., 4., -2., 0., 2., 4.]);
+        let y = layernorm(&x, &[1.0; 4], &[0.0; 4]);
+        for r in 0..2 {
+            let row = &y.data[r * 4..(r + 1) * 4];
+            let mean: f32 = row.iter().sum::<f32>() / 4.0;
+            let var: f32 = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / 4.0;
+            assert!(mean.abs() < 1e-5, "row {r} mean {mean}");
+            assert!((var - 1.0).abs() < 1e-3, "row {r} var {var}");
+        }
+    }
+
+    #[test]
+    fn layernorm_affine_params_apply() {
+        let x = Tensor::from_vec(&[1, 2], vec![-1.0, 1.0]);
+        let y = layernorm(&x, &[2.0, 2.0], &[10.0, 10.0]);
+        // normalized row is [-1, 1] (up to eps): y = 2*z + 10
+        assert!((y.data[0] - 8.0).abs() < 1e-3);
+        assert!((y.data[1] - 12.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let t = Tensor::from_vec(&[2, 3], vec![0.1, 1.0, -2.0, 5.0, 5.0, 5.0]);
+        let p = softmax_lastdim(&t, false);
+        for r in 0..2 {
+            let s: f32 = p.data[r * 3..(r + 1) * 3].iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+        }
+        assert!((p.data[3] - 1.0 / 3.0).abs() < 1e-5, "uniform row stays uniform");
+    }
+
+    #[test]
+    fn causal_softmax_masks_future_keys() {
+        // one [3, 3] square: row i may only attend to keys <= i
+        let t = Tensor::from_vec(&[1, 3, 3], vec![9.0; 9]);
+        let p = softmax_lastdim(&t, true);
+        assert!((p.data[0] - 1.0).abs() < 1e-6);
+        assert_eq!(p.data[1], 0.0);
+        assert_eq!(p.data[2], 0.0);
+        assert!((p.data[3] - 0.5).abs() < 1e-6);
+        assert_eq!(p.data[5], 0.0);
+        for v in &p.data[6..9] {
+            assert!((v - 1.0 / 3.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "square")]
+    fn causal_softmax_rejects_non_square() {
+        softmax_lastdim(&Tensor::zeros(&[2, 3, 4]), true);
+    }
+
+    #[test]
+    fn gelu_reference_points() {
+        let x = Tensor::from_vec(&[1, 3], vec![0.0, 1.0, -10.0]);
+        let y = gelu(&x);
+        assert_eq!(y.data[0], 0.0);
+        assert!((y.data[1] - 0.8412).abs() < 1e-3, "gelu(1) ~ 0.8412, got {}", y.data[1]);
+        assert!(y.data[2].abs() < 1e-3, "gelu(-10) ~ 0");
+    }
+
+    #[test]
+    fn attn_scores_match_naive_single_head() {
+        // N=1, S=2, D=2, H=1: scores[i][j] = q_i . k_j / sqrt(2)
+        let q = Tensor::from_vec(&[1, 2, 2], vec![1., 0., 0., 2.]);
+        let k = Tensor::from_vec(&[1, 2, 2], vec![3., 1., -1., 4.]);
+        let s = attn_scores(&q, &k, 1);
+        assert_eq!(s.shape, vec![1, 1, 2, 2]);
+        let r2 = (2.0f32).sqrt();
+        assert!((s.data[0] - 3.0 / r2).abs() < 1e-5);
+        assert!((s.data[1] - (-1.0) / r2).abs() < 1e-5);
+        assert!((s.data[2] - 2.0 / r2).abs() < 1e-5);
+        assert!((s.data[3] - 8.0 / r2).abs() < 1e-5);
+    }
+
+    #[test]
+    fn attn_scores_heads_use_disjoint_feature_slices() {
+        // D=2, H=2: head 0 sees feature 0 only, head 1 feature 1 only
+        let q = Tensor::from_vec(&[1, 1, 2], vec![2.0, 5.0]);
+        let k = Tensor::from_vec(&[1, 1, 2], vec![3.0, 7.0]);
+        let s = attn_scores(&q, &k, 2);
+        assert_eq!(s.shape, vec![1, 2, 1, 1]);
+        assert!((s.data[0] - 6.0).abs() < 1e-5); // dh=1 -> scale 1
+        assert!((s.data[1] - 35.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn attn_apply_mixes_values_per_head() {
+        // uniform probs over 2 positions, H=1: out = mean of V rows
+        let p = Tensor::from_vec(&[1, 1, 2, 2], vec![0.5, 0.5, 0.5, 0.5]);
+        let v = Tensor::from_vec(&[1, 2, 2], vec![2., 4., 6., 8.]);
+        let y = attn_apply(&p, &v, 1);
+        assert_eq!(y.shape, vec![1, 2, 2]);
+        assert_eq!(y.data, vec![4., 6., 4., 6.]);
+    }
+
+    #[test]
+    fn attn_roundtrip_identity_probs() {
+        // delta probs (attend to self) reproduce V exactly, multi-head
+        let v = Tensor::from_vec(&[1, 2, 4], (0..8).map(|i| i as f32).collect());
+        let p = Tensor::from_vec(&[1, 2, 2, 2], vec![1., 0., 0., 1., 1., 0., 0., 1.]);
+        let y = attn_apply(&p, &v, 2);
+        assert_eq!(y.data, v.data);
+    }
+
+    #[test]
+    fn embedding_looks_up_rows() {
+        let table = Tensor::from_vec(&[3, 2], vec![0., 1., 10., 11., 20., 21.]);
+        let ids = Tensor::from_vec(&[2, 1, 1, 2], vec![2.0, 0.0, 1.0, 1.0]);
+        let e = embedding_lookup(&ids, &table);
+        assert_eq!(e.shape, vec![2, 2, 2]);
+        assert_eq!(e.data, vec![20., 21., 0., 1., 10., 11., 10., 11.]);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of vocabulary")]
+    fn embedding_rejects_out_of_range_ids() {
+        let table = Tensor::from_vec(&[2, 1], vec![0.0, 1.0]);
+        embedding_lookup(&Tensor::from_vec(&[1, 1, 1, 1], vec![5.0]), &table);
+    }
+}

@@ -5,11 +5,15 @@
 //! The matmul kernel in [`matmul`] is the native-engine hot path and is
 //! tuned in the perf pass (see EXPERIMENTS.md §Perf).
 
+pub mod attention;
 pub mod conv;
 pub mod int8;
 pub mod matmul;
 pub mod pool;
 
+pub use attention::{
+    attn_apply, attn_scores, embedding_lookup, gelu, layernorm, softmax_lastdim,
+};
 pub use conv::{conv2d, conv2d_with, im2col, im2col_into, Conv2dParams, Conv2dWorkspace};
 pub use int8::{I8Tensor, U8Tensor};
 pub use matmul::{matmul, matmul_acc, matmul_bt, matmul_bt_into, matmul_into};

@@ -29,8 +29,26 @@ pub fn avgpool2d(input: &Tensor, k: usize, stride: usize) -> Tensor {
     out
 }
 
-/// Global average pool: [N,C,H,W] -> [N,C].
+/// Global average pool: [N,C,H,W] -> [N,C], or (transformer path)
+/// [N,S,D] -> [N,D] — mean over the sequence dim.
 pub fn global_avgpool(input: &Tensor) -> Tensor {
+    if input.ndim() == 3 {
+        let (n, s, d) = (input.shape[0], input.shape[1], input.shape[2]);
+        let mut out = Tensor::zeros(&[n, d]);
+        for ni in 0..n {
+            for si in 0..s {
+                let src = &input.data[(ni * s + si) * d..(ni * s + si + 1) * d];
+                for (o, &v) in out.data[ni * d..(ni + 1) * d].iter_mut().zip(src) {
+                    *o += v;
+                }
+            }
+        }
+        let inv = 1.0 / s as f32;
+        for v in &mut out.data {
+            *v *= inv;
+        }
+        return out;
+    }
     let (n, c, h, w) = (input.shape[0], input.shape[1], input.shape[2], input.shape[3]);
     let hw = (h * w) as f32;
     let mut out = Tensor::zeros(&[n, c]);

@@ -11,7 +11,8 @@
 use adaround::adaround::AdaRoundConfig;
 use adaround::coordinator::pipeline::CHUNK_IMGS;
 use adaround::coordinator::{Method, Pipeline, PipelineConfig, QuantizedModel};
-use adaround::data::synthetic_stripes;
+use adaround::data::{synthetic_stripes, synthetic_tokens};
+use adaround::nn::graph::TRANSFORMER_VOCAB;
 use adaround::nn::Model;
 use adaround::tensor::Tensor;
 use adaround::util::{parallel, Rng};
@@ -174,6 +175,108 @@ fn streaming_is_thread_count_invariant() {
         let r4 = quantize(&model, &c, cfg(method, true), 4);
         assert_identical(&t1, &r4, &format!("{method:?} streaming/1 vs replay/4"));
     }
+}
+
+// ---- synthetic transformer: the branchy multi-consumer stress case ----
+// Every attention block fans ln1 out to three consumers (q/k/v), feeds
+// MatMul nodes two activation inputs each, and holds residual taps alive
+// across the whole block — the hard case for the streaming store's
+// last-consumer eviction and for input-index-aware tap wiring.
+
+fn transformer() -> Model {
+    Model::synthetic_transformer(2, 2, 8, 6, &mut Rng::new(5))
+}
+
+fn tokens(n: usize) -> Tensor {
+    synthetic_tokens(n, 6, TRANSFORMER_VOCAB, &mut Rng::new(44))
+}
+
+#[test]
+fn transformer_streaming_matches_replay_bit_for_bit() {
+    let model = transformer();
+    let c = tokens(80);
+    for method in [Method::Nearest, Method::AdaRound, Method::AttentionRound] {
+        let s = quantize(&model, &c, cfg(method, false), 1);
+        let r = quantize(&model, &c, cfg(method, true), 1);
+        // per-head grids: the Q/K/V projections must carry one scale per
+        // head row-block (d_model 8, 2 heads -> 8 scales, 2 distinct max)
+        let qs = &s.scales["b0.q"];
+        assert_eq!(qs.len(), 8, "per-head grid is row-indexed over cout");
+        assert!(qs[..4].iter().all(|&v| v == qs[0]), "head 0 shares one scale");
+        assert!(qs[4..].iter().all(|&v| v == qs[4]), "head 1 shares one scale");
+        assert_identical(&s, &r, &format!("transformer {method:?}"));
+        assert!(
+            r.layer_execs > s.layer_execs,
+            "{method:?}: replay must do more prefix work on the transformer"
+        );
+    }
+}
+
+#[test]
+fn transformer_thread_count_invariant() {
+    let model = transformer();
+    let c = tokens(80);
+    for method in [Method::AdaRound, Method::AttentionRound] {
+        let mut c1 = cfg(method, false);
+        c1.act_bits = Some(8);
+        let t1 = quantize(&model, &c, c1.clone(), 1);
+        let t4 = quantize(&model, &c, c1, 4);
+        assert_identical(&t1, &t4, &format!("transformer {method:?} threads 1 vs 4"));
+        let mut cr = cfg(method, true);
+        cr.act_bits = Some(8);
+        let r4 = quantize(&model, &c, cr, 4);
+        assert_identical(&t1, &r4, &format!("transformer {method:?} streaming/1 vs replay/4"));
+    }
+}
+
+#[test]
+fn transformer_prefix_work_is_linear() {
+    let c = tokens(80);
+    let n_chunks = (80usize).div_ceil(CHUNK_IMGS) as u64; // = 2
+    let model = transformer();
+    let l = model.quant_layers().len() as u64; // 13 at depth 2
+    let qm = quantize(&model, &c, cfg(Method::Nearest, false), 1);
+    assert!(
+        qm.layer_execs <= 2 * n_chunks * l,
+        "transformer streaming did {} dense executions, O(L) bound is {}",
+        qm.layer_execs,
+        2 * n_chunks * l
+    );
+    let replay = quantize(&model, &c, cfg(Method::Nearest, true), 1);
+    assert!(
+        replay.layer_execs > 2 * qm.layer_execs,
+        "replay ({}) should redo the prefix per layer vs streaming ({})",
+        replay.layer_execs,
+        qm.layer_execs
+    );
+}
+
+#[test]
+fn transformer_segment_eviction_matches_whole_pass() {
+    // forward the quantized transformer whole vs in segments cut INSIDE
+    // an attention block, seeding each resume with exactly the liveness
+    // set `live_at` promises — proves eviction keeps every value the
+    // attention subgraph still needs (sm and v both feed b1.av)
+    let model = transformer();
+    let c = tokens(8);
+    let qm = quantize(&model, &c, cfg(Method::AdaRound, false), 1);
+    let opts = qm.opts();
+    let whole = model.forward(&c, &opts);
+
+    let cut = model.node_index("b1.av").expect("attention block node");
+    let out_id = model.nodes.last().unwrap().id.clone();
+    let want: std::collections::BTreeSet<String> = [out_id.clone()].into();
+    let mut vals = std::collections::BTreeMap::new();
+    vals.insert("in".to_string(), c.clone());
+    model.forward_segment(&mut vals, 0..cut, &opts, &want);
+    // the resume state is exactly the live set at the cut
+    let live = model.live_at(cut);
+    let held: std::collections::BTreeSet<String> = vals.keys().cloned().collect();
+    assert_eq!(held, live, "segment state at b1.av != live_at");
+    assert!(live.contains("b1.sm") && live.contains("b1.v"), "both MatMul inputs live");
+    model.forward_segment(&mut vals, cut..model.nodes.len(), &opts, &want);
+    let seg = vals.remove(&out_id).expect("segmented output");
+    assert_eq!(whole.data, seg.data, "segmented forward must be bit-identical");
 }
 
 #[test]
